@@ -1,0 +1,155 @@
+//! End-to-end light-source pipeline — the repo's full-system driver
+//! (EXPERIMENTS.md §End-to-end).
+//!
+//! Exercises every layer on a real workload: pilot-managed Kafka /
+//! Dask / Spark deployments on the simulated machine; MASS streaming
+//! APS-format frames (2 MB messages, the paper's LCLS-like feed); the
+//! micro-batch engine scheduling one task per partition; GridRec
+//! reconstruction through the PJRT-compiled Pallas backprojection
+//! artifact; a *runtime pilot extension* mid-stream (the paper's core
+//! capability); and a final reconstruction-quality check against the
+//! ground-truth phantom.
+//!
+//! Run with: `cargo run --release --example light_source_pipeline`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::miniapp::{
+    MasaApp, MasaConfig, MassConfig, MassSource, ProcessorKind, SourceKind,
+};
+use pilot_streaming::pilot::{
+    DaskDescription, KafkaDescription, PilotComputeService, SparkDescription,
+};
+use pilot_streaming::runtime::ModelRuntime;
+use pilot_streaming::Result;
+
+fn main() -> Result<()> {
+    let runtime = ModelRuntime::load_default()?;
+    let tomo = runtime.manifest().tomo.clone();
+    let template = Arc::new(runtime.read_f32_file("template_sinogram.bin")?);
+    let phantom = runtime.read_f32_file("phantom.bin")?;
+
+    // ---- Pilot-managed deployment (paper Fig 3/4 control flow) ------
+    let service = PilotComputeService::new(Machine::unthrottled(8));
+    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1))?;
+    let (dask, producers) =
+        service.start_dask(DaskDescription::new(1).with_config("workers_per_node", "2"))?;
+    let (spark, engine) =
+        service.start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))?;
+    for p in [&kafka, &dask, &spark] {
+        let s = p.startup().unwrap();
+        println!(
+            "pilot {:<16} nodes={} startup {:.1}s (queue {:.1} + bootstrap {:.1})",
+            p.id(),
+            p.nodes().len(),
+            s.total_secs(),
+            s.queue_wait_secs,
+            s.bootstrap_secs
+        );
+    }
+    cluster.create_topic("aps-frames", 4)?;
+
+    // ---- MASA: GridRec reconstruction job ----------------------------
+    let masa = MasaApp::new(
+        MasaConfig::new(ProcessorKind::GridRec, "aps-frames", Duration::from_millis(250)),
+        runtime.clone(),
+    );
+    println!("compiling gridrec artifact (Pallas backprojection, AOT via PJRT)...");
+    masa.processor.warmup()?;
+    let job = masa.start(&engine, cluster.clone())?;
+
+    // ---- MASS: template source streaming APS frames -------------------
+    let total_msgs = 24u64;
+    let mut cfg = MassConfig::new(
+        SourceKind::Lightsource {
+            template: template.clone(),
+        },
+        "aps-frames",
+    );
+    cfg.messages_per_producer = (total_msgs / 2) as usize;
+    let mass = MassSource::new(cfg);
+    println!("streaming {total_msgs} APS frames (2 MB each)...");
+    let t0 = Instant::now();
+    let producer_handle = {
+        let mass_cfg = mass.config().clone();
+        let cluster2 = cluster.clone();
+        let producers2 = producers.clone();
+        std::thread::spawn(move || MassSource::new(mass_cfg).run(&producers2, &cluster2, 2))
+    };
+
+    // ---- Mid-stream pilot extension (paper Listing 4) ----------------
+    std::thread::sleep(Duration::from_millis(300));
+    let before = engine.executor_count();
+    let extension = service.extend_pilot(&spark, 1)?;
+    println!(
+        "mid-stream extend: {} -> {} executors (pilot {})",
+        before,
+        engine.executor_count(),
+        extension.id()
+    );
+
+    let report = producer_handle
+        .join()
+        .expect("producer thread")?;
+    println!(
+        "producer side: {} msgs, {:.1} MB/s",
+        report.messages,
+        report.mb_rate()
+    );
+
+    // ---- Drain and report --------------------------------------------
+    let deadline = Instant::now() + Duration::from_secs(600);
+    while job.stats().processed.messages() < report.messages && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let stats = job.stop();
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        stats.processed.messages(),
+        report.messages,
+        "pipeline dropped messages"
+    );
+    println!("--- end-to-end results -------------------------------------");
+    println!(
+        "frames processed   : {} in {:.1} s  ({:.1} msg/s, {:.1} MB/s end-to-end)",
+        stats.processed.messages(),
+        elapsed,
+        stats.processed.messages() as f64 / elapsed,
+        stats.processed.bytes() as f64 / 1e6 / elapsed,
+    );
+    println!(
+        "reconstruction     : {:.1} ms/frame (p50), {:.1} ms (p99)",
+        masa.processor.stats.exec_secs.p50_secs() * 1e3,
+        masa.processor.stats.exec_secs.p99_secs() * 1e3,
+    );
+    println!(
+        "e2e frame latency  : p50 {:.2} s, p99 {:.2} s",
+        masa.processor.stats.e2e_latency.p50_secs(),
+        masa.processor.stats.e2e_latency.p99_secs(),
+    );
+
+    // Reconstruction quality vs ground truth (interior RMSE).
+    let img = masa.processor.last_image();
+    let (h, w) = (tomo.img_h, tomo.img_w);
+    let mut se = 0.0f64;
+    let mut n = 0usize;
+    for i in 16..h - 16 {
+        for j in 16..w - 16 {
+            let d = (img[i * w + j] - phantom[i * w + j]) as f64;
+            se += d * d;
+            n += 1;
+        }
+    }
+    let rmse = (se / n as f64).sqrt();
+    println!("reconstruction RMSE vs phantom (interior): {rmse:.4}");
+    assert!(rmse < 0.12, "reconstruction quality regression: {rmse}");
+
+    service.stop_pilot(&extension)?;
+    service.stop_pilot(&spark)?;
+    service.stop_pilot(&dask)?;
+    service.stop_pilot(&kafka)?;
+    println!("pipeline complete; all pilots stopped");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: the paper's Listings 2-6 as one runnable program.
+//!
+//! * Listing 2 — create a pilot-managed Spark cluster from a
+//!   Pilot-Compute-Description;
+//! * Listing 4 — extend it at runtime by referencing the parent pilot;
+//! * Listing 5 — submit a framework-agnostic Compute-Unit;
+//! * Listing 6 — use the native framework context directly.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::cu::{submit_unit, ComputeUnitDescription};
+use pilot_streaming::pilot::{DaskDescription, PilotComputeService, SparkDescription};
+use pilot_streaming::Result;
+
+fn main() -> Result<()> {
+    // An 8-node Wrangler-like machine managed by a modeled SLURM queue.
+    let machine = Machine::wrangler(8);
+    let service = PilotComputeService::new(machine);
+
+    // --- Listing 2: pilot_compute_description for a Spark cluster ----
+    let (spark_pilot, engine) = service.start_spark(
+        SparkDescription::new(2).with_config("executors_per_node", "2"),
+    )?;
+    let startup = spark_pilot.startup().unwrap();
+    println!(
+        "spark pilot {} RUNNING: {} nodes, {} executors",
+        spark_pilot.id(),
+        spark_pilot.nodes().len(),
+        engine.executor_count()
+    );
+    println!(
+        "  startup: queue {:.1}s + bootstrap {:.1}s = {:.1}s (modeled Wrangler)",
+        startup.queue_wait_secs,
+        startup.bootstrap_secs,
+        startup.total_secs()
+    );
+
+    // --- Listing 5: framework-agnostic compute unit ------------------
+    // def compute(x): return x*x ; pilot.submit(compute, 2)
+    let cu = submit_unit(&spark_pilot, ComputeUnitDescription::new("square"), || {
+        2 * 2
+    })?;
+    println!("compute unit result: {}", cu.wait()?);
+
+    // --- Listing 6: native context (Spark-like map over a batch) -----
+    let pool = engine.executor_pool();
+    let futures: Vec<_> = [1, 2, 3]
+        .into_iter()
+        .map(|x| pool.submit(move |_| x * x).unwrap())
+        .collect();
+    let mapped: Vec<i32> = futures.into_iter().map(|f| f.wait().unwrap()).collect();
+    println!("native map([1,2,3], x*x) = {mapped:?}");
+
+    // --- Listing 4: extend the cluster by referencing the parent -----
+    let before = engine.executor_count();
+    let extension = service.extend_pilot(&spark_pilot, 2)?;
+    println!(
+        "extended {} -> {} executors via pilot {}",
+        before,
+        engine.executor_count(),
+        extension.id()
+    );
+    // Stopping the extension resizes the cluster back down.
+    service.stop_pilot(&extension)?;
+    println!("extension stopped; machine free nodes: {}", service.machine().free_nodes());
+
+    // The same CU also runs on a Dask pilot (interoperability).
+    let (dask_pilot, _dask) = service.start_dask(DaskDescription::new(1))?;
+    let cu = submit_unit(&dask_pilot, ComputeUnitDescription::new("square"), || 2 * 2)?;
+    println!("same compute unit on dask pilot: {}", cu.wait()?);
+
+    service.stop_pilot(&dask_pilot)?;
+    service.stop_pilot(&spark_pilot)?;
+    println!("all pilots stopped; free nodes: {}", service.machine().free_nodes());
+    Ok(())
+}

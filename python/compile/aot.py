@@ -1,0 +1,118 @@
+"""AOT compile path: lower every L2 model to HLO text + data artifacts.
+
+Run once at build time (``make artifacts``); Python is never on the
+request path.  For each artifact in :func:`model.example_args` this
+writes ``artifacts/<name>.hlo.txt``; it also emits:
+
+* ``manifest.json`` — shapes/params the Rust runtime needs to marshal
+  ``Literal``s (mirrors ``params.MANIFEST``) plus per-artifact
+  input/output signatures.
+* ``template_sinogram.bin`` — f32-LE sinogram of the Shepp-Logan
+  phantom: the MASS ``template`` source payload (APS-format analogue).
+* ``phantom.bin`` — f32-LE ground-truth image, used by examples to
+  report reconstruction error.
+* ``testvectors/<name>.in<i>.bin / .out<i>.bin`` — golden input/output
+  vectors per artifact, produced by live-JAX evaluation.  The Rust
+  runtime's integration tests execute each compiled artifact on the
+  ``.in*`` vectors and assert allclose against ``.out*`` — the
+  cross-language round-trip check (jax -> HLO text -> PJRT-in-Rust).
+
+Interchange is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, params
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    out = []
+    for v in jax.tree_util.tree_leaves(avals):
+        out.append({"shape": list(v.shape), "dtype": str(v.dtype)})
+    return out
+
+
+def _example_inputs(name, args):
+    """Deterministic concrete inputs for the golden test vectors."""
+    rng = np.random.default_rng(abs(hash(name)) % (2**32))
+    out = []
+    for a in args:
+        arr = rng.uniform(0.1, 1.0, size=a.shape).astype(a.dtype)
+        out.append(arr)
+    return out
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    vec_dir = os.path.join(out_dir, "testvectors")
+    os.makedirs(vec_dir, exist_ok=True)
+    manifest = dict(params.MANIFEST)
+    manifest["artifacts"] = {}
+
+    for name, (fn, args) in model.example_args().items():
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *args)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _sig(args),
+            "outputs": _sig(out_avals),
+        }
+        # Golden vectors: live-JAX evaluation on deterministic inputs.
+        concrete = _example_inputs(name, args)
+        results = jax.tree_util.tree_leaves(jitted(*concrete))
+        for i, arr in enumerate(concrete):
+            arr.tofile(os.path.join(vec_dir, f"{name}.in{i}.bin"))
+        for i, arr in enumerate(results):
+            np.asarray(arr).tofile(os.path.join(vec_dir, f"{name}.out{i}.bin"))
+        print(f"wrote {path} ({len(text)} chars, {len(concrete)} in / "
+              f"{len(results)} out vectors)")
+
+    # Data artifacts: phantom image + its sinogram (the MASS template).
+    img_j = ref.shepp_logan(params.IMG_H, params.IMG_W)
+    thetas = ref.thetas_for(params.N_ANGLES)
+    sino = np.asarray(
+        ref.radon_ref(img_j, thetas, params.N_DET, params.N_RAY), dtype=np.float32
+    )
+    img = np.asarray(img_j, dtype=np.float32)
+    img.tofile(os.path.join(out_dir, "phantom.bin"))
+    sino.tofile(os.path.join(out_dir, "template_sinogram.bin"))
+    print(f"wrote phantom.bin ({img.nbytes} B), template_sinogram.bin ({sino.nbytes} B)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    args = p.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: KMeans nearest-centroid assignment.
+
+The hot spot of the paper's streaming-KMeans Mini-App (section 6.4) is
+scoring each incoming mini-batch against the model: O(n_points * k)
+distance evaluations per message.
+
+TPU adaptation (DESIGN.md section Hardware-Adaptation): points are tiled
+into VMEM-sized blocks along the batch dimension; the centroid table is
+tiny and kept resident.  Squared distances are computed via the matmul
+expansion ``|p|^2 - 2 p.c^T + |c|^2`` so the dominant FLOPs land on the
+MXU rather than the VPU.  The kernel runs ``interpret=True`` here (CPU
+PJRT cannot execute Mosaic custom-calls); on a real TPU the same
+BlockSpecs express the HBM<->VMEM schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(p_ref, c_ref, assign_ref, dist_ref):
+    """One block of points vs. the full (small) centroid table."""
+    p = p_ref[...]  # [B, D]
+    c = c_ref[...]  # [K, D]
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)  # [B, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # [1, K]
+    # MXU-friendly expansion; clamp tiny negative rounding artifacts.
+    d2 = jnp.maximum(p2 - 2.0 * (p @ c.T) + c2, 0.0)  # [B, K]
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.min(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def kmeans_assign(points, centroids, *, block=500):
+    """Pallas nearest-centroid assignment.
+
+    Args:
+      points: ``[N, D]`` f32; ``N`` must be a multiple of ``block``.
+      centroids: ``[K, D]`` f32.
+      block: points per VMEM tile.
+
+    Returns:
+      ``(assign [N] i32, min_sq_dist [N] f32)`` — matches
+      :func:`ref.kmeans_assign_ref`.
+    """
+    n, d = points.shape
+    k, _ = centroids.shape
+    if n % block != 0:
+        raise ValueError(f"N={n} not a multiple of block={block}")
+    grid = (n // block,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centroids)

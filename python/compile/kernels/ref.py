@@ -1,0 +1,200 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain ``jax.numpy`` ops only.  The pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` — this is the core
+correctness signal for the compute layer.
+
+Geometry conventions (shared by forward projection and backprojection):
+
+* image pixel (i, j) sits at centered coordinates
+  ``x = j - (W-1)/2``, ``y = (H-1)/2 - i`` (y up, unit pixel spacing);
+* a projection at angle ``theta`` maps (x, y) to detector coordinate
+  ``t = x*cos(theta) + y*sin(theta)``, detector bin ``t + (Nd-1)/2``;
+* samples falling outside the detector (or image) contribute zero;
+* interpolation is linear in detector space (backprojection) and
+  bilinear in image space (forward projection).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# KMeans
+# ---------------------------------------------------------------------------
+
+
+def kmeans_assign_ref(points, centroids):
+    """Assign each point to the nearest centroid.
+
+    Args:
+      points: ``[N, D]`` float array.
+      centroids: ``[K, D]`` float array.
+
+    Returns:
+      ``(assign [N] int32, min_sq_dist [N] float32)``.
+    """
+    d2 = jnp.sum((points[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def kmeans_stats_ref(points, assign, k):
+    """Per-cluster counts and coordinate sums for a mini-batch."""
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ points
+    return counts, sums
+
+
+def kmeans_update_ref(centroids, weights, batch_sums, batch_counts, decay):
+    """MLlib-style streaming KMeans centroid update with forgetting.
+
+    ``c_t = (c_{t-1} * w_{t-1} * a + sum_t) / (w_{t-1} * a + m_t)``
+    where empty clusters keep their previous centroid.
+    """
+    w_old = weights * decay
+    denom = w_old + batch_counts
+    safe = jnp.where(denom > 0, denom, 1.0)
+    new_c = (centroids * w_old[:, None] + batch_sums) / safe[:, None]
+    new_c = jnp.where((denom > 0)[:, None], new_c, centroids)
+    return new_c, denom
+
+
+# ---------------------------------------------------------------------------
+# Tomography
+# ---------------------------------------------------------------------------
+
+
+def _pixel_grid(h, w):
+    ys = ((h - 1) / 2.0 - jnp.arange(h, dtype=jnp.float32))[:, None]  # [H,1]
+    xs = (jnp.arange(w, dtype=jnp.float32) - (w - 1) / 2.0)[None, :]  # [1,W]
+    return xs, ys
+
+
+def backproject_ref(sino, thetas, h, w):
+    """Unfiltered backprojection of ``sino [A, Nd]`` onto ``[h, w]``.
+
+    Linear interpolation in detector space; out-of-detector samples are
+    zero.  Scaled by ``pi / A`` (Riemann sum over angle).
+    """
+    a, nd = sino.shape
+    xs, ys = _pixel_grid(h, w)
+
+    def body(acc, inp):
+        theta, row = inp
+        t = xs * jnp.cos(theta) + ys * jnp.sin(theta) + (nd - 1) / 2.0
+        i0 = jnp.clip(jnp.floor(t).astype(jnp.int32), 0, nd - 2)
+        frac = t - i0.astype(jnp.float32)
+        v = row[i0] * (1.0 - frac) + row[i0 + 1] * frac
+        valid = (t >= 0.0) & (t <= nd - 1.0)
+        return acc + jnp.where(valid, v, 0.0), None
+
+    img, _ = jax.lax.scan(body, jnp.zeros((h, w), jnp.float32), (thetas, sino))
+    return img * (jnp.pi / a)
+
+
+def bilinear_sample_ref(img, rows, cols):
+    """Bilinear sample ``img`` at fractional (row, col); zero outside."""
+    h, w = img.shape
+    r0 = jnp.clip(jnp.floor(rows).astype(jnp.int32), 0, h - 2)
+    c0 = jnp.clip(jnp.floor(cols).astype(jnp.int32), 0, w - 2)
+    fr = rows - r0.astype(jnp.float32)
+    fc = cols - c0.astype(jnp.float32)
+    v00 = img[r0, c0]
+    v01 = img[r0, c0 + 1]
+    v10 = img[r0 + 1, c0]
+    v11 = img[r0 + 1, c0 + 1]
+    v = (
+        v00 * (1 - fr) * (1 - fc)
+        + v01 * (1 - fr) * fc
+        + v10 * fr * (1 - fc)
+        + v11 * fr * fc
+    )
+    valid = (rows >= 0) & (rows <= h - 1) & (cols >= 0) & (cols <= w - 1)
+    return jnp.where(valid, v, 0.0)
+
+
+def radon_ref(img, thetas, nd, n_ray):
+    """Forward (Radon) projection of ``img`` -> sinogram ``[A, Nd]``.
+
+    Rotate-and-sum: for each angle, integrate the image along rays
+    parameterized by detector coordinate ``t`` and ray coordinate ``s``.
+    """
+    h, w = img.shape
+    tc = jnp.arange(nd, dtype=jnp.float32) - (nd - 1) / 2.0  # [Nd]
+    sc = jnp.arange(n_ray, dtype=jnp.float32) - (n_ray - 1) / 2.0  # [Ns]
+
+    def one_angle(theta):
+        ct, st = jnp.cos(theta), jnp.sin(theta)
+        x = tc[:, None] * ct - sc[None, :] * st  # [Nd, Ns]
+        y = tc[:, None] * st + sc[None, :] * ct
+        cols = x + (w - 1) / 2.0
+        rows = (h - 1) / 2.0 - y
+        return jnp.sum(bilinear_sample_ref(img, rows, cols), axis=1)
+
+    return jax.vmap(one_angle)(thetas)
+
+
+def ramp_filter_ref(sino):
+    """Frequency-domain ramp filter (GridRec / FBP), row-wise over angles."""
+    _, nd = sino.shape
+    freqs = jnp.fft.fftfreq(nd)
+    ramp = jnp.abs(freqs)
+    return jnp.real(
+        jnp.fft.ifft(jnp.fft.fft(sino, axis=1) * ramp[None, :], axis=1)
+    ).astype(jnp.float32)
+
+
+def fbp_ref(sino, thetas, h, w):
+    """Filtered backprojection (our GridRec analogue)."""
+    return backproject_ref(ramp_filter_ref(sino), thetas, h, w)
+
+
+def mlem_ref(sino, thetas, h, w, nd, n_ray, iters):
+    """Maximum-likelihood EM reconstruction (TomoPy ML-EM analogue).
+
+    ``x <- x / s * A^T(y / (A x))`` with ``s = A^T 1`` computed once from
+    the fixed geometry; projections clamped away from zero for stability.
+    """
+    eps = 1e-6
+    ones = jnp.ones_like(sino)
+    sens = backproject_ref(ones, thetas, h, w)
+    sens = jnp.where(sens > eps, sens, 1.0)
+    x0 = jnp.ones((h, w), jnp.float32)
+
+    def body(x, _):
+        proj = radon_ref(x, thetas, nd, n_ray)
+        ratio = sino / jnp.maximum(proj, eps)
+        x = x * backproject_ref(ratio, thetas, h, w) / sens
+        return x, None
+
+    x, _ = jax.lax.scan(body, x0, None, length=iters)
+    return x
+
+
+def thetas_for(n_angles):
+    """The fixed angle grid: ``n_angles`` samples over [0, pi)."""
+    return jnp.arange(n_angles, dtype=jnp.float32) * (jnp.pi / n_angles)
+
+
+def shepp_logan(h, w):
+    """A small Shepp-Logan-style phantom used as the MASS template image."""
+    ys = ((h - 1) / 2.0 - jnp.arange(h, dtype=jnp.float32))[:, None] / (h / 2.0)
+    xs = (jnp.arange(w, dtype=jnp.float32) - (w - 1) / 2.0)[None, :] / (w / 2.0)
+
+    def ellipse(cx, cy, ax, ay, phi, val):
+        c, s = jnp.cos(phi), jnp.sin(phi)
+        xr = (xs - cx) * c + (ys - cy) * s
+        yr = -(xs - cx) * s + (ys - cy) * c
+        return jnp.where((xr / ax) ** 2 + (yr / ay) ** 2 <= 1.0, val, 0.0)
+
+    img = ellipse(0.0, 0.0, 0.72, 0.92, 0.0, 1.0)
+    img = img + ellipse(0.0, -0.018, 0.655, 0.854, 0.0, -0.8)
+    img = img + ellipse(0.22, 0.0, 0.11, 0.31, -0.4, -0.2)
+    img = img + ellipse(-0.22, 0.0, 0.16, 0.41, 0.4, -0.2)
+    img = img + ellipse(0.0, 0.35, 0.21, 0.25, 0.0, 0.3)
+    img = img + ellipse(0.0, 0.1, 0.046, 0.046, 0.0, 0.2)
+    img = img + ellipse(-0.08, -0.605, 0.046, 0.023, 0.0, 0.2)
+    img = img + ellipse(0.06, -0.605, 0.046, 0.046, 0.0, 0.2)
+    return jnp.maximum(img, 0.0).astype(jnp.float32)

@@ -1,0 +1,179 @@
+"""L2 JAX models for the Pilot-Streaming Mini-App processors.
+
+Each public function here is one AOT artifact: it is jitted, lowered to
+HLO text by ``aot.py``, and executed from the Rust runtime
+(``rust/src/runtime``) on the request path.  All shapes are fixed at
+compile time (see ``params.py``); Python never runs at serving time.
+
+Models:
+
+* :func:`kmeans_score` — score one mini-batch against the centroid
+  table: Pallas assignment kernel + per-cluster batch statistics.
+* :func:`kmeans_update` — MLlib-style streaming centroid update with a
+  decay factor (the "model update" half of Table 1).
+* :func:`gridrec` — GridRec analogue: frequency-domain ramp filter +
+  Pallas backprojection (the fast, direct reconstruction).
+* :func:`mlem` — ML-EM analogue: fixed-iteration EM loop built from the
+  Pallas forward/backprojection kernels (the slow, iterative method).
+* :func:`radon_forward` — forward projection, exported for sinogram
+  template generation and tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import params
+from .kernels import kmeans as kmeans_kernels
+from .kernels import tomo as tomo_kernels
+from .kernels import ref
+
+
+def _geometry():
+    thetas = ref.thetas_for(params.N_ANGLES)
+    return jnp.cos(thetas), jnp.sin(thetas)
+
+
+# ---------------------------------------------------------------------------
+# KMeans
+# ---------------------------------------------------------------------------
+
+
+def kmeans_score(points, centroids):
+    """Score a mini-batch of points against the model.
+
+    Args:
+      points: ``[N, D]`` f32.
+      centroids: ``[K, D]`` f32.
+
+    Returns:
+      ``(assign [N] i32, counts [K] f32, sums [K, D] f32, inertia [] f32)``
+      — everything the coordinator needs for both prediction and the
+      subsequent model update, in a single fused artifact.
+    """
+    k = centroids.shape[0]
+    assign, dist = kmeans_kernels.kmeans_assign(
+        points, centroids, block=params.KMEANS_BLOCK
+    )
+    onehot = (assign[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(
+        points.dtype
+    )
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ points
+    inertia = jnp.sum(dist)
+    return assign, counts, sums, inertia
+
+
+def kmeans_update(centroids, weights, batch_sums, batch_counts):
+    """Streaming centroid update with exponential forgetting.
+
+    The decay factor is baked into the artifact (``params.KMEANS_DECAY``)
+    so the hot path passes only the running state + batch statistics.
+    Empty clusters keep their previous centroid.
+
+    Returns ``(new_centroids [K, D], new_weights [K])``.
+    """
+    w_old = weights * params.KMEANS_DECAY
+    denom = w_old + batch_counts
+    safe = jnp.where(denom > 0, denom, 1.0)
+    new_c = (centroids * w_old[:, None] + batch_sums) / safe[:, None]
+    new_c = jnp.where((denom > 0)[:, None], new_c, centroids)
+    return new_c, denom
+
+
+# ---------------------------------------------------------------------------
+# Light source reconstruction
+# ---------------------------------------------------------------------------
+
+
+def gridrec(sino):
+    """GridRec analogue: ramp filter (FFT) + Pallas backprojection."""
+    cos_t, sin_t = _geometry()
+    nd = sino.shape[1]
+    freqs = jnp.fft.fftfreq(nd)
+    ramp = jnp.abs(freqs)
+    filtered = jnp.real(
+        jnp.fft.ifft(jnp.fft.fft(sino, axis=1) * ramp[None, :], axis=1)
+    ).astype(jnp.float32)
+    return tomo_kernels.backproject(
+        filtered,
+        cos_t,
+        sin_t,
+        h=params.IMG_H,
+        w=params.IMG_W,
+        angle_block=params.ANGLE_BLOCK,
+    )
+
+
+def mlem(sino):
+    """ML-EM analogue: ``params.MLEM_ITERS`` EM iterations.
+
+    ``x <- x / s * A^T(y / (A x))`` with the sensitivity image
+    ``s = A^T 1`` folded into the artifact as a constant of the fixed
+    geometry.
+    """
+    cos_t, sin_t = _geometry()
+    h, w = params.IMG_H, params.IMG_W
+    eps = 1e-6
+
+    def bp(s):
+        return tomo_kernels.backproject(
+            s, cos_t, sin_t, h=h, w=w, angle_block=params.ANGLE_BLOCK
+        )
+
+    def fwd(x):
+        return tomo_kernels.radon(
+            x,
+            cos_t,
+            sin_t,
+            nd=params.N_DET,
+            n_ray=params.N_RAY,
+            angle_block=params.ANGLE_BLOCK,
+        )
+
+    sens = bp(jnp.ones_like(sino))
+    sens = jnp.where(sens > eps, sens, 1.0)
+    x0 = jnp.ones((h, w), jnp.float32)
+
+    def body(_, x):
+        proj = fwd(x)
+        ratio = sino / jnp.maximum(proj, eps)
+        return x * bp(ratio) / sens
+
+    return jax.lax.fori_loop(0, params.MLEM_ITERS, body, x0)
+
+
+def radon_forward(img):
+    """Forward projection of an image with the fixed experiment geometry."""
+    cos_t, sin_t = _geometry()
+    return tomo_kernels.radon(
+        img,
+        cos_t,
+        sin_t,
+        nd=params.N_DET,
+        n_ray=params.N_RAY,
+        angle_block=params.ANGLE_BLOCK,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry (used by aot.py and the pytest suite)
+# ---------------------------------------------------------------------------
+
+
+def example_args():
+    """``{artifact_name: (fn, example_args)}`` for every AOT artifact."""
+    f32 = jnp.float32
+    n, d, k = params.KMEANS_POINTS, params.KMEANS_DIM, params.KMEANS_K
+    a, nd = params.N_ANGLES, params.N_DET
+    h, w = params.IMG_H, params.IMG_W
+    s = jax.ShapeDtypeStruct
+    return {
+        "kmeans_score": (kmeans_score, (s((n, d), f32), s((k, d), f32))),
+        "kmeans_update": (
+            kmeans_update,
+            (s((k, d), f32), s((k,), f32), s((k, d), f32), s((k,), f32)),
+        ),
+        "gridrec": (gridrec, (s((a, nd), f32),)),
+        "mlem": (mlem, (s((a, nd), f32),)),
+        "radon": (radon_forward, (s((h, w), f32),)),
+    }

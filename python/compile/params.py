@@ -1,0 +1,59 @@
+"""Shared geometry / model parameters for the Pilot-Streaming compute payloads.
+
+These constants define the fixed AOT shapes shared between the Python
+compile path (L1 Pallas kernels, L2 JAX models) and the Rust runtime
+(which reads them back from ``artifacts/manifest.json``).
+
+The sizes mirror the paper's Mini-App workloads (section 6):
+
+* KMeans messages carry 5,000 3-D points and are scored against 10
+  centroids (paper section 6.4: "a streaming KMeans application that
+  trains a model with 10 centroids").
+* Light-source messages carry one APS-format frame whose sinogram we fix
+  at ``N_ANGLES x N_DET``; reconstruction output is ``IMG_H x IMG_W``.
+  The serialized message is padded to ~2 MB to match the paper's APS
+  message size, of which the sinogram is the compute-relevant payload.
+"""
+
+# --- KMeans (paper: 5000 points / message, ~0.32 MB serialized, K=10) ---
+KMEANS_POINTS = 5000
+KMEANS_DIM = 3
+KMEANS_K = 10
+
+# --- Light source tomography ---
+N_ANGLES = 96  # projection angles over [0, pi)
+N_DET = 192  # detector bins (>= image diagonal 128*sqrt(2) ~ 182)
+IMG_H = 128
+IMG_W = 128
+N_RAY = 192  # integration steps along each ray (forward projection)
+
+# ML-EM iterations per message.  The paper reports GridRec ~3x faster
+# than ML-EM (63 vs 22 msg/s); 4 inner iterations lands our FBP/ML-EM
+# cost ratio in the same regime on CPU.
+MLEM_ITERS = 4
+
+# Streaming KMeans decay factor (MLlib-style exponential forgetting).
+KMEANS_DECAY = 0.9
+
+# Pallas block sizes (L1 tiling).
+KMEANS_BLOCK = 500  # points per VMEM block; 5000/500 = 10 grid steps
+ANGLE_BLOCK = 16  # angles per backprojection block; 96/16 = 6 steps
+
+MANIFEST = {
+    "kmeans": {
+        "n_points": KMEANS_POINTS,
+        "dim": KMEANS_DIM,
+        "k": KMEANS_K,
+        "decay": KMEANS_DECAY,
+        "block": KMEANS_BLOCK,
+    },
+    "tomo": {
+        "n_angles": N_ANGLES,
+        "n_det": N_DET,
+        "img_h": IMG_H,
+        "img_w": IMG_W,
+        "n_ray": N_RAY,
+        "mlem_iters": MLEM_ITERS,
+        "angle_block": ANGLE_BLOCK,
+    },
+}

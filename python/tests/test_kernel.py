@@ -1,0 +1,234 @@
+"""L1 correctness: Pallas kernels vs. pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/seeds for every kernel and asserts
+``assert_allclose`` against ``ref.py`` — the core correctness signal
+for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import params
+from compile.kernels import kmeans, ref, tomo
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# kmeans_assign
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_blocks=st.integers(1, 6),
+    block=st.sampled_from([8, 50, 128]),
+    d=st.integers(1, 8),
+    k=st.integers(1, 16),
+)
+def test_kmeans_assign_matches_ref(seed, n_blocks, block, d, k):
+    rng = _rng(seed)
+    n = n_blocks * block
+    pts = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    cen = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    a_pl, d_pl = kmeans.kmeans_assign(pts, cen, block=block)
+    a_rf, d_rf = ref.kmeans_assign_ref(pts, cen)
+    # Distances must agree tightly; assignments may only differ where two
+    # centroids are (near-)equidistant, which random draws make measure-zero.
+    assert_allclose(np.asarray(d_pl), np.asarray(d_rf), rtol=1e-4, atol=1e-5)
+    assert np.array_equal(np.asarray(a_pl), np.asarray(a_rf))
+
+
+def test_kmeans_assign_production_shape():
+    rng = _rng(7)
+    pts = jnp.asarray(
+        rng.normal(size=(params.KMEANS_POINTS, params.KMEANS_DIM)).astype(np.float32)
+    )
+    cen = jnp.asarray(
+        rng.normal(size=(params.KMEANS_K, params.KMEANS_DIM)).astype(np.float32)
+    )
+    a_pl, d_pl = kmeans.kmeans_assign(pts, cen, block=params.KMEANS_BLOCK)
+    a_rf, d_rf = ref.kmeans_assign_ref(pts, cen)
+    assert np.array_equal(np.asarray(a_pl), np.asarray(a_rf))
+    assert_allclose(np.asarray(d_pl), np.asarray(d_rf), rtol=1e-4, atol=1e-5)
+
+
+def test_kmeans_assign_rejects_ragged_block():
+    pts = jnp.zeros((10, 3), jnp.float32)
+    cen = jnp.zeros((2, 3), jnp.float32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        kmeans.kmeans_assign(pts, cen, block=3)
+
+
+def test_kmeans_assign_single_centroid():
+    rng = _rng(1)
+    pts = jnp.asarray(rng.normal(size=(16, 2)).astype(np.float32))
+    cen = jnp.asarray(rng.normal(size=(1, 2)).astype(np.float32))
+    a, d = kmeans.kmeans_assign(pts, cen, block=8)
+    assert np.all(np.asarray(a) == 0)
+    assert_allclose(
+        np.asarray(d), np.sum((np.asarray(pts) - np.asarray(cen)) ** 2, axis=1),
+        rtol=1e-4, atol=1e-6,
+    )
+
+
+def test_kmeans_assign_point_on_centroid():
+    cen = jnp.asarray([[0.0, 0.0], [10.0, 10.0]], jnp.float32)
+    pts = jnp.tile(cen, (4, 1))  # 8 points, alternating exactly on centroids
+    a, d = kmeans.kmeans_assign(pts, cen, block=8)
+    assert np.array_equal(np.asarray(a), np.tile([0, 1], 4))
+    assert_allclose(np.asarray(d), np.zeros(8), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backproject
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    a_blocks=st.integers(1, 4),
+    angle_block=st.sampled_from([4, 8]),
+    nd=st.sampled_from([32, 48]),
+    hw=st.sampled_from([(16, 16), (24, 16), (32, 32)]),
+)
+def test_backproject_matches_ref(seed, a_blocks, angle_block, nd, hw):
+    rng = _rng(seed)
+    a = a_blocks * angle_block
+    h, w = hw
+    sino = jnp.asarray(rng.normal(size=(a, nd)).astype(np.float32))
+    thetas = ref.thetas_for(a)
+    out_pl = tomo.backproject(
+        sino, jnp.cos(thetas), jnp.sin(thetas), h=h, w=w, angle_block=angle_block
+    )
+    out_rf = ref.backproject_ref(sino, thetas, h, w)
+    assert_allclose(np.asarray(out_pl), np.asarray(out_rf), rtol=1e-4, atol=1e-4)
+
+
+def test_backproject_production_shape():
+    rng = _rng(3)
+    sino = jnp.asarray(
+        rng.normal(size=(params.N_ANGLES, params.N_DET)).astype(np.float32)
+    )
+    thetas = ref.thetas_for(params.N_ANGLES)
+    out_pl = tomo.backproject(
+        sino,
+        jnp.cos(thetas),
+        jnp.sin(thetas),
+        h=params.IMG_H,
+        w=params.IMG_W,
+        angle_block=params.ANGLE_BLOCK,
+    )
+    out_rf = ref.backproject_ref(sino, thetas, params.IMG_H, params.IMG_W)
+    assert_allclose(np.asarray(out_pl), np.asarray(out_rf), rtol=1e-4, atol=1e-4)
+
+
+def test_backproject_zero_sino_is_zero_image():
+    a, nd = 16, 32
+    thetas = ref.thetas_for(a)
+    out = tomo.backproject(
+        jnp.zeros((a, nd), jnp.float32),
+        jnp.cos(thetas),
+        jnp.sin(thetas),
+        h=16,
+        w=16,
+        angle_block=8,
+    )
+    assert_allclose(np.asarray(out), np.zeros((16, 16)), atol=0)
+
+
+def test_backproject_uniform_sino_center_value():
+    # A constant sinogram backprojects to ~pi * c at the image center
+    # (every angle contributes c, scaled by pi/A * A).
+    a, nd = 32, 64
+    c = 2.5
+    thetas = ref.thetas_for(a)
+    out = tomo.backproject(
+        jnp.full((a, nd), c, jnp.float32),
+        jnp.cos(thetas),
+        jnp.sin(thetas),
+        h=17,
+        w=17,
+        angle_block=8,
+    )
+    assert_allclose(float(out[8, 8]), np.pi * c, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# radon (forward projection)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    a_blocks=st.integers(1, 3),
+    angle_block=st.sampled_from([4, 8]),
+    nd=st.sampled_from([24, 40]),
+    n_ray=st.sampled_from([16, 32]),
+    hw=st.sampled_from([(16, 16), (16, 24)]),
+)
+def test_radon_matches_ref(seed, a_blocks, angle_block, nd, n_ray, hw):
+    rng = _rng(seed)
+    a = a_blocks * angle_block
+    h, w = hw
+    img = jnp.asarray(rng.normal(size=(h, w)).astype(np.float32))
+    thetas = ref.thetas_for(a)
+    out_pl = tomo.radon(
+        img, jnp.cos(thetas), jnp.sin(thetas), nd=nd, n_ray=n_ray,
+        angle_block=angle_block,
+    )
+    out_rf = ref.radon_ref(img, thetas, nd, n_ray)
+    assert_allclose(np.asarray(out_pl), np.asarray(out_rf), rtol=1e-4, atol=1e-4)
+
+
+def test_radon_production_shape():
+    img = ref.shepp_logan(params.IMG_H, params.IMG_W)
+    thetas = ref.thetas_for(params.N_ANGLES)
+    out_pl = tomo.radon(
+        img,
+        jnp.cos(thetas),
+        jnp.sin(thetas),
+        nd=params.N_DET,
+        n_ray=params.N_RAY,
+        angle_block=params.ANGLE_BLOCK,
+    )
+    out_rf = ref.radon_ref(img, thetas, params.N_DET, params.N_RAY)
+    assert_allclose(np.asarray(out_pl), np.asarray(out_rf), rtol=1e-4, atol=2e-4)
+
+
+def test_radon_mass_conservation():
+    # Every projection of a non-negative image sums to ~ the image mass
+    # (rays cover the whole support when Nd and n_ray are large enough).
+    img = ref.shepp_logan(32, 32)
+    thetas = ref.thetas_for(16)
+    out = tomo.radon(
+        img, jnp.cos(thetas), jnp.sin(thetas), nd=64, n_ray=64, angle_block=8
+    )
+    mass = float(jnp.sum(img))
+    sums = np.asarray(jnp.sum(out, axis=1))
+    assert_allclose(sums, mass, rtol=0.05)
+
+
+def test_radon_zero_angle_is_column_sum():
+    # theta = 0: t = x, ray integrates over y -> projection == column sums.
+    rng = _rng(11)
+    h = w = 16
+    img = jnp.asarray(rng.uniform(size=(h, w)).astype(np.float32))
+    # Single angle block with theta=0 padded by other angles.
+    thetas = jnp.zeros((4,), jnp.float32)
+    out = tomo.radon(
+        img, jnp.cos(thetas), jnp.sin(thetas), nd=w, n_ray=h, angle_block=4
+    )
+    col_sums = np.asarray(jnp.sum(img, axis=0))
+    assert_allclose(np.asarray(out[0]), col_sums, rtol=1e-4, atol=1e-4)

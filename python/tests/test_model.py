@@ -1,0 +1,183 @@
+"""L2 correctness: model-level behaviour of the AOT artifacts.
+
+These tests exercise the exact functions that ``aot.py`` lowers, at the
+exact production shapes, plus algorithmic invariants (EM monotonicity,
+streaming-update fixed points, reconstruction fidelity ordering).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model, params
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _phantom_sino():
+    img = ref.shepp_logan(params.IMG_H, params.IMG_W)
+    thetas = ref.thetas_for(params.N_ANGLES)
+    sino = ref.radon_ref(img, thetas, params.N_DET, params.N_RAY)
+    return img, sino
+
+
+# ---------------------------------------------------------------------------
+# KMeans score / update
+# ---------------------------------------------------------------------------
+
+
+def test_kmeans_score_matches_ref_stats():
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(
+        rng.normal(size=(params.KMEANS_POINTS, params.KMEANS_DIM)).astype(np.float32)
+    )
+    cen = jnp.asarray(
+        rng.normal(size=(params.KMEANS_K, params.KMEANS_DIM)).astype(np.float32)
+    )
+    assign, counts, sums, inertia = model.kmeans_score(pts, cen)
+    a_rf, d_rf = ref.kmeans_assign_ref(pts, cen)
+    c_rf, s_rf = ref.kmeans_stats_ref(pts, a_rf, params.KMEANS_K)
+    assert np.array_equal(np.asarray(assign), np.asarray(a_rf))
+    assert_allclose(np.asarray(counts), np.asarray(c_rf))
+    assert_allclose(np.asarray(sums), np.asarray(s_rf), rtol=1e-4, atol=1e-2)
+    assert_allclose(float(inertia), float(jnp.sum(d_rf)), rtol=1e-4)
+    # Counts partition the batch.
+    assert float(jnp.sum(counts)) == params.KMEANS_POINTS
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kmeans_update_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    k, d = params.KMEANS_K, params.KMEANS_DIM
+    cen = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 100, size=(k,)).astype(np.float32))
+    sums = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32) * 10)
+    counts = jnp.asarray(
+        rng.integers(0, 50, size=(k,)).astype(np.float32)
+    )
+    new_c, new_w = model.kmeans_update(cen, w, sums, counts)
+    rf_c, rf_w = ref.kmeans_update_ref(cen, w, sums, counts, params.KMEANS_DECAY)
+    assert_allclose(np.asarray(new_c), np.asarray(rf_c), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(new_w), np.asarray(rf_w), rtol=1e-5)
+
+
+def test_kmeans_update_empty_batch_keeps_centroids():
+    k, d = params.KMEANS_K, params.KMEANS_DIM
+    cen = jnp.arange(k * d, dtype=jnp.float32).reshape(k, d)
+    w = jnp.full((k,), 10.0, jnp.float32)
+    new_c, new_w = model.kmeans_update(
+        cen, w, jnp.zeros((k, d), jnp.float32), jnp.zeros((k,), jnp.float32)
+    )
+    assert_allclose(np.asarray(new_c), np.asarray(cen))
+    assert_allclose(np.asarray(new_w), 10.0 * params.KMEANS_DECAY)
+
+
+def test_kmeans_update_fresh_model_takes_batch_mean():
+    # weights == 0: the update must land exactly on the batch means.
+    k, d = params.KMEANS_K, params.KMEANS_DIM
+    rng = np.random.default_rng(5)
+    cen = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    sums = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    counts = jnp.full((k,), 4.0, jnp.float32)
+    new_c, new_w = model.kmeans_update(
+        cen, jnp.zeros((k,), jnp.float32), sums, counts
+    )
+    assert_allclose(np.asarray(new_c), np.asarray(sums) / 4.0, rtol=1e-5)
+    assert_allclose(np.asarray(new_w), 4.0)
+
+
+def test_kmeans_converges_on_separated_clusters():
+    # Streaming score->update loop recovers well-separated cluster centers.
+    rng = np.random.default_rng(42)
+    k, d, n = params.KMEANS_K, params.KMEANS_DIM, params.KMEANS_POINTS
+    true_centers = rng.uniform(-50, 50, size=(k, d)).astype(np.float32)
+    cen = jnp.asarray(true_centers + rng.normal(size=(k, d)).astype(np.float32))
+    w = jnp.zeros((k,), jnp.float32)
+    for _ in range(5):
+        labels = rng.integers(0, k, size=n)
+        pts = true_centers[labels] + rng.normal(scale=0.1, size=(n, d)).astype(
+            np.float32
+        )
+        _, counts, sums, _ = model.kmeans_score(jnp.asarray(pts), cen)
+        cen, w = model.kmeans_update(cen, w, sums, counts)
+    err = np.max(np.abs(np.asarray(cen) - true_centers))
+    assert err < 0.05, f"centroids did not converge: max err {err}"
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction models
+# ---------------------------------------------------------------------------
+
+
+def test_gridrec_matches_ref_fbp():
+    _, sino = _phantom_sino()
+    out = model.gridrec(sino)
+    thetas = ref.thetas_for(params.N_ANGLES)
+    out_rf = ref.fbp_ref(sino, thetas, params.IMG_H, params.IMG_W)
+    assert_allclose(np.asarray(out), np.asarray(out_rf), rtol=1e-3, atol=1e-3)
+
+
+def test_gridrec_reconstructs_phantom():
+    img, sino = _phantom_sino()
+    out = model.gridrec(sino)
+    interior = np.asarray(out)[16:-16, 16:-16]
+    truth = np.asarray(img)[16:-16, 16:-16]
+    rmse = float(np.sqrt(np.mean((interior - truth) ** 2)))
+    assert rmse < 0.12, f"FBP rmse too high: {rmse}"
+
+
+def test_mlem_matches_ref():
+    _, sino = _phantom_sino()
+    out = jax.jit(model.mlem)(sino)
+    thetas = ref.thetas_for(params.N_ANGLES)
+    out_rf = ref.mlem_ref(
+        sino,
+        thetas,
+        params.IMG_H,
+        params.IMG_W,
+        params.N_DET,
+        params.N_RAY,
+        params.MLEM_ITERS,
+    )
+    assert_allclose(np.asarray(out), np.asarray(out_rf), rtol=1e-2, atol=1e-3)
+
+
+def test_mlem_error_decreases_with_iterations():
+    img, sino = _phantom_sino()
+    thetas = ref.thetas_for(params.N_ANGLES)
+    errs = []
+    for iters in (1, 4, 16):
+        out = ref.mlem_ref(
+            sino, thetas, params.IMG_H, params.IMG_W, params.N_DET, params.N_RAY,
+            iters,
+        )
+        errs.append(float(jnp.sqrt(jnp.mean((out - img) ** 2))))
+    assert errs[2] < errs[1] < errs[0], f"EM not monotone: {errs}"
+
+
+def test_mlem_nonnegative():
+    _, sino = _phantom_sino()
+    out = jax.jit(model.mlem)(sino)
+    assert float(jnp.min(out)) >= 0.0
+
+
+def test_radon_forward_matches_ref():
+    img, sino = _phantom_sino()
+    out = model.radon_forward(img)
+    assert_allclose(np.asarray(out), np.asarray(sino), rtol=1e-3, atol=2e-4)
+
+
+def test_fbp_then_radon_roundtrip():
+    # radon(gridrec(sino)) ~ sino on the phantom (consistency of the pair).
+    _, sino = _phantom_sino()
+    rec = model.gridrec(sino)
+    sino2 = model.radon_forward(rec)
+    # Compare in the central detector region where the phantom lives.
+    c = np.asarray(sino)[:, 48:-48]
+    c2 = np.asarray(sino2)[:, 48:-48]
+    rel = np.linalg.norm(c - c2) / np.linalg.norm(c)
+    assert rel < 0.25, f"roundtrip relative error {rel}"

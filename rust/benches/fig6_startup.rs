@@ -1,0 +1,44 @@
+//! Figure 6 bench: Kafka/Spark/Dask(/Flink) startup vs cluster size.
+//!
+//! Regenerates the paper's startup comparison: per-framework queue wait
+//! + framework-init time on 1..32 nodes, and measures the *live*
+//! coordinator's pilot-creation path (adaptor + plugin bootstrap) so the
+//! modeled figure and the real control plane are benchmarked together.
+//!
+//! Run: `cargo bench --bench fig6_startup`
+
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::config::ExperimentConfig;
+use pilot_streaming::exp;
+use pilot_streaming::pilot::{FrameworkKind, PilotComputeDescription, PilotComputeService};
+use pilot_streaming::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::from_args();
+
+    // The figure itself (modeled, full grid).
+    bench.run_once("fig6/grid", || {
+        let rec = exp::fig6(&ExperimentConfig::default());
+        println!("\n{}", rec.to_table());
+        let csv = rec.to_csv();
+        let rows = csv.lines().count() - 1;
+        vec![("rows".into(), rows as f64)]
+    });
+
+    // Live control-plane cost: how fast the coordinator itself turns a
+    // description into a RUNNING pilot (models at time_scale = 0).
+    for kind in [FrameworkKind::Kafka, FrameworkKind::Spark, FrameworkKind::Dask] {
+        for nodes in [1usize, 4, 16] {
+            let name = format!("fig6/live-pilot/{}/{nodes}n", kind.name());
+            bench.run(&name, 10, || {
+                let service = PilotComputeService::new(Machine::unthrottled(nodes + 1));
+                let pilot = service
+                    .create_pilot(PilotComputeDescription::new("slurm://wrangler", kind, nodes))
+                    .unwrap();
+                let s = pilot.startup().unwrap();
+                assert!(s.total_secs() > 0.0);
+                service.stop_pilot(&pilot).unwrap();
+            });
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Figure 7 bench: end-to-end latency at 100 msg/s — Kafka client,
+//! Spark Streaming (0.2-8 s windows), Amazon Kinesis, Google Pub/Sub.
+//!
+//! The figure itself comes from the calibrated latency models; the
+//! second part measures the *real plane's* produce->consume latency
+//! through the in-process broker as the floor the models sit on.
+//!
+//! Run: `cargo bench --bench fig7_latency`
+
+use std::time::Duration;
+
+use pilot_streaming::broker::BrokerCluster;
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::config::ExperimentConfig;
+use pilot_streaming::exp;
+use pilot_streaming::metrics::Histogram;
+use pilot_streaming::sim::CostModel;
+use pilot_streaming::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::from_args();
+    let config = ExperimentConfig::default();
+
+    bench.run_once("fig7/models", || {
+        let costs = CostModel::paper_era();
+        let rec = exp::fig7(&config, &costs);
+        println!("\n{}", rec.to_table());
+        vec![("configs".into(), rec.to_csv().lines().count() as f64 - 1.0)]
+    });
+
+    // Real-plane broker latency floor at ~100 msg/s.
+    let quick = bench.quick();
+    bench.run_once("fig7/real-broker-floor", || {
+        let machine = Machine::unthrottled(3);
+        let cluster = BrokerCluster::new(machine, vec![0]);
+        cluster.create_topic("lat", 1).unwrap();
+        let hist = Histogram::new();
+        let n = if quick { 100 } else { 500 };
+        for i in 0..n {
+            let t0 = cluster.elapsed_ns();
+            cluster
+                .produce("lat", 0, 1, &[vec![0u8; 1024]])
+                .unwrap();
+            let recs = cluster
+                .fetch("lat", 0, i, usize::MAX, 2, Duration::from_millis(100))
+                .unwrap();
+            assert_eq!(recs.len(), 1);
+            hist.record_ns(cluster.elapsed_ns() - t0);
+            std::thread::sleep(Duration::from_millis(10)); // ~100 msg/s
+        }
+        vec![
+            ("p50_us".into(), hist.p50_secs() * 1e6),
+            ("p99_us".into(), hist.p99_secs() * 1e6),
+        ]
+    });
+}

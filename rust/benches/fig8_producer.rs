@@ -1,0 +1,64 @@
+//! Figure 8 bench: MASS producer throughput across source types and
+//! resource configurations (producer nodes x broker nodes).
+//!
+//! Two parts: (i) the full Wrangler-scale figure on the simulation
+//! plane (both cost presets), (ii) a real-plane throughput measurement
+//! of the in-process broker with actual MASS producers — the numbers
+//! that calibrate the simulator.
+//!
+//! Run: `cargo bench --bench fig8_producer`
+
+use pilot_streaming::broker::BrokerCluster;
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::config::{CostPreset, ExperimentConfig};
+use pilot_streaming::engine::TaskEngine;
+use pilot_streaming::exp;
+use pilot_streaming::miniapp::{MassConfig, MassSource, SourceKind};
+use pilot_streaming::sim::CostModel;
+use pilot_streaming::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::from_args();
+
+    for (label, preset) in [
+        ("paper-era", CostPreset::PaperEra),
+        ("calibrated", CostPreset::Calibrated),
+    ] {
+        bench.run_once(&format!("fig8/grid/{label}"), || {
+            let config = ExperimentConfig {
+                preset,
+                ..Default::default()
+            };
+            let costs = match preset {
+                CostPreset::PaperEra => CostModel::paper_era(),
+                CostPreset::Calibrated => exp::resolve_costs(&config, true),
+            };
+            let rec = exp::fig8(&config, &costs);
+            println!("\n{}", rec.to_table());
+            vec![("rows".into(), rec.to_csv().lines().count() as f64 - 1.0)]
+        });
+    }
+
+    // Real-plane producer throughput (single host, real bytes).
+    let quick = bench.quick();
+    for source in ["kmeans-random", "kmeans-static"] {
+        bench.run_once(&format!("fig8/real/{source}"), || {
+            let machine = Machine::unthrottled(3);
+            let cluster = BrokerCluster::new(machine.clone(), vec![0]);
+            cluster.create_topic("t", 4).unwrap();
+            let engine = TaskEngine::new(machine, vec![1], 2);
+            let kind = match source {
+                "kmeans-static" => SourceKind::KmeansStatic,
+                _ => SourceKind::KmeansRandom { n_centroids: 10 },
+            };
+            let mut cfg = MassConfig::new(kind, "t");
+            cfg.messages_per_producer = if quick { 20 } else { 100 };
+            let report = MassSource::new(cfg).run(&engine, &cluster, 2).unwrap();
+            engine.stop();
+            vec![
+                ("msgs_per_s".into(), report.msg_rate()),
+                ("mb_per_s".into(), report.mb_rate()),
+            ]
+        });
+    }
+}

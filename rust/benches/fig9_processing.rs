@@ -1,0 +1,62 @@
+//! Figure 9 bench: MASA processing throughput for KMeans and the two
+//! light-source reconstruction algorithms (GridRec, ML-EM).
+//!
+//! (i) the Wrangler-scale figure on the simulation plane; (ii) the
+//! real-plane per-message execution costs of the actual AOT artifacts
+//! through PJRT — the calibration inputs; (iii) the §6.5 headline row.
+//!
+//! Run: `cargo bench --bench fig9_processing`
+
+use pilot_streaming::config::{CostPreset, ExperimentConfig};
+use pilot_streaming::exp;
+use pilot_streaming::runtime::ModelRuntime;
+use pilot_streaming::sim::CostModel;
+use pilot_streaming::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::from_args();
+
+    for (label, preset) in [
+        ("paper-era", CostPreset::PaperEra),
+        ("calibrated", CostPreset::Calibrated),
+    ] {
+        bench.run_once(&format!("fig9/grid/{label}"), || {
+            let config = ExperimentConfig {
+                preset,
+                ..Default::default()
+            };
+            let costs = match preset {
+                CostPreset::PaperEra => CostModel::paper_era(),
+                CostPreset::Calibrated => exp::resolve_costs(&config, true),
+            };
+            let rec = exp::fig9(&config, &costs);
+            println!("\n{}", rec.to_table());
+            vec![("rows".into(), rec.to_csv().lines().count() as f64 - 1.0)]
+        });
+    }
+
+    // Real per-message artifact execution (the compute hot path).
+    let quick = bench.quick();
+    if let Ok(runtime) = ModelRuntime::load_default() {
+        let reps = if quick { 3 } else { 10 };
+        for artifact in ["kmeans_score", "kmeans_update", "gridrec", "mlem"] {
+            bench.run_once(&format!("fig9/real-exec/{artifact}"), || {
+                let secs = runtime.calibrate(artifact, reps).unwrap();
+                vec![("ms_per_msg".into(), secs * 1e3)]
+            });
+        }
+    } else {
+        eprintln!("(artifacts missing — run `make artifacts` for real-exec benches)");
+    }
+
+    // §6.5 headline.
+    bench.run_once("headline/6.5", || {
+        let config = ExperimentConfig {
+            preset: CostPreset::PaperEra,
+            ..Default::default()
+        };
+        let rec = exp::headline(&config, &CostModel::paper_era());
+        println!("\n{}", rec.to_table());
+        vec![]
+    });
+}

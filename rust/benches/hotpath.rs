@@ -1,0 +1,115 @@
+//! Hot-path micro-benchmarks (the §Perf optimization targets).
+//!
+//! L3 data plane: log append/read, wire encode/decode, producer
+//! batching, payload generation.  L1/L2: per-artifact PJRT execution.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use pilot_streaming::broker::{LogConfig, PartitionLog};
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::miniapp::mass::{MassConfig, PayloadGenerator, SourceKind};
+use pilot_streaming::miniapp::{Message, PayloadKind};
+use pilot_streaming::runtime::ModelRuntime;
+use pilot_streaming::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::from_args();
+
+    // --- Broker log -----------------------------------------------------
+    let payload_320k = vec![0u8; 320_000];
+    bench.run("log/append-320k", 2000, || {
+        // Fresh small log each run would dominate with allocation; use a
+        // rolling log with retention to steady-state the append path.
+        thread_local! {
+            static LOG: std::cell::RefCell<PartitionLog> =
+                std::cell::RefCell::new(PartitionLog::new(LogConfig {
+                    segment_bytes: 64 << 20,
+                    retention_bytes: Some(256 << 20),
+                }));
+        }
+        LOG.with(|l| {
+            l.borrow_mut()
+                .append_batch([payload_320k.as_slice()], 0)
+        });
+    });
+
+    let mut read_log = PartitionLog::new(LogConfig::default());
+    for _ in 0..64 {
+        read_log.append_batch([payload_320k.as_slice()], 0);
+    }
+    bench.run("log/read-8x320k", 2000, || {
+        let recs = read_log.read(0, 8 * 320_000).unwrap();
+        assert_eq!(recs.len(), 8);
+        std::hint::black_box(recs);
+    });
+
+    // --- Wire format ------------------------------------------------------
+    let values = vec![0.5f32; 15_000];
+    let msg = Message::new(PayloadKind::KmeansPoints, 1, 2, values);
+    bench.run("wire/encode-0.32MB", 2000, || {
+        std::hint::black_box(msg.encode(320_000));
+    });
+    let encoded = msg.encode(320_000);
+    bench.run("wire/decode-0.32MB", 2000, || {
+        std::hint::black_box(Message::decode(&encoded).unwrap());
+    });
+
+    // --- MASS generators ---------------------------------------------------
+    let mut cfg = MassConfig::new(SourceKind::KmeansRandom { n_centroids: 10 }, "b");
+    cfg.points_per_msg = 5000;
+    let mut generator = PayloadGenerator::new(&cfg, 1);
+    bench.run("mass/gen-kmeans-random", 500, || {
+        std::hint::black_box(generator.generate());
+    });
+    let cfg2 = MassConfig::new(SourceKind::KmeansStatic, "b");
+    let mut static_generator = PayloadGenerator::new(&cfg2, 1);
+    bench.run("mass/gen-kmeans-static", 500, || {
+        std::hint::black_box(static_generator.generate());
+    });
+
+    // --- Broker end-to-end (unthrottled, real bytes) -----------------------
+    let machine = Machine::unthrottled(2);
+    let cluster = pilot_streaming::broker::BrokerCluster::new(machine, vec![0]);
+    cluster.create_topic("bench", 1).unwrap();
+    let mut produced = 0u64;
+    bench.run("broker/produce-fetch-0.32MB", 500, || {
+        cluster
+            .produce("bench", 0, 1, &[encoded.clone()])
+            .unwrap();
+        let recs = cluster
+            .fetch(
+                "bench",
+                0,
+                produced,
+                usize::MAX,
+                1,
+                std::time::Duration::from_millis(100),
+            )
+            .unwrap();
+        produced += recs.len() as u64;
+        std::hint::black_box(recs);
+    });
+
+    // --- L1/L2 artifact execution ------------------------------------------
+    if let Ok(runtime) = ModelRuntime::load_default() {
+        let km = runtime.manifest().kmeans.clone();
+        let tomo = runtime.manifest().tomo.clone();
+        let points = vec![0.5f32; km.n_points * km.dim];
+        let centroids = vec![0.1f32; km.k * km.dim];
+        runtime.warmup("kmeans_score").unwrap();
+        bench.run("xla/kmeans_score", 50, || {
+            std::hint::black_box(runtime.execute("kmeans_score", &[&points, &centroids]).unwrap());
+        });
+        let sino = vec![0.3f32; tomo.n_angles * tomo.n_det];
+        runtime.warmup("gridrec").unwrap();
+        bench.run("xla/gridrec", 30, || {
+            std::hint::black_box(runtime.execute("gridrec", &[&sino]).unwrap());
+        });
+        runtime.warmup("mlem").unwrap();
+        bench.run("xla/mlem", 10, || {
+            std::hint::black_box(runtime.execute("mlem", &[&sino]).unwrap());
+        });
+    } else {
+        eprintln!("(artifacts missing — run `make artifacts` for xla benches)");
+    }
+}

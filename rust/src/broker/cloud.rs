@@ -1,0 +1,240 @@
+//! Cloud message-broker latency models (Amazon Kinesis, Google Pub/Sub).
+//!
+//! The paper's Figure 7 compares on-premise Kafka latency with two
+//! cloud "platform as a service" brokers.  We cannot call the real
+//! services, so this module substitutes calibrated delay models
+//! (DESIGN.md §3): a record becomes visible to consumers only after a
+//! WAN round trip plus a service-time sample drawn from a lognormal
+//! distribution whose mean matches the paper's measurements
+//! (Kinesis ≈ 0.5 s end-to-end, Pub/Sub ≈ 6.2 s mean).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::util::Rng;
+
+/// Latency model parameters for one cloud service.
+#[derive(Debug, Clone, Copy)]
+pub struct CloudLatencyModel {
+    /// One-way WAN latency, seconds (producer -> region).
+    pub wan_secs: f64,
+    /// Lognormal mu of internal service time (log-seconds).
+    pub mu: f64,
+    /// Lognormal sigma of internal service time.
+    pub sigma: f64,
+}
+
+impl CloudLatencyModel {
+    /// Amazon Kinesis in us-east-1 as measured in Fig 7: end-to-end
+    /// latency a few hundred ms with a long tail.
+    pub fn kinesis() -> Self {
+        // median ≈ exp(-1.1) ≈ 0.33 s, mean ≈ 0.39 s + 2x WAN 0.04 s.
+        CloudLatencyModel {
+            wan_secs: 0.04,
+            mu: -1.1,
+            sigma: 0.55,
+        }
+    }
+
+    /// Google Pub/Sub as measured in Fig 7: ~6.2 s mean latency.
+    pub fn pubsub() -> Self {
+        // median ≈ exp(1.75) ≈ 5.75 s, mean ≈ 6.2 s.
+        CloudLatencyModel {
+            wan_secs: 0.05,
+            mu: 1.75,
+            sigma: 0.40,
+        }
+    }
+
+    fn sample_total(&self, rng: &mut Rng) -> f64 {
+        2.0 * self.wan_secs + rng.lognormal(self.mu, self.sigma)
+    }
+}
+
+struct Pending {
+    visible_at: Instant,
+    produced_at_ns: u64,
+    value: Vec<u8>,
+}
+
+struct CloudInner {
+    model: CloudLatencyModel,
+    rng: Rng,
+    queue: VecDeque<Pending>,
+    epoch: Instant,
+}
+
+/// A delay-modeled cloud broker stream (single shard/subscription view).
+#[derive(Clone)]
+pub struct CloudBroker {
+    name: String,
+    inner: Arc<Mutex<CloudInner>>,
+}
+
+/// A record delivered by a cloud broker poll.
+#[derive(Debug, Clone)]
+pub struct CloudRecord {
+    /// Producer timestamp, ns since broker epoch.
+    pub produced_at_ns: u64,
+    /// Delivery timestamp, ns since broker epoch.
+    pub delivered_at_ns: u64,
+    pub value: Vec<u8>,
+}
+
+impl CloudRecord {
+    /// End-to-end latency in seconds.
+    pub fn latency_secs(&self) -> f64 {
+        (self.delivered_at_ns.saturating_sub(self.produced_at_ns)) as f64 / 1e9
+    }
+}
+
+impl CloudBroker {
+    pub fn new(name: &str, model: CloudLatencyModel, seed: u64) -> Self {
+        CloudBroker {
+            name: name.to_string(),
+            inner: Arc::new(Mutex::new(CloudInner {
+                model,
+                rng: Rng::seed_from(seed),
+                queue: VecDeque::new(),
+                epoch: Instant::now(),
+            })),
+        }
+    }
+
+    pub fn kinesis(seed: u64) -> Self {
+        Self::new("kinesis", CloudLatencyModel::kinesis(), seed)
+    }
+
+    pub fn pubsub(seed: u64) -> Self {
+        Self::new("pubsub", CloudLatencyModel::pubsub(), seed)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Publish a record; it becomes visible after the sampled delay.
+    pub fn publish(&self, value: Vec<u8>) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let model = inner.model;
+        let delay = model.sample_total(&mut inner.rng);
+        let produced_at_ns = now.duration_since(inner.epoch).as_nanos() as u64;
+        let pending = Pending {
+            visible_at: now + Duration::from_secs_f64(delay),
+            produced_at_ns,
+            value,
+        };
+        // Keep the queue ordered by visibility time (delays vary).
+        let pos = inner
+            .queue
+            .iter()
+            .position(|p| p.visible_at > pending.visible_at)
+            .unwrap_or(inner.queue.len());
+        inner.queue.insert(pos, pending);
+        Ok(())
+    }
+
+    /// Poll all currently-visible records.
+    pub fn poll(&self) -> Vec<CloudRecord> {
+        let mut inner = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let epoch = inner.epoch;
+        let mut out = Vec::new();
+        while let Some(front) = inner.queue.front() {
+            if front.visible_at > now {
+                break;
+            }
+            let p = inner.queue.pop_front().unwrap();
+            out.push(CloudRecord {
+                produced_at_ns: p.produced_at_ns,
+                delivered_at_ns: now.duration_since(epoch).as_nanos() as u64,
+                value: p.value,
+            });
+        }
+        out
+    }
+
+    /// Records not yet visible (diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Sample `n` end-to-end latencies from the model *without* waiting
+    /// in real time (used by the simulation plane for Fig 7).
+    pub fn sample_latencies(&self, n: usize) -> Vec<f64> {
+        let mut inner = self.inner.lock().unwrap();
+        let model = inner.model;
+        (0..n).map(|_| model.sample_total(&mut inner.rng)).collect()
+    }
+
+    /// Expected mean end-to-end latency of the model, seconds.
+    pub fn model_mean_secs(&self) -> f64 {
+        let m = self.inner.lock().unwrap().model;
+        2.0 * m.wan_secs + (m.mu + m.sigma * m.sigma / 2.0).exp()
+    }
+}
+
+impl std::fmt::Debug for CloudBroker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CloudBroker")
+            .field("name", &self.name)
+            .field("in_flight", &self.in_flight())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_not_visible_before_delay() {
+        let b = CloudBroker::pubsub(1);
+        b.publish(vec![1, 2, 3]).unwrap();
+        assert!(b.poll().is_empty(), "pub/sub latency is seconds, not 0");
+        assert_eq!(b.in_flight(), 1);
+    }
+
+    #[test]
+    fn sampled_latencies_match_model_means() {
+        let kinesis = CloudBroker::kinesis(7);
+        let pubsub = CloudBroker::pubsub(7);
+        let k: Vec<f64> = kinesis.sample_latencies(4000);
+        let p: Vec<f64> = pubsub.sample_latencies(4000);
+        let k_mean = k.iter().sum::<f64>() / k.len() as f64;
+        let p_mean = p.iter().sum::<f64>() / p.len() as f64;
+        // Paper: Kinesis sub-second, Pub/Sub ≈ 6.2 s mean.
+        assert!(k_mean > 0.2 && k_mean < 0.8, "kinesis mean {k_mean}");
+        assert!(p_mean > 5.0 && p_mean < 7.5, "pubsub mean {p_mean}");
+        assert!((kinesis.model_mean_secs() - k_mean).abs() < 0.1);
+        assert!((pubsub.model_mean_secs() - p_mean).abs() < 0.5);
+    }
+
+    #[test]
+    fn fast_model_delivers_in_order_of_visibility() {
+        let b = CloudBroker::new(
+            "fast",
+            CloudLatencyModel {
+                wan_secs: 0.001,
+                mu: -6.0, // ~2.5 ms
+                sigma: 0.3,
+            },
+            3,
+        );
+        for i in 0..5u8 {
+            b.publish(vec![i]).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let recs = b.poll();
+        assert_eq!(recs.len(), 5);
+        for w in recs.windows(2) {
+            assert!(w[0].delivered_at_ns <= w[1].delivered_at_ns);
+        }
+        for r in recs {
+            assert!(r.latency_secs() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,557 @@
+//! The broker cluster: topics, partition leadership, group coordination.
+//!
+//! This is the repo's Kafka substrate (DESIGN.md §3): a log-based
+//! publish/subscribe broker whose data plane is real (bytes move through
+//! [`PartitionLog`]s, blocking fetches wake on appends) while node
+//! boundaries come from the simulated [`Machine`] — every produce/fetch
+//! pays the NIC/disk token-bucket costs of the nodes involved, so broker
+//! I/O saturation (the effect behind Figs 8/9) is observable in-process.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::cluster::{Machine, NodeId};
+use crate::error::{Error, Result};
+
+use super::log::{LogConfig, PartitionLog, Record};
+
+/// One partition: leader broker node + the log + fetch wakeups.
+pub struct Partition {
+    pub id: usize,
+    /// Index into the cluster's broker-node list (leadership moves on
+    /// rebalance).
+    leader: AtomicUsize,
+    log: Mutex<PartitionLog>,
+    data_arrived: Condvar,
+}
+
+impl Partition {
+    fn new(id: usize, leader: usize, config: LogConfig) -> Self {
+        Partition {
+            id,
+            leader: AtomicUsize::new(leader),
+            log: Mutex::new(PartitionLog::new(config)),
+            data_arrived: Condvar::new(),
+        }
+    }
+
+    pub fn leader_index(&self) -> usize {
+        self.leader.load(Ordering::Relaxed)
+    }
+
+    pub fn end_offset(&self) -> u64 {
+        self.log.lock().unwrap().end_offset()
+    }
+}
+
+/// A topic: named, fixed partition count (expandable on rebalance).
+pub struct Topic {
+    pub name: String,
+    pub partitions: Vec<Arc<Partition>>,
+}
+
+/// Consumer-group coordination state for one (group, topic).
+#[derive(Debug, Default)]
+struct GroupState {
+    /// Monotonic membership generation; bumped on join/leave.
+    generation: u64,
+    members: Vec<u64>,
+    /// Committed offsets per partition.
+    offsets: HashMap<usize, u64>,
+    next_member_id: u64,
+}
+
+struct Inner {
+    machine: Machine,
+    broker_nodes: Mutex<Vec<NodeId>>,
+    topics: Mutex<HashMap<String, Arc<Topic>>>,
+    groups: Mutex<HashMap<(String, String), GroupState>>,
+    log_config: LogConfig,
+    stopped: AtomicBool,
+    epoch: Instant,
+}
+
+/// Cloneable handle to a broker cluster.
+#[derive(Clone)]
+pub struct BrokerCluster {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for BrokerCluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BrokerCluster")
+            .field("brokers", &self.broker_nodes().len())
+            .field("topics", &self.inner.topics.lock().unwrap().len())
+            .finish()
+    }
+}
+
+impl BrokerCluster {
+    /// Create a broker cluster on `broker_nodes` of `machine`.
+    pub fn new(machine: Machine, broker_nodes: Vec<NodeId>) -> Self {
+        Self::with_log_config(machine, broker_nodes, LogConfig::default())
+    }
+
+    pub fn with_log_config(
+        machine: Machine,
+        broker_nodes: Vec<NodeId>,
+        log_config: LogConfig,
+    ) -> Self {
+        assert!(!broker_nodes.is_empty(), "broker cluster needs >= 1 node");
+        BrokerCluster {
+            inner: Arc::new(Inner {
+                machine,
+                broker_nodes: Mutex::new(broker_nodes),
+                topics: Mutex::new(HashMap::new()),
+                groups: Mutex::new(HashMap::new()),
+                log_config,
+                stopped: AtomicBool::new(false),
+                epoch: Instant::now(),
+            }),
+        }
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.inner.machine
+    }
+
+    pub fn broker_nodes(&self) -> Vec<NodeId> {
+        self.inner.broker_nodes.lock().unwrap().clone()
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.inner.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Nanoseconds since this cluster's epoch — the clock record
+    /// timestamps are stamped with (used for end-to-end latency probes).
+    pub fn elapsed_ns(&self) -> u64 {
+        self.now_ns()
+    }
+
+    /// Wall-clock ns since Unix epoch (for cross-component latency stamps).
+    pub fn wallclock_ns() -> u64 {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap()
+            .as_nanos() as u64
+    }
+
+    fn check_running(&self) -> Result<()> {
+        if self.inner.stopped.load(Ordering::Relaxed) {
+            return Err(Error::Broker("broker cluster is stopped".into()));
+        }
+        Ok(())
+    }
+
+    /// Create a topic with `partitions` partitions; leaders assigned
+    /// round-robin over broker nodes.  Errors if the topic exists.
+    pub fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        self.check_running()?;
+        if partitions == 0 {
+            return Err(Error::Broker("topic needs >= 1 partition".into()));
+        }
+        let n_brokers = self.broker_nodes().len();
+        let mut topics = self.inner.topics.lock().unwrap();
+        if topics.contains_key(name) {
+            return Err(Error::Broker(format!("topic {name} already exists")));
+        }
+        let parts = (0..partitions)
+            .map(|i| Arc::new(Partition::new(i, i % n_brokers, self.inner.log_config)))
+            .collect();
+        topics.insert(
+            name.to_string(),
+            Arc::new(Topic {
+                name: name.to_string(),
+                partitions: parts,
+            }),
+        );
+        Ok(())
+    }
+
+    pub fn topic(&self, name: &str) -> Result<Arc<Topic>> {
+        self.inner
+            .topics
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Broker(format!("unknown topic {name}")))
+    }
+
+    pub fn partition_count(&self, topic: &str) -> Result<usize> {
+        Ok(self.topic(topic)?.partitions.len())
+    }
+
+    /// Leader broker *node id* for a topic partition.
+    pub fn leader_node(&self, topic: &str, partition: usize) -> Result<NodeId> {
+        let t = self.topic(topic)?;
+        let p = t
+            .partitions
+            .get(partition)
+            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?;
+        let brokers = self.inner.broker_nodes.lock().unwrap();
+        Ok(brokers[p.leader_index() % brokers.len()])
+    }
+
+    /// Produce a batch of values to a partition from `from_node`.
+    ///
+    /// Pays: producer-node egress, leader ingress, leader disk. Returns
+    /// the batch base offset.
+    pub fn produce(
+        &self,
+        topic: &str,
+        partition: usize,
+        from_node: NodeId,
+        values: &[Vec<u8>],
+    ) -> Result<u64> {
+        self.check_running()?;
+        let t = self.topic(topic)?;
+        let p = t
+            .partitions
+            .get(partition)
+            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?
+            .clone();
+        let leader = self.leader_node(topic, partition)?;
+        let bytes: usize = values.iter().map(|v| v.len()).sum();
+
+        // Data-plane costs: sender NIC out, leader NIC in, leader disk.
+        self.inner.machine.node(from_node).egress.acquire(bytes);
+        self.inner.machine.node(leader).ingress.acquire(bytes);
+        self.inner.machine.node(leader).disk.acquire(bytes);
+
+        let ts = self.now_ns();
+        let base = {
+            let mut log = p.log.lock().unwrap();
+            log.append_batch(values.iter().map(|v| v.as_slice()), ts)
+        };
+        p.data_arrived.notify_all();
+        Ok(base)
+    }
+
+    /// Fetch records from a partition starting at `offset`, blocking up
+    /// to `timeout` for data.  Pays leader egress + consumer ingress for
+    /// the returned bytes.
+    pub fn fetch(
+        &self,
+        topic: &str,
+        partition: usize,
+        offset: u64,
+        max_bytes: usize,
+        to_node: NodeId,
+        timeout: Duration,
+    ) -> Result<Vec<Record>> {
+        self.check_running()?;
+        let t = self.topic(topic)?;
+        let p = t
+            .partitions
+            .get(partition)
+            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?
+            .clone();
+        let leader = self.leader_node(topic, partition)?;
+
+        let records = {
+            let mut log = p.log.lock().unwrap();
+            let deadline = Instant::now() + timeout;
+            loop {
+                let recs = log.read(offset, max_bytes)?;
+                if !recs.is_empty() {
+                    break recs;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break Vec::new();
+                }
+                let (guard, _) = p
+                    .data_arrived
+                    .wait_timeout(log, deadline - now)
+                    .map_err(|_| Error::Broker("partition lock poisoned".into()))?;
+                log = guard;
+                if self.inner.stopped.load(Ordering::Relaxed) {
+                    return Err(Error::Broker("broker cluster is stopped".into()));
+                }
+            }
+        };
+        if !records.is_empty() {
+            let bytes: usize = records.iter().map(|r| r.value.len()).sum();
+            self.inner.machine.node(leader).egress.acquire(bytes);
+            self.inner.machine.node(to_node).ingress.acquire(bytes);
+        }
+        Ok(records)
+    }
+
+    /// High watermark of a partition.
+    pub fn end_offset(&self, topic: &str, partition: usize) -> Result<u64> {
+        let t = self.topic(topic)?;
+        Ok(t.partitions
+            .get(partition)
+            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?
+            .end_offset())
+    }
+
+    /// Add broker nodes at runtime (pilot extend): leaders rebalance
+    /// round-robin over the enlarged broker set.
+    pub fn add_brokers(&self, nodes: Vec<NodeId>) {
+        let mut brokers = self.inner.broker_nodes.lock().unwrap();
+        brokers.extend(nodes);
+        let n = brokers.len();
+        drop(brokers);
+        for topic in self.inner.topics.lock().unwrap().values() {
+            for (i, p) in topic.partitions.iter().enumerate() {
+                p.leader.store(i % n, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Remove broker nodes (pilot shrink): partition leadership
+    /// rebalances over the remaining brokers (Kafka partition
+    /// reassignment).  The last broker cannot be removed.
+    pub fn remove_brokers(&self, nodes: &[NodeId]) -> Result<()> {
+        let mut brokers = self.inner.broker_nodes.lock().unwrap();
+        if brokers.iter().filter(|b| !nodes.contains(b)).count() == 0 {
+            return Err(Error::Broker("cannot remove the last broker".into()));
+        }
+        brokers.retain(|b| !nodes.contains(b));
+        let n = brokers.len();
+        drop(brokers);
+        for topic in self.inner.topics.lock().unwrap().values() {
+            for (i, p) in topic.partitions.iter().enumerate() {
+                p.leader.store(i % n, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop the cluster: producers/consumers error out, fetchers wake.
+    pub fn stop(&self) {
+        self.inner.stopped.store(true, Ordering::Relaxed);
+        for topic in self.inner.topics.lock().unwrap().values() {
+            for p in &topic.partitions {
+                p.data_arrived.notify_all();
+            }
+        }
+    }
+
+    pub fn is_stopped(&self) -> bool {
+        self.inner.stopped.load(Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------------------
+    // Consumer-group coordination
+    // ------------------------------------------------------------------
+
+    /// Join `group` for `topic`; returns (member_id, generation).
+    pub fn group_join(&self, group: &str, topic: &str) -> (u64, u64) {
+        let mut groups = self.inner.groups.lock().unwrap();
+        let st = groups
+            .entry((group.to_string(), topic.to_string()))
+            .or_default();
+        let id = st.next_member_id;
+        st.next_member_id += 1;
+        st.members.push(id);
+        st.generation += 1;
+        (id, st.generation)
+    }
+
+    /// Leave a group (consumer drop / shrink); bumps the generation.
+    pub fn group_leave(&self, group: &str, topic: &str, member: u64) {
+        let mut groups = self.inner.groups.lock().unwrap();
+        if let Some(st) = groups.get_mut(&(group.to_string(), topic.to_string())) {
+            st.members.retain(|m| *m != member);
+            st.generation += 1;
+        }
+    }
+
+    /// Current generation + range assignment for `member`.
+    pub fn group_assignment(
+        &self,
+        group: &str,
+        topic: &str,
+        member: u64,
+    ) -> Result<(u64, Vec<usize>)> {
+        let n_parts = self.partition_count(topic)?;
+        let groups = self.inner.groups.lock().unwrap();
+        let st = groups
+            .get(&(group.to_string(), topic.to_string()))
+            .ok_or_else(|| Error::Broker(format!("unknown group {group}")))?;
+        let n_members = st.members.len().max(1);
+        let rank = st
+            .members
+            .iter()
+            .position(|m| *m == member)
+            .ok_or_else(|| Error::Broker(format!("member {member} left group {group}")))?;
+        // Range assignment: contiguous chunks, first members get extras.
+        let per = n_parts / n_members;
+        let extra = n_parts % n_members;
+        let start = rank * per + rank.min(extra);
+        let count = per + usize::from(rank < extra);
+        Ok((st.generation, (start..start + count).collect()))
+    }
+
+    /// Committed offset for a partition (0 if none committed yet).
+    pub fn committed(&self, group: &str, topic: &str, partition: usize) -> u64 {
+        let groups = self.inner.groups.lock().unwrap();
+        groups
+            .get(&(group.to_string(), topic.to_string()))
+            .and_then(|st| st.offsets.get(&partition).copied())
+            .unwrap_or(0)
+    }
+
+    /// Commit an offset (next offset to consume) for a partition.
+    pub fn commit(&self, group: &str, topic: &str, partition: usize, offset: u64) {
+        let mut groups = self.inner.groups.lock().unwrap();
+        let st = groups
+            .entry((group.to_string(), topic.to_string()))
+            .or_default();
+        let entry = st.offsets.entry(partition).or_insert(0);
+        *entry = (*entry).max(offset);
+    }
+
+    /// Total committed lag across all partitions of a topic for a group
+    /// (end offsets minus committed offsets) — a backpressure signal.
+    pub fn group_lag(&self, group: &str, topic: &str) -> Result<u64> {
+        let t = self.topic(topic)?;
+        let mut lag = 0;
+        for (i, p) in t.partitions.iter().enumerate() {
+            let end = p.end_offset();
+            let committed = self.committed(group, topic, i);
+            lag += end.saturating_sub(committed);
+        }
+        Ok(lag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+
+    fn cluster(brokers: usize) -> BrokerCluster {
+        let machine = Machine::unthrottled(brokers + 2);
+        let nodes = (0..brokers).collect();
+        BrokerCluster::new(machine, nodes)
+    }
+
+    #[test]
+    fn produce_fetch_roundtrip() {
+        let c = cluster(1);
+        c.create_topic("t", 2).unwrap();
+        let base = c
+            .produce("t", 0, 1, &[b"a".to_vec(), b"b".to_vec()])
+            .unwrap();
+        assert_eq!(base, 0);
+        let recs = c
+            .fetch("t", 0, 0, usize::MAX, 1, Duration::from_millis(10))
+            .unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].value, b"b");
+        // Other partition untouched.
+        assert_eq!(c.end_offset("t", 1).unwrap(), 0);
+    }
+
+    #[test]
+    fn fetch_blocks_until_produce() {
+        let c = cluster(1);
+        c.create_topic("t", 1).unwrap();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            c2.fetch("t", 0, 0, usize::MAX, 1, Duration::from_secs(5))
+                .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        c.produce("t", 0, 1, &[b"late".to_vec()]).unwrap();
+        let recs = h.join().unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].value, b"late");
+    }
+
+    #[test]
+    fn fetch_timeout_returns_empty() {
+        let c = cluster(1);
+        c.create_topic("t", 1).unwrap();
+        let recs = c
+            .fetch("t", 0, 0, usize::MAX, 1, Duration::from_millis(20))
+            .unwrap();
+        assert!(recs.is_empty());
+    }
+
+    #[test]
+    fn unknown_topic_and_partition_error() {
+        let c = cluster(1);
+        assert!(c.produce("nope", 0, 0, &[vec![1]]).is_err());
+        c.create_topic("t", 1).unwrap();
+        assert!(c.produce("t", 5, 0, &[vec![1]]).is_err());
+        assert!(c.create_topic("t", 1).is_err(), "duplicate topic");
+    }
+
+    #[test]
+    fn leaders_round_robin_and_rebalance() {
+        let c = cluster(2);
+        c.create_topic("t", 4).unwrap();
+        let leaders: Vec<NodeId> = (0..4).map(|p| c.leader_node("t", p).unwrap()).collect();
+        assert_eq!(leaders, vec![0, 1, 0, 1]);
+        c.add_brokers(vec![2, 3]);
+        let leaders: Vec<NodeId> = (0..4).map(|p| c.leader_node("t", p).unwrap()).collect();
+        assert_eq!(leaders, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn stop_wakes_blocked_fetchers() {
+        let c = cluster(1);
+        c.create_topic("t", 1).unwrap();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            c2.fetch("t", 0, 0, usize::MAX, 1, Duration::from_secs(30))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        c.stop();
+        assert!(h.join().unwrap().is_err());
+        assert!(c.produce("t", 0, 0, &[vec![1]]).is_err());
+    }
+
+    #[test]
+    fn group_assignment_covers_all_partitions() {
+        let c = cluster(1);
+        c.create_topic("t", 7).unwrap();
+        let (m1, _) = c.group_join("g", "t");
+        let (m2, _) = c.group_join("g", "t");
+        let (m3, _) = c.group_join("g", "t");
+        let mut all: Vec<usize> = Vec::new();
+        for m in [m1, m2, m3] {
+            let (_, parts) = c.group_assignment("g", "t", m).unwrap();
+            all.extend(parts);
+        }
+        all.sort();
+        assert_eq!(all, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn group_leave_bumps_generation_and_reassigns() {
+        let c = cluster(1);
+        c.create_topic("t", 4).unwrap();
+        let (m1, g1) = c.group_join("g", "t");
+        let (m2, g2) = c.group_join("g", "t");
+        assert!(g2 > g1);
+        c.group_leave("g", "t", m1);
+        let (g3, parts) = c.group_assignment("g", "t", m2).unwrap();
+        assert!(g3 > g2);
+        assert_eq!(parts, vec![0, 1, 2, 3], "sole member owns everything");
+        assert!(c.group_assignment("g", "t", m1).is_err());
+    }
+
+    #[test]
+    fn commit_is_monotonic_and_lag_tracks() {
+        let c = cluster(1);
+        c.create_topic("t", 1).unwrap();
+        c.produce("t", 0, 0, &[vec![0], vec![1], vec![2]]).unwrap();
+        c.group_join("g", "t");
+        assert_eq!(c.group_lag("g", "t").unwrap(), 3);
+        c.commit("g", "t", 0, 2);
+        assert_eq!(c.committed("g", "t", 0), 2);
+        c.commit("g", "t", 0, 1); // stale commit ignored
+        assert_eq!(c.committed("g", "t", 0), 2);
+        assert_eq!(c.group_lag("g", "t").unwrap(), 1);
+    }
+}

@@ -1,0 +1,263 @@
+//! Consumer client: group membership, partition assignment, offsets.
+//!
+//! Consumers join a consumer group on a topic; the group coordinator
+//! (inside [`BrokerCluster`]) hands out range assignments and tracks
+//! committed offsets.  A consumer polls its assigned partitions in turn;
+//! when membership changes (join/leave — the dynamic-scaling case the
+//! paper's resource management enables) the next `poll` observes the
+//! bumped generation and picks up its new assignment transparently.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::NodeId;
+use crate::error::Result;
+use crate::metrics::RateMeter;
+
+use super::cluster::BrokerCluster;
+use super::log::Record;
+
+/// Consumer configuration.
+#[derive(Debug, Clone)]
+pub struct ConsumerConfig {
+    /// Max payload bytes per poll across partitions.
+    pub max_poll_bytes: usize,
+    /// Per-partition fetch timeout within a poll.
+    pub fetch_timeout: Duration,
+    /// Commit automatically after each successful poll.
+    pub auto_commit: bool,
+}
+
+impl Default for ConsumerConfig {
+    fn default() -> Self {
+        ConsumerConfig {
+            max_poll_bytes: 8 << 20,
+            fetch_timeout: Duration::from_millis(100),
+            auto_commit: true,
+        }
+    }
+}
+
+/// A record annotated with its source partition.
+#[derive(Debug, Clone)]
+pub struct PartitionRecord {
+    pub partition: usize,
+    pub record: Record,
+}
+
+/// A group consumer bound to one topic, fetching to one node.
+pub struct Consumer {
+    cluster: BrokerCluster,
+    topic: String,
+    group: String,
+    node: NodeId,
+    member_id: u64,
+    generation: u64,
+    assignment: Vec<usize>,
+    positions: HashMap<usize, u64>,
+    next_idx: usize,
+    config: ConsumerConfig,
+    pub metrics: Arc<RateMeter>,
+}
+
+impl Consumer {
+    /// Join `group` on `topic`, fetching into `node`.
+    pub fn join(
+        cluster: BrokerCluster,
+        topic: &str,
+        group: &str,
+        node: NodeId,
+        config: ConsumerConfig,
+    ) -> Result<Self> {
+        let (member_id, _) = cluster.group_join(group, topic);
+        let mut c = Consumer {
+            cluster,
+            topic: topic.to_string(),
+            group: group.to_string(),
+            node,
+            member_id,
+            generation: 0,
+            assignment: Vec::new(),
+            positions: HashMap::new(),
+            next_idx: 0,
+            config,
+            metrics: Arc::new(RateMeter::new()),
+        };
+        c.refresh_assignment()?;
+        Ok(c)
+    }
+
+    fn refresh_assignment(&mut self) -> Result<()> {
+        let (generation, parts) =
+            self.cluster
+                .group_assignment(&self.group, &self.topic, self.member_id)?;
+        if generation != self.generation {
+            self.generation = generation;
+            self.assignment = parts;
+            self.next_idx = 0;
+            self.positions.clear();
+            for p in &self.assignment {
+                self.positions
+                    .insert(*p, self.cluster.committed(&self.group, &self.topic, *p));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    pub fn member_id(&self) -> u64 {
+        self.member_id
+    }
+
+    /// Poll the next assigned partition (round-robin across polls).
+    ///
+    /// Returns records tagged with their partition.  Auto-commits when
+    /// configured.  An empty vec means no data arrived within the fetch
+    /// timeout.
+    pub fn poll(&mut self) -> Result<Vec<PartitionRecord>> {
+        self.refresh_assignment()?;
+        if self.assignment.is_empty() {
+            std::thread::sleep(self.config.fetch_timeout);
+            return Ok(Vec::new());
+        }
+        // Try each assigned partition at most once, starting from the
+        // round-robin cursor, so one idle partition can't starve others.
+        for _ in 0..self.assignment.len() {
+            let p = self.assignment[self.next_idx % self.assignment.len()];
+            self.next_idx = (self.next_idx + 1) % self.assignment.len();
+            let pos = *self.positions.get(&p).unwrap_or(&0);
+            let recs = self.cluster.fetch(
+                &self.topic,
+                p,
+                pos,
+                self.config.max_poll_bytes,
+                self.node,
+                self.config.fetch_timeout,
+            )?;
+            if recs.is_empty() {
+                continue;
+            }
+            let new_pos = recs.last().unwrap().offset + 1;
+            self.positions.insert(p, new_pos);
+            let bytes: usize = recs.iter().map(|r| r.value.len()).sum();
+            self.metrics.record_many(recs.len() as u64, bytes as u64);
+            if self.config.auto_commit {
+                self.cluster.commit(&self.group, &self.topic, p, new_pos);
+            }
+            return Ok(recs
+                .into_iter()
+                .map(|record| PartitionRecord { partition: p, record })
+                .collect());
+        }
+        Ok(Vec::new())
+    }
+
+    /// Explicitly commit the current positions of all assigned partitions.
+    pub fn commit(&self) {
+        for (p, pos) in &self.positions {
+            self.cluster.commit(&self.group, &self.topic, *p, *pos);
+        }
+    }
+}
+
+impl Drop for Consumer {
+    fn drop(&mut self) {
+        if self.config.auto_commit {
+            self.commit();
+        }
+        self.cluster
+            .group_leave(&self.group, &self.topic, self.member_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+
+    fn setup(partitions: usize) -> BrokerCluster {
+        let c = BrokerCluster::new(Machine::unthrottled(3), vec![0]);
+        c.create_topic("t", partitions).unwrap();
+        c
+    }
+
+    fn fast_config() -> ConsumerConfig {
+        ConsumerConfig {
+            fetch_timeout: Duration::from_millis(10),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn consumer_reads_all_partitions() {
+        let c = setup(3);
+        for p in 0..3 {
+            c.produce("t", p, 0, &[vec![p as u8]]).unwrap();
+        }
+        let mut consumer = Consumer::join(c, "t", "g", 1, fast_config()).unwrap();
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            for r in consumer.poll().unwrap() {
+                seen.push(r.record.value[0]);
+            }
+        }
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn two_members_split_partitions() {
+        let c = setup(4);
+        let mut c1 = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        let c2 = Consumer::join(c.clone(), "t", "g", 2, fast_config()).unwrap();
+        // c1 must observe the generation bump caused by c2 joining.
+        c1.poll().unwrap();
+        let mut all = [c1.assignment().to_vec(), c2.assignment().to_vec()].concat();
+        all.sort();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        assert_eq!(c1.assignment().len(), 2);
+        assert_eq!(c2.assignment().len(), 2);
+    }
+
+    #[test]
+    fn offsets_resume_after_member_replacement() {
+        let c = setup(1);
+        c.produce("t", 0, 0, &[vec![1], vec![2], vec![3]]).unwrap();
+        {
+            let mut c1 = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+            let recs = c1.poll().unwrap();
+            assert_eq!(recs.len(), 3);
+        } // drop commits + leaves
+        c.produce("t", 0, 0, &[vec![4]]).unwrap();
+        let mut c2 = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        let recs = c2.poll().unwrap();
+        assert_eq!(recs.len(), 1, "must resume at committed offset");
+        assert_eq!(recs[0].record.value, vec![4]);
+    }
+
+    #[test]
+    fn rebalance_on_leave_reassigns_everything() {
+        let c = setup(2);
+        let mut c1 = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        {
+            let _c2 = Consumer::join(c.clone(), "t", "g", 2, fast_config()).unwrap();
+            c1.poll().unwrap();
+            assert_eq!(c1.assignment().len(), 1);
+        } // c2 leaves
+        c1.poll().unwrap();
+        assert_eq!(c1.assignment().len(), 2, "c1 should own both partitions");
+    }
+
+    #[test]
+    fn empty_assignment_poll_is_empty() {
+        // 1 partition, 2 members: second member gets nothing.
+        let c = setup(1);
+        let _c1 = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        let mut c2 = Consumer::join(c.clone(), "t", "g", 2, fast_config()).unwrap();
+        assert!(c2.poll().unwrap().is_empty());
+    }
+}

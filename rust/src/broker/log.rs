@@ -1,0 +1,318 @@
+//! Segmented append-only partition log (the Kafka storage model).
+//!
+//! A partition is a sequence of segments; each segment stores record
+//! payloads contiguously plus a sparse-free in-memory index of
+//! `(position, length, timestamp)` per record.  Appends go to the active
+//! segment; reads are offset-addressed and return copies (the broker is
+//! in-process, but we deliberately copy to model the network boundary —
+//! the caller pays the same per-byte costs a remote client would).
+
+use crate::error::{Error, Result};
+
+/// One immutable-once-rolled log segment.
+#[derive(Debug)]
+pub struct Segment {
+    /// Offset of the first record in this segment.
+    pub base_offset: u64,
+    /// Contiguous record payloads.
+    data: Vec<u8>,
+    /// Per record: (position in `data`, length, timestamp ns).
+    index: Vec<(u32, u32, u64)>,
+}
+
+impl Segment {
+    fn new(base_offset: u64, capacity: usize) -> Self {
+        Segment {
+            base_offset,
+            // Preallocate the full segment (§Perf L3-1): Vec doubling on
+            // a 64 MB segment costs a ~32 MB memmove at the worst moment
+            // (p95 append spikes).  Reserved-but-untouched pages are not
+            // committed by the OS, so this is virtually free.
+            data: Vec::with_capacity(capacity),
+            index: Vec::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    fn append(&mut self, value: &[u8], timestamp_ns: u64) {
+        let pos = self.data.len() as u32;
+        self.data.extend_from_slice(value);
+        self.index.push((pos, value.len() as u32, timestamp_ns));
+    }
+
+    fn get(&self, rel: usize) -> (&[u8], u64) {
+        let (pos, len, ts) = self.index[rel];
+        (&self.data[pos as usize..(pos + len) as usize], ts)
+    }
+}
+
+/// A record as returned from a fetch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    /// Absolute offset within the partition.
+    pub offset: u64,
+    /// Broker-side append timestamp (ns since producer epoch).
+    pub timestamp_ns: u64,
+    /// Payload bytes.
+    pub value: Vec<u8>,
+}
+
+/// Configuration for a partition log.
+#[derive(Debug, Clone, Copy)]
+pub struct LogConfig {
+    /// Roll the active segment after this many payload bytes.
+    pub segment_bytes: usize,
+    /// Drop whole old segments once total bytes exceed this (None = keep
+    /// everything).  Mirrors Kafka size-based retention.
+    pub retention_bytes: Option<usize>,
+}
+
+impl Default for LogConfig {
+    fn default() -> Self {
+        LogConfig {
+            segment_bytes: 64 << 20, // 64 MB
+            retention_bytes: Some(512 << 20),
+        }
+    }
+}
+
+/// The partition log: segments + high watermark.
+#[derive(Debug)]
+pub struct PartitionLog {
+    config: LogConfig,
+    segments: Vec<Segment>,
+    /// Next offset to be assigned (aka log end offset / high watermark).
+    next_offset: u64,
+    total_bytes: usize,
+}
+
+impl PartitionLog {
+    pub fn new(config: LogConfig) -> Self {
+        PartitionLog {
+            segments: vec![Segment::new(0, config.segment_bytes)],
+            config,
+            next_offset: 0,
+            total_bytes: 0,
+        }
+    }
+
+    /// Log end offset (the offset the next record will get).
+    pub fn end_offset(&self) -> u64 {
+        self.next_offset
+    }
+
+    /// Earliest offset still retained.
+    pub fn start_offset(&self) -> u64 {
+        self.segments.first().map(|s| s.base_offset).unwrap_or(0)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Append a batch; returns the base offset of the batch.
+    pub fn append_batch<'a, I>(&mut self, values: I, timestamp_ns: u64) -> u64
+    where
+        I: IntoIterator<Item = &'a [u8]>,
+    {
+        let base = self.next_offset;
+        for v in values {
+            let active = self.segments.last_mut().expect("log has a segment");
+            if active.bytes() + v.len() > self.config.segment_bytes && active.len() > 0 {
+                let next_base = self.next_offset;
+                self.segments
+                    .push(Segment::new(next_base, self.config.segment_bytes));
+            }
+            let active = self.segments.last_mut().unwrap();
+            active.append(v, timestamp_ns);
+            self.total_bytes += v.len();
+            self.next_offset += 1;
+        }
+        self.enforce_retention();
+        base
+    }
+
+    fn enforce_retention(&mut self) {
+        let Some(limit) = self.config.retention_bytes else {
+            return;
+        };
+        // Never drop the active segment.
+        while self.segments.len() > 1 && self.total_bytes > limit {
+            let seg = self.segments.remove(0);
+            self.total_bytes -= seg.bytes();
+        }
+    }
+
+    fn segment_for(&self, offset: u64) -> Option<usize> {
+        if offset >= self.next_offset {
+            return None;
+        }
+        // Segments are sorted by base_offset; binary search.
+        match self
+            .segments
+            .binary_search_by(|s| s.base_offset.cmp(&offset))
+        {
+            Ok(i) => Some(i),
+            Err(0) => None, // before the earliest retained offset
+            Err(i) => Some(i - 1),
+        }
+    }
+
+    /// Read records starting at `offset`, up to `max_bytes` of payload
+    /// (at least one record if available).  Returns an error if `offset`
+    /// was already garbage-collected; an empty vec if `offset` is at or
+    /// past the end of the log.
+    pub fn read(&self, offset: u64, max_bytes: usize) -> Result<Vec<Record>> {
+        if offset >= self.next_offset {
+            return Ok(Vec::new());
+        }
+        if offset < self.start_offset() {
+            return Err(Error::Broker(format!(
+                "offset {} below log start {} (retention)",
+                offset,
+                self.start_offset()
+            )));
+        }
+        let mut out = Vec::new();
+        let mut bytes = 0usize;
+        let mut seg_idx = self
+            .segment_for(offset)
+            .ok_or_else(|| Error::Broker(format!("offset {offset} not found")))?;
+        let mut cur = offset;
+        'outer: while seg_idx < self.segments.len() {
+            let seg = &self.segments[seg_idx];
+            let rel0 = (cur - seg.base_offset) as usize;
+            for rel in rel0..seg.len() {
+                let (value, ts) = seg.get(rel);
+                if !out.is_empty() && bytes + value.len() > max_bytes {
+                    break 'outer;
+                }
+                bytes += value.len();
+                out.push(Record {
+                    offset: seg.base_offset + rel as u64,
+                    timestamp_ns: ts,
+                    value: value.to_vec(),
+                });
+                cur += 1;
+                if bytes >= max_bytes {
+                    break 'outer;
+                }
+            }
+            seg_idx += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with(segment_bytes: usize, retention: Option<usize>) -> PartitionLog {
+        PartitionLog::new(LogConfig {
+            segment_bytes,
+            retention_bytes: retention,
+        })
+    }
+
+    #[test]
+    fn append_assigns_sequential_offsets() {
+        let mut log = log_with(1024, None);
+        let base = log.append_batch([b"aa".as_slice(), b"bb".as_slice()], 1);
+        assert_eq!(base, 0);
+        let base2 = log.append_batch([b"cc".as_slice()], 2);
+        assert_eq!(base2, 2);
+        assert_eq!(log.end_offset(), 3);
+    }
+
+    #[test]
+    fn read_returns_appended_values() {
+        let mut log = log_with(1024, None);
+        log.append_batch([b"hello".as_slice(), b"world".as_slice()], 7);
+        let recs = log.read(0, usize::MAX).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].value, b"hello");
+        assert_eq!(recs[0].offset, 0);
+        assert_eq!(recs[0].timestamp_ns, 7);
+        assert_eq!(recs[1].value, b"world");
+        assert_eq!(recs[1].offset, 1);
+    }
+
+    #[test]
+    fn read_past_end_is_empty() {
+        let mut log = log_with(1024, None);
+        log.append_batch([b"x".as_slice()], 0);
+        assert!(log.read(1, 1024).unwrap().is_empty());
+        assert!(log.read(100, 1024).unwrap().is_empty());
+    }
+
+    #[test]
+    fn read_respects_max_bytes_but_returns_at_least_one() {
+        let mut log = log_with(1024, None);
+        log.append_batch(
+            [b"0123456789".as_slice(), b"0123456789".as_slice(), b"x".as_slice()],
+            0,
+        );
+        let recs = log.read(0, 15).unwrap();
+        assert_eq!(recs.len(), 1); // second record would cross the 15-byte cap
+        let recs = log.read(0, 21).unwrap();
+        assert_eq!(recs.len(), 3); // 10 + 10 + 1 fits exactly at the cap boundary
+        let recs = log.read(0, 1).unwrap();
+        assert_eq!(recs.len(), 1, "must make progress even if record > max_bytes");
+    }
+
+    #[test]
+    fn segments_roll_at_size() {
+        let mut log = log_with(10, None);
+        for _ in 0..10 {
+            log.append_batch([b"123456".as_slice()], 0);
+        }
+        assert!(log.segment_count() >= 5, "segments={}", log.segment_count());
+        // All offsets still readable across segment boundaries.
+        let recs = log.read(0, usize::MAX).unwrap();
+        assert_eq!(recs.len(), 10);
+        assert_eq!(recs[9].offset, 9);
+    }
+
+    #[test]
+    fn retention_drops_old_segments() {
+        let mut log = log_with(10, Some(30));
+        for i in 0..20u8 {
+            log.append_batch([[i; 6].as_slice()], 0);
+        }
+        assert!(log.total_bytes() <= 36, "bytes={}", log.total_bytes());
+        assert!(log.start_offset() > 0);
+        // Reading a GC'd offset errors.
+        assert!(log.read(0, 1024).is_err());
+        // Reading from start_offset works.
+        let recs = log.read(log.start_offset(), usize::MAX).unwrap();
+        assert_eq!(
+            recs.last().unwrap().offset,
+            log.end_offset() - 1,
+            "tail must be intact"
+        );
+    }
+
+    #[test]
+    fn read_from_middle_segment() {
+        let mut log = log_with(8, None);
+        for i in 0..12u8 {
+            log.append_batch([[i; 4].as_slice()], 0);
+        }
+        let recs = log.read(7, usize::MAX).unwrap();
+        assert_eq!(recs[0].offset, 7);
+        assert_eq!(recs[0].value, vec![7u8; 4]);
+        assert_eq!(recs.len(), 5);
+    }
+}

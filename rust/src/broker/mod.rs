@@ -1,0 +1,31 @@
+//! The Kafka-like message broker substrate.
+//!
+//! The paper deploys Apache Kafka via Pilot-Streaming to decouple data
+//! production from consumption (§2.1, §4).  This module is our from-
+//! scratch equivalent (DESIGN.md §3): a log-based publish/subscribe
+//! broker with
+//!
+//! * segmented append-only partition logs ([`log`]),
+//! * a cluster layer with partition leadership over simulated broker
+//!   nodes, blocking fetches, and consumer-group coordination
+//!   ([`cluster`]),
+//! * batching producers ([`producer`]) and group consumers
+//!   ([`consumer`]),
+//! * calibrated cloud-broker latency models for Amazon Kinesis and
+//!   Google Pub/Sub ([`cloud`]) used by the Figure 7 comparison.
+//!
+//! Data movement pays per-node NIC/disk token-bucket costs, so broker
+//! I/O saturation — the central effect in the paper's Figures 8 and 9 —
+//! emerges from the same mechanism as on real hardware.
+
+pub mod cloud;
+pub mod cluster;
+pub mod consumer;
+pub mod log;
+pub mod producer;
+
+pub use cloud::{CloudBroker, CloudLatencyModel, CloudRecord};
+pub use cluster::{BrokerCluster, Partition, Topic};
+pub use consumer::{Consumer, ConsumerConfig, PartitionRecord};
+pub use log::{LogConfig, PartitionLog, Record};
+pub use producer::{Partitioner, Producer, ProducerConfig};

@@ -1,0 +1,269 @@
+//! Producer client: batching, partitioning, metrics.
+//!
+//! Mirrors the PyKafka producer the paper's MASS app uses (§6.3):
+//! records accumulate into per-partition batches and flush when the
+//! batch size or linger limit is hit.  Sends are synchronous once a
+//! batch flushes — backpressure arrives naturally as blocking time on
+//! the broker-side token buckets (NIC/disk), which is exactly how a
+//! saturated Kafka broker pushes back on `acks=all` producers.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::NodeId;
+use crate::error::Result;
+use crate::metrics::RateMeter;
+
+use super::cluster::BrokerCluster;
+
+/// Partition selection strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioner {
+    /// Rotate through partitions (the MASS default).
+    RoundRobin,
+    /// Hash a caller-provided key.
+    Keyed,
+    /// Always the given partition.
+    Fixed(usize),
+}
+
+/// Producer configuration.
+#[derive(Debug, Clone)]
+pub struct ProducerConfig {
+    /// Flush a partition batch when it reaches this many payload bytes.
+    pub batch_bytes: usize,
+    /// Flush any non-empty batch older than this.
+    pub linger: std::time::Duration,
+    pub partitioner: Partitioner,
+}
+
+impl Default for ProducerConfig {
+    fn default() -> Self {
+        ProducerConfig {
+            batch_bytes: 1 << 20, // 1 MB
+            linger: std::time::Duration::from_millis(50),
+            partitioner: Partitioner::RoundRobin,
+        }
+    }
+}
+
+struct Batch {
+    values: Vec<Vec<u8>>,
+    bytes: usize,
+    opened: Instant,
+}
+
+impl Batch {
+    fn new() -> Self {
+        Batch {
+            values: Vec::new(),
+            bytes: 0,
+            opened: Instant::now(),
+        }
+    }
+}
+
+/// A producer bound to one topic, sending from one (simulated) node.
+pub struct Producer {
+    cluster: BrokerCluster,
+    topic: String,
+    node: NodeId,
+    config: ProducerConfig,
+    n_partitions: usize,
+    batches: Vec<Batch>,
+    rr_next: usize,
+    pub metrics: Arc<RateMeter>,
+}
+
+impl Producer {
+    pub fn new(
+        cluster: BrokerCluster,
+        topic: &str,
+        node: NodeId,
+        config: ProducerConfig,
+    ) -> Result<Self> {
+        let n_partitions = cluster.partition_count(topic)?;
+        Ok(Producer {
+            cluster,
+            topic: topic.to_string(),
+            node,
+            config,
+            n_partitions,
+            batches: (0..n_partitions).map(|_| Batch::new()).collect(),
+            rr_next: 0,
+            metrics: Arc::new(RateMeter::new()),
+        })
+    }
+
+    fn partition_for(&mut self, key: Option<&[u8]>) -> usize {
+        match self.config.partitioner {
+            Partitioner::Fixed(p) => p % self.n_partitions,
+            Partitioner::Keyed => {
+                let key = key.unwrap_or(b"");
+                // FNV-1a
+                let mut h: u64 = 0xcbf29ce484222325;
+                for b in key {
+                    h ^= *b as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+                (h % self.n_partitions as u64) as usize
+            }
+            Partitioner::RoundRobin => {
+                let p = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.n_partitions;
+                p
+            }
+        }
+    }
+
+    /// Queue one record; flushes the target partition's batch if full or
+    /// lingered out.  Returns true if a flush happened.
+    pub fn send(&mut self, key: Option<&[u8]>, value: Vec<u8>) -> Result<bool> {
+        let p = self.partition_for(key);
+        let batch = &mut self.batches[p];
+        if batch.values.is_empty() {
+            batch.opened = Instant::now();
+        }
+        batch.bytes += value.len();
+        batch.values.push(value);
+        if batch.bytes >= self.config.batch_bytes || batch.opened.elapsed() >= self.config.linger
+        {
+            self.flush_partition(p)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn flush_partition(&mut self, p: usize) -> Result<()> {
+        if self.batches[p].values.is_empty() {
+            return Ok(());
+        }
+        let batch = std::mem::replace(&mut self.batches[p], Batch::new());
+        self.cluster
+            .produce(&self.topic, p, self.node, &batch.values)?;
+        self.metrics
+            .record_many(batch.values.len() as u64, batch.bytes as u64);
+        Ok(())
+    }
+
+    /// Flush every pending batch.
+    pub fn flush(&mut self) -> Result<()> {
+        for p in 0..self.n_partitions {
+            self.flush_partition(p)?;
+        }
+        Ok(())
+    }
+
+    pub fn topic(&self) -> &str {
+        &self.topic
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+}
+
+impl Drop for Producer {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+    use std::time::Duration;
+
+    fn setup(partitions: usize) -> BrokerCluster {
+        let c = BrokerCluster::new(Machine::unthrottled(2), vec![0]);
+        c.create_topic("t", partitions).unwrap();
+        c
+    }
+
+    #[test]
+    fn round_robin_spreads_over_partitions() {
+        let c = setup(3);
+        let mut p = Producer::new(
+            c.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: 1, // flush every record
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..9u8 {
+            p.send(None, vec![i]).unwrap();
+        }
+        for part in 0..3 {
+            assert_eq!(c.end_offset("t", part).unwrap(), 3, "partition {part}");
+        }
+        assert_eq!(p.metrics.messages(), 9);
+    }
+
+    #[test]
+    fn keyed_partitioning_is_stable() {
+        let c = setup(4);
+        let mut p = Producer::new(
+            c.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: 1,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for _ in 0..5 {
+            p.send(Some(b"same-key"), vec![0]).unwrap();
+        }
+        let counts: Vec<u64> = (0..4).map(|i| c.end_offset("t", i).unwrap()).collect();
+        assert_eq!(counts.iter().sum::<u64>(), 5);
+        assert_eq!(counts.iter().filter(|c| **c > 0).count(), 1, "{counts:?}");
+    }
+
+    #[test]
+    fn batching_defers_until_flush() {
+        let c = setup(1);
+        let mut p = Producer::new(
+            c.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: usize::MAX,
+                linger: Duration::from_secs(3600),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..10u8 {
+            p.send(None, vec![i]).unwrap();
+        }
+        assert_eq!(c.end_offset("t", 0).unwrap(), 0, "nothing flushed yet");
+        p.flush().unwrap();
+        assert_eq!(c.end_offset("t", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn drop_flushes_pending() {
+        let c = setup(1);
+        {
+            let mut p = Producer::new(
+                c.clone(),
+                "t",
+                1,
+                ProducerConfig {
+                    batch_bytes: usize::MAX,
+                    linger: Duration::from_secs(3600),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            p.send(None, vec![42]).unwrap();
+        }
+        assert_eq!(c.end_offset("t", 0).unwrap(), 1);
+    }
+}

@@ -1,0 +1,340 @@
+//! Simulated HPC machine: nodes, allocations, and NIC throttling.
+//!
+//! This is the *real plane*'s stand-in for the paper's Wrangler testbed
+//! (DESIGN.md §3): node boundaries are logical (everything runs in one
+//! process), but resource accounting is enforced — pilots allocate whole
+//! nodes from a finite pool, and per-node NIC token buckets throttle the
+//! broker data plane so saturation behaviour is observable even
+//! in-process.
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::MachineConfig;
+use crate::error::{Error, Result};
+
+/// Identifier of a node within a [`Machine`].
+pub type NodeId = usize;
+
+/// A token-bucket byte throttle (one per NIC direction per node).
+///
+/// `acquire(bytes)` blocks until the bucket has refilled enough tokens,
+/// enforcing a long-run rate of `rate_bytes_per_sec`.  A `None` rate is
+/// unthrottled (used by unit tests and the pure-compute paths).
+#[derive(Debug)]
+pub struct Throttle {
+    rate_bytes_per_sec: Option<f64>,
+    state: Mutex<ThrottleState>,
+}
+
+#[derive(Debug)]
+struct ThrottleState {
+    last_refill: Instant,
+    available: f64,
+    burst: f64,
+}
+
+impl Throttle {
+    pub fn new(rate_bytes_per_sec: Option<f64>) -> Self {
+        let burst = rate_bytes_per_sec.map(|r| r * 0.05).unwrap_or(f64::MAX);
+        Throttle {
+            rate_bytes_per_sec,
+            state: Mutex::new(ThrottleState {
+                last_refill: Instant::now(),
+                available: burst,
+                burst,
+            }),
+        }
+    }
+
+    /// Unlimited throttle.
+    pub fn unlimited() -> Self {
+        Self::new(None)
+    }
+
+    pub fn rate(&self) -> Option<f64> {
+        self.rate_bytes_per_sec
+    }
+
+    /// Consume `bytes` tokens, sleeping until available.
+    pub fn acquire(&self, bytes: usize) {
+        let Some(rate) = self.rate_bytes_per_sec else {
+            return;
+        };
+        loop {
+            let wait = {
+                let mut st = self.state.lock().unwrap();
+                let now = Instant::now();
+                let elapsed = now.duration_since(st.last_refill).as_secs_f64();
+                st.last_refill = now;
+                let burst = st.burst;
+                st.available = (st.available + elapsed * rate).min(burst.max(bytes as f64));
+                if st.available >= bytes as f64 {
+                    st.available -= bytes as f64;
+                    None
+                } else {
+                    Some(Duration::from_secs_f64(
+                        ((bytes as f64 - st.available) / rate).clamp(1e-6, 1.0),
+                    ))
+                }
+            };
+            match wait {
+                None => return,
+                Some(d) => std::thread::sleep(d),
+            }
+        }
+    }
+}
+
+/// A node of the simulated machine.
+#[derive(Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub cores: usize,
+    pub mem_gb: usize,
+    /// NIC egress throttle (bytes leaving this node).
+    pub egress: Throttle,
+    /// NIC ingress throttle (bytes entering this node).
+    pub ingress: Throttle,
+    /// Local SSD throttle (broker log appends).
+    pub disk: Throttle,
+}
+
+/// Who holds a node allocation (for diagnostics).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub pilot_id: String,
+    pub nodes: Vec<NodeId>,
+}
+
+struct MachineState {
+    free: BTreeSet<NodeId>,
+    allocations: Vec<Allocation>,
+}
+
+/// The simulated HPC machine shared by every component of a deployment.
+///
+/// Cloneable handle (Arc inside); pilots allocate whole nodes, mirroring
+/// the paper's Pilot-Jobs which hold node-granular SLURM allocations.
+#[derive(Clone)]
+pub struct Machine {
+    config: MachineConfig,
+    nodes: Arc<Vec<Node>>,
+    state: Arc<Mutex<MachineState>>,
+}
+
+impl std::fmt::Debug for Machine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Machine")
+            .field("name", &self.config.name)
+            .field("nodes", &self.nodes.len())
+            .field("free", &self.free_nodes())
+            .finish()
+    }
+}
+
+impl Machine {
+    pub fn new(config: MachineConfig) -> Result<Self> {
+        config.validate()?;
+        let nodes: Vec<Node> = (0..config.nodes)
+            .map(|id| Node {
+                id,
+                cores: config.cores_per_node,
+                mem_gb: config.mem_gb_per_node,
+                egress: Throttle::new(Some(config.nic_mbps * 1e6)),
+                ingress: Throttle::new(Some(config.nic_mbps * 1e6)),
+                disk: Throttle::new(Some(config.ssd_mbps * 1e6)),
+            })
+            .collect();
+        Ok(Machine {
+            state: Arc::new(Mutex::new(MachineState {
+                free: (0..config.nodes).collect(),
+                allocations: Vec::new(),
+            })),
+            nodes: Arc::new(nodes),
+            config,
+        })
+    }
+
+    /// Wrangler-shaped machine with `nodes` nodes (paper testbed).
+    pub fn wrangler(nodes: usize) -> Self {
+        Self::new(MachineConfig::wrangler(nodes)).expect("wrangler config is valid")
+    }
+
+    /// Small unthrottled machine for tests (bandwidth limits off).
+    pub fn unthrottled(nodes: usize) -> Self {
+        let mut cfg = MachineConfig::localhost(nodes);
+        cfg.name = "test".into();
+        let machine = Self::new(cfg).unwrap();
+        // Replace throttles with unlimited ones.
+        let nodes: Vec<Node> = machine
+            .nodes
+            .iter()
+            .map(|n| Node {
+                id: n.id,
+                cores: n.cores,
+                mem_gb: n.mem_gb,
+                egress: Throttle::unlimited(),
+                ingress: Throttle::unlimited(),
+                disk: Throttle::unlimited(),
+            })
+            .collect();
+        Machine {
+            config: machine.config.clone(),
+            nodes: Arc::new(nodes),
+            state: machine.state.clone(),
+        }
+    }
+
+    pub fn config(&self) -> &MachineConfig {
+        &self.config
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn free_nodes(&self) -> usize {
+        self.state.lock().unwrap().free.len()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Allocate `n` whole nodes for `pilot_id`.
+    pub fn allocate(&self, pilot_id: &str, n: usize) -> Result<Vec<NodeId>> {
+        let mut st = self.state.lock().unwrap();
+        if st.free.len() < n {
+            return Err(Error::Pilot(format!(
+                "machine {}: requested {} nodes, only {} free",
+                self.config.name,
+                n,
+                st.free.len()
+            )));
+        }
+        let ids: Vec<NodeId> = st.free.iter().take(n).copied().collect();
+        for id in &ids {
+            st.free.remove(id);
+        }
+        st.allocations.push(Allocation {
+            pilot_id: pilot_id.to_string(),
+            nodes: ids.clone(),
+        });
+        Ok(ids)
+    }
+
+    /// Release every node held by `pilot_id`.
+    pub fn release(&self, pilot_id: &str) {
+        let mut st = self.state.lock().unwrap();
+        let drained: Vec<Allocation> = std::mem::take(&mut st.allocations);
+        let mut kept = Vec::new();
+        for alloc in drained {
+            if alloc.pilot_id == pilot_id {
+                for id in alloc.nodes {
+                    st.free.insert(id);
+                }
+            } else {
+                kept.push(alloc);
+            }
+        }
+        st.allocations = kept;
+    }
+
+    /// Release specific nodes held by `pilot_id` (pilot shrink).
+    pub fn release_nodes(&self, pilot_id: &str, nodes: &[NodeId]) {
+        let mut st = self.state.lock().unwrap();
+        let mut freed = Vec::new();
+        for alloc in st.allocations.iter_mut() {
+            if alloc.pilot_id == pilot_id {
+                alloc.nodes.retain(|id| {
+                    if nodes.contains(id) {
+                        freed.push(*id);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        }
+        for id in freed {
+            st.free.insert(id);
+        }
+        st.allocations.retain(|a| !a.nodes.is_empty());
+    }
+
+    /// Current allocations (diagnostics / tests).
+    pub fn allocations(&self) -> Vec<Allocation> {
+        self.state.lock().unwrap().allocations.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let m = Machine::unthrottled(4);
+        assert_eq!(m.free_nodes(), 4);
+        let a = m.allocate("p1", 3).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(m.free_nodes(), 1);
+        assert!(m.allocate("p2", 2).is_err());
+        m.release("p1");
+        assert_eq!(m.free_nodes(), 4);
+    }
+
+    #[test]
+    fn release_nodes_partial() {
+        let m = Machine::unthrottled(4);
+        let a = m.allocate("p1", 4).unwrap();
+        m.release_nodes("p1", &a[..2]);
+        assert_eq!(m.free_nodes(), 2);
+        let allocs = m.allocations();
+        assert_eq!(allocs.len(), 1);
+        assert_eq!(allocs[0].nodes.len(), 2);
+        m.release("p1");
+        assert_eq!(m.free_nodes(), 4);
+    }
+
+    #[test]
+    fn allocations_disjoint() {
+        let m = Machine::unthrottled(6);
+        let a = m.allocate("p1", 3).unwrap();
+        let b = m.allocate("p2", 3).unwrap();
+        for id in &a {
+            assert!(!b.contains(id), "node {id} double-allocated");
+        }
+    }
+
+    #[test]
+    fn throttle_enforces_rate() {
+        // 10 MB/s: moving 1 MB (beyond the 0.5 MB burst) must take
+        // noticeable time.
+        let t = Throttle::new(Some(10e6));
+        let start = Instant::now();
+        t.acquire(1_000_000);
+        t.acquire(1_000_000);
+        let secs = start.elapsed().as_secs_f64();
+        // 2 MB at 10 MB/s = 200 ms minus the 0.5 MB burst => >= ~100 ms.
+        assert!(secs > 0.1, "throttle too fast: {secs}s");
+    }
+
+    #[test]
+    fn unlimited_throttle_is_instant() {
+        let t = Throttle::unlimited();
+        let start = Instant::now();
+        t.acquire(1_000_000_000);
+        assert!(start.elapsed().as_secs_f64() < 0.05);
+    }
+
+    #[test]
+    fn wrangler_machine_shape() {
+        let m = Machine::wrangler(2);
+        assert_eq!(m.total_nodes(), 2);
+        assert_eq!(m.node(0).cores, 24);
+        assert!(m.node(0).egress.rate().unwrap() > 1e9);
+    }
+}

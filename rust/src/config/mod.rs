@@ -1,0 +1,309 @@
+//! Typed configuration for machines, frameworks and experiments.
+//!
+//! Everything the CLI and the experiment harness can tune lives here as
+//! JSON-round-trippable structs, so experiment configs load from files
+//! (``--config exp.json``) and the recorded results embed the exact
+//! configuration that produced them.
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// Hardware description of one HPC machine (the paper's testbed is
+/// XSEDE Wrangler: 24-core / 128 GB nodes with local SSD).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineConfig {
+    /// Human-readable machine name (shows up in experiment records).
+    pub name: String,
+    /// Total nodes available to the resource manager.
+    pub nodes: usize,
+    /// Cores per node.
+    pub cores_per_node: usize,
+    /// Memory per node in GB.
+    pub mem_gb_per_node: usize,
+    /// NIC bandwidth per node, MB/s (full duplex; modeled per direction).
+    pub nic_mbps: f64,
+    /// Local SSD sequential bandwidth per node, MB/s.
+    pub ssd_mbps: f64,
+}
+
+impl MachineConfig {
+    /// The paper's testbed: Wrangler nodes (24 cores, 128 GB, 10 GbE,
+    /// local SSD).  `nodes` is the allocation size, up to 32 in the
+    /// paper's largest experiment (§6.5).
+    pub fn wrangler(nodes: usize) -> Self {
+        MachineConfig {
+            name: "wrangler".into(),
+            nodes,
+            cores_per_node: 24,
+            mem_gb_per_node: 128,
+            nic_mbps: 1250.0, // 10 GbE
+            ssd_mbps: 500.0,
+        }
+    }
+
+    /// A small machine sized for this host (integration tests/examples).
+    pub fn localhost(nodes: usize) -> Self {
+        MachineConfig {
+            name: "localhost".into(),
+            nodes,
+            cores_per_node: 2,
+            mem_gb_per_node: 4,
+            nic_mbps: 4000.0,
+            ssd_mbps: 1000.0,
+        }
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.cores_per_node == 0 {
+            return Err(Error::Config(format!(
+                "machine {}: nodes and cores_per_node must be > 0",
+                self.name
+            )));
+        }
+        if self.nic_mbps <= 0.0 || self.ssd_mbps <= 0.0 {
+            return Err(Error::Config(format!(
+                "machine {}: bandwidths must be positive",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Framework bootstrap cost model (per framework plugin).
+///
+/// The paper's Figure 6 decomposes startup into (i) the batch job
+/// placement and (ii) framework initialization, which grows with node
+/// count (sequential component launches + per-node agent starts).
+/// Constants are calibrated to the magnitudes reported for Wrangler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BootstrapModel {
+    /// Fixed head-component cost, seconds (e.g. ZooKeeper, Spark master).
+    pub head_secs: f64,
+    /// Per-node worker/broker launch cost, seconds.
+    pub per_node_secs: f64,
+    /// How many nodes' worth of launches can proceed in parallel
+    /// (launch fan-out of the bootstrap script).
+    pub launch_parallelism: usize,
+    /// Post-launch settle/health-check cost, seconds.
+    pub settle_secs: f64,
+}
+
+impl BootstrapModel {
+    /// Total framework-init seconds for `nodes` nodes.
+    pub fn init_secs(&self, nodes: usize) -> f64 {
+        let waves = nodes.div_ceil(self.launch_parallelism.max(1));
+        self.head_secs + waves as f64 * self.per_node_secs + self.settle_secs
+    }
+}
+
+/// Batch-queue model for the SimSlurm adaptor (queue wait + placement).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueueModel {
+    /// Base scheduling latency, seconds.
+    pub base_secs: f64,
+    /// Additional placement cost per node, seconds.
+    pub per_node_secs: f64,
+}
+
+impl QueueModel {
+    pub fn wait_secs(&self, nodes: usize) -> f64 {
+        self.base_secs + self.per_node_secs * nodes as f64
+    }
+}
+
+/// Producer-side cost preset for the simulation plane (DESIGN.md §4b).
+///
+/// `Calibrated` uses costs measured from this repo's real Rust plane;
+/// `PaperEra` scales generation costs to the paper's Python/PyKafka
+/// producers (NumPy RNG + string serialization), restoring the
+/// RNG-bound regime behind Fig 8's KMeans-static vs -random gap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CostPreset {
+    #[default]
+    Calibrated,
+    PaperEra,
+}
+
+/// Top-level experiment configuration (shared across figure harnesses).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub machine: MachineConfig,
+    /// Kafka partitions per broker node (paper §6.3: fixed at 12/node).
+    pub partitions_per_node: usize,
+    /// Producer processes per producer node (paper §6.3: 8/node).
+    pub producers_per_node: usize,
+    /// Micro-batch window seconds for processing experiments (§6.4: 60 s).
+    pub window_secs: f64,
+    /// Cost preset for the simulation plane.
+    pub preset: CostPreset,
+    /// Random seed for reproducibility.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            machine: MachineConfig::wrangler(32),
+            partitions_per_node: 12,
+            producers_per_node: 8,
+            window_secs: 60.0,
+            preset: CostPreset::Calibrated,
+            seed: 42,
+        }
+    }
+}
+
+impl MachineConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("nodes", self.nodes)
+            .set("cores_per_node", self.cores_per_node)
+            .set("mem_gb_per_node", self.mem_gb_per_node)
+            .set("nic_mbps", self.nic_mbps)
+            .set("ssd_mbps", self.ssd_mbps)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let num = |k: &str| -> Result<f64> {
+            j.req(k)?
+                .as_f64()
+                .ok_or_else(|| Error::Config(format!("machine.{k}: expected number")))
+        };
+        Ok(MachineConfig {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::Config("machine.name: expected string".into()))?
+                .to_string(),
+            nodes: num("nodes")? as usize,
+            cores_per_node: num("cores_per_node")? as usize,
+            mem_gb_per_node: num("mem_gb_per_node")? as usize,
+            nic_mbps: num("nic_mbps")?,
+            ssd_mbps: num("ssd_mbps")?,
+        })
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON config file.
+    pub fn from_json_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = ExperimentConfig::default();
+        let usize_or = |k: &str, dv: usize| j.get(k).and_then(Json::as_usize).unwrap_or(dv);
+        Ok(ExperimentConfig {
+            machine: match j.get("machine") {
+                Some(m) => MachineConfig::from_json(m)?,
+                None => d.machine,
+            },
+            partitions_per_node: usize_or("partitions_per_node", d.partitions_per_node),
+            producers_per_node: usize_or("producers_per_node", d.producers_per_node),
+            window_secs: j
+                .get("window_secs")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.window_secs),
+            preset: match j.get("preset").and_then(Json::as_str) {
+                Some("paper-era") => CostPreset::PaperEra,
+                Some("calibrated") | None => CostPreset::Calibrated,
+                Some(other) => {
+                    return Err(Error::Config(format!("unknown preset '{other}'")))
+                }
+            },
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
+        })
+    }
+
+    /// Serialize (embedded into experiment records).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("machine", self.machine.to_json())
+            .set("partitions_per_node", self.partitions_per_node)
+            .set("producers_per_node", self.producers_per_node)
+            .set("window_secs", self.window_secs)
+            .set(
+                "preset",
+                match self.preset {
+                    CostPreset::Calibrated => "calibrated",
+                    CostPreset::PaperEra => "paper-era",
+                },
+            )
+            .set("seed", self.seed)
+    }
+}
+
+/// Message-size constants from the paper's Mini-App workloads (§6.3).
+pub mod messages {
+    /// KMeans message: 5,000 3-D points, ~0.32 MB serialized.
+    pub const KMEANS_MSG_BYTES: usize = 320_000;
+    /// Light-source message: one APS-format frame, ~2 MB serialized.
+    pub const LIGHTSOURCE_MSG_BYTES: usize = 2_000_000;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrangler_defaults_match_paper() {
+        let m = MachineConfig::wrangler(32);
+        assert_eq!(m.cores_per_node, 24);
+        assert_eq!(m.mem_gb_per_node, 128);
+        assert_eq!(m.nodes, 32);
+        m.validate().unwrap();
+        // §6.5: 32 nodes = 1536 vcores (24 cores x 2 hyperthreads x 32).
+        assert_eq!(32 * m.cores_per_node * 2, 1536);
+    }
+
+    #[test]
+    fn validate_rejects_zero_nodes() {
+        let mut m = MachineConfig::wrangler(0);
+        assert!(m.validate().is_err());
+        m.nodes = 1;
+        m.cores_per_node = 0;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn bootstrap_model_grows_with_nodes() {
+        let b = BootstrapModel {
+            head_secs: 10.0,
+            per_node_secs: 2.0,
+            launch_parallelism: 4,
+            settle_secs: 5.0,
+        };
+        assert!(b.init_secs(16) > b.init_secs(4));
+        assert_eq!(b.init_secs(4), 10.0 + 2.0 + 5.0);
+        assert_eq!(b.init_secs(8), 10.0 + 4.0 + 5.0);
+    }
+
+    #[test]
+    fn experiment_config_json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.preset = CostPreset::PaperEra;
+        cfg.window_secs = 30.0;
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.machine, cfg.machine);
+        assert_eq!(back.partitions_per_node, 12);
+        assert_eq!(back.producers_per_node, 8);
+        assert_eq!(back.preset, CostPreset::PaperEra);
+        assert_eq!(back.window_secs, 30.0);
+    }
+
+    #[test]
+    fn experiment_config_defaults_for_missing_keys() {
+        let back = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(back.partitions_per_node, 12);
+        assert_eq!(back.preset, CostPreset::Calibrated);
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"preset": "bogus"}"#).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! Compute-Units: framework-agnostic task execution (paper §4.2).
+//!
+//! "A Compute-Unit can be formulated and executed in a framework
+//! agnostic [way]" (paper Listing 5):
+//!
+//! ```python
+//! def compute(x): return x*x
+//! compute_unit = pilot.submit(compute, 2)
+//! compute_unit.wait()
+//! ```
+//!
+//! Here a [`ComputeUnit`] wraps a closure plus lifecycle state and can
+//! be submitted to any pilot whose context exposes an execution backend
+//! (task-parallel engines directly; micro-batch engines through their
+//! executor pool).  The same closure runs unchanged on a Dask-like or a
+//! Spark-like pilot — the paper's interoperability claim.
+
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{TaskEngine, TaskFuture};
+use crate::error::{Error, Result};
+use crate::pilot::{FrameworkContext, Pilot};
+
+/// Lifecycle states of a compute unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeUnitState {
+    New,
+    Running,
+    Done,
+    Failed,
+}
+
+/// Description of a compute unit (name + placement hints).
+#[derive(Debug, Clone, Default)]
+pub struct ComputeUnitDescription {
+    pub name: String,
+    /// Number of cores the unit claims (accounting only).
+    pub cores: usize,
+}
+
+impl ComputeUnitDescription {
+    pub fn new(name: &str) -> Self {
+        ComputeUnitDescription {
+            name: name.to_string(),
+            cores: 1,
+        }
+    }
+}
+
+/// A submitted compute unit with a typed result.
+pub struct ComputeUnit<R> {
+    description: ComputeUnitDescription,
+    state: Arc<Mutex<ComputeUnitState>>,
+    future: TaskFuture<R>,
+}
+
+impl<R: Send + 'static> ComputeUnit<R> {
+    pub fn description(&self) -> &ComputeUnitDescription {
+        &self.description
+    }
+
+    pub fn state(&self) -> ComputeUnitState {
+        *self.state.lock().unwrap()
+    }
+
+    /// Block until the unit completes (paper: `compute_unit.wait()`).
+    pub fn wait(self) -> Result<R> {
+        let result = self.future.wait();
+        let mut st = self.state.lock().unwrap();
+        *st = if result.is_ok() {
+            ComputeUnitState::Done
+        } else {
+            ComputeUnitState::Failed
+        };
+        result
+    }
+}
+
+/// Resolve a pilot's context to a task-execution backend.
+fn engine_of(pilot: &Pilot) -> Result<TaskEngine> {
+    match pilot.context()? {
+        FrameworkContext::TaskPar(e) => Ok(e),
+        // A micro-batch engine executes CUs on its executor pool.
+        FrameworkContext::MicroBatch(e) => Ok(e.executor_pool()),
+        FrameworkContext::Kafka(_) => Err(Error::Engine(
+            "kafka pilots broker data; submit compute units to a processing pilot".into(),
+        )),
+    }
+}
+
+/// Submit a closure to any processing pilot (paper Listing 5).
+pub fn submit_unit<R, F>(
+    pilot: &Pilot,
+    description: ComputeUnitDescription,
+    f: F,
+) -> Result<ComputeUnit<R>>
+where
+    R: Send + 'static,
+    F: FnOnce() -> R + Send + 'static,
+{
+    let engine = engine_of(pilot)?;
+    let state = Arc::new(Mutex::new(ComputeUnitState::Running));
+    let future = engine.submit(move |_node| f())?;
+    Ok(ComputeUnit {
+        description,
+        state,
+        future,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+    use crate::pilot::{DaskDescription, PilotComputeService, SparkDescription};
+
+    #[test]
+    fn cu_runs_on_dask_pilot() {
+        let svc = PilotComputeService::new(Machine::unthrottled(2));
+        let (pilot, engine) = svc.start_dask(DaskDescription::new(1)).unwrap();
+        let cu = submit_unit(&pilot, ComputeUnitDescription::new("square"), || 2 * 2).unwrap();
+        assert_eq!(cu.wait().unwrap(), 4);
+        svc.stop_pilot(&pilot).unwrap();
+        engine.stop();
+    }
+
+    #[test]
+    fn same_cu_runs_on_spark_pilot_interoperably() {
+        let svc = PilotComputeService::new(Machine::unthrottled(2));
+        let (pilot, engine) = svc.start_spark(SparkDescription::new(1)).unwrap();
+        // The exact same closure submitted unchanged (paper Listing 5).
+        let compute = || 2 * 2;
+        let cu = submit_unit(&pilot, ComputeUnitDescription::new("square"), compute).unwrap();
+        assert_eq!(cu.state(), ComputeUnitState::Running);
+        assert_eq!(cu.wait().unwrap(), 4);
+        svc.stop_pilot(&pilot).unwrap();
+        engine.stop();
+    }
+
+    #[test]
+    fn cu_on_kafka_pilot_is_rejected() {
+        let svc = PilotComputeService::new(Machine::unthrottled(2));
+        let (pilot, _cluster) = svc
+            .start_kafka(crate::pilot::KafkaDescription::new(1))
+            .unwrap();
+        let result = submit_unit(&pilot, ComputeUnitDescription::new("x"), || 1);
+        assert!(matches!(result.err(), Some(Error::Engine(_))));
+        svc.stop_pilot(&pilot).unwrap();
+    }
+
+    #[test]
+    fn failed_cu_reports_failure() {
+        let svc = PilotComputeService::new(Machine::unthrottled(2));
+        let (pilot, engine) = svc.start_dask(DaskDescription::new(1)).unwrap();
+        let cu =
+            submit_unit::<(), _>(&pilot, ComputeUnitDescription::new("boom"), || {
+                panic!("synthetic")
+            })
+            .unwrap();
+        assert!(cu.wait().is_err());
+        svc.stop_pilot(&pilot).unwrap();
+        engine.stop();
+    }
+}

@@ -1,0 +1,21 @@
+//! Stream-processing engines (the paper's "data processing" plugins).
+//!
+//! Two execution backends mirror the paper's framework matrix (§4):
+//!
+//! * [`microbatch`] — a Spark-Streaming-like micro-batch engine (window
+//!   assembly, one task per Kafka partition, executor pool, batch
+//!   barrier) used by the MASA Mini-App;
+//! * [`taskpar`] — a Dask-like futures engine used by the MASS data
+//!   producers and as a generic Compute-Unit backend.
+//!
+//! Both support runtime extension (`add_executors` / `add_workers`),
+//! which is what pilot `extend()` calls through the framework plugins.
+
+pub mod microbatch;
+pub mod taskpar;
+
+pub use microbatch::{
+    BatchProcessor, JobStats, MicroBatchEngine, StreamingJobConfig, StreamingJobHandle,
+    TaskContext,
+};
+pub use taskpar::{TaskEngine, TaskFuture};

@@ -1,0 +1,278 @@
+//! Dask-like task-parallel engine.
+//!
+//! The paper uses Dask as a lightweight task launcher (the MASS data
+//! producers run "8 producer processes in Dask" per node, §6.3) and as
+//! one of the Compute-Unit execution backends (§4.2).  This engine is
+//! the equivalent: a futures-based worker pool spanning the pilot's
+//! nodes, with runtime `add_workers` for pilot extension.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::cluster::{Machine, NodeId};
+use crate::error::{Error, Result};
+
+type Task = Box<dyn FnOnce(NodeId) + Send + 'static>;
+
+struct Queue {
+    tasks: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    stopped: AtomicBool,
+    /// Nodes being drained (pilot shrink): their workers exit before
+    /// picking up new tasks.
+    draining: Mutex<std::collections::HashSet<NodeId>>,
+}
+
+/// Future for a submitted task.
+pub struct TaskFuture<R> {
+    rx: mpsc::Receiver<std::thread::Result<R>>,
+}
+
+impl<R> TaskFuture<R> {
+    /// Block until the task finishes.
+    pub fn wait(self) -> Result<R> {
+        match self.rx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(_)) => Err(Error::Engine("task panicked".into())),
+            Err(_) => Err(Error::Engine("task dropped (engine stopped?)".into())),
+        }
+    }
+
+    /// Non-blocking check.
+    pub fn try_wait(&self) -> Option<Result<R>> {
+        match self.rx.try_recv() {
+            Ok(Ok(r)) => Some(Ok(r)),
+            Ok(Err(_)) => Some(Err(Error::Engine("task panicked".into()))),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(Error::Engine("task dropped".into())))
+            }
+        }
+    }
+}
+
+struct EngineInner {
+    queue: Arc<Queue>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    worker_count: AtomicUsize,
+    workers_per_node: usize,
+    nodes: Mutex<Vec<NodeId>>,
+}
+
+/// Dask-like engine: `workers_per_node` worker threads per pilot node.
+#[derive(Clone)]
+pub struct TaskEngine {
+    #[allow(dead_code)]
+    machine: Machine,
+    inner: Arc<EngineInner>,
+}
+
+impl std::fmt::Debug for TaskEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TaskEngine")
+            .field("workers", &self.worker_count())
+            .field("nodes", &self.nodes().len())
+            .finish()
+    }
+}
+
+impl TaskEngine {
+    pub fn new(machine: Machine, nodes: Vec<NodeId>, workers_per_node: usize) -> Self {
+        let engine = TaskEngine {
+            machine,
+            inner: Arc::new(EngineInner {
+                queue: Arc::new(Queue {
+                    tasks: Mutex::new(VecDeque::new()),
+                    available: Condvar::new(),
+                    stopped: AtomicBool::new(false),
+                    draining: Mutex::new(std::collections::HashSet::new()),
+                }),
+                workers: Mutex::new(Vec::new()),
+                worker_count: AtomicUsize::new(0),
+                workers_per_node: workers_per_node.max(1),
+                nodes: Mutex::new(Vec::new()),
+            }),
+        };
+        engine.add_workers(nodes);
+        engine
+    }
+
+    pub fn nodes(&self) -> Vec<NodeId> {
+        self.inner.nodes.lock().unwrap().clone()
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.inner.worker_count.load(Ordering::Relaxed)
+    }
+
+    /// Extend the engine onto additional nodes at runtime.
+    pub fn add_workers(&self, nodes: Vec<NodeId>) {
+        let mut handles = self.inner.workers.lock().unwrap();
+        for node in nodes {
+            self.inner.queue.draining.lock().unwrap().remove(&node);
+            self.inner.nodes.lock().unwrap().push(node);
+            for _ in 0..self.inner.workers_per_node {
+                let queue = self.inner.queue.clone();
+                let count_ref = self.inner.clone();
+                // Count the worker immediately (synchronously) so that
+                // worker_count reflects add_workers on return; decrement
+                // when the worker drains out.
+                count_ref.worker_count.fetch_add(1, Ordering::Relaxed);
+                handles.push(std::thread::spawn(move || {
+                    worker_loop(queue, node);
+                    count_ref.worker_count.fetch_sub(1, Ordering::Relaxed);
+                }));
+            }
+        }
+    }
+
+    /// Drain workers on `nodes` (pilot shrink): they finish their
+    /// current task and exit; in-flight tasks are unaffected.
+    pub fn remove_workers(&self, nodes: &[NodeId]) {
+        {
+            let mut draining = self.inner.queue.draining.lock().unwrap();
+            draining.extend(nodes.iter().copied());
+        }
+        self.inner
+            .nodes
+            .lock()
+            .unwrap()
+            .retain(|n| !nodes.contains(n));
+        self.inner.queue.available.notify_all();
+    }
+
+    /// Submit a closure; it runs on some worker, receiving the worker's
+    /// node id (for data-plane cost accounting).
+    pub fn submit<R, F>(&self, f: F) -> Result<TaskFuture<R>>
+    where
+        R: Send + 'static,
+        F: FnOnce(NodeId) -> R + Send + 'static,
+    {
+        if self.inner.queue.stopped.load(Ordering::Relaxed) {
+            return Err(Error::Engine("engine stopped".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        let task: Task = Box::new(move |node| {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(node)));
+            let _ = tx.send(result);
+        });
+        self.inner.queue.tasks.lock().unwrap().push_back(task);
+        self.inner.queue.available.notify_one();
+        Ok(TaskFuture { rx })
+    }
+
+    /// Pending (not yet started) task count.
+    pub fn backlog(&self) -> usize {
+        self.inner.queue.tasks.lock().unwrap().len()
+    }
+
+    /// Stop all workers (pending tasks are dropped).
+    pub fn stop(&self) {
+        self.inner.queue.stopped.store(true, Ordering::Relaxed);
+        self.inner.queue.available.notify_all();
+        let mut workers = self.inner.workers.lock().unwrap();
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<Queue>, node: NodeId) {
+    loop {
+        let task = {
+            let mut tasks = queue.tasks.lock().unwrap();
+            loop {
+                if queue.stopped.load(Ordering::Relaxed)
+                    || queue.draining.lock().unwrap().contains(&node)
+                {
+                    return;
+                }
+                if let Some(t) = tasks.pop_front() {
+                    break t;
+                }
+                tasks = queue.available.wait(tasks).unwrap();
+            }
+        };
+        task(node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(nodes: usize, wpn: usize) -> TaskEngine {
+        let m = Machine::unthrottled(nodes);
+        TaskEngine::new(m, (0..nodes).collect(), wpn)
+    }
+
+    #[test]
+    fn submit_and_wait() {
+        let e = engine(1, 2);
+        let f = e.submit(|_| 21 * 2).unwrap();
+        assert_eq!(f.wait().unwrap(), 42);
+        e.stop();
+    }
+
+    #[test]
+    fn many_tasks_all_complete() {
+        let e = engine(2, 2);
+        let futures: Vec<_> = (0..50)
+            .map(|i| e.submit(move |_| i * i).unwrap())
+            .collect();
+        let mut results: Vec<i32> = futures.into_iter().map(|f| f.wait().unwrap()).collect();
+        results.sort();
+        assert_eq!(results, (0..50).map(|i| i * i).collect::<Vec<_>>());
+        e.stop();
+    }
+
+    #[test]
+    fn tasks_receive_node_ids_from_pool() {
+        let e = engine(3, 1);
+        let mut nodes: Vec<NodeId> = (0..30)
+            .map(|_| {
+                e.submit(|n| {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    n
+                })
+                .unwrap()
+            })
+            .map(|f| f.wait().unwrap())
+            .collect();
+        nodes.sort();
+        nodes.dedup();
+        assert!(!nodes.is_empty());
+        for n in nodes {
+            assert!(n < 3);
+        }
+        e.stop();
+    }
+
+    #[test]
+    fn panicking_task_reports_error_and_pool_survives() {
+        let e = engine(1, 1);
+        let f = e.submit::<(), _>(|_| panic!("boom")).unwrap();
+        assert!(f.wait().is_err());
+        let f2 = e.submit(|_| 7).unwrap();
+        assert_eq!(f2.wait().unwrap(), 7);
+        e.stop();
+    }
+
+    #[test]
+    fn add_workers_extends_pool() {
+        let e = engine(1, 1);
+        assert_eq!(e.worker_count(), 1);
+        e.add_workers(vec![0]);
+        assert_eq!(e.worker_count(), 2);
+        e.stop();
+    }
+
+    #[test]
+    fn submit_after_stop_errors() {
+        let e = engine(1, 1);
+        e.stop();
+        assert!(e.submit(|_| ()).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the coordinator returns
+//! [`Result<T>`](Result) with this error; XLA runtime errors, config
+//! errors and coordination failures (e.g. producing to a stopped broker)
+//! are all unified here so the CLI and examples can `?` freely.
+
+use thiserror::Error;
+
+/// Unified error type for the Pilot-Streaming coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Underlying XLA/PJRT failure (compile, execute, literal marshal).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// I/O failure (artifact loading, CSV emit, config read).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed configuration or experiment description.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Artifact manifest problems (missing artifact, shape mismatch).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Broker-side failures (unknown topic/partition, offset out of range,
+    /// produce to a stopped cluster).
+    #[error("broker: {0}")]
+    Broker(String),
+
+    /// Stream-engine failures (job not running, processor panic).
+    #[error("engine: {0}")]
+    Engine(String),
+
+    /// Pilot lifecycle violations (extend a non-running pilot, unknown
+    /// framework plugin, resource exhaustion on the machine).
+    #[error("pilot: {0}")]
+    Pilot(String),
+
+    /// Malformed wire message on the data plane.
+    #[error("wire: {0}")]
+    Wire(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,368 @@
+//! Experiment harness: regenerates every table and figure of the
+//! paper's evaluation (section 6).  Shared by the CLI
+//! (`pilot-streaming exp <id>`) and the bench targets.
+//!
+//! | id       | paper     | harness                                    |
+//! |----------|-----------|--------------------------------------------|
+//! | fig6     | Figure 6  | startup grid (queue + bootstrap models)    |
+//! | fig7     | Figure 7  | latency distributions @100 msg/s           |
+//! | fig8     | Figure 8  | MASS producer throughput sweep             |
+//! | fig9     | Figure 9  | MASA processing throughput sweep           |
+//! | table1   | Table 1   | live Mini-App characterization             |
+//! | headline | §6.5      | 32-node max-scale run                      |
+
+use crate::broker::cloud::CloudBroker;
+use crate::config::{CostPreset, ExperimentConfig};
+use crate::error::Result;
+use crate::metrics::{Recorder, Row};
+use crate::pilot::FrameworkKind;
+use crate::runtime::ModelRuntime;
+use crate::sim::{
+    startup_grid, wrangler_queue, CostModel, LatencySim, ProcessingScenario, ProcessingSim,
+    ProducerScenario, ProducerSim, SimMachine,
+};
+
+/// Resolve the cost model: calibrate from the real plane when artifacts
+/// are available, otherwise fall back to the preset constants.
+pub fn resolve_costs(config: &ExperimentConfig, calibrate: bool) -> CostModel {
+    match config.preset {
+        CostPreset::PaperEra => CostModel::paper_era(),
+        CostPreset::Calibrated => {
+            if calibrate {
+                if let Ok(rt) = ModelRuntime::load_default() {
+                    if let Ok(m) = CostModel::calibrate(&rt, 5) {
+                        return m;
+                    }
+                }
+            }
+            CostModel::calibrated_default()
+        }
+    }
+}
+
+/// Figure 6: Kafka/Spark/Dask startup vs cluster size.
+pub fn fig6(_config: &ExperimentConfig) -> Recorder {
+    let rec = Recorder::new();
+    let grid = startup_grid(
+        &[
+            FrameworkKind::Kafka,
+            FrameworkKind::Spark,
+            FrameworkKind::Dask,
+            FrameworkKind::Flink,
+        ],
+        &[1, 2, 4, 8, 16, 32],
+        wrangler_queue(),
+    );
+    for p in grid {
+        rec.add(
+            Row::new()
+                .push("framework", p.framework.name())
+                .push("nodes", p.nodes)
+                .push("queue_wait_s", format!("{:.1}", p.queue_wait_secs))
+                .push("framework_init_s", format!("{:.1}", p.framework_init_secs))
+                .push("total_s", format!("{:.1}", p.total_secs())),
+        );
+    }
+    rec
+}
+
+/// Figure 7: end-to-end latency at 100 msg/s across broker/processing
+/// configurations.
+pub fn fig7(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
+    let rec = Recorder::new();
+    let sim = LatencySim::new(
+        *costs,
+        crate::config::messages::KMEANS_MSG_BYTES as f64,
+        config.machine.nic_mbps * 1e6,
+        config.seed,
+    );
+    let n = 20_000;
+    let mut rows = vec![sim.kafka(n)];
+    for window in [0.2, 1.0, 2.0, 4.0, 8.0] {
+        rows.push(sim.spark_streaming(window, n));
+    }
+    rows.push(sim.cloud(&CloudBroker::kinesis(config.seed), n));
+    rows.push(sim.cloud(&CloudBroker::pubsub(config.seed), n));
+    for s in rows {
+        rec.add(
+            Row::new()
+                .push("config", &s.config)
+                .push("mean_s", format!("{:.3}", s.mean_secs))
+                .push("p50_s", format!("{:.3}", s.p50_secs))
+                .push("p99_s", format!("{:.3}", s.p99_secs)),
+        );
+    }
+    rec
+}
+
+/// Figure 8: MASS producer throughput for KMeans-random, KMeans-static
+/// and Lightsource across producer-node x broker-node configurations.
+pub fn fig8(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
+    let rec = Recorder::new();
+    let sim = ProducerSim::new(SimMachine::default(), *costs);
+    for source in ["kmeans-random", "kmeans-static", "lightsource"] {
+        let msg_bytes = if source == "lightsource" {
+            crate::config::messages::LIGHTSOURCE_MSG_BYTES as f64
+        } else {
+            crate::config::messages::KMEANS_MSG_BYTES as f64
+        };
+        for brokers in [1usize, 2, 4] {
+            for producers in [1usize, 2, 4, 8, 16] {
+                let res = sim.run(&ProducerScenario {
+                    source: source.into(),
+                    msg_bytes,
+                    producer_nodes: producers,
+                    producers_per_node: config.producers_per_node,
+                    broker_nodes: brokers,
+                    partitions_per_node: config.partitions_per_node,
+                    duration_secs: 120.0,
+                });
+                rec.add(
+                    Row::new()
+                        .push("source", source)
+                        .push("producer_nodes", producers)
+                        .push("broker_nodes", brokers)
+                        .push("msgs_per_s", format!("{:.1}", res.msg_rate))
+                        .push("mb_per_s", format!("{:.1}", res.mb_rate))
+                        .push("broker_util", format!("{:.2}", res.broker_util)),
+                );
+            }
+        }
+    }
+    rec
+}
+
+/// Input rates offered to the processing experiments: what 1 producer
+/// node / 8 processes sustains (paper §6.4 uses exactly that source).
+fn fig9_input_rate(source: &str, costs: &CostModel, config: &ExperimentConfig) -> f64 {
+    let sim = ProducerSim::new(SimMachine::default(), *costs);
+    let msg_bytes = if source == "lightsource" { 2e6 } else { 0.32e6 };
+    sim.run(&ProducerScenario {
+        source: source.into(),
+        msg_bytes,
+        producer_nodes: 1,
+        producers_per_node: config.producers_per_node,
+        broker_nodes: 4,
+        partitions_per_node: config.partitions_per_node,
+        duration_secs: 60.0,
+    })
+    .msg_rate
+}
+
+/// Figure 9: MASA processing throughput for KMeans, GridRec and ML-EM
+/// across processing-node x broker-node configurations.
+pub fn fig9(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
+    let rec = Recorder::new();
+    let sim = ProcessingSim::new(SimMachine::default(), *costs);
+    for processor in ["kmeans", "gridrec", "mlem"] {
+        let source = if processor == "kmeans" {
+            "kmeans-random"
+        } else {
+            "lightsource"
+        };
+        let input_rate = fig9_input_rate(source, costs, config);
+        let msg_bytes = if processor == "kmeans" { 0.32e6 } else { 2e6 };
+        for brokers in [1usize, 2, 4] {
+            for nodes in [1usize, 2, 4, 8] {
+                let res = sim.run(&ProcessingScenario {
+                    processor: processor.into(),
+                    msg_bytes,
+                    input_rate,
+                    processing_nodes: nodes,
+                    broker_nodes: brokers,
+                    partitions_per_node: config.partitions_per_node,
+                    window_secs: config.window_secs,
+                    windows: 10,
+                });
+                rec.add(
+                    Row::new()
+                        .push("processor", processor)
+                        .push("processing_nodes", nodes)
+                        .push("broker_nodes", brokers)
+                        .push("input_msgs_per_s", format!("{:.1}", input_rate))
+                        .push("msgs_per_s", format!("{:.1}", res.msg_rate))
+                        .push("mb_per_s", format!("{:.1}", res.mb_rate))
+                        .push("core_util", format!("{:.2}", res.core_util))
+                        .push("behind", format!("{:.2}", res.behind_fraction)),
+                );
+            }
+        }
+    }
+    rec
+}
+
+/// Table 1: live characterization of both Mini-App workloads on the
+/// real plane (single node, real broker + real XLA execution).
+pub fn table1(runtime: &ModelRuntime) -> Result<Recorder> {
+    use crate::cluster::Machine;
+    use crate::engine::{MicroBatchEngine, TaskEngine};
+    use crate::miniapp::{MasaApp, MasaConfig, MassConfig, MassSource, ProcessorKind, SourceKind};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let rec = Recorder::new();
+    let km = runtime.manifest().kmeans.clone();
+    for (name, kind, source, msgs) in [
+        (
+            "kmeans",
+            ProcessorKind::KMeans,
+            SourceKind::KmeansRandom { n_centroids: km.k },
+            20usize,
+        ),
+        (
+            "lightsource-gridrec",
+            ProcessorKind::GridRec,
+            SourceKind::Lightsource {
+                template: Arc::new(runtime.read_f32_file("template_sinogram.bin")?),
+            },
+            10usize,
+        ),
+    ] {
+        let machine = Machine::unthrottled(3);
+        let cluster = crate::broker::BrokerCluster::new(machine.clone(), vec![0]);
+        cluster.create_topic("t1", 4)?;
+        let producer_engine = TaskEngine::new(machine.clone(), vec![1], 2);
+        let engine = MicroBatchEngine::new(machine, vec![2], 2);
+        let masa = MasaApp::new(
+            MasaConfig::new(kind, "t1", Duration::from_millis(100)),
+            runtime.clone(),
+        );
+        masa.processor.warmup()?;
+        let job = masa.start(&engine, cluster.clone())?;
+
+        let mut cfg = MassConfig::new(source, "t1");
+        cfg.messages_per_producer = msgs / 2;
+        let mass = MassSource::new(cfg);
+        let report = mass.run(&producer_engine, &cluster, 2)?;
+
+        // Wait for the consumer to drain.
+        let deadline = std::time::Instant::now() + Duration::from_secs(120);
+        while job.stats().processed.messages() < report.messages
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let stats = job.stop();
+        engine.stop();
+        producer_engine.stop();
+
+        rec.add(
+            Row::new()
+                .push("application", name)
+                .push("data_source", mass.config().source.name())
+                .push("produced_msgs", report.messages)
+                .push("produce_mb_s", format!("{:.1}", report.mb_rate()))
+                .push("processed_msgs", stats.processed.messages())
+                .push(
+                    "proc_latency_p50_s",
+                    format!("{:.3}", stats.record_latency.p50_secs()),
+                )
+                .push(
+                    "exec_per_msg_ms",
+                    format!(
+                        "{:.1}",
+                        masa.processor.stats.exec_secs.mean_secs() * 1e3
+                    ),
+                ),
+        );
+    }
+    Ok(rec)
+}
+
+/// §6.5 headline: 32 nodes / 1536 vcores; lightsource producer
+/// throughput up to ~390 MB/s; processing side is the bottleneck.
+pub fn headline(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
+    let rec = Recorder::new();
+    let psim = ProducerSim::new(SimMachine::default(), *costs);
+    // Max-scale split of 32 nodes: 16 producers + 4 brokers + 8
+    // processing + pilots overhead.
+    let prod = psim.run(&ProducerScenario {
+        source: "lightsource".into(),
+        msg_bytes: 2e6,
+        producer_nodes: 16,
+        producers_per_node: config.producers_per_node,
+        broker_nodes: 4,
+        partitions_per_node: config.partitions_per_node,
+        duration_secs: 120.0,
+    });
+    let csim = ProcessingSim::new(SimMachine::default(), *costs);
+    let proc = csim.run(&ProcessingScenario {
+        processor: "gridrec".into(),
+        msg_bytes: 2e6,
+        input_rate: prod.msg_rate,
+        processing_nodes: 8,
+        broker_nodes: 4,
+        partitions_per_node: config.partitions_per_node,
+        window_secs: config.window_secs,
+        windows: 10,
+    });
+    rec.add(
+        Row::new()
+            .push("total_nodes", 32)
+            .push("vcores", 32 * config.machine.cores_per_node * 2)
+            .push("producer_mb_s", format!("{:.0}", prod.mb_rate))
+            .push("producer_msgs_s", format!("{:.0}", prod.msg_rate))
+            .push("processing_msgs_s", format!("{:.0}", proc.msg_rate))
+            .push(
+                "processed_fraction",
+                format!("{:.2}", proc.msg_rate / prod.msg_rate.max(1e-9)),
+            ),
+    );
+    rec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(preset: CostPreset) -> ExperimentConfig {
+        ExperimentConfig {
+            preset,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig6_produces_full_grid() {
+        let rec = fig6(&cfg(CostPreset::PaperEra));
+        let csv = rec.to_csv();
+        assert_eq!(csv.lines().count(), 1 + 4 * 6, "4 frameworks x 6 sizes");
+        assert!(csv.contains("kafka"));
+        assert!(csv.contains("dask"));
+    }
+
+    #[test]
+    fn fig7_has_all_configs() {
+        let config = cfg(CostPreset::PaperEra);
+        let costs = CostModel::paper_era();
+        let csv = fig7(&config, &costs).to_csv();
+        for c in ["kafka", "spark-0.2s", "spark-8s", "kinesis", "pubsub"] {
+            assert!(csv.contains(c), "missing {c}: {csv}");
+        }
+    }
+
+    #[test]
+    fn fig8_and_fig9_shapes() {
+        let config = cfg(CostPreset::PaperEra);
+        let costs = CostModel::paper_era();
+        let f8 = fig8(&config, &costs).to_csv();
+        assert_eq!(f8.lines().count(), 1 + 3 * 3 * 5);
+        let f9 = fig9(&config, &costs).to_csv();
+        assert_eq!(f9.lines().count(), 1 + 3 * 3 * 4);
+    }
+
+    #[test]
+    fn headline_matches_paper_scale() {
+        let config = cfg(CostPreset::PaperEra);
+        let costs = CostModel::paper_era();
+        let csv = headline(&config, &costs).to_csv();
+        assert!(csv.contains("1536"), "{csv}");
+        // Producer MB/s should be in the paper's ballpark (~390 MB/s).
+        let line = csv.lines().nth(1).unwrap();
+        let mb: f64 = line.split(',').nth(2).unwrap().parse().unwrap();
+        assert!(
+            (250.0..600.0).contains(&mb),
+            "headline producer throughput {mb} MB/s (paper ~390)"
+        );
+    }
+}

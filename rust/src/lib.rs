@@ -1,0 +1,90 @@
+//! # Pilot-Streaming
+//!
+//! A reproduction of *"Pilot-Streaming: A Stream Processing Framework
+//! for High-Performance Computing"* (Luckow, Chantzialexiou, Jha —
+//! HPDC'18) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   Pilot-Job abstraction ([`pilot`]) over a SAGA-like resource
+//!   adaptor ([`saga`]) managing framework plugins ([`plugins`]) on a
+//!   simulated HPC machine ([`cluster`]); a Kafka-like log [`broker`];
+//!   Spark-/Dask-like stream [`engine`]s; the framework-agnostic
+//!   Compute-Unit layer ([`cu`]); and the Streaming Mini-Apps
+//!   ([`miniapp`]: MASS + MASA).
+//! * **L2 (python/compile/model.py)** — the Mini-App compute payloads
+//!   (streaming KMeans, GridRec, ML-EM) as JAX graphs, AOT-lowered to
+//!   HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spots (nearest-centroid assignment, tomographic forward/back
+//!   projection).
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT and executes
+//! them on the request path — Python never runs at serving time.
+//!
+//! Two execution planes (DESIGN.md §4b): the *real plane* moves real
+//! bytes through the broker and runs real XLA compute; the *simulation
+//! plane* ([`sim`]) is a discrete-event model of the paper's Wrangler
+//! testbed, calibrated from real-plane measurements, used by the
+//! experiment harness ([`exp`]) to regenerate every figure of the
+//! paper at 32-node scale on a small host.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pilot_streaming::prelude::*;
+//!
+//! let machine = Machine::wrangler(8);
+//! let service = PilotComputeService::new(machine);
+//! // Paper Listing 2: boot a pilot-managed Kafka cluster.
+//! let (pilot, broker) = service.start_kafka(KafkaDescription::new(2))?;
+//! broker.create_topic("frames", 24)?;
+//! // Paper Listing 4: extend it at runtime.
+//! let extension = service.extend_pilot(&pilot, 2)?;
+//! service.stop_pilot(&extension)?;
+//! service.stop_pilot(&pilot)?;
+//! # Ok::<(), pilot_streaming::Error>(())
+//! ```
+//!
+//! See `examples/` for the end-to-end light-source pipeline, streaming
+//! KMeans, and dynamic scaling under backpressure.
+
+pub mod broker;
+pub mod cluster;
+pub mod config;
+pub mod cu;
+pub mod engine;
+pub mod error;
+pub mod exp;
+pub mod metrics;
+pub mod miniapp;
+pub mod pilot;
+pub mod plugins;
+pub mod runtime;
+pub mod saga;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::broker::{
+        BrokerCluster, Consumer, ConsumerConfig, Producer, ProducerConfig, Record,
+    };
+    pub use crate::cluster::Machine;
+    pub use crate::config::{CostPreset, ExperimentConfig, MachineConfig};
+    pub use crate::cu::{submit_unit, ComputeUnit, ComputeUnitDescription, ComputeUnitState};
+    pub use crate::engine::{
+        BatchProcessor, MicroBatchEngine, StreamingJobConfig, TaskContext, TaskEngine,
+    };
+    pub use crate::error::{Error, Result};
+    pub use crate::miniapp::{
+        MasaApp, MasaConfig, MassConfig, MassSource, ProcessorKind, SourceKind,
+    };
+    pub use crate::pilot::{
+        DaskDescription, FlinkDescription, FrameworkKind, KafkaDescription, Pilot,
+        PilotComputeDescription, PilotComputeService, PilotState, SparkDescription,
+    };
+    pub use crate::runtime::ModelRuntime;
+    pub use crate::sim::CostModel;
+}

@@ -1,0 +1,308 @@
+//! `pilot-streaming` — the coordinator CLI (paper Listing 3).
+//!
+//! ```text
+//! pilot-streaming start --framework kafka --nodes 4     # boot a cluster
+//! pilot-streaming demo  --processor gridrec             # mini pipeline
+//! pilot-streaming exp fig6|fig7|fig8|fig9|table1|headline|all
+//! pilot-streaming calibrate                             # cost model
+//! pilot-streaming artifacts                             # list artifacts
+//! ```
+//!
+//! Argument parsing is hand-rolled (offline environment: no clap in the
+//! vendored dependency set).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::config::{CostPreset, ExperimentConfig};
+use pilot_streaming::exp;
+use pilot_streaming::miniapp::{
+    MasaApp, MasaConfig, MassConfig, MassSource, ProcessorKind, SourceKind,
+};
+use pilot_streaming::pilot::{FrameworkKind, PilotComputeDescription, PilotComputeService};
+use pilot_streaming::runtime::ModelRuntime;
+use pilot_streaming::sim::CostModel;
+use pilot_streaming::{Error, Result};
+
+const USAGE: &str = "\
+pilot-streaming — stream processing framework for HPC (HPDC'18 reproduction)
+
+USAGE:
+  pilot-streaming start --framework <kafka|spark|dask|flink> --nodes <n>
+                        [--machine-nodes <n>] [--extend <n>]
+  pilot-streaming demo  [--processor <kmeans|gridrec|mlem>] [--messages <n>]
+  pilot-streaming exp   <fig6|fig7|fig8|fig9|table1|headline|all>
+                        [--preset <calibrated|paper-era>] [--out <dir>]
+                        [--config <file.json>]
+  pilot-streaming calibrate [--reps <n>]
+  pilot-streaming artifacts
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "start" => cmd_start(&flags),
+        "demo" => cmd_demo(&flags),
+        "exp" => cmd_exp(args.get(1).map(|s| s.as_str()).unwrap_or(""), &flags),
+        "calibrate" => cmd_calibrate(&flags),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}'\n{USAGE}"))),
+    }
+}
+
+/// Boot a pilot-managed framework cluster (paper Listing 2/3).
+fn cmd_start(flags: &HashMap<String, String>) -> Result<()> {
+    let framework =
+        FrameworkKind::parse(flags.get("framework").map(|s| s.as_str()).unwrap_or("spark"))?;
+    let nodes: usize = flags
+        .get("nodes")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let machine_nodes: usize = flags
+        .get("machine-nodes")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or((nodes * 2).max(4));
+    let extend: usize = flags
+        .get("extend")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+
+    let machine = Machine::wrangler(machine_nodes);
+    let service = PilotComputeService::new(machine);
+    println!("submitting pilot: framework={framework} nodes={nodes} (resource slurm://wrangler)");
+    let pilot = service.create_pilot(PilotComputeDescription::new(
+        "slurm://wrangler",
+        framework,
+        nodes,
+    ))?;
+    let s = pilot.startup().expect("running pilot has startup record");
+    println!(
+        "pilot {} RUNNING on nodes {:?}\n  queue wait    {:>8.1} s (modeled)\n  bootstrap     {:>8.1} s (modeled)\n  total startup {:>8.1} s",
+        pilot.id(),
+        pilot.nodes(),
+        s.queue_wait_secs,
+        s.bootstrap_secs,
+        s.total_secs()
+    );
+    for (k, v) in pilot.config_data() {
+        println!("  {k} = {v}");
+    }
+    if extend > 0 {
+        println!("extending by {extend} nodes (paper Listing 4)...");
+        let ext = service.extend_pilot(&pilot, extend)?;
+        println!("extension pilot {} RUNNING on {:?}", ext.id(), ext.nodes());
+        service.stop_pilot(&ext)?;
+        println!("extension stopped; cluster resized back");
+    }
+    service.stop_pilot(&pilot)?;
+    println!("pilot stopped, nodes released");
+    Ok(())
+}
+
+/// Run a small MASS -> Kafka -> MASA pipeline on the real plane.
+fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
+    let kind =
+        ProcessorKind::parse(flags.get("processor").map(|s| s.as_str()).unwrap_or("gridrec"))?;
+    let messages: usize = flags
+        .get("messages")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let runtime = ModelRuntime::load_default()?;
+
+    let machine = Machine::unthrottled(4);
+    let service = PilotComputeService::new(machine);
+    let (kafka_pilot, cluster) =
+        service.start_kafka(pilot_streaming::pilot::KafkaDescription::new(1))?;
+    let (dask_pilot, producers) = service.start_dask(
+        pilot_streaming::pilot::DaskDescription::new(1).with_config("workers_per_node", "2"),
+    )?;
+    let (spark_pilot, engine) = service.start_spark(
+        pilot_streaming::pilot::SparkDescription::new(1).with_config("executors_per_node", "2"),
+    )?;
+    cluster.create_topic("demo", 4)?;
+
+    let source = match kind {
+        ProcessorKind::KMeans => SourceKind::KmeansRandom {
+            n_centroids: runtime.manifest().kmeans.k,
+        },
+        _ => SourceKind::Lightsource {
+            template: std::sync::Arc::new(runtime.read_f32_file("template_sinogram.bin")?),
+        },
+    };
+    let masa = MasaApp::new(
+        MasaConfig::new(kind, "demo", Duration::from_millis(200)),
+        runtime,
+    );
+    println!("warming up XLA executables ({})...", kind.artifact());
+    masa.processor.warmup()?;
+    let job = masa.start(&engine, cluster.clone())?;
+
+    let mut cfg = MassConfig::new(source, "demo");
+    cfg.messages_per_producer = messages.div_ceil(2);
+    let mass = MassSource::new(cfg);
+    println!("producing {messages} messages...");
+    let report = mass.run(&producers, &cluster, 2)?;
+    println!(
+        "produced {} msgs / {:.1} MB at {:.1} msg/s ({:.1} MB/s)",
+        report.messages,
+        report.bytes as f64 / 1e6,
+        report.msg_rate(),
+        report.mb_rate()
+    );
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(300);
+    while job.stats().processed.messages() < report.messages
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let stats = job.stop();
+    println!(
+        "processed {} msgs, exec {:.1} ms/msg (p50), e2e latency p50 {:.3} s",
+        stats.processed.messages(),
+        masa.processor.stats.exec_secs.p50_secs() * 1e3,
+        masa.processor.stats.e2e_latency.p50_secs(),
+    );
+    if kind == ProcessorKind::KMeans {
+        let model = masa.processor.model();
+        println!(
+            "kmeans model: {} updates, inertia {:.1}",
+            model.updates, model.last_inertia
+        );
+    }
+    service.stop_pilot(&spark_pilot)?;
+    service.stop_pilot(&dask_pilot)?;
+    service.stop_pilot(&kafka_pilot)?;
+    Ok(())
+}
+
+/// Regenerate paper tables/figures.
+fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let mut config = match flags.get("config") {
+        Some(path) => ExperimentConfig::from_json_file(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(preset) = flags.get("preset") {
+        config.preset = match preset.as_str() {
+            "paper-era" => CostPreset::PaperEra,
+            "calibrated" => CostPreset::Calibrated,
+            other => return Err(Error::Config(format!("unknown preset '{other}'"))),
+        };
+    }
+    let out_dir = flags.get("out").cloned();
+    let costs = exp::resolve_costs(&config, true);
+
+    let run_one = |id: &str| -> Result<()> {
+        println!("=== {id} (preset: {:?}) ===", config.preset);
+        let rec = match id {
+            "fig6" => exp::fig6(&config),
+            "fig7" => exp::fig7(&config, &costs),
+            "fig8" => exp::fig8(&config, &costs),
+            "fig9" => exp::fig9(&config, &costs),
+            "headline" => exp::headline(&config, &costs),
+            "table1" => {
+                let runtime = ModelRuntime::load_default()?;
+                exp::table1(&runtime)?
+            }
+            other => return Err(Error::Config(format!("unknown experiment '{other}'"))),
+        };
+        println!("{}", rec.to_table());
+        if let Some(dir) = &out_dir {
+            let path = std::path::Path::new(dir).join(format!("{id}.csv"));
+            rec.write_csv(&path)?;
+            println!("wrote {}", path.display());
+        }
+        Ok(())
+    };
+
+    match which {
+        "all" => {
+            for id in ["fig6", "fig7", "fig8", "fig9", "table1", "headline"] {
+                run_one(id)?;
+            }
+            Ok(())
+        }
+        "" => Err(Error::Config(format!("exp: missing experiment id\n{USAGE}"))),
+        id => run_one(id),
+    }
+}
+
+/// Measure the real-plane cost model.
+fn cmd_calibrate(flags: &HashMap<String, String>) -> Result<()> {
+    let reps: usize = flags.get("reps").and_then(|s| s.parse().ok()).unwrap_or(10);
+    let runtime = ModelRuntime::load_default()?;
+    println!("calibrating cost model ({reps} reps per artifact)...");
+    let m = CostModel::calibrate(&runtime, reps)?;
+    println!("gen kmeans-random : {:>10.1} µs/msg", m.gen_random_secs * 1e6);
+    println!("gen kmeans-static : {:>10.1} µs/msg", m.gen_static_secs * 1e6);
+    println!("gen lightsource   : {:>10.1} µs/msg", m.gen_lightsource_secs * 1e6);
+    println!("proc kmeans       : {:>10.2} ms/msg", m.proc_kmeans_secs * 1e3);
+    println!("proc gridrec      : {:>10.2} ms/msg", m.proc_gridrec_secs * 1e3);
+    println!("proc mlem         : {:>10.2} ms/msg", m.proc_mlem_secs * 1e3);
+    Ok(())
+}
+
+/// List loaded artifacts and their signatures.
+fn cmd_artifacts() -> Result<()> {
+    let runtime = ModelRuntime::load_default()?;
+    let m = runtime.manifest();
+    println!(
+        "kmeans: n={} d={} k={} decay={}",
+        m.kmeans.n_points, m.kmeans.dim, m.kmeans.k, m.kmeans.decay
+    );
+    println!(
+        "tomo: angles={} det={} image={}x{} mlem_iters={}",
+        m.tomo.n_angles, m.tomo.n_det, m.tomo.img_h, m.tomo.img_w, m.tomo.mlem_iters
+    );
+    for name in runtime.artifact_names() {
+        let meta = runtime.meta(&name)?;
+        let sig = |sigs: &[pilot_streaming::runtime::TensorSig]| {
+            sigs.iter()
+                .map(|s| format!("{:?}:{}", s.shape, s.dtype))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        println!(
+            "  {name:<14} {} -> {}",
+            sig(&meta.inputs),
+            sig(&meta.outputs)
+        );
+    }
+    Ok(())
+}

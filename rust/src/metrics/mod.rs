@@ -1,0 +1,359 @@
+//! Metrics and profiling probes.
+//!
+//! The Streaming Mini-Apps ship "standard profiling probes ... to measure
+//! common metrics, such as production and consumption rate" (paper §5).
+//! This module provides the probes used across the broker, engines and
+//! Mini-Apps: thread-safe rate meters, log-bucketed latency histograms,
+//! and a CSV experiment recorder used by the figure harnesses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Monotonic message/byte rate meter (thread-safe, lock-free counts).
+#[derive(Debug)]
+pub struct RateMeter {
+    started: Instant,
+    messages: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Default for RateMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RateMeter {
+    pub fn new() -> Self {
+        RateMeter {
+            started: Instant::now(),
+            messages: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one message of `bytes` bytes.
+    pub fn record(&self, bytes: usize) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record `n` messages totalling `bytes` bytes.
+    pub fn record_many(&self, n: u64, bytes: u64) {
+        self.messages.fetch_add(n, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since the meter was created.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Messages per second since creation.
+    pub fn msg_rate(&self) -> f64 {
+        self.messages() as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    /// Megabytes per second since creation.
+    pub fn mb_rate(&self) -> f64 {
+        self.bytes() as f64 / 1e6 / self.elapsed_secs().max(1e-9)
+    }
+}
+
+/// Log-bucketed latency histogram: 1 µs .. ~1 hour, 5% resolution.
+///
+/// Lock-free recording; quantile queries take a snapshot.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+const HIST_BASE_NS: f64 = 1_000.0; // 1 µs
+const HIST_GROWTH: f64 = 1.05;
+const HIST_BUCKETS: usize = 450; // 1.05^450 * 1µs ≈ 3.3e9 µs ≈ 55 min
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_for(ns: u64) -> usize {
+        if ns as f64 <= HIST_BASE_NS {
+            return 0;
+        }
+        let idx = ((ns as f64 / HIST_BASE_NS).ln() / HIST_GROWTH.ln()).floor() as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `i` in nanoseconds.
+    fn bucket_edge_ns(i: usize) -> f64 {
+        HIST_BASE_NS * HIST_GROWTH.powi(i as i32)
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_for(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        self.record_ns((secs.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in seconds.
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Quantile (0.0..=1.0) in seconds, linear within the bucket edge.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target.max(1) {
+                return Self::bucket_edge_ns(i) / 1e9;
+            }
+        }
+        self.max_secs()
+    }
+
+    pub fn p50_secs(&self) -> f64 {
+        self.quantile_secs(0.50)
+    }
+
+    pub fn p99_secs(&self) -> f64 {
+        self.quantile_secs(0.99)
+    }
+}
+
+/// One row of an experiment record: free-form key/value pairs with a
+/// fixed column order, so the harness can emit paper-figure CSVs.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub values: Vec<(String, String)>,
+}
+
+impl Row {
+    pub fn new() -> Self {
+        Row { values: Vec::new() }
+    }
+
+    pub fn push<T: std::fmt::Display>(mut self, key: &str, value: T) -> Self {
+        self.values.push((key.to_string(), value.to_string()));
+        self
+    }
+}
+
+impl Default for Row {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Collects rows and renders CSV and aligned text tables.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    rows: Mutex<Vec<Row>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, row: Row) {
+        self.rows.lock().unwrap().push(row);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.lock().unwrap().is_empty()
+    }
+
+    fn header(rows: &[Row]) -> Vec<String> {
+        let mut cols: Vec<String> = Vec::new();
+        for r in rows {
+            for (k, _) in &r.values {
+                if !cols.contains(k) {
+                    cols.push(k.clone());
+                }
+            }
+        }
+        cols
+    }
+
+    /// Render all rows as CSV (header from union of keys, row order kept).
+    pub fn to_csv(&self) -> String {
+        let rows = self.rows.lock().unwrap();
+        let cols = Self::header(&rows);
+        let mut out = cols.join(",");
+        out.push('\n');
+        for r in rows.iter() {
+            let line: Vec<String> = cols
+                .iter()
+                .map(|c| {
+                    r.values
+                        .iter()
+                        .find(|(k, _)| k == c)
+                        .map(|(_, v)| v.clone())
+                        .unwrap_or_default()
+                })
+                .collect();
+            out.push_str(&line.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as an aligned text table (for terminal output).
+    pub fn to_table(&self) -> String {
+        let rows = self.rows.lock().unwrap();
+        let cols = Self::header(&rows);
+        let mut widths: Vec<usize> = cols.iter().map(|c| c.len()).collect();
+        let cells: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                cols.iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        let v = r
+                            .values
+                            .iter()
+                            .find(|(k, _)| k == c)
+                            .map(|(_, v)| v.clone())
+                            .unwrap_or_default();
+                        widths[i] = widths[i].max(v.len());
+                        v
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut out = String::new();
+        for (i, c) in cols.iter().enumerate() {
+            out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        out.push('\n');
+        for (i, _) in cols.iter().enumerate() {
+            out.push_str(&"-".repeat(widths[i]));
+            out.push_str("  ");
+        }
+        out.push('\n');
+        for row in cells {
+            for (i, v) in row.iter().enumerate() {
+                out.push_str(&format!("{:<w$}  ", v, w = widths[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV to `path`, creating parent directories.
+    pub fn write_csv(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_meter_counts() {
+        let m = RateMeter::new();
+        m.record(100);
+        m.record(200);
+        m.record_many(3, 300);
+        assert_eq!(m.messages(), 5);
+        assert_eq!(m.bytes(), 600);
+        assert!(m.msg_rate() > 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1_000_000); // 1..1000 ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.p50_secs();
+        let p99 = h.p99_secs();
+        assert!(p50 < p99, "p50={p50} p99={p99}");
+        // p50 should land near 0.5 s (5% bucket resolution).
+        assert!((p50 - 0.5).abs() < 0.1, "p50={p50}");
+        assert!((h.mean_secs() - 0.5005).abs() < 0.01);
+        assert!((h.max_secs() - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_secs(0.5), 0.0);
+        assert_eq!(h.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn histogram_extremes_clamp() {
+        let h = Histogram::new();
+        h.record_ns(1); // below base
+        h.record_ns(u64::MAX / 2); // above top bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_secs(1.0) > 0.0);
+    }
+
+    #[test]
+    fn recorder_csv_and_table() {
+        let rec = Recorder::new();
+        rec.add(Row::new().push("nodes", 2).push("secs", 1.5));
+        rec.add(Row::new().push("nodes", 4).push("secs", 2.5).push("extra", "x"));
+        let csv = rec.to_csv();
+        assert!(csv.starts_with("nodes,secs,extra\n"));
+        assert!(csv.contains("2,1.5,\n"));
+        assert!(csv.contains("4,2.5,x\n"));
+        let table = rec.to_table();
+        assert!(table.contains("nodes"));
+    }
+}

@@ -1,0 +1,373 @@
+//! MASA — Mini-App for Streaming Analysis (paper §5).
+//!
+//! "Provides a framework for evaluating different forms of stream data
+//! processing" with pluggable algorithms: streaming KMeans (MLlib
+//! analogue) and light-source reconstruction (TomoPy GridRec / ML-EM
+//! analogues).  Each processor decodes Mini-App messages and executes
+//! the corresponding AOT artifact through the PJRT [`ModelRuntime`] —
+//! the L1/L2 compute plane.  The KMeans processor carries model state
+//! (centroids + weights) across batches and applies the streaming
+//! update after each scored message, matching MLlib's
+//! `StreamingKMeans`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::broker::{BrokerCluster, Record};
+use crate::engine::{BatchProcessor, MicroBatchEngine, StreamingJobConfig, StreamingJobHandle, TaskContext};
+use crate::error::{Error, Result};
+use crate::metrics::{Histogram, RateMeter};
+use crate::runtime::ModelRuntime;
+use crate::util::Rng;
+
+use super::wire::{now_ns, Message, PayloadKind};
+
+/// Processing algorithm kinds (paper §6.4 evaluates exactly these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProcessorKind {
+    /// Streaming KMeans: score + model update per message.
+    KMeans,
+    /// GridRec-style filtered backprojection (fast, direct).
+    GridRec,
+    /// ML-EM iterative reconstruction (slow, higher fidelity).
+    MlEm,
+}
+
+impl ProcessorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProcessorKind::KMeans => "kmeans",
+            ProcessorKind::GridRec => "gridrec",
+            ProcessorKind::MlEm => "mlem",
+        }
+    }
+
+    /// The AOT artifact executed per message.
+    pub fn artifact(self) -> &'static str {
+        match self {
+            ProcessorKind::KMeans => "kmeans_score",
+            ProcessorKind::GridRec => "gridrec",
+            ProcessorKind::MlEm => "mlem",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "kmeans" => Ok(ProcessorKind::KMeans),
+            "gridrec" => Ok(ProcessorKind::GridRec),
+            "mlem" | "ml-em" => Ok(ProcessorKind::MlEm),
+            other => Err(Error::Engine(format!("unknown processor '{other}'"))),
+        }
+    }
+}
+
+/// Streaming KMeans model state.
+#[derive(Debug, Clone)]
+pub struct KmeansModel {
+    pub centroids: Vec<f32>,
+    pub weights: Vec<f32>,
+    pub k: usize,
+    pub dim: usize,
+    /// Cumulative inertia (model-quality probe).
+    pub last_inertia: f32,
+    /// Inertia of the very first scored batch (learning baseline).
+    pub first_inertia: f32,
+    pub updates: u64,
+}
+
+impl KmeansModel {
+    fn random(k: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let mut centroids = vec![0.0f32; k * dim];
+        for c in centroids.iter_mut() {
+            *c = rng.range_f64(-50.0, 50.0) as f32;
+        }
+        KmeansModel {
+            centroids,
+            weights: vec![0.0; k],
+            k,
+            dim,
+            last_inertia: 0.0,
+            first_inertia: 0.0,
+            updates: 0,
+        }
+    }
+}
+
+/// Probe metrics every MASA processor records (paper §5: "standard
+/// profiling probes ... production and consumption rate").
+#[derive(Debug, Default)]
+pub struct ProcessorStats {
+    /// Messages/bytes consumed.
+    pub consumed: RateMeter,
+    /// Per-message XLA execution time.
+    pub exec_secs: Histogram,
+    /// Producer-timestamp -> processing-done latency.
+    pub e2e_latency: Histogram,
+    /// Messages that failed to decode/execute.
+    pub errors: AtomicU64,
+}
+
+/// A MASA processor: decodes messages, runs the artifact, updates state.
+pub struct MasaProcessor {
+    kind: ProcessorKind,
+    runtime: ModelRuntime,
+    model: Mutex<KmeansModel>,
+    pub stats: Arc<ProcessorStats>,
+    /// Last reconstruction output (examples read it for error checks).
+    last_image: Mutex<Vec<f32>>,
+}
+
+impl MasaProcessor {
+    pub fn new(kind: ProcessorKind, runtime: ModelRuntime) -> Arc<Self> {
+        let km = runtime.manifest().kmeans.clone();
+        Arc::new(MasaProcessor {
+            kind,
+            runtime,
+            model: Mutex::new(KmeansModel::random(km.k, km.dim, 7)),
+            stats: Arc::new(ProcessorStats::default()),
+            last_image: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn kind(&self) -> ProcessorKind {
+        self.kind
+    }
+
+    /// Pre-compile the artifacts on the calling thread.
+    pub fn warmup(&self) -> Result<()> {
+        self.runtime.warmup(self.kind.artifact())?;
+        if self.kind == ProcessorKind::KMeans {
+            self.runtime.warmup("kmeans_update")?;
+        }
+        Ok(())
+    }
+
+    /// Current KMeans model snapshot.
+    pub fn model(&self) -> KmeansModel {
+        self.model.lock().unwrap().clone()
+    }
+
+    /// Last reconstructed image (GridRec/MLEM).
+    pub fn last_image(&self) -> Vec<f32> {
+        self.last_image.lock().unwrap().clone()
+    }
+
+    /// Process one decoded message.
+    pub fn process_message(&self, msg: &Message) -> Result<()> {
+        let t0 = Instant::now();
+        match (self.kind, msg.kind) {
+            (ProcessorKind::KMeans, PayloadKind::KmeansPoints) => {
+                let expect = {
+                    let m = self.runtime.manifest();
+                    m.kmeans.n_points * m.kmeans.dim
+                };
+                if msg.values.len() != expect {
+                    return Err(Error::Wire(format!(
+                        "kmeans message has {} values, artifact expects {expect}",
+                        msg.values.len()
+                    )));
+                }
+                // First batch: seed centroids from the data (MLlib's
+                // kmeans|| analogue) — random far-away centers would
+                // leave clusters permanently empty.
+                {
+                    let mut m = self.model.lock().unwrap();
+                    if m.updates == 0 && m.weights.iter().all(|w| *w == 0.0) {
+                        let (k, dim) = (m.k, m.dim);
+                        let n_points = msg.values.len() / dim;
+                        for c in 0..k {
+                            let p = c * n_points / k;
+                            m.centroids[c * dim..(c + 1) * dim]
+                                .copy_from_slice(&msg.values[p * dim..(p + 1) * dim]);
+                        }
+                    }
+                }
+                // Score: assignments + batch statistics (one fused call).
+                let (centroids, weights) = {
+                    let m = self.model.lock().unwrap();
+                    (m.centroids.clone(), m.weights.clone())
+                };
+                let outs = self
+                    .runtime
+                    .execute("kmeans_score", &[&msg.values, &centroids])?;
+                let counts = outs[1].as_f32()?.to_vec();
+                let sums = outs[2].as_f32()?.to_vec();
+                let inertia = outs[3].as_f32()?[0];
+                // Model update (streaming, decayed).
+                let outs = self
+                    .runtime
+                    .execute("kmeans_update", &[&centroids, &weights, &sums, &counts])?;
+                let mut m = self.model.lock().unwrap();
+                m.centroids = outs[0].as_f32()?.to_vec();
+                m.weights = outs[1].as_f32()?.to_vec();
+                m.last_inertia = inertia;
+                if m.updates == 0 {
+                    m.first_inertia = inertia;
+                }
+                m.updates += 1;
+            }
+            (ProcessorKind::GridRec, PayloadKind::Sinogram)
+            | (ProcessorKind::MlEm, PayloadKind::Sinogram) => {
+                let expect = {
+                    let m = self.runtime.manifest();
+                    m.tomo.n_angles * m.tomo.n_det
+                };
+                if msg.values.len() != expect {
+                    return Err(Error::Wire(format!(
+                        "sinogram has {} values, artifact expects {expect}",
+                        msg.values.len()
+                    )));
+                }
+                let outs = self
+                    .runtime
+                    .execute(self.kind.artifact(), &[&msg.values])?;
+                *self.last_image.lock().unwrap() = outs[0].as_f32()?.to_vec();
+            }
+            (kind, payload) => {
+                return Err(Error::Wire(format!(
+                    "processor {kind:?} cannot handle payload {payload:?}"
+                )));
+            }
+        }
+        self.stats.exec_secs.record_secs(t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+}
+
+impl BatchProcessor for MasaProcessor {
+    fn process(&self, _ctx: &TaskContext, records: &[Record]) -> Result<()> {
+        for r in records {
+            match Message::decode(&r.value) {
+                Ok(msg) => {
+                    if let Err(e) = self.process_message(&msg) {
+                        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                        return Err(e);
+                    }
+                    self.stats.consumed.record(r.value.len());
+                    let now = now_ns();
+                    self.stats
+                        .e2e_latency
+                        .record_ns(now.saturating_sub(msg.produced_ns));
+                }
+                Err(e) => {
+                    self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// MASA job configuration.
+#[derive(Debug, Clone)]
+pub struct MasaConfig {
+    pub kind: ProcessorKind,
+    pub topic: String,
+    /// Micro-batch window (paper §6.4: 60 s; examples use shorter).
+    pub window: Duration,
+}
+
+impl MasaConfig {
+    pub fn new(kind: ProcessorKind, topic: &str, window: Duration) -> Self {
+        MasaConfig {
+            kind,
+            topic: topic.to_string(),
+            window,
+        }
+    }
+}
+
+/// The MASA app: wires a processor into a streaming job.
+pub struct MasaApp {
+    pub processor: Arc<MasaProcessor>,
+    config: MasaConfig,
+}
+
+impl MasaApp {
+    pub fn new(config: MasaConfig, runtime: ModelRuntime) -> Self {
+        MasaApp {
+            processor: MasaProcessor::new(config.kind, runtime),
+            config,
+        }
+    }
+
+    /// Start the streaming job on `engine`, consuming from `cluster`.
+    pub fn start(
+        &self,
+        engine: &MicroBatchEngine,
+        cluster: BrokerCluster,
+    ) -> Result<StreamingJobHandle> {
+        let mut job = StreamingJobConfig::new(&self.config.topic, self.config.window);
+        job.group = format!("masa-{}", self.config.kind.name());
+        engine.start_job(cluster, job, self.processor.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<ModelRuntime> {
+        // Artifact-dependent tests are skipped when artifacts are absent
+        // (built by `make artifacts`); the integration suite covers them.
+        ModelRuntime::load_default().ok()
+    }
+
+    #[test]
+    fn kmeans_processor_updates_model() {
+        let Some(rt) = runtime() else { return };
+        let km = rt.manifest().kmeans.clone();
+        let proc = MasaProcessor::new(ProcessorKind::KMeans, rt);
+        let n = km.n_points * km.dim;
+        let mut rng = Rng::seed_from(3);
+        let mut values = vec![0.0f32; n];
+        rng.fill_gauss_f32(&mut values);
+        let before = proc.model();
+        proc.process_message(&Message::new(PayloadKind::KmeansPoints, 0, now_ns(), values))
+            .unwrap();
+        let after = proc.model();
+        assert_eq!(after.updates, before.updates + 1);
+        assert!(after.weights.iter().sum::<f32>() > 0.0);
+        assert_ne!(after.centroids, before.centroids);
+        assert!(after.last_inertia > 0.0);
+    }
+
+    #[test]
+    fn gridrec_processor_reconstructs_template() {
+        let Some(rt) = runtime() else { return };
+        let tomo = rt.manifest().tomo.clone();
+        let sino = rt.read_f32_file("template_sinogram.bin").unwrap();
+        let phantom = rt.read_f32_file("phantom.bin").unwrap();
+        let proc = MasaProcessor::new(ProcessorKind::GridRec, rt);
+        proc.process_message(&Message::new(PayloadKind::Sinogram, 0, now_ns(), sino))
+            .unwrap();
+        let img = proc.last_image();
+        assert_eq!(img.len(), tomo.img_h * tomo.img_w);
+        // Central-region RMSE vs the phantom must be small (FBP quality).
+        let (h, w) = (tomo.img_h, tomo.img_w);
+        let mut se = 0.0f64;
+        let mut n = 0usize;
+        for i in 16..h - 16 {
+            for j in 16..w - 16 {
+                let d = (img[i * w + j] - phantom[i * w + j]) as f64;
+                se += d * d;
+                n += 1;
+            }
+        }
+        let rmse = (se / n as f64).sqrt();
+        assert!(rmse < 0.12, "gridrec rmse {rmse}");
+    }
+
+    #[test]
+    fn wrong_payload_kind_is_rejected() {
+        let Some(rt) = runtime() else { return };
+        let proc = MasaProcessor::new(ProcessorKind::GridRec, rt);
+        let msg = Message::new(PayloadKind::KmeansPoints, 0, 0, vec![0.0; 30]);
+        assert!(proc.process_message(&msg).is_err());
+        assert!(ProcessorKind::parse("gridrec").is_ok());
+        assert!(ProcessorKind::parse("storm").is_err());
+    }
+}

@@ -1,0 +1,389 @@
+//! MASS — Mini-App for Stream Source (paper §5).
+//!
+//! Emulates streaming data sources with pluggable production functions:
+//!
+//! * `cluster` source — "generates random data points following certain
+//!   structures ... for evaluation of streaming cluster analysis
+//!   algorithms" → [`SourceKind::KmeansRandom`];
+//! * a static variant of the same message (the paper's KMeans-static
+//!   scenario, §6.3) → [`SourceKind::KmeansStatic`];
+//! * `template` source — "produces an unbounded stream based on a
+//!   static template dataset ... can be used to emulate important
+//!   applications, such as light sources" → [`SourceKind::Lightsource`].
+//!
+//! Producers run as tasks on a Dask-like [`TaskEngine`] (the paper runs
+//! "8 producer processes in Dask" per node), each with its own RNG
+//! stream and a PyKafka-style batching [`Producer`].
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::broker::{BrokerCluster, Producer, ProducerConfig};
+use crate::config::messages;
+use crate::engine::TaskEngine;
+use crate::error::Result;
+use crate::metrics::RateMeter;
+use crate::util::Rng;
+
+use super::wire::{now_ns, Message, PayloadKind};
+
+/// Data production function kinds.
+#[derive(Debug, Clone)]
+pub enum SourceKind {
+    /// Random 3-D points around `n_centroids` cluster centers (fresh
+    /// RNG draw per message — the paper's RNG-bound scenario).
+    KmeansRandom { n_centroids: usize },
+    /// The same message payload reused every send (paper: "produces a
+    /// static message at a configured rate", 1.6x faster than random).
+    KmeansStatic,
+    /// APS-format light-source frame from a template sinogram.
+    Lightsource { template: Arc<Vec<f32>> },
+}
+
+impl SourceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SourceKind::KmeansRandom { .. } => "kmeans-random",
+            SourceKind::KmeansStatic => "kmeans-static",
+            SourceKind::Lightsource { .. } => "lightsource",
+        }
+    }
+
+    pub fn payload_kind(&self) -> PayloadKind {
+        match self {
+            SourceKind::Lightsource { .. } => PayloadKind::Sinogram,
+            _ => PayloadKind::KmeansPoints,
+        }
+    }
+
+    pub fn target_bytes(&self) -> usize {
+        match self {
+            SourceKind::Lightsource { .. } => messages::LIGHTSOURCE_MSG_BYTES,
+            _ => messages::KMEANS_MSG_BYTES,
+        }
+    }
+}
+
+/// MASS configuration (paper: "data rates, message sizes etc. can be
+/// controlled via simple configuration options").
+#[derive(Debug, Clone)]
+pub struct MassConfig {
+    pub source: SourceKind,
+    pub topic: String,
+    /// Points per KMeans message (paper: 5,000).
+    pub points_per_msg: usize,
+    pub point_dim: usize,
+    /// Messages each producer sends.
+    pub messages_per_producer: usize,
+    /// Optional per-producer rate limit (messages/sec) — Fig 7 uses a
+    /// fixed 100 msg/s aggregate rate.
+    pub rate_limit: Option<f64>,
+    /// Override the padded message size (None = paper defaults).
+    pub target_msg_bytes: Option<usize>,
+    pub seed: u64,
+}
+
+impl MassConfig {
+    pub fn new(source: SourceKind, topic: &str) -> Self {
+        MassConfig {
+            source,
+            topic: topic.to_string(),
+            points_per_msg: 5000,
+            point_dim: 3,
+            messages_per_producer: 100,
+            rate_limit: None,
+            target_msg_bytes: None,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregate production report.
+#[derive(Debug, Clone)]
+pub struct MassReport {
+    pub messages: u64,
+    pub bytes: u64,
+    pub elapsed_secs: f64,
+    pub producers: usize,
+}
+
+impl MassReport {
+    pub fn msg_rate(&self) -> f64 {
+        self.messages as f64 / self.elapsed_secs.max(1e-9)
+    }
+
+    pub fn mb_rate(&self) -> f64 {
+        self.bytes as f64 / 1e6 / self.elapsed_secs.max(1e-9)
+    }
+}
+
+/// One producer's generation state (public so the simulation plane can
+/// calibrate real generation costs from the same code path).
+pub struct PayloadGenerator {
+    kind: SourceKind,
+    rng: Rng,
+    points_per_msg: usize,
+    dim: usize,
+    /// Cluster centers for the random source.
+    centers: Vec<f32>,
+    /// Cached payload for static/template sources.
+    cached: Option<Vec<f32>>,
+}
+
+impl PayloadGenerator {
+    pub fn new(config: &MassConfig, stream: u64) -> Self {
+        let mut rng = Rng::seed_from(config.seed).fork(stream);
+        let (centers, cached) = match &config.source {
+            SourceKind::KmeansRandom { n_centroids } => {
+                // Cluster centers depend only on the experiment seed, so
+                // every producer process emulates the *same* underlying
+                // cluster structure (one ground truth per experiment);
+                // the per-point noise comes from the forked stream.
+                let mut center_rng = Rng::seed_from(config.seed);
+                let mut centers = vec![0.0f32; n_centroids * config.point_dim];
+                for c in centers.iter_mut() {
+                    *c = center_rng.range_f64(-50.0, 50.0) as f32;
+                }
+                (centers, None)
+            }
+            SourceKind::KmeansStatic => {
+                let mut payload = vec![0.0f32; config.points_per_msg * config.point_dim];
+                rng.fill_gauss_f32(&mut payload);
+                (Vec::new(), Some(payload))
+            }
+            SourceKind::Lightsource { template } => (Vec::new(), Some((**template).clone())),
+        };
+        PayloadGenerator {
+            kind: config.source.clone(),
+            rng,
+            points_per_msg: config.points_per_msg,
+            dim: config.point_dim,
+            centers,
+            cached,
+        }
+    }
+
+    /// Produce the payload values for one message.
+    pub fn generate(&mut self) -> Vec<f32> {
+        match &self.kind {
+            SourceKind::KmeansRandom { n_centroids } => {
+                let mut out = vec![0.0f32; self.points_per_msg * self.dim];
+                for p in 0..self.points_per_msg {
+                    let c = self.rng.below(*n_centroids);
+                    for d in 0..self.dim {
+                        out[p * self.dim + d] = self.centers[c * self.dim + d]
+                            + 0.5 * self.rng.gauss() as f32;
+                    }
+                }
+                out
+            }
+            SourceKind::KmeansStatic | SourceKind::Lightsource { .. } => {
+                self.cached.as_ref().expect("cached payload").clone()
+            }
+        }
+    }
+}
+
+/// The MASS app: drives producers on a task engine.
+pub struct MassSource {
+    config: MassConfig,
+    pub metrics: Arc<RateMeter>,
+}
+
+impl MassSource {
+    pub fn new(config: MassConfig) -> Self {
+        MassSource {
+            config,
+            metrics: Arc::new(RateMeter::new()),
+        }
+    }
+
+    pub fn config(&self) -> &MassConfig {
+        &self.config
+    }
+
+    /// Run `producers` producer tasks on `engine`, each sending
+    /// `messages_per_producer` messages to `cluster`.  Blocks until all
+    /// producers finish; returns the aggregate report.
+    pub fn run(
+        &self,
+        engine: &TaskEngine,
+        cluster: &BrokerCluster,
+        producers: usize,
+    ) -> Result<MassReport> {
+        let start = Instant::now();
+        let mut futures = Vec::with_capacity(producers);
+        for i in 0..producers {
+            let config = self.config.clone();
+            let cluster = cluster.clone();
+            let metrics = self.metrics.clone();
+            futures.push(engine.submit(move |node| -> Result<(u64, u64)> {
+                let mut generator = PayloadGenerator::new(&config, i as u64 + 1);
+                let mut producer = Producer::new(
+                    cluster,
+                    &config.topic,
+                    node,
+                    ProducerConfig {
+                        // PyKafka-style: flush each ~message (they're big).
+                        batch_bytes: 1,
+                        ..Default::default()
+                    },
+                )?;
+                let target = config
+                    .target_msg_bytes
+                    .unwrap_or_else(|| config.source.target_bytes());
+                let interval = config.rate_limit.map(|r| Duration::from_secs_f64(1.0 / r));
+                let mut sent = (0u64, 0u64);
+                let t0 = Instant::now();
+                for seq in 0..config.messages_per_producer {
+                    if let Some(iv) = interval {
+                        // Pace to the configured rate.
+                        let due = iv * seq as u32;
+                        let elapsed = t0.elapsed();
+                        if due > elapsed {
+                            std::thread::sleep(due - elapsed);
+                        }
+                    }
+                    let values = generator.generate();
+                    let msg = Message::new(
+                        config.source.payload_kind(),
+                        seq as u64,
+                        now_ns(),
+                        values,
+                    );
+                    let bytes = msg.encode(target);
+                    let n = bytes.len();
+                    producer.send(None, bytes)?;
+                    metrics.record(n);
+                    sent.0 += 1;
+                    sent.1 += n as u64;
+                }
+                producer.flush()?;
+                Ok(sent)
+            })?);
+        }
+        let mut messages = 0;
+        let mut bytes = 0;
+        for f in futures {
+            let (m, b) = f.wait()??;
+            messages += m;
+            bytes += b;
+        }
+        Ok(MassReport {
+            messages,
+            bytes,
+            elapsed_secs: start.elapsed().as_secs_f64(),
+            producers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+
+    fn setup() -> (Machine, BrokerCluster, TaskEngine) {
+        let m = Machine::unthrottled(3);
+        let c = BrokerCluster::new(m.clone(), vec![0]);
+        c.create_topic("t", 3).unwrap();
+        let e = TaskEngine::new(m.clone(), vec![1, 2], 2);
+        (m, c, e)
+    }
+
+    fn small(source: SourceKind) -> MassConfig {
+        let mut cfg = MassConfig::new(source, "t");
+        cfg.points_per_msg = 100;
+        cfg.messages_per_producer = 5;
+        cfg.target_msg_bytes = Some(0); // no padding in unit tests
+        cfg
+    }
+
+    #[test]
+    fn produces_expected_message_count() {
+        let (_m, c, e) = setup();
+        let mass = MassSource::new(small(SourceKind::KmeansRandom { n_centroids: 4 }));
+        let report = mass.run(&e, &c, 3).unwrap();
+        assert_eq!(report.messages, 15);
+        let total: u64 = (0..3).map(|p| c.end_offset("t", p).unwrap()).sum();
+        assert_eq!(total, 15, "all messages landed in the broker");
+        assert!(report.msg_rate() > 0.0);
+        e.stop();
+    }
+
+    #[test]
+    fn random_messages_decode_with_right_shape() {
+        let (_m, c, e) = setup();
+        let mass = MassSource::new(small(SourceKind::KmeansRandom { n_centroids: 2 }));
+        mass.run(&e, &c, 1).unwrap();
+        let recs = c
+            .fetch("t", 0, 0, usize::MAX, 1, Duration::from_millis(100))
+            .unwrap();
+        assert!(!recs.is_empty());
+        let msg = Message::decode(&recs[0].value).unwrap();
+        assert_eq!(msg.kind, PayloadKind::KmeansPoints);
+        assert_eq!(msg.values.len(), 100 * 3);
+        e.stop();
+    }
+
+    #[test]
+    fn static_source_repeats_payload() {
+        let (_m, c, e) = setup();
+        let mut cfg = small(SourceKind::KmeansStatic);
+        cfg.messages_per_producer = 2;
+        let mass = MassSource::new(cfg);
+        mass.run(&e, &c, 1).unwrap();
+        let mut all = Vec::new();
+        for p in 0..3 {
+            all.extend(
+                c.fetch("t", p, 0, usize::MAX, 1, Duration::from_millis(50))
+                    .unwrap(),
+            );
+        }
+        assert_eq!(all.len(), 2);
+        let a = Message::decode(&all[0].value).unwrap();
+        let b = Message::decode(&all[1].value).unwrap();
+        assert_eq!(a.values, b.values, "static payload identical");
+        e.stop();
+    }
+
+    #[test]
+    fn template_source_round_trips_sinogram() {
+        let (_m, c, e) = setup();
+        let template = Arc::new(vec![1.5f32; 96]);
+        let mut cfg = small(SourceKind::Lightsource { template });
+        cfg.messages_per_producer = 1;
+        let mass = MassSource::new(cfg);
+        mass.run(&e, &c, 1).unwrap();
+        let mut found = None;
+        for p in 0..3 {
+            let recs = c
+                .fetch("t", p, 0, usize::MAX, 1, Duration::from_millis(50))
+                .unwrap();
+            if !recs.is_empty() {
+                found = Some(recs[0].clone());
+            }
+        }
+        let msg = Message::decode(&found.unwrap().value).unwrap();
+        assert_eq!(msg.kind, PayloadKind::Sinogram);
+        assert_eq!(msg.values, vec![1.5f32; 96]);
+        e.stop();
+    }
+
+    #[test]
+    fn rate_limit_paces_production() {
+        let (_m, c, e) = setup();
+        let mut cfg = small(SourceKind::KmeansStatic);
+        cfg.messages_per_producer = 5;
+        cfg.rate_limit = Some(50.0); // 5 msgs at 50/s => >= 80 ms
+        let mass = MassSource::new(cfg);
+        let report = mass.run(&e, &c, 1).unwrap();
+        assert!(
+            report.elapsed_secs >= 0.07,
+            "rate limiting too fast: {}",
+            report.elapsed_secs
+        );
+        let _ = c;
+        e.stop();
+    }
+}

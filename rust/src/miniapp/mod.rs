@@ -1,0 +1,24 @@
+//! The Streaming Mini-App framework (paper §5).
+//!
+//! "The core of the framework consists of two main components: (i) the
+//! MASS (Mini-App for Stream Source) can emulate a streaming data
+//! source ... (ii) the MASA (Mini-App for Streaming Analysis) provides
+//! a framework for evaluating different forms of stream data
+//! processing."
+//!
+//! * [`wire`] — the message framing both apps share (payload sizes
+//!   padded to the paper's 0.32 MB / 2 MB workloads);
+//! * [`mass`] — pluggable data-production functions (`cluster` random
+//!   source, static source, light-source `template` source) driven by
+//!   Dask-like producer tasks;
+//! * [`masa`] — pluggable processors (streaming KMeans, GridRec, ML-EM)
+//!   running on the Spark-like micro-batch engine, executing the AOT
+//!   compute artifacts through PJRT.
+
+pub mod masa;
+pub mod mass;
+pub mod wire;
+
+pub use masa::{KmeansModel, MasaApp, MasaConfig, MasaProcessor, ProcessorKind, ProcessorStats};
+pub use mass::{MassConfig, MassReport, MassSource, SourceKind};
+pub use wire::{Message, PayloadKind};

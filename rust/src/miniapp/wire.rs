@@ -1,0 +1,173 @@
+//! Wire format for Mini-App messages.
+//!
+//! The paper's MASS app serializes batches of points (PyKafka strings,
+//! ~0.32 MB for 5,000 3-D points) and APS-format light-source frames
+//! (~2 MB).  We use a compact binary framing and *pad* each message to
+//! the paper's serialized sizes, so the broker and network layers see
+//! byte volumes identical to the paper's workloads while the compute
+//! layer reads exactly the f32 tensor it needs:
+//!
+//! ```text
+//! | magic "PSMA" | ver u8 | type u8 | seq u64 | produced_ns u64 |
+//! | n_values u32 | pad u32 | values f32-LE ... | zero padding ... |
+//! ```
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"PSMA";
+const VERSION: u8 = 1;
+const HEADER_LEN: usize = 4 + 1 + 1 + 8 + 8 + 4 + 4;
+
+/// Message payload kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// A mini-batch of KMeans points (`n_points * dim` f32 values).
+    KmeansPoints = 1,
+    /// One light-source sinogram (`n_angles * n_det` f32 values).
+    Sinogram = 2,
+}
+
+impl PayloadKind {
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            1 => Ok(PayloadKind::KmeansPoints),
+            2 => Ok(PayloadKind::Sinogram),
+            other => Err(Error::Wire(format!("unknown payload kind {other}"))),
+        }
+    }
+}
+
+/// A decoded Mini-App message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub kind: PayloadKind,
+    /// Producer-assigned sequence number.
+    pub seq: u64,
+    /// Producer wall-clock timestamp (ns) for end-to-end latency probes.
+    pub produced_ns: u64,
+    /// The f32 tensor payload.
+    pub values: Vec<f32>,
+}
+
+impl Message {
+    pub fn new(kind: PayloadKind, seq: u64, produced_ns: u64, values: Vec<f32>) -> Self {
+        Message {
+            kind,
+            seq,
+            produced_ns,
+            values,
+        }
+    }
+
+    /// Encoded size without padding.
+    pub fn natural_size(&self) -> usize {
+        HEADER_LEN + self.values.len() * 4
+    }
+
+    /// Encode, padding with zeros up to `target_bytes` (if larger than
+    /// the natural size).  Padding models the paper's verbose
+    /// serialization formats (PyKafka strings / raw APS frames).
+    pub fn encode(&self, target_bytes: usize) -> Vec<u8> {
+        let natural = self.natural_size();
+        let total = natural.max(target_bytes);
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        out.push(self.kind as u8);
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.produced_ns.to_le_bytes());
+        out.extend_from_slice(&(self.values.len() as u32).to_le_bytes());
+        out.extend_from_slice(&((total - natural) as u32).to_le_bytes());
+        for v in &self.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.resize(total, 0);
+        out
+    }
+
+    /// Decode from bytes (padding ignored).
+    pub fn decode(bytes: &[u8]) -> Result<Message> {
+        if bytes.len() < HEADER_LEN {
+            return Err(Error::Wire(format!("short message: {} bytes", bytes.len())));
+        }
+        if &bytes[0..4] != MAGIC {
+            return Err(Error::Wire("bad magic".into()));
+        }
+        if bytes[4] != VERSION {
+            return Err(Error::Wire(format!("unsupported version {}", bytes[4])));
+        }
+        let kind = PayloadKind::from_u8(bytes[5])?;
+        let seq = u64::from_le_bytes(bytes[6..14].try_into().unwrap());
+        let produced_ns = u64::from_le_bytes(bytes[14..22].try_into().unwrap());
+        let n_values = u32::from_le_bytes(bytes[22..26].try_into().unwrap()) as usize;
+        let need = HEADER_LEN + n_values * 4;
+        if bytes.len() < need {
+            return Err(Error::Wire(format!(
+                "truncated payload: {} < {}",
+                bytes.len(),
+                need
+            )));
+        }
+        let values = bytes[HEADER_LEN..need]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Message {
+            kind,
+            seq,
+            produced_ns,
+            values,
+        })
+    }
+}
+
+/// Wall-clock ns helper shared by producers/probes.
+pub fn now_ns() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_without_padding() {
+        let m = Message::new(PayloadKind::KmeansPoints, 7, 123, vec![1.0, -2.5, 3.25]);
+        let bytes = m.encode(0);
+        assert_eq!(bytes.len(), m.natural_size());
+        assert_eq!(Message::decode(&bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn roundtrip_with_padding_to_paper_sizes() {
+        // KMeans: 5000x3 f32 padded to 0.32 MB.
+        let values = vec![0.5f32; 15000];
+        let m = Message::new(PayloadKind::KmeansPoints, 1, 9, values);
+        let bytes = m.encode(crate::config::messages::KMEANS_MSG_BYTES);
+        assert_eq!(bytes.len(), 320_000);
+        let back = Message::decode(&bytes).unwrap();
+        assert_eq!(back.values.len(), 15000);
+        // Light source: 96x192 sinogram padded to 2 MB.
+        let m = Message::new(PayloadKind::Sinogram, 2, 9, vec![1.0f32; 96 * 192]);
+        let bytes = m.encode(crate::config::messages::LIGHTSOURCE_MSG_BYTES);
+        assert_eq!(bytes.len(), 2_000_000);
+        assert_eq!(Message::decode(&bytes).unwrap().values.len(), 96 * 192);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Message::decode(b"tiny").is_err());
+        let m = Message::new(PayloadKind::Sinogram, 0, 0, vec![1.0; 4]);
+        let mut bytes = m.encode(0);
+        bytes[0] = b'X';
+        assert!(Message::decode(&bytes).is_err(), "bad magic");
+        let mut bytes = m.encode(0);
+        bytes[5] = 99;
+        assert!(Message::decode(&bytes).is_err(), "bad kind");
+        let bytes = m.encode(0);
+        assert!(Message::decode(&bytes[..bytes.len() - 2]).is_err(), "truncated");
+    }
+}

@@ -1,0 +1,210 @@
+//! Pilot-Compute-Descriptions (paper Listing 2).
+//!
+//! A description is a simple key/value-style record naming the resource,
+//! the node count, the framework type, and optionally a *parent pilot*
+//! — referencing a parent marks this pilot as an extension that adds
+//! its nodes to the parent's framework cluster (paper Listing 4).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Stream-framework kinds Pilot-Streaming can provision (paper §4.3:
+/// "Currently, Pilot-Streaming supports Kafka, Spark, Dask, and Flink").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FrameworkKind {
+    Kafka,
+    Spark,
+    Dask,
+    Flink,
+}
+
+impl FrameworkKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameworkKind::Kafka => "kafka",
+            FrameworkKind::Spark => "spark",
+            FrameworkKind::Dask => "dask",
+            FrameworkKind::Flink => "flink",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "kafka" => Ok(FrameworkKind::Kafka),
+            "spark" => Ok(FrameworkKind::Spark),
+            "dask" => Ok(FrameworkKind::Dask),
+            "flink" => Ok(FrameworkKind::Flink),
+            other => Err(Error::Pilot(format!("unknown framework '{other}'"))),
+        }
+    }
+}
+
+impl std::fmt::Display for FrameworkKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// The paper's `pilot_compute_description` dictionary, typed.
+#[derive(Debug, Clone)]
+pub struct PilotComputeDescription {
+    /// Resource URL, e.g. `slurm://wrangler` or `local://localhost`.
+    pub resource: String,
+    pub working_directory: String,
+    pub number_of_nodes: usize,
+    pub cores_per_node: usize,
+    pub framework: FrameworkKind,
+    /// Extension pilots reference their parent (Listing 4:
+    /// `pilot_compute_description['parent'] = parent_pilot_id`).
+    pub parent_pilot: Option<String>,
+    /// Walltime request, minutes.
+    pub walltime_minutes: u64,
+    /// Framework-native extra configuration (spark-env style knobs).
+    pub config: BTreeMap<String, String>,
+}
+
+impl PilotComputeDescription {
+    pub fn new(resource: &str, framework: FrameworkKind, nodes: usize) -> Self {
+        PilotComputeDescription {
+            resource: resource.to_string(),
+            working_directory: "/tmp/pilot-streaming".into(),
+            number_of_nodes: nodes,
+            cores_per_node: 24,
+            framework,
+            parent_pilot: None,
+            walltime_minutes: 59,
+            config: BTreeMap::new(),
+        }
+    }
+
+    /// Mark as an extension of `parent` (dynamic scaling, Listing 4).
+    pub fn with_parent(mut self, parent: &str) -> Self {
+        self.parent_pilot = Some(parent.to_string());
+        self
+    }
+
+    pub fn with_config(mut self, key: &str, value: &str) -> Self {
+        self.config.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    /// Scheme part of the resource URL ("slurm", "local", ...).
+    pub fn scheme(&self) -> &str {
+        self.resource.split("://").next().unwrap_or("local")
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.number_of_nodes == 0 {
+            return Err(Error::Pilot("number_of_nodes must be > 0".into()));
+        }
+        if self.resource.is_empty() {
+            return Err(Error::Pilot("resource must not be empty".into()));
+        }
+        Ok(())
+    }
+}
+
+macro_rules! framework_description {
+    ($(#[$doc:meta])* $name:ident, $kind:expr) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone)]
+        pub struct $name(pub PilotComputeDescription);
+
+        impl $name {
+            /// Description for `nodes` nodes on the default resource.
+            pub fn new(nodes: usize) -> Self {
+                $name(PilotComputeDescription::new(
+                    "slurm://wrangler",
+                    $kind,
+                    nodes,
+                ))
+            }
+
+            pub fn on(resource: &str, nodes: usize) -> Self {
+                $name(PilotComputeDescription::new(resource, $kind, nodes))
+            }
+
+            pub fn with_parent(mut self, parent: &str) -> Self {
+                self.0 = self.0.with_parent(parent);
+                self
+            }
+
+            pub fn with_config(mut self, key: &str, value: &str) -> Self {
+                self.0 = self.0.with_config(key, value);
+                self
+            }
+        }
+
+        impl From<$name> for PilotComputeDescription {
+            fn from(d: $name) -> Self {
+                d.0
+            }
+        }
+    };
+}
+
+framework_description!(
+    /// Convenience description for a pilot-managed Kafka cluster.
+    KafkaDescription,
+    FrameworkKind::Kafka
+);
+framework_description!(
+    /// Convenience description for a pilot-managed Spark(-like) cluster.
+    SparkDescription,
+    FrameworkKind::Spark
+);
+framework_description!(
+    /// Convenience description for a pilot-managed Dask(-like) cluster.
+    DaskDescription,
+    FrameworkKind::Dask
+);
+framework_description!(
+    /// Convenience description for a pilot-managed Flink cluster.
+    FlinkDescription,
+    FrameworkKind::Flink
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn framework_parse_roundtrip() {
+        for k in [
+            FrameworkKind::Kafka,
+            FrameworkKind::Spark,
+            FrameworkKind::Dask,
+            FrameworkKind::Flink,
+        ] {
+            assert_eq!(FrameworkKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(FrameworkKind::parse("storm").is_err());
+    }
+
+    #[test]
+    fn description_builder() {
+        let d = SparkDescription::new(4)
+            .with_config("spark.executor.memory", "32g")
+            .with_parent("pilot-1");
+        let pcd: PilotComputeDescription = d.into();
+        assert_eq!(pcd.framework, FrameworkKind::Spark);
+        assert_eq!(pcd.number_of_nodes, 4);
+        assert_eq!(pcd.parent_pilot.as_deref(), Some("pilot-1"));
+        assert_eq!(
+            pcd.config.get("spark.executor.memory").map(|s| s.as_str()),
+            Some("32g")
+        );
+        assert_eq!(pcd.scheme(), "slurm");
+        pcd.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_empty() {
+        let mut pcd = PilotComputeDescription::new("local://x", FrameworkKind::Dask, 0);
+        assert!(pcd.validate().is_err());
+        pcd.number_of_nodes = 1;
+        pcd.resource.clear();
+        assert!(pcd.validate().is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The Pilot abstraction (paper §4): descriptions, state machine,
+//! plugin SPI and the Pilot-Compute service.
+//!
+//! A Pilot-Job is "a placeholder job providing multi-level scheduling
+//! ... application-level control over the system scheduler" [P* model].
+//! Pilot-Streaming extends it to provision *frameworks* (Kafka, Spark,
+//! Dask, Flink) inside the placeholder allocation and to scale them at
+//! runtime by chaining additional pilots to a parent (paper Listing 4).
+
+pub mod description;
+pub mod plugin;
+pub mod service;
+pub mod state;
+
+pub use description::{
+    DaskDescription, FlinkDescription, FrameworkKind, KafkaDescription, PilotComputeDescription,
+    SparkDescription,
+};
+pub use plugin::{FrameworkContext, ManagerPlugin, PluginEnv};
+pub use service::{Pilot, PilotComputeService, StartupBreakdown};
+pub use state::PilotState;

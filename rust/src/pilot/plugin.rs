@@ -1,0 +1,86 @@
+//! Framework plugin SPI (paper Listing 1).
+//!
+//! "The streaming frameworks specifics are encapsulated in a plugin.  A
+//! framework plugin comprises of a PluginManager implementation of a
+//! simple service provider interface (SPI) and a bootstrap script
+//! executed on the resource."  The interface below mirrors the paper's
+//! six functions: `submit_job`, `wait`, `extend`, `get_context`,
+//! `get_config_data` (construction takes the description, as in the
+//! paper's `__init__`).
+
+use std::collections::BTreeMap;
+
+use crate::broker::BrokerCluster;
+use crate::cluster::{Machine, NodeId};
+use crate::config::BootstrapModel;
+use crate::engine::{MicroBatchEngine, TaskEngine};
+use crate::error::Result;
+
+use super::description::PilotComputeDescription;
+
+/// Everything a plugin needs to bootstrap on the allocated resource.
+pub struct PluginEnv {
+    pub machine: Machine,
+    /// Nodes granted to this pilot.
+    pub nodes: Vec<NodeId>,
+    pub description: PilotComputeDescription,
+}
+
+/// The native framework handle a plugin exposes once running — the
+/// paper's *context object* ("the native client application, i.e., the
+/// Spark Context, Dask Client or Kafka Client object", Listing 6).
+#[derive(Clone, Debug)]
+pub enum FrameworkContext {
+    /// Kafka: the broker cluster client.
+    Kafka(BrokerCluster),
+    /// Spark(-like): micro-batch engine handle.
+    MicroBatch(MicroBatchEngine),
+    /// Dask(-like) and Flink(-like): task engine handle.
+    TaskPar(TaskEngine),
+}
+
+impl FrameworkContext {
+    pub fn as_kafka(&self) -> Option<&BrokerCluster> {
+        match self {
+            FrameworkContext::Kafka(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn as_microbatch(&self) -> Option<&MicroBatchEngine> {
+        match self {
+            FrameworkContext::MicroBatch(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    pub fn as_taskpar(&self) -> Option<&TaskEngine> {
+        match self {
+            FrameworkContext::TaskPar(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// The plugin SPI (paper Listing 1: `ManagerPlugin`).
+pub trait ManagerPlugin: Send {
+    /// Launch the framework on the pilot's nodes (the bootstrap script).
+    fn submit_job(&mut self, env: &PluginEnv) -> Result<()>;
+
+    /// Block until the framework is up; returns the modeled bootstrap
+    /// duration in (virtual) seconds — recorded for Figure 6.
+    fn wait(&mut self) -> Result<f64>;
+
+    /// Add nodes to the running framework (pilot extension).
+    fn extend(&mut self, env: &PluginEnv, new_nodes: &[NodeId]) -> Result<()>;
+
+    /// The native framework context (paper Listing 6).
+    fn get_context(&self) -> Result<FrameworkContext>;
+
+    /// Framework configuration data (connection endpoints etc.).
+    fn get_config_data(&self) -> BTreeMap<String, String>;
+
+    /// The bootstrap cost model this plugin uses (exposed so the
+    /// simulation plane and Figure 6 share one source of truth).
+    fn bootstrap_model(&self) -> BootstrapModel;
+}

@@ -1,0 +1,501 @@
+//! The Pilot-Compute service: pilot lifecycle, extension, shrinking.
+//!
+//! This is the coordinator's control plane (paper Figure 4): the
+//! application asks the service for a pilot with a
+//! [`PilotComputeDescription`]; the service submits a placeholder job
+//! through the SAGA adaptor, waits out the queue, allocates whole nodes
+//! on the machine, bootstraps the framework plugin (the PS-Agent role)
+//! and hands back a [`Pilot`] whose context object exposes the native
+//! framework client.
+//!
+//! Dynamic scaling (paper Listing 4): creating a description that
+//! references a *parent pilot* produces an extension pilot — its nodes
+//! are added to the parent's framework at runtime; stopping the
+//! extension shrinks the framework back and releases the nodes.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::{Machine, NodeId};
+use crate::error::{Error, Result};
+use crate::plugins::create_plugin;
+use crate::saga::{JobDescription, LocalAdaptor, ResourceAdaptor, SimSlurmAdaptor};
+
+use super::description::{
+    DaskDescription, KafkaDescription, PilotComputeDescription, SparkDescription,
+};
+use super::plugin::{FrameworkContext, ManagerPlugin, PluginEnv};
+use super::state::PilotState;
+
+/// Startup time decomposition (the two bars of Figure 6: batch-job
+/// placement vs framework initialization).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StartupBreakdown {
+    pub queue_wait_secs: f64,
+    pub bootstrap_secs: f64,
+}
+
+impl StartupBreakdown {
+    pub fn total_secs(&self) -> f64 {
+        self.queue_wait_secs + self.bootstrap_secs
+    }
+}
+
+/// A live pilot.
+pub struct Pilot {
+    id: String,
+    description: PilotComputeDescription,
+    machine: Machine,
+    state: Mutex<PilotState>,
+    nodes: Mutex<Vec<NodeId>>,
+    /// The framework plugin (None for extension pilots: they delegate
+    /// to the parent's plugin).
+    plugin: Mutex<Option<Box<dyn ManagerPlugin>>>,
+    parent: Option<Arc<Pilot>>,
+    startup: Mutex<Option<StartupBreakdown>>,
+}
+
+impl std::fmt::Debug for Pilot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pilot")
+            .field("id", &self.id)
+            .field("state", &self.state())
+            .field("nodes", &self.nodes().len())
+            .field("framework", &self.description.framework.name())
+            .finish()
+    }
+}
+
+impl Pilot {
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    pub fn description(&self) -> &PilotComputeDescription {
+        &self.description
+    }
+
+    pub fn state(&self) -> PilotState {
+        *self.state.lock().unwrap()
+    }
+
+    fn set_state(&self, next: PilotState) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        *st = st.transition(next)?;
+        Ok(())
+    }
+
+    pub fn nodes(&self) -> Vec<NodeId> {
+        self.nodes.lock().unwrap().clone()
+    }
+
+    /// Startup breakdown (Fig 6), available once Running.
+    pub fn startup(&self) -> Option<StartupBreakdown> {
+        *self.startup.lock().unwrap()
+    }
+
+    /// The native framework context (paper Listing 6).  Extension
+    /// pilots return their parent's context.
+    pub fn context(&self) -> Result<FrameworkContext> {
+        if let Some(parent) = &self.parent {
+            return parent.context();
+        }
+        let plugin = self.plugin.lock().unwrap();
+        plugin
+            .as_ref()
+            .ok_or_else(|| Error::Pilot(format!("pilot {}: no plugin", self.id)))?
+            .get_context()
+    }
+
+    /// Framework configuration (endpoints etc.).
+    pub fn config_data(&self) -> BTreeMap<String, String> {
+        if let Some(parent) = &self.parent {
+            return parent.config_data();
+        }
+        self.plugin
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|p| p.get_config_data())
+            .unwrap_or_default()
+    }
+}
+
+/// The service (paper §4.2's `PilotComputeService`).
+pub struct PilotComputeService {
+    machine: Machine,
+    adaptor: Arc<dyn ResourceAdaptor>,
+    /// Maps modeled queue/bootstrap seconds to real sleeping.
+    time_scale: f64,
+    pilots: Mutex<HashMap<String, Arc<Pilot>>>,
+    next_id: AtomicU64,
+}
+
+impl PilotComputeService {
+    /// Service over `machine` with a modeled SLURM queue and no real
+    /// sleeping (tests, benches).
+    pub fn new(machine: Machine) -> Self {
+        Self::with_adaptor(machine, SimSlurmAdaptor::wrangler(0.0), 0.0)
+    }
+
+    /// Service with immediate (interactive) placement.
+    pub fn local(machine: Machine) -> Self {
+        Self::with_adaptor(machine, Arc::new(LocalAdaptor::new()), 0.0)
+    }
+
+    pub fn with_adaptor(
+        machine: Machine,
+        adaptor: Arc<dyn ResourceAdaptor>,
+        time_scale: f64,
+    ) -> Self {
+        PilotComputeService {
+            machine,
+            adaptor,
+            time_scale,
+            pilots: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    pub fn pilot(&self, id: &str) -> Option<Arc<Pilot>> {
+        self.pilots.lock().unwrap().get(id).cloned()
+    }
+
+    pub fn pilots(&self) -> Vec<Arc<Pilot>> {
+        self.pilots.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Create (and fully start) a pilot from a description.
+    ///
+    /// Returns once the framework is Running.  Descriptions with a
+    /// `parent_pilot` become extension pilots (paper Listing 4).
+    pub fn create_pilot(
+        &self,
+        description: impl Into<PilotComputeDescription>,
+    ) -> Result<Arc<Pilot>> {
+        let description = description.into();
+        description.validate()?;
+        let id = format!(
+            "pilot-{}-{}",
+            description.framework.name(),
+            self.next_id.fetch_add(1, Ordering::Relaxed)
+        );
+
+        let parent = match &description.parent_pilot {
+            Some(pid) => Some(
+                self.pilot(pid)
+                    .ok_or_else(|| Error::Pilot(format!("unknown parent pilot {pid}")))?,
+            ),
+            None => None,
+        };
+        if let Some(p) = &parent {
+            if !p.state().is_active() {
+                return Err(Error::Pilot(format!(
+                    "parent pilot {} is not running",
+                    p.id()
+                )));
+            }
+            if p.description.framework != description.framework {
+                return Err(Error::Pilot(format!(
+                    "extension framework {} != parent framework {}",
+                    description.framework, p.description.framework
+                )));
+            }
+        }
+
+        let pilot = Arc::new(Pilot {
+            id: id.clone(),
+            description: description.clone(),
+            machine: self.machine.clone(),
+            state: Mutex::new(PilotState::New),
+            nodes: Mutex::new(Vec::new()),
+            plugin: Mutex::new(None),
+            parent,
+            startup: Mutex::new(None),
+        });
+
+        // NEW -> QUEUED: submit the placeholder job.
+        let job = self.adaptor.submit(JobDescription {
+            executable: description.framework.name().into(),
+            number_of_nodes: description.number_of_nodes,
+            cores_per_node: description.cores_per_node,
+            walltime_secs: description.walltime_minutes * 60,
+            ..Default::default()
+        })?;
+        pilot.set_state(PilotState::Queued)?;
+
+        // Queue wait, then node allocation.
+        let run = (|| -> Result<StartupBreakdown> {
+            self.adaptor.wait_running(job)?;
+            let queue_wait_secs = self.adaptor.info(job)?.queue_wait_secs;
+            if self.time_scale > 0.0 && self.adaptor.scheme() == "fork" {
+                // LocalAdaptor doesn't sleep; SimSlurm already did.
+            }
+            let nodes = self
+                .machine
+                .allocate(&pilot.id, description.number_of_nodes)?;
+            *pilot.nodes.lock().unwrap() = nodes.clone();
+            pilot.set_state(PilotState::Bootstrapping)?;
+
+            let env = PluginEnv {
+                machine: self.machine.clone(),
+                nodes,
+                description: description.clone(),
+            };
+            let bootstrap_secs = match &pilot.parent {
+                // Extension: add our nodes to the parent's framework.
+                Some(parent) => {
+                    let mut plugin = parent.plugin.lock().unwrap();
+                    let plugin = plugin.as_mut().ok_or_else(|| {
+                        Error::Pilot(format!("parent {} has no plugin", parent.id()))
+                    })?;
+                    let t0 = std::time::Instant::now();
+                    plugin.extend(&env, &env.nodes)?;
+                    t0.elapsed().as_secs_f64().max(
+                        plugin.bootstrap_model().per_node_secs * env.nodes.len() as f64,
+                    )
+                }
+                // Fresh framework bootstrap.
+                None => {
+                    let mut plugin = create_plugin(&description, self.time_scale)?;
+                    plugin.submit_job(&env)?;
+                    let secs = plugin.wait()?;
+                    *pilot.plugin.lock().unwrap() = Some(plugin);
+                    secs
+                }
+            };
+            Ok(StartupBreakdown {
+                queue_wait_secs,
+                bootstrap_secs,
+            })
+        })();
+
+        match run {
+            Ok(breakdown) => {
+                *pilot.startup.lock().unwrap() = Some(breakdown);
+                pilot.set_state(PilotState::Running)?;
+                self.pilots.lock().unwrap().insert(id, pilot.clone());
+                Ok(pilot)
+            }
+            Err(e) => {
+                let _ = pilot.set_state(PilotState::Failed);
+                self.machine.release(&pilot.id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Extend `parent` by `nodes` nodes: sugar for an extension
+    /// description (paper Listing 4).
+    pub fn extend_pilot(&self, parent: &Arc<Pilot>, nodes: usize) -> Result<Arc<Pilot>> {
+        let mut pcd = PilotComputeDescription::new(
+            &parent.description.resource,
+            parent.description.framework,
+            nodes,
+        );
+        pcd.parent_pilot = Some(parent.id().to_string());
+        pcd.cores_per_node = parent.description.cores_per_node;
+        self.create_pilot(pcd)
+    }
+
+    /// Stop a pilot and release its nodes.
+    ///
+    /// Stopping an extension pilot shrinks the parent's framework
+    /// ("if the resources are not needed anymore, the pilot can be
+    /// stopped and the cluster will automatically resize", §4.2).
+    pub fn stop_pilot(&self, pilot: &Arc<Pilot>) -> Result<()> {
+        pilot.set_state(PilotState::ShuttingDown)?;
+        let nodes = pilot.nodes();
+        match &pilot.parent {
+            Some(parent) => {
+                // Shrink the parent's framework off our nodes.
+                if let Ok(ctx) = parent.context() {
+                    match ctx {
+                        FrameworkContext::Kafka(c) => {
+                            let _ = c.remove_brokers(&nodes);
+                        }
+                        FrameworkContext::MicroBatch(e) => e.remove_executors(&nodes),
+                        FrameworkContext::TaskPar(e) => e.remove_workers(&nodes),
+                    }
+                }
+            }
+            None => {
+                if let Ok(ctx) = pilot.context() {
+                    match ctx {
+                        FrameworkContext::Kafka(c) => c.stop(),
+                        FrameworkContext::MicroBatch(e) => e.stop(),
+                        FrameworkContext::TaskPar(e) => e.stop(),
+                    }
+                }
+            }
+        }
+        pilot.machine.release(&pilot.id);
+        pilot.set_state(PilotState::Done)?;
+        self.pilots.lock().unwrap().remove(pilot.id());
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Convenience starters (used by examples and the Mini-Apps)
+    // ------------------------------------------------------------------
+
+    /// Start a pilot-managed Kafka cluster; returns the broker client.
+    pub fn start_kafka(
+        &self,
+        d: KafkaDescription,
+    ) -> Result<(Arc<Pilot>, crate::broker::BrokerCluster)> {
+        let pilot = self.create_pilot(d)?;
+        let ctx = pilot.context()?;
+        let cluster = ctx
+            .as_kafka()
+            .ok_or_else(|| Error::Pilot("kafka pilot has non-kafka context".into()))?
+            .clone();
+        Ok((pilot, cluster))
+    }
+
+    /// Start a pilot-managed Spark(-like) micro-batch engine.
+    pub fn start_spark(
+        &self,
+        d: SparkDescription,
+    ) -> Result<(Arc<Pilot>, crate::engine::MicroBatchEngine)> {
+        let pilot = self.create_pilot(d)?;
+        let ctx = pilot.context()?;
+        let engine = ctx
+            .as_microbatch()
+            .ok_or_else(|| Error::Pilot("spark pilot has non-spark context".into()))?
+            .clone();
+        Ok((pilot, engine))
+    }
+
+    /// Start a pilot-managed Dask(-like) task engine.
+    pub fn start_dask(
+        &self,
+        d: DaskDescription,
+    ) -> Result<(Arc<Pilot>, crate::engine::TaskEngine)> {
+        let pilot = self.create_pilot(d)?;
+        let ctx = pilot.context()?;
+        let engine = ctx
+            .as_taskpar()
+            .ok_or_else(|| Error::Pilot("dask pilot has non-dask context".into()))?
+            .clone();
+        Ok((pilot, engine))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service(nodes: usize) -> PilotComputeService {
+        PilotComputeService::new(Machine::unthrottled(nodes))
+    }
+
+    #[test]
+    fn kafka_pilot_full_lifecycle() {
+        let svc = service(4);
+        let (pilot, cluster) = svc.start_kafka(KafkaDescription::new(2)).unwrap();
+        assert_eq!(pilot.state(), PilotState::Running);
+        assert_eq!(pilot.nodes().len(), 2);
+        assert_eq!(svc.machine().free_nodes(), 2);
+        let s = pilot.startup().unwrap();
+        assert!(s.queue_wait_secs > 0.0, "slurm queue wait recorded");
+        assert!(s.bootstrap_secs > 0.0);
+        cluster.create_topic("t", 4).unwrap();
+        svc.stop_pilot(&pilot).unwrap();
+        assert_eq!(pilot.state(), PilotState::Done);
+        assert_eq!(svc.machine().free_nodes(), 4);
+        assert!(cluster.is_stopped());
+    }
+
+    #[test]
+    fn pilot_fails_when_machine_full() {
+        let svc = service(2);
+        let err = svc.create_pilot(KafkaDescription::new(3)).unwrap_err();
+        assert!(matches!(err, Error::Pilot(_)), "{err}");
+        assert_eq!(svc.machine().free_nodes(), 2, "nothing leaked");
+    }
+
+    #[test]
+    fn extension_pilot_grows_and_shrinks_kafka() {
+        let svc = service(6);
+        let (parent, cluster) = svc.start_kafka(KafkaDescription::new(2)).unwrap();
+        cluster.create_topic("t", 6).unwrap();
+        let ext = svc.extend_pilot(&parent, 2).unwrap();
+        assert_eq!(cluster.broker_nodes().len(), 4, "brokers extended");
+        assert_eq!(svc.machine().free_nodes(), 2);
+        // Shrink back.
+        svc.stop_pilot(&ext).unwrap();
+        assert_eq!(cluster.broker_nodes().len(), 2, "brokers shrunk");
+        assert_eq!(svc.machine().free_nodes(), 4);
+        svc.stop_pilot(&parent).unwrap();
+    }
+
+    #[test]
+    fn extension_requires_matching_framework_and_running_parent() {
+        let svc = service(6);
+        let (kafka, _) = svc.start_kafka(KafkaDescription::new(1)).unwrap();
+        let bad = PilotComputeDescription::new(
+            "slurm://wrangler",
+            crate::pilot::FrameworkKind::Spark,
+            1,
+        )
+        .with_parent(kafka.id());
+        assert!(svc.create_pilot(bad).is_err());
+        svc.stop_pilot(&kafka).unwrap();
+        let orphan = PilotComputeDescription::new(
+            "slurm://wrangler",
+            crate::pilot::FrameworkKind::Kafka,
+            1,
+        )
+        .with_parent(kafka.id());
+        assert!(svc.create_pilot(orphan).is_err(), "parent gone");
+    }
+
+    #[test]
+    fn spark_extension_adds_executors() {
+        let svc = service(4);
+        let (parent, engine) = svc
+            .start_spark(SparkDescription::new(1).with_config("executors_per_node", "2"))
+            .unwrap();
+        assert_eq!(engine.executor_count(), 2);
+        let ext = svc.extend_pilot(&parent, 2).unwrap();
+        assert_eq!(engine.executor_count(), 6);
+        svc.stop_pilot(&ext).unwrap();
+        // Draining is asynchronous; wait briefly.
+        let t0 = std::time::Instant::now();
+        while engine.executor_count() != 2 && t0.elapsed().as_secs() < 5 {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(engine.executor_count(), 2, "executors drained");
+        svc.stop_pilot(&parent).unwrap();
+    }
+
+    #[test]
+    fn dask_pilot_runs_compute_units() {
+        let svc = service(2);
+        let (pilot, engine) = svc
+            .start_dask(DaskDescription::new(1).with_config("workers_per_node", "2"))
+            .unwrap();
+        // Paper Listing 5: def compute(x): return x*x; pilot.submit(compute, 2).
+        let fut = engine.submit(|_| 2 * 2).unwrap();
+        assert_eq!(fut.wait().unwrap(), 4);
+        svc.stop_pilot(&pilot).unwrap();
+    }
+
+    #[test]
+    fn startup_breakdown_scales_with_nodes() {
+        let svc = service(8);
+        let (p1, _) = svc.start_kafka(KafkaDescription::new(1)).unwrap();
+        let (p4, _) = svc.start_kafka(KafkaDescription::new(4)).unwrap();
+        let s1 = p1.startup().unwrap();
+        let s4 = p4.startup().unwrap();
+        assert!(s4.total_secs() > s1.total_secs());
+        svc.stop_pilot(&p1).unwrap();
+        svc.stop_pilot(&p4).unwrap();
+    }
+}

@@ -1,0 +1,116 @@
+//! Pilot lifecycle state machine.
+
+use crate::error::{Error, Result};
+
+/// States of a Pilot (superset of SAGA job states: a pilot also
+/// bootstraps a framework inside its allocation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PilotState {
+    /// Created, not yet submitted.
+    New,
+    /// Placeholder job waiting in the batch queue.
+    Queued,
+    /// Allocation granted; framework bootstrap in progress.
+    Bootstrapping,
+    /// Framework up; compute units / clients may connect.
+    Running,
+    /// Shutting down (releasing nodes).
+    ShuttingDown,
+    /// Terminated normally.
+    Done,
+    /// Terminated with an error.
+    Failed,
+}
+
+impl PilotState {
+    /// Legal transitions (used to guard coordinator bugs).
+    pub fn can_transition_to(self, next: PilotState) -> bool {
+        use PilotState::*;
+        matches!(
+            (self, next),
+            (New, Queued)
+                | (Queued, Bootstrapping)
+                | (Bootstrapping, Running)
+                | (Running, ShuttingDown)
+                | (ShuttingDown, Done)
+                | (New, Failed)
+                | (Queued, Failed)
+                | (Bootstrapping, Failed)
+                | (Running, Failed)
+        )
+    }
+
+    /// Apply a transition, erroring on illegal moves.
+    pub fn transition(self, next: PilotState) -> Result<PilotState> {
+        if self.can_transition_to(next) {
+            Ok(next)
+        } else {
+            Err(Error::Pilot(format!(
+                "illegal pilot transition {self:?} -> {next:?}"
+            )))
+        }
+    }
+
+    /// Terminal states.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, PilotState::Done | PilotState::Failed)
+    }
+
+    /// Can the pilot accept work / be extended?
+    pub fn is_active(self) -> bool {
+        matches!(self, PilotState::Running)
+    }
+}
+
+impl std::fmt::Display for PilotState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            PilotState::New => "NEW",
+            PilotState::Queued => "QUEUED",
+            PilotState::Bootstrapping => "BOOTSTRAPPING",
+            PilotState::Running => "RUNNING",
+            PilotState::ShuttingDown => "SHUTTING_DOWN",
+            PilotState::Done => "DONE",
+            PilotState::Failed => "FAILED",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use PilotState::*;
+
+    #[test]
+    fn happy_path_transitions() {
+        let mut s = New;
+        for next in [Queued, Bootstrapping, Running, ShuttingDown, Done] {
+            s = s.transition(next).unwrap();
+        }
+        assert!(s.is_terminal());
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        assert!(New.transition(Running).is_err());
+        assert!(Done.transition(Running).is_err());
+        assert!(Running.transition(Queued).is_err());
+        assert!(Failed.transition(Queued).is_err());
+    }
+
+    #[test]
+    fn failure_reachable_from_non_terminal() {
+        for s in [New, Queued, Bootstrapping, Running] {
+            assert!(s.can_transition_to(Failed), "{s:?}");
+        }
+        assert!(!ShuttingDown.can_transition_to(Failed));
+    }
+
+    #[test]
+    fn activity_flags() {
+        assert!(Running.is_active());
+        assert!(!Queued.is_active());
+        assert!(Done.is_terminal() && Failed.is_terminal());
+    }
+}

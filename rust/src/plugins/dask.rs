@@ -1,0 +1,133 @@
+//! Dask framework plugin: pilot-managed task-parallel engine.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::NodeId;
+use crate::config::BootstrapModel;
+use crate::engine::TaskEngine;
+use crate::error::{Error, Result};
+use crate::pilot::description::{FrameworkKind, PilotComputeDescription};
+use crate::pilot::plugin::{FrameworkContext, ManagerPlugin, PluginEnv};
+
+/// Deploys the Dask-like [`TaskEngine`].  The paper runs the MASS data
+/// producers as "8 producer processes in Dask" per node (§6.3), so the
+/// default worker count per node is 8.
+pub struct DaskPlugin {
+    model: BootstrapModel,
+    time_scale: f64,
+    workers_per_node: usize,
+    engine: Option<TaskEngine>,
+    pending_nodes: usize,
+    scheduler_node: Option<NodeId>,
+}
+
+impl DaskPlugin {
+    pub fn new(pcd: &PilotComputeDescription, time_scale: f64) -> Self {
+        let workers_per_node = pcd
+            .config
+            .get("workers_per_node")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(8);
+        DaskPlugin {
+            model: super::bootstrap_model_for(FrameworkKind::Dask),
+            time_scale,
+            workers_per_node,
+            engine: None,
+            pending_nodes: 0,
+            scheduler_node: None,
+        }
+    }
+}
+
+impl ManagerPlugin for DaskPlugin {
+    fn submit_job(&mut self, env: &PluginEnv) -> Result<()> {
+        self.scheduler_node = env.nodes.first().copied();
+        self.pending_nodes = env.nodes.len();
+        self.engine = Some(TaskEngine::new(
+            env.machine.clone(),
+            env.nodes.clone(),
+            self.workers_per_node,
+        ));
+        Ok(())
+    }
+
+    fn wait(&mut self) -> Result<f64> {
+        if self.engine.is_none() {
+            return Err(Error::Pilot("dask: wait() before submit_job()".into()));
+        }
+        Ok(super::do_wait(&self.model, self.pending_nodes, self.time_scale))
+    }
+
+    fn extend(&mut self, _env: &PluginEnv, new_nodes: &[NodeId]) -> Result<()> {
+        let engine = self
+            .engine
+            .as_ref()
+            .ok_or_else(|| Error::Pilot("dask: extend() before submit_job()".into()))?;
+        engine.add_workers(new_nodes.to_vec());
+        super::do_wait(
+            &BootstrapModel {
+                head_secs: 0.0,
+                settle_secs: 1.0,
+                ..self.model
+            },
+            new_nodes.len(),
+            self.time_scale,
+        );
+        Ok(())
+    }
+
+    fn get_context(&self) -> Result<FrameworkContext> {
+        self.engine
+            .clone()
+            .map(FrameworkContext::TaskPar)
+            .ok_or_else(|| Error::Pilot("dask: not running".into()))
+    }
+
+    fn get_config_data(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        if let Some(s) = self.scheduler_node {
+            m.insert("dask.scheduler".into(), format!("tcp://node{s}:8786"));
+        }
+        m.insert(
+            "dask.workers".into(),
+            self.engine
+                .as_ref()
+                .map(|e| e.worker_count().to_string())
+                .unwrap_or_default(),
+        );
+        m
+    }
+
+    fn bootstrap_model(&self) -> BootstrapModel {
+        self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+
+    #[test]
+    fn lifecycle_submit_compute() {
+        let machine = Machine::unthrottled(2);
+        let env = PluginEnv {
+            nodes: machine.allocate("p", 1).unwrap(),
+            description: PilotComputeDescription::new("local://test", FrameworkKind::Dask, 1)
+                .with_config("workers_per_node", "2"),
+            machine,
+        };
+        let mut p = DaskPlugin::new(&env.description, 0.0);
+        p.submit_job(&env).unwrap();
+        let secs = p.wait().unwrap();
+        // Dask bootstrap is the cheapest (Fig 6).
+        assert!(secs < super::super::bootstrap_model_for(FrameworkKind::Spark).init_secs(1));
+        let ctx = p.get_context().unwrap();
+        let engine = ctx.as_taskpar().unwrap();
+        // Paper Listing 5: interoperable compute unit `compute(x) = x*x`.
+        let fut = engine.submit(|_| 2 * 2).unwrap();
+        assert_eq!(fut.wait().unwrap(), 4);
+        assert!(p.get_config_data()["dask.scheduler"].contains("8786"));
+        engine.stop();
+    }
+}

@@ -1,0 +1,127 @@
+//! Flink framework plugin.
+//!
+//! The paper's framework matrix includes Flink (§4.3) but its
+//! evaluation runs no Flink workloads; we model the JobManager +
+//! TaskManager bootstrap for the startup experiment and expose a
+//! task-parallel context so Compute-Units remain interoperable.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::NodeId;
+use crate::config::BootstrapModel;
+use crate::engine::TaskEngine;
+use crate::error::{Error, Result};
+use crate::pilot::description::{FrameworkKind, PilotComputeDescription};
+use crate::pilot::plugin::{FrameworkContext, ManagerPlugin, PluginEnv};
+
+pub struct FlinkPlugin {
+    model: BootstrapModel,
+    time_scale: f64,
+    slots_per_node: usize,
+    engine: Option<TaskEngine>,
+    pending_nodes: usize,
+    jobmanager_node: Option<NodeId>,
+}
+
+impl FlinkPlugin {
+    pub fn new(pcd: &PilotComputeDescription, time_scale: f64) -> Self {
+        let slots_per_node = pcd
+            .config
+            .get("taskmanager.numberOfTaskSlots")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2);
+        FlinkPlugin {
+            model: super::bootstrap_model_for(FrameworkKind::Flink),
+            time_scale,
+            slots_per_node,
+            engine: None,
+            pending_nodes: 0,
+            jobmanager_node: None,
+        }
+    }
+}
+
+impl ManagerPlugin for FlinkPlugin {
+    fn submit_job(&mut self, env: &PluginEnv) -> Result<()> {
+        self.jobmanager_node = env.nodes.first().copied();
+        self.pending_nodes = env.nodes.len();
+        self.engine = Some(TaskEngine::new(
+            env.machine.clone(),
+            env.nodes.clone(),
+            self.slots_per_node,
+        ));
+        Ok(())
+    }
+
+    fn wait(&mut self) -> Result<f64> {
+        if self.engine.is_none() {
+            return Err(Error::Pilot("flink: wait() before submit_job()".into()));
+        }
+        Ok(super::do_wait(&self.model, self.pending_nodes, self.time_scale))
+    }
+
+    fn extend(&mut self, _env: &PluginEnv, new_nodes: &[NodeId]) -> Result<()> {
+        let engine = self
+            .engine
+            .as_ref()
+            .ok_or_else(|| Error::Pilot("flink: extend() before submit_job()".into()))?;
+        engine.add_workers(new_nodes.to_vec());
+        super::do_wait(
+            &BootstrapModel {
+                head_secs: 0.0,
+                settle_secs: 2.0,
+                ..self.model
+            },
+            new_nodes.len(),
+            self.time_scale,
+        );
+        Ok(())
+    }
+
+    fn get_context(&self) -> Result<FrameworkContext> {
+        self.engine
+            .clone()
+            .map(FrameworkContext::TaskPar)
+            .ok_or_else(|| Error::Pilot("flink: not running".into()))
+    }
+
+    fn get_config_data(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        if let Some(j) = self.jobmanager_node {
+            m.insert("jobmanager.rpc.address".into(), format!("node{j}"));
+        }
+        m.insert(
+            "taskmanager.numberOfTaskSlots".into(),
+            self.slots_per_node.to_string(),
+        );
+        m
+    }
+
+    fn bootstrap_model(&self) -> BootstrapModel {
+        self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+
+    #[test]
+    fn lifecycle() {
+        let machine = Machine::unthrottled(2);
+        let env = PluginEnv {
+            nodes: machine.allocate("p", 2).unwrap(),
+            description: PilotComputeDescription::new("local://t", FrameworkKind::Flink, 2),
+            machine,
+        };
+        let mut p = FlinkPlugin::new(&env.description, 0.0);
+        p.submit_job(&env).unwrap();
+        assert!(p.wait().unwrap() > 0.0);
+        let ctx = p.get_context().unwrap();
+        let e = ctx.as_taskpar().unwrap();
+        assert_eq!(e.worker_count(), 4);
+        assert_eq!(p.get_config_data()["taskmanager.numberOfTaskSlots"], "2");
+        e.stop();
+    }
+}

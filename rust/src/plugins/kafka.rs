@@ -1,0 +1,142 @@
+//! Kafka framework plugin: pilot-managed broker cluster.
+
+use std::collections::BTreeMap;
+
+use crate::broker::BrokerCluster;
+use crate::cluster::NodeId;
+use crate::config::BootstrapModel;
+use crate::error::{Error, Result};
+use crate::pilot::description::{FrameworkKind, PilotComputeDescription};
+use crate::pilot::plugin::{FrameworkContext, ManagerPlugin, PluginEnv};
+
+/// Deploys the in-process Kafka substrate ([`BrokerCluster`]) on the
+/// pilot's nodes.  Bootstrap = ZooKeeper head + per-node brokers.
+pub struct KafkaPlugin {
+    model: BootstrapModel,
+    time_scale: f64,
+    cluster: Option<BrokerCluster>,
+    pending_nodes: usize,
+    broker_nodes: Vec<NodeId>,
+}
+
+impl KafkaPlugin {
+    pub fn new(_pcd: &PilotComputeDescription, time_scale: f64) -> Self {
+        KafkaPlugin {
+            model: super::bootstrap_model_for(FrameworkKind::Kafka),
+            time_scale,
+            cluster: None,
+            pending_nodes: 0,
+            broker_nodes: Vec::new(),
+        }
+    }
+}
+
+impl ManagerPlugin for KafkaPlugin {
+    fn submit_job(&mut self, env: &PluginEnv) -> Result<()> {
+        self.broker_nodes = env.nodes.clone();
+        self.pending_nodes = env.nodes.len();
+        self.cluster = Some(BrokerCluster::new(env.machine.clone(), env.nodes.clone()));
+        Ok(())
+    }
+
+    fn wait(&mut self) -> Result<f64> {
+        if self.cluster.is_none() {
+            return Err(Error::Pilot("kafka: wait() before submit_job()".into()));
+        }
+        Ok(super::do_wait(&self.model, self.pending_nodes, self.time_scale))
+    }
+
+    fn extend(&mut self, _env: &PluginEnv, new_nodes: &[NodeId]) -> Result<()> {
+        let cluster = self
+            .cluster
+            .as_ref()
+            .ok_or_else(|| Error::Pilot("kafka: extend() before submit_job()".into()))?;
+        cluster.add_brokers(new_nodes.to_vec());
+        self.broker_nodes.extend_from_slice(new_nodes);
+        // Per-broker launch cost for the added nodes.
+        super::do_wait(
+            &BootstrapModel {
+                head_secs: 0.0,
+                settle_secs: 2.0,
+                ..self.model
+            },
+            new_nodes.len(),
+            self.time_scale,
+        );
+        Ok(())
+    }
+
+    fn get_context(&self) -> Result<FrameworkContext> {
+        self.cluster
+            .clone()
+            .map(FrameworkContext::Kafka)
+            .ok_or_else(|| Error::Pilot("kafka: not running".into()))
+    }
+
+    fn get_config_data(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        let servers: Vec<String> = self
+            .broker_nodes
+            .iter()
+            .map(|n| format!("node{n}:9092"))
+            .collect();
+        m.insert("bootstrap.servers".into(), servers.join(","));
+        if let Some(first) = self.broker_nodes.first() {
+            m.insert("zookeeper.connect".into(), format!("node{first}:2181"));
+        }
+        m
+    }
+
+    fn bootstrap_model(&self) -> BootstrapModel {
+        self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+
+    fn env(nodes: usize) -> PluginEnv {
+        let machine = Machine::unthrottled(nodes + 2);
+        PluginEnv {
+            nodes: machine.allocate("p", nodes).unwrap(),
+            description: PilotComputeDescription::new(
+                "local://test",
+                FrameworkKind::Kafka,
+                nodes,
+            ),
+            machine,
+        }
+    }
+
+    #[test]
+    fn lifecycle_and_context() {
+        let env = env(2);
+        let mut p = KafkaPlugin::new(&env.description, 0.0);
+        assert!(p.wait().is_err(), "wait before submit must fail");
+        p.submit_job(&env).unwrap();
+        let secs = p.wait().unwrap();
+        assert!(secs > 0.0);
+        let ctx = p.get_context().unwrap();
+        let cluster = ctx.as_kafka().unwrap();
+        cluster.create_topic("t", 2).unwrap();
+        assert_eq!(cluster.broker_nodes().len(), 2);
+        let cfg = p.get_config_data();
+        assert!(cfg["bootstrap.servers"].contains(":9092"));
+        assert!(cfg.contains_key("zookeeper.connect"));
+    }
+
+    #[test]
+    fn extend_adds_brokers() {
+        let env2 = env(1);
+        let mut p = KafkaPlugin::new(&env2.description, 0.0);
+        p.submit_job(&env2).unwrap();
+        p.wait().unwrap();
+        let extra = env2.machine.allocate("p2", 1).unwrap();
+        p.extend(&env2, &extra).unwrap();
+        let ctx = p.get_context().unwrap();
+        assert_eq!(ctx.as_kafka().unwrap().broker_nodes().len(), 2);
+        assert!(p.get_config_data()["bootstrap.servers"].matches(":9092").count() == 2);
+    }
+}

@@ -1,0 +1,135 @@
+//! Spark framework plugin: pilot-managed micro-batch engine.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::NodeId;
+use crate::config::BootstrapModel;
+use crate::engine::MicroBatchEngine;
+use crate::error::{Error, Result};
+use crate::pilot::description::{FrameworkKind, PilotComputeDescription};
+use crate::pilot::plugin::{FrameworkContext, ManagerPlugin, PluginEnv};
+
+/// Deploys the Spark-Streaming-like [`MicroBatchEngine`] on the pilot's
+/// nodes.  Bootstrap = master + per-node workers.
+pub struct SparkPlugin {
+    model: BootstrapModel,
+    time_scale: f64,
+    executors_per_node: usize,
+    engine: Option<MicroBatchEngine>,
+    pending_nodes: usize,
+    master_node: Option<NodeId>,
+}
+
+impl SparkPlugin {
+    pub fn new(pcd: &PilotComputeDescription, time_scale: f64) -> Self {
+        let executors_per_node = pcd
+            .config
+            .get("executors_per_node")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2);
+        SparkPlugin {
+            model: super::bootstrap_model_for(FrameworkKind::Spark),
+            time_scale,
+            executors_per_node,
+            engine: None,
+            pending_nodes: 0,
+            master_node: None,
+        }
+    }
+}
+
+impl ManagerPlugin for SparkPlugin {
+    fn submit_job(&mut self, env: &PluginEnv) -> Result<()> {
+        self.master_node = env.nodes.first().copied();
+        self.pending_nodes = env.nodes.len();
+        self.engine = Some(MicroBatchEngine::new(
+            env.machine.clone(),
+            env.nodes.clone(),
+            self.executors_per_node,
+        ));
+        Ok(())
+    }
+
+    fn wait(&mut self) -> Result<f64> {
+        if self.engine.is_none() {
+            return Err(Error::Pilot("spark: wait() before submit_job()".into()));
+        }
+        Ok(super::do_wait(&self.model, self.pending_nodes, self.time_scale))
+    }
+
+    fn extend(&mut self, _env: &PluginEnv, new_nodes: &[NodeId]) -> Result<()> {
+        let engine = self
+            .engine
+            .as_ref()
+            .ok_or_else(|| Error::Pilot("spark: extend() before submit_job()".into()))?;
+        engine.add_executors(new_nodes.to_vec());
+        super::do_wait(
+            &BootstrapModel {
+                head_secs: 0.0,
+                settle_secs: 2.0,
+                ..self.model
+            },
+            new_nodes.len(),
+            self.time_scale,
+        );
+        Ok(())
+    }
+
+    fn get_context(&self) -> Result<FrameworkContext> {
+        self.engine
+            .clone()
+            .map(FrameworkContext::MicroBatch)
+            .ok_or_else(|| Error::Pilot("spark: not running".into()))
+    }
+
+    fn get_config_data(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        if let Some(master) = self.master_node {
+            m.insert("spark.master".into(), format!("spark://node{master}:7077"));
+        }
+        m.insert(
+            "spark.executor.instances".into(),
+            self.engine
+                .as_ref()
+                .map(|e| e.executor_count().to_string())
+                .unwrap_or_default(),
+        );
+        m
+    }
+
+    fn bootstrap_model(&self) -> BootstrapModel {
+        self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+
+    #[test]
+    fn lifecycle_and_extend() {
+        let machine = Machine::unthrottled(4);
+        let env = PluginEnv {
+            nodes: machine.allocate("p", 2).unwrap(),
+            description: PilotComputeDescription::new(
+                "local://test",
+                FrameworkKind::Spark,
+                2,
+            )
+            .with_config("executors_per_node", "3"),
+            machine: machine.clone(),
+        };
+        let mut p = SparkPlugin::new(&env.description, 0.0);
+        p.submit_job(&env).unwrap();
+        p.wait().unwrap();
+        let ctx = p.get_context().unwrap();
+        let engine = ctx.as_microbatch().unwrap();
+        assert_eq!(engine.executor_count(), 6, "2 nodes x 3 executors");
+        let extra = machine.allocate("p2", 1).unwrap();
+        p.extend(&env, &extra).unwrap();
+        assert_eq!(engine.executor_count(), 9);
+        assert!(p.get_config_data()["spark.master"].contains("7077"));
+        engine.stop();
+    }
+}

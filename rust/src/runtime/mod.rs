@@ -1,0 +1,472 @@
+//! PJRT runtime: load AOT artifacts, execute them on the hot path.
+//!
+//! The compile path (``python/compile/aot.py``) lowers every L2 JAX
+//! model to HLO *text* (see /opt/xla-example/README.md for why text, not
+//! serialized protos) plus a ``manifest.json`` describing input/output
+//! signatures.  This module is the serving-side half: it parses the
+//! manifest, compiles each artifact once per OS thread on a PJRT CPU
+//! client, and exposes a typed `execute` API the stream engines call per
+//! micro-batch.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
+//! so clients and compiled executables live in thread-local storage —
+//! each engine executor thread lazily builds its own client + executable
+//! cache on first use and reuses it for the life of the thread.  The
+//! cloneable [`ModelRuntime`] handle itself is `Send + Sync`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// Tensor signature from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("sig.shape: expected array".into()))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| Error::Artifact("sig.shape: expected ints".into()))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let dtype = j
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Artifact("sig.dtype: expected string".into()))?
+            .to_string();
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| Error::Artifact(format!("{key}: expected int")))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?
+        .as_f64()
+        .ok_or_else(|| Error::Artifact(format!("{key}: expected number")))
+}
+
+fn sig_list(j: &Json, key: &str) -> Result<Vec<TensorSig>> {
+    j.req(key)?
+        .as_arr()
+        .ok_or_else(|| Error::Artifact(format!("{key}: expected array")))?
+        .iter()
+        .map(TensorSig::from_json)
+        .collect()
+}
+
+/// Per-artifact manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// KMeans model parameters (mirrors python/compile/params.py).
+#[derive(Debug, Clone)]
+pub struct KmeansParams {
+    pub n_points: usize,
+    pub dim: usize,
+    pub k: usize,
+    pub decay: f64,
+    pub block: usize,
+}
+
+/// Tomography parameters (mirrors python/compile/params.py).
+#[derive(Debug, Clone)]
+pub struct TomoParams {
+    pub n_angles: usize,
+    pub n_det: usize,
+    pub img_h: usize,
+    pub img_w: usize,
+    pub n_ray: usize,
+    pub mlem_iters: usize,
+    pub angle_block: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub kmeans: KmeansParams,
+    pub tomo: TomoParams,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let km = j.req("kmeans")?;
+        let tm = j.req("tomo")?;
+        let kmeans = KmeansParams {
+            n_points: req_usize(km, "n_points")?,
+            dim: req_usize(km, "dim")?,
+            k: req_usize(km, "k")?,
+            decay: req_f64(km, "decay")?,
+            block: req_usize(km, "block")?,
+        };
+        let tomo = TomoParams {
+            n_angles: req_usize(tm, "n_angles")?,
+            n_det: req_usize(tm, "n_det")?,
+            img_h: req_usize(tm, "img_h")?,
+            img_w: req_usize(tm, "img_w")?,
+            n_ray: req_usize(tm, "n_ray")?,
+            mlem_iters: req_usize(tm, "mlem_iters")?,
+            angle_block: req_usize(tm, "angle_block")?,
+        };
+        let mut artifacts = HashMap::new();
+        for (name, a) in j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("artifacts: expected object".into()))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: a
+                        .req("file")?
+                        .as_str()
+                        .ok_or_else(|| Error::Artifact("file: expected string".into()))?
+                        .to_string(),
+                    inputs: sig_list(a, "inputs")?,
+                    outputs: sig_list(a, "outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            kmeans,
+            tomo,
+            artifacts,
+        })
+    }
+}
+
+/// A host tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => Err(Error::Artifact("expected f32 tensor, got i32".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            Tensor::F32(_) => Err(Error::Artifact("expected i32 tensor, got f32".into())),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+thread_local! {
+    /// Per-thread PJRT state: one CPU client + executables keyed by
+    /// (artifact dir, artifact name).
+    static TLS: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+struct ThreadCtx {
+    client: xla::PjRtClient,
+    executables: HashMap<(PathBuf, String), xla::PjRtLoadedExecutable>,
+}
+
+/// Cloneable, thread-safe handle to the AOT artifact set.
+#[derive(Clone)]
+pub struct ModelRuntime {
+    dir: PathBuf,
+    manifest: Arc<Manifest>,
+}
+
+impl std::fmt::Debug for ModelRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRuntime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.artifacts.len())
+            .finish()
+    }
+}
+
+impl ModelRuntime {
+    /// Load the manifest from an artifacts directory (built by
+    /// ``make artifacts``).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        // Silence TfrtCpuClient created/destroyed chatter before the
+        // first client exists.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+        }
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "{}: {e} (run `make artifacts` first)",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(ModelRuntime {
+            dir,
+            manifest: Arc::new(manifest),
+        })
+    }
+
+    /// Locate the default artifacts directory: `$PILOT_ARTIFACTS`, else
+    /// `artifacts/` relative to the crate root (works from `cargo run`
+    /// / `cargo test` / `cargo bench`).
+    pub fn load_default() -> Result<Self> {
+        if let Some(dir) = std::env::var_os("PILOT_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        let candidates = [
+            PathBuf::from("artifacts"),
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ];
+        for c in &candidates {
+            if c.join("manifest.json").exists() {
+                return Self::load(c);
+            }
+        }
+        Err(Error::Artifact(
+            "artifacts/manifest.json not found; run `make artifacts`".into(),
+        ))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name}")))
+    }
+
+    /// Read a raw f32 data artifact (phantom.bin, template_sinogram.bin,
+    /// testvectors/*).
+    pub fn read_f32_file(&self, rel: &str) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(rel))?;
+        if bytes.len() % 4 != 0 {
+            return Err(Error::Artifact(format!("{rel}: not a multiple of 4 bytes")));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read a raw i32 data artifact (testvectors with int outputs).
+    pub fn read_i32_file(&self, rel: &str) -> Result<Vec<i32>> {
+        let bytes = std::fs::read(self.dir.join(rel))?;
+        if bytes.len() % 4 != 0 {
+            return Err(Error::Artifact(format!("{rel}: not a multiple of 4 bytes")));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn with_executable<R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<R>,
+    ) -> Result<R> {
+        let meta = self.meta(name)?;
+        let key = (self.dir.clone(), name.to_string());
+        TLS.with(|tls| {
+            let mut slot = tls.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(ThreadCtx {
+                    client: xla::PjRtClient::cpu()?,
+                    executables: HashMap::new(),
+                });
+            }
+            let ctx = slot.as_mut().unwrap();
+            if !ctx.executables.contains_key(&key) {
+                let path = self.dir.join(&meta.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| Error::Artifact("bad path".into()))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = ctx.client.compile(&comp)?;
+                ctx.executables.insert(key.clone(), exe);
+            }
+            f(ctx.executables.get(&key).unwrap())
+        })
+    }
+
+    /// Pre-compile an artifact on the calling thread (so first-message
+    /// latency on the hot path excludes XLA compilation).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.with_executable(name, |_| Ok(()))
+    }
+
+    /// Execute artifact `name` with host `inputs`.
+    ///
+    /// Inputs must match the manifest signature (f32 tensors with the
+    /// right element counts); outputs come back as typed [`Tensor`]s.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Tensor>> {
+        let meta = self.meta(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (sig, data)) in meta.inputs.iter().zip(inputs).enumerate() {
+            if sig.dtype != "float32" {
+                return Err(Error::Artifact(format!(
+                    "{name}: input {i} dtype {} unsupported via f32 API",
+                    sig.dtype
+                )));
+            }
+            if sig.elements() != data.len() {
+                return Err(Error::Artifact(format!(
+                    "{name}: input {i} expects {} elements, got {}",
+                    sig.elements(),
+                    data.len()
+                )));
+            }
+        }
+
+        self.with_executable(name, |exe| {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (sig, data) in meta.inputs.iter().zip(inputs) {
+                let dims: Vec<i64> = sig.shape.iter().map(|d| *d as i64).collect();
+                let lit = if dims.len() == 1 || dims.is_empty() {
+                    xla::Literal::vec1(data)
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                };
+                literals.push(lit);
+            }
+            let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: always a tuple.
+            let parts = result.to_tuple()?;
+            let mut out = Vec::with_capacity(parts.len());
+            for (i, part) in parts.into_iter().enumerate() {
+                let sig = meta.outputs.get(i).ok_or_else(|| {
+                    Error::Artifact(format!("{name}: more outputs than manifest"))
+                })?;
+                let t = match sig.dtype.as_str() {
+                    "float32" => Tensor::F32(part.to_vec::<f32>()?),
+                    "int32" => Tensor::I32(part.to_vec::<i32>()?),
+                    other => {
+                        return Err(Error::Artifact(format!(
+                            "{name}: output {i} dtype {other} unsupported"
+                        )))
+                    }
+                };
+                if t.len() != sig.elements() {
+                    return Err(Error::Artifact(format!(
+                        "{name}: output {i} has {} elements, manifest says {}",
+                        t.len(),
+                        sig.elements()
+                    )));
+                }
+                out.push(t);
+            }
+            Ok(out)
+        })
+    }
+
+    /// Measure mean wall-clock seconds per execution of `name` over `n`
+    /// runs (after one warmup) — the calibration input for the
+    /// simulation plane (DESIGN.md §4b).
+    pub fn calibrate(&self, name: &str, n: usize) -> Result<f64> {
+        let meta = self.meta(name)?.clone();
+        let inputs: Vec<Vec<f32>> = meta
+            .inputs
+            .iter()
+            .map(|sig| vec![0.5f32; sig.elements()])
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        self.execute(name, &refs)?; // warmup (compile + first run)
+        let start = Instant::now();
+        for _ in 0..n.max(1) {
+            self.execute(name, &refs)?;
+        }
+        Ok(start.elapsed().as_secs_f64() / n.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::F32(vec![1.0, 2.0]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.len(), 2);
+        let t = Tensor::I32(vec![3]);
+        assert_eq!(t.as_i32().unwrap(), &[3]);
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let json = r#"{
+            "kmeans": {"n_points": 10, "dim": 3, "k": 2, "decay": 0.9, "block": 5},
+            "tomo": {"n_angles": 4, "n_det": 8, "img_h": 4, "img_w": 4,
+                     "n_ray": 8, "mlem_iters": 2, "angle_block": 2},
+            "artifacts": {
+                "m": {"file": "m.hlo.txt",
+                       "inputs": [{"shape": [10, 3], "dtype": "float32"}],
+                       "outputs": [{"shape": [10], "dtype": "int32"}]}
+            }
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.artifacts["m"].inputs[0].elements(), 30);
+        assert_eq!(m.artifacts["m"].outputs[0].dtype, "int32");
+        assert_eq!(m.kmeans.k, 2);
+        assert_eq!(m.tomo.n_det, 8);
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! SAGA-like resource-adaptor layer (paper §4.1).
+//!
+//! Pilot-Streaming provisions resources through the SAGA Job API, "a
+//! lightweight, standards-based abstraction to resource management
+//! systems, such as SLURM, SGE and PBS/Torque".  This module is the
+//! equivalent: a [`ResourceAdaptor`] trait with
+//!
+//! * [`LocalAdaptor`] — immediate placement (tests, examples), and
+//! * [`SimSlurmAdaptor`] — a modeled batch queue whose wait times follow
+//!   a [`QueueModel`], optionally *scaled into real time* so examples
+//!   can show realistic pacing without sleeping for minutes.  Virtual
+//!   durations are always recorded on the job for the Figure 6 startup
+//!   analysis.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::QueueModel;
+use crate::error::{Error, Result};
+
+/// SAGA-style job description (attributes map 1:1 onto the paper's
+/// Pilot-Compute-Description, §4.1).
+#[derive(Debug, Clone)]
+pub struct JobDescription {
+    /// Bootstrap executable (framework plugin id, e.g. "kafka").
+    pub executable: String,
+    pub number_of_nodes: usize,
+    pub cores_per_node: usize,
+    pub walltime_secs: u64,
+    pub queue: String,
+    pub project: String,
+}
+
+impl Default for JobDescription {
+    fn default() -> Self {
+        JobDescription {
+            executable: String::new(),
+            number_of_nodes: 1,
+            cores_per_node: 1,
+            walltime_secs: 3600,
+            queue: "normal".into(),
+            project: "pilot-streaming".into(),
+        }
+    }
+}
+
+/// SAGA job states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    New,
+    Pending,
+    Running,
+    Done,
+    Canceled,
+    Failed,
+}
+
+/// Handle to a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobHandle(pub u64);
+
+/// Metadata recorded for a job (virtual durations for Fig 6).
+#[derive(Debug, Clone)]
+pub struct JobInfo {
+    pub description: JobDescription,
+    pub state: JobState,
+    /// Modeled queue wait (virtual seconds).
+    pub queue_wait_secs: f64,
+}
+
+/// Adaptor SPI: what Pilot-Streaming needs from a resource manager.
+pub trait ResourceAdaptor: Send + Sync {
+    /// Submit a placeholder job; returns once accepted (Pending).
+    fn submit(&self, description: JobDescription) -> Result<JobHandle>;
+
+    /// Block until the job is Running (queue wait elapses) or fails.
+    fn wait_running(&self, handle: JobHandle) -> Result<()>;
+
+    fn state(&self, handle: JobHandle) -> Result<JobState>;
+
+    fn info(&self, handle: JobHandle) -> Result<JobInfo>;
+
+    fn cancel(&self, handle: JobHandle) -> Result<()>;
+
+    /// Adaptor scheme name (diagnostics, e.g. "slurm", "fork").
+    fn scheme(&self) -> &'static str;
+}
+
+fn update_state(
+    jobs: &Mutex<HashMap<JobHandle, JobInfo>>,
+    handle: JobHandle,
+    f: impl FnOnce(&mut JobInfo),
+) -> Result<()> {
+    let mut jobs = jobs.lock().unwrap();
+    let info = jobs
+        .get_mut(&handle)
+        .ok_or_else(|| Error::Pilot(format!("unknown job {handle:?}")))?;
+    f(info);
+    Ok(())
+}
+
+/// Immediate-placement adaptor (interactive/local resources).
+pub struct LocalAdaptor {
+    jobs: Mutex<HashMap<JobHandle, JobInfo>>,
+    next_id: AtomicU64,
+}
+
+impl Default for LocalAdaptor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LocalAdaptor {
+    pub fn new() -> Self {
+        LocalAdaptor {
+            jobs: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+}
+
+impl ResourceAdaptor for LocalAdaptor {
+    fn submit(&self, description: JobDescription) -> Result<JobHandle> {
+        let handle = JobHandle(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.jobs.lock().unwrap().insert(
+            handle,
+            JobInfo {
+                description,
+                state: JobState::Running,
+                queue_wait_secs: 0.0,
+            },
+        );
+        Ok(handle)
+    }
+
+    fn wait_running(&self, handle: JobHandle) -> Result<()> {
+        match self.state(handle)? {
+            JobState::Running => Ok(()),
+            s => Err(Error::Pilot(format!("job {handle:?} in state {s:?}"))),
+        }
+    }
+
+    fn state(&self, handle: JobHandle) -> Result<JobState> {
+        Ok(self.info(handle)?.state)
+    }
+
+    fn info(&self, handle: JobHandle) -> Result<JobInfo> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .get(&handle)
+            .cloned()
+            .ok_or_else(|| Error::Pilot(format!("unknown job {handle:?}")))
+    }
+
+    fn cancel(&self, handle: JobHandle) -> Result<()> {
+        update_state(&self.jobs, handle, |i| i.state = JobState::Canceled)
+    }
+
+    fn scheme(&self) -> &'static str {
+        "fork"
+    }
+}
+
+/// Modeled SLURM batch queue.
+///
+/// `time_scale` maps virtual queue seconds to real sleeping: 0.0 (tests,
+/// benches — no sleeping, purely recorded) up to 1.0 (full fidelity).
+pub struct SimSlurmAdaptor {
+    model: QueueModel,
+    time_scale: f64,
+    jobs: Mutex<HashMap<JobHandle, JobInfo>>,
+    next_id: AtomicU64,
+}
+
+impl SimSlurmAdaptor {
+    pub fn new(model: QueueModel, time_scale: f64) -> Arc<Self> {
+        Arc::new(SimSlurmAdaptor {
+            model,
+            time_scale: time_scale.clamp(0.0, 1.0),
+            jobs: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Wrangler-ish queue: ~20 s base scheduling latency plus a small
+    /// per-node placement cost.
+    pub fn wrangler(time_scale: f64) -> Arc<Self> {
+        Self::new(
+            QueueModel {
+                base_secs: 20.0,
+                per_node_secs: 0.5,
+            },
+            time_scale,
+        )
+    }
+}
+
+impl ResourceAdaptor for SimSlurmAdaptor {
+    fn submit(&self, description: JobDescription) -> Result<JobHandle> {
+        let handle = JobHandle(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let wait = self.model.wait_secs(description.number_of_nodes);
+        self.jobs.lock().unwrap().insert(
+            handle,
+            JobInfo {
+                description,
+                state: JobState::Pending,
+                queue_wait_secs: wait,
+            },
+        );
+        Ok(handle)
+    }
+
+    fn wait_running(&self, handle: JobHandle) -> Result<()> {
+        let info = self.info(handle)?;
+        match info.state {
+            JobState::Pending => {
+                if self.time_scale > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(
+                        info.queue_wait_secs * self.time_scale,
+                    ));
+                }
+                update_state(&self.jobs, handle, |i| i.state = JobState::Running)
+            }
+            JobState::Running => Ok(()),
+            s => Err(Error::Pilot(format!("job {handle:?} in state {s:?}"))),
+        }
+    }
+
+    fn state(&self, handle: JobHandle) -> Result<JobState> {
+        Ok(self.info(handle)?.state)
+    }
+
+    fn info(&self, handle: JobHandle) -> Result<JobInfo> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .get(&handle)
+            .cloned()
+            .ok_or_else(|| Error::Pilot(format!("unknown job {handle:?}")))
+    }
+
+    fn cancel(&self, handle: JobHandle) -> Result<()> {
+        update_state(&self.jobs, handle, |i| i.state = JobState::Canceled)
+    }
+
+    fn scheme(&self) -> &'static str {
+        "slurm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jd(nodes: usize) -> JobDescription {
+        JobDescription {
+            executable: "kafka".into(),
+            number_of_nodes: nodes,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn local_adaptor_runs_immediately() {
+        let a = LocalAdaptor::new();
+        let h = a.submit(jd(2)).unwrap();
+        assert_eq!(a.state(h).unwrap(), JobState::Running);
+        a.wait_running(h).unwrap();
+        assert_eq!(a.info(h).unwrap().queue_wait_secs, 0.0);
+        a.cancel(h).unwrap();
+        assert_eq!(a.state(h).unwrap(), JobState::Canceled);
+    }
+
+    #[test]
+    fn sim_slurm_records_queue_wait() {
+        let a = SimSlurmAdaptor::new(
+            QueueModel {
+                base_secs: 10.0,
+                per_node_secs: 1.0,
+            },
+            0.0, // no real sleeping in tests
+        );
+        let h = a.submit(jd(4)).unwrap();
+        assert_eq!(a.state(h).unwrap(), JobState::Pending);
+        assert_eq!(a.info(h).unwrap().queue_wait_secs, 14.0);
+        a.wait_running(h).unwrap();
+        assert_eq!(a.state(h).unwrap(), JobState::Running);
+        // Larger jobs wait longer (virtual).
+        let h8 = a.submit(jd(8)).unwrap();
+        assert!(a.info(h8).unwrap().queue_wait_secs > 14.0);
+    }
+
+    #[test]
+    fn cancel_pending_job_cannot_run() {
+        let a = SimSlurmAdaptor::wrangler(0.0);
+        let h = a.submit(jd(1)).unwrap();
+        a.cancel(h).unwrap();
+        assert!(a.wait_running(h).is_err());
+    }
+
+    #[test]
+    fn unknown_handle_errors() {
+        let a = LocalAdaptor::new();
+        assert!(a.state(JobHandle(99)).is_err());
+        assert!(a.cancel(JobHandle(99)).is_err());
+    }
+}

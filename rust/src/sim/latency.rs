@@ -1,0 +1,144 @@
+//! Latency models for the Figure 7 experiment.
+//!
+//! Fig 7 compares end-to-end latency (production -> processing) at
+//! 100 msg/s across: a plain Kafka consumer, Spark Streaming with
+//! micro-batch windows from 0.2 s to 8 s, Amazon Kinesis and Google
+//! Pub/Sub.  The Kafka base latency is a component model (client
+//! serialize + two NIC hops + broker append + consumer poll); Spark
+//! adds batch-boundary wait (uniform over the window) plus task
+//! overhead — the paper reports the added overhead spanning ~0.2 s
+//! (0.2 s window) to ~3 s (8 s window).  Cloud services use the
+//! calibrated [`CloudBroker`] models.
+
+use crate::broker::cloud::CloudBroker;
+use crate::util::Rng;
+
+use super::cost::CostModel;
+
+/// Summary statistics for one latency configuration.
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    pub config: String,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+}
+
+fn summarize(config: &str, mut samples: Vec<f64>) -> LatencySummary {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    LatencySummary {
+        config: config.to_string(),
+        mean_secs: samples.iter().sum::<f64>() / n as f64,
+        p50_secs: samples[n / 2],
+        p99_secs: samples[((n as f64 * 0.99) as usize).min(n - 1)],
+    }
+}
+
+/// The Fig 7 latency simulator.
+pub struct LatencySim {
+    costs: CostModel,
+    msg_bytes: f64,
+    nic_bps: f64,
+    seed: u64,
+}
+
+impl LatencySim {
+    pub fn new(costs: CostModel, msg_bytes: f64, nic_bps: f64, seed: u64) -> Self {
+        LatencySim {
+            costs,
+            msg_bytes,
+            nic_bps,
+            seed,
+        }
+    }
+
+    /// One Kafka produce->consume latency sample: serialize + two NIC
+    /// hops + append + consumer long-poll delay (exponential, mean
+    /// a few ms) + client deserialization jitter.
+    fn kafka_sample(&self, rng: &mut Rng) -> f64 {
+        let serialize = self.costs.gen_static_secs.max(1e-4);
+        let hop = self.msg_bytes / self.nic_bps;
+        let append = self.msg_bytes / 120e6;
+        let poll = rng.exponential(1.0 / 0.004); // mean 4 ms poll delay
+        let jitter = rng.lognormal(-6.0, 0.5); // ~2.5 ms client overhead
+        serialize + 2.0 * hop + append + poll + jitter
+    }
+
+    /// Latency distribution of the plain Kafka consumer.
+    pub fn kafka(&self, n: usize) -> LatencySummary {
+        let mut rng = Rng::seed_from(self.seed);
+        let samples = (0..n).map(|_| self.kafka_sample(&mut rng)).collect();
+        summarize("kafka", samples)
+    }
+
+    /// Spark Streaming on top of Kafka with a micro-batch `window`:
+    /// records wait for the batch boundary (uniform over the window)
+    /// then pay scheduling + processing overhead.
+    pub fn spark_streaming(&self, window_secs: f64, n: usize) -> LatencySummary {
+        let mut rng = Rng::seed_from(self.seed ^ 0x5111);
+        let samples = (0..n)
+            .map(|_| {
+                let base = self.kafka_sample(&mut rng);
+                let boundary_wait = rng.f64() * window_secs;
+                base + boundary_wait + self.costs.task_overhead_secs
+            })
+            .collect();
+        summarize(&format!("spark-{window_secs}s"), samples)
+    }
+
+    /// Cloud broker latency (Kinesis / Pub/Sub models).
+    pub fn cloud(&self, broker: &CloudBroker, n: usize) -> LatencySummary {
+        summarize(broker.name(), broker.sample_latencies(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> LatencySim {
+        // Fig 7 uses the KMeans message at 100 msg/s.
+        LatencySim::new(CostModel::paper_era(), 0.32e6, 1.25e9, 11)
+    }
+
+    #[test]
+    fn fig7_ordering_kafka_below_spark_below_cloud() {
+        let s = sim();
+        let kafka = s.kafka(4000);
+        let spark = s.spark_streaming(1.0, 4000);
+        let pubsub = s.cloud(&CloudBroker::pubsub(1), 4000);
+        assert!(kafka.mean_secs < spark.mean_secs);
+        assert!(spark.mean_secs < pubsub.mean_secs);
+        // Paper: Pub/Sub ~6.2 s mean, the worst of all.
+        assert!((5.0..7.5).contains(&pubsub.mean_secs), "{}", pubsub.mean_secs);
+    }
+
+    #[test]
+    fn fig7_spark_overhead_tracks_window() {
+        let s = sim();
+        let kafka = s.kafka(4000).mean_secs;
+        // Paper: overhead ~0.2 s at a 0.2 s window, ~3 s at an 8 s window.
+        let w02 = s.spark_streaming(0.2, 4000).mean_secs - kafka;
+        let w8 = s.spark_streaming(8.0, 4000).mean_secs - kafka;
+        assert!((0.1..0.5).contains(&w02), "0.2s window overhead {w02}");
+        assert!((2.5..4.8).contains(&w8), "8s window overhead {w8}");
+        assert!(w8 > w02 * 8.0, "overhead grows ~linearly with window");
+    }
+
+    #[test]
+    fn fig7_kinesis_subsecond() {
+        let s = sim();
+        let kinesis = s.cloud(&CloudBroker::kinesis(2), 4000);
+        assert!((0.2..0.9).contains(&kinesis.mean_secs), "{}", kinesis.mean_secs);
+        assert!(kinesis.p99_secs > kinesis.p50_secs);
+    }
+
+    #[test]
+    fn fig7_kafka_millisecond_scale() {
+        let s = sim();
+        let kafka = s.kafka(4000);
+        assert!(kafka.mean_secs < 0.1, "kafka mean {} (ms-scale)", kafka.mean_secs);
+        assert!(kafka.p99_secs < 0.25);
+    }
+}

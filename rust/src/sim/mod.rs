@@ -1,0 +1,31 @@
+//! The simulation plane (DESIGN.md §4b).
+//!
+//! This host has one CPU core; the paper's evaluation spans 32 nodes /
+//! 1536 vcores.  The simulation plane reproduces the paper's figures at
+//! full scale in virtual time:
+//!
+//! * [`resources`] — timeline resources (FIFO servers, core banks) from
+//!   which queueing delays and saturation knees emerge;
+//! * [`cost`] — per-operation cost models, either *calibrated* from the
+//!   real plane (Rust generators + PJRT-executed artifacts) or the
+//!   *paper-era* Python-stack preset;
+//! * [`pipeline`] — the Fig 8 closed-loop producer simulation and the
+//!   Fig 9 micro-batch processing simulation;
+//! * [`latency`] — the Fig 7 latency component models;
+//! * [`startup`] — the Fig 6 startup grid (shared with the live
+//!   plugins' bootstrap models).
+
+pub mod cost;
+pub mod latency;
+pub mod pipeline;
+pub mod resources;
+pub mod startup;
+
+pub use cost::CostModel;
+pub use latency::{LatencySim, LatencySummary};
+pub use pipeline::{
+    ProcessingScenario, ProcessingSim, ProcessingSimResult, ProducerScenario, ProducerSim,
+    ProducerSimResult, SimMachine,
+};
+pub use resources::{CoreBank, SerialResource};
+pub use startup::{startup_grid, wrangler_queue, StartupPoint};

@@ -1,0 +1,105 @@
+//! Startup-time model for the Figure 6 experiment.
+//!
+//! Fig 6 reports Kafka / Spark / Dask cluster startup on Wrangler as a
+//! function of node count, decomposed into (i) the batch job placement
+//! and (ii) framework initialization.  The models below are the same
+//! ones the live plugins use ([`crate::plugins::bootstrap_model_for`]),
+//! so the simulated figure and the real coordinator can never drift
+//! apart.
+
+use crate::config::QueueModel;
+use crate::pilot::FrameworkKind;
+use crate::plugins::bootstrap_model_for;
+
+/// One Fig 6 data point.
+#[derive(Debug, Clone)]
+pub struct StartupPoint {
+    pub framework: FrameworkKind,
+    pub nodes: usize,
+    pub queue_wait_secs: f64,
+    pub framework_init_secs: f64,
+}
+
+impl StartupPoint {
+    pub fn total_secs(&self) -> f64 {
+        self.queue_wait_secs + self.framework_init_secs
+    }
+}
+
+/// Compute the startup grid for a set of frameworks and node counts.
+pub fn startup_grid(
+    frameworks: &[FrameworkKind],
+    node_counts: &[usize],
+    queue: QueueModel,
+) -> Vec<StartupPoint> {
+    let mut out = Vec::new();
+    for &fw in frameworks {
+        let model = bootstrap_model_for(fw);
+        for &nodes in node_counts {
+            out.push(StartupPoint {
+                framework: fw,
+                nodes,
+                queue_wait_secs: queue.wait_secs(nodes),
+                framework_init_secs: model.init_secs(nodes),
+            });
+        }
+    }
+    out
+}
+
+/// The paper's queue model for Wrangler (also used by SimSlurmAdaptor).
+pub fn wrangler_queue() -> QueueModel {
+    QueueModel {
+        base_secs: 20.0,
+        per_node_secs: 0.5,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_grid_shape() {
+        let grid = startup_grid(
+            &[FrameworkKind::Kafka, FrameworkKind::Spark, FrameworkKind::Dask],
+            &[1, 2, 4, 8, 16, 32],
+            wrangler_queue(),
+        );
+        assert_eq!(grid.len(), 18);
+        // For every node count: Kafka > Spark > Dask total startup.
+        for nodes in [1, 2, 4, 8, 16, 32] {
+            let get = |fw: FrameworkKind| {
+                grid.iter()
+                    .find(|p| p.framework == fw && p.nodes == nodes)
+                    .unwrap()
+                    .total_secs()
+            };
+            assert!(get(FrameworkKind::Kafka) > get(FrameworkKind::Spark));
+            assert!(get(FrameworkKind::Spark) > get(FrameworkKind::Dask));
+        }
+        // Monotone in node count.
+        for fw in [FrameworkKind::Kafka, FrameworkKind::Spark, FrameworkKind::Dask] {
+            let series: Vec<f64> = [1, 2, 4, 8, 16, 32]
+                .iter()
+                .map(|n| {
+                    grid.iter()
+                        .find(|p| p.framework == fw && p.nodes == *n)
+                        .unwrap()
+                        .total_secs()
+                })
+                .collect();
+            for w in series.windows(2) {
+                assert!(w[1] >= w[0], "{fw:?}: {series:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn startup_magnitudes_plausible_for_wrangler() {
+        // Sanity: startups are minutes-scale, not hours or millis.
+        let grid = startup_grid(&[FrameworkKind::Kafka], &[16], wrangler_queue());
+        let total = grid[0].total_secs();
+        assert!((60.0..600.0).contains(&total), "kafka@16 = {total}s");
+    }
+}

@@ -1,0 +1,149 @@
+//! Micro-benchmark harness (criterion is not in the offline dependency
+//! set, so `cargo bench` targets use this instead).
+//!
+//! Measures wall-clock per iteration with warmup, reports mean / p50 /
+//! p95 and throughput, and supports `--quick` (fewer iterations) and
+//! name filters passed by `cargo bench <filter>`.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+}
+
+impl Measurement {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>6} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_secs(self.mean_secs),
+            fmt_secs(self.p50_secs),
+            fmt_secs(self.p95_secs),
+        );
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Bench runner configured from `cargo bench` CLI args.
+pub struct Bench {
+    filter: Option<String>,
+    quick: bool,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::from_args()
+    }
+}
+
+impl Bench {
+    /// Parse `cargo bench`-style args: optional name filter, `--quick`,
+    /// and ignore harness flags like `--bench`.
+    pub fn from_args() -> Self {
+        let mut filter = None;
+        let mut quick = std::env::var_os("PILOT_BENCH_QUICK").is_some();
+        for a in std::env::args().skip(1) {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--bench" | "--exact" => {}
+                s if s.starts_with("--") => {}
+                s => filter = Some(s.to_string()),
+            }
+        }
+        Bench {
+            filter,
+            quick,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+
+    /// Time `f` for `iters` iterations (after `warmup` iterations).
+    pub fn run<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) -> Option<Measurement> {
+        if !self.enabled(name) {
+            return None;
+        }
+        let iters = if self.quick { iters.div_ceil(5) } else { iters }.max(3);
+        let warmup = (iters / 5).max(1);
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_secs: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50_secs: samples[samples.len() / 2],
+            p95_secs: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        };
+        m.print();
+        self.results.push(m.clone());
+        Some(m)
+    }
+
+    /// Run a whole-workload measurement once and report custom metrics
+    /// (used by the figure harnesses where "one iteration" is a full
+    /// simulated experiment).
+    pub fn run_once<F: FnOnce() -> Vec<(String, f64)>>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let t0 = Instant::now();
+        let metrics = f();
+        let secs = t0.elapsed().as_secs_f64();
+        print!("{:<44} {:>10}  ", name, fmt_secs(secs));
+        for (k, v) in &metrics {
+            print!("{k}={v:.3}  ");
+        }
+        println!();
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert!(fmt_secs(5e-6).contains("µs"));
+        assert!(fmt_secs(5e-3).contains("ms"));
+        assert!(fmt_secs(5.0).contains(" s"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-built utility substrates (offline environment: no serde, rand,
+//! clap or criterion in the vendored dependency set — see DESIGN.md
+//! §Substitutions).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

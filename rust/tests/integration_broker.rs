@@ -1,0 +1,215 @@
+//! Broker integration: throttled data plane, concurrent clients,
+//! ordering and bandwidth-saturation behaviour.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pilot_streaming::broker::{
+    BrokerCluster, Consumer, ConsumerConfig, Partitioner, Producer, ProducerConfig,
+};
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::config::MachineConfig;
+
+fn throttled_machine(nodes: usize, nic_mbps: f64, ssd_mbps: f64) -> Machine {
+    Machine::new(MachineConfig {
+        name: "itest".into(),
+        nodes,
+        cores_per_node: 4,
+        mem_gb_per_node: 8,
+        nic_mbps,
+        ssd_mbps,
+    })
+    .unwrap()
+}
+
+#[test]
+fn per_partition_ordering_under_concurrency() {
+    let machine = Machine::unthrottled(4);
+    let cluster = BrokerCluster::new(machine, vec![0]);
+    cluster.create_topic("ord", 2).unwrap();
+
+    // Two producer threads target distinct partitions.
+    let mut handles = Vec::new();
+    for p in 0..2usize {
+        let c = cluster.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..200u32 {
+                c.produce("ord", p, 1, &[i.to_le_bytes().to_vec()]).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Each partition's log preserves the producer's order exactly.
+    for p in 0..2 {
+        let recs = cluster
+            .fetch("ord", p, 0, usize::MAX, 2, Duration::from_millis(10))
+            .unwrap();
+        assert_eq!(recs.len(), 200);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.offset, i as u64);
+            assert_eq!(u32::from_le_bytes(r.value[..4].try_into().unwrap()), i as u32);
+        }
+    }
+}
+
+#[test]
+fn concurrent_group_consumers_partition_the_stream() {
+    let machine = Machine::unthrottled(4);
+    let cluster = BrokerCluster::new(machine, vec![0]);
+    cluster.create_topic("shared", 4).unwrap();
+    for i in 0..100u32 {
+        cluster
+            .produce("shared", (i % 4) as usize, 1, &[i.to_le_bytes().to_vec()])
+            .unwrap();
+    }
+    let mut handles = Vec::new();
+    for member in 0..2 {
+        let c = cluster.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut consumer = Consumer::join(
+                c,
+                "shared",
+                "g",
+                2 + member,
+                ConsumerConfig {
+                    fetch_timeout: Duration::from_millis(20),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let mut got = Vec::new();
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while Instant::now() < deadline {
+                let recs = consumer.poll().unwrap();
+                for r in &recs {
+                    got.push(u32::from_le_bytes(r.record.value[..4].try_into().unwrap()));
+                }
+                // A stable 2-member group over 4 partitions sees half.
+                if got.len() >= 50 {
+                    break;
+                }
+            }
+            got
+        }));
+    }
+    let mut all: Vec<u32> = handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+    all.sort();
+    all.dedup();
+    assert_eq!(all.len(), 100, "every message consumed exactly once");
+}
+
+#[test]
+fn nic_throttle_bounds_producer_throughput() {
+    // Broker node NIC at 50 MB/s: pushing 20 MB must take >= ~0.3 s
+    // (minus burst allowance).
+    let machine = throttled_machine(2, 50.0, 1000.0);
+    let cluster = BrokerCluster::new(machine, vec![0]);
+    cluster.create_topic("tp", 1).unwrap();
+    let payload = vec![0u8; 1 << 20]; // 1 MB
+    let start = Instant::now();
+    for _ in 0..20 {
+        cluster.produce("tp", 0, 1, &[payload.clone()]).unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let rate = 20.0 / secs;
+    assert!(
+        rate < 75.0,
+        "throughput {rate:.0} MB/s exceeds the 50 MB/s NIC model"
+    );
+}
+
+#[test]
+fn more_broker_nodes_raise_aggregate_bandwidth() {
+    // Same offered load, 1 vs 2 broker nodes with 40 MB/s disks:
+    // round-robin partitions spread appends over both disks.
+    let run = |brokers: usize| -> f64 {
+        let machine = throttled_machine(brokers + 1, 10_000.0, 40.0);
+        let nodes: Vec<usize> = (0..brokers).collect();
+        let cluster = BrokerCluster::new(machine, nodes);
+        cluster.create_topic("bw", brokers * 2).unwrap();
+        let payload = vec![0u8; 1 << 20];
+        let start = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..2 {
+            let c = cluster.clone();
+            let pl = payload.clone();
+            let parts = brokers * 2;
+            handles.push(std::thread::spawn(move || {
+                for i in 0..8 {
+                    c.produce("bw", (t * 8 + i) % parts, brokers, &[pl.clone()])
+                        .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        16.0 / start.elapsed().as_secs_f64()
+    };
+    let one = run(1);
+    let two = run(2);
+    assert!(
+        two > one * 1.4,
+        "2 brokers {two:.0} MB/s should beat 1 broker {one:.0} MB/s"
+    );
+}
+
+#[test]
+fn producer_batching_amortizes_under_throttle() {
+    let machine = throttled_machine(2, 200.0, 1000.0);
+    let cluster = BrokerCluster::new(machine, vec![0]);
+    cluster.create_topic("batch", 2).unwrap();
+    let mut producer = Producer::new(
+        cluster.clone(),
+        "batch",
+        1,
+        ProducerConfig {
+            batch_bytes: 256 << 10,
+            linger: Duration::from_millis(500),
+            partitioner: Partitioner::RoundRobin,
+        },
+    )
+    .unwrap();
+    for _ in 0..64 {
+        producer.send(None, vec![0u8; 8 << 10]).unwrap();
+    }
+    producer.flush().unwrap();
+    assert_eq!(producer.metrics.messages(), 64);
+    let total: u64 = (0..2)
+        .map(|p| cluster.end_offset("batch", p).unwrap())
+        .sum();
+    assert_eq!(total, 64);
+}
+
+#[test]
+fn cloud_brokers_deliver_after_model_latency() {
+    use pilot_streaming::broker::cloud::{CloudBroker, CloudLatencyModel};
+    let broker = CloudBroker::new(
+        "test-fast",
+        CloudLatencyModel {
+            wan_secs: 0.005,
+            mu: -4.0, // ~18 ms service
+            sigma: 0.3,
+        },
+        9,
+    );
+    for i in 0..10u8 {
+        broker.publish(vec![i]).unwrap();
+    }
+    let t0 = Instant::now();
+    let mut got = Vec::new();
+    while got.len() < 10 && t0.elapsed() < Duration::from_secs(5) {
+        got.extend(broker.poll());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(got.len(), 10);
+    let mean: f64 = got.iter().map(|r| r.latency_secs()).sum::<f64>() / 10.0;
+    assert!(mean > 0.01, "latency model applied: mean {mean}");
+    let shared = Arc::new(broker);
+    assert_eq!(shared.in_flight(), 0);
+}

@@ -1,0 +1,145 @@
+//! Pilot-service integration: multi-framework deployments, dynamic
+//! scaling across framework kinds, resource accounting under churn.
+
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::pilot::{
+    DaskDescription, FlinkDescription, FrameworkKind, KafkaDescription, PilotComputeDescription,
+    PilotComputeService, PilotState, SparkDescription,
+};
+use pilot_streaming::saga::{LocalAdaptor, SimSlurmAdaptor};
+use std::sync::Arc;
+
+#[test]
+fn full_streaming_landscape_on_one_machine() {
+    // The paper's §6.5 deployment shape: broker + producer + processing
+    // pilots side by side on one machine, each independently sized.
+    let service = PilotComputeService::new(Machine::unthrottled(8));
+    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(2)).unwrap();
+    let (dask, producers) = service.start_dask(DaskDescription::new(2)).unwrap();
+    let (spark, engine) = service.start_spark(SparkDescription::new(2)).unwrap();
+    assert_eq!(service.machine().free_nodes(), 2);
+    assert_eq!(service.pilots().len(), 3);
+
+    // All three frameworks usable concurrently.
+    cluster.create_topic("x", 4).unwrap();
+    cluster.produce("x", 0, 0, &[vec![1, 2, 3]]).unwrap();
+    let f = producers.submit(|_| 40 + 2).unwrap();
+    assert_eq!(f.wait().unwrap(), 42);
+    assert!(engine.executor_count() > 0);
+
+    for p in [&spark, &dask, &kafka] {
+        service.stop_pilot(p).unwrap();
+    }
+    assert_eq!(service.machine().free_nodes(), 8);
+    assert!(service.pilots().is_empty());
+}
+
+#[test]
+fn startup_breakdown_ordering_matches_fig6() {
+    // Live pilots record the same bootstrap models Fig 6 plots.
+    let service = PilotComputeService::new(Machine::unthrottled(16));
+    let mut totals = std::collections::HashMap::new();
+    for (kind, nodes) in [
+        (FrameworkKind::Kafka, 4usize),
+        (FrameworkKind::Spark, 4),
+        (FrameworkKind::Dask, 4),
+        (FrameworkKind::Flink, 4),
+    ] {
+        let pilot = service
+            .create_pilot(PilotComputeDescription::new("slurm://wrangler", kind, nodes))
+            .unwrap();
+        totals.insert(kind, pilot.startup().unwrap().total_secs());
+        service.stop_pilot(&pilot).unwrap();
+    }
+    assert!(totals[&FrameworkKind::Kafka] > totals[&FrameworkKind::Spark]);
+    assert!(totals[&FrameworkKind::Spark] > totals[&FrameworkKind::Dask]);
+    assert!(totals[&FrameworkKind::Flink] > totals[&FrameworkKind::Dask]);
+}
+
+#[test]
+fn repeated_extend_shrink_cycles_are_leak_free() {
+    let service = PilotComputeService::new(Machine::unthrottled(8));
+    let (parent, engine) = service
+        .start_dask(DaskDescription::new(2).with_config("workers_per_node", "1"))
+        .unwrap();
+    for _ in 0..5 {
+        let ext = service.extend_pilot(&parent, 3).unwrap();
+        assert_eq!(service.machine().free_nodes(), 3);
+        // Extension workers actually pull work.
+        let futs: Vec<_> = (0..12)
+            .map(|i| engine.submit(move |_| i).unwrap())
+            .collect();
+        for (i, f) in futs.into_iter().enumerate() {
+            assert_eq!(f.wait().unwrap(), i);
+        }
+        service.stop_pilot(&ext).unwrap();
+        assert_eq!(service.machine().free_nodes(), 6);
+    }
+    // Workers drained back to the base 2.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while engine.worker_count() != 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(engine.worker_count(), 2);
+    service.stop_pilot(&parent).unwrap();
+}
+
+#[test]
+fn kafka_extension_rebalances_partition_leaders() {
+    let service = PilotComputeService::new(Machine::unthrottled(6));
+    let (parent, cluster) = service.start_kafka(KafkaDescription::new(1)).unwrap();
+    cluster.create_topic("t", 8).unwrap();
+    let leaders_before: Vec<_> = (0..8).map(|p| cluster.leader_node("t", p).unwrap()).collect();
+    assert!(leaders_before.iter().all(|l| *l == leaders_before[0]));
+
+    let ext = service.extend_pilot(&parent, 3).unwrap();
+    let leaders_after: Vec<_> = (0..8).map(|p| cluster.leader_node("t", p).unwrap()).collect();
+    let distinct: std::collections::HashSet<_> = leaders_after.iter().collect();
+    assert_eq!(distinct.len(), 4, "leaders spread over 4 brokers");
+
+    // Data written before the rebalance is still readable.
+    cluster.produce("t", 0, 5, &[vec![9]]).unwrap();
+    let recs = cluster
+        .fetch("t", 0, 0, usize::MAX, 5, std::time::Duration::from_millis(50))
+        .unwrap();
+    assert_eq!(recs.len(), 1);
+
+    service.stop_pilot(&ext).unwrap();
+    assert_eq!(cluster.broker_nodes().len(), 1);
+    service.stop_pilot(&parent).unwrap();
+}
+
+#[test]
+fn adaptor_choice_affects_queue_wait() {
+    let machine = Machine::unthrottled(4);
+    let local = PilotComputeService::with_adaptor(
+        machine.clone(),
+        Arc::new(LocalAdaptor::new()),
+        0.0,
+    );
+    let (p1, _) = local.start_kafka(KafkaDescription::new(1)).unwrap();
+    assert_eq!(p1.startup().unwrap().queue_wait_secs, 0.0, "fork adaptor");
+
+    let slurm = PilotComputeService::with_adaptor(machine, SimSlurmAdaptor::wrangler(0.0), 0.0);
+    let (p2, _) = slurm.start_kafka(KafkaDescription::new(1)).unwrap();
+    assert!(p2.startup().unwrap().queue_wait_secs > 0.0, "slurm queue");
+    local.stop_pilot(&p1).unwrap();
+    slurm.stop_pilot(&p2).unwrap();
+}
+
+#[test]
+fn failed_pilot_does_not_leak_nodes() {
+    let service = PilotComputeService::new(Machine::unthrottled(2));
+    let (ok, _) = service.start_kafka(KafkaDescription::new(2)).unwrap();
+    // Machine is now full: next pilot fails...
+    let err = service.create_pilot(FlinkDescription::new(1)).unwrap_err();
+    assert!(err.to_string().contains("free"));
+    // ...without leaking, and the failed pilot isn't registered.
+    assert_eq!(service.pilots().len(), 1);
+    service.stop_pilot(&ok).unwrap();
+    assert_eq!(service.machine().free_nodes(), 2);
+    // And the machine is usable again.
+    let (again, _) = service.start_dask(DaskDescription::new(2)).unwrap();
+    assert_eq!(again.state(), PilotState::Running);
+    service.stop_pilot(&again).unwrap();
+}

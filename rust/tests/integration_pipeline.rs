@@ -1,0 +1,161 @@
+//! Whole-pipeline integration on the real plane: MASS -> broker ->
+//! micro-batch engine -> MASA processors executing AOT artifacts.
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::engine::{MicroBatchEngine, TaskEngine};
+use pilot_streaming::miniapp::{
+    MasaApp, MasaConfig, MassConfig, MassSource, ProcessorKind, SourceKind,
+};
+use pilot_streaming::pilot::{
+    DaskDescription, KafkaDescription, PilotComputeService, SparkDescription,
+};
+use pilot_streaming::runtime::ModelRuntime;
+
+fn runtime() -> ModelRuntime {
+    ModelRuntime::load_default().expect("run `make artifacts` first")
+}
+
+fn drain(job: &pilot_streaming::engine::StreamingJobHandle, expect: u64, secs: u64) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while job.stats().processed.messages() < expect && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn kmeans_pipeline_conserves_messages_and_learns() {
+    let rt = runtime();
+    let k = rt.manifest().kmeans.k;
+    let machine = Machine::unthrottled(4);
+    let cluster = pilot_streaming::broker::BrokerCluster::new(machine.clone(), vec![0]);
+    cluster.create_topic("km", 3).unwrap();
+    let producers = TaskEngine::new(machine.clone(), vec![1], 2);
+    let engine = MicroBatchEngine::new(machine, vec![2, 3], 1);
+
+    let masa = MasaApp::new(
+        MasaConfig::new(ProcessorKind::KMeans, "km", Duration::from_millis(100)),
+        rt,
+    );
+    masa.processor.warmup().unwrap();
+    let job = masa.start(&engine, cluster.clone()).unwrap();
+
+    let mut cfg = MassConfig::new(SourceKind::KmeansRandom { n_centroids: k }, "km");
+    cfg.messages_per_producer = 6;
+    let report = MassSource::new(cfg).run(&producers, &cluster, 2).unwrap();
+    assert_eq!(report.messages, 12);
+
+    drain(&job, 12, 120);
+    let stats = job.stop();
+    assert_eq!(stats.processed.messages(), 12, "message conservation");
+    assert_eq!(masa.processor.stats.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+
+    let model = masa.processor.model();
+    assert_eq!(model.updates, 12, "one model update per message");
+    // The decayed updates must pull inertia down as the model locks on.
+    assert!(
+        model.last_inertia < 1e6,
+        "inertia {} did not drop",
+        model.last_inertia
+    );
+    engine.stop();
+    producers.stop();
+}
+
+#[test]
+fn gridrec_pipeline_via_pilot_service() {
+    let rt = runtime();
+    let template = Arc::new(rt.read_f32_file("template_sinogram.bin").unwrap());
+    let service = PilotComputeService::new(Machine::unthrottled(6));
+    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1)).unwrap();
+    let (dask, producers) = service
+        .start_dask(DaskDescription::new(1).with_config("workers_per_node", "2"))
+        .unwrap();
+    let (spark, engine) = service
+        .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+        .unwrap();
+    cluster.create_topic("aps", 2).unwrap();
+
+    let masa = MasaApp::new(
+        MasaConfig::new(ProcessorKind::GridRec, "aps", Duration::from_millis(150)),
+        rt.clone(),
+    );
+    masa.processor.warmup().unwrap();
+    let job = masa.start(&engine, cluster.clone()).unwrap();
+
+    let mut cfg = MassConfig::new(SourceKind::Lightsource { template }, "aps");
+    cfg.messages_per_producer = 3;
+    let report = MassSource::new(cfg).run(&producers, &cluster, 2).unwrap();
+    assert_eq!(report.messages, 6);
+    // 2 MB padded messages on the wire.
+    assert_eq!(report.bytes, 6 * 2_000_000);
+
+    drain(&job, 6, 300);
+    let stats = job.stop();
+    assert_eq!(stats.processed.messages(), 6);
+    let img = masa.processor.last_image();
+    assert_eq!(img.len(), rt.manifest().tomo.img_h * rt.manifest().tomo.img_w);
+    assert!(img.iter().any(|v| *v > 0.1), "reconstruction has structure");
+
+    service.stop_pilot(&spark).unwrap();
+    service.stop_pilot(&dask).unwrap();
+    service.stop_pilot(&kafka).unwrap();
+}
+
+#[test]
+fn pipeline_survives_mid_stream_extension() {
+    let rt = runtime();
+    let k = rt.manifest().kmeans.k;
+    let service = PilotComputeService::new(Machine::unthrottled(6));
+    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1)).unwrap();
+    let (dask, producers) = service
+        .start_dask(DaskDescription::new(1).with_config("workers_per_node", "2"))
+        .unwrap();
+    let (spark, engine) = service
+        .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+        .unwrap();
+    cluster.create_topic("km2", 4).unwrap();
+
+    let masa = MasaApp::new(
+        MasaConfig::new(ProcessorKind::KMeans, "km2", Duration::from_millis(100)),
+        rt,
+    );
+    masa.processor.warmup().unwrap();
+    let job = masa.start(&engine, cluster.clone()).unwrap();
+
+    // Produce on a background thread while we extend the spark pilot.
+    let producer_thread = {
+        let cluster = cluster.clone();
+        let producers = producers.clone();
+        std::thread::spawn(move || {
+            let mut cfg = MassConfig::new(SourceKind::KmeansRandom { n_centroids: k }, "km2");
+            cfg.messages_per_producer = 8;
+            MassSource::new(cfg).run(&producers, &cluster, 2).unwrap()
+        })
+    };
+    std::thread::sleep(Duration::from_millis(100));
+    let ext = service.extend_pilot(&spark, 2).unwrap();
+    let report = producer_thread.join().unwrap();
+
+    drain(&job, report.messages, 180);
+    let stats = job.stop();
+    assert_eq!(stats.processed.messages(), report.messages);
+
+    service.stop_pilot(&ext).unwrap();
+    service.stop_pilot(&spark).unwrap();
+    service.stop_pilot(&dask).unwrap();
+    service.stop_pilot(&kafka).unwrap();
+}
+
+#[test]
+fn table1_characterization_runs() {
+    let rt = runtime();
+    let rec = pilot_streaming::exp::table1(&rt).unwrap();
+    let csv = rec.to_csv();
+    assert!(csv.contains("kmeans"));
+    assert!(csv.contains("lightsource-gridrec"));
+    assert_eq!(csv.lines().count(), 3, "header + 2 workloads: {csv}");
+}

@@ -1,0 +1,170 @@
+//! Cross-language round trip: JAX -> HLO text -> PJRT-in-Rust.
+//!
+//! `aot.py` writes golden test vectors (`testvectors/<name>.in*.bin` /
+//! `.out*.bin`) produced by live-JAX evaluation of every artifact.
+//! These tests execute the compiled HLO artifacts through the Rust
+//! runtime on the same inputs and assert the numbers match — the core
+//! correctness signal for the serving path.  Requires `make artifacts`.
+
+use pilot_streaming::runtime::{ModelRuntime, Tensor};
+
+fn runtime() -> ModelRuntime {
+    ModelRuntime::load_default().expect("run `make artifacts` first")
+}
+
+fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    let mut worst_idx = 0;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let err = (g - w).abs();
+        let tol = atol + rtol * w.abs();
+        if err - tol > worst {
+            worst = err - tol;
+            worst_idx = i;
+        }
+    }
+    assert!(
+        worst <= 0.0,
+        "{what}: mismatch at {worst_idx}: got {} want {} (excess {worst})",
+        got[worst_idx],
+        want[worst_idx]
+    );
+}
+
+fn roundtrip(name: &str) {
+    let rt = runtime();
+    let meta = rt.meta(name).unwrap().clone();
+    let inputs: Vec<Vec<f32>> = (0..meta.inputs.len())
+        .map(|i| {
+            rt.read_f32_file(&format!("testvectors/{name}.in{i}.bin"))
+                .unwrap()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let outs = rt.execute(name, &refs).unwrap();
+    assert_eq!(outs.len(), meta.outputs.len(), "{name}: output arity");
+    for (i, (out, sig)) in outs.iter().zip(&meta.outputs).enumerate() {
+        let what = format!("{name}.out{i}");
+        match out {
+            Tensor::F32(got) => {
+                let want = rt
+                    .read_f32_file(&format!("testvectors/{name}.out{i}.bin"))
+                    .unwrap();
+                assert_allclose(got, &want, 1e-4, 1e-4, &what);
+            }
+            Tensor::I32(got) => {
+                let want = rt
+                    .read_i32_file(&format!("testvectors/{name}.out{i}.bin"))
+                    .unwrap();
+                assert_eq!(got, &want, "{what}: int mismatch");
+            }
+        }
+        assert_eq!(out.len(), sig.elements(), "{what}: shape");
+    }
+}
+
+#[test]
+fn golden_kmeans_score() {
+    roundtrip("kmeans_score");
+}
+
+#[test]
+fn golden_kmeans_update() {
+    roundtrip("kmeans_update");
+}
+
+#[test]
+fn golden_gridrec() {
+    roundtrip("gridrec");
+}
+
+#[test]
+fn golden_mlem() {
+    roundtrip("mlem");
+}
+
+#[test]
+fn golden_radon() {
+    roundtrip("radon");
+}
+
+#[test]
+fn gridrec_of_template_matches_phantom() {
+    // Full physical pipeline: radon(phantom) -> gridrec -> ~phantom.
+    let rt = runtime();
+    let tomo = rt.manifest().tomo.clone();
+    let sino = rt.read_f32_file("template_sinogram.bin").unwrap();
+    let phantom = rt.read_f32_file("phantom.bin").unwrap();
+    let outs = rt.execute("gridrec", &[&sino]).unwrap();
+    let img = outs[0].as_f32().unwrap();
+    let (h, w) = (tomo.img_h, tomo.img_w);
+    let mut se = 0.0f64;
+    for i in 16..h - 16 {
+        for j in 16..w - 16 {
+            let d = (img[i * w + j] - phantom[i * w + j]) as f64;
+            se += d * d;
+        }
+    }
+    let rmse = (se / ((h - 32) * (w - 32)) as f64).sqrt();
+    assert!(rmse < 0.12, "gridrec rmse {rmse}");
+}
+
+#[test]
+fn mlem_reconstruction_is_nonnegative_and_bounded() {
+    let rt = runtime();
+    let sino = rt.read_f32_file("template_sinogram.bin").unwrap();
+    let outs = rt.execute("mlem", &[&sino]).unwrap();
+    let img = outs[0].as_f32().unwrap();
+    assert!(img.iter().all(|v| *v >= 0.0), "EM preserves nonnegativity");
+    assert!(img.iter().all(|v| *v < 100.0), "EM bounded");
+    assert!(img.iter().any(|v| *v > 0.1), "EM found structure");
+}
+
+#[test]
+fn execute_validates_shapes_and_names() {
+    let rt = runtime();
+    assert!(rt.execute("nope", &[]).is_err(), "unknown artifact");
+    let short = vec![0.0f32; 3];
+    assert!(
+        rt.execute("gridrec", &[&short]).is_err(),
+        "wrong input length"
+    );
+    let sino = vec![0.1f32; rt.manifest().tomo.n_angles * rt.manifest().tomo.n_det];
+    assert!(
+        rt.execute("gridrec", &[&sino, &sino]).is_err(),
+        "wrong arity"
+    );
+}
+
+#[test]
+fn runtime_is_shareable_across_threads() {
+    // TLS clients: each thread compiles its own executable and gets
+    // identical numbers.
+    let rt = runtime();
+    let sino = std::sync::Arc::new(rt.read_f32_file("template_sinogram.bin").unwrap());
+    let expect = rt.execute("gridrec", &[&sino]).unwrap()[0]
+        .as_f32()
+        .unwrap()
+        .to_vec();
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let rt = rt.clone();
+        let sino = sino.clone();
+        let expect = expect.clone();
+        handles.push(std::thread::spawn(move || {
+            let outs = rt.execute("gridrec", &[&sino]).unwrap();
+            assert_eq!(outs[0].as_f32().unwrap(), expect.as_slice());
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn calibrate_returns_positive_costs() {
+    let rt = runtime();
+    let secs = rt.calibrate("kmeans_update", 3).unwrap();
+    assert!(secs > 0.0 && secs < 1.0, "kmeans_update {secs}s");
+}

@@ -1,0 +1,245 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The offline dependency set has no `proptest`, so this file carries a
+//! small seeded-random property harness (`props!`): each property runs
+//! against many generated cases; failures print the seed for replay.
+
+use pilot_streaming::broker::{BrokerCluster, LogConfig, PartitionLog};
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::miniapp::{Message, PayloadKind};
+use pilot_streaming::util::{Json, Rng};
+
+const CASES: usize = 200;
+
+/// Run `f` over `CASES` seeded cases; panic messages carry the seed.
+fn check<F: Fn(&mut Rng)>(name: &str, f: F) {
+    for case in 0..CASES {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Partition log invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_log_offsets_dense_and_values_roundtrip() {
+    check("log-roundtrip", |rng| {
+        let mut log = PartitionLog::new(LogConfig {
+            segment_bytes: 1 + rng.below(64),
+            retention_bytes: None,
+        });
+        let mut expect: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..rng.below(20) + 1 {
+            let batch: Vec<Vec<u8>> = (0..rng.below(5) + 1)
+                .map(|_| (0..rng.below(16)).map(|_| rng.below(256) as u8).collect())
+                .collect();
+            let base = log.append_batch(batch.iter().map(|v| v.as_slice()), 0);
+            assert_eq!(base as usize, expect.len(), "dense offsets");
+            expect.extend(batch);
+        }
+        // Full read returns exactly what was appended, in order.
+        let recs = log.read(0, usize::MAX).unwrap();
+        assert_eq!(recs.len(), expect.len());
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.offset, i as u64);
+            assert_eq!(r.value, expect[i]);
+        }
+        // Random mid-log reads agree with the suffix.
+        if !expect.is_empty() {
+            let from = rng.below(expect.len());
+            let recs = log.read(from as u64, usize::MAX).unwrap();
+            assert_eq!(recs.len(), expect.len() - from);
+            assert_eq!(recs[0].value, expect[from]);
+        }
+    });
+}
+
+#[test]
+fn prop_log_retention_never_loses_tail() {
+    check("log-retention", |rng| {
+        let retention = 64 + rng.below(256);
+        let mut log = PartitionLog::new(LogConfig {
+            segment_bytes: 16 + rng.below(32),
+            retention_bytes: Some(retention),
+        });
+        let mut total = 0u64;
+        for _ in 0..rng.below(60) + 5 {
+            let len = rng.below(24);
+            let v: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            log.append_batch([v.as_slice()], 0);
+            total += 1;
+            // Invariants after every append:
+            assert_eq!(log.end_offset(), total);
+            assert!(log.start_offset() <= log.end_offset());
+            // The newest record is always readable.
+            let recs = log.read(total - 1, usize::MAX).unwrap();
+            assert_eq!(recs.len(), 1);
+            assert_eq!(recs[0].value, v);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Consumer-group assignment invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_group_assignment_is_partition_of_topic() {
+    check("group-partition", |rng| {
+        let n_parts = 1 + rng.below(24);
+        let cluster = BrokerCluster::new(Machine::unthrottled(1), vec![0]);
+        cluster.create_topic("t", n_parts).unwrap();
+        let n_members = 1 + rng.below(8);
+        let members: Vec<u64> = (0..n_members)
+            .map(|_| cluster.group_join("g", "t").0)
+            .collect();
+        // Randomly remove some members (never all).
+        let mut live = members.clone();
+        while live.len() > 1 && rng.below(2) == 0 {
+            let idx = rng.below(live.len());
+            let m = live.remove(idx);
+            cluster.group_leave("g", "t", m);
+        }
+        // Union of assignments == all partitions, pairwise disjoint.
+        let mut seen = vec![false; n_parts];
+        for m in &live {
+            let (_, parts) = cluster.group_assignment("g", "t", *m).unwrap();
+            for p in parts {
+                assert!(!seen[p], "partition {p} double-assigned");
+                seen[p] = true;
+            }
+        }
+        assert!(seen.iter().all(|s| *s), "all partitions covered: {seen:?}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Wire format invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_wire_roundtrip_any_payload() {
+    check("wire-roundtrip", |rng| {
+        let kind = if rng.below(2) == 0 {
+            PayloadKind::KmeansPoints
+        } else {
+            PayloadKind::Sinogram
+        };
+        let n = rng.below(500);
+        let values: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        let msg = Message::new(kind, rng.next_u64(), rng.next_u64(), values);
+        let target = rng.below(4096);
+        let bytes = msg.encode(target);
+        assert!(bytes.len() >= target.min(bytes.len()));
+        let back = Message::decode(&bytes).unwrap();
+        assert_eq!(back, msg);
+    });
+}
+
+#[test]
+fn prop_wire_decode_never_panics_on_garbage() {
+    check("wire-garbage", |rng| {
+        let n = rng.below(256);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        // Must return Ok or Err, never panic.
+        let _ = Message::decode(&bytes);
+        // Truncations of a valid message never panic either.
+        let msg = Message::new(PayloadKind::Sinogram, 1, 2, vec![1.0; 8]);
+        let full = msg.encode(64);
+        let cut = rng.below(full.len());
+        let _ = Message::decode(&full[..cut]);
+    });
+}
+
+// ---------------------------------------------------------------------
+// JSON invariants
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.gauss() * 1e3).round()),
+        3 => {
+            let n = rng.below(12);
+            Json::Str(
+                (0..n)
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut obj = Json::obj();
+            for i in 0..rng.below(4) {
+                obj = obj.set(&format!("k{i}"), random_json(rng, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+#[test]
+fn prop_json_display_parse_roundtrip() {
+    check("json-roundtrip", |rng| {
+        let j = random_json(rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(back, j, "roundtrip of {text}");
+    });
+}
+
+#[test]
+fn prop_json_parse_never_panics() {
+    check("json-garbage", |rng| {
+        let n = rng.below(64);
+        let garbage: String = (0..n)
+            .map(|_| char::from_u32(32 + rng.below(96) as u32).unwrap())
+            .collect();
+        let _ = Json::parse(&garbage); // Ok or Err, never panic
+    });
+}
+
+// ---------------------------------------------------------------------
+// Machine allocation invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_machine_allocations_disjoint_and_conserved() {
+    check("machine-conservation", |rng| {
+        let total = 4 + rng.below(12);
+        let machine = Machine::unthrottled(total);
+        let mut held: Vec<(String, usize)> = Vec::new();
+        for step in 0..rng.below(20) + 1 {
+            if rng.below(2) == 0 {
+                let want = 1 + rng.below(4);
+                let id = format!("p{step}");
+                if let Ok(nodes) = machine.allocate(&id, want) {
+                    assert_eq!(nodes.len(), want);
+                    held.push((id, want));
+                }
+            } else if !held.is_empty() {
+                let idx = rng.below(held.len());
+                let (id, _) = held.remove(idx);
+                machine.release(&id);
+            }
+            // Conservation: free + held == total.
+            let held_count: usize = held.iter().map(|(_, n)| n).sum();
+            assert_eq!(machine.free_nodes() + held_count, total);
+            // Disjointness across live allocations.
+            let allocs = machine.allocations();
+            let mut seen = std::collections::HashSet::new();
+            for a in &allocs {
+                for n in &a.nodes {
+                    assert!(seen.insert(*n), "node {n} in two allocations");
+                }
+            }
+        }
+    });
+}
