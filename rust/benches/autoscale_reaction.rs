@@ -1,0 +1,149 @@
+//! Autoscaler benches: how fast does the loop close?
+//!
+//! * reaction latency on the real plane — from backpressure appearing
+//!   in the broker to the extension pilot reaching Running, measured
+//!   end-to-end through detection (signal sample), decision (policy)
+//!   and actuation (`extend_pilot` queue + bootstrap);
+//! * policy decision cost — the per-sample overhead the control loop
+//!   adds (threshold vs 48-partition bin-packing);
+//! * the virtual-time burst response at 32-node Wrangler scale.
+//!
+//! Run: `cargo bench --bench autoscale_reaction`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pilot_streaming::autoscale::{
+    Autoscaler, AutoscalerConfig, BinPackingPolicy, ScalingPolicy, SignalSnapshot,
+    ThresholdPolicy,
+};
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::metrics::ScalingAction;
+use pilot_streaming::pilot::{KafkaDescription, PilotComputeService, SparkDescription};
+use pilot_streaming::sim::{CostModel, ElasticScenario, ElasticSim, SimMachine};
+use pilot_streaming::util::bench::Bench;
+use pilot_streaming::util::RateSchedule;
+
+fn snapshot(lag: u64, partitions: usize) -> SignalSnapshot {
+    SignalSnapshot {
+        t_secs: 10.0,
+        lag,
+        lag_slope: 25.0,
+        produce_rate: 120.0,
+        consume_rate: 80.0,
+        partition_backlog: vec![lag / partitions.max(1) as u64; partitions],
+        behind_batches: 3,
+        last_batch_secs: 1.4,
+        window_secs: 1.0,
+        nodes: 4,
+        min_nodes: 2,
+        max_nodes: 32,
+        service_rate_per_node: 25.0,
+    }
+}
+
+fn main() {
+    let mut bench = Bench::from_args();
+
+    // --- Policy decision cost (the control loop's per-sample overhead) --
+    let mut threshold = ThresholdPolicy::new(100, 10).with_cooldown_secs(f64::INFINITY);
+    let snap = snapshot(5_000, 48);
+    bench.run("autoscale/decide-threshold", 20_000, || {
+        std::hint::black_box(threshold.decide(&snap));
+    });
+    let mut packing = BinPackingPolicy::new()
+        .with_node_capacity(500.0)
+        .with_cooldown_secs(f64::INFINITY);
+    bench.run("autoscale/decide-binpack-48part", 5_000, || {
+        std::hint::black_box(packing.decide(&snap));
+    });
+
+    // --- Reaction latency: detection -> extension pilot Running --------
+    // Fresh deployment per round: produce a backlog, let the autoscaler
+    // detect it (5 ms sampling) and extend the pilot.  Reported:
+    // wall-clock from the first backpressure byte to the Up event
+    // (detect + decide + actuate) and the actuation share alone
+    // (extend_pilot: modeled queue + bootstrap, recorded on the event).
+    let rounds = if bench.quick() { 3 } else { 10 };
+    bench.run_once("autoscale/reaction-detect-to-running", || {
+        let mut detect_to_running = 0.0;
+        let mut actuation = 0.0;
+        for _ in 0..rounds {
+            let service = Arc::new(PilotComputeService::new(Machine::unthrottled(4)));
+            let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1)).unwrap();
+            let (spark, _engine) = service
+                .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+                .unwrap();
+            cluster.create_topic("bench", 2).unwrap();
+            let policy = ThresholdPolicy::new(10, 1).with_sustain(1).with_cooldown_secs(0.0);
+            let scaler = Autoscaler::spawn(
+                service.clone(),
+                spark.clone(),
+                cluster.clone(),
+                None,
+                Box::new(policy),
+                AutoscalerConfig::new("bench", "g")
+                    .with_sample_interval(Duration::from_millis(5))
+                    .with_max_extension_nodes(1),
+            );
+            let t0 = std::time::Instant::now();
+            for i in 0..32u8 {
+                cluster.produce("bench", (i % 2) as usize, 0, &[vec![i]]).unwrap();
+            }
+            let timeline = scaler.timeline();
+            while timeline.count(ScalingAction::Up) == 0 && t0.elapsed().as_secs() < 10 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let events = timeline.events();
+            let up = events
+                .iter()
+                .find(|e| e.action == ScalingAction::Up)
+                .expect("scale-up never fired");
+            detect_to_running += t0.elapsed().as_secs_f64();
+            actuation += up.reaction_secs;
+            for p in scaler.stop() {
+                service.stop_pilot(&p).unwrap();
+            }
+            service.stop_pilot(&spark).unwrap();
+            service.stop_pilot(&kafka).unwrap();
+        }
+        let n = rounds as f64;
+        vec![
+            ("detect_to_running_ms".into(), detect_to_running / n * 1e3),
+            ("actuation_ms".into(), actuation / n * 1e3),
+        ]
+    });
+
+    // --- Virtual-time burst response at 32-node scale -------------------
+    bench.run_once("autoscale/sim-burst-32n", || {
+        let machine = SimMachine {
+            executors_per_node: 2,
+            ..Default::default()
+        };
+        let sim = ElasticSim::new(machine, CostModel::paper_era());
+        let sc = ElasticScenario {
+            processor: "gridrec".into(),
+            schedule: RateSchedule::bursty(4.0, 40.0, 1200.0, 600.0),
+            window_secs: 60.0,
+            windows: 60,
+            broker_nodes: 4,
+            partitions_per_node: 12,
+            min_nodes: 2,
+            max_nodes: 32,
+            initial_nodes: 2,
+            provision_delay_secs: 90.0,
+        };
+        let mut policy = ThresholdPolicy::new(600, 60)
+            .with_sustain(1)
+            .with_cooldown_secs(120.0)
+            .with_step(8);
+        let res = sim.run(&sc, &mut policy);
+        vec![
+            ("peak_nodes".into(), res.peak_nodes as f64),
+            ("scale_ups".into(), res.scale_ups as f64),
+            ("scale_downs".into(), res.scale_downs as f64),
+            ("behind_windows".into(), res.behind_windows as f64),
+            ("node_secs".into(), res.node_secs),
+        ]
+    });
+}

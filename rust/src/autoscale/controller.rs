@@ -1,0 +1,381 @@
+//! The autoscaler control loop: signals → policy → pilot actuation.
+//!
+//! A background thread samples a [`SignalProbe`] every
+//! `sample_interval`, hands the snapshot to a [`ScalingPolicy`], and
+//! actuates decisions through the pilot service: scale-up calls
+//! [`PilotComputeService::extend_pilot`] (paper Listing 4) and pushes
+//! the extension onto a stack; scale-down pops extensions and stops
+//! them, shrinking the framework back (paper §4.2).  Every acted-on
+//! decision lands on a [`ScalingTimeline`] with its detection→Running
+//! reaction latency, so experiments can plot the resource footprint
+//! against the input rate.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::broker::BrokerCluster;
+use crate::engine::JobStats;
+use crate::metrics::{ScalingAction, ScalingEvent, ScalingTimeline};
+use crate::pilot::{Pilot, PilotComputeService};
+
+use super::policy::{PolicyDecision, ScalingPolicy};
+use super::signals::SignalProbe;
+
+/// Control-loop configuration.
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    /// Topic whose consumer lag drives the loop.
+    pub topic: String,
+    /// Consumer group owning the committed offsets (the streaming job's
+    /// group for micro-batch consumers).
+    pub group: String,
+    /// How often signals are sampled.
+    pub sample_interval: Duration,
+    /// Ceiling on nodes added beyond the target pilot's base allocation.
+    pub max_extension_nodes: usize,
+    /// Largest single extension request (nodes per scale-up action).
+    pub max_step: usize,
+    /// The consumer job's micro-batch window (for overrun signals).
+    pub window: Duration,
+}
+
+impl AutoscalerConfig {
+    pub fn new(topic: &str, group: &str) -> Self {
+        AutoscalerConfig {
+            topic: topic.to_string(),
+            group: group.to_string(),
+            sample_interval: Duration::from_millis(250),
+            max_extension_nodes: 4,
+            max_step: 1,
+            window: Duration::from_secs(1),
+        }
+    }
+
+    pub fn with_sample_interval(mut self, interval: Duration) -> Self {
+        self.sample_interval = interval.max(Duration::from_millis(1));
+        self
+    }
+
+    pub fn with_max_extension_nodes(mut self, nodes: usize) -> Self {
+        self.max_extension_nodes = nodes;
+        self
+    }
+
+    pub fn with_max_step(mut self, nodes: usize) -> Self {
+        self.max_step = nodes.max(1);
+        self
+    }
+
+    pub fn with_window(mut self, window: Duration) -> Self {
+        self.window = window;
+        self
+    }
+}
+
+/// A running autoscaler.  Dropping it stops the control loop; live
+/// extension pilots are returned by [`stop`](Autoscaler::stop) so the
+/// caller decides whether to keep or release the remaining footprint.
+pub struct Autoscaler {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+    timeline: Arc<ScalingTimeline>,
+    extensions: Arc<Mutex<Vec<Arc<Pilot>>>>,
+}
+
+impl Autoscaler {
+    /// Start the control loop for `target` (a running base pilot whose
+    /// framework consumes `config.topic`).  `stats` — the consuming
+    /// job's stats, when the consumer is a micro-batch job — adds the
+    /// window-overrun signals to each snapshot.
+    pub fn spawn(
+        service: Arc<PilotComputeService>,
+        target: Arc<Pilot>,
+        cluster: BrokerCluster,
+        stats: Option<Arc<JobStats>>,
+        policy: Box<dyn ScalingPolicy>,
+        config: AutoscalerConfig,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let timeline = Arc::new(ScalingTimeline::new());
+        let extensions: Arc<Mutex<Vec<Arc<Pilot>>>> = Arc::new(Mutex::new(Vec::new()));
+        let probe = SignalProbe::new(
+            cluster,
+            &config.topic,
+            &config.group,
+            stats,
+            config.window.as_secs_f64(),
+        );
+        let thread = {
+            let stop = stop.clone();
+            let timeline = timeline.clone();
+            let extensions = extensions.clone();
+            std::thread::Builder::new()
+                .name(format!("autoscaler-{}", config.topic))
+                .spawn(move || {
+                    control_loop(service, target, probe, policy, config, stop, timeline, extensions)
+                })
+                .expect("spawn autoscaler thread")
+        };
+        Autoscaler {
+            stop,
+            thread: Some(thread),
+            timeline,
+            extensions,
+        }
+    }
+
+    /// The recorded scaling events (shared; updates live).
+    pub fn timeline(&self) -> Arc<ScalingTimeline> {
+        self.timeline.clone()
+    }
+
+    /// Extension pilots currently held by the loop.
+    pub fn extension_count(&self) -> usize {
+        self.extensions.lock().unwrap().len()
+    }
+
+    /// Stop the control loop and return any extension pilots still
+    /// running (empty when the policy already scaled back down).
+    pub fn stop(mut self) -> Vec<Arc<Pilot>> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        std::mem::take(&mut *self.extensions.lock().unwrap())
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn control_loop(
+    service: Arc<PilotComputeService>,
+    target: Arc<Pilot>,
+    mut probe: SignalProbe,
+    mut policy: Box<dyn ScalingPolicy>,
+    config: AutoscalerConfig,
+    stop: Arc<AtomicBool>,
+    timeline: Arc<ScalingTimeline>,
+    extensions: Arc<Mutex<Vec<Arc<Pilot>>>>,
+) {
+    let started = Instant::now();
+    let min_nodes = target.nodes().len();
+    let max_nodes = min_nodes + config.max_extension_nodes;
+
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(config.sample_interval);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let extension_nodes: usize = extensions
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|p| p.nodes().len())
+            .sum();
+        let nodes = min_nodes + extension_nodes;
+        let t = started.elapsed().as_secs_f64();
+        let Ok(snapshot) = probe.sample(t, nodes, min_nodes, max_nodes) else {
+            continue; // topic gone (e.g. broker stopped mid-shutdown)
+        };
+        match policy.decide(&snapshot) {
+            PolicyDecision::Hold => {}
+            PolicyDecision::ScaleUp(n) => {
+                let step = n
+                    .min(config.max_step)
+                    .min(max_nodes - nodes)
+                    .min(service.machine().free_nodes());
+                if step == 0 {
+                    // Ceiling reached or machine full.  The policy has
+                    // already charged its cooldown for this decision,
+                    // which doubles as backoff before the next attempt.
+                    continue;
+                }
+                let detected = Instant::now();
+                // extend_pilot blocks through queue + bootstrap, so the
+                // elapsed time is the full detection→Running latency.
+                match service.extend_pilot(&target, step) {
+                    Ok(ext) => {
+                        extensions.lock().unwrap().push(ext);
+                        timeline.record(ScalingEvent {
+                            at_secs: t,
+                            action: ScalingAction::Up,
+                            delta_nodes: step,
+                            total_nodes: nodes + step,
+                            lag: snapshot.lag,
+                            policy: policy.name().to_string(),
+                            reaction_secs: detected.elapsed().as_secs_f64(),
+                        });
+                    }
+                    // Lost a race for the last free nodes; the policy's
+                    // cooldown spaces out the retry.
+                    Err(_) => continue,
+                }
+            }
+            PolicyDecision::ScaleDown(n) => {
+                // Pop whole extension pilots until ~n nodes are gone
+                // (extensions are indivisible; the last pop may release
+                // a few more than requested, never dropping below the
+                // base allocation).
+                let mut removed = 0;
+                while removed < n {
+                    let Some(ext) = extensions.lock().unwrap().pop() else {
+                        break;
+                    };
+                    let ext_nodes = ext.nodes().len();
+                    match service.stop_pilot(&ext) {
+                        Ok(()) => removed += ext_nodes,
+                        Err(_) => {
+                            // Keep tracking the pilot (it still holds
+                            // nodes); retry on a later tick.
+                            extensions.lock().unwrap().push(ext);
+                            break;
+                        }
+                    }
+                }
+                if removed > 0 {
+                    timeline.record(ScalingEvent {
+                        at_secs: t,
+                        action: ScalingAction::Down,
+                        delta_nodes: removed,
+                        total_nodes: nodes - removed.min(nodes - min_nodes),
+                        lag: snapshot.lag,
+                        policy: policy.name().to_string(),
+                        reaction_secs: 0.0,
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::policy::ThresholdPolicy;
+    use crate::cluster::Machine;
+    use crate::metrics::ScalingAction;
+    use crate::pilot::SparkDescription;
+
+    fn wait_until(mut cond: impl FnMut() -> bool, secs: f64) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed().as_secs_f64() < secs {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+
+    #[test]
+    fn controller_extends_on_lag_and_shrinks_after_drain() {
+        let service = Arc::new(PilotComputeService::new(Machine::unthrottled(5)));
+        let (kafka, cluster) = service
+            .start_kafka(crate::pilot::KafkaDescription::new(1))
+            .unwrap();
+        let (spark, engine) = service
+            .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+            .unwrap();
+        cluster.create_topic("load", 2).unwrap();
+
+        let policy = ThresholdPolicy::new(10, 1)
+            .with_sustain(1)
+            .with_cooldown_secs(0.1)
+            .with_step(2);
+        let scaler = Autoscaler::spawn(
+            service.clone(),
+            spark.clone(),
+            cluster.clone(),
+            None,
+            Box::new(policy),
+            AutoscalerConfig::new("load", "g")
+                .with_sample_interval(Duration::from_millis(20))
+                .with_max_extension_nodes(2)
+                .with_max_step(2),
+        );
+
+        // Backpressure: 40 uncommitted messages.
+        for i in 0..40u8 {
+            cluster.produce("load", (i % 2) as usize, 0, &[vec![i]]).unwrap();
+        }
+        assert!(
+            wait_until(|| scaler.extension_count() == 1, 5.0),
+            "no scale-up within 5s"
+        );
+        assert_eq!(engine.executor_count(), 3, "1 base + 2 extension nodes");
+
+        // Drain: commit everything; the policy must scale back down.
+        cluster.commit("g", "load", 0, 20);
+        cluster.commit("g", "load", 1, 20);
+        assert!(
+            wait_until(|| scaler.extension_count() == 0, 5.0),
+            "no scale-down within 5s"
+        );
+
+        let remaining = scaler.stop();
+        assert!(remaining.is_empty());
+        // 5 - kafka(1) - spark(1): extension nodes back in the pool.
+        assert_eq!(service.machine().free_nodes(), 3);
+        service.stop_pilot(&spark).unwrap();
+        service.stop_pilot(&kafka).unwrap();
+    }
+
+    #[test]
+    fn timeline_records_up_then_down_with_reaction_latency() {
+        let service = Arc::new(PilotComputeService::new(Machine::unthrottled(4)));
+        let (kafka, cluster) = service
+            .start_kafka(crate::pilot::KafkaDescription::new(1))
+            .unwrap();
+        let (spark, _engine) = service
+            .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+            .unwrap();
+        cluster.create_topic("t", 1).unwrap();
+
+        let policy = ThresholdPolicy::new(5, 0)
+            .with_sustain(1)
+            .with_cooldown_secs(0.05);
+        let scaler = Autoscaler::spawn(
+            service.clone(),
+            spark.clone(),
+            cluster.clone(),
+            None,
+            Box::new(policy),
+            AutoscalerConfig::new("t", "g")
+                .with_sample_interval(Duration::from_millis(20))
+                .with_max_extension_nodes(1),
+        );
+        let batch: Vec<Vec<u8>> = (0..8u8).map(|i| vec![i]).collect();
+        cluster.produce("t", 0, 0, &batch).unwrap();
+        let timeline = scaler.timeline();
+        assert!(
+            wait_until(|| timeline.count(ScalingAction::Up) >= 1, 5.0),
+            "no Up event"
+        );
+        cluster.commit("g", "t", 0, 8);
+        assert!(
+            wait_until(|| timeline.count(ScalingAction::Down) >= 1, 5.0),
+            "no Down event"
+        );
+        for p in scaler.stop() {
+            let _ = service.stop_pilot(&p);
+        }
+        let events = timeline.events();
+        let up = events.iter().find(|e| e.action == ScalingAction::Up).unwrap();
+        assert!(up.reaction_secs >= 0.0);
+        assert_eq!(up.delta_nodes, 1);
+        assert_eq!(up.policy, "threshold");
+        assert!(up.lag >= 5);
+        service.stop_pilot(&spark).unwrap();
+        service.stop_pilot(&kafka).unwrap();
+    }
+}

@@ -1,0 +1,48 @@
+//! Elastic autoscaling: closing the metrics→pilot loop.
+//!
+//! The paper's central claim is that Pilot-Streaming lets applications
+//! "dynamically respond to resource requirements by adding/removing
+//! resources at runtime" (§1, §4.2) — but Listing 4's
+//! `extend_pilot`/`stop_pilot` primitives are *manual*.  This subsystem
+//! closes the loop from observed load back to resource changes:
+//!
+//! ```text
+//!   signals ───────────► policy ───────────► actuator
+//!   consumer lag          threshold/hysteresis  extend_pilot (scale-up)
+//!   lag slope             PD on lag slope       stop_pilot (scale-down,
+//!   produce/consume rate  online bin-packing      extension pilots)
+//!   window overrun
+//! ```
+//!
+//! (The service also offers an in-place
+//! [`crate::pilot::PilotComputeService::shrink_pilot`] and scaling-event
+//! hooks for external observers; the controller itself scales down by
+//! stopping the extension pilots it created.)
+//!
+//! * [`signals`] — [`SignalProbe`] samples per-topic consumer lag,
+//!   per-partition backlog, produce/consume throughput and the
+//!   micro-batch engine's window-overrun gauges into
+//!   [`SignalSnapshot`]s;
+//! * [`policy`] — pure, pluggable [`ScalingPolicy`] implementations
+//!   (threshold + hysteresis + cooldown, lag-slope PD control, and
+//!   first-fit-decreasing bin-packing à la Stein et al. 2020);
+//! * [`controller`] — the [`Autoscaler`] thread that actuates decisions
+//!   through [`crate::pilot::PilotComputeService`] and records every
+//!   action on a [`crate::metrics::ScalingTimeline`].
+//!
+//! The same policies run deterministically in virtual time through the
+//! simulation plane's [`crate::sim::ElasticSim`], which is how the
+//! 32-node behaviour is exercised on a small host.
+//!
+//! See `examples/dynamic_scaling.rs` for the end-to-end loop (bursty
+//! MASS source → broker → MASA consumer, no manual extend calls).
+
+pub mod controller;
+pub mod policy;
+pub mod signals;
+
+pub use controller::{Autoscaler, AutoscalerConfig};
+pub use policy::{
+    BinPackingPolicy, LagSlopePolicy, PolicyDecision, ScalingPolicy, ThresholdPolicy,
+};
+pub use signals::{SignalProbe, SignalSnapshot};

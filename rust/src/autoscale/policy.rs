@@ -1,0 +1,433 @@
+//! Scaling policies: pure decision functions over signal snapshots.
+//!
+//! A policy never touches the broker or the pilot service; it sees a
+//! [`SignalSnapshot`] and answers "hold, grow by n, or shrink by n".
+//! That keeps every policy unit-testable and lets the same policy run
+//! unchanged on the real plane (the [`super::Autoscaler`] control loop)
+//! and in virtual time (the [`crate::sim`] elastic harness at 32-node
+//! scale).
+//!
+//! Three families ship in-tree, mirroring the elasticity literature the
+//! design follows (de Assunção et al. 2017's survey taxonomy; Stein et
+//! al. 2020's online bin-packing controller):
+//!
+//! * [`ThresholdPolicy`] — lag thresholds with hysteresis, sustain
+//!   counts and a cooldown window (the classic reactive controller);
+//! * [`LagSlopePolicy`] — proportional-derivative control on lag and
+//!   its slope, sizing the node delta to drain within a horizon;
+//! * [`BinPackingPolicy`] — first-fit-decreasing packing of
+//!   per-partition work onto node-sized bins.
+
+use super::signals::SignalSnapshot;
+
+/// What a policy wants done with the resource footprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyDecision {
+    /// No change.
+    Hold,
+    /// Add `n` processing nodes.
+    ScaleUp(usize),
+    /// Release `n` processing nodes.
+    ScaleDown(usize),
+}
+
+/// The policy SPI (pluggable; applications can bring their own).
+pub trait ScalingPolicy: Send {
+    /// Short name recorded on every [`crate::metrics::ScalingEvent`].
+    fn name(&self) -> &'static str;
+
+    /// Decide on one signal sample.  Policies carry their own state
+    /// (streak counters, cooldown clocks) between calls.
+    fn decide(&mut self, signals: &SignalSnapshot) -> PolicyDecision;
+}
+
+// ---------------------------------------------------------------------
+// Threshold + hysteresis
+// ---------------------------------------------------------------------
+
+/// Reactive lag thresholds with hysteresis: grow when lag stays above
+/// `up_lag`, shrink when it stays below `down_lag`, hold in between.
+/// `sustain` consecutive samples are required on either side (a single
+/// burst sample never triggers) and `cooldown_secs` must elapse between
+/// actions (no flapping while an extension is still booting).
+#[derive(Debug, Clone)]
+pub struct ThresholdPolicy {
+    pub up_lag: u64,
+    pub down_lag: u64,
+    /// Consecutive out-of-band samples required before acting.
+    pub sustain: usize,
+    /// Minimum seconds between actions.
+    pub cooldown_secs: f64,
+    /// Nodes added/released per action.
+    pub step: usize,
+    high_streak: usize,
+    low_streak: usize,
+    last_action_t: f64,
+}
+
+impl ThresholdPolicy {
+    pub fn new(up_lag: u64, down_lag: u64) -> Self {
+        assert!(down_lag < up_lag, "hysteresis band must be non-empty");
+        ThresholdPolicy {
+            up_lag,
+            down_lag,
+            sustain: 2,
+            cooldown_secs: 1.0,
+            step: 1,
+            high_streak: 0,
+            low_streak: 0,
+            last_action_t: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn with_sustain(mut self, samples: usize) -> Self {
+        self.sustain = samples.max(1);
+        self
+    }
+
+    pub fn with_cooldown_secs(mut self, secs: f64) -> Self {
+        self.cooldown_secs = secs.max(0.0);
+        self
+    }
+
+    pub fn with_step(mut self, nodes: usize) -> Self {
+        self.step = nodes.max(1);
+        self
+    }
+}
+
+impl ScalingPolicy for ThresholdPolicy {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+        if s.lag >= self.up_lag {
+            self.high_streak += 1;
+            self.low_streak = 0;
+        } else if s.lag <= self.down_lag {
+            self.low_streak += 1;
+            self.high_streak = 0;
+        } else {
+            // Inside the hysteresis band: hold and reset both streaks.
+            self.high_streak = 0;
+            self.low_streak = 0;
+        }
+        if s.t_secs - self.last_action_t < self.cooldown_secs {
+            return PolicyDecision::Hold;
+        }
+        if self.high_streak >= self.sustain && s.nodes < s.max_nodes {
+            self.high_streak = 0;
+            self.last_action_t = s.t_secs;
+            return PolicyDecision::ScaleUp(self.step.min(s.max_nodes - s.nodes));
+        }
+        if self.low_streak >= self.sustain && s.nodes > s.min_nodes {
+            self.low_streak = 0;
+            self.last_action_t = s.t_secs;
+            return PolicyDecision::ScaleDown(self.step.min(s.nodes - s.min_nodes));
+        }
+        PolicyDecision::Hold
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lag slope (PD control)
+// ---------------------------------------------------------------------
+
+/// Proportional-derivative controller on consumer lag: project the lag
+/// `horizon_secs` ahead along its observed slope, then size the fleet
+/// so the offered rate *plus* the drain of the projected excess fits
+/// the observed per-node service rate.
+#[derive(Debug, Clone)]
+pub struct LagSlopePolicy {
+    /// How far ahead to project, and how fast excess lag must drain.
+    pub horizon_secs: f64,
+    /// Standing lag considered healthy (no drain demand below this).
+    pub target_lag: u64,
+    pub cooldown_secs: f64,
+    last_action_t: f64,
+}
+
+impl LagSlopePolicy {
+    pub fn new(horizon_secs: f64, target_lag: u64) -> Self {
+        LagSlopePolicy {
+            horizon_secs: horizon_secs.max(1e-3),
+            target_lag,
+            cooldown_secs: 1.0,
+            last_action_t: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn with_cooldown_secs(mut self, secs: f64) -> Self {
+        self.cooldown_secs = secs.max(0.0);
+        self
+    }
+}
+
+impl ScalingPolicy for LagSlopePolicy {
+    fn name(&self) -> &'static str {
+        "lag-slope"
+    }
+
+    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+        let rate_per_node = s.service_rate_per_node;
+        if rate_per_node <= 0.0 {
+            return PolicyDecision::Hold; // no calibration signal yet
+        }
+        if s.t_secs - self.last_action_t < self.cooldown_secs {
+            return PolicyDecision::Hold;
+        }
+        // P term: projected lag after the horizon; D enters via the slope.
+        let projected = (s.lag as f64 + s.lag_slope.max(0.0) * self.horizon_secs).max(0.0);
+        let drain_rate = (projected - self.target_lag as f64).max(0.0) / self.horizon_secs;
+        let demand = s.produce_rate + drain_rate;
+        let desired = ((demand / rate_per_node).ceil() as usize).clamp(s.min_nodes, s.max_nodes);
+        if desired > s.nodes {
+            self.last_action_t = s.t_secs;
+            return PolicyDecision::ScaleUp(desired - s.nodes);
+        }
+        // Only shrink once the backlog has actually drained (hysteresis:
+        // a smaller desired fleet alone is not enough mid-burst).
+        if desired < s.nodes && s.lag <= self.target_lag {
+            self.last_action_t = s.t_secs;
+            return PolicyDecision::ScaleDown(s.nodes - desired);
+        }
+        PolicyDecision::Hold
+    }
+}
+
+// ---------------------------------------------------------------------
+// Online bin-packing (à la Stein et al. 2020)
+// ---------------------------------------------------------------------
+
+/// First-fit-decreasing packing of per-partition work onto node-sized
+/// bins: each partition's next-window work (its backlog plus its share
+/// of the offered rate) is an item; a node is a bin holding
+/// `node_capacity_msgs * headroom` messages per window.  The bin count
+/// is the target fleet size.
+#[derive(Debug, Clone)]
+pub struct BinPackingPolicy {
+    /// Messages one node can process per window.  `None` derives it
+    /// from the observed per-node service rate at decision time.
+    pub node_capacity_msgs: Option<f64>,
+    /// Fill target per bin (0, 1]; packing to 80% absorbs jitter.
+    pub headroom: f64,
+    pub cooldown_secs: f64,
+    last_action_t: f64,
+}
+
+impl BinPackingPolicy {
+    pub fn new() -> Self {
+        BinPackingPolicy {
+            node_capacity_msgs: None,
+            headroom: 0.8,
+            cooldown_secs: 1.0,
+            last_action_t: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn with_node_capacity(mut self, msgs_per_window: f64) -> Self {
+        self.node_capacity_msgs = Some(msgs_per_window.max(1e-9));
+        self
+    }
+
+    pub fn with_headroom(mut self, headroom: f64) -> Self {
+        self.headroom = headroom.clamp(0.05, 1.0);
+        self
+    }
+
+    pub fn with_cooldown_secs(mut self, secs: f64) -> Self {
+        self.cooldown_secs = secs.max(0.0);
+        self
+    }
+
+    /// First-fit-decreasing bin count for `items` into bins of `cap`.
+    fn ffd_bins(mut items: Vec<f64>, cap: f64) -> usize {
+        items.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+        let mut bins: Vec<f64> = Vec::new();
+        for item in items {
+            // A partition is indivisible (one task per partition): an
+            // oversized item still occupies exactly one bin.
+            let item = item.min(cap);
+            match bins.iter_mut().find(|b| **b + item <= cap) {
+                Some(b) => *b += item,
+                None => bins.push(item),
+            }
+        }
+        bins.len()
+    }
+}
+
+impl Default for BinPackingPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScalingPolicy for BinPackingPolicy {
+    fn name(&self) -> &'static str {
+        "bin-packing"
+    }
+
+    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+        let n_parts = s.partition_backlog.len();
+        if n_parts == 0 {
+            return PolicyDecision::Hold;
+        }
+        let capacity = self
+            .node_capacity_msgs
+            .unwrap_or(s.service_rate_per_node * s.window_secs);
+        if capacity <= 0.0 {
+            return PolicyDecision::Hold;
+        }
+        if s.t_secs - self.last_action_t < self.cooldown_secs {
+            return PolicyDecision::Hold;
+        }
+        let cap = capacity * self.headroom;
+        let arrivals_per_part = s.produce_rate * s.window_secs / n_parts as f64;
+        let items: Vec<f64> = s
+            .partition_backlog
+            .iter()
+            .map(|b| *b as f64 + arrivals_per_part)
+            .filter(|w| *w > 0.0)
+            .collect();
+        let target = Self::ffd_bins(items, cap).clamp(s.min_nodes, s.max_nodes);
+        if target > s.nodes {
+            self.last_action_t = s.t_secs;
+            PolicyDecision::ScaleUp(target - s.nodes)
+        } else if target < s.nodes {
+            self.last_action_t = s.t_secs;
+            PolicyDecision::ScaleDown(s.nodes - target)
+        } else {
+            PolicyDecision::Hold
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A snapshot with the given time/lag/fleet and sane defaults.
+    fn snap(t_secs: f64, lag: u64, nodes: usize) -> SignalSnapshot {
+        SignalSnapshot {
+            t_secs,
+            lag,
+            lag_slope: 0.0,
+            produce_rate: 0.0,
+            consume_rate: 0.0,
+            partition_backlog: Vec::new(),
+            behind_batches: 0,
+            last_batch_secs: 0.0,
+            window_secs: 1.0,
+            nodes,
+            min_nodes: 1,
+            max_nodes: 8,
+            service_rate_per_node: 10.0,
+        }
+    }
+
+    #[test]
+    fn threshold_scales_up_on_sustained_lag_only() {
+        let mut p = ThresholdPolicy::new(100, 10).with_sustain(2).with_cooldown_secs(0.0);
+        // One high sample is not enough.
+        assert_eq!(p.decide(&snap(0.0, 150, 1)), PolicyDecision::Hold);
+        // A dip resets the streak.
+        assert_eq!(p.decide(&snap(1.0, 5, 1)), PolicyDecision::Hold);
+        assert_eq!(p.decide(&snap(2.0, 150, 1)), PolicyDecision::Hold);
+        // Second consecutive high sample triggers.
+        assert_eq!(p.decide(&snap(3.0, 150, 1)), PolicyDecision::ScaleUp(1));
+    }
+
+    #[test]
+    fn threshold_hysteresis_band_holds() {
+        let mut p = ThresholdPolicy::new(100, 10).with_sustain(1).with_cooldown_secs(0.0);
+        // Between the thresholds: never an action, regardless of history.
+        for t in 0..10 {
+            assert_eq!(p.decide(&snap(t as f64, 50, 4)), PolicyDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn threshold_cooldown_prevents_flapping() {
+        let mut p = ThresholdPolicy::new(100, 10).with_sustain(1).with_cooldown_secs(5.0);
+        assert_eq!(p.decide(&snap(0.0, 200, 1)), PolicyDecision::ScaleUp(1));
+        // Still hot, but inside the cooldown window.
+        assert_eq!(p.decide(&snap(1.0, 200, 2)), PolicyDecision::Hold);
+        assert_eq!(p.decide(&snap(4.9, 200, 2)), PolicyDecision::Hold);
+        // Cooldown elapsed.
+        assert_eq!(p.decide(&snap(6.0, 200, 2)), PolicyDecision::ScaleUp(1));
+    }
+
+    #[test]
+    fn threshold_scales_down_after_drain_and_clamps() {
+        let mut p = ThresholdPolicy::new(100, 10)
+            .with_sustain(2)
+            .with_cooldown_secs(0.0)
+            .with_step(4);
+        assert_eq!(p.decide(&snap(0.0, 0, 3)), PolicyDecision::Hold);
+        // Step is clamped to the min-node floor.
+        assert_eq!(p.decide(&snap(1.0, 0, 3)), PolicyDecision::ScaleDown(2));
+        // At the floor nothing happens.
+        assert_eq!(p.decide(&snap(2.0, 0, 1)), PolicyDecision::Hold);
+        assert_eq!(p.decide(&snap(3.0, 0, 1)), PolicyDecision::Hold);
+        // At the ceiling scale-up is clamped too.
+        let mut q = ThresholdPolicy::new(100, 10)
+            .with_sustain(1)
+            .with_cooldown_secs(0.0)
+            .with_step(4);
+        assert_eq!(q.decide(&snap(0.0, 500, 6)), PolicyDecision::ScaleUp(2));
+        assert_eq!(q.decide(&snap(1.0, 500, 8)), PolicyDecision::Hold);
+    }
+
+    #[test]
+    fn lag_slope_sizes_delta_to_demand() {
+        let mut p = LagSlopePolicy::new(2.0, 5).with_cooldown_secs(0.0);
+        // 35 msg/s offered + (100 - 5)/2 = 47.5 msg/s of drain demand
+        // over the 2 s horizon -> ceil(82.5/10) = 9, clamped to max 8.
+        let mut s = snap(0.0, 100, 2);
+        s.produce_rate = 35.0;
+        assert_eq!(p.decide(&s), PolicyDecision::ScaleUp(6));
+        // Drained and the offered load fits one node: shrink.
+        let mut s = snap(1.0, 0, 8);
+        s.produce_rate = 8.0;
+        assert_eq!(p.decide(&s), PolicyDecision::ScaleDown(7));
+        // Desired < nodes but lag still above target: hold (hysteresis).
+        let mut s = snap(2.0, 50, 8);
+        s.produce_rate = 8.0;
+        assert_eq!(p.decide(&s), PolicyDecision::Hold);
+        // No calibration signal: hold.
+        let mut s = snap(3.0, 1000, 1);
+        s.service_rate_per_node = 0.0;
+        assert_eq!(p.decide(&s), PolicyDecision::Hold);
+    }
+
+    #[test]
+    fn bin_packing_counts_bins_first_fit_decreasing() {
+        // 6 partitions of 10 messages each into 25-message bins (after
+        // headroom 1.0): FFD packs 2 per bin -> 3 nodes.
+        let mut p = BinPackingPolicy::new()
+            .with_node_capacity(25.0)
+            .with_headroom(1.0)
+            .with_cooldown_secs(0.0);
+        let mut s = snap(0.0, 60, 1);
+        s.partition_backlog = vec![10; 6];
+        assert_eq!(p.decide(&s), PolicyDecision::ScaleUp(2));
+        // Empty partitions pack to the floor -> shrink back.
+        let mut s = snap(1.0, 0, 3);
+        s.partition_backlog = vec![0; 6];
+        assert_eq!(p.decide(&s), PolicyDecision::ScaleDown(2));
+        // An oversized partition cannot split across bins: it fills one
+        // bin, the two small items share another -> 2 bins.
+        let mut s = snap(2.0, 110, 3);
+        s.partition_backlog = vec![90, 10, 10];
+        assert_eq!(p.decide(&s), PolicyDecision::ScaleDown(1));
+    }
+
+    #[test]
+    fn bin_packing_oversized_item_occupies_one_bin() {
+        assert_eq!(BinPackingPolicy::ffd_bins(vec![90.0, 10.0, 10.0], 25.0), 2);
+        assert_eq!(BinPackingPolicy::ffd_bins(vec![10.0; 6], 25.0), 3);
+        assert_eq!(BinPackingPolicy::ffd_bins(Vec::new(), 25.0), 0);
+    }
+}

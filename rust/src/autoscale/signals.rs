@@ -1,0 +1,231 @@
+//! Runtime backpressure signals: what the control loop samples.
+//!
+//! One [`SignalSnapshot`] per sample tick, assembled by [`SignalProbe`]
+//! from the broker's consumer-group offsets (per-topic lag, per-partition
+//! backlog), the observed produce/consume throughput (finite differences
+//! of the high watermarks) and the micro-batch engine's window-overrun
+//! gauges ([`crate::engine::JobStats`]).  Policies consume snapshots;
+//! nothing here decides anything.
+
+use std::sync::Arc;
+
+use crate::broker::BrokerCluster;
+use crate::engine::JobStats;
+use crate::error::Result;
+
+/// One sample of every backpressure signal the policies read.
+#[derive(Debug, Clone)]
+pub struct SignalSnapshot {
+    /// Seconds since the control loop started.
+    pub t_secs: f64,
+    /// Total consumer lag for the watched (group, topic), messages.
+    pub lag: u64,
+    /// Rate of lag change, msgs/sec (positive = falling behind).
+    pub lag_slope: f64,
+    /// Observed production rate into the topic, msgs/sec.
+    pub produce_rate: f64,
+    /// Observed consumption rate, msgs/sec.
+    pub consume_rate: f64,
+    /// Lag broken out per partition (bin-packing item sizes).
+    pub partition_backlog: Vec<u64>,
+    /// Cumulative micro-batches that outran their window.
+    pub behind_batches: u64,
+    /// Duration of the most recent micro-batch, seconds.
+    pub last_batch_secs: f64,
+    /// The job's micro-batch window, seconds.
+    pub window_secs: f64,
+    /// Current processing nodes (base pilot + live extensions).
+    pub nodes: usize,
+    /// Fleet floor (the base pilot's nodes).
+    pub min_nodes: usize,
+    /// Fleet ceiling (base + allowed extensions).
+    pub max_nodes: usize,
+    /// Smoothed per-node service rate estimate, msgs/sec/node
+    /// (0.0 until the first consumption is observed).
+    pub service_rate_per_node: f64,
+}
+
+impl SignalSnapshot {
+    /// How far the last micro-batch overran its window (1.0 = at the
+    /// limit; > 1.0 = falling behind) — the paper's backpressure signal.
+    pub fn window_overrun(&self) -> f64 {
+        if self.window_secs <= 0.0 {
+            return 0.0;
+        }
+        self.last_batch_secs / self.window_secs
+    }
+}
+
+/// Samples live signals into [`SignalSnapshot`]s, keeping the little
+/// state finite-difference rates and EWMA smoothing need.
+pub struct SignalProbe {
+    cluster: BrokerCluster,
+    topic: String,
+    group: String,
+    stats: Option<Arc<JobStats>>,
+    window_secs: f64,
+    prev_t: f64,
+    prev_end_sum: u64,
+    prev_lag: u64,
+    ewma_rate_per_node: f64,
+}
+
+impl SignalProbe {
+    /// Probe for `group` on `topic`.  `stats` (when the consumer is a
+    /// micro-batch job) supplies the window-overrun gauges.
+    pub fn new(
+        cluster: BrokerCluster,
+        topic: &str,
+        group: &str,
+        stats: Option<Arc<JobStats>>,
+        window_secs: f64,
+    ) -> Self {
+        let mut probe = SignalProbe {
+            cluster,
+            topic: topic.to_string(),
+            group: group.to_string(),
+            stats,
+            window_secs,
+            prev_t: 0.0,
+            prev_end_sum: 0,
+            prev_lag: 0,
+            ewma_rate_per_node: 0.0,
+        };
+        // Seed the watermark and lag baselines so the first sample sees
+        // pre-existing topic history as standing lag, not as a produce
+        // burst or a runaway lag slope.
+        if let Ok((end_sum, backlog)) = probe.scan() {
+            probe.prev_end_sum = end_sum;
+            probe.prev_lag = backlog.iter().sum();
+        }
+        probe
+    }
+
+    /// One pass over the topic: total end offset + per-partition
+    /// committed lag, both derived from the broker's
+    /// [`BrokerCluster::group_progress`] so lag semantics live in one
+    /// place.
+    fn scan(&self) -> Result<(u64, Vec<u64>)> {
+        let progress = self.cluster.group_progress(&self.group, &self.topic)?;
+        let end_sum = progress.iter().map(|(end, _)| *end).sum();
+        let backlog = progress
+            .iter()
+            .map(|(end, committed)| end.saturating_sub(*committed))
+            .collect();
+        Ok((end_sum, backlog))
+    }
+
+    /// Take one sample at `t_secs` with the current fleet shape.
+    /// Errors only if the topic disappeared.
+    pub fn sample(
+        &mut self,
+        t_secs: f64,
+        nodes: usize,
+        min_nodes: usize,
+        max_nodes: usize,
+    ) -> Result<SignalSnapshot> {
+        let (end_sum, partition_backlog) = self.scan()?;
+        let lag: u64 = partition_backlog.iter().sum();
+
+        let dt = (t_secs - self.prev_t).max(1e-6);
+        let produce_rate = end_sum.saturating_sub(self.prev_end_sum) as f64 / dt;
+        let lag_slope = (lag as f64 - self.prev_lag as f64) / dt;
+        let consume_rate = (produce_rate - lag_slope).max(0.0);
+        if consume_rate > 0.0 && nodes > 0 {
+            let observed = consume_rate / nodes as f64;
+            self.ewma_rate_per_node = if self.ewma_rate_per_node > 0.0 {
+                0.7 * self.ewma_rate_per_node + 0.3 * observed
+            } else {
+                observed
+            };
+        }
+        self.prev_t = t_secs;
+        self.prev_end_sum = end_sum;
+        self.prev_lag = lag;
+
+        let (behind_batches, last_batch_secs) = match &self.stats {
+            Some(st) => (
+                st.behind.load(std::sync::atomic::Ordering::Relaxed),
+                st.last_batch_secs(),
+            ),
+            None => (0, 0.0),
+        };
+        Ok(SignalSnapshot {
+            t_secs,
+            lag,
+            lag_slope,
+            produce_rate,
+            consume_rate,
+            partition_backlog,
+            behind_batches,
+            last_batch_secs,
+            window_secs: self.window_secs,
+            nodes,
+            min_nodes,
+            max_nodes,
+            service_rate_per_node: self.ewma_rate_per_node,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+
+    #[test]
+    fn probe_tracks_lag_and_rates() {
+        let cluster = BrokerCluster::new(Machine::unthrottled(2), vec![0]);
+        cluster.create_topic("t", 2).unwrap();
+        let mut probe = SignalProbe::new(cluster.clone(), "t", "g", None, 1.0);
+
+        let s = probe.sample(1.0, 1, 1, 4).unwrap();
+        assert_eq!(s.lag, 0);
+        assert_eq!(s.produce_rate, 0.0);
+        assert_eq!(s.min_nodes, 1);
+        assert_eq!(s.max_nodes, 4);
+
+        // Produce 10 messages in one "second" of probe time.
+        for i in 0..10u8 {
+            cluster.produce("t", (i % 2) as usize, 1, &[vec![i]]).unwrap();
+        }
+        let s = probe.sample(2.0, 1, 1, 4).unwrap();
+        assert_eq!(s.lag, 10);
+        assert!((s.produce_rate - 10.0).abs() < 1e-9);
+        assert!((s.lag_slope - 10.0).abs() < 1e-9);
+        assert_eq!(s.consume_rate, 0.0);
+        assert_eq!(s.partition_backlog, vec![5, 5]);
+
+        // Consumer catches up on 6 of them.
+        cluster.commit("g", "t", 0, 3);
+        cluster.commit("g", "t", 1, 3);
+        let s = probe.sample(3.0, 2, 1, 4).unwrap();
+        assert_eq!(s.lag, 4);
+        assert!((s.lag_slope + 6.0).abs() < 1e-9, "slope {}", s.lag_slope);
+        assert!((s.consume_rate - 6.0).abs() < 1e-9);
+        assert!(s.service_rate_per_node > 0.0);
+        assert!(probe.sample(4.0, 2, 1, 4).is_ok());
+    }
+
+    #[test]
+    fn probe_seeds_watermark_at_construction() {
+        let cluster = BrokerCluster::new(Machine::unthrottled(2), vec![0]);
+        cluster.create_topic("t", 1).unwrap();
+        cluster.produce("t", 0, 1, &[vec![1], vec![2]]).unwrap();
+        let mut probe = SignalProbe::new(cluster.clone(), "t", "g", None, 1.0);
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        // Pre-existing history is standing lag — neither a produce
+        // spike nor a lag-slope spike.
+        assert_eq!(s.lag, 2);
+        assert_eq!(s.produce_rate, 0.0);
+        assert_eq!(s.lag_slope, 0.0);
+        assert_eq!(s.window_overrun(), 0.0);
+    }
+
+    #[test]
+    fn probe_errors_on_unknown_topic() {
+        let cluster = BrokerCluster::new(Machine::unthrottled(1), vec![0]);
+        let mut probe = SignalProbe::new(cluster, "nope", "g", None, 1.0);
+        assert!(probe.sample(1.0, 1, 1, 2).is_err());
+    }
+}

@@ -8,7 +8,7 @@
 //! I/O saturation (the effect behind Figs 8/9) is observable in-process.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
@@ -25,6 +25,10 @@ pub struct Partition {
     leader: AtomicUsize,
     log: Mutex<PartitionLog>,
     data_arrived: Condvar,
+    /// High watermark mirror, refreshed on every append — lets lag
+    /// probes (consumer gauges, the autoscaler, the micro-batch driver)
+    /// read the end offset without touching the log lock.
+    end: AtomicU64,
 }
 
 impl Partition {
@@ -34,6 +38,7 @@ impl Partition {
             leader: AtomicUsize::new(leader),
             log: Mutex::new(PartitionLog::new(config)),
             data_arrived: Condvar::new(),
+            end: AtomicU64::new(0),
         }
     }
 
@@ -42,7 +47,7 @@ impl Partition {
     }
 
     pub fn end_offset(&self) -> u64 {
-        self.log.lock().unwrap().end_offset()
+        self.end.load(Ordering::Acquire)
     }
 }
 
@@ -225,7 +230,9 @@ impl BrokerCluster {
         let ts = self.now_ns();
         let base = {
             let mut log = p.log.lock().unwrap();
-            log.append_batch(values.iter().map(|v| v.as_slice()), ts)
+            let base = log.append_batch(values.iter().map(|v| v.as_slice()), ts);
+            p.end.store(log.end_offset(), Ordering::Release);
+            base
         };
         p.data_arrived.notify_all();
         Ok(base)
@@ -412,14 +419,29 @@ impl BrokerCluster {
     /// Total committed lag across all partitions of a topic for a group
     /// (end offsets minus committed offsets) — a backpressure signal.
     pub fn group_lag(&self, group: &str, topic: &str) -> Result<u64> {
+        Ok(self.group_lag_per_partition(group, topic)?.iter().sum())
+    }
+
+    /// Per-partition `(end offset, committed offset)` for a group in
+    /// one topic pass — the single source every lag computation (and
+    /// the autoscaler's signal probe) derives from.
+    pub fn group_progress(&self, group: &str, topic: &str) -> Result<Vec<(u64, u64)>> {
         let t = self.topic(topic)?;
-        let mut lag = 0;
-        for (i, p) in t.partitions.iter().enumerate() {
-            let end = p.end_offset();
-            let committed = self.committed(group, topic, i);
-            lag += end.saturating_sub(committed);
-        }
-        Ok(lag)
+        Ok(t.partitions
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.end_offset(), self.committed(group, topic, i)))
+            .collect())
+    }
+
+    /// Committed lag broken out per partition — the item sizes the
+    /// autoscaler's bin-packing policy packs onto processing nodes.
+    pub fn group_lag_per_partition(&self, group: &str, topic: &str) -> Result<Vec<u64>> {
+        Ok(self
+            .group_progress(group, topic)?
+            .iter()
+            .map(|(end, committed)| end.saturating_sub(*committed))
+            .collect())
     }
 }
 
@@ -553,5 +575,18 @@ mod tests {
         c.commit("g", "t", 0, 1); // stale commit ignored
         assert_eq!(c.committed("g", "t", 0), 2);
         assert_eq!(c.group_lag("g", "t").unwrap(), 1);
+    }
+
+    #[test]
+    fn per_partition_lag_breaks_out_by_partition() {
+        let c = cluster(1);
+        c.create_topic("t", 3).unwrap();
+        c.produce("t", 0, 0, &[vec![0], vec![1]]).unwrap();
+        c.produce("t", 2, 0, &[vec![2]]).unwrap();
+        c.group_join("g", "t");
+        assert_eq!(c.group_lag_per_partition("g", "t").unwrap(), vec![2, 0, 1]);
+        c.commit("g", "t", 0, 2);
+        assert_eq!(c.group_lag_per_partition("g", "t").unwrap(), vec![0, 0, 1]);
+        assert!(c.group_lag_per_partition("g", "nope").is_err());
     }
 }

@@ -8,6 +8,7 @@
 //! bumped generation and picks up its new assignment transparently.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -59,6 +60,10 @@ pub struct Consumer {
     next_idx: usize,
     config: ConsumerConfig,
     pub metrics: Arc<RateMeter>,
+    /// Lag over this member's assigned partitions, refreshed on every
+    /// poll — a cheap atomic gauge the autoscaler can watch from another
+    /// thread without touching broker locks.
+    lag_gauge: Arc<AtomicU64>,
 }
 
 impl Consumer {
@@ -83,6 +88,7 @@ impl Consumer {
             next_idx: 0,
             config,
             metrics: Arc::new(RateMeter::new()),
+            lag_gauge: Arc::new(AtomicU64::new(0)),
         };
         c.refresh_assignment()?;
         Ok(c)
@@ -113,6 +119,35 @@ impl Consumer {
         self.member_id
     }
 
+    /// Lag (unconsumed messages) over this member's assignment, as of
+    /// the last poll.
+    pub fn lag(&self) -> u64 {
+        self.lag_gauge.load(Ordering::Relaxed)
+    }
+
+    /// Shareable handle to the lag gauge (for cross-thread observers
+    /// like the autoscaler).
+    pub fn lag_gauge(&self) -> Arc<AtomicU64> {
+        self.lag_gauge.clone()
+    }
+
+    /// Recompute the lag gauge from the partitions' high-watermark
+    /// mirrors — one topic lookup plus an atomic load per assigned
+    /// partition, cheap enough to run on every poll.
+    fn refresh_lag(&self) {
+        let Ok(topic) = self.cluster.topic(&self.topic) else {
+            return;
+        };
+        let mut lag = 0u64;
+        for p in &self.assignment {
+            let pos = *self.positions.get(p).unwrap_or(&0);
+            if let Some(partition) = topic.partitions.get(*p) {
+                lag += partition.end_offset().saturating_sub(pos);
+            }
+        }
+        self.lag_gauge.store(lag, Ordering::Relaxed);
+    }
+
     /// Poll the next assigned partition (round-robin across polls).
     ///
     /// Returns records tagged with their partition.  Auto-commits when
@@ -121,6 +156,9 @@ impl Consumer {
     pub fn poll(&mut self) -> Result<Vec<PartitionRecord>> {
         self.refresh_assignment()?;
         if self.assignment.is_empty() {
+            // A rebalance may have stripped this member: the gauge must
+            // drop to zero, not keep reporting the old partitions' lag.
+            self.refresh_lag();
             std::thread::sleep(self.config.fetch_timeout);
             return Ok(Vec::new());
         }
@@ -148,11 +186,13 @@ impl Consumer {
             if self.config.auto_commit {
                 self.cluster.commit(&self.group, &self.topic, p, new_pos);
             }
+            self.refresh_lag();
             return Ok(recs
                 .into_iter()
                 .map(|record| PartitionRecord { partition: p, record })
                 .collect());
         }
+        self.refresh_lag();
         Ok(Vec::new())
     }
 
@@ -250,6 +290,27 @@ mod tests {
         } // c2 leaves
         c1.poll().unwrap();
         assert_eq!(c1.assignment().len(), 2, "c1 should own both partitions");
+    }
+
+    #[test]
+    fn lag_gauge_tracks_unconsumed_messages() {
+        let c = setup(2);
+        c.produce("t", 0, 0, &[vec![1], vec![2]]).unwrap();
+        c.produce("t", 1, 0, &[vec![3]]).unwrap();
+        let mut consumer = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        assert_eq!(consumer.lag(), 0, "gauge starts cold");
+        let gauge = consumer.lag_gauge();
+        // Drain everything; the gauge must settle at 0.
+        let mut drained = 0;
+        for _ in 0..8 {
+            drained += consumer.poll().unwrap().len();
+        }
+        assert_eq!(drained, 3);
+        assert_eq!(consumer.lag(), 0);
+        // New production shows up after the next poll.
+        c.produce("t", 0, 0, &[vec![4], vec![5]]).unwrap();
+        consumer.poll().unwrap();
+        assert_eq!(gauge.load(Ordering::Relaxed), 0, "poll consumed the new records");
     }
 
     #[test]

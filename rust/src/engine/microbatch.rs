@@ -89,6 +89,9 @@ pub struct JobStats {
     pub batches: AtomicU64,
     /// Batches whose processing outran the window (backpressure signal).
     pub behind: AtomicU64,
+    /// Duration of the most recent micro-batch, nanoseconds (cheap
+    /// atomic gauge the autoscaler samples for window-overrun detection).
+    pub last_batch_ns: AtomicU64,
     /// Processor errors.
     pub errors: AtomicU64,
 }
@@ -101,8 +104,15 @@ impl JobStats {
             record_latency: Histogram::new(),
             batches: AtomicU64::new(0),
             behind: AtomicU64::new(0),
+            last_batch_ns: AtomicU64::new(0),
             errors: AtomicU64::new(0),
         })
+    }
+
+    /// Most recent micro-batch duration in seconds (0.0 before the
+    /// first batch completes).
+    pub fn last_batch_secs(&self) -> f64 {
+        self.last_batch_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 }
 
@@ -294,6 +304,9 @@ fn driver_loop(
             let batch_secs = batch_start.elapsed().as_secs_f64();
             stats.batch_secs.record_secs(batch_secs);
             stats.batches.fetch_add(1, Ordering::Relaxed);
+            stats
+                .last_batch_ns
+                .store((batch_secs * 1e9) as u64, Ordering::Relaxed);
             batch_no += 1;
             if batch_secs > config.window.as_secs_f64() {
                 stats.behind.fetch_add(1, Ordering::Relaxed);

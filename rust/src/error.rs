@@ -4,47 +4,71 @@
 //! [`Result<T>`](Result) with this error; XLA runtime errors, config
 //! errors and coordination failures (e.g. producing to a stopped broker)
 //! are all unified here so the CLI and examples can `?` freely.
-
-use thiserror::Error;
+//!
+//! The offline dependency set has no `thiserror` (DESIGN.md
+//! §Substitutions), so `Display`/`Error`/`From` are implemented by hand.
 
 /// Unified error type for the Pilot-Streaming coordinator.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Underlying XLA/PJRT failure (compile, execute, literal marshal).
-    #[error("xla: {0}")]
     Xla(String),
 
     /// I/O failure (artifact loading, CSV emit, config read).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Malformed configuration or experiment description.
-    #[error("config: {0}")]
     Config(String),
 
     /// Artifact manifest problems (missing artifact, shape mismatch).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Broker-side failures (unknown topic/partition, offset out of range,
     /// produce to a stopped cluster).
-    #[error("broker: {0}")]
     Broker(String),
 
     /// Stream-engine failures (job not running, processor panic).
-    #[error("engine: {0}")]
     Engine(String),
 
     /// Pilot lifecycle violations (extend a non-running pilot, unknown
     /// framework plugin, resource exhaustion on the machine).
-    #[error("pilot: {0}")]
     Pilot(String),
 
     /// Malformed wire message on the data plane.
-    #[error("wire: {0}")]
     Wire(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Broker(m) => write!(f, "broker: {m}"),
+            Error::Engine(m) => write!(f, "engine: {m}"),
+            Error::Pilot(m) => write!(f, "pilot: {m}"),
+            Error::Wire(m) => write!(f, "wire: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -53,3 +77,18 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_layer() {
+        assert_eq!(Error::Broker("x".into()).to_string(), "broker: x");
+        assert_eq!(Error::Pilot("y".into()).to_string(), "pilot: y");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().starts_with("io: "));
+        assert!(std::error::Error::source(&io).is_some());
+        assert!(std::error::Error::source(&Error::Xla("z".into())).is_none());
+    }
+}

@@ -9,8 +9,10 @@
 //!   adaptor ([`saga`]) managing framework plugins ([`plugins`]) on a
 //!   simulated HPC machine ([`cluster`]); a Kafka-like log [`broker`];
 //!   Spark-/Dask-like stream [`engine`]s; the framework-agnostic
-//!   Compute-Unit layer ([`cu`]); and the Streaming Mini-Apps
-//!   ([`miniapp`]: MASS + MASA).
+//!   Compute-Unit layer ([`cu`]); the Streaming Mini-Apps
+//!   ([`miniapp`]: MASS + MASA); and the elastic [`autoscale`]
+//!   subsystem that closes the loop from observed backpressure
+//!   (consumer lag, window overrun) back to pilot extend/shrink.
 //! * **L2 (python/compile/model.py)** — the Mini-App compute payloads
 //!   (streaming KMeans, GridRec, ML-EM) as JAX graphs, AOT-lowered to
 //!   HLO text at build time.
@@ -48,6 +50,7 @@
 //! See `examples/` for the end-to-end light-source pipeline, streaming
 //! KMeans, and dynamic scaling under backpressure.
 
+pub mod autoscale;
 pub mod broker;
 pub mod cluster;
 pub mod config;
@@ -68,6 +71,10 @@ pub use error::{Error, Result};
 
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::autoscale::{
+        Autoscaler, AutoscalerConfig, BinPackingPolicy, LagSlopePolicy, PolicyDecision,
+        ScalingPolicy, SignalSnapshot, ThresholdPolicy,
+    };
     pub use crate::broker::{
         BrokerCluster, Consumer, ConsumerConfig, Producer, ProducerConfig, Record,
     };
@@ -78,6 +85,7 @@ pub mod prelude {
         BatchProcessor, MicroBatchEngine, StreamingJobConfig, TaskContext, TaskEngine,
     };
     pub use crate::error::{Error, Result};
+    pub use crate::metrics::{ScalingAction, ScalingEvent, ScalingTimeline};
     pub use crate::miniapp::{
         MasaApp, MasaConfig, MassConfig, MassSource, ProcessorKind, SourceKind,
     };
@@ -87,4 +95,5 @@ pub mod prelude {
     };
     pub use crate::runtime::ModelRuntime;
     pub use crate::sim::CostModel;
+    pub use crate::util::RateSchedule;
 }

@@ -3,7 +3,7 @@
 //! ```text
 //! pilot-streaming start --framework kafka --nodes 4     # boot a cluster
 //! pilot-streaming demo  --processor gridrec             # mini pipeline
-//! pilot-streaming exp fig6|fig7|fig8|fig9|table1|headline|all
+//! pilot-streaming exp fig6|fig7|fig8|fig9|table1|headline|elastic|all
 //! pilot-streaming calibrate                             # cost model
 //! pilot-streaming artifacts                             # list artifacts
 //! ```
@@ -32,7 +32,7 @@ USAGE:
   pilot-streaming start --framework <kafka|spark|dask|flink> --nodes <n>
                         [--machine-nodes <n>] [--extend <n>]
   pilot-streaming demo  [--processor <kmeans|gridrec|mlem>] [--messages <n>]
-  pilot-streaming exp   <fig6|fig7|fig8|fig9|table1|headline|all>
+  pilot-streaming exp   <fig6|fig7|fig8|fig9|table1|headline|elastic|all>
                         [--preset <calibrated|paper-era>] [--out <dir>]
                         [--config <file.json>]
   pilot-streaming calibrate [--reps <n>]
@@ -236,6 +236,7 @@ fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
             "fig8" => exp::fig8(&config, &costs),
             "fig9" => exp::fig9(&config, &costs),
             "headline" => exp::headline(&config, &costs),
+            "elastic" => exp::elasticity(&config, &costs),
             "table1" => {
                 let runtime = ModelRuntime::load_default()?;
                 exp::table1(&runtime)?
@@ -253,7 +254,7 @@ fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
 
     match which {
         "all" => {
-            for id in ["fig6", "fig7", "fig8", "fig9", "table1", "headline"] {
+            for id in ["fig6", "fig7", "fig8", "fig9", "table1", "headline", "elastic"] {
                 run_one(id)?;
             }
             Ok(())

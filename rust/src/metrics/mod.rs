@@ -167,6 +167,104 @@ impl Histogram {
     }
 }
 
+/// Direction of an elastic-scaling action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingAction {
+    /// Resources added (pilot extension).
+    Up,
+    /// Resources released (extension stopped / pilot shrunk).
+    Down,
+}
+
+impl std::fmt::Display for ScalingAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScalingAction::Up => write!(f, "up"),
+            ScalingAction::Down => write!(f, "down"),
+        }
+    }
+}
+
+/// One autoscaling decision that was acted on: when, which way, how many
+/// nodes, and the backpressure signal that triggered it.  Recorded by
+/// [`crate::autoscale::Autoscaler`] so experiments can plot resource
+/// footprint against input rate (the paper's dynamic-scaling story).
+#[derive(Debug, Clone)]
+pub struct ScalingEvent {
+    /// Seconds since the timeline's epoch.
+    pub at_secs: f64,
+    pub action: ScalingAction,
+    /// Nodes added or released by this action.
+    pub delta_nodes: usize,
+    /// Total processing nodes after the action.
+    pub total_nodes: usize,
+    /// Consumer lag (messages) observed at decision time.
+    pub lag: u64,
+    /// Name of the policy that made the decision.
+    pub policy: String,
+    /// Detection-to-actuated latency: for scale-ups, the time from the
+    /// triggering sample to the extension pilot reaching Running.
+    pub reaction_secs: f64,
+}
+
+/// Thread-safe, append-only record of scaling events (share via `Arc`).
+#[derive(Debug, Default)]
+pub struct ScalingTimeline {
+    events: Mutex<Vec<ScalingEvent>>,
+}
+
+impl ScalingTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, event: ScalingEvent) {
+        self.events.lock().unwrap().push(event);
+    }
+
+    /// Snapshot of all events in record order.
+    pub fn events(&self) -> Vec<ScalingEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.lock().unwrap().is_empty()
+    }
+
+    /// How many events went the given direction.
+    pub fn count(&self, action: ScalingAction) -> usize {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.action == action)
+            .count()
+    }
+
+    /// Render as an experiment [`Recorder`] (one row per event) for CSV
+    /// emission alongside the figure harnesses.
+    pub fn to_recorder(&self) -> Recorder {
+        let rec = Recorder::new();
+        for e in self.events.lock().unwrap().iter() {
+            rec.add(
+                Row::new()
+                    .push("t_s", format!("{:.3}", e.at_secs))
+                    .push("action", e.action)
+                    .push("delta_nodes", e.delta_nodes)
+                    .push("total_nodes", e.total_nodes)
+                    .push("lag_msgs", e.lag)
+                    .push("policy", &e.policy)
+                    .push("reaction_s", format!("{:.4}", e.reaction_secs)),
+            );
+        }
+        rec
+    }
+}
+
 /// One row of an experiment record: free-form key/value pairs with a
 /// fixed column order, so the harness can emit paper-figure CSVs.
 #[derive(Debug, Clone)]
@@ -342,6 +440,38 @@ mod tests {
         h.record_ns(u64::MAX / 2); // above top bucket
         assert_eq!(h.count(), 2);
         assert!(h.quantile_secs(1.0) > 0.0);
+    }
+
+    #[test]
+    fn scaling_timeline_records_and_counts() {
+        let tl = ScalingTimeline::new();
+        assert!(tl.is_empty());
+        tl.record(ScalingEvent {
+            at_secs: 1.0,
+            action: ScalingAction::Up,
+            delta_nodes: 2,
+            total_nodes: 3,
+            lag: 40,
+            policy: "threshold".into(),
+            reaction_secs: 0.05,
+        });
+        tl.record(ScalingEvent {
+            at_secs: 4.0,
+            action: ScalingAction::Down,
+            delta_nodes: 2,
+            total_nodes: 1,
+            lag: 0,
+            policy: "threshold".into(),
+            reaction_secs: 0.0,
+        });
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl.count(ScalingAction::Up), 1);
+        assert_eq!(tl.count(ScalingAction::Down), 1);
+        let csv = tl.to_recorder().to_csv();
+        assert!(csv.starts_with("t_s,action,delta_nodes"));
+        assert!(csv.contains("up"), "{csv}");
+        assert!(csv.contains("down"), "{csv}");
+        assert_eq!(tl.events()[0].lag, 40);
     }
 
     #[test]

@@ -294,6 +294,12 @@ impl MasaApp {
         }
     }
 
+    /// Consumer group the streaming job commits offsets under (what
+    /// lag probes and autoscalers should watch).
+    pub fn group(&self) -> String {
+        format!("masa-{}", self.config.kind.name())
+    }
+
     /// Start the streaming job on `engine`, consuming from `cluster`.
     pub fn start(
         &self,
@@ -301,7 +307,7 @@ impl MasaApp {
         cluster: BrokerCluster,
     ) -> Result<StreamingJobHandle> {
         let mut job = StreamingJobConfig::new(&self.config.topic, self.config.window);
-        job.group = format!("masa-{}", self.config.kind.name());
+        job.group = self.group();
         engine.start_job(cluster, job, self.processor.clone())
     }
 }
@@ -312,8 +318,11 @@ mod tests {
 
     fn runtime() -> Option<ModelRuntime> {
         // Artifact-dependent tests are skipped when artifacts are absent
-        // (built by `make artifacts`); the integration suite covers them.
-        ModelRuntime::load_default().ok()
+        // (built by `make artifacts`) or PJRT is compiled out (no `xla`
+        // feature); the integration suite covers them.
+        let rt = ModelRuntime::load_default().ok()?;
+        rt.warmup("gridrec").ok()?;
+        Some(rt)
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::config::messages;
 use crate::engine::TaskEngine;
 use crate::error::Result;
 use crate::metrics::RateMeter;
-use crate::util::Rng;
+use crate::util::{RateSchedule, Rng};
 
 use super::wire::{now_ns, Message, PayloadKind};
 
@@ -78,6 +78,9 @@ pub struct MassConfig {
     /// Optional per-producer rate limit (messages/sec) — Fig 7 uses a
     /// fixed 100 msg/s aggregate rate.
     pub rate_limit: Option<f64>,
+    /// Optional per-producer variable-rate schedule (takes precedence
+    /// over `rate_limit`) — the bursty sources the autoscaler reacts to.
+    pub schedule: Option<RateSchedule>,
     /// Override the padded message size (None = paper defaults).
     pub target_msg_bytes: Option<usize>,
     pub seed: u64,
@@ -92,6 +95,7 @@ impl MassConfig {
             point_dim: 3,
             messages_per_producer: 100,
             rate_limit: None,
+            schedule: None,
             target_msg_bytes: None,
             seed: 42,
         }
@@ -236,8 +240,17 @@ impl MassSource {
                 let mut sent = (0u64, 0u64);
                 let t0 = Instant::now();
                 for seq in 0..config.messages_per_producer {
-                    if let Some(iv) = interval {
-                        // Pace to the configured rate.
+                    if let Some(schedule) = &config.schedule {
+                        // Pace against the variable-rate schedule.
+                        let due_secs = schedule.time_for_count(seq as f64);
+                        if due_secs.is_finite() {
+                            let elapsed = t0.elapsed().as_secs_f64();
+                            if due_secs > elapsed {
+                                std::thread::sleep(Duration::from_secs_f64(due_secs - elapsed));
+                            }
+                        }
+                    } else if let Some(iv) = interval {
+                        // Pace to the configured fixed rate.
                         let due = iv * seq as u32;
                         let elapsed = t0.elapsed();
                         if due > elapsed {
@@ -367,6 +380,25 @@ mod tests {
         let msg = Message::decode(&found.unwrap().value).unwrap();
         assert_eq!(msg.kind, PayloadKind::Sinogram);
         assert_eq!(msg.values, vec![1.5f32; 96]);
+        e.stop();
+    }
+
+    #[test]
+    fn schedule_paces_burst_then_trickle() {
+        let (_m, c, e) = setup();
+        let mut cfg = small(SourceKind::KmeansStatic);
+        cfg.messages_per_producer = 8;
+        // 6 messages land immediately (fast burst), the last 2 at 20/s.
+        cfg.schedule = Some(RateSchedule::starting_at(0.012, 500.0).then(f64::INFINITY, 20.0));
+        let mass = MassSource::new(cfg);
+        let report = mass.run(&e, &c, 1).unwrap();
+        assert_eq!(report.messages, 8);
+        // The last message (seq 7) is due at 0.012 + 1/20 = 0.062 s.
+        assert!(
+            report.elapsed_secs >= 0.05,
+            "schedule pacing too fast: {}",
+            report.elapsed_secs
+        );
         e.stop();
     }
 

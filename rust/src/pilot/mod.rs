@@ -17,5 +17,7 @@ pub use description::{
     SparkDescription,
 };
 pub use plugin::{FrameworkContext, ManagerPlugin, PluginEnv};
-pub use service::{Pilot, PilotComputeService, StartupBreakdown};
+pub use service::{
+    Pilot, PilotComputeService, PilotEventKind, PilotScalingEvent, ScalingHook, StartupBreakdown,
+};
 pub use state::PilotState;

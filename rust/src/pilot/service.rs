@@ -122,6 +122,37 @@ impl Pilot {
     }
 }
 
+/// Kinds of pilot scaling-lifecycle events (see [`PilotScalingEvent`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PilotEventKind {
+    /// A fresh (non-extension) pilot reached Running.
+    Created,
+    /// An extension pilot added nodes to its parent's framework.
+    Extended,
+    /// Nodes left a framework (extension stopped or in-place shrink).
+    Shrunk,
+    /// A base pilot stopped and released all its nodes.
+    Stopped,
+}
+
+/// A resource-footprint change emitted by the service.  External
+/// observers (experiment probes, loggers, dashboards) subscribe via
+/// [`PilotComputeService::add_scaling_hook`] to see every extend/shrink
+/// without polling; the autoscaler itself keeps its own
+/// [`crate::metrics::ScalingTimeline`] and does not depend on hooks.
+#[derive(Debug, Clone)]
+pub struct PilotScalingEvent {
+    pub pilot_id: String,
+    /// The parent pilot for extension events.
+    pub parent_id: Option<String>,
+    pub kind: PilotEventKind,
+    /// Nodes involved in this event.
+    pub nodes: usize,
+}
+
+/// Callback invoked on every scaling-lifecycle event.
+pub type ScalingHook = Arc<dyn Fn(&PilotScalingEvent) + Send + Sync>;
+
 /// The service (paper §4.2's `PilotComputeService`).
 pub struct PilotComputeService {
     machine: Machine,
@@ -130,6 +161,7 @@ pub struct PilotComputeService {
     time_scale: f64,
     pilots: Mutex<HashMap<String, Arc<Pilot>>>,
     next_id: AtomicU64,
+    hooks: Mutex<Vec<ScalingHook>>,
 }
 
 impl PilotComputeService {
@@ -155,6 +187,23 @@ impl PilotComputeService {
             time_scale,
             pilots: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(1),
+            hooks: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Register a hook observing every scaling-lifecycle event
+    /// (create/extend/shrink/stop).  Hooks run synchronously on the
+    /// thread performing the lifecycle change; keep them cheap.
+    pub fn add_scaling_hook(&self, hook: ScalingHook) {
+        self.hooks.lock().unwrap().push(hook);
+    }
+
+    fn fire(&self, event: PilotScalingEvent) {
+        // Snapshot the hooks first: a hook may call back into the
+        // service (even add_scaling_hook) without deadlocking.
+        let hooks: Vec<ScalingHook> = self.hooks.lock().unwrap().clone();
+        for hook in hooks {
+            hook(&event);
         }
     }
 
@@ -280,6 +329,16 @@ impl PilotComputeService {
                 *pilot.startup.lock().unwrap() = Some(breakdown);
                 pilot.set_state(PilotState::Running)?;
                 self.pilots.lock().unwrap().insert(id, pilot.clone());
+                self.fire(PilotScalingEvent {
+                    pilot_id: pilot.id.clone(),
+                    parent_id: pilot.parent.as_ref().map(|p| p.id.clone()),
+                    kind: if pilot.parent.is_some() {
+                        PilotEventKind::Extended
+                    } else {
+                        PilotEventKind::Created
+                    },
+                    nodes: pilot.nodes().len(),
+                });
                 Ok(pilot)
             }
             Err(e) => {
@@ -337,7 +396,79 @@ impl PilotComputeService {
         pilot.machine.release(&pilot.id);
         pilot.set_state(PilotState::Done)?;
         self.pilots.lock().unwrap().remove(pilot.id());
+        self.fire(PilotScalingEvent {
+            pilot_id: pilot.id.clone(),
+            parent_id: pilot.parent.as_ref().map(|p| p.id.clone()),
+            kind: if pilot.parent.is_some() {
+                PilotEventKind::Shrunk
+            } else {
+                PilotEventKind::Stopped
+            },
+            nodes: nodes.len(),
+        });
         Ok(())
+    }
+
+    /// Shrink a base pilot *in place* by `nodes` nodes (the complement
+    /// of [`extend_pilot`](Self::extend_pilot) when the resources were
+    /// part of the original allocation rather than an extension pilot):
+    /// the framework drains off the released nodes, which go back to the
+    /// machine.  At least one node always remains; extension pilots are
+    /// shrunk by stopping them instead.  Returns the released node ids.
+    pub fn shrink_pilot(&self, pilot: &Arc<Pilot>, nodes: usize) -> Result<Vec<NodeId>> {
+        if pilot.parent.is_some() {
+            return Err(Error::Pilot(format!(
+                "pilot {}: stop the extension pilot to shrink its parent",
+                pilot.id
+            )));
+        }
+        if !pilot.state().is_active() {
+            return Err(Error::Pilot(format!(
+                "pilot {}: cannot shrink in state {}",
+                pilot.id,
+                pilot.state()
+            )));
+        }
+        if nodes == 0 {
+            return Ok(Vec::new());
+        }
+        // Detach the tail atomically, so concurrent shrinks can never
+        // claim the same nodes or drop below the one-node floor.
+        let released: Vec<NodeId> = {
+            let mut held = pilot.nodes.lock().unwrap();
+            if nodes >= held.len() {
+                return Err(Error::Pilot(format!(
+                    "pilot {}: cannot shrink {nodes} of {} nodes (one must remain)",
+                    pilot.id,
+                    held.len()
+                )));
+            }
+            let keep = held.len() - nodes;
+            held.split_off(keep)
+        };
+        // Drain the framework off the released nodes; a broker that
+        // refuses (e.g. would lose its last broker) aborts the shrink
+        // with the allocation restored.
+        if let Ok(ctx) = pilot.context() {
+            match ctx {
+                FrameworkContext::Kafka(c) => {
+                    if let Err(e) = c.remove_brokers(&released) {
+                        pilot.nodes.lock().unwrap().extend(released);
+                        return Err(e);
+                    }
+                }
+                FrameworkContext::MicroBatch(e) => e.remove_executors(&released),
+                FrameworkContext::TaskPar(e) => e.remove_workers(&released),
+            }
+        }
+        pilot.machine.release_nodes(&pilot.id, &released);
+        self.fire(PilotScalingEvent {
+            pilot_id: pilot.id.clone(),
+            parent_id: None,
+            kind: PilotEventKind::Shrunk,
+            nodes: released.len(),
+        });
+        Ok(released)
     }
 
     // ------------------------------------------------------------------
@@ -485,6 +616,71 @@ mod tests {
         let fut = engine.submit(|_| 2 * 2).unwrap();
         assert_eq!(fut.wait().unwrap(), 4);
         svc.stop_pilot(&pilot).unwrap();
+    }
+
+    #[test]
+    fn shrink_pilot_releases_nodes_in_place() {
+        let svc = service(4);
+        let (pilot, engine) = svc
+            .start_spark(SparkDescription::new(3).with_config("executors_per_node", "1"))
+            .unwrap();
+        assert_eq!(engine.executor_count(), 3);
+        assert_eq!(svc.machine().free_nodes(), 1);
+        let released = svc.shrink_pilot(&pilot, 2).unwrap();
+        assert_eq!(released.len(), 2);
+        assert_eq!(pilot.nodes().len(), 1);
+        assert_eq!(svc.machine().free_nodes(), 3);
+        // Draining is asynchronous; wait for the executors to exit.
+        let t0 = std::time::Instant::now();
+        while engine.executor_count() != 1 && t0.elapsed().as_secs() < 5 {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(engine.executor_count(), 1, "executors drained");
+        // The last node cannot be shrunk away.
+        assert!(svc.shrink_pilot(&pilot, 1).is_err());
+        svc.stop_pilot(&pilot).unwrap();
+        assert_eq!(svc.machine().free_nodes(), 4);
+    }
+
+    #[test]
+    fn shrink_rejects_extensions_and_zero_is_noop() {
+        let svc = service(4);
+        let (parent, _) = svc.start_kafka(KafkaDescription::new(2)).unwrap();
+        assert!(svc.shrink_pilot(&parent, 0).unwrap().is_empty());
+        let ext = svc.extend_pilot(&parent, 1).unwrap();
+        assert!(svc.shrink_pilot(&ext, 1).is_err(), "extensions stop, not shrink");
+        svc.stop_pilot(&ext).unwrap();
+        svc.stop_pilot(&parent).unwrap();
+    }
+
+    #[test]
+    fn scaling_hooks_observe_lifecycle() {
+        use super::PilotEventKind;
+        use std::sync::Mutex as StdMutex;
+        let svc = service(6);
+        let seen: Arc<StdMutex<Vec<(PilotEventKind, usize)>>> = Arc::new(StdMutex::new(Vec::new()));
+        let sink = seen.clone();
+        svc.add_scaling_hook(Arc::new(move |e: &PilotScalingEvent| {
+            sink.lock().unwrap().push((e.kind, e.nodes));
+        }));
+        let (pilot, _) = svc
+            .start_spark(SparkDescription::new(2).with_config("executors_per_node", "1"))
+            .unwrap();
+        let ext = svc.extend_pilot(&pilot, 2).unwrap();
+        svc.stop_pilot(&ext).unwrap();
+        svc.shrink_pilot(&pilot, 1).unwrap();
+        svc.stop_pilot(&pilot).unwrap();
+        let events = seen.lock().unwrap().clone();
+        assert_eq!(
+            events,
+            vec![
+                (PilotEventKind::Created, 2),
+                (PilotEventKind::Extended, 2),
+                (PilotEventKind::Shrunk, 2),
+                (PilotEventKind::Shrunk, 1),
+                (PilotEventKind::Stopped, 1),
+            ]
+        );
     }
 
     #[test]

@@ -13,7 +13,14 @@
 //! each engine executor thread lazily builds its own client + executable
 //! cache on first use and reuses it for the life of the thread.  The
 //! cloneable [`ModelRuntime`] handle itself is `Send + Sync`.
+//!
+//! The `xla` crate is not part of the offline dependency set, so the
+//! PJRT executor is gated behind the `xla` cargo feature.  Without it,
+//! manifest parsing and raw data artifacts still work (the simulation
+//! plane and the coordination layer need nothing else) and
+//! `warmup`/`execute` return `Error::Xla`.
 
+#[cfg(feature = "xla")]
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -196,12 +203,14 @@ impl Tensor {
     }
 }
 
+#[cfg(feature = "xla")]
 thread_local! {
     /// Per-thread PJRT state: one CPU client + executables keyed by
     /// (artifact dir, artifact name).
     static TLS: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
 }
 
+#[cfg(feature = "xla")]
 struct ThreadCtx {
     client: xla::PjRtClient,
     executables: HashMap<(PathBuf, String), xla::PjRtLoadedExecutable>,
@@ -310,6 +319,7 @@ impl ModelRuntime {
             .collect())
     }
 
+    #[cfg(feature = "xla")]
     fn with_executable<R>(
         &self,
         name: &str,
@@ -341,8 +351,19 @@ impl ModelRuntime {
 
     /// Pre-compile an artifact on the calling thread (so first-message
     /// latency on the hot path excludes XLA compilation).
+    #[cfg(feature = "xla")]
     pub fn warmup(&self, name: &str) -> Result<()> {
         self.with_executable(name, |_| Ok(()))
+    }
+
+    /// Stub without the `xla` feature: validates the artifact name, then
+    /// reports that the PJRT executor is unavailable.
+    #[cfg(not(feature = "xla"))]
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.meta(name)?;
+        Err(Error::Xla(format!(
+            "{name}: built without the `xla` feature; PJRT execution unavailable"
+        )))
     }
 
     /// Execute artifact `name` with host `inputs`.
@@ -374,6 +395,28 @@ impl ModelRuntime {
             }
         }
 
+        self.execute_validated(name, &meta, inputs)
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn execute_validated(
+        &self,
+        name: &str,
+        _meta: &ArtifactMeta,
+        _inputs: &[&[f32]],
+    ) -> Result<Vec<Tensor>> {
+        Err(Error::Xla(format!(
+            "{name}: built without the `xla` feature; PJRT execution unavailable"
+        )))
+    }
+
+    #[cfg(feature = "xla")]
+    fn execute_validated(
+        &self,
+        name: &str,
+        meta: &ArtifactMeta,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Tensor>> {
         self.with_executable(name, |exe| {
             let mut literals = Vec::with_capacity(inputs.len());
             for (sig, data) in meta.inputs.iter().zip(inputs) {

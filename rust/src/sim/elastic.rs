@@ -1,0 +1,339 @@
+//! Virtual-time elastic-scaling simulation.
+//!
+//! Exercises the [`crate::autoscale`] policies deterministically at
+//! paper scale (32 Wrangler nodes) on a small host: a variable-rate
+//! source ([`RateSchedule`]) feeds per-partition backlogs; each
+//! micro-batch window the fleet processes what its cores allow (one
+//! task per partition, paper §6.4); the policy sees the same
+//! [`SignalSnapshot`] shape as on the real plane and its decisions are
+//! applied with a modeled provisioning delay (batch queue + framework
+//! extension), which is exactly the reaction-latency trade-off the
+//! elasticity literature studies.
+//!
+//! Everything is pure arithmetic over virtual time — two runs of the
+//! same scenario produce byte-identical results, so policy behaviour is
+//! unit-testable at 32-node scale.
+
+use crate::autoscale::{PolicyDecision, ScalingPolicy, SignalSnapshot};
+use crate::util::RateSchedule;
+
+use super::cost::CostModel;
+use super::pipeline::SimMachine;
+
+/// An elastic-scaling scenario.
+#[derive(Debug, Clone)]
+pub struct ElasticScenario {
+    /// Processor name ("kmeans" | "gridrec" | "mlem").
+    pub processor: String,
+    /// Offered input rate over virtual time, msgs/sec.
+    pub schedule: RateSchedule,
+    /// Micro-batch window (paper §6.4: 60 s).
+    pub window_secs: f64,
+    /// Number of windows to simulate.
+    pub windows: usize,
+    pub broker_nodes: usize,
+    /// Partitions per broker node (paper: 12).
+    pub partitions_per_node: usize,
+    /// Fleet floor (the base pilot's processing nodes).
+    pub min_nodes: usize,
+    /// Fleet ceiling (paper max scale: 32).
+    pub max_nodes: usize,
+    pub initial_nodes: usize,
+    /// Virtual seconds between a scale-up decision and the new nodes
+    /// becoming usable (batch queue wait + framework extension).
+    pub provision_delay_secs: f64,
+}
+
+/// Per-window trace row.
+#[derive(Debug, Clone)]
+pub struct ElasticWindow {
+    pub t_secs: f64,
+    /// Offered rate during this window, msgs/sec.
+    pub input_rate: f64,
+    /// Usable processing nodes during this window.
+    pub nodes: usize,
+    /// Messages processed this window.
+    pub processed: f64,
+    /// Backlog (lag) at window end, messages.
+    pub lag: f64,
+    /// Node delta decided this window (+up / -down / 0).
+    pub decision: i64,
+    /// Did demand outrun capacity this window?
+    pub behind: bool,
+}
+
+/// Aggregate result of an elastic run.
+#[derive(Debug, Clone)]
+pub struct ElasticSimResult {
+    pub rows: Vec<ElasticWindow>,
+    pub peak_nodes: usize,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    pub final_lag: f64,
+    pub behind_windows: usize,
+    /// Node-seconds of footprint (the cost an elastic policy saves
+    /// against static peak provisioning).
+    pub node_secs: f64,
+}
+
+/// The elastic simulator.
+pub struct ElasticSim {
+    pub machine: SimMachine,
+    pub costs: CostModel,
+}
+
+impl ElasticSim {
+    pub fn new(machine: SimMachine, costs: CostModel) -> Self {
+        ElasticSim { machine, costs }
+    }
+
+    /// Run `policy` through the scenario; deterministic.
+    pub fn run(&self, sc: &ElasticScenario, policy: &mut dyn ScalingPolicy) -> ElasticSimResult {
+        let n_partitions = (sc.broker_nodes * sc.partitions_per_node).max(1);
+        let proc_cost = self.costs.proc_cost(&sc.processor);
+        let mut nodes = sc.initial_nodes.clamp(sc.min_nodes, sc.max_nodes);
+        // Scale-ups in flight: (ready_at_secs, nodes).
+        let mut pending: Vec<(f64, usize)> = Vec::new();
+        let mut backlog = vec![0.0f64; n_partitions];
+        let mut prev_lag = 0.0f64;
+
+        let mut rows = Vec::with_capacity(sc.windows);
+        let mut peak_nodes = nodes;
+        let mut scale_ups = 0;
+        let mut scale_downs = 0;
+        let mut behind_windows = 0;
+        let mut node_secs = 0.0;
+
+        for w in 0..sc.windows {
+            let t = w as f64 * sc.window_secs;
+            // Provisioned extensions come online.
+            let mut arrived = 0;
+            pending.retain(|(ready_at, n)| {
+                if *ready_at <= t {
+                    arrived += n;
+                    false
+                } else {
+                    true
+                }
+            });
+            nodes = (nodes + arrived).min(sc.max_nodes);
+            peak_nodes = peak_nodes.max(nodes);
+            node_secs += nodes as f64 * sc.window_secs;
+
+            // Offered load arrives spread over the partitions.
+            let input_rate = sc.schedule.rate_at(t);
+            let arrivals = input_rate * sc.window_secs / n_partitions as f64;
+            for b in backlog.iter_mut() {
+                *b += arrivals;
+            }
+            let total_backlog: f64 = backlog.iter().sum();
+
+            // One task per partition, one core per task: capacity is
+            // bounded by both the core count and partition parallelism.
+            let cores = nodes * self.machine.executors_per_node;
+            let parallel = cores.min(n_partitions);
+            let capacity = parallel as f64 * (sc.window_secs / proc_cost);
+            let processed = capacity.min(total_backlog);
+            if total_backlog > 0.0 {
+                let frac = processed / total_backlog;
+                for b in backlog.iter_mut() {
+                    *b -= *b * frac;
+                }
+            }
+            let lag: f64 = backlog.iter().sum();
+            let behind = total_backlog > capacity;
+            if behind {
+                behind_windows += 1;
+            }
+
+            // Build the same snapshot shape the live probe produces.
+            let pending_nodes: usize = pending.iter().map(|(_, n)| n).sum();
+            let per_node_rate = if nodes > 0 {
+                (parallel as f64 / nodes as f64) / proc_cost
+            } else {
+                0.0
+            };
+            let snapshot = SignalSnapshot {
+                t_secs: t + sc.window_secs,
+                lag: lag.round() as u64,
+                lag_slope: (lag - prev_lag) / sc.window_secs,
+                produce_rate: input_rate,
+                consume_rate: processed / sc.window_secs,
+                partition_backlog: backlog.iter().map(|b| b.round() as u64).collect(),
+                behind_batches: behind_windows as u64,
+                last_batch_secs: if capacity > 0.0 {
+                    sc.window_secs * (total_backlog / capacity).min(4.0)
+                } else {
+                    0.0
+                },
+                window_secs: sc.window_secs,
+                // Policies must not double-scale for nodes already on
+                // their way: in-flight extensions count as present.
+                nodes: (nodes + pending_nodes).min(sc.max_nodes),
+                min_nodes: sc.min_nodes,
+                max_nodes: sc.max_nodes,
+                service_rate_per_node: per_node_rate,
+            };
+            prev_lag = lag;
+
+            // The fleet that actually processed this window; a
+            // scale-down decided below takes effect afterwards.
+            let nodes_used = nodes;
+            let mut decision = 0i64;
+            match policy.decide(&snapshot) {
+                PolicyDecision::Hold => {}
+                PolicyDecision::ScaleUp(n) => {
+                    let headroom = sc.max_nodes - (nodes + pending_nodes).min(sc.max_nodes);
+                    let n = n.min(headroom);
+                    if n > 0 {
+                        pending.push((t + sc.window_secs + sc.provision_delay_secs, n));
+                        scale_ups += 1;
+                        decision = n as i64;
+                    }
+                }
+                PolicyDecision::ScaleDown(n) => {
+                    // Shrinking is immediate (stop an extension pilot).
+                    let n = n.min(nodes.saturating_sub(sc.min_nodes));
+                    if n > 0 {
+                        nodes -= n;
+                        scale_downs += 1;
+                        decision = -(n as i64);
+                    }
+                }
+            }
+
+            rows.push(ElasticWindow {
+                t_secs: t,
+                input_rate,
+                nodes: nodes_used,
+                processed,
+                lag,
+                decision,
+                behind,
+            });
+        }
+
+        ElasticSimResult {
+            peak_nodes,
+            scale_ups,
+            scale_downs,
+            final_lag: prev_lag,
+            behind_windows,
+            node_secs,
+            rows,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::{BinPackingPolicy, ThresholdPolicy};
+
+    /// Paper-scale burst: 60 s windows, 4 brokers (48 partitions), a
+    /// 10x input burst in the middle of the run.  Heavy reconstruction
+    /// executors (2 slots per node, memory-bound GridRec) keep executor
+    /// cores below the partition count up to 24 nodes, so the elastic
+    /// regime spans most of the 32-node machine (§6.4's knee).
+    fn sim() -> ElasticSim {
+        let machine = SimMachine {
+            executors_per_node: 2,
+            ..Default::default()
+        };
+        ElasticSim::new(machine, CostModel::paper_era())
+    }
+
+    fn burst_scenario() -> ElasticScenario {
+        ElasticScenario {
+            processor: "gridrec".into(),
+            schedule: RateSchedule::bursty(4.0, 40.0, 20.0 * 60.0, 10.0 * 60.0),
+            window_secs: 60.0,
+            windows: 60,
+            broker_nodes: 4,
+            partitions_per_node: 12,
+            min_nodes: 2,
+            max_nodes: 32,
+            initial_nodes: 2,
+            provision_delay_secs: 90.0,
+        }
+    }
+
+    fn threshold() -> ThresholdPolicy {
+        ThresholdPolicy::new(600, 60)
+            .with_sustain(1)
+            .with_cooldown_secs(120.0)
+            .with_step(8)
+    }
+
+    #[test]
+    fn burst_drives_scale_up_then_recovery() {
+        let sim = sim();
+        let mut policy = threshold();
+        let res = sim.run(&burst_scenario(), &mut policy);
+        assert!(res.scale_ups >= 1, "burst must trigger growth");
+        assert!(res.scale_downs >= 1, "recovery must shrink back");
+        assert!(res.peak_nodes > 2 && res.peak_nodes <= 32, "peak {}", res.peak_nodes);
+        assert!(res.final_lag < 60.0, "final lag {} not drained", res.final_lag);
+        // The footprint must end back at the floor.
+        assert_eq!(res.rows.last().unwrap().nodes, 2);
+        // Elasticity beats static peak provisioning on node-seconds.
+        let static_peak = res.peak_nodes as f64 * 60.0 * 60.0;
+        assert!(res.node_secs < static_peak, "{} !< {static_peak}", res.node_secs);
+    }
+
+    #[test]
+    fn steady_load_within_capacity_never_scales() {
+        let sim = sim();
+        let mut sc = burst_scenario();
+        sc.schedule = RateSchedule::constant(8.0);
+        let mut policy = threshold();
+        let res = sim.run(&sc, &mut policy);
+        assert_eq!(res.scale_ups, 0);
+        assert_eq!(res.scale_downs, 0);
+        assert_eq!(res.peak_nodes, 2);
+        assert_eq!(res.behind_windows, 0);
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let sim = sim();
+        let sc = burst_scenario();
+        let run = |sc: &ElasticScenario| {
+            let mut policy = threshold();
+            let res = sim.run(sc, &mut policy);
+            res.rows
+                .iter()
+                .map(|r| (r.nodes, r.decision, r.lag.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(&sc), run(&sc));
+    }
+
+    #[test]
+    fn bin_packing_tracks_burst_at_scale() {
+        let sim = sim();
+        let mut policy = BinPackingPolicy::new().with_cooldown_secs(120.0);
+        let res = sim.run(&burst_scenario(), &mut policy);
+        assert!(res.scale_ups >= 1);
+        assert!(res.peak_nodes <= 32);
+        assert!(res.rows.last().unwrap().nodes <= 4, "packed back down");
+    }
+
+    #[test]
+    fn provision_delay_defers_capacity() {
+        let sim = sim();
+        let mut fast = burst_scenario();
+        fast.provision_delay_secs = 0.0;
+        let mut slow = burst_scenario();
+        slow.provision_delay_secs = 600.0;
+        let r_fast = sim.run(&fast, &mut threshold());
+        let r_slow = sim.run(&slow, &mut threshold());
+        // Slower provisioning -> strictly more windows behind the rate.
+        assert!(
+            r_slow.behind_windows >= r_fast.behind_windows,
+            "{} < {}",
+            r_slow.behind_windows,
+            r_fast.behind_windows
+        );
+    }
+}

@@ -13,15 +13,20 @@
 //!   Fig 9 micro-batch processing simulation;
 //! * [`latency`] — the Fig 7 latency component models;
 //! * [`startup`] — the Fig 6 startup grid (shared with the live
-//!   plugins' bootstrap models).
+//!   plugins' bootstrap models);
+//! * [`elastic`] — the autoscaling harness: variable-rate sources
+//!   driving [`crate::autoscale`] policies in virtual time, with
+//!   modeled provisioning delays, at 32-node scale.
 
 pub mod cost;
+pub mod elastic;
 pub mod latency;
 pub mod pipeline;
 pub mod resources;
 pub mod startup;
 
 pub use cost::CostModel;
+pub use elastic::{ElasticScenario, ElasticSim, ElasticSimResult, ElasticWindow};
 pub use latency::{LatencySim, LatencySummary};
 pub use pipeline::{
     ProcessingScenario, ProcessingSim, ProcessingSimResult, ProducerScenario, ProducerSim,

@@ -57,13 +57,15 @@ impl Default for Bench {
 
 impl Bench {
     /// Parse `cargo bench`-style args: optional name filter, `--quick`,
-    /// and ignore harness flags like `--bench`.
+    /// and ignore harness flags like `--bench`.  `--test` (what
+    /// `cargo bench -- --test` passes for libtest's smoke mode) maps to
+    /// quick mode, so CI can compile + one-shot every bench cheaply.
     pub fn from_args() -> Self {
         let mut filter = None;
         let mut quick = std::env::var_os("PILOT_BENCH_QUICK").is_some();
         for a in std::env::args().skip(1) {
             match a.as_str() {
-                "--quick" => quick = true,
+                "--quick" | "--test" => quick = true,
                 "--bench" | "--exact" => {}
                 s if s.starts_with("--") => {}
                 s => filter = Some(s.to_string()),

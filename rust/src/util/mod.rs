@@ -5,6 +5,8 @@
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod schedule;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use schedule::RateSchedule;

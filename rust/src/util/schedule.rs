@@ -1,0 +1,138 @@
+//! Piecewise-constant rate schedules.
+//!
+//! Both planes need time-varying offered load: the MASS producers pace
+//! real sends against a schedule (`examples/dynamic_scaling.rs` drives a
+//! burst through the autoscaler), and the simulation plane's elastic
+//! harness replays the same shape in virtual time.  A schedule is a list
+//! of `(duration, rate)` segments; after the last segment the final rate
+//! holds forever.
+
+/// A piecewise-constant message-rate schedule (messages/second).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateSchedule {
+    /// `(duration_secs, msgs_per_sec)` segments, played in order.
+    segments: Vec<(f64, f64)>,
+}
+
+impl RateSchedule {
+    /// A flat schedule at `rate` msgs/sec.
+    pub fn constant(rate: f64) -> Self {
+        RateSchedule {
+            segments: vec![(f64::INFINITY, rate.max(0.0))],
+        }
+    }
+
+    /// Start a schedule with one segment of `secs` at `rate`.
+    pub fn starting_at(secs: f64, rate: f64) -> Self {
+        RateSchedule {
+            segments: vec![(secs.max(0.0), rate.max(0.0))],
+        }
+    }
+
+    /// Append a segment of `secs` at `rate`.
+    pub fn then(mut self, secs: f64, rate: f64) -> Self {
+        self.segments.push((secs.max(0.0), rate.max(0.0)));
+        self
+    }
+
+    /// Convenience burst shape: `base` rate, except `burst` rate during
+    /// `[burst_start, burst_start + burst_secs)`.
+    pub fn bursty(base: f64, burst: f64, burst_start: f64, burst_secs: f64) -> Self {
+        Self::starting_at(burst_start, base)
+            .then(burst_secs, burst)
+            .then(f64::INFINITY, base)
+    }
+
+    /// Offered rate at time `t` (the last segment's rate holds forever).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut start = 0.0;
+        for (dur, rate) in &self.segments {
+            if t < start + dur {
+                return *rate;
+            }
+            start += dur;
+        }
+        self.segments.last().map(|(_, r)| *r).unwrap_or(0.0)
+    }
+
+    /// Cumulative messages offered by time `t` (the integral of the
+    /// rate).
+    pub fn count_until(&self, t: f64) -> f64 {
+        let mut start = 0.0;
+        let mut count = 0.0;
+        for (dur, rate) in &self.segments {
+            let end = start + dur;
+            if t <= end {
+                return count + (t - start).max(0.0) * rate;
+            }
+            count += dur * rate;
+            start = end;
+        }
+        let trailing = self.segments.last().map(|(_, r)| *r).unwrap_or(0.0);
+        count + (t - start).max(0.0) * trailing
+    }
+
+    /// Earliest time at which `n` messages have been offered — the due
+    /// time producers pace against.  Returns `f64::INFINITY` when the
+    /// schedule never reaches `n` (e.g. a trailing zero rate).
+    pub fn time_for_count(&self, n: f64) -> f64 {
+        if n <= 0.0 {
+            return 0.0;
+        }
+        let mut start = 0.0;
+        let mut count = 0.0;
+        for (dur, rate) in &self.segments {
+            let seg_count = dur * rate;
+            if count + seg_count >= n {
+                return start + (n - count) / rate;
+            }
+            count += seg_count;
+            start += dur;
+        }
+        let trailing = self.segments.last().map(|(_, r)| *r).unwrap_or(0.0);
+        if trailing > 0.0 {
+            start + (n - count) / trailing
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_schedule_paces_evenly() {
+        let s = RateSchedule::constant(10.0);
+        assert_eq!(s.rate_at(0.0), 10.0);
+        assert_eq!(s.rate_at(1e6), 10.0);
+        assert!((s.count_until(2.5) - 25.0).abs() < 1e-9);
+        assert!((s.time_for_count(5.0) - 0.5).abs() < 1e-9);
+        assert_eq!(s.time_for_count(0.0), 0.0);
+    }
+
+    #[test]
+    fn bursty_schedule_integrates_piecewise() {
+        // 2/s for 1 s, 20/s for 1 s, back to 2/s.
+        let s = RateSchedule::bursty(2.0, 20.0, 1.0, 1.0);
+        assert_eq!(s.rate_at(0.5), 2.0);
+        assert_eq!(s.rate_at(1.5), 20.0);
+        assert_eq!(s.rate_at(3.0), 2.0);
+        assert!((s.count_until(1.0) - 2.0).abs() < 1e-9);
+        assert!((s.count_until(2.0) - 22.0).abs() < 1e-9);
+        assert!((s.count_until(3.0) - 24.0).abs() < 1e-9);
+        // Inverse agrees with the integral.
+        for n in [1.0, 2.0, 10.0, 22.0, 23.5] {
+            let t = s.time_for_count(n);
+            assert!((s.count_until(t) - n).abs() < 1e-6, "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn zero_tail_never_reaches_count() {
+        let s = RateSchedule::starting_at(1.0, 4.0).then(f64::INFINITY, 0.0);
+        assert_eq!(s.time_for_count(4.0), 1.0);
+        assert_eq!(s.time_for_count(5.0), f64::INFINITY);
+    }
+}
