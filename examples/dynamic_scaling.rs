@@ -256,6 +256,8 @@ fn main() -> Result<()> {
         max_nodes: 32,
         initial_nodes: 2,
         provision_delay_secs: 90.0,
+        repartition_delay_secs: 60.0,
+        max_partitions: 128,
     };
     let mut policy = ThresholdPolicy::new(600, 60)
         .with_sustain(1)

@@ -32,6 +32,7 @@ fn snapshot(lag: u64, partitions: usize) -> SignalSnapshot {
         produce_rate: 120.0,
         consume_rate: 80.0,
         partition_backlog: vec![lag / partitions.max(1) as u64; partitions],
+        partitions,
         behind_batches: 3,
         last_batch_secs: 1.4,
         window_secs: 1.0,
@@ -132,6 +133,8 @@ fn main() {
             max_nodes: 32,
             initial_nodes: 2,
             provision_delay_secs: 90.0,
+            repartition_delay_secs: 60.0,
+            max_partitions: 128,
         };
         let mut policy = ThresholdPolicy::new(600, 60)
             .with_sustain(1)

@@ -101,7 +101,7 @@ impl Autoscaler {
         let timeline = Arc::new(ScalingTimeline::new());
         let extensions: Arc<Mutex<Vec<Arc<Pilot>>>> = Arc::new(Mutex::new(Vec::new()));
         let probe = SignalProbe::new(
-            cluster,
+            cluster.clone(),
             &config.topic,
             &config.group,
             stats,
@@ -114,7 +114,9 @@ impl Autoscaler {
             std::thread::Builder::new()
                 .name(format!("autoscaler-{}", config.topic))
                 .spawn(move || {
-                    control_loop(service, target, probe, policy, config, stop, timeline, extensions)
+                    control_loop(
+                        service, target, cluster, probe, policy, config, stop, timeline, extensions,
+                    )
                 })
                 .expect("spawn autoscaler thread")
         };
@@ -160,6 +162,7 @@ impl Drop for Autoscaler {
 fn control_loop(
     service: Arc<PilotComputeService>,
     target: Arc<Pilot>,
+    cluster: BrokerCluster,
     mut probe: SignalProbe,
     mut policy: Box<dyn ScalingPolicy>,
     config: AutoscalerConfig,
@@ -187,37 +190,72 @@ fn control_loop(
         let Ok(snapshot) = probe.sample(t, nodes, min_nodes, max_nodes) else {
             continue; // topic gone (e.g. broker stopped mid-shutdown)
         };
+        let policy_name = policy.name().to_string();
+        // Scale-up actuation shared by ScaleUp and Repartition: extend
+        // the pilot by up to `n` nodes and record the event.
+        let actuate_up = |n: usize, partitions: usize| {
+            let step = n
+                .min(config.max_step)
+                .min(max_nodes - nodes)
+                .min(service.machine().free_nodes());
+            if step == 0 {
+                // Ceiling reached or machine full.  The policy has
+                // already charged its cooldown for this decision,
+                // which doubles as backoff before the next attempt.
+                return;
+            }
+            let detected = Instant::now();
+            // extend_pilot blocks through queue + bootstrap, so the
+            // elapsed time is the full detection→Running latency.
+            if let Ok(ext) = service.extend_pilot(&target, step) {
+                extensions.lock().unwrap().push(ext);
+                timeline.record(ScalingEvent {
+                    at_secs: t,
+                    action: ScalingAction::Up,
+                    delta_nodes: step,
+                    total_nodes: nodes + step,
+                    lag: snapshot.lag,
+                    partitions,
+                    policy: policy_name.clone(),
+                    reaction_secs: detected.elapsed().as_secs_f64(),
+                });
+            }
+            // On error: lost a race for the last free nodes; the
+            // policy's cooldown spaces out the retry.
+        };
         match policy.decide(&snapshot) {
             PolicyDecision::Hold => {}
-            PolicyDecision::ScaleUp(n) => {
-                let step = n
+            PolicyDecision::ScaleUp(n) => actuate_up(n, snapshot.partitions),
+            PolicyDecision::Repartition { partitions, scale_up } => {
+                // Clamp the extension before touching the topic: if no
+                // node can actually be added (ceiling reached, machine
+                // full), skip the repartition too — otherwise a standing
+                // backlog would grow the partition count every cooldown
+                // with nothing new to consume it.
+                let step = scale_up
                     .min(config.max_step)
                     .min(max_nodes - nodes)
                     .min(service.machine().free_nodes());
                 if step == 0 {
-                    // Ceiling reached or machine full.  The policy has
-                    // already charged its cooldown for this decision,
-                    // which doubles as backoff before the next attempt.
                     continue;
                 }
-                let detected = Instant::now();
-                // extend_pilot blocks through queue + bootstrap, so the
-                // elapsed time is the full detection→Running latency.
-                match service.extend_pilot(&target, step) {
-                    Ok(ext) => {
-                        extensions.lock().unwrap().push(ext);
+                // Move the one-task-per-partition cap first, so the
+                // extension that follows is immediately useful.
+                match cluster.repartition_topic(&config.topic, partitions) {
+                    Ok(_) => {
                         timeline.record(ScalingEvent {
                             at_secs: t,
-                            action: ScalingAction::Up,
-                            delta_nodes: step,
-                            total_nodes: nodes + step,
+                            action: ScalingAction::Repartition,
+                            delta_nodes: 0,
+                            total_nodes: nodes,
                             lag: snapshot.lag,
-                            policy: policy.name().to_string(),
-                            reaction_secs: detected.elapsed().as_secs_f64(),
+                            partitions,
+                            policy: policy_name.clone(),
+                            reaction_secs: 0.0,
                         });
+                        actuate_up(step, partitions);
                     }
-                    // Lost a race for the last free nodes; the policy's
-                    // cooldown spaces out the retry.
+                    // Topic gone (shutdown race): skip this tick.
                     Err(_) => continue,
                 }
             }
@@ -249,7 +287,8 @@ fn control_loop(
                         delta_nodes: removed,
                         total_nodes: nodes - removed.min(nodes - min_nodes),
                         lag: snapshot.lag,
-                        policy: policy.name().to_string(),
+                        partitions: snapshot.partitions,
+                        policy: policy_name.clone(),
                         reaction_secs: 0.0,
                     });
                 }
@@ -326,6 +365,66 @@ mod tests {
         assert!(remaining.is_empty());
         // 5 - kafka(1) - spark(1): extension nodes back in the pool.
         assert_eq!(service.machine().free_nodes(), 3);
+        service.stop_pilot(&spark).unwrap();
+        service.stop_pilot(&kafka).unwrap();
+    }
+
+    #[test]
+    fn controller_repartitions_before_extending_past_the_cap() {
+        use crate::autoscale::policy::PartitionElastic;
+
+        let service = Arc::new(PilotComputeService::new(Machine::unthrottled(5)));
+        let (kafka, cluster) = service
+            .start_kafka(crate::pilot::KafkaDescription::new(1))
+            .unwrap();
+        let (spark, _engine) = service
+            .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+            .unwrap();
+        cluster.create_topic("capped", 1).unwrap();
+
+        let inner = ThresholdPolicy::new(10, 1)
+            .with_sustain(1)
+            .with_cooldown_secs(0.1)
+            .with_step(2);
+        let scaler = Autoscaler::spawn(
+            service.clone(),
+            spark.clone(),
+            cluster.clone(),
+            None,
+            Box::new(PartitionElastic::new(inner, 1)),
+            AutoscalerConfig::new("capped", "g")
+                .with_sample_interval(Duration::from_millis(20))
+                .with_max_extension_nodes(2)
+                .with_max_step(2),
+        );
+        // Standing lag on the single partition: the wrapped policy must
+        // repartition to 3 (1 base + 2 extension slots) and extend.
+        let batch: Vec<Vec<u8>> = (0..20u8).map(|i| vec![i]).collect();
+        cluster.produce("capped", 0, 0, &batch).unwrap();
+
+        let timeline = scaler.timeline();
+        assert!(
+            wait_until(|| timeline.count(ScalingAction::Repartition) >= 1, 5.0),
+            "no repartition event"
+        );
+        assert!(
+            wait_until(|| scaler.extension_count() >= 1, 5.0),
+            "no extension after repartition"
+        );
+        assert_eq!(cluster.partition_count("capped").unwrap(), 3);
+        let events = timeline.events();
+        let rp = events
+            .iter()
+            .position(|e| e.action == ScalingAction::Repartition)
+            .unwrap();
+        let up = events.iter().position(|e| e.action == ScalingAction::Up).unwrap();
+        assert!(rp < up, "repartition must precede the extension");
+        assert_eq!(events[rp].partitions, 3);
+        assert_eq!(events[rp].policy, "partition-elastic");
+
+        for p in scaler.stop() {
+            service.stop_pilot(&p).unwrap();
+        }
         service.stop_pilot(&spark).unwrap();
         service.stop_pilot(&kafka).unwrap();
     }

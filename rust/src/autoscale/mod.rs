@@ -25,7 +25,10 @@
 //!   [`SignalSnapshot`]s;
 //! * [`policy`] — pure, pluggable [`ScalingPolicy`] implementations
 //!   (threshold + hysteresis + cooldown, lag-slope PD control, and
-//!   first-fit-decreasing bin-packing à la Stein et al. 2020);
+//!   first-fit-decreasing bin-packing à la Stein et al. 2020), plus the
+//!   [`PartitionElastic`] decorator that upgrades a capped scale-up to
+//!   a topic repartition so the one-task-per-partition ceiling (§6.4's
+//!   knee) moves with the fleet;
 //! * [`controller`] — the [`Autoscaler`] thread that actuates decisions
 //!   through [`crate::pilot::PilotComputeService`] and records every
 //!   action on a [`crate::metrics::ScalingTimeline`].
@@ -43,6 +46,7 @@ pub mod signals;
 
 pub use controller::{Autoscaler, AutoscalerConfig};
 pub use policy::{
-    BinPackingPolicy, LagSlopePolicy, PolicyDecision, ScalingPolicy, ThresholdPolicy,
+    BinPackingPolicy, LagSlopePolicy, PartitionElastic, PolicyDecision, ScalingPolicy,
+    ThresholdPolicy,
 };
 pub use signals::{SignalProbe, SignalSnapshot};

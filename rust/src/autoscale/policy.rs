@@ -17,6 +17,11 @@
 //!   its slope, sizing the node delta to drain within a horizon;
 //! * [`BinPackingPolicy`] — first-fit-decreasing packing of
 //!   per-partition work onto node-sized bins.
+//!
+//! Any of them can be wrapped in [`PartitionElastic`], which turns a
+//! scale-up that would exceed the topic's one-task-per-partition cap
+//! into a [`PolicyDecision::Repartition`] (resize + extend in one
+//! action), removing the §6.4 knee.
 
 use super::signals::SignalSnapshot;
 
@@ -29,6 +34,12 @@ pub enum PolicyDecision {
     ScaleUp(usize),
     /// Release `n` processing nodes.
     ScaleDown(usize),
+    /// Repartition the watched topic to `partitions` partitions, then
+    /// add `scale_up` processing nodes.  Emitted (by
+    /// [`PartitionElastic`]) when a scale-up would push task slots past
+    /// the one-task-per-partition cap — the §6.4 knee — so the cap
+    /// moves with the fleet in the same control action.
+    Repartition { partitions: usize, scale_up: usize },
 }
 
 /// The policy SPI (pluggable; applications can bring their own).
@@ -304,6 +315,65 @@ impl ScalingPolicy for BinPackingPolicy {
     }
 }
 
+// ---------------------------------------------------------------------
+// Partition elasticity (decorator over any inner policy)
+// ---------------------------------------------------------------------
+
+/// Wraps any [`ScalingPolicy`] with partition elasticity: when the
+/// inner policy asks for a scale-up whose resulting task slots
+/// (`nodes * tasks_per_node`) would exceed the topic's partition count
+/// — beyond which extra nodes sit idle (§6.4's one-task-per-partition
+/// knee) — the decision is upgraded to
+/// [`PolicyDecision::Repartition`], resizing the topic to match the
+/// target fleet before the extension lands.
+#[derive(Debug)]
+pub struct PartitionElastic<P: ScalingPolicy> {
+    inner: P,
+    /// Task slots per processing node (Spark executors per node): the
+    /// multiplier between fleet size and useful partition count.
+    pub tasks_per_node: usize,
+    /// Hard ceiling on the partition count requested.
+    pub max_partitions: usize,
+}
+
+impl<P: ScalingPolicy> PartitionElastic<P> {
+    pub fn new(inner: P, tasks_per_node: usize) -> Self {
+        PartitionElastic {
+            inner,
+            tasks_per_node: tasks_per_node.max(1),
+            max_partitions: 4096,
+        }
+    }
+
+    pub fn with_max_partitions(mut self, max: usize) -> Self {
+        self.max_partitions = max.max(1);
+        self
+    }
+}
+
+impl<P: ScalingPolicy> ScalingPolicy for PartitionElastic<P> {
+    fn name(&self) -> &'static str {
+        "partition-elastic"
+    }
+
+    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+        match self.inner.decide(s) {
+            PolicyDecision::ScaleUp(n) => {
+                let target_slots = (s.nodes + n) * self.tasks_per_node;
+                if target_slots > s.partitions && s.partitions < self.max_partitions {
+                    PolicyDecision::Repartition {
+                        partitions: target_slots.min(self.max_partitions),
+                        scale_up: n,
+                    }
+                } else {
+                    PolicyDecision::ScaleUp(n)
+                }
+            }
+            other => other,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +387,7 @@ mod tests {
             produce_rate: 0.0,
             consume_rate: 0.0,
             partition_backlog: Vec::new(),
+            partitions: 8,
             behind_batches: 0,
             last_batch_secs: 0.0,
             window_secs: 1.0,
@@ -429,5 +500,52 @@ mod tests {
         assert_eq!(BinPackingPolicy::ffd_bins(vec![90.0, 10.0, 10.0], 25.0), 2);
         assert_eq!(BinPackingPolicy::ffd_bins(vec![10.0; 6], 25.0), 3);
         assert_eq!(BinPackingPolicy::ffd_bins(Vec::new(), 25.0), 0);
+    }
+
+    #[test]
+    fn partition_elastic_upgrades_capped_scale_ups() {
+        let inner = ThresholdPolicy::new(100, 10).with_sustain(1).with_cooldown_secs(0.0);
+        let mut p = PartitionElastic::new(inner, 2);
+        // 2 partitions, scale 1 -> 3 nodes: 6 task slots > 2 partitions.
+        let mut s = snap(0.0, 500, 1);
+        s.partitions = 2;
+        let mut q = ThresholdPolicy::new(100, 10).with_sustain(1).with_cooldown_secs(0.0);
+        let inner_says = q.decide(&s);
+        let PolicyDecision::ScaleUp(n) = inner_says else {
+            panic!("inner policy should scale up, got {inner_says:?}");
+        };
+        assert_eq!(
+            p.decide(&s),
+            PolicyDecision::Repartition { partitions: (1 + n) * 2, scale_up: n }
+        );
+        // Enough partitions already: the decision passes through.
+        let mut s = snap(1.0, 500, 1);
+        s.partitions = 64;
+        assert_eq!(p.decide(&s), PolicyDecision::ScaleUp(n));
+    }
+
+    #[test]
+    fn partition_elastic_respects_ceiling_and_forwards_others() {
+        let inner = ThresholdPolicy::new(100, 10).with_sustain(1).with_cooldown_secs(0.0);
+        let mut p = PartitionElastic::new(inner, 4).with_max_partitions(6);
+        let mut s = snap(0.0, 500, 1);
+        s.partitions = 2;
+        // Target slots 8 clamps to the 6-partition ceiling.
+        assert_eq!(
+            p.decide(&s),
+            PolicyDecision::Repartition { partitions: 6, scale_up: 1 }
+        );
+        // At the ceiling: plain scale-up (repartition can't help more).
+        let mut s = snap(1.0, 500, 1);
+        s.partitions = 6;
+        assert_eq!(p.decide(&s), PolicyDecision::ScaleUp(1));
+        // Hold (inside the hysteresis band) passes through untouched.
+        let mut s = snap(2.0, 50, 4);
+        s.partitions = 2;
+        assert_eq!(p.decide(&s), PolicyDecision::Hold);
+        // So does a scale-down (never upgraded to a repartition).
+        let mut s = snap(3.0, 0, 4);
+        s.partitions = 2;
+        assert_eq!(p.decide(&s), PolicyDecision::ScaleDown(1));
     }
 }

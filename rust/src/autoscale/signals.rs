@@ -26,8 +26,14 @@ pub struct SignalSnapshot {
     pub produce_rate: f64,
     /// Observed consumption rate, msgs/sec.
     pub consume_rate: f64,
-    /// Lag broken out per partition (bin-packing item sizes).
+    /// Lag broken out per partition (bin-packing item sizes).  Includes
+    /// partitions retired by a shrink while groups still drain them, so
+    /// its length can exceed `partitions`.
     pub partition_backlog: Vec<u64>,
+    /// Active partition count of the topic — the one-task-per-partition
+    /// parallelism cap (§6.4) that [`crate::autoscale::PartitionElastic`]
+    /// moves with the fleet.
+    pub partitions: usize,
     /// Cumulative micro-batches that outran their window.
     pub behind_batches: u64,
     /// Duration of the most recent micro-batch, seconds.
@@ -125,6 +131,7 @@ impl SignalProbe {
         max_nodes: usize,
     ) -> Result<SignalSnapshot> {
         let (end_sum, partition_backlog) = self.scan()?;
+        let partitions = self.cluster.partition_count(&self.topic)?;
         let lag: u64 = partition_backlog.iter().sum();
 
         let dt = (t_secs - self.prev_t).max(1e-6);
@@ -157,6 +164,7 @@ impl SignalProbe {
             produce_rate,
             consume_rate,
             partition_backlog,
+            partitions,
             behind_batches,
             last_batch_secs,
             window_secs: self.window_secs,
@@ -195,6 +203,7 @@ mod tests {
         assert!((s.lag_slope - 10.0).abs() < 1e-9);
         assert_eq!(s.consume_rate, 0.0);
         assert_eq!(s.partition_backlog, vec![5, 5]);
+        assert_eq!(s.partitions, 2);
 
         // Consumer catches up on 6 of them.
         cluster.commit("g", "t", 0, 3);

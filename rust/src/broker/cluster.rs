@@ -16,6 +16,7 @@ use crate::cluster::{Machine, NodeId};
 use crate::error::{Error, Result};
 
 use super::log::{LogConfig, PartitionLog, Record};
+use super::repartition::EpochTransition;
 
 /// One partition: leader broker node + the log + fetch wakeups.
 pub struct Partition {
@@ -23,22 +24,29 @@ pub struct Partition {
     /// Index into the cluster's broker-node list (leadership moves on
     /// rebalance).
     leader: AtomicUsize,
-    log: Mutex<PartitionLog>,
+    pub(super) log: Mutex<PartitionLog>,
     data_arrived: Condvar,
     /// High watermark mirror, refreshed on every append — lets lag
     /// probes (consumer gauges, the autoscaler, the micro-batch driver)
     /// read the end offset without touching the log lock.
     end: AtomicU64,
+    /// Topic epoch this partition's next append belongs to.  Bumped
+    /// under the log lock when a repartition seals the log, so a
+    /// produce that routed under an older partition-set epoch is
+    /// detected (and rejected as [`Error::StaleEpoch`]) instead of
+    /// landing above the fence consumers drain to.
+    pub(super) epoch: AtomicU64,
 }
 
 impl Partition {
-    fn new(id: usize, leader: usize, config: LogConfig) -> Self {
+    pub(super) fn new(id: usize, leader: usize, epoch: u64, config: LogConfig) -> Self {
         Partition {
             id,
             leader: AtomicUsize::new(leader),
             log: Mutex::new(PartitionLog::new(config)),
             data_arrived: Condvar::new(),
             end: AtomicU64::new(0),
+            epoch: AtomicU64::new(epoch),
         }
     }
 
@@ -51,37 +59,68 @@ impl Partition {
     }
 }
 
-/// A topic: named, fixed partition count (expandable on rebalance).
+/// A topic: a named, epoch-stamped partition set.
+///
+/// Repartitioning never removes entries from `partitions` — a shrink
+/// retires a suffix (still readable while consumer groups drain it)
+/// and a grow appends or re-activates entries — so partition ids stay
+/// stable across epochs and committed offsets survive every resize.
 pub struct Topic {
     pub name: String,
+    /// Every partition ever created for this topic, by id.
     pub partitions: Vec<Arc<Partition>>,
+    /// Partitions accepting new writes in the current epoch (a prefix
+    /// of `partitions`).
+    pub(super) active: usize,
+    /// Repartition epoch: 0 at creation, +1 per resize.
+    pub(super) epoch: u64,
+    /// One entry per epoch transition, ascending by epoch.
+    pub(super) transitions: Vec<EpochTransition>,
+}
+
+impl Topic {
+    /// Partitions accepting new writes in the current epoch.
+    pub fn active_partitions(&self) -> usize {
+        self.active
+    }
+
+    /// Current repartition epoch (0 until the first resize).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
 }
 
 /// Consumer-group coordination state for one (group, topic).
 #[derive(Debug, Default)]
-struct GroupState {
-    /// Monotonic membership generation; bumped on join/leave.
-    generation: u64,
-    members: Vec<u64>,
+pub(super) struct GroupState {
+    /// Monotonic membership generation; bumped on join/leave, on every
+    /// topic repartition, and on every epoch advance.
+    pub(super) generation: u64,
+    pub(super) members: Vec<u64>,
     /// Committed offsets per partition.
-    offsets: HashMap<usize, u64>,
-    next_member_id: u64,
+    pub(super) offsets: HashMap<usize, u64>,
+    pub(super) next_member_id: u64,
+    /// The topic epoch this group is serving.  While it trails the
+    /// topic's epoch the group is draining: fetches are capped at the
+    /// next transition's fences, and the epoch advances (bumping the
+    /// generation) once every fence is committed.
+    pub(super) epoch: u64,
 }
 
-struct Inner {
-    machine: Machine,
-    broker_nodes: Mutex<Vec<NodeId>>,
-    topics: Mutex<HashMap<String, Arc<Topic>>>,
-    groups: Mutex<HashMap<(String, String), GroupState>>,
-    log_config: LogConfig,
-    stopped: AtomicBool,
-    epoch: Instant,
+pub(super) struct Inner {
+    pub(super) machine: Machine,
+    pub(super) broker_nodes: Mutex<Vec<NodeId>>,
+    pub(super) topics: Mutex<HashMap<String, Arc<Topic>>>,
+    pub(super) groups: Mutex<HashMap<(String, String), GroupState>>,
+    pub(super) log_config: LogConfig,
+    pub(super) stopped: AtomicBool,
+    pub(super) epoch: Instant,
 }
 
 /// Cloneable handle to a broker cluster.
 #[derive(Clone)]
 pub struct BrokerCluster {
-    inner: Arc<Inner>,
+    pub(super) inner: Arc<Inner>,
 }
 
 impl std::fmt::Debug for BrokerCluster {
@@ -144,7 +183,7 @@ impl BrokerCluster {
             .as_nanos() as u64
     }
 
-    fn check_running(&self) -> Result<()> {
+    pub(super) fn check_running(&self) -> Result<()> {
         if self.inner.stopped.load(Ordering::Relaxed) {
             return Err(Error::Broker("broker cluster is stopped".into()));
         }
@@ -164,13 +203,16 @@ impl BrokerCluster {
             return Err(Error::Broker(format!("topic {name} already exists")));
         }
         let parts = (0..partitions)
-            .map(|i| Arc::new(Partition::new(i, i % n_brokers, self.inner.log_config)))
+            .map(|i| Arc::new(Partition::new(i, i % n_brokers, 0, self.inner.log_config)))
             .collect();
         topics.insert(
             name.to_string(),
             Arc::new(Topic {
                 name: name.to_string(),
                 partitions: parts,
+                active: partitions,
+                epoch: 0,
+                transitions: Vec::new(),
             }),
         );
         Ok(())
@@ -186,8 +228,22 @@ impl BrokerCluster {
             .ok_or_else(|| Error::Broker(format!("unknown topic {name}")))
     }
 
+    /// Partitions accepting new writes (producer routing / engine task
+    /// parallelism).  After a shrink this is smaller than the number of
+    /// still-readable partitions; see [`BrokerCluster::total_partitions`].
     pub fn partition_count(&self, topic: &str) -> Result<usize> {
+        Ok(self.topic(topic)?.active)
+    }
+
+    /// All partitions ever created, including suffixes retired by a
+    /// shrink that consumer groups may still be draining.
+    pub fn total_partitions(&self, topic: &str) -> Result<usize> {
         Ok(self.topic(topic)?.partitions.len())
+    }
+
+    /// Current repartition epoch of a topic (0 until the first resize).
+    pub fn topic_epoch(&self, topic: &str) -> Result<u64> {
+        Ok(self.topic(topic)?.epoch)
     }
 
     /// Leader broker *node id* for a topic partition.
@@ -214,11 +270,17 @@ impl BrokerCluster {
     ) -> Result<u64> {
         self.check_running()?;
         let t = self.topic(topic)?;
-        let p = t
-            .partitions
-            .get(partition)
-            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?
-            .clone();
+        if partition >= t.active {
+            return if partition < t.partitions.len() {
+                Err(Error::StaleEpoch(format!(
+                    "{topic}/{partition}: partition retired at epoch {}",
+                    t.epoch
+                )))
+            } else {
+                Err(Error::Broker(format!("{topic}/{partition}: no such partition")))
+            };
+        }
+        let p = t.partitions[partition].clone();
         let leader = self.leader_node(topic, partition)?;
         let bytes: usize = values.iter().map(|v| v.len()).sum();
 
@@ -230,6 +292,17 @@ impl BrokerCluster {
         let ts = self.now_ns();
         let base = {
             let mut log = p.log.lock().unwrap();
+            // Epoch fence: if a repartition sealed this log after we
+            // routed (the topic handle above is already stale), the
+            // append must not land above the fence — the caller
+            // re-routes under the new partition set instead.
+            if p.epoch.load(Ordering::Acquire) != t.epoch {
+                return Err(Error::StaleEpoch(format!(
+                    "{topic}/{partition}: routed at epoch {}, log sealed at epoch {}",
+                    t.epoch,
+                    p.epoch.load(Ordering::Acquire)
+                )));
+            }
             let base = log.append_batch(values.iter().map(|v| v.as_slice()), ts);
             p.end.store(log.end_offset(), Ordering::Release);
             base
@@ -372,17 +445,73 @@ impl BrokerCluster {
     }
 
     /// Current generation + range assignment for `member`.
+    ///
+    /// Convenience over [`BrokerCluster::group_serve_plan`] for callers
+    /// that only need the partition list.
     pub fn group_assignment(
         &self,
         group: &str,
         topic: &str,
         member: u64,
     ) -> Result<(u64, Vec<usize>)> {
-        let n_parts = self.partition_count(topic)?;
-        let groups = self.inner.groups.lock().unwrap();
+        let plan = self.group_serve_plan(group, topic, member)?;
+        Ok((plan.generation, plan.partitions))
+    }
+
+    /// Everything a group member needs to serve its share of a topic:
+    /// the membership generation, the epoch the group is serving, the
+    /// assigned partition ids, and — while the group is draining toward
+    /// a newer partition-set epoch — per-partition fetch ceilings
+    /// (offsets the member must not read past until the whole group has
+    /// committed up to every fence).
+    ///
+    /// Opportunistically advances the group's epoch when every fence of
+    /// the next transition is already committed (e.g. a repartition of
+    /// an already-drained topic), bumping the generation so other
+    /// members rebalance too.
+    pub fn group_serve_plan(
+        &self,
+        group: &str,
+        topic: &str,
+        member: u64,
+    ) -> Result<super::repartition::ServePlan> {
+        // The topic handle must be read before the groups lock (lock
+        // order: topics, then groups — same as repartition_topic), so a
+        // repartition can complete between the two acquisitions.  If it
+        // does, the plan below would pair the *bumped* generation with
+        // the stale topic view (no fences) and the member would never
+        // re-refresh — so re-read the topic afterwards and retry until
+        // the epoch is stable across the computation.
+        loop {
+            let t = self.topic(topic)?;
+            let plan = self.serve_plan_for(&t, group, topic, member)?;
+            if self.topic(topic)?.epoch == t.epoch {
+                return Ok(plan);
+            }
+        }
+    }
+
+    fn serve_plan_for(
+        &self,
+        t: &Topic,
+        group: &str,
+        topic: &str,
+        member: u64,
+    ) -> Result<super::repartition::ServePlan> {
+        let mut groups = self.inner.groups.lock().unwrap();
         let st = groups
-            .get(&(group.to_string(), topic.to_string()))
+            .get_mut(&(group.to_string(), topic.to_string()))
             .ok_or_else(|| Error::Broker(format!("unknown group {group}")))?;
+        Self::advance_group_epoch(t, st);
+        // The serve domain: while draining, every partition that can
+        // hold records from the group's epoch (capped at the next
+        // transition's fences); once caught up, the active set.
+        let (domain, fences): (usize, Option<&[u64]>) = if st.epoch < t.epoch {
+            let tr = &t.transitions[st.epoch as usize];
+            (tr.fences.len(), Some(&tr.fences))
+        } else {
+            (t.active, None)
+        };
         let n_members = st.members.len().max(1);
         let rank = st
             .members
@@ -390,11 +519,50 @@ impl BrokerCluster {
             .position(|m| *m == member)
             .ok_or_else(|| Error::Broker(format!("member {member} left group {group}")))?;
         // Range assignment: contiguous chunks, first members get extras.
-        let per = n_parts / n_members;
-        let extra = n_parts % n_members;
+        let per = domain / n_members;
+        let extra = domain % n_members;
         let start = rank * per + rank.min(extra);
         let count = per + usize::from(rank < extra);
-        Ok((st.generation, (start..start + count).collect()))
+        let partitions: Vec<usize> = (start..start + count).collect();
+        let mut ceilings = Vec::with_capacity(partitions.len());
+        for p in &partitions {
+            ceilings.push(fences.map(|f| f[*p]));
+        }
+        Ok(super::repartition::ServePlan {
+            generation: st.generation,
+            epoch: st.epoch,
+            topic_epoch: t.epoch,
+            partitions,
+            ceilings,
+        })
+    }
+
+    /// The partition-set epoch `group` is currently serving on `topic`
+    /// (trails [`BrokerCluster::topic_epoch`] while the group drains).
+    pub fn group_epoch(&self, group: &str, topic: &str) -> u64 {
+        let groups = self.inner.groups.lock().unwrap();
+        groups
+            .get(&(group.to_string(), topic.to_string()))
+            .map(|st| st.epoch)
+            .unwrap_or(0)
+    }
+
+    /// Advance `st` through every transition whose fences are all
+    /// committed; each advance is a rebalance (generation bump).
+    fn advance_group_epoch(t: &Topic, st: &mut GroupState) {
+        while st.epoch < t.epoch {
+            let tr = &t.transitions[st.epoch as usize];
+            let drained = tr
+                .fences
+                .iter()
+                .enumerate()
+                .all(|(p, fence)| st.offsets.get(&p).copied().unwrap_or(0) >= *fence);
+            if !drained {
+                break;
+            }
+            st.epoch += 1;
+            st.generation += 1;
+        }
     }
 
     /// Committed offset for a partition (0 if none committed yet).
@@ -407,13 +575,24 @@ impl BrokerCluster {
     }
 
     /// Commit an offset (next offset to consume) for a partition.
+    ///
+    /// When the group is draining toward a newer partition-set epoch,
+    /// a commit that satisfies the last outstanding fence advances the
+    /// group's epoch (and bumps its generation so members rebalance
+    /// onto the new partition set).
     pub fn commit(&self, group: &str, topic: &str, partition: usize, offset: u64) {
+        // Topic handle fetched before the groups lock (lock order:
+        // topics, then groups — same as repartition_topic).
+        let t = self.topic(topic).ok();
         let mut groups = self.inner.groups.lock().unwrap();
         let st = groups
             .entry((group.to_string(), topic.to_string()))
             .or_default();
         let entry = st.offsets.entry(partition).or_insert(0);
         *entry = (*entry).max(offset);
+        if let Some(t) = t {
+            Self::advance_group_epoch(&t, st);
+        }
     }
 
     /// Total committed lag across all partitions of a topic for a group

@@ -6,6 +6,13 @@
 //! when membership changes (join/leave — the dynamic-scaling case the
 //! paper's resource management enables) the next `poll` observes the
 //! bumped generation and picks up its new assignment transparently.
+//!
+//! Rebalances are **epoch-aware**: when the topic is repartitioned
+//! ([`BrokerCluster::repartition_topic`]) the group drains the old
+//! partition-set epoch first — polls are capped at the transition's
+//! fences — and only after every fence is committed does the group
+//! advance and spread over the new partition set.  Committed progress
+//! migrates untouched because partition ids are stable across epochs.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -55,7 +62,17 @@ pub struct Consumer {
     node: NodeId,
     member_id: u64,
     generation: u64,
+    /// Partition-set epoch this member is serving (trails the topic's
+    /// epoch while the group drains a repartition).
+    epoch: u64,
+    /// The topic's epoch when the current serve plan was computed —
+    /// re-checked after uncapped fetches (see `poll`).
+    topic_epoch: u64,
     assignment: Vec<usize>,
+    /// Fetch ceilings for draining partitions: offsets this member must
+    /// not read past until the group advances its epoch.  Empty when
+    /// the group is caught up with the topic's epoch.
+    ceilings: HashMap<usize, u64>,
     positions: HashMap<usize, u64>,
     next_idx: usize,
     config: ConsumerConfig,
@@ -83,7 +100,10 @@ impl Consumer {
             node,
             member_id,
             generation: 0,
+            epoch: 0,
+            topic_epoch: 0,
             assignment: Vec::new(),
+            ceilings: HashMap::new(),
             positions: HashMap::new(),
             next_idx: 0,
             config,
@@ -95,24 +115,43 @@ impl Consumer {
     }
 
     fn refresh_assignment(&mut self) -> Result<()> {
-        let (generation, parts) =
-            self.cluster
-                .group_assignment(&self.group, &self.topic, self.member_id)?;
-        if generation != self.generation {
-            self.generation = generation;
-            self.assignment = parts;
+        let plan = self
+            .cluster
+            .group_serve_plan(&self.group, &self.topic, self.member_id)?;
+        if plan.generation != self.generation {
+            self.generation = plan.generation;
+            self.epoch = plan.epoch;
+            self.topic_epoch = plan.topic_epoch;
+            self.ceilings.clear();
+            for (p, ceiling) in plan.partitions.iter().zip(plan.ceilings.iter()) {
+                if let Some(c) = ceiling {
+                    self.ceilings.insert(*p, *c);
+                }
+            }
+            self.assignment = plan.partitions;
             self.next_idx = 0;
             self.positions.clear();
             for p in &self.assignment {
                 self.positions
                     .insert(*p, self.cluster.committed(&self.group, &self.topic, *p));
             }
+            // The assignment just changed (rebalance or epoch advance):
+            // recompute the gauge now, so cross-thread observers (the
+            // autoscaler's signal probe) never read lag for partitions
+            // this member no longer owns — previously the stale value
+            // survived until the next poll completed a fetch.
+            self.refresh_lag();
         }
         Ok(())
     }
 
     pub fn assignment(&self) -> &[usize] {
         &self.assignment
+    }
+
+    /// The partition-set epoch this member is serving.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     pub fn member_id(&self) -> u64 {
@@ -164,11 +203,22 @@ impl Consumer {
         }
         // Try each assigned partition at most once, starting from the
         // round-robin cursor, so one idle partition can't starve others.
+        let mut skipped = 0;
         for _ in 0..self.assignment.len() {
             let p = self.assignment[self.next_idx % self.assignment.len()];
             self.next_idx = (self.next_idx + 1) % self.assignment.len();
             let pos = *self.positions.get(&p).unwrap_or(&0);
-            let recs = self.cluster.fetch(
+            let ceiling = self.ceilings.get(&p).copied();
+            if let Some(c) = ceiling {
+                if pos >= c {
+                    // This partition's share of the draining epoch is
+                    // already consumed; the rest belongs to the next
+                    // epoch and is served only after the group advances.
+                    skipped += 1;
+                    continue;
+                }
+            }
+            let mut recs = self.cluster.fetch(
                 &self.topic,
                 p,
                 pos,
@@ -176,6 +226,19 @@ impl Consumer {
                 self.node,
                 self.config.fetch_timeout,
             )?;
+            if let Some(c) = ceiling {
+                recs.truncate(recs.partition_point(|r| r.offset < c));
+            } else if !recs.is_empty()
+                && self.cluster.topic_epoch(&self.topic)? != self.topic_epoch
+            {
+                // A repartition landed while the (blocking) fetch was in
+                // flight: these uncapped records may lie beyond a fence
+                // this plan never saw.  Discard them (nothing was
+                // committed) and end the poll — the repartition bumped
+                // the generation, so the next poll refreshes and
+                // re-fetches under ceilings.
+                break;
+            }
             if recs.is_empty() {
                 continue;
             }
@@ -191,6 +254,12 @@ impl Consumer {
                 .into_iter()
                 .map(|record| PartitionRecord { partition: p, record })
                 .collect());
+        }
+        if skipped == self.assignment.len() {
+            // Every owned partition is drained to its fence: this member
+            // is waiting on the rest of the group to finish the epoch.
+            // Pace the wait instead of spinning.
+            std::thread::sleep(self.config.fetch_timeout);
         }
         self.refresh_lag();
         Ok(Vec::new())
@@ -298,7 +367,7 @@ mod tests {
         c.produce("t", 0, 0, &[vec![1], vec![2]]).unwrap();
         c.produce("t", 1, 0, &[vec![3]]).unwrap();
         let mut consumer = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
-        assert_eq!(consumer.lag(), 0, "gauge starts cold");
+        assert_eq!(consumer.lag(), 3, "gauge warm from the join-time refresh");
         let gauge = consumer.lag_gauge();
         // Drain everything; the gauge must settle at 0.
         let mut drained = 0;
@@ -311,6 +380,63 @@ mod tests {
         c.produce("t", 0, 0, &[vec![4], vec![5]]).unwrap();
         consumer.poll().unwrap();
         assert_eq!(gauge.load(Ordering::Relaxed), 0, "poll consumed the new records");
+    }
+
+    #[test]
+    fn lag_gauge_fresh_after_rebalance() {
+        // Regression: after a rebalance strips partitions from this
+        // member, the gauge must reflect the *new* assignment as soon
+        // as the assignment refreshes — not after the next completed
+        // fetch (observers sampling between rebalance and fetch used to
+        // see the old assignment's lag).
+        let c = setup(2);
+        for _ in 0..5 {
+            c.produce("t", 0, 0, &[vec![0]]).unwrap();
+        }
+        let mut c1 = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        assert_eq!(c1.lag(), 5, "sole member sees the whole backlog");
+        // A second member takes partition 1 (empty); c1 keeps partition
+        // 0 with its 5-message backlog.
+        let c2 = Consumer::join(c.clone(), "t", "g", 2, fast_config()).unwrap();
+        assert_eq!(c2.assignment(), &[1]);
+        assert_eq!(c2.lag(), 0, "freshly joined member owns no backlog");
+        // c1's next poll observes the rebalance; the gauge must be
+        // updated by the assignment refresh itself, which poll runs
+        // before fetching.  Drain and confirm it settles at 0.
+        let mut drained = 0;
+        for _ in 0..8 {
+            drained += c1.poll().unwrap().len();
+        }
+        assert_eq!(drained, 5);
+        assert_eq!(c1.assignment(), &[0]);
+        assert_eq!(c1.lag(), 0);
+    }
+
+    #[test]
+    fn consumer_drains_repartitioned_topic_in_epoch_order() {
+        let c = setup(1);
+        c.produce("t", 0, 0, &[vec![1], vec![2]]).unwrap();
+        let mut consumer = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        // Repartition with standing backlog: epoch 0 must drain first.
+        c.repartition_topic("t", 3).unwrap();
+        c.produce("t", 1, 0, &[vec![3]]).unwrap();
+        c.produce("t", 2, 0, &[vec![4]]).unwrap();
+        let mut seen = Vec::new();
+        for _ in 0..12 {
+            for r in consumer.poll().unwrap() {
+                seen.push(r.record.value[0]);
+            }
+            if seen.len() == 4 {
+                break;
+            }
+        }
+        // Old-epoch records strictly precede new-epoch records.
+        assert_eq!(seen[..2], [1, 2]);
+        let mut tail = seen[2..].to_vec();
+        tail.sort();
+        assert_eq!(tail, vec![3, 4]);
+        assert_eq!(consumer.epoch(), 1);
+        assert_eq!(consumer.assignment().len(), 3);
     }
 
     #[test]

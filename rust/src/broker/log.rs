@@ -91,6 +91,11 @@ pub struct PartitionLog {
     /// Next offset to be assigned (aka log end offset / high watermark).
     next_offset: u64,
     total_bytes: usize,
+    /// Repartition fences: `(epoch, end_offset_at_seal)` per sealed
+    /// epoch, ascending.  Everything below the watermark of epoch `e`
+    /// was appended before the topic transitioned *to* epoch `e` — the
+    /// boundary consumer groups drain to before serving epoch `e` data.
+    epoch_marks: Vec<(u64, u64)>,
 }
 
 impl PartitionLog {
@@ -100,6 +105,7 @@ impl PartitionLog {
             config,
             next_offset: 0,
             total_bytes: 0,
+            epoch_marks: Vec::new(),
         }
     }
 
@@ -119,6 +125,30 @@ impl PartitionLog {
 
     pub fn segment_count(&self) -> usize {
         self.segments.len()
+    }
+
+    /// Seal the log for a repartition to `epoch`: record the current
+    /// end offset as that epoch's watermark and return it.  Records at
+    /// offsets below the watermark belong to earlier epochs; everything
+    /// appended afterwards belongs to `epoch` (or later).  Idempotent
+    /// per epoch.
+    pub fn seal_epoch(&mut self, epoch: u64) -> u64 {
+        if let Some((e, mark)) = self.epoch_marks.last() {
+            if *e >= epoch {
+                return *mark;
+            }
+        }
+        self.epoch_marks.push((epoch, self.next_offset));
+        self.next_offset
+    }
+
+    /// The watermark recorded when the log was sealed for `epoch`
+    /// (`None` if that epoch was never sealed here).
+    pub fn epoch_watermark(&self, epoch: u64) -> Option<u64> {
+        self.epoch_marks
+            .iter()
+            .find(|(e, _)| *e == epoch)
+            .map(|(_, mark)| *mark)
     }
 
     /// Append a batch; returns the base offset of the batch.
@@ -302,6 +332,22 @@ mod tests {
             log.end_offset() - 1,
             "tail must be intact"
         );
+    }
+
+    #[test]
+    fn epoch_watermarks_are_sticky_and_ordered() {
+        let mut log = log_with(1024, None);
+        log.append_batch([b"a".as_slice(), b"b".as_slice()], 0);
+        assert_eq!(log.seal_epoch(1), 2);
+        // Sealing the same epoch again returns the original watermark.
+        log.append_batch([b"c".as_slice()], 0);
+        assert_eq!(log.seal_epoch(1), 2);
+        assert_eq!(log.epoch_watermark(1), Some(2));
+        assert_eq!(log.epoch_watermark(2), None);
+        // A later epoch seals at the new end.
+        assert_eq!(log.seal_epoch(2), 3);
+        assert_eq!(log.epoch_watermark(1), Some(2));
+        assert_eq!(log.epoch_watermark(2), Some(3));
     }
 
     #[test]

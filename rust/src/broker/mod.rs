@@ -11,6 +11,10 @@
 //!   ([`cluster`]),
 //! * batching producers ([`producer`]) and group consumers
 //!   ([`consumer`]),
+//! * online topic repartitioning ([`repartition`]): epoch-stamped
+//!   partition sets with drain-before-serve fences and jump consistent
+//!   hashing, so the one-task-per-partition scaling cap (§6.4's knee)
+//!   moves with the fleet,
 //! * calibrated cloud-broker latency models for Amazon Kinesis and
 //!   Google Pub/Sub ([`cloud`]) used by the Figure 7 comparison.
 //!
@@ -23,9 +27,11 @@ pub mod cluster;
 pub mod consumer;
 pub mod log;
 pub mod producer;
+pub mod repartition;
 
 pub use cloud::{CloudBroker, CloudLatencyModel, CloudRecord};
 pub use cluster::{BrokerCluster, Partition, Topic};
 pub use consumer::{Consumer, ConsumerConfig, PartitionRecord};
 pub use log::{LogConfig, PartitionLog, Record};
 pub use producer::{Partitioner, Producer, ProducerConfig};
+pub use repartition::{jump_hash, key_partition, EpochTransition, ServePlan};

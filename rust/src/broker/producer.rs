@@ -7,21 +7,26 @@
 //! the broker-side token buckets (NIC/disk), which is exactly how a
 //! saturated Kafka broker pushes back on `acks=all` producers.
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cluster::NodeId;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::RateMeter;
 
 use super::cluster::BrokerCluster;
+use super::repartition::key_partition;
 
 /// Partition selection strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Partitioner {
     /// Rotate through partitions (the MASS default).
     RoundRobin,
-    /// Hash a caller-provided key.
+    /// Jump-consistent-hash a caller-provided key
+    /// ([`super::repartition::key_partition`]): stable per key, and a
+    /// topic resize moves only ~1/new_count of the key space per added
+    /// partition.
     Keyed,
     /// Always the given partition.
     Fixed(usize),
@@ -47,8 +52,12 @@ impl Default for ProducerConfig {
     }
 }
 
+/// A pending per-partition batch.  Records keep their key so that a
+/// topic resize can re-route not-yet-flushed records through the *new*
+/// key mapping (flushing them under stale routing would break per-key
+/// order across the repartition fence).
 struct Batch {
-    values: Vec<Vec<u8>>,
+    records: Vec<(Option<Vec<u8>>, Vec<u8>)>,
     bytes: usize,
     opened: Instant,
 }
@@ -56,7 +65,7 @@ struct Batch {
 impl Batch {
     fn new() -> Self {
         Batch {
-            values: Vec::new(),
+            records: Vec::new(),
             bytes: 0,
             opened: Instant::now(),
         }
@@ -67,6 +76,9 @@ impl Batch {
 pub struct Producer {
     cluster: BrokerCluster,
     topic: String,
+    /// Cached topic handle; revalidated lock-free on every send via the
+    /// partition epoch atomic (see `refresh_partitions`).
+    topic_handle: Arc<super::cluster::Topic>,
     node: NodeId,
     config: ProducerConfig,
     n_partitions: usize,
@@ -82,10 +94,12 @@ impl Producer {
         node: NodeId,
         config: ProducerConfig,
     ) -> Result<Self> {
-        let n_partitions = cluster.partition_count(topic)?;
+        let topic_handle = cluster.topic(topic)?;
+        let n_partitions = topic_handle.active_partitions();
         Ok(Producer {
             cluster,
             topic: topic.to_string(),
+            topic_handle,
             node,
             config,
             n_partitions,
@@ -95,19 +109,45 @@ impl Producer {
         })
     }
 
+    /// Keep routing in sync with the live partition count (it moves
+    /// when the autoscaler repartitions).  The fast path is lock-free:
+    /// every repartition bumps partition 0's epoch atomic (shared with
+    /// our cached handle), so a matching epoch proves the cache is
+    /// current without touching the topics mutex on the send hot path.
+    /// On a change, every pending record is re-routed through the *new*
+    /// partition mapping — per-batch order is preserved, and keyed
+    /// records land where their key now lives, keeping per-key order
+    /// across the epoch fence.
+    fn refresh_partitions(&mut self) -> Result<()> {
+        let cached = &self.topic_handle;
+        if cached.partitions[0].epoch.load(Ordering::Acquire) == cached.epoch() {
+            return Ok(());
+        }
+        self.topic_handle = self.cluster.topic(&self.topic)?;
+        let n = self.topic_handle.active_partitions();
+        if n == self.n_partitions {
+            return Ok(());
+        }
+        let pending: Vec<(Option<Vec<u8>>, Vec<u8>)> = self
+            .batches
+            .iter_mut()
+            .flat_map(|b| std::mem::take(&mut b.records))
+            .collect();
+        self.n_partitions = n;
+        self.batches = (0..n).map(|_| Batch::new()).collect();
+        self.rr_next = 0;
+        for (key, value) in pending {
+            // Recursion is benign: the count now matches, so the nested
+            // refresh is a no-op unless another resize races in.
+            self.send(key.as_deref(), value)?;
+        }
+        Ok(())
+    }
+
     fn partition_for(&mut self, key: Option<&[u8]>) -> usize {
         match self.config.partitioner {
             Partitioner::Fixed(p) => p % self.n_partitions,
-            Partitioner::Keyed => {
-                let key = key.unwrap_or(b"");
-                // FNV-1a
-                let mut h: u64 = 0xcbf29ce484222325;
-                for b in key {
-                    h ^= *b as u64;
-                    h = h.wrapping_mul(0x100000001b3);
-                }
-                (h % self.n_partitions as u64) as usize
-            }
+            Partitioner::Keyed => key_partition(key.unwrap_or(b""), self.n_partitions),
             Partitioner::RoundRobin => {
                 let p = self.rr_next;
                 self.rr_next = (self.rr_next + 1) % self.n_partitions;
@@ -119,13 +159,14 @@ impl Producer {
     /// Queue one record; flushes the target partition's batch if full or
     /// lingered out.  Returns true if a flush happened.
     pub fn send(&mut self, key: Option<&[u8]>, value: Vec<u8>) -> Result<bool> {
+        self.refresh_partitions()?;
         let p = self.partition_for(key);
         let batch = &mut self.batches[p];
-        if batch.values.is_empty() {
+        if batch.records.is_empty() {
             batch.opened = Instant::now();
         }
         batch.bytes += value.len();
-        batch.values.push(value);
+        batch.records.push((key.map(|k| k.to_vec()), value));
         if batch.bytes >= self.config.batch_bytes || batch.opened.elapsed() >= self.config.linger
         {
             self.flush_partition(p)?;
@@ -135,23 +176,54 @@ impl Producer {
     }
 
     fn flush_partition(&mut self, p: usize) -> Result<()> {
-        if self.batches[p].values.is_empty() {
+        if self.batches[p].records.is_empty() {
             return Ok(());
         }
         let batch = std::mem::replace(&mut self.batches[p], Batch::new());
-        self.cluster
-            .produce(&self.topic, p, self.node, &batch.values)?;
-        self.metrics
-            .record_many(batch.values.len() as u64, batch.bytes as u64);
-        Ok(())
+        let (keys, values): (Vec<Option<Vec<u8>>>, Vec<Vec<u8>>) =
+            batch.records.into_iter().unzip();
+        match self.cluster.produce(&self.topic, p, self.node, &values) {
+            Ok(_) => {
+                self.metrics
+                    .record_many(values.len() as u64, batch.bytes as u64);
+                Ok(())
+            }
+            // The produce raced a repartition (partition retired, or the
+            // log was sealed after routing): re-send every record, which
+            // refreshes the routing table and re-hashes keys onto the
+            // new partition set.
+            Err(Error::StaleEpoch(_)) => {
+                for (key, value) in keys.into_iter().zip(values) {
+                    self.send(key.as_deref(), value)?;
+                }
+                Ok(())
+            }
+            Err(e) => Err(e),
+        }
     }
 
-    /// Flush every pending batch.
+    /// Flush every pending batch.  Re-checks the partition count first
+    /// (a resize since the last send must re-route pending records, not
+    /// flush them under stale routing), and runs repeated passes because
+    /// a stale-epoch re-route may re-queue records into batches an
+    /// earlier pass already flushed.
     pub fn flush(&mut self) -> Result<()> {
-        for p in 0..self.n_partitions {
-            self.flush_partition(p)?;
+        self.refresh_partitions()?;
+        loop {
+            let dirty: Vec<usize> = self
+                .batches
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| !b.records.is_empty())
+                .map(|(i, _)| i)
+                .collect();
+            if dirty.is_empty() {
+                return Ok(());
+            }
+            for p in dirty {
+                self.flush_partition(p)?;
+            }
         }
-        Ok(())
     }
 
     pub fn topic(&self) -> &str {
@@ -245,6 +317,40 @@ mod tests {
         assert_eq!(c.end_offset("t", 0).unwrap(), 0, "nothing flushed yet");
         p.flush().unwrap();
         assert_eq!(c.end_offset("t", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn producer_follows_repartition() {
+        let c = setup(2);
+        let mut p = Producer::new(
+            c.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: 1, // flush every record
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..4u8 {
+            p.send(None, vec![i]).unwrap();
+        }
+        // Grow the topic mid-stream: the producer's next send re-reads
+        // the live partition count and spreads over all 4 partitions.
+        c.repartition_topic("t", 4).unwrap();
+        for i in 0..8u8 {
+            p.send(None, vec![i]).unwrap();
+        }
+        let counts: Vec<u64> = (0..4).map(|i| c.end_offset("t", i).unwrap()).collect();
+        assert_eq!(counts.iter().sum::<u64>(), 12);
+        assert!(counts.iter().all(|n| *n > 0), "{counts:?}");
+        // Shrink: pending routing collapses back onto the active prefix.
+        c.repartition_topic("t", 1).unwrap();
+        for i in 0..3u8 {
+            p.send(None, vec![i]).unwrap();
+        }
+        assert_eq!(c.end_offset("t", 0).unwrap(), counts[0] + 3);
+        assert_eq!(p.metrics.messages(), 15);
     }
 
     #[test]

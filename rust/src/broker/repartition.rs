@@ -1,0 +1,334 @@
+//! Online topic repartitioning: the partition count moves with the fleet.
+//!
+//! The paper's §6.4 evaluation shows processing throughput flat-lining
+//! once processing nodes exceed the topic's partition count — Spark
+//! assigns one task per Kafka partition, so partitions are the
+//! parallelism ceiling.  This module removes that knee: a topic's
+//! partition set can grow (and shrink) *while producers and consumer
+//! groups are attached*, with three guarantees the invariant suite
+//! (`tests/proptest_repartition.rs`) checks across random interleavings:
+//!
+//! * **exactly-once** — no produced record is lost or duplicated across
+//!   a resize;
+//! * **per-key order** — records of one key are consumed in produce
+//!   order even when the key's partition changes;
+//! * **monotone progress** — committed offsets never exceed end offsets
+//!   (group lag never goes negative).
+//!
+//! The mechanism is epoch-based:
+//!
+//! 1. Every resize bumps the topic's **epoch** and installs a new
+//!    epoch-stamped partition set (ids are stable; a grow appends or
+//!    re-activates partitions, a shrink retires a suffix that stays
+//!    readable until drained).
+//! 2. At the transition, every live partition log records an **epoch
+//!    watermark** ([`crate::broker::PartitionLog::seal_epoch`]) — the
+//!    fence below which records belong to the old epoch.  Appends that
+//!    raced the seal are rejected ([`crate::error::Error::StaleEpoch`])
+//!    and re-routed by the producer, so the fence is exact.
+//! 3. Consumer groups **drain before serving**: while a group's epoch
+//!    trails the topic's, members fetch only below the fences; when all
+//!    fences are committed the group's epoch advances and a rebalance
+//!    spreads members over the new partition set.  All records of epoch
+//!    `e` are therefore consumed before any record of epoch `e+1` —
+//!    which, combined with per-partition order inside an epoch, gives
+//!    global per-key order.
+//! 4. Producers map keys to partitions with **jump consistent hashing**
+//!    ([`key_partition`]), so a resize from `n` to `m` partitions moves
+//!    only a `1 - n/m` fraction of the key space (1/m per added
+//!    partition) instead of reshuffling almost every key the way
+//!    `hash % n` does.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+use super::cluster::{BrokerCluster, Partition, Topic};
+
+/// One epoch transition of a topic, recorded at resize time.
+#[derive(Debug, Clone)]
+pub struct EpochTransition {
+    /// The epoch this transition leads *to*.
+    pub epoch: u64,
+    /// Active partition count from this epoch on.
+    pub active: usize,
+    /// Per-partition end offsets at seal time, indexed by partition id
+    /// over every partition that existed before the transition.  A
+    /// consumer group serving the previous epoch must commit up to all
+    /// of these before it may serve epoch `epoch` data.
+    pub fences: Vec<u64>,
+}
+
+/// What one group member should serve right now: generation, serving
+/// epoch, assigned partitions, and (while draining) fetch ceilings
+/// aligned with `partitions` (`None` = unbounded).
+#[derive(Debug, Clone)]
+pub struct ServePlan {
+    pub generation: u64,
+    /// The epoch the group is serving.
+    pub epoch: u64,
+    /// The topic's epoch when this plan was computed.  A consumer whose
+    /// blocking fetch outlives the plan re-checks this before trusting
+    /// an uncapped fetch — a repartition mid-fetch could otherwise hand
+    /// it records from beyond a fence it never saw.
+    pub topic_epoch: u64,
+    pub partitions: Vec<usize>,
+    pub ceilings: Vec<Option<u64>>,
+}
+
+/// Jump consistent hash (Lamping & Veach 2014): maps `key` to a bucket
+/// in `[0, buckets)` such that growing the bucket count from `n` to `m`
+/// relocates only a `1 - n/m` fraction of keys — and always toward the
+/// *new* buckets, matching how repartition grows the partition suffix.
+pub fn jump_hash(mut key: u64, buckets: usize) -> usize {
+    debug_assert!(buckets > 0);
+    let mut b: i64 = -1;
+    let mut j: i64 = 0;
+    while j < buckets as i64 {
+        b = j;
+        key = key.wrapping_mul(2862933555777941757).wrapping_add(1);
+        let scale = (1u64 << 31) as f64 / ((key >> 33).wrapping_add(1) as f64);
+        j = (b.wrapping_add(1) as f64 * scale) as i64;
+    }
+    b as usize
+}
+
+/// FNV-1a over the key bytes, then jump-hash into the partition count —
+/// the keyed-routing function producers use, shared here so tests and
+/// applications can predict placements.
+pub fn key_partition(key: &[u8], partitions: usize) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    jump_hash(h, partitions)
+}
+
+impl BrokerCluster {
+    /// Resize `topic` to `new_active` partitions while attached
+    /// producers and consumer groups keep running.  Returns the new
+    /// epoch (or the current one when the size is unchanged).
+    ///
+    /// Growing appends fresh partitions (or re-activates previously
+    /// retired ids); shrinking retires the trailing suffix, which stays
+    /// readable until every group drains it.  Every attached group is
+    /// rebalanced (generation bump) so its members observe the
+    /// transition on their next poll.
+    pub fn repartition_topic(&self, topic: &str, new_active: usize) -> Result<u64> {
+        self.check_running()?;
+        if new_active == 0 {
+            return Err(Error::Broker("topic needs >= 1 partition".into()));
+        }
+        let n_brokers = self.inner.broker_nodes.lock().unwrap().len().max(1);
+        let mut topics = self.inner.topics.lock().unwrap();
+        let t = topics
+            .get(topic)
+            .cloned()
+            .ok_or_else(|| Error::Broker(format!("unknown topic {topic}")))?;
+        if new_active == t.active {
+            return Ok(t.epoch);
+        }
+        let new_epoch = t.epoch + 1;
+
+        // Seal every existing log: record the fence and bump the
+        // partition's epoch under the log lock, so concurrent produces
+        // either land below the fence or fail StaleEpoch and re-route.
+        let mut fences = Vec::with_capacity(t.partitions.len());
+        for p in &t.partitions {
+            let mut log = p.log.lock().unwrap();
+            fences.push(log.seal_epoch(new_epoch));
+            p.epoch.store(new_epoch, Ordering::Release);
+        }
+
+        let mut partitions = t.partitions.clone();
+        while partitions.len() < new_active {
+            let id = partitions.len();
+            partitions.push(Arc::new(Partition::new(
+                id,
+                id % n_brokers,
+                new_epoch,
+                self.inner.log_config,
+            )));
+        }
+        let mut transitions = t.transitions.clone();
+        transitions.push(EpochTransition {
+            epoch: new_epoch,
+            active: new_active,
+            fences,
+        });
+        topics.insert(
+            topic.to_string(),
+            Arc::new(Topic {
+                name: t.name.clone(),
+                partitions,
+                active: new_active,
+                epoch: new_epoch,
+                transitions,
+            }),
+        );
+        drop(topics);
+
+        // Rebalance every attached group so consumers pick up the
+        // transition (fences / new partition set) on their next poll.
+        let mut groups = self.inner.groups.lock().unwrap();
+        for ((_, gt), st) in groups.iter_mut() {
+            if gt == topic {
+                st.generation += 1;
+            }
+        }
+        Ok(new_epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+    use std::time::Duration;
+
+    fn cluster() -> BrokerCluster {
+        BrokerCluster::new(Machine::unthrottled(3), vec![0])
+    }
+
+    #[test]
+    fn grow_adds_partitions_and_bumps_epoch() {
+        let c = cluster();
+        c.create_topic("t", 2).unwrap();
+        assert_eq!(c.topic_epoch("t").unwrap(), 0);
+        let e = c.repartition_topic("t", 6).unwrap();
+        assert_eq!(e, 1);
+        assert_eq!(c.partition_count("t").unwrap(), 6);
+        assert_eq!(c.total_partitions("t").unwrap(), 6);
+        // New partitions accept writes immediately.
+        c.produce("t", 5, 0, &[vec![1]]).unwrap();
+        assert_eq!(c.end_offset("t", 5).unwrap(), 1);
+        // Resizing to the current size is a no-op.
+        assert_eq!(c.repartition_topic("t", 6).unwrap(), 1);
+    }
+
+    #[test]
+    fn shrink_retires_suffix_but_keeps_it_readable() {
+        let c = cluster();
+        c.create_topic("t", 4).unwrap();
+        c.produce("t", 3, 0, &[vec![9]]).unwrap();
+        c.repartition_topic("t", 2).unwrap();
+        assert_eq!(c.partition_count("t").unwrap(), 2);
+        assert_eq!(c.total_partitions("t").unwrap(), 4);
+        // Retired partition rejects writes (stale epoch) but still reads.
+        assert!(matches!(
+            c.produce("t", 3, 0, &[vec![1]]),
+            Err(Error::StaleEpoch(_))
+        ));
+        let recs = c
+            .fetch("t", 3, 0, usize::MAX, 0, Duration::from_millis(10))
+            .unwrap();
+        assert_eq!(recs.len(), 1);
+        // Regrowing re-activates the retired ids and their logs.
+        c.repartition_topic("t", 4).unwrap();
+        c.produce("t", 3, 0, &[vec![2]]).unwrap();
+        assert_eq!(c.end_offset("t", 3).unwrap(), 2);
+    }
+
+    #[test]
+    fn group_drains_old_epoch_before_advancing() {
+        let c = cluster();
+        c.create_topic("t", 2).unwrap();
+        c.produce("t", 0, 0, &[vec![1], vec![2]]).unwrap();
+        let (m, _) = c.group_join("g", "t");
+        c.repartition_topic("t", 4).unwrap();
+        // Draining: the plan covers the old 2 partitions, capped at the
+        // fences, and the group's epoch trails the topic's.
+        let plan = c.group_serve_plan("g", "t", m).unwrap();
+        assert_eq!(plan.epoch, 0);
+        assert_eq!(plan.partitions, vec![0, 1]);
+        assert_eq!(plan.ceilings, vec![Some(2), Some(0)]);
+        assert_eq!(c.group_epoch("g", "t"), 0);
+        // Committing up to every fence advances the epoch and widens
+        // the plan to the new partition set, uncapped.
+        c.commit("g", "t", 0, 2);
+        let plan = c.group_serve_plan("g", "t", m).unwrap();
+        assert_eq!(plan.epoch, 1);
+        assert_eq!(plan.partitions, vec![0, 1, 2, 3]);
+        assert!(plan.ceilings.iter().all(|c| c.is_none()));
+        assert_eq!(c.group_epoch("g", "t"), 1);
+    }
+
+    #[test]
+    fn empty_topic_repartition_advances_without_commits() {
+        let c = cluster();
+        c.create_topic("t", 2).unwrap();
+        let (m, _) = c.group_join("g", "t");
+        c.repartition_topic("t", 8).unwrap();
+        // All fences are 0: the very next serve plan is already at the
+        // new epoch.
+        let plan = c.group_serve_plan("g", "t", m).unwrap();
+        assert_eq!(plan.epoch, 1);
+        assert_eq!(plan.partitions.len(), 8);
+    }
+
+    #[test]
+    fn queued_transitions_drain_in_order() {
+        let c = cluster();
+        c.create_topic("t", 1).unwrap();
+        c.produce("t", 0, 0, &[vec![1]]).unwrap();
+        let (m, _) = c.group_join("g", "t");
+        c.repartition_topic("t", 3).unwrap(); // epoch 1, fence [1]
+        c.produce("t", 2, 0, &[vec![2]]).unwrap();
+        c.repartition_topic("t", 2).unwrap(); // epoch 2, fences [1,0,1]
+        // Still gated on epoch 0's fence.
+        let plan = c.group_serve_plan("g", "t", m).unwrap();
+        assert_eq!(plan.epoch, 0);
+        assert_eq!(plan.partitions, vec![0]);
+        assert_eq!(plan.ceilings, vec![Some(1)]);
+        // Draining epoch 0 exposes epoch 1's domain (3 partitions,
+        // fenced); draining that reaches epoch 2's active set of 2.
+        c.commit("g", "t", 0, 1);
+        let plan = c.group_serve_plan("g", "t", m).unwrap();
+        assert_eq!(plan.epoch, 1);
+        assert_eq!(plan.partitions, vec![0, 1, 2]);
+        assert_eq!(plan.ceilings, vec![Some(1), Some(0), Some(1)]);
+        c.commit("g", "t", 2, 1);
+        let plan = c.group_serve_plan("g", "t", m).unwrap();
+        assert_eq!(plan.epoch, 2);
+        assert_eq!(plan.partitions, vec![0, 1]);
+    }
+
+    #[test]
+    fn repartition_rejects_zero_and_unknown_topic() {
+        let c = cluster();
+        c.create_topic("t", 2).unwrap();
+        assert!(c.repartition_topic("t", 0).is_err());
+        assert!(c.repartition_topic("nope", 4).is_err());
+    }
+
+    #[test]
+    fn jump_hash_moves_minimal_keys_on_grow() {
+        let n_keys = 10_000u64;
+        let mut moved = 0;
+        for k in 0..n_keys {
+            let before = jump_hash(k, 8);
+            let after = jump_hash(k, 12);
+            if before != after {
+                moved += 1;
+                // Moves always land on the new buckets.
+                assert!(after >= 8, "key {k} moved {before} -> {after}");
+            }
+        }
+        // Expect ~ (1 - 8/12) = a third of keys to move; allow slack.
+        let frac = moved as f64 / n_keys as f64;
+        assert!((0.25..0.42).contains(&frac), "moved fraction {frac}");
+    }
+
+    #[test]
+    fn key_partition_is_stable_and_in_range() {
+        for parts in [1usize, 3, 7, 48] {
+            for key in [b"a".as_slice(), b"stream-42", b""] {
+                let p = key_partition(key, parts);
+                assert!(p < parts);
+                assert_eq!(p, key_partition(key, parts), "deterministic");
+            }
+        }
+    }
+}

@@ -204,7 +204,11 @@ impl MicroBatchEngine {
         config: StreamingJobConfig,
         processor: Arc<dyn BatchProcessor>,
     ) -> Result<StreamingJobHandle> {
-        let n_partitions = cluster.partition_count(&config.topic)?;
+        // Validate the topic exists up front; the driver re-derives the
+        // partition count (and therefore its task parallelism) every
+        // window, so a runtime repartition moves the per-batch task
+        // fan-out with it.
+        cluster.partition_count(&config.topic)?;
         let stats = JobStats::new();
         let stop = Arc::new(AtomicBool::new(false));
         let pool = self.pool.clone();
@@ -214,15 +218,7 @@ impl MicroBatchEngine {
         let driver = std::thread::Builder::new()
             .name(format!("driver-{}", config.topic))
             .spawn(move || {
-                driver_loop(
-                    pool,
-                    cluster,
-                    config,
-                    processor,
-                    n_partitions,
-                    driver_stats,
-                    driver_stop,
-                )
+                driver_loop(pool, cluster, config, processor, driver_stats, driver_stop)
             })
             .map_err(|e| Error::Engine(format!("spawn driver: {e}")))?;
 
@@ -234,30 +230,38 @@ impl MicroBatchEngine {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn driver_loop(
     pool: TaskEngine,
     cluster: BrokerCluster,
     config: StreamingJobConfig,
     processor: Arc<dyn BatchProcessor>,
-    n_partitions: usize,
     stats: Arc<JobStats>,
     stop: Arc<AtomicBool>,
 ) {
-    // Start from committed offsets (resume semantics).
-    let mut positions: HashMap<usize, u64> = (0..n_partitions)
-        .map(|p| (p, cluster.committed(&config.group, &config.topic, p)))
-        .collect();
+    // Offsets are tracked per partition id and lazily extended as the
+    // topic grows (resume semantics: a partition's first appearance
+    // starts at its committed offset).
+    let mut positions: HashMap<usize, u64> = HashMap::new();
     let mut batch_no: u64 = 0;
 
     while !stop.load(Ordering::Relaxed) {
         let tick = Instant::now();
 
-        // Snapshot watermarks; one task per partition with new data
-        // (paper: "Spark Streaming assigns 1 task per Kafka partition").
+        // Re-derive parallelism from the live partition set: one task
+        // per partition with new data (paper: "Spark Streaming assigns
+        // 1 task per Kafka partition"), including partitions retired by
+        // a shrink that still hold a backlog.
+        let n_partitions = match cluster.total_partitions(&config.topic) {
+            Ok(n) => n,
+            Err(_) => break, // cluster stopped
+        };
+
+        // Snapshot watermarks; one task per partition with new data.
         let mut tasks = Vec::new();
         for p in 0..n_partitions {
-            let pos = positions[&p];
+            let pos = *positions
+                .entry(p)
+                .or_insert_with(|| cluster.committed(&config.group, &config.topic, p));
             let end = match cluster.end_offset(&config.topic, p) {
                 Ok(e) => e,
                 Err(_) => break, // cluster stopped
@@ -522,6 +526,45 @@ mod tests {
         ));
         job.stop();
         engine.stop();
+    }
+
+    #[test]
+    fn job_tasks_follow_live_partition_count() {
+        // A running job must fan out over partitions created *after*
+        // start_job: repartition mid-stream and confirm records landing
+        // on the new partitions are processed.
+        let (m, c) = setup(1);
+        let engine = MicroBatchEngine::new(m, vec![1, 2], 2);
+        let seen: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        let processor = move |ctx: &TaskContext, recs: &[Record]| {
+            for _ in recs {
+                seen2.lock().unwrap().push(ctx.partition);
+            }
+            Ok(())
+        };
+        let job = engine
+            .start_job(
+                c.clone(),
+                StreamingJobConfig::new("t", Duration::from_millis(30)),
+                Arc::new(processor),
+            )
+            .unwrap();
+        c.produce("t", 0, 3, &[vec![1]]).unwrap();
+        assert!(wait_for(|| seen.lock().unwrap().len() == 1, 5.0));
+        c.repartition_topic("t", 3).unwrap();
+        c.produce("t", 1, 3, &[vec![2]]).unwrap();
+        c.produce("t", 2, 3, &[vec![3]]).unwrap();
+        assert!(
+            wait_for(|| seen.lock().unwrap().len() == 3, 5.0),
+            "saw {:?}",
+            seen.lock().unwrap()
+        );
+        job.stop();
+        engine.stop();
+        let mut got = seen.lock().unwrap().clone();
+        got.sort();
+        assert_eq!(got, vec![0, 1, 2]);
     }
 
     #[test]

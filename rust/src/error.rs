@@ -27,6 +27,12 @@ pub enum Error {
     /// produce to a stopped cluster).
     Broker(String),
 
+    /// A produce raced a topic repartition: the caller routed the record
+    /// under a partition-set epoch that was sealed before the append
+    /// could land.  Producers recover by refreshing their routing table
+    /// and re-sending (see `broker::Producer`).
+    StaleEpoch(String),
+
     /// Stream-engine failures (job not running, processor panic).
     Engine(String),
 
@@ -46,6 +52,7 @@ impl std::fmt::Display for Error {
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Artifact(m) => write!(f, "artifact: {m}"),
             Error::Broker(m) => write!(f, "broker: {m}"),
+            Error::StaleEpoch(m) => write!(f, "stale epoch: {m}"),
             Error::Engine(m) => write!(f, "engine: {m}"),
             Error::Pilot(m) => write!(f, "pilot: {m}"),
             Error::Wire(m) => write!(f, "wire: {m}"),

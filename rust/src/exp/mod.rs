@@ -12,7 +12,7 @@
 //! | headline | §6.5      | 32-node max-scale run                      |
 //! | elastic  | §1, §4.2  | closed-loop autoscaling burst @ 32 nodes   |
 
-use crate::autoscale::ThresholdPolicy;
+use crate::autoscale::{PartitionElastic, ThresholdPolicy};
 use crate::broker::cloud::CloudBroker;
 use crate::config::{CostPreset, ExperimentConfig};
 use crate::error::Result;
@@ -195,11 +195,17 @@ pub fn fig9(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
 }
 
 /// Elasticity: resource footprint vs input rate under a 10x burst at
-/// 32-node Wrangler scale, driven by the threshold autoscaling policy
-/// through the virtual-time elastic harness.  One row per micro-batch
-/// window: offered rate, usable nodes, lag, and the decision taken —
-/// the timeline behind the paper's "add/remove resources at runtime"
-/// claim, now closed-loop.
+/// 32-node Wrangler scale, driven through the virtual-time elastic
+/// harness.  One row per micro-batch window: offered rate, usable
+/// nodes, partitions, lag, and the decision taken — the timeline behind
+/// the paper's "add/remove resources at runtime" claim, now closed-loop.
+///
+/// Under the paper-era preset the threshold policy replays the §6.4
+/// regime.  Under the calibrated preset (Rust-speed processors, which
+/// the paper-era rates never saturate) the calibrated-scale scenario
+/// runs instead, with the partition-elastic policy: the burst demands
+/// more executor cores than the topic's 48 partitions can feed, so the
+/// controller repartitions mid-burst and the knee moves with the fleet.
 pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
     let rec = Recorder::new();
     let machine = SimMachine {
@@ -209,31 +215,48 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
         executors_per_node: 2,
         ..Default::default()
     };
+    let executors_per_node = machine.executors_per_node;
     let sim = ElasticSim::new(machine, *costs);
     let window = config.window_secs;
-    let sc = ElasticScenario {
-        processor: "gridrec".into(),
-        schedule: RateSchedule::bursty(4.0, 40.0, 20.0 * window, 10.0 * window),
-        window_secs: window,
-        windows: 60,
-        broker_nodes: 4,
-        partitions_per_node: config.partitions_per_node,
-        min_nodes: 2,
-        max_nodes: 32,
-        initial_nodes: 2,
-        provision_delay_secs: 1.5 * window,
+    let res = match config.preset {
+        CostPreset::PaperEra => {
+            let sc = ElasticScenario {
+                processor: "gridrec".into(),
+                schedule: RateSchedule::bursty(4.0, 40.0, 20.0 * window, 10.0 * window),
+                window_secs: window,
+                windows: 60,
+                broker_nodes: 4,
+                partitions_per_node: config.partitions_per_node,
+                min_nodes: 2,
+                max_nodes: 32,
+                initial_nodes: 2,
+                provision_delay_secs: 1.5 * window,
+                repartition_delay_secs: window,
+                max_partitions: 128,
+            };
+            let mut policy = ThresholdPolicy::new(600, 60)
+                .with_sustain(1)
+                .with_cooldown_secs(2.0 * window)
+                .with_step(8);
+            sim.run(&sc, &mut policy)
+        }
+        CostPreset::Calibrated => {
+            let sc = ElasticScenario::calibrated_burst(window);
+            let inner = ThresholdPolicy::new(20_000, 2_000)
+                .with_sustain(1)
+                .with_cooldown_secs(2.0 * window)
+                .with_step(8);
+            let mut policy = PartitionElastic::new(inner, executors_per_node);
+            sim.run(&sc, &mut policy)
+        }
     };
-    let mut policy = ThresholdPolicy::new(600, 60)
-        .with_sustain(1)
-        .with_cooldown_secs(2.0 * window)
-        .with_step(8);
-    let res = sim.run(&sc, &mut policy);
     for r in &res.rows {
         rec.add(
             Row::new()
                 .push("t_s", format!("{:.0}", r.t_secs))
                 .push("input_msgs_per_s", format!("{:.1}", r.input_rate))
                 .push("nodes", r.nodes)
+                .push("partitions", r.partitions)
                 .push("lag_msgs", format!("{:.0}", r.lag))
                 .push("decision", r.decision)
                 .push("behind", u8::from(r.behind)),
@@ -409,7 +432,7 @@ mod tests {
         let rec = elasticity(&config, &costs);
         let csv = rec.to_csv();
         assert_eq!(csv.lines().count(), 1 + 60, "one row per window");
-        assert!(csv.starts_with("t_s,input_msgs_per_s,nodes,lag_msgs,decision,behind"));
+        assert!(csv.starts_with("t_s,input_msgs_per_s,nodes,partitions,lag_msgs,decision,behind"));
         // The burst must be visible both in the input and the footprint.
         let nodes: Vec<usize> = csv
             .lines()
@@ -418,6 +441,33 @@ mod tests {
             .collect();
         let peak = *nodes.iter().max().unwrap();
         assert!(peak > 2 && peak <= 32, "peak {peak}");
+        assert_eq!(*nodes.last().unwrap(), 2, "footprint returns to the floor");
+    }
+
+    #[test]
+    fn elasticity_calibrated_moves_the_knee() {
+        let config = cfg(CostPreset::Calibrated);
+        let costs = CostModel::calibrated_default();
+        let csv = elasticity(&config, &costs).to_csv();
+        // Partition column present and the count grows past the
+        // initial 48 mid-run: the §6.4 cap moved with the fleet.
+        let partitions: Vec<usize> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(3).unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(partitions[0], 48);
+        assert!(
+            partitions.iter().any(|p| *p > 48),
+            "partition count never grew: {partitions:?}"
+        );
+        // And the fleet tracks the burst past the 24-node knee.
+        let nodes: Vec<usize> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(2).unwrap().parse().unwrap())
+            .collect();
+        assert!(*nodes.iter().max().unwrap() > 24);
         assert_eq!(*nodes.last().unwrap(), 2, "footprint returns to the floor");
     }
 

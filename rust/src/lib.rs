@@ -72,8 +72,8 @@ pub use error::{Error, Result};
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::autoscale::{
-        Autoscaler, AutoscalerConfig, BinPackingPolicy, LagSlopePolicy, PolicyDecision,
-        ScalingPolicy, SignalSnapshot, ThresholdPolicy,
+        Autoscaler, AutoscalerConfig, BinPackingPolicy, LagSlopePolicy, PartitionElastic,
+        PolicyDecision, ScalingPolicy, SignalSnapshot, ThresholdPolicy,
     };
     pub use crate::broker::{
         BrokerCluster, Consumer, ConsumerConfig, Producer, ProducerConfig, Record,

@@ -174,6 +174,9 @@ pub enum ScalingAction {
     Up,
     /// Resources released (extension stopped / pilot shrunk).
     Down,
+    /// Topic repartitioned so the one-task-per-partition cap moves with
+    /// the fleet (usually immediately followed by an `Up` extension).
+    Repartition,
 }
 
 impl std::fmt::Display for ScalingAction {
@@ -181,6 +184,7 @@ impl std::fmt::Display for ScalingAction {
         match self {
             ScalingAction::Up => write!(f, "up"),
             ScalingAction::Down => write!(f, "down"),
+            ScalingAction::Repartition => write!(f, "repartition"),
         }
     }
 }
@@ -200,6 +204,9 @@ pub struct ScalingEvent {
     pub total_nodes: usize,
     /// Consumer lag (messages) observed at decision time.
     pub lag: u64,
+    /// Active partition count of the watched topic after the action
+    /// (what caps task parallelism; changed by `Repartition` events).
+    pub partitions: usize,
     /// Name of the policy that made the decision.
     pub policy: String,
     /// Detection-to-actuated latency: for scale-ups, the time from the
@@ -257,6 +264,7 @@ impl ScalingTimeline {
                     .push("delta_nodes", e.delta_nodes)
                     .push("total_nodes", e.total_nodes)
                     .push("lag_msgs", e.lag)
+                    .push("partitions", e.partitions)
                     .push("policy", &e.policy)
                     .push("reaction_s", format!("{:.4}", e.reaction_secs)),
             );
@@ -452,6 +460,7 @@ mod tests {
             delta_nodes: 2,
             total_nodes: 3,
             lag: 40,
+            partitions: 4,
             policy: "threshold".into(),
             reaction_secs: 0.05,
         });
@@ -461,17 +470,31 @@ mod tests {
             delta_nodes: 2,
             total_nodes: 1,
             lag: 0,
+            partitions: 4,
             policy: "threshold".into(),
             reaction_secs: 0.0,
         });
-        assert_eq!(tl.len(), 2);
+        tl.record(ScalingEvent {
+            at_secs: 5.0,
+            action: ScalingAction::Repartition,
+            delta_nodes: 0,
+            total_nodes: 1,
+            lag: 0,
+            partitions: 8,
+            policy: "partition-elastic".into(),
+            reaction_secs: 0.0,
+        });
+        assert_eq!(tl.len(), 3);
         assert_eq!(tl.count(ScalingAction::Up), 1);
         assert_eq!(tl.count(ScalingAction::Down), 1);
+        assert_eq!(tl.count(ScalingAction::Repartition), 1);
         let csv = tl.to_recorder().to_csv();
         assert!(csv.starts_with("t_s,action,delta_nodes"));
         assert!(csv.contains("up"), "{csv}");
         assert!(csv.contains("down"), "{csv}");
+        assert!(csv.contains("repartition"), "{csv}");
         assert_eq!(tl.events()[0].lag, 40);
+        assert_eq!(tl.events()[2].partitions, 8);
     }
 
     #[test]

@@ -42,6 +42,43 @@ pub struct ElasticScenario {
     /// Virtual seconds between a scale-up decision and the new nodes
     /// becoming usable (batch queue wait + framework extension).
     pub provision_delay_secs: f64,
+    /// Virtual seconds between a repartition decision and the new
+    /// partition set serving (metadata propagation + the consumer
+    /// group draining the old epoch — `broker::repartition`'s
+    /// drain-before-serve fence, in virtual time).
+    pub repartition_delay_secs: f64,
+    /// Ceiling on the partition count a `Repartition` decision can
+    /// request.
+    pub max_partitions: usize,
+}
+
+impl ElasticScenario {
+    /// The ROADMAP's calibrated-scale scenario: Rust-speed processor
+    /// costs (use with [`CostModel::calibrated_default`]) need offered
+    /// rates ~100x the paper era before anything saturates.  The burst
+    /// demands more executor cores than the initial 48 partitions can
+    /// feed (the §6.4 knee sits at 24 nodes x 2 executors), so only a
+    /// partition-elastic policy can track it all the way to the 32-node
+    /// ceiling.
+    pub fn calibrated_burst(window_secs: f64) -> Self {
+        ElasticScenario {
+            processor: "gridrec".into(),
+            // 150 msg/s base (half the 2-node floor's capacity), a
+            // 3000 msg/s burst for 10 windows: serving it needs 30
+            // nodes = 60 cores > 48 partitions.
+            schedule: RateSchedule::bursty(150.0, 3000.0, 20.0 * window_secs, 10.0 * window_secs),
+            window_secs,
+            windows: 60,
+            broker_nodes: 4,
+            partitions_per_node: 12,
+            min_nodes: 2,
+            max_nodes: 32,
+            initial_nodes: 2,
+            provision_delay_secs: 1.5 * window_secs,
+            repartition_delay_secs: window_secs,
+            max_partitions: 128,
+        }
+    }
 }
 
 /// Per-window trace row.
@@ -52,6 +89,9 @@ pub struct ElasticWindow {
     pub input_rate: f64,
     /// Usable processing nodes during this window.
     pub nodes: usize,
+    /// Topic partition count during this window (the task-parallelism
+    /// cap; moves when the policy repartitions).
+    pub partitions: usize,
     /// Messages processed this window.
     pub processed: f64,
     /// Backlog (lag) at window end, messages.
@@ -69,6 +109,10 @@ pub struct ElasticSimResult {
     pub peak_nodes: usize,
     pub scale_ups: usize,
     pub scale_downs: usize,
+    /// Repartition decisions actuated.
+    pub repartitions: usize,
+    /// Largest partition count reached.
+    pub peak_partitions: usize,
     pub final_lag: f64,
     pub behind_windows: usize,
     /// Node-seconds of footprint (the cost an elastic policy saves
@@ -89,11 +133,13 @@ impl ElasticSim {
 
     /// Run `policy` through the scenario; deterministic.
     pub fn run(&self, sc: &ElasticScenario, policy: &mut dyn ScalingPolicy) -> ElasticSimResult {
-        let n_partitions = (sc.broker_nodes * sc.partitions_per_node).max(1);
+        let mut n_partitions = (sc.broker_nodes * sc.partitions_per_node).max(1);
         let proc_cost = self.costs.proc_cost(&sc.processor);
         let mut nodes = sc.initial_nodes.clamp(sc.min_nodes, sc.max_nodes);
         // Scale-ups in flight: (ready_at_secs, nodes).
         let mut pending: Vec<(f64, usize)> = Vec::new();
+        // Repartition in flight: (ready_at_secs, new_partition_count).
+        let mut pending_repartition: Option<(f64, usize)> = None;
         let mut backlog = vec![0.0f64; n_partitions];
         let mut prev_lag = 0.0f64;
 
@@ -101,6 +147,8 @@ impl ElasticSim {
         let mut peak_nodes = nodes;
         let mut scale_ups = 0;
         let mut scale_downs = 0;
+        let mut repartitions = 0;
+        let mut peak_partitions = n_partitions;
         let mut behind_windows = 0;
         let mut node_secs = 0.0;
 
@@ -119,6 +167,27 @@ impl ElasticSim {
             nodes = (nodes + arrived).min(sc.max_nodes);
             peak_nodes = peak_nodes.max(nodes);
             node_secs += nodes as f64 * sc.window_secs;
+
+            // A decided repartition takes effect once its delay (the
+            // old epoch's drain) elapses: grow appends empty partitions;
+            // shrink folds the retired suffix's backlog into the
+            // remaining set (the drain of the old epoch).
+            if let Some((ready_at, new_count)) = pending_repartition {
+                if ready_at <= t {
+                    pending_repartition = None;
+                    if new_count > n_partitions {
+                        backlog.resize(new_count, 0.0);
+                    } else if new_count < n_partitions {
+                        let retired: f64 = backlog[new_count..].iter().sum();
+                        backlog.truncate(new_count);
+                        for b in backlog.iter_mut() {
+                            *b += retired / new_count as f64;
+                        }
+                    }
+                    n_partitions = new_count;
+                    peak_partitions = peak_partitions.max(n_partitions);
+                }
+            }
 
             // Offered load arrives spread over the partitions.
             let input_rate = sc.schedule.rate_at(t);
@@ -160,6 +229,9 @@ impl ElasticSim {
                 produce_rate: input_rate,
                 consume_rate: processed / sc.window_secs,
                 partition_backlog: backlog.iter().map(|b| b.round() as u64).collect(),
+                // Like nodes below, an in-flight repartition counts as
+                // present so the policy doesn't re-request it.
+                partitions: pending_repartition.map(|(_, n)| n).unwrap_or(n_partitions),
                 behind_batches: behind_windows as u64,
                 last_batch_secs: if capacity > 0.0 {
                     sc.window_secs * (total_backlog / capacity).min(4.0)
@@ -179,17 +251,30 @@ impl ElasticSim {
             // The fleet that actually processed this window; a
             // scale-down decided below takes effect afterwards.
             let nodes_used = nodes;
+            let partitions_used = n_partitions;
             let mut decision = 0i64;
+            let mut queue_scale_up = |n: usize, pending: &mut Vec<(f64, usize)>| -> i64 {
+                let headroom = sc.max_nodes - (nodes + pending_nodes).min(sc.max_nodes);
+                let n = n.min(headroom);
+                if n > 0 {
+                    pending.push((t + sc.window_secs + sc.provision_delay_secs, n));
+                    scale_ups += 1;
+                }
+                n as i64
+            };
             match policy.decide(&snapshot) {
                 PolicyDecision::Hold => {}
                 PolicyDecision::ScaleUp(n) => {
-                    let headroom = sc.max_nodes - (nodes + pending_nodes).min(sc.max_nodes);
-                    let n = n.min(headroom);
-                    if n > 0 {
-                        pending.push((t + sc.window_secs + sc.provision_delay_secs, n));
-                        scale_ups += 1;
-                        decision = n as i64;
+                    decision = queue_scale_up(n, &mut pending);
+                }
+                PolicyDecision::Repartition { partitions, scale_up } => {
+                    let target = partitions.min(sc.max_partitions).max(1);
+                    if pending_repartition.is_none() && target != n_partitions {
+                        pending_repartition =
+                            Some((t + sc.window_secs + sc.repartition_delay_secs, target));
+                        repartitions += 1;
                     }
+                    decision = queue_scale_up(scale_up, &mut pending);
                 }
                 PolicyDecision::ScaleDown(n) => {
                     // Shrinking is immediate (stop an extension pilot).
@@ -206,6 +291,7 @@ impl ElasticSim {
                 t_secs: t,
                 input_rate,
                 nodes: nodes_used,
+                partitions: partitions_used,
                 processed,
                 lag,
                 decision,
@@ -217,6 +303,8 @@ impl ElasticSim {
             peak_nodes,
             scale_ups,
             scale_downs,
+            repartitions,
+            peak_partitions,
             final_lag: prev_lag,
             behind_windows,
             node_secs,
@@ -255,6 +343,8 @@ mod tests {
             max_nodes: 32,
             initial_nodes: 2,
             provision_delay_secs: 90.0,
+            repartition_delay_secs: 60.0,
+            max_partitions: 128,
         }
     }
 
@@ -303,7 +393,7 @@ mod tests {
             let res = sim.run(sc, &mut policy);
             res.rows
                 .iter()
-                .map(|r| (r.nodes, r.decision, r.lag.to_bits()))
+                .map(|r| (r.nodes, r.partitions, r.decision, r.lag.to_bits()))
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(&sc), run(&sc));
@@ -317,6 +407,112 @@ mod tests {
         assert!(res.scale_ups >= 1);
         assert!(res.peak_nodes <= 32);
         assert!(res.rows.last().unwrap().nodes <= 4, "packed back down");
+    }
+
+    #[test]
+    fn calibrated_burst_knee_moves_with_partition_elastic_policy() {
+        use crate::autoscale::PartitionElastic;
+
+        // Rust-speed costs: the ROADMAP's calibrated-scale scenario.
+        let sim = ElasticSim::new(
+            SimMachine {
+                executors_per_node: 2,
+                ..Default::default()
+            },
+            CostModel::calibrated_default(),
+        );
+        let sc = ElasticScenario::calibrated_burst(60.0);
+        let knee_cores = sc.broker_nodes * sc.partitions_per_node; // 48
+        let per_core_window = sc.window_secs / CostModel::calibrated_default().proc_cost("gridrec");
+
+        // Without partition elasticity the knee caps useful capacity:
+        // no window can process more than 48 cores' worth.
+        let capped = sim.run(&sc, &mut calibrated_threshold());
+        assert_eq!(capped.repartitions, 0);
+        assert_eq!(capped.peak_partitions, knee_cores);
+        for r in &capped.rows {
+            assert!(
+                r.processed <= knee_cores as f64 * per_core_window + 1e-6,
+                "window t={} processed {} past the knee",
+                r.t_secs,
+                r.processed
+            );
+        }
+
+        // Wrapped in PartitionElastic, the same inner policy moves the
+        // cap: at least one repartition fires and at least one window
+        // processes more than 48 cores ever could.
+        let mut elastic = PartitionElastic::new(calibrated_threshold(), 2);
+        let res = sim.run(&sc, &mut elastic);
+        assert!(res.repartitions >= 1, "no repartition fired");
+        assert!(res.peak_partitions > knee_cores, "cap never moved");
+        assert!(
+            res.peak_nodes > knee_cores / 2,
+            "fleet stuck at the knee: peak {}",
+            res.peak_nodes
+        );
+        assert!(
+            res.rows
+                .iter()
+                .any(|r| r.processed > knee_cores as f64 * per_core_window + 1.0),
+            "no window outran the one-task-per-partition cap"
+        );
+        // The burst still drains and the footprint returns to the floor.
+        assert!(res.final_lag < 2_000.0, "final lag {}", res.final_lag);
+        assert_eq!(res.rows.last().unwrap().nodes, sc.min_nodes);
+    }
+
+    /// Threshold tuning for calibrated-scale rates (msgs are ~100x the
+    /// paper era's).
+    fn calibrated_threshold() -> ThresholdPolicy {
+        ThresholdPolicy::new(20_000, 2_000)
+            .with_sustain(1)
+            .with_cooldown_secs(120.0)
+            .with_step(8)
+    }
+
+    #[test]
+    fn calibrated_burst_timeline_is_deterministic() {
+        use crate::autoscale::PartitionElastic;
+
+        // Regression pin: the calibrated scenario's scaling timeline —
+        // every (window, nodes, partitions, decision) tuple — must be
+        // byte-identical across runs, so policy or cost drift shows up
+        // as a diff here rather than as silent behavior change.
+        let sim = ElasticSim::new(
+            SimMachine {
+                executors_per_node: 2,
+                ..Default::default()
+            },
+            CostModel::calibrated_default(),
+        );
+        let sc = ElasticScenario::calibrated_burst(60.0);
+        let run = || {
+            let mut policy = PartitionElastic::new(calibrated_threshold(), 2);
+            let res = sim.run(&sc, &mut policy);
+            (
+                res.rows
+                    .iter()
+                    .map(|r| (r.nodes, r.partitions, r.decision, r.lag.to_bits()))
+                    .collect::<Vec<_>>(),
+                res.repartitions,
+                res.peak_partitions,
+                res.peak_nodes,
+            )
+        };
+        let a = run();
+        assert_eq!(a, run());
+        // Structural pins on the timeline shape: the repartition
+        // happens during the burst, after which the partition count on
+        // the rows strictly exceeds the initial 48.
+        let rows_partitions: Vec<usize> = a.0.iter().map(|r| r.1).collect();
+        let first_grown = rows_partitions.iter().position(|p| *p > 48);
+        assert!(first_grown.is_some(), "partition count never grew");
+        assert!(
+            first_grown.unwrap() >= 20,
+            "repartition before the burst started"
+        );
+        assert!(rows_partitions.iter().all(|p| *p >= 48 && *p <= 128));
     }
 
     #[test]

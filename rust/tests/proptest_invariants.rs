@@ -9,11 +9,18 @@ use pilot_streaming::cluster::Machine;
 use pilot_streaming::miniapp::{Message, PayloadKind};
 use pilot_streaming::util::{Json, Rng};
 
-const CASES: usize = 200;
+/// Cases per property: `PROPTEST_CASES` env override (the CI `proptest`
+/// job runs the invariant suites deeper), else 200.
+fn cases() -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200)
+}
 
-/// Run `f` over `CASES` seeded cases; panic messages carry the seed.
+/// Run `f` over seeded cases; panic messages carry the seed.
 fn check<F: Fn(&mut Rng)>(name: &str, f: F) {
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut rng = Rng::seed_from(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));

@@ -1,0 +1,251 @@
+//! Property-based invariants over online topic repartitioning.
+//!
+//! Repartitioning rewrites live offsets and assignments, so its safety
+//! story is this suite: across random interleavings of keyed produces,
+//! grows/shrinks, consumer-group membership churn and polls, we assert
+//!
+//! * **(a) exactly-once** — every produced record is consumed exactly
+//!   once (no loss, no duplication) after the final drain;
+//! * **(b) per-key order** — each key's records are observed in produce
+//!   order, across every epoch transition (keys *move* partitions when
+//!   the topic resizes; the drain-before-serve fence must keep their
+//!   order);
+//! * **(c) non-negative lag** — `group_progress` never reports a
+//!   committed offset past an end offset, at every observation point.
+//!
+//! Like `proptest_invariants.rs`, this is a seeded-random harness (the
+//! offline dependency set has no `proptest`): failures print the seed
+//! for replay, and `PROPTEST_CASES` scales the case count (the CI
+//! `proptest` job runs these suites deeper than the default
+//! `cargo test` pass).
+
+use std::time::Duration;
+
+use pilot_streaming::broker::{
+    BrokerCluster, Consumer, ConsumerConfig, PartitionRecord, Partitioner, Producer,
+    ProducerConfig,
+};
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::util::Rng;
+
+/// Case count: `PROPTEST_CASES` env override, else the suite default.
+fn cases(default: usize) -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `f` over seeded cases; panic messages carry the seed for replay.
+fn check<F: Fn(&mut Rng)>(name: &str, default_cases: usize, f: F) {
+    for case in 0..cases(default_cases) {
+        let seed = 0xD00F ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+fn encode(key: usize, seq: u32) -> Vec<u8> {
+    vec![
+        key as u8,
+        (seq >> 24) as u8,
+        (seq >> 16) as u8,
+        (seq >> 8) as u8,
+        seq as u8,
+    ]
+}
+
+fn decode(value: &[u8]) -> (usize, u32) {
+    (
+        value[0] as usize,
+        u32::from_be_bytes([value[1], value[2], value[3], value[4]]),
+    )
+}
+
+fn consumer_config() -> ConsumerConfig {
+    ConsumerConfig {
+        fetch_timeout: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// Invariant (b): each key's records arrive in dense produce order.
+fn observe(recs: Vec<PartitionRecord>, consumed_seq: &mut [u32], consumed_total: &mut usize) {
+    for r in recs {
+        let (k, seq) = decode(&r.record.value);
+        assert_eq!(
+            seq, consumed_seq[k],
+            "key {k}: expected seq {} next, saw {seq} (reorder/dup/loss)",
+            consumed_seq[k]
+        );
+        consumed_seq[k] += 1;
+        *consumed_total += 1;
+    }
+}
+
+/// The flagship interleaving property: produce / repartition / churn /
+/// consume in random order, then drain and check (a), (b), (c).
+#[test]
+fn prop_repartition_exactly_once_ordered_nonnegative() {
+    check("repartition-interleavings", 25, |rng| {
+        let n_keys = 2 + rng.below(6);
+        let machine = Machine::unthrottled(4);
+        let cluster = BrokerCluster::new(machine, vec![0]);
+        cluster.create_topic("t", 1 + rng.below(4)).unwrap();
+
+        // Half the cases flush every record; the other half batch a few
+        // records per partition, so resizes catch in-flight batches and
+        // the producer's key-aware re-route is exercised too.
+        let batch_bytes = if rng.below(2) == 0 { 1 } else { 24 };
+        let mut producer = Producer::new(
+            cluster.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut consumers =
+            vec![Consumer::join(cluster.clone(), "t", "g", 2, consumer_config()).unwrap()];
+
+        // Per-key produced count and next-expected consumed seq.
+        let mut produced_seq = vec![0u32; n_keys];
+        let mut consumed_seq = vec![0u32; n_keys];
+        let mut produced_total = 0usize;
+        let mut consumed_total = 0usize;
+
+        let steps = 10 + rng.below(25);
+        for _ in 0..steps {
+            match rng.below(10) {
+                // Produce a keyed burst (sometimes flushing pending
+                // batches so they land before the next resize).
+                0..=4 => {
+                    for _ in 0..1 + rng.below(8) {
+                        let k = rng.below(n_keys);
+                        let seq = produced_seq[k];
+                        produced_seq[k] += 1;
+                        producer.send(Some(&[k as u8]), encode(k, seq)).unwrap();
+                        produced_total += 1;
+                    }
+                    if rng.below(2) == 0 {
+                        producer.flush().unwrap();
+                    }
+                }
+                // Resize the topic (grow or shrink) mid-stream.
+                5 | 6 => {
+                    cluster.repartition_topic("t", 1 + rng.below(8)).unwrap();
+                }
+                // Membership churn: join or leave (never below 1).
+                7 => {
+                    if consumers.len() > 1 && rng.below(2) == 0 {
+                        let idx = rng.below(consumers.len());
+                        consumers.remove(idx); // drop commits + leaves
+                    } else if consumers.len() < 3 {
+                        consumers.push(
+                            Consumer::join(cluster.clone(), "t", "g", 3, consumer_config())
+                                .unwrap(),
+                        );
+                    }
+                }
+                // Poll a random consumer a few times.
+                _ => {
+                    for _ in 0..1 + rng.below(4) {
+                        let idx = rng.below(consumers.len());
+                        let recs = consumers[idx].poll().unwrap();
+                        observe(recs, &mut consumed_seq, &mut consumed_total);
+                    }
+                }
+            }
+            // Invariant (c) after every step: committed never exceeds
+            // the end offset on any partition, live or retired.
+            for (end, committed) in cluster.group_progress("g", "t").unwrap() {
+                assert!(
+                    committed <= end,
+                    "negative lag: committed {committed} > end {end}"
+                );
+            }
+        }
+
+        // Final drain: poll everyone until all records are accounted
+        // for (bounded, so invariant violations fail fast rather than
+        // hang).
+        producer.flush().unwrap();
+        let mut idle_rounds = 0;
+        while consumed_total < produced_total && idle_rounds < 300 {
+            let mut progressed = false;
+            for c in consumers.iter_mut() {
+                let recs = c.poll().unwrap();
+                if !recs.is_empty() {
+                    progressed = true;
+                }
+                observe(recs, &mut consumed_seq, &mut consumed_total);
+            }
+            if progressed {
+                idle_rounds = 0;
+            } else {
+                idle_rounds += 1;
+            }
+        }
+
+        // Invariant (a): exactly once, in aggregate and per key.
+        assert_eq!(
+            consumed_total, produced_total,
+            "exactly-once violated: {consumed_total} consumed of {produced_total} produced"
+        );
+        assert_eq!(consumed_seq, produced_seq, "per-key completeness");
+        // And the group's lag is fully drained.
+        assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
+    });
+}
+
+/// Committed progress survives any sequence of resizes untouched:
+/// partition ids are stable, so offsets committed before a repartition
+/// read back identically after it.
+#[test]
+fn prop_repartition_preserves_committed_offsets() {
+    check("repartition-offset-migration", 100, |rng| {
+        let cluster = BrokerCluster::new(Machine::unthrottled(2), vec![0]);
+        let initial = 1 + rng.below(6);
+        cluster.create_topic("t", initial).unwrap();
+        cluster.group_join("g", "t");
+
+        let mut committed: Vec<u64> = vec![0; initial];
+        for _ in 0..1 + rng.below(12) {
+            match rng.below(3) {
+                // Produce + commit some progress on a live partition.
+                0 | 1 => {
+                    let live = cluster.partition_count("t").unwrap();
+                    let p = rng.below(live);
+                    let n = 1 + rng.below(5) as u64;
+                    for _ in 0..n {
+                        cluster.produce("t", p, 0, &[vec![0u8]]).unwrap();
+                    }
+                    let end = cluster.end_offset("t", p).unwrap();
+                    cluster.commit("g", "t", p, end);
+                    if p >= committed.len() {
+                        committed.resize(p + 1, 0);
+                    }
+                    committed[p] = end;
+                }
+                // Resize.
+                _ => {
+                    cluster.repartition_topic("t", 1 + rng.below(8)).unwrap();
+                }
+            }
+            // Every previously committed offset reads back unchanged.
+            for (p, want) in committed.iter().enumerate() {
+                assert_eq!(
+                    cluster.committed("g", "t", p),
+                    *want,
+                    "partition {p} committed offset changed across a resize"
+                );
+            }
+        }
+    });
+}
