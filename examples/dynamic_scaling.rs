@@ -7,19 +7,27 @@
 //! runtime."
 //!
 //! A bursty MASS source streams KMeans batches through the pilot-managed
-//! broker into a MASA KMeans consumer on the micro-batch engine.  Two
-//! [`Autoscaler`] control loops watch the same consumer-lag signal:
+//! broker into a MASA KMeans consumer on the micro-batch engine.  Every
+//! decision now flows through the two-stage pipeline: policies emit
+//! *intents*, and the planner turns each intent into a costed plan
+//! (per-framework extension costs weighed against drain benefit;
+//! broker-tier steps co-scheduled when needed) before the controller
+//! actuates anything.  Two [`Autoscaler`] control loops watch the same
+//! consumer-lag signal:
 //!
 //! * the **processing loop** (threshold policy + hysteresis) extends the
 //!   Spark pilot while lag stays high and shrinks it back after the
-//!   burst drains;
+//!   burst drains — spawned with the Kafka pilot as its broker target,
+//!   so plans may co-schedule broker extensions;
 //! * the **broker loop** (a custom produce-rate policy, showing the
 //!   pluggable [`ScalingPolicy`] SPI) adds a broker node while the
 //!   offered rate saturates the cluster and releases it afterwards.
 //!
-//! The full decision history lands on a [`ScalingTimeline`]; the run
+//! The full step-by-step plan history lands on a [`ScalingTimeline`]
+//! (with each step's modeled cost in the `cost_s` column); the run
 //! asserts a complete scale-up AND scale-down cycle happened, then
-//! replays the same control problem at 32-node Wrangler scale on the
+//! replays the planner's co-scheduled repartition + broker-extension
+//! behaviour deterministically at 32-node Wrangler scale on the
 //! simulation plane.
 //!
 //! Run with: `cargo run --release --example dynamic_scaling`
@@ -28,7 +36,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pilot_streaming::autoscale::{
-    Autoscaler, AutoscalerConfig, PolicyDecision, ScalingPolicy, SignalSnapshot, ThresholdPolicy,
+    Autoscaler, AutoscalerConfig, PartitionElastic, Planner, PlannerConfig, ScalingIntent,
+    ScalingPolicy, SignalSnapshot, ThresholdPolicy,
 };
 use pilot_streaming::broker::Record;
 use pilot_streaming::cluster::Machine;
@@ -58,19 +67,19 @@ impl ScalingPolicy for BrokerLoadPolicy {
         "broker-load"
     }
 
-    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+    fn decide(&mut self, s: &SignalSnapshot) -> ScalingIntent {
         if s.t_secs - self.last_action_t < self.cooldown_secs {
-            return PolicyDecision::Hold;
+            return ScalingIntent::Hold;
         }
         if s.produce_rate >= self.up_msgs_per_sec && s.nodes < s.max_nodes {
             self.last_action_t = s.t_secs;
-            return PolicyDecision::ScaleUp(1);
+            return ScalingIntent::ScaleUp(1);
         }
         if s.produce_rate <= self.down_msgs_per_sec && s.nodes > s.min_nodes {
             self.last_action_t = s.t_secs;
-            return PolicyDecision::ScaleDown(1);
+            return ScalingIntent::ScaleDown(1);
         }
-        PolicyDecision::Hold
+        ScalingIntent::Hold
     }
 }
 
@@ -133,9 +142,13 @@ fn main() -> Result<()> {
     };
 
     // ---- Two closed control loops -----------------------------------
-    let processing_scaler = Autoscaler::spawn(
+    let processing_scaler = Autoscaler::spawn_with_broker(
         service.clone(),
         spark.clone(),
+        // The planner may co-schedule broker extensions with a
+        // processing scale-up (saturation-triggered here; the machine
+        // is unthrottled, so in this run they stay hypothetical).
+        Some(kafka.clone()),
         cluster.clone(),
         Some(job.stats().clone()),
         Box::new(
@@ -237,50 +250,72 @@ fn main() -> Result<()> {
     service.stop_pilot(&kafka)?;
 
     // ---- The same control problem at Wrangler scale -----------------
-    println!("\nclosed-loop burst response at 32-node scale (simulation plane):");
+    // The calibrated burst oversubscribes the 48-partition topic, so the
+    // partition-elastic intents become co-scheduled plans: repartition
+    // steps paired with broker-extension steps whenever the new
+    // partition count would blow the 12-partition per-broker-node I/O
+    // budget — all deterministic in virtual time.
+    println!("\nplanned burst response at 32-node scale (simulation plane):");
     let sim = ElasticSim::new(
         SimMachine {
             executors_per_node: 2,
             ..Default::default()
         },
-        CostModel::paper_era(),
+        CostModel::calibrated_default(),
     );
-    let sc = ElasticScenario {
-        processor: "gridrec".into(),
-        schedule: RateSchedule::bursty(4.0, 40.0, 1200.0, 600.0),
-        window_secs: 60.0,
-        windows: 60,
-        broker_nodes: 4,
-        partitions_per_node: 12,
-        min_nodes: 2,
-        max_nodes: 32,
-        initial_nodes: 2,
-        provision_delay_secs: 90.0,
-        repartition_delay_secs: 60.0,
-        max_partitions: 128,
-    };
-    let mut policy = ThresholdPolicy::new(600, 60)
+    let sc = ElasticScenario::calibrated_burst(60.0);
+    let planner = Planner::new(
+        PlannerConfig::default()
+            .with_max_step(8)
+            .with_drain_horizon_secs(6.0 * sc.window_secs)
+            .with_partitions_per_broker_node(sc.partitions_per_node)
+            .with_max_broker_step(2),
+    );
+    let inner = ThresholdPolicy::new(20_000, 2_000)
         .with_sustain(1)
-        .with_cooldown_secs(120.0)
+        .with_cooldown_secs(2.0 * sc.window_secs)
         .with_step(8);
-    let res = sim.run(&sc, &mut policy);
+    let mut policy = PartitionElastic::new(inner, 2);
+    let res = sim.run_planned(&sc, &mut policy, &planner);
     for r in res.rows.iter().step_by(5) {
         println!(
-            "  t={:>5.0}s  rate {:>5.1} msg/s  nodes {:>2}  lag {:>6.0}{}",
+            "  t={:>5.0}s  rate {:>6.1} msg/s  nodes {:>2}  brokers {:>2}  partitions {:>3}  lag {:>7.0}{}",
             r.t_secs,
             r.input_rate,
             r.nodes,
+            r.broker_nodes,
+            r.partitions,
             r.lag,
             if r.behind { "  (behind)" } else { "" }
         );
     }
     println!(
-        "peak {} nodes, {} scale-ups / {} scale-downs, {:.0} node-secs vs {:.0} static-peak",
+        "peak {} nodes / {} brokers / {} partitions; {} scale-ups, {} broker-ups, {} repartitions, {} deferrals",
         res.peak_nodes,
+        res.peak_broker_nodes,
+        res.peak_partitions,
         res.scale_ups,
-        res.scale_downs,
-        res.node_secs,
-        res.peak_nodes as f64 * 3600.0
+        res.broker_ups,
+        res.repartitions,
+        res.deferrals,
     );
+    assert!(res.broker_ups >= 1, "no co-scheduled broker extension");
+    assert!(res.peak_partitions > 48, "the knee never moved");
+
+    // And the cost gate: with a drain horizon shorter than the Spark
+    // extension lead, every scale-up is deferred — the planner refuses
+    // to buy capacity that cannot pay for itself.
+    let strict =
+        Planner::new(PlannerConfig::default().with_max_step(8).with_drain_horizon_secs(10.0));
+    let mut policy = ThresholdPolicy::new(20_000, 2_000)
+        .with_sustain(1)
+        .with_cooldown_secs(2.0 * sc.window_secs)
+        .with_step(8);
+    let deferred = sim.run_planned(&sc, &mut policy, &strict);
+    println!(
+        "with a 10 s drain horizon the planner defers every scale-up: {} deferrals, fleet pinned at {} nodes",
+        deferred.deferrals, deferred.peak_nodes
+    );
+    assert_eq!(deferred.scale_ups, 0);
     Ok(())
 }

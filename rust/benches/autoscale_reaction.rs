@@ -6,7 +6,11 @@
 //!   and actuation (`extend_pilot` queue + bootstrap);
 //! * policy decision cost — the per-sample overhead the control loop
 //!   adds (threshold vs 48-partition bin-packing);
-//! * the virtual-time burst response at 32-node Wrangler scale.
+//! * planner overhead — intent→plan latency, which sits on every
+//!   control-loop sample and must stay far below a millisecond so the
+//!   planner never gates the loop (asserted, not just reported);
+//! * the virtual-time burst response at 32-node Wrangler scale, both
+//!   the legacy intent path and the plan-aware path.
 //!
 //! Run: `cargo bench --bench autoscale_reaction`
 
@@ -14,8 +18,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use pilot_streaming::autoscale::{
-    Autoscaler, AutoscalerConfig, BinPackingPolicy, ScalingPolicy, SignalSnapshot,
-    ThresholdPolicy,
+    Autoscaler, AutoscalerConfig, BinPackingPolicy, Planner, PlannerConfig, ScalingIntent,
+    ScalingPolicy, SignalSnapshot, ThresholdPolicy,
 };
 use pilot_streaming::cluster::Machine;
 use pilot_streaming::metrics::ScalingAction;
@@ -40,6 +44,9 @@ fn snapshot(lag: u64, partitions: usize) -> SignalSnapshot {
         min_nodes: 2,
         max_nodes: 32,
         service_rate_per_node: 25.0,
+        broker_nodes: 4,
+        broker_nic_util: 0.9,
+        broker_disk_util: 0.4,
     }
 }
 
@@ -58,6 +65,39 @@ fn main() {
     bench.run("autoscale/decide-binpack-48part", 5_000, || {
         std::hint::black_box(packing.decide(&snap));
     });
+
+    // --- Planner overhead: intent -> costed plan -----------------------
+    // The planner runs on every sample of every control loop; its cost
+    // must be negligible against the 250 ms default sample interval.
+    let planner = Planner::new(
+        PlannerConfig::default()
+            .with_max_step(8)
+            .with_partitions_per_broker_node(12)
+            .with_max_broker_step(2),
+    );
+    let snap = snapshot(250_000, 48);
+    bench.run("autoscale/plan-scale-up", 20_000, || {
+        std::hint::black_box(planner.plan(ScalingIntent::ScaleUp(8), &snap));
+    });
+    bench.run("autoscale/plan-repartition-coschedule", 20_000, || {
+        std::hint::black_box(
+            planner.plan(ScalingIntent::Repartition { partitions: 96, scale_up: 8 }, &snap),
+        );
+    });
+    // Hard gate: the mean intent->plan latency stays sub-millisecond.
+    let gate_iters = 10_000u32;
+    let t0 = std::time::Instant::now();
+    for _ in 0..gate_iters {
+        std::hint::black_box(
+            planner.plan(ScalingIntent::Repartition { partitions: 96, scale_up: 8 }, &snap),
+        );
+    }
+    let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / gate_iters as f64;
+    assert!(
+        mean_ms < 1.0,
+        "planner overhead {mean_ms:.4} ms/plan breaches the sub-millisecond gate"
+    );
+    println!("planner overhead: {:.4} ms/plan (gate: < 1 ms)", mean_ms);
 
     // --- Reaction latency: detection -> extension pilot Running --------
     // Fresh deployment per round: produce a backlog, let the autoscaler

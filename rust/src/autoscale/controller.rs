@@ -1,14 +1,19 @@
-//! The autoscaler control loop: signals → policy → pilot actuation.
+//! The autoscaler control loop: signals → policy → planner → actuation.
 //!
 //! A background thread samples a [`SignalProbe`] every
-//! `sample_interval`, hands the snapshot to a [`ScalingPolicy`], and
-//! actuates decisions through the pilot service: scale-up calls
-//! [`PilotComputeService::extend_pilot`] (paper Listing 4) and pushes
-//! the extension onto a stack; scale-down pops extensions and stops
-//! them, shrinking the framework back (paper §4.2).  Every acted-on
-//! decision lands on a [`ScalingTimeline`] with its detection→Running
-//! reaction latency, so experiments can plot the resource footprint
-//! against the input rate.
+//! `sample_interval`, hands the snapshot to a [`ScalingPolicy`] (which
+//! answers with a [`ScalingIntent`]), runs the intent through the
+//! [`Planner`] (which costs it against per-framework extension models
+//! and broker-tier saturation, deferring or resizing scale-ups that
+//! cannot pay for themselves), and executes the resulting
+//! [`ScalingPlan`] step by step through the pilot service: broker
+//! extensions call [`PilotComputeService::extend_pilot`] on the broker
+//! pilot, repartitions move the topic's partition set, processing
+//! extensions extend the target pilot (paper Listing 4) and shrinks pop
+//! extension pilots.  Every executed step — and every cost-aware
+//! deferral — lands on a [`ScalingTimeline`] with its modeled cost and
+//! its detection→Running reaction latency, so experiments can plot the
+//! resource footprint against the input rate.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -20,7 +25,8 @@ use crate::engine::JobStats;
 use crate::metrics::{ScalingAction, ScalingEvent, ScalingTimeline};
 use crate::pilot::{Pilot, PilotComputeService};
 
-use super::policy::{PolicyDecision, ScalingPolicy};
+use super::planner::{PlanStep, Planner, PlannerConfig};
+use super::policy::ScalingPolicy;
 use super::signals::SignalProbe;
 
 /// Control-loop configuration.
@@ -39,6 +45,10 @@ pub struct AutoscalerConfig {
     pub max_step: usize,
     /// The consumer job's micro-batch window (for overrun signals).
     pub window: Duration,
+    /// Planner tuning (drain horizon, per-node I/O budgets, broker
+    /// co-scheduling).  `max_step` and the framework kinds are derived
+    /// from this config and the target pilots at spawn time.
+    pub planner: PlannerConfig,
 }
 
 impl AutoscalerConfig {
@@ -50,6 +60,7 @@ impl AutoscalerConfig {
             max_extension_nodes: 4,
             max_step: 1,
             window: Duration::from_secs(1),
+            planner: PlannerConfig::default(),
         }
     }
 
@@ -72,6 +83,11 @@ impl AutoscalerConfig {
         self.window = window;
         self
     }
+
+    pub fn with_planner(mut self, planner: PlannerConfig) -> Self {
+        self.planner = planner;
+        self
+    }
 }
 
 /// A running autoscaler.  Dropping it stops the control loop; live
@@ -82,13 +98,17 @@ pub struct Autoscaler {
     thread: Option<JoinHandle<()>>,
     timeline: Arc<ScalingTimeline>,
     extensions: Arc<Mutex<Vec<Arc<Pilot>>>>,
+    broker_extensions: Arc<Mutex<Vec<Arc<Pilot>>>>,
 }
 
 impl Autoscaler {
     /// Start the control loop for `target` (a running base pilot whose
     /// framework consumes `config.topic`).  `stats` — the consuming
     /// job's stats, when the consumer is a micro-batch job — adds the
-    /// window-overrun signals to each snapshot.
+    /// window-overrun signals to each snapshot.  Plans that co-schedule
+    /// broker extensions are only possible through
+    /// [`Autoscaler::spawn_with_broker`]; this entry point plans with
+    /// the broker tier pinned (broker steps are skipped).
     pub fn spawn(
         service: Arc<PilotComputeService>,
         target: Arc<Pilot>,
@@ -97,9 +117,26 @@ impl Autoscaler {
         policy: Box<dyn ScalingPolicy>,
         config: AutoscalerConfig,
     ) -> Self {
+        Self::spawn_with_broker(service, target, None, cluster, stats, policy, config)
+    }
+
+    /// [`Autoscaler::spawn`] plus a broker-tier pilot the planner may
+    /// extend: when a repartition would oversubscribe per-node I/O
+    /// budgets, or the broker saturation gauges cross their threshold,
+    /// the plan's `ExtendBroker` steps actuate on `broker_target`.
+    pub fn spawn_with_broker(
+        service: Arc<PilotComputeService>,
+        target: Arc<Pilot>,
+        broker_target: Option<Arc<Pilot>>,
+        cluster: BrokerCluster,
+        stats: Option<Arc<JobStats>>,
+        policy: Box<dyn ScalingPolicy>,
+        config: AutoscalerConfig,
+    ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         let timeline = Arc::new(ScalingTimeline::new());
         let extensions: Arc<Mutex<Vec<Arc<Pilot>>>> = Arc::new(Mutex::new(Vec::new()));
+        let broker_extensions: Arc<Mutex<Vec<Arc<Pilot>>>> = Arc::new(Mutex::new(Vec::new()));
         let probe = SignalProbe::new(
             cluster.clone(),
             &config.topic,
@@ -107,16 +144,39 @@ impl Autoscaler {
             stats,
             config.window.as_secs_f64(),
         );
+        // The planner's cost model keys off the real framework kinds;
+        // its step ceiling mirrors the controller's.
+        let mut planner_config = config.planner.clone().with_max_step(config.max_step);
+        planner_config.processing_framework = target.framework();
+        if let Some(broker) = &broker_target {
+            planner_config.broker_framework = broker.framework();
+        } else {
+            // No broker pilot to extend: plans must not contain broker
+            // steps (a saturated tier is still visible on the timeline
+            // via the gauges the policy sees).
+            planner_config.max_broker_step = 0;
+        }
+        let planner = Planner::new(planner_config);
         let thread = {
             let stop = stop.clone();
             let timeline = timeline.clone();
             let extensions = extensions.clone();
+            let broker_extensions = broker_extensions.clone();
             std::thread::Builder::new()
                 .name(format!("autoscaler-{}", config.topic))
                 .spawn(move || {
-                    control_loop(
-                        service, target, cluster, probe, policy, config, stop, timeline, extensions,
-                    )
+                    let mut loop_state = ControlLoop {
+                        service,
+                        target,
+                        broker_target,
+                        cluster,
+                        planner,
+                        config,
+                        timeline,
+                        extensions,
+                        broker_extensions,
+                    };
+                    loop_state.run(probe, policy, stop)
                 })
                 .expect("spawn autoscaler thread")
         };
@@ -125,6 +185,7 @@ impl Autoscaler {
             thread: Some(thread),
             timeline,
             extensions,
+            broker_extensions,
         }
     }
 
@@ -133,19 +194,27 @@ impl Autoscaler {
         self.timeline.clone()
     }
 
-    /// Extension pilots currently held by the loop.
+    /// Processing extension pilots currently held by the loop.
     pub fn extension_count(&self) -> usize {
         self.extensions.lock().unwrap().len()
     }
 
+    /// Broker extension pilots currently held by the loop.
+    pub fn broker_extension_count(&self) -> usize {
+        self.broker_extensions.lock().unwrap().len()
+    }
+
     /// Stop the control loop and return any extension pilots still
-    /// running (empty when the policy already scaled back down).
+    /// running — processing extensions first, then broker extensions
+    /// (empty when the policy already scaled back down).
     pub fn stop(mut self) -> Vec<Arc<Pilot>> {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
-        std::mem::take(&mut *self.extensions.lock().unwrap())
+        let mut pilots = std::mem::take(&mut *self.extensions.lock().unwrap());
+        pilots.extend(std::mem::take(&mut *self.broker_extensions.lock().unwrap()));
+        pilots
     }
 }
 
@@ -158,139 +227,345 @@ impl Drop for Autoscaler {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn control_loop(
+/// Everything the control thread owns while running.
+struct ControlLoop {
     service: Arc<PilotComputeService>,
     target: Arc<Pilot>,
+    broker_target: Option<Arc<Pilot>>,
     cluster: BrokerCluster,
-    mut probe: SignalProbe,
-    mut policy: Box<dyn ScalingPolicy>,
+    planner: Planner,
     config: AutoscalerConfig,
-    stop: Arc<AtomicBool>,
     timeline: Arc<ScalingTimeline>,
     extensions: Arc<Mutex<Vec<Arc<Pilot>>>>,
-) {
-    let started = Instant::now();
-    let min_nodes = target.nodes().len();
-    let max_nodes = min_nodes + config.max_extension_nodes;
+    broker_extensions: Arc<Mutex<Vec<Arc<Pilot>>>>,
+}
 
-    while !stop.load(Ordering::Relaxed) {
-        std::thread::sleep(config.sample_interval);
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
-        let extension_nodes: usize = extensions
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|p| p.nodes().len())
-            .sum();
-        let nodes = min_nodes + extension_nodes;
-        let t = started.elapsed().as_secs_f64();
-        let Ok(snapshot) = probe.sample(t, nodes, min_nodes, max_nodes) else {
-            continue; // topic gone (e.g. broker stopped mid-shutdown)
-        };
-        let policy_name = policy.name().to_string();
-        // Scale-up actuation shared by ScaleUp and Repartition: extend
-        // the pilot by up to `n` nodes and record the event.
-        let actuate_up = |n: usize, partitions: usize| {
-            let step = n
-                .min(config.max_step)
-                .min(max_nodes - nodes)
-                .min(service.machine().free_nodes());
-            if step == 0 {
-                // Ceiling reached or machine full.  The policy has
-                // already charged its cooldown for this decision,
-                // which doubles as backoff before the next attempt.
-                return;
+impl ControlLoop {
+    fn run(
+        &mut self,
+        mut probe: SignalProbe,
+        mut policy: Box<dyn ScalingPolicy>,
+        stop: Arc<AtomicBool>,
+    ) {
+        let started = Instant::now();
+        let min_nodes = self.target.nodes().len();
+        let max_nodes = min_nodes + self.config.max_extension_nodes;
+
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(self.config.sample_interval);
+            if stop.load(Ordering::Relaxed) {
+                break;
             }
-            let detected = Instant::now();
-            // extend_pilot blocks through queue + bootstrap, so the
-            // elapsed time is the full detection→Running latency.
-            if let Ok(ext) = service.extend_pilot(&target, step) {
-                extensions.lock().unwrap().push(ext);
-                timeline.record(ScalingEvent {
+            let extension_nodes: usize = self
+                .extensions
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|p| p.nodes().len())
+                .sum();
+            let nodes = min_nodes + extension_nodes;
+            let t = started.elapsed().as_secs_f64();
+            let Ok(snapshot) = probe.sample(t, nodes, min_nodes, max_nodes) else {
+                continue; // topic gone (e.g. broker stopped mid-shutdown)
+            };
+            let policy_name = policy.name();
+            self.release_idle_broker_extensions(&snapshot, t, policy_name);
+            let intent = policy.decide(&snapshot);
+            let plan = self.planner.plan(intent, &snapshot);
+            if let Some(reason) = plan.deferred {
+                // Cost-aware deferral is itself a decision: record it
+                // so experiments can audit what the planner declined.
+                self.timeline.record(ScalingEvent {
                     at_secs: t,
-                    action: ScalingAction::Up,
-                    delta_nodes: step,
-                    total_nodes: nodes + step,
+                    action: ScalingAction::Defer,
+                    delta_nodes: 0,
+                    total_nodes: nodes,
                     lag: snapshot.lag,
-                    partitions,
-                    policy: policy_name.clone(),
-                    reaction_secs: detected.elapsed().as_secs_f64(),
+                    partitions: snapshot.partitions,
+                    policy: format!("{policy_name}/{reason:?}"),
+                    reaction_secs: 0.0,
+                    cost_secs: 0.0,
                 });
+                continue;
             }
-            // On error: lost a race for the last free nodes; the
-            // policy's cooldown spaces out the retry.
-        };
-        match policy.decide(&snapshot) {
-            PolicyDecision::Hold => {}
-            PolicyDecision::ScaleUp(n) => actuate_up(n, snapshot.partitions),
-            PolicyDecision::Repartition { partitions, scale_up } => {
-                // Clamp the extension before touching the topic: if no
-                // node can actually be added (ceiling reached, machine
-                // full), skip the repartition too — otherwise a standing
-                // backlog would grow the partition count every cooldown
-                // with nothing new to consume it.
-                let step = scale_up
-                    .min(config.max_step)
-                    .min(max_nodes - nodes)
-                    .min(service.machine().free_nodes());
+            if plan.is_hold() {
+                continue;
+            }
+            // A plan that pairs a repartition with a processing
+            // extension must not touch the topic if no node can
+            // actually be added (machine full, ceiling raced) —
+            // otherwise a standing backlog would grow the partition
+            // count every cooldown with nothing new to consume it.
+            let planned_up = plan.added_processing_nodes();
+            if planned_up > 0
+                && (plan.repartition_target().is_some() || plan.added_broker_nodes() > 0)
+            {
+                // The plan's own broker step consumes free nodes before
+                // the processing extension runs, so it must be counted
+                // here — otherwise the topic could grow (or the last
+                // free node go to a broker pilot) while the processing
+                // extension comes up empty, and nothing would ever
+                // release that broker capacity.
+                let free_after_broker = self
+                    .service
+                    .machine()
+                    .free_nodes()
+                    .saturating_sub(plan.added_broker_nodes());
+                let step = planned_up.min(max_nodes - nodes).min(free_after_broker);
                 if step == 0 {
                     continue;
                 }
-                // Move the one-task-per-partition cap first, so the
-                // extension that follows is immediately useful.
-                match cluster.repartition_topic(&config.topic, partitions) {
-                    Ok(_) => {
-                        timeline.record(ScalingEvent {
+            }
+            // Partition count to stamp on subsequent events: a
+            // repartition step earlier in the plan moves it.
+            let mut live_partitions = snapshot.partitions;
+            for step in &plan.steps {
+                match *step {
+                    PlanStep::ExtendBroker { nodes: broker_nodes, cost } => {
+                        let added = self.extend_broker(
+                            broker_nodes,
+                            cost.lead_secs,
+                            &snapshot,
+                            t,
+                            policy_name,
+                        );
+                        if added < broker_nodes {
+                            // The rest of the plan (the repartition's
+                            // partition count especially) is sized for
+                            // broker capacity that didn't materialize
+                            // (machine raced full / extend failed):
+                            // abandon it; the policy's cooldown paces
+                            // the retry.
+                            break;
+                        }
+                    }
+                    PlanStep::Repartition { partitions, cost } => {
+                        // Move the one-task-per-partition cap first, so
+                        // the extension that follows is immediately
+                        // useful.  Topic gone (shutdown race): abandon
+                        // the rest of the plan for this tick.
+                        if self.cluster.repartition_topic(&self.config.topic, partitions).is_err() {
+                            break;
+                        }
+                        live_partitions = partitions;
+                        self.timeline.record(ScalingEvent {
                             at_secs: t,
                             action: ScalingAction::Repartition,
                             delta_nodes: 0,
                             total_nodes: nodes,
                             lag: snapshot.lag,
                             partitions,
-                            policy: policy_name.clone(),
+                            policy: policy_name.to_string(),
                             reaction_secs: 0.0,
+                            cost_secs: cost.lead_secs,
                         });
-                        actuate_up(step, partitions);
                     }
-                    // Topic gone (shutdown race): skip this tick.
-                    Err(_) => continue,
+                    PlanStep::ExtendProcessing { nodes: up, cost } => {
+                        self.extend_processing(
+                            up,
+                            cost.lead_secs,
+                            nodes,
+                            max_nodes,
+                            live_partitions,
+                            &snapshot,
+                            t,
+                            policy_name,
+                        );
+                    }
+                    PlanStep::ShrinkProcessing { nodes: down } => {
+                        self.shrink_processing(down, nodes, min_nodes, &snapshot, t, policy_name);
+                    }
                 }
             }
-            PolicyDecision::ScaleDown(n) => {
-                // Pop whole extension pilots until ~n nodes are gone
-                // (extensions are indivisible; the last pop may release
-                // a few more than requested, never dropping below the
-                // base allocation).
-                let mut removed = 0;
-                while removed < n {
-                    let Some(ext) = extensions.lock().unwrap().pop() else {
-                        break;
-                    };
-                    let ext_nodes = ext.nodes().len();
-                    match service.stop_pilot(&ext) {
-                        Ok(()) => removed += ext_nodes,
-                        Err(_) => {
-                            // Keep tracking the pilot (it still holds
-                            // nodes); retry on a later tick.
-                            extensions.lock().unwrap().push(ext);
-                            break;
-                        }
-                    }
+        }
+    }
+
+    /// Extend the broker tier by up to `broker_nodes`; returns the
+    /// nodes actually added so the caller can abandon a plan whose
+    /// broker capacity didn't materialize.
+    fn extend_broker(
+        &self,
+        broker_nodes: usize,
+        cost_secs: f64,
+        snapshot: &super::signals::SignalSnapshot,
+        t: f64,
+        policy_name: &str,
+    ) -> usize {
+        let Some(broker) = &self.broker_target else {
+            return 0; // planner config disables broker steps in this case
+        };
+        let step = broker_nodes.min(self.service.machine().free_nodes());
+        if step == 0 {
+            return 0;
+        }
+        let detected = Instant::now();
+        if let Ok(ext) = self.service.extend_pilot(broker, step) {
+            self.broker_extensions.lock().unwrap().push(ext);
+            self.timeline.record(ScalingEvent {
+                at_secs: t,
+                action: ScalingAction::BrokerUp,
+                delta_nodes: step,
+                total_nodes: snapshot.broker_nodes + step,
+                lag: snapshot.lag,
+                partitions: snapshot.partitions,
+                policy: policy_name.to_string(),
+                reaction_secs: detected.elapsed().as_secs_f64(),
+                cost_secs,
+            });
+            return step;
+        }
+        // On error: lost a race for the last free nodes; the policy's
+        // cooldown spaces out the retry.
+        0
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn extend_processing(
+        &self,
+        up: usize,
+        cost_secs: f64,
+        nodes: usize,
+        max_nodes: usize,
+        partitions: usize,
+        snapshot: &super::signals::SignalSnapshot,
+        t: f64,
+        policy_name: &str,
+    ) {
+        // The planner already sized the step (max_step, ceiling,
+        // cost/benefit); re-clamp only against what changed since the
+        // snapshot: live headroom and free machine nodes.
+        let step = up
+            .min(max_nodes - nodes)
+            .min(self.service.machine().free_nodes());
+        if step == 0 {
+            // Ceiling reached or machine full.  The policy has already
+            // charged its cooldown for this decision, which doubles as
+            // backoff before the next attempt.
+            return;
+        }
+        let detected = Instant::now();
+        // extend_pilot blocks through queue + bootstrap, so the elapsed
+        // time is the full detection→Running latency.
+        if let Ok(ext) = self.service.extend_pilot(&self.target, step) {
+            self.extensions.lock().unwrap().push(ext);
+            self.timeline.record(ScalingEvent {
+                at_secs: t,
+                action: ScalingAction::Up,
+                delta_nodes: step,
+                total_nodes: nodes + step,
+                lag: snapshot.lag,
+                partitions,
+                policy: policy_name.to_string(),
+                reaction_secs: detected.elapsed().as_secs_f64(),
+                cost_secs,
+            });
+        }
+    }
+
+    fn shrink_processing(
+        &self,
+        down: usize,
+        nodes: usize,
+        min_nodes: usize,
+        snapshot: &super::signals::SignalSnapshot,
+        t: f64,
+        policy_name: &str,
+    ) {
+        // Pop whole extension pilots until ~down nodes are gone
+        // (extensions are indivisible; the last pop may release a few
+        // more than requested, never dropping below the base
+        // allocation).
+        let mut removed = 0;
+        while removed < down {
+            let Some(ext) = self.extensions.lock().unwrap().pop() else {
+                break;
+            };
+            let ext_nodes = ext.nodes().len();
+            match self.service.stop_pilot(&ext) {
+                Ok(()) => removed += ext_nodes,
+                Err(_) => {
+                    // Keep tracking the pilot (it still holds nodes);
+                    // retry on a later tick.
+                    self.extensions.lock().unwrap().push(ext);
+                    break;
                 }
-                if removed > 0 {
-                    timeline.record(ScalingEvent {
+            }
+        }
+        if removed > 0 {
+            self.timeline.record(ScalingEvent {
+                at_secs: t,
+                action: ScalingAction::Down,
+                delta_nodes: removed,
+                total_nodes: nodes - removed.min(nodes - min_nodes),
+                lag: snapshot.lag,
+                partitions: snapshot.partitions,
+                policy: policy_name.to_string(),
+                reaction_secs: 0.0,
+                cost_secs: 0.0,
+            });
+        }
+    }
+
+    /// Release co-scheduled broker extensions the tier no longer needs.
+    ///
+    /// Runs every tick (so a failed `stop_pilot` really is retried):
+    /// once the processing fleet is back at its base, broker capacity
+    /// bought for a burst is released — but only while the *remaining*
+    /// tier still covers the topic's partition count within the
+    /// per-node I/O budget, so brokers co-scheduled with a repartition
+    /// stay for as long as the partitions they serve do, and repeated
+    /// burst cycles never accumulate saturation-driven broker pilots.
+    fn release_idle_broker_extensions(
+        &self,
+        snapshot: &super::signals::SignalSnapshot,
+        t: f64,
+        policy_name: &str,
+    ) {
+        if !self.extensions.lock().unwrap().is_empty() {
+            return;
+        }
+        let budget = self.planner.config().partitions_per_broker_node.max(1);
+        loop {
+            let Ok(partitions) = self.cluster.partition_count(&self.config.topic) else {
+                return; // topic gone (shutdown race)
+            };
+            let brokers = self.cluster.broker_nodes().len();
+            let ext = {
+                let mut held = self.broker_extensions.lock().unwrap();
+                // Pop only if the tier minus this extension still
+                // serves every partition within budget.
+                let can_pop = held
+                    .last()
+                    .map(|e| partitions <= brokers.saturating_sub(e.nodes().len()) * budget)
+                    .unwrap_or(false);
+                if can_pop {
+                    held.pop()
+                } else {
+                    None
+                }
+            };
+            let Some(ext) = ext else {
+                break;
+            };
+            let ext_nodes = ext.nodes().len();
+            match self.service.stop_pilot(&ext) {
+                Ok(()) => {
+                    self.timeline.record(ScalingEvent {
                         at_secs: t,
-                        action: ScalingAction::Down,
-                        delta_nodes: removed,
-                        total_nodes: nodes - removed.min(nodes - min_nodes),
+                        action: ScalingAction::BrokerDown,
+                        delta_nodes: ext_nodes,
+                        total_nodes: brokers.saturating_sub(ext_nodes),
                         lag: snapshot.lag,
-                        partitions: snapshot.partitions,
-                        policy: policy_name.clone(),
+                        partitions,
+                        policy: policy_name.to_string(),
                         reaction_secs: 0.0,
+                        cost_secs: 0.0,
                     });
+                }
+                Err(_) => {
+                    // Still holds nodes; retried next tick.
+                    self.broker_extensions.lock().unwrap().push(ext);
+                    break;
                 }
             }
         }
@@ -474,6 +749,9 @@ mod tests {
         assert_eq!(up.delta_nodes, 1);
         assert_eq!(up.policy, "threshold");
         assert!(up.lag >= 5);
+        // The planner stamps the modeled Spark extension cost on the
+        // event (one wave + settle).
+        assert_eq!(up.cost_secs, 16.0);
         service.stop_pilot(&spark).unwrap();
         service.stop_pilot(&kafka).unwrap();
     }

@@ -7,11 +7,13 @@
 //! closes the loop from observed load back to resource changes:
 //!
 //! ```text
-//!   signals ───────────► policy ───────────► actuator
-//!   consumer lag          threshold/hysteresis  extend_pilot (scale-up)
-//!   lag slope             PD on lag slope       stop_pilot (scale-down,
-//!   produce/consume rate  online bin-packing      extension pilots)
-//!   window overrun
+//!   signals ──────────► policy ─────────► planner ──────────► actuator
+//!   consumer lag         threshold/        per-framework       extend_pilot
+//!   lag slope            hysteresis        extension costs     stop_pilot
+//!   produce/consume      PD on lag slope   drain-benefit       repartition_topic
+//!   window overrun       bin-packing       gate (defer/        broker extend
+//!   broker NIC/disk      (emit intents)    resize), broker     (plan steps)
+//!   token-bucket util                      co-scheduling
 //! ```
 //!
 //! (The service also offers an in-place
@@ -28,10 +30,19 @@
 //!   first-fit-decreasing bin-packing à la Stein et al. 2020), plus the
 //!   [`PartitionElastic`] decorator that upgrades a capped scale-up to
 //!   a topic repartition so the one-task-per-partition ceiling (§6.4's
-//!   knee) moves with the fleet;
-//! * [`controller`] — the [`Autoscaler`] thread that actuates decisions
-//!   through [`crate::pilot::PilotComputeService`] and records every
-//!   action on a [`crate::metrics::ScalingTimeline`].
+//!   knee) moves with the fleet — policies emit [`ScalingIntent`]s,
+//!   never actions;
+//! * [`planner`] — the [`Planner`] turns each intent into a costed,
+//!   multi-step [`ScalingPlan`]: per-framework extension costs (from
+//!   [`crate::plugins::bootstrap_model_for`]'s calibrated tables) are
+//!   weighed against the expected lag-drain benefit, so a scale-up
+//!   that cannot pay for itself within the drain horizon is deferred
+//!   or resized, and a repartition that would oversubscribe per-node
+//!   NIC/disk budgets co-schedules a broker-extension step;
+//! * [`controller`] — the [`Autoscaler`] thread that executes plans
+//!   step by step through [`crate::pilot::PilotComputeService`] and
+//!   records every step (and deferral) on a
+//!   [`crate::metrics::ScalingTimeline`].
 //!
 //! The same policies run deterministically in virtual time through the
 //! simulation plane's [`crate::sim::ElasticSim`], which is how the
@@ -41,12 +52,14 @@
 //! MASS source → broker → MASA consumer, no manual extend calls).
 
 pub mod controller;
+pub mod planner;
 pub mod policy;
 pub mod signals;
 
 pub use controller::{Autoscaler, AutoscalerConfig};
+pub use planner::{DeferReason, PlanStep, Planner, PlannerConfig, ScalingPlan, StepCost};
 pub use policy::{
-    BinPackingPolicy, LagSlopePolicy, PartitionElastic, PolicyDecision, ScalingPolicy,
-    ThresholdPolicy,
+    BinPackingPolicy, LagSlopePolicy, PartitionElastic, PolicyDecision, ScalingIntent,
+    ScalingPolicy, ThresholdPolicy,
 };
 pub use signals::{SignalProbe, SignalSnapshot};

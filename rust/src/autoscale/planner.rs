@@ -1,0 +1,610 @@
+//! The scaling planner: costed, multi-step plans from policy intents.
+//!
+//! Policies answer *what* they want ([`ScalingIntent`]); the planner
+//! answers *whether it is worth it and what it actually takes*.  It is
+//! the stage the reactive-controller literature calls planning (de
+//! Assunção et al. 2017): between decision and actuation, weigh each
+//! action's cost against its expected benefit, and expand one intent
+//! into the multi-step plan that makes the action safe across tiers.
+//!
+//! Two cost inputs drive it:
+//!
+//! * **Per-framework extension costs** — from
+//!   [`crate::plugins::extension_cost_secs`] (the same model the pilot
+//!   service records for real extensions): a Kafka broker join +
+//!   rebalance is ~4x a Dask worker join, so the same lag justifies
+//!   different actions on different tiers.  A scale-up whose extension
+//!   lead time cannot pay for itself within the drain horizon is
+//!   *deferred*; one that over-buys drain capacity is *resized* down to
+//!   the smallest step that covers the projected backlog.
+//! * **Broker-tier saturation** — the per-node NIC/disk token-bucket
+//!   gauges on the [`SignalSnapshot`].  A repartition whose new
+//!   partition count would oversubscribe the per-node I/O budget
+//!   co-schedules a broker-extension step in the same plan (the
+//!   ROADMAP's repartition-aware broker scale-up), and a processing
+//!   scale-up issued while the broker tier is saturated brings a broker
+//!   node along — otherwise the new executors would just move the
+//!   bottleneck.
+//!
+//! Plans are pure data: the [`super::Autoscaler`] executes them step by
+//! step on the real plane, and [`crate::sim::ElasticSim::run_planned`]
+//! executes them in virtual time, so the same cost reasoning is
+//! testable deterministically at 32-node scale.
+
+use crate::pilot::FrameworkKind;
+use crate::plugins::extension_cost_secs;
+
+use super::policy::ScalingIntent;
+use super::signals::SignalSnapshot;
+
+/// Modeled cost of one plan step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepCost {
+    /// Seconds until the step's capacity is usable (framework extension
+    /// lead time; epoch drain for repartitions).
+    pub lead_secs: f64,
+    /// Node-seconds committed before the capacity earns anything
+    /// (`nodes * lead_secs`; 0 for repartitions).
+    pub node_secs: f64,
+}
+
+impl StepCost {
+    pub fn zero() -> Self {
+        StepCost { lead_secs: 0.0, node_secs: 0.0 }
+    }
+}
+
+/// One step of a [`ScalingPlan`], in execution order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlanStep {
+    /// Extend the broker-tier pilot by `nodes` nodes.
+    ExtendBroker { nodes: usize, cost: StepCost },
+    /// Repartition the watched topic to `partitions` partitions.
+    Repartition { partitions: usize, cost: StepCost },
+    /// Extend the processing-tier pilot by `nodes` nodes.
+    ExtendProcessing { nodes: usize, cost: StepCost },
+    /// Release `nodes` processing nodes (stop extension pilots).
+    ShrinkProcessing { nodes: usize },
+}
+
+/// Why a plan was deferred instead of actuated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeferReason {
+    /// The extension's lead time exceeds the drain horizon: the new
+    /// nodes could never pay for themselves before the horizon closes.
+    LeadBeyondHorizon,
+    /// The current fleet already drains the projected backlog within
+    /// the horizon; buying more capacity would be pure cost.
+    FleetSufficient,
+}
+
+/// A costed, ordered sequence of scaling steps produced from one
+/// [`ScalingIntent`].  Empty `steps` with `deferred: None` is a hold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingPlan {
+    pub steps: Vec<PlanStep>,
+    /// Messages the plan is expected to drain within the horizon
+    /// (beyond what the current fleet would; 0 when uncalibrated).
+    pub expected_drain_msgs: f64,
+    /// Why the planner declined to act, if it did.
+    pub deferred: Option<DeferReason>,
+}
+
+impl ScalingPlan {
+    pub fn hold() -> Self {
+        ScalingPlan { steps: Vec::new(), expected_drain_msgs: 0.0, deferred: None }
+    }
+
+    pub fn deferred(reason: DeferReason) -> Self {
+        ScalingPlan { steps: Vec::new(), expected_drain_msgs: 0.0, deferred: Some(reason) }
+    }
+
+    pub fn is_hold(&self) -> bool {
+        self.steps.is_empty() && self.deferred.is_none()
+    }
+
+    /// Processing nodes this plan adds.
+    pub fn added_processing_nodes(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                PlanStep::ExtendProcessing { nodes, .. } => *nodes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Broker nodes this plan adds.
+    pub fn added_broker_nodes(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                PlanStep::ExtendBroker { nodes, .. } => *nodes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// The partition count this plan repartitions to, if any.
+    pub fn repartition_target(&self) -> Option<usize> {
+        self.steps.iter().find_map(|s| match s {
+            PlanStep::Repartition { partitions, .. } => Some(*partitions),
+            _ => None,
+        })
+    }
+
+    /// Longest lead among the plan's steps (steps run co-scheduled, so
+    /// the plan is "paid off" once the slowest step lands).
+    pub fn total_lead_secs(&self) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                PlanStep::ExtendBroker { cost, .. }
+                | PlanStep::Repartition { cost, .. }
+                | PlanStep::ExtendProcessing { cost, .. } => cost.lead_secs,
+                PlanStep::ShrinkProcessing { .. } => 0.0,
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Planner tuning.  The controller derives `max_step` from its
+/// [`super::AutoscalerConfig`] and the frameworks from the target
+/// pilots, so plans can never exceed what the controller may actuate.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Framework of the processing tier (extension cost model).
+    pub processing_framework: FrameworkKind,
+    /// Framework of the broker tier (extension cost model).
+    pub broker_framework: FrameworkKind,
+    /// Largest processing extension a single plan may request.
+    pub max_step: usize,
+    /// Horizon within which a scale-up must pay for itself: the drain
+    /// benefit is counted only over `horizon - lead` seconds.  Keep it
+    /// generous (default 600 s) unless deferral is the point.
+    pub drain_horizon_secs: f64,
+    /// Per-node I/O budget: partitions one broker node can serve before
+    /// its NIC/disk token buckets oversubscribe (paper: 12).
+    pub partitions_per_broker_node: usize,
+    /// Peak per-node NIC/disk utilization beyond which a processing
+    /// scale-up co-schedules a broker node.
+    pub broker_util_threshold: f64,
+    /// Largest broker extension a single plan may co-schedule (0
+    /// disables broker co-scheduling entirely).
+    pub max_broker_step: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            processing_framework: FrameworkKind::Spark,
+            broker_framework: FrameworkKind::Kafka,
+            max_step: 4,
+            drain_horizon_secs: 600.0,
+            partitions_per_broker_node: 12,
+            broker_util_threshold: 0.85,
+            max_broker_step: 2,
+        }
+    }
+}
+
+impl PlannerConfig {
+    pub fn with_frameworks(mut self, processing: FrameworkKind, broker: FrameworkKind) -> Self {
+        self.processing_framework = processing;
+        self.broker_framework = broker;
+        self
+    }
+
+    pub fn with_max_step(mut self, nodes: usize) -> Self {
+        self.max_step = nodes.max(1);
+        self
+    }
+
+    pub fn with_drain_horizon_secs(mut self, secs: f64) -> Self {
+        self.drain_horizon_secs = secs.max(1e-3);
+        self
+    }
+
+    pub fn with_partitions_per_broker_node(mut self, partitions: usize) -> Self {
+        self.partitions_per_broker_node = partitions.max(1);
+        self
+    }
+
+    pub fn with_broker_util_threshold(mut self, threshold: f64) -> Self {
+        self.broker_util_threshold = threshold.clamp(0.05, 1.0);
+        self
+    }
+
+    pub fn with_max_broker_step(mut self, nodes: usize) -> Self {
+        self.max_broker_step = nodes;
+        self
+    }
+}
+
+/// Stateless intent → plan translator (same inputs, same plan — the
+/// virtual-time determinism the sim harness pins relies on this).
+#[derive(Debug, Clone)]
+pub struct Planner {
+    config: PlannerConfig,
+}
+
+impl Planner {
+    pub fn new(config: PlannerConfig) -> Self {
+        Planner { config }
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.config
+    }
+
+    /// Extension cost of `nodes` processing/broker nodes.
+    fn extend_cost(&self, kind: FrameworkKind, nodes: usize) -> StepCost {
+        let lead_secs = extension_cost_secs(kind, nodes);
+        StepCost { lead_secs, node_secs: nodes as f64 * lead_secs }
+    }
+
+    /// Turn one policy intent into a costed plan for this snapshot.
+    pub fn plan(&self, intent: ScalingIntent, s: &SignalSnapshot) -> ScalingPlan {
+        match intent {
+            ScalingIntent::Hold => ScalingPlan::hold(),
+            ScalingIntent::ScaleDown(n) => {
+                let n = n.min(s.nodes.saturating_sub(s.min_nodes));
+                if n == 0 {
+                    return ScalingPlan::hold();
+                }
+                ScalingPlan {
+                    steps: vec![PlanStep::ShrinkProcessing { nodes: n }],
+                    expected_drain_msgs: 0.0,
+                    deferred: None,
+                }
+            }
+            ScalingIntent::ScaleUp(n) => self.plan_growth(n, None, s),
+            ScalingIntent::Repartition { partitions, scale_up } => {
+                self.plan_growth(scale_up, Some(partitions), s)
+            }
+        }
+    }
+
+    /// Drain benefit of `k` extra nodes within the horizon: the extra
+    /// service the new nodes provide once their extension lands.
+    fn benefit_msgs(&self, k: usize, rate_per_node: f64) -> f64 {
+        let lead = extension_cost_secs(self.config.processing_framework, k);
+        k as f64 * rate_per_node * (self.config.drain_horizon_secs - lead).max(0.0)
+    }
+
+    fn plan_growth(
+        &self,
+        scale_up: usize,
+        repartition: Option<usize>,
+        s: &SignalSnapshot,
+    ) -> ScalingPlan {
+        let headroom = s.max_nodes.saturating_sub(s.nodes);
+        let requested = scale_up.min(self.config.max_step).min(headroom);
+        let mut n = requested;
+        if n == 0 {
+            // Nothing can be added (ceiling reached).  Growing the
+            // partition count anyway would inflate every cooldown with
+            // nothing new to consume it, so the whole plan holds —
+            // mirroring the pre-planner controller guard.
+            return ScalingPlan::hold();
+        }
+
+        // Cost/benefit gate — only once the service rate is calibrated
+        // (rate 0 means no consumption observed yet; acting on lag is
+        // all we can do, so the intent passes through uncosted).
+        let rate = s.service_rate_per_node;
+        let mut expected_drain = 0.0;
+        if rate > 0.0 {
+            let h = self.config.drain_horizon_secs;
+            // Backlog at the horizon if the fleet stays as-is: the lag
+            // slope already nets out current consumption.
+            let projected = (s.lag as f64 + s.lag_slope * h).max(0.0);
+            if projected <= 0.0 {
+                return ScalingPlan::deferred(DeferReason::FleetSufficient);
+            }
+            // A large extension may be unpayable only because of its
+            // extra launch waves: shrink until the lead fits the
+            // horizon before concluding nothing can pay.
+            while n > 1 && self.benefit_msgs(n, rate) <= 0.0 {
+                n -= 1;
+            }
+            if self.benefit_msgs(n, rate) <= 0.0 {
+                return ScalingPlan::deferred(DeferReason::LeadBeyondHorizon);
+            }
+            // Resize: the smallest step whose drain benefit covers the
+            // projected backlog (buying more would be idle footprint);
+            // keep the full request when even it cannot cover.
+            for k in 1..n {
+                if self.benefit_msgs(k, rate) >= projected {
+                    n = k;
+                    break;
+                }
+            }
+            expected_drain = self.benefit_msgs(n, rate).min(projected);
+        }
+
+        // A repartition target sized for the policy's full request must
+        // shrink with a right-sized step: buying partitions (and the
+        // broker nodes to serve them) that the smaller fleet cannot
+        // consume is exactly the over-provisioning this planner exists
+        // to prevent.  Scale proportionally to the fleet the plan
+        // actually builds; if that leaves nothing to grow, the
+        // repartition drops out below.
+        let repartition = repartition.map(|p| {
+            if n < requested {
+                let scaled = (p as f64 * (s.nodes + n) as f64 / (s.nodes + requested) as f64)
+                    .ceil() as usize;
+                scaled.max(1)
+            } else {
+                p
+            }
+        });
+
+        let mut steps = Vec::new();
+        let budget = self.config.partitions_per_broker_node.max(1);
+        match repartition {
+            Some(p) => {
+                let mut target = p;
+                let capacity_now = s.broker_nodes * budget;
+                let mut broker_added = 0;
+                if target > capacity_now {
+                    // Oversubscribed per-node I/O budgets: co-schedule
+                    // a broker extension sized for the new partition
+                    // count, then clamp the partition count to what the
+                    // extended tier can actually serve.
+                    let needed = target.div_ceil(budget).saturating_sub(s.broker_nodes);
+                    broker_added = needed.min(self.config.max_broker_step);
+                    if broker_added > 0 {
+                        steps.push(PlanStep::ExtendBroker {
+                            nodes: broker_added,
+                            cost: self.extend_cost(self.config.broker_framework, broker_added),
+                        });
+                    }
+                    target = target.min((s.broker_nodes + broker_added) * budget);
+                }
+                // A target clamped at or below the current count is a
+                // no-op (never a shrink-by-accident); deliberate
+                // resizes (p within budget) pass through untouched.
+                if target != s.partitions && (target == p || target > s.partitions) {
+                    steps.push(PlanStep::Repartition {
+                        partitions: target,
+                        cost: StepCost { lead_secs: s.window_secs.max(0.0), node_secs: 0.0 },
+                    });
+                }
+            }
+            None => {
+                // No repartition in the intent, but a saturated broker
+                // tier still travels with the scale-up: new executors
+                // behind a saturated broker just move the bottleneck.
+                let util = s.broker_nic_util.max(s.broker_disk_util);
+                if util >= self.config.broker_util_threshold && self.config.max_broker_step > 0 {
+                    steps.push(PlanStep::ExtendBroker {
+                        nodes: 1,
+                        cost: self.extend_cost(self.config.broker_framework, 1),
+                    });
+                }
+            }
+        }
+        steps.push(PlanStep::ExtendProcessing {
+            nodes: n,
+            cost: self.extend_cost(self.config.processing_framework, n),
+        });
+        ScalingPlan { steps, expected_drain_msgs: expected_drain, deferred: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(lag: u64, nodes: usize) -> SignalSnapshot {
+        SignalSnapshot {
+            t_secs: 10.0,
+            lag,
+            lag_slope: 0.0,
+            produce_rate: 0.0,
+            consume_rate: 0.0,
+            partition_backlog: Vec::new(),
+            partitions: 8,
+            behind_batches: 0,
+            last_batch_secs: 0.0,
+            window_secs: 1.0,
+            nodes,
+            min_nodes: 1,
+            max_nodes: 16,
+            service_rate_per_node: 0.0,
+            broker_nodes: 2,
+            broker_nic_util: 0.0,
+            broker_disk_util: 0.0,
+        }
+    }
+
+    fn planner() -> Planner {
+        Planner::new(PlannerConfig::default().with_max_step(8))
+    }
+
+    #[test]
+    fn hold_and_shrink_pass_through() {
+        let p = planner();
+        assert!(p.plan(ScalingIntent::Hold, &snap(0, 4)).is_hold());
+        let plan = p.plan(ScalingIntent::ScaleDown(2), &snap(0, 4));
+        assert_eq!(plan.steps, vec![PlanStep::ShrinkProcessing { nodes: 2 }]);
+        // Clamped to the fleet floor; a no-op shrink is a hold.
+        let plan = p.plan(ScalingIntent::ScaleDown(9), &snap(0, 4));
+        assert_eq!(plan.steps, vec![PlanStep::ShrinkProcessing { nodes: 3 }]);
+        assert!(p.plan(ScalingIntent::ScaleDown(2), &snap(0, 1)).is_hold());
+    }
+
+    #[test]
+    fn uncalibrated_scale_up_passes_through_with_costs() {
+        let p = planner();
+        let plan = p.plan(ScalingIntent::ScaleUp(2), &snap(500, 4));
+        assert_eq!(plan.added_processing_nodes(), 2);
+        assert_eq!(plan.deferred, None);
+        let PlanStep::ExtendProcessing { cost, .. } = plan.steps[0] else {
+            panic!("expected processing step, got {:?}", plan.steps);
+        };
+        // Spark: one wave of 2 nodes (6 s) + settle (10 s).
+        assert_eq!(cost.lead_secs, 16.0);
+        assert_eq!(cost.node_secs, 32.0);
+    }
+
+    #[test]
+    fn scale_up_clamps_to_max_step_and_ceiling() {
+        let p = planner();
+        let plan = p.plan(ScalingIntent::ScaleUp(50), &snap(500, 4));
+        assert_eq!(plan.added_processing_nodes(), 8, "max_step clamp");
+        let plan = p.plan(ScalingIntent::ScaleUp(50), &snap(500, 14));
+        assert_eq!(plan.added_processing_nodes(), 2, "ceiling clamp");
+        assert!(p.plan(ScalingIntent::ScaleUp(3), &snap(500, 16)).is_hold());
+    }
+
+    #[test]
+    fn costed_scale_up_resizes_to_cover_projected_backlog() {
+        let p = planner();
+        let mut s = snap(5_000, 2);
+        s.service_rate_per_node = 10.0;
+        // Spark lead 16 s, horizon 600 s: one node drains 5 840 msgs >
+        // the 5 000 projected, so an 8-node request resizes to 1.
+        let plan = p.plan(ScalingIntent::ScaleUp(8), &s);
+        assert_eq!(plan.added_processing_nodes(), 1);
+        assert!(plan.expected_drain_msgs > 0.0);
+        // A much larger backlog keeps the full request.
+        let mut s = snap(5_000_000, 2);
+        s.service_rate_per_node = 10.0;
+        let plan = p.plan(ScalingIntent::ScaleUp(8), &s);
+        assert_eq!(plan.added_processing_nodes(), 8);
+    }
+
+    #[test]
+    fn scale_up_deferred_when_fleet_drains_within_horizon() {
+        let p = planner();
+        let mut s = snap(1_000, 4);
+        s.service_rate_per_node = 10.0;
+        s.lag_slope = -20.0; // draining fast: gone well inside 600 s
+        let plan = p.plan(ScalingIntent::ScaleUp(2), &s);
+        assert_eq!(plan.deferred, Some(DeferReason::FleetSufficient));
+        assert!(plan.steps.is_empty());
+    }
+
+    #[test]
+    fn scale_up_deferred_when_lead_exceeds_horizon() {
+        let p = Planner::new(
+            PlannerConfig::default().with_max_step(8).with_drain_horizon_secs(10.0),
+        );
+        let mut s = snap(100_000, 2);
+        s.service_rate_per_node = 10.0;
+        // Spark lead is 16 s even for one node > 10 s horizon: no step
+        // size can pay for itself before the horizon closes.
+        let plan = p.plan(ScalingIntent::ScaleUp(2), &s);
+        assert_eq!(plan.deferred, Some(DeferReason::LeadBeyondHorizon));
+    }
+
+    #[test]
+    fn unpayable_large_step_shrinks_to_payable_size_instead_of_deferring() {
+        // Horizon 30 s: 8 Spark nodes take 4 waves (34 s lead, can't
+        // pay) but 2 nodes take one wave (16 s lead, pays).  The plan
+        // must resize, not defer.
+        let p = Planner::new(
+            PlannerConfig::default().with_max_step(8).with_drain_horizon_secs(30.0),
+        );
+        let mut s = snap(10_000_000, 2);
+        s.service_rate_per_node = 10.0;
+        let plan = p.plan(ScalingIntent::ScaleUp(8), &s);
+        assert_eq!(plan.deferred, None);
+        let up = plan.added_processing_nodes();
+        assert!((1..8).contains(&up), "expected a right-sized step, got {up}");
+        assert!(plan.expected_drain_msgs > 0.0);
+    }
+
+    #[test]
+    fn resized_step_right_sizes_the_repartition_ask() {
+        let p = planner();
+        let mut s = snap(5_000, 2);
+        s.service_rate_per_node = 10.0;
+        s.partitions = 2;
+        s.broker_nodes = 2;
+        // The 8-node request resizes to 1 (one node's drain covers the
+        // 5 000 projected messages), so the partition ask shrinks with
+        // the fleet it actually builds: ceil(20 * (2+1)/(2+8)) = 6,
+        // not the 20 the policy sized for 8 new nodes.
+        let plan = p.plan(ScalingIntent::Repartition { partitions: 20, scale_up: 8 }, &s);
+        assert_eq!(plan.added_processing_nodes(), 1);
+        assert_eq!(plan.repartition_target(), Some(6));
+        assert_eq!(plan.added_broker_nodes(), 0, "6 partitions fit the 2-broker budget");
+    }
+
+    #[test]
+    fn repartition_within_budget_has_no_broker_step() {
+        let p = planner();
+        let mut s = snap(500, 2);
+        s.partitions = 8;
+        s.broker_nodes = 2; // budget 24 partitions
+        let plan = p.plan(ScalingIntent::Repartition { partitions: 12, scale_up: 2 }, &s);
+        assert_eq!(plan.added_broker_nodes(), 0);
+        assert_eq!(plan.repartition_target(), Some(12));
+        assert_eq!(plan.added_processing_nodes(), 2);
+        // Repartition step precedes the processing extension.
+        assert!(matches!(plan.steps[0], PlanStep::Repartition { .. }));
+        assert!(matches!(plan.steps[1], PlanStep::ExtendProcessing { .. }));
+    }
+
+    #[test]
+    fn oversubscribing_repartition_coschedules_broker_extension() {
+        let p = planner();
+        let mut s = snap(500, 2);
+        s.partitions = 24;
+        s.broker_nodes = 2; // budget 24: already full
+        let plan = p.plan(ScalingIntent::Repartition { partitions: 40, scale_up: 4 }, &s);
+        // 40 partitions need ceil(40/12) = 4 brokers -> +2.
+        assert_eq!(plan.added_broker_nodes(), 2);
+        assert_eq!(plan.repartition_target(), Some(40));
+        assert!(matches!(plan.steps[0], PlanStep::ExtendBroker { .. }));
+        assert!(matches!(plan.steps[1], PlanStep::Repartition { .. }));
+        assert!(matches!(plan.steps[2], PlanStep::ExtendProcessing { .. }));
+        let PlanStep::ExtendBroker { cost, .. } = plan.steps[0] else { unreachable!() };
+        // Kafka: one wave of 2 nodes (8 s) + rebalance settle (15 s).
+        assert_eq!(cost.lead_secs, 23.0);
+        // Steps run co-scheduled, so the plan pays off once its slowest
+        // step lands — the broker join here.
+        assert_eq!(plan.total_lead_secs(), 23.0);
+    }
+
+    #[test]
+    fn repartition_clamps_partitions_to_broker_step_budget() {
+        let p = Planner::new(PlannerConfig::default().with_max_step(8).with_max_broker_step(1));
+        let mut s = snap(500, 2);
+        s.partitions = 24;
+        s.broker_nodes = 2;
+        // 80 partitions would need 7 brokers; only 1 can be added, so
+        // the partition target clamps to (2+1)*12 = 36.
+        let plan = p.plan(ScalingIntent::Repartition { partitions: 80, scale_up: 4 }, &s);
+        assert_eq!(plan.added_broker_nodes(), 1);
+        assert_eq!(plan.repartition_target(), Some(36));
+    }
+
+    #[test]
+    fn saturated_broker_tier_travels_with_plain_scale_up() {
+        let p = planner();
+        let mut s = snap(500, 2);
+        s.broker_nic_util = 0.95;
+        let plan = p.plan(ScalingIntent::ScaleUp(2), &s);
+        assert_eq!(plan.added_broker_nodes(), 1);
+        assert!(matches!(plan.steps[0], PlanStep::ExtendBroker { .. }));
+        // Below threshold: no broker step.
+        s.broker_nic_util = 0.5;
+        let plan = p.plan(ScalingIntent::ScaleUp(2), &s);
+        assert_eq!(plan.added_broker_nodes(), 0);
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let p = planner();
+        let mut s = snap(123_456, 3);
+        s.service_rate_per_node = 7.5;
+        s.lag_slope = 42.0;
+        s.broker_nic_util = 0.9;
+        let intent = ScalingIntent::Repartition { partitions: 60, scale_up: 5 };
+        assert_eq!(p.plan(intent, &s), p.plan(intent, &s));
+    }
+}

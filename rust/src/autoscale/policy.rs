@@ -1,7 +1,10 @@
 //! Scaling policies: pure decision functions over signal snapshots.
 //!
 //! A policy never touches the broker or the pilot service; it sees a
-//! [`SignalSnapshot`] and answers "hold, grow by n, or shrink by n".
+//! [`SignalSnapshot`] and answers with a [`ScalingIntent`] ("hold,
+//! grow by n, shrink by n, or repartition"), which the
+//! [`crate::autoscale::Planner`] then turns into a costed multi-step
+//! plan before anything is actuated.
 //! That keeps every policy unit-testable and lets the same policy run
 //! unchanged on the real plane (the [`super::Autoscaler`] control loop)
 //! and in virtual time (the [`crate::sim`] elastic harness at 32-node
@@ -20,14 +23,21 @@
 //!
 //! Any of them can be wrapped in [`PartitionElastic`], which turns a
 //! scale-up that would exceed the topic's one-task-per-partition cap
-//! into a [`PolicyDecision::Repartition`] (resize + extend in one
+//! into a [`ScalingIntent::Repartition`] (resize + extend in one
 //! action), removing the §6.4 knee.
 
 use super::signals::SignalSnapshot;
 
-/// What a policy wants done with the resource footprint.
+/// What a policy *wants* done with the resource footprint — an intent,
+/// not an order.  Intents carry no costs and no broker-tier awareness;
+/// the [`crate::autoscale::Planner`] turns each intent into a costed,
+/// possibly multi-step [`crate::autoscale::ScalingPlan`] (resizing or
+/// deferring a scale-up whose modeled cost cannot pay for itself, and
+/// co-scheduling broker extensions when a repartition would
+/// oversubscribe per-node I/O budgets) before the controller actuates
+/// anything.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PolicyDecision {
+pub enum ScalingIntent {
     /// No change.
     Hold,
     /// Add `n` processing nodes.
@@ -42,6 +52,10 @@ pub enum PolicyDecision {
     Repartition { partitions: usize, scale_up: usize },
 }
 
+/// Pre-planner name for [`ScalingIntent`], kept so existing policies
+/// and call sites read naturally during the decision-path migration.
+pub use self::ScalingIntent as PolicyDecision;
+
 /// The policy SPI (pluggable; applications can bring their own).
 pub trait ScalingPolicy: Send {
     /// Short name recorded on every [`crate::metrics::ScalingEvent`].
@@ -49,7 +63,7 @@ pub trait ScalingPolicy: Send {
 
     /// Decide on one signal sample.  Policies carry their own state
     /// (streak counters, cooldown clocks) between calls.
-    fn decide(&mut self, signals: &SignalSnapshot) -> PolicyDecision;
+    fn decide(&mut self, signals: &SignalSnapshot) -> ScalingIntent;
 }
 
 // ---------------------------------------------------------------------
@@ -112,7 +126,7 @@ impl ScalingPolicy for ThresholdPolicy {
         "threshold"
     }
 
-    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+    fn decide(&mut self, s: &SignalSnapshot) -> ScalingIntent {
         if s.lag >= self.up_lag {
             self.high_streak += 1;
             self.low_streak = 0;
@@ -125,19 +139,19 @@ impl ScalingPolicy for ThresholdPolicy {
             self.low_streak = 0;
         }
         if s.t_secs - self.last_action_t < self.cooldown_secs {
-            return PolicyDecision::Hold;
+            return ScalingIntent::Hold;
         }
         if self.high_streak >= self.sustain && s.nodes < s.max_nodes {
             self.high_streak = 0;
             self.last_action_t = s.t_secs;
-            return PolicyDecision::ScaleUp(self.step.min(s.max_nodes - s.nodes));
+            return ScalingIntent::ScaleUp(self.step.min(s.max_nodes - s.nodes));
         }
         if self.low_streak >= self.sustain && s.nodes > s.min_nodes {
             self.low_streak = 0;
             self.last_action_t = s.t_secs;
-            return PolicyDecision::ScaleDown(self.step.min(s.nodes - s.min_nodes));
+            return ScalingIntent::ScaleDown(self.step.min(s.nodes - s.min_nodes));
         }
-        PolicyDecision::Hold
+        ScalingIntent::Hold
     }
 }
 
@@ -180,13 +194,13 @@ impl ScalingPolicy for LagSlopePolicy {
         "lag-slope"
     }
 
-    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+    fn decide(&mut self, s: &SignalSnapshot) -> ScalingIntent {
         let rate_per_node = s.service_rate_per_node;
         if rate_per_node <= 0.0 {
-            return PolicyDecision::Hold; // no calibration signal yet
+            return ScalingIntent::Hold; // no calibration signal yet
         }
         if s.t_secs - self.last_action_t < self.cooldown_secs {
-            return PolicyDecision::Hold;
+            return ScalingIntent::Hold;
         }
         // P term: projected lag after the horizon; D enters via the slope.
         let projected = (s.lag as f64 + s.lag_slope.max(0.0) * self.horizon_secs).max(0.0);
@@ -195,15 +209,15 @@ impl ScalingPolicy for LagSlopePolicy {
         let desired = ((demand / rate_per_node).ceil() as usize).clamp(s.min_nodes, s.max_nodes);
         if desired > s.nodes {
             self.last_action_t = s.t_secs;
-            return PolicyDecision::ScaleUp(desired - s.nodes);
+            return ScalingIntent::ScaleUp(desired - s.nodes);
         }
         // Only shrink once the backlog has actually drained (hysteresis:
         // a smaller desired fleet alone is not enough mid-burst).
         if desired < s.nodes && s.lag <= self.target_lag {
             self.last_action_t = s.t_secs;
-            return PolicyDecision::ScaleDown(s.nodes - desired);
+            return ScalingIntent::ScaleDown(s.nodes - desired);
         }
-        PolicyDecision::Hold
+        ScalingIntent::Hold
     }
 }
 
@@ -280,19 +294,19 @@ impl ScalingPolicy for BinPackingPolicy {
         "bin-packing"
     }
 
-    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+    fn decide(&mut self, s: &SignalSnapshot) -> ScalingIntent {
         let n_parts = s.partition_backlog.len();
         if n_parts == 0 {
-            return PolicyDecision::Hold;
+            return ScalingIntent::Hold;
         }
         let capacity = self
             .node_capacity_msgs
             .unwrap_or(s.service_rate_per_node * s.window_secs);
         if capacity <= 0.0 {
-            return PolicyDecision::Hold;
+            return ScalingIntent::Hold;
         }
         if s.t_secs - self.last_action_t < self.cooldown_secs {
-            return PolicyDecision::Hold;
+            return ScalingIntent::Hold;
         }
         let cap = capacity * self.headroom;
         let arrivals_per_part = s.produce_rate * s.window_secs / n_parts as f64;
@@ -305,12 +319,12 @@ impl ScalingPolicy for BinPackingPolicy {
         let target = Self::ffd_bins(items, cap).clamp(s.min_nodes, s.max_nodes);
         if target > s.nodes {
             self.last_action_t = s.t_secs;
-            PolicyDecision::ScaleUp(target - s.nodes)
+            ScalingIntent::ScaleUp(target - s.nodes)
         } else if target < s.nodes {
             self.last_action_t = s.t_secs;
-            PolicyDecision::ScaleDown(s.nodes - target)
+            ScalingIntent::ScaleDown(s.nodes - target)
         } else {
-            PolicyDecision::Hold
+            ScalingIntent::Hold
         }
     }
 }
@@ -324,7 +338,7 @@ impl ScalingPolicy for BinPackingPolicy {
 /// (`nodes * tasks_per_node`) would exceed the topic's partition count
 /// — beyond which extra nodes sit idle (§6.4's one-task-per-partition
 /// knee) — the decision is upgraded to
-/// [`PolicyDecision::Repartition`], resizing the topic to match the
+/// [`ScalingIntent::Repartition`], resizing the topic to match the
 /// target fleet before the extension lands.
 #[derive(Debug)]
 pub struct PartitionElastic<P: ScalingPolicy> {
@@ -356,17 +370,17 @@ impl<P: ScalingPolicy> ScalingPolicy for PartitionElastic<P> {
         "partition-elastic"
     }
 
-    fn decide(&mut self, s: &SignalSnapshot) -> PolicyDecision {
+    fn decide(&mut self, s: &SignalSnapshot) -> ScalingIntent {
         match self.inner.decide(s) {
-            PolicyDecision::ScaleUp(n) => {
+            ScalingIntent::ScaleUp(n) => {
                 let target_slots = (s.nodes + n) * self.tasks_per_node;
                 if target_slots > s.partitions && s.partitions < self.max_partitions {
-                    PolicyDecision::Repartition {
+                    ScalingIntent::Repartition {
                         partitions: target_slots.min(self.max_partitions),
                         scale_up: n,
                     }
                 } else {
-                    PolicyDecision::ScaleUp(n)
+                    ScalingIntent::ScaleUp(n)
                 }
             }
             other => other,
@@ -395,6 +409,9 @@ mod tests {
             min_nodes: 1,
             max_nodes: 8,
             service_rate_per_node: 10.0,
+            broker_nodes: 1,
+            broker_nic_util: 0.0,
+            broker_disk_util: 0.0,
         }
     }
 
@@ -402,12 +419,12 @@ mod tests {
     fn threshold_scales_up_on_sustained_lag_only() {
         let mut p = ThresholdPolicy::new(100, 10).with_sustain(2).with_cooldown_secs(0.0);
         // One high sample is not enough.
-        assert_eq!(p.decide(&snap(0.0, 150, 1)), PolicyDecision::Hold);
+        assert_eq!(p.decide(&snap(0.0, 150, 1)), ScalingIntent::Hold);
         // A dip resets the streak.
-        assert_eq!(p.decide(&snap(1.0, 5, 1)), PolicyDecision::Hold);
-        assert_eq!(p.decide(&snap(2.0, 150, 1)), PolicyDecision::Hold);
+        assert_eq!(p.decide(&snap(1.0, 5, 1)), ScalingIntent::Hold);
+        assert_eq!(p.decide(&snap(2.0, 150, 1)), ScalingIntent::Hold);
         // Second consecutive high sample triggers.
-        assert_eq!(p.decide(&snap(3.0, 150, 1)), PolicyDecision::ScaleUp(1));
+        assert_eq!(p.decide(&snap(3.0, 150, 1)), ScalingIntent::ScaleUp(1));
     }
 
     #[test]
@@ -415,19 +432,19 @@ mod tests {
         let mut p = ThresholdPolicy::new(100, 10).with_sustain(1).with_cooldown_secs(0.0);
         // Between the thresholds: never an action, regardless of history.
         for t in 0..10 {
-            assert_eq!(p.decide(&snap(t as f64, 50, 4)), PolicyDecision::Hold);
+            assert_eq!(p.decide(&snap(t as f64, 50, 4)), ScalingIntent::Hold);
         }
     }
 
     #[test]
     fn threshold_cooldown_prevents_flapping() {
         let mut p = ThresholdPolicy::new(100, 10).with_sustain(1).with_cooldown_secs(5.0);
-        assert_eq!(p.decide(&snap(0.0, 200, 1)), PolicyDecision::ScaleUp(1));
+        assert_eq!(p.decide(&snap(0.0, 200, 1)), ScalingIntent::ScaleUp(1));
         // Still hot, but inside the cooldown window.
-        assert_eq!(p.decide(&snap(1.0, 200, 2)), PolicyDecision::Hold);
-        assert_eq!(p.decide(&snap(4.9, 200, 2)), PolicyDecision::Hold);
+        assert_eq!(p.decide(&snap(1.0, 200, 2)), ScalingIntent::Hold);
+        assert_eq!(p.decide(&snap(4.9, 200, 2)), ScalingIntent::Hold);
         // Cooldown elapsed.
-        assert_eq!(p.decide(&snap(6.0, 200, 2)), PolicyDecision::ScaleUp(1));
+        assert_eq!(p.decide(&snap(6.0, 200, 2)), ScalingIntent::ScaleUp(1));
     }
 
     #[test]
@@ -436,19 +453,19 @@ mod tests {
             .with_sustain(2)
             .with_cooldown_secs(0.0)
             .with_step(4);
-        assert_eq!(p.decide(&snap(0.0, 0, 3)), PolicyDecision::Hold);
+        assert_eq!(p.decide(&snap(0.0, 0, 3)), ScalingIntent::Hold);
         // Step is clamped to the min-node floor.
-        assert_eq!(p.decide(&snap(1.0, 0, 3)), PolicyDecision::ScaleDown(2));
+        assert_eq!(p.decide(&snap(1.0, 0, 3)), ScalingIntent::ScaleDown(2));
         // At the floor nothing happens.
-        assert_eq!(p.decide(&snap(2.0, 0, 1)), PolicyDecision::Hold);
-        assert_eq!(p.decide(&snap(3.0, 0, 1)), PolicyDecision::Hold);
+        assert_eq!(p.decide(&snap(2.0, 0, 1)), ScalingIntent::Hold);
+        assert_eq!(p.decide(&snap(3.0, 0, 1)), ScalingIntent::Hold);
         // At the ceiling scale-up is clamped too.
         let mut q = ThresholdPolicy::new(100, 10)
             .with_sustain(1)
             .with_cooldown_secs(0.0)
             .with_step(4);
-        assert_eq!(q.decide(&snap(0.0, 500, 6)), PolicyDecision::ScaleUp(2));
-        assert_eq!(q.decide(&snap(1.0, 500, 8)), PolicyDecision::Hold);
+        assert_eq!(q.decide(&snap(0.0, 500, 6)), ScalingIntent::ScaleUp(2));
+        assert_eq!(q.decide(&snap(1.0, 500, 8)), ScalingIntent::Hold);
     }
 
     #[test]
@@ -458,19 +475,19 @@ mod tests {
         // over the 2 s horizon -> ceil(82.5/10) = 9, clamped to max 8.
         let mut s = snap(0.0, 100, 2);
         s.produce_rate = 35.0;
-        assert_eq!(p.decide(&s), PolicyDecision::ScaleUp(6));
+        assert_eq!(p.decide(&s), ScalingIntent::ScaleUp(6));
         // Drained and the offered load fits one node: shrink.
         let mut s = snap(1.0, 0, 8);
         s.produce_rate = 8.0;
-        assert_eq!(p.decide(&s), PolicyDecision::ScaleDown(7));
+        assert_eq!(p.decide(&s), ScalingIntent::ScaleDown(7));
         // Desired < nodes but lag still above target: hold (hysteresis).
         let mut s = snap(2.0, 50, 8);
         s.produce_rate = 8.0;
-        assert_eq!(p.decide(&s), PolicyDecision::Hold);
+        assert_eq!(p.decide(&s), ScalingIntent::Hold);
         // No calibration signal: hold.
         let mut s = snap(3.0, 1000, 1);
         s.service_rate_per_node = 0.0;
-        assert_eq!(p.decide(&s), PolicyDecision::Hold);
+        assert_eq!(p.decide(&s), ScalingIntent::Hold);
     }
 
     #[test]
@@ -483,16 +500,16 @@ mod tests {
             .with_cooldown_secs(0.0);
         let mut s = snap(0.0, 60, 1);
         s.partition_backlog = vec![10; 6];
-        assert_eq!(p.decide(&s), PolicyDecision::ScaleUp(2));
+        assert_eq!(p.decide(&s), ScalingIntent::ScaleUp(2));
         // Empty partitions pack to the floor -> shrink back.
         let mut s = snap(1.0, 0, 3);
         s.partition_backlog = vec![0; 6];
-        assert_eq!(p.decide(&s), PolicyDecision::ScaleDown(2));
+        assert_eq!(p.decide(&s), ScalingIntent::ScaleDown(2));
         // An oversized partition cannot split across bins: it fills one
         // bin, the two small items share another -> 2 bins.
         let mut s = snap(2.0, 110, 3);
         s.partition_backlog = vec![90, 10, 10];
-        assert_eq!(p.decide(&s), PolicyDecision::ScaleDown(1));
+        assert_eq!(p.decide(&s), ScalingIntent::ScaleDown(1));
     }
 
     #[test]
@@ -511,17 +528,17 @@ mod tests {
         s.partitions = 2;
         let mut q = ThresholdPolicy::new(100, 10).with_sustain(1).with_cooldown_secs(0.0);
         let inner_says = q.decide(&s);
-        let PolicyDecision::ScaleUp(n) = inner_says else {
+        let ScalingIntent::ScaleUp(n) = inner_says else {
             panic!("inner policy should scale up, got {inner_says:?}");
         };
         assert_eq!(
             p.decide(&s),
-            PolicyDecision::Repartition { partitions: (1 + n) * 2, scale_up: n }
+            ScalingIntent::Repartition { partitions: (1 + n) * 2, scale_up: n }
         );
         // Enough partitions already: the decision passes through.
         let mut s = snap(1.0, 500, 1);
         s.partitions = 64;
-        assert_eq!(p.decide(&s), PolicyDecision::ScaleUp(n));
+        assert_eq!(p.decide(&s), ScalingIntent::ScaleUp(n));
     }
 
     #[test]
@@ -533,19 +550,19 @@ mod tests {
         // Target slots 8 clamps to the 6-partition ceiling.
         assert_eq!(
             p.decide(&s),
-            PolicyDecision::Repartition { partitions: 6, scale_up: 1 }
+            ScalingIntent::Repartition { partitions: 6, scale_up: 1 }
         );
         // At the ceiling: plain scale-up (repartition can't help more).
         let mut s = snap(1.0, 500, 1);
         s.partitions = 6;
-        assert_eq!(p.decide(&s), PolicyDecision::ScaleUp(1));
+        assert_eq!(p.decide(&s), ScalingIntent::ScaleUp(1));
         // Hold (inside the hysteresis band) passes through untouched.
         let mut s = snap(2.0, 50, 4);
         s.partitions = 2;
-        assert_eq!(p.decide(&s), PolicyDecision::Hold);
+        assert_eq!(p.decide(&s), ScalingIntent::Hold);
         // So does a scale-down (never upgraded to a repartition).
         let mut s = snap(3.0, 0, 4);
         s.partitions = 2;
-        assert_eq!(p.decide(&s), PolicyDecision::ScaleDown(1));
+        assert_eq!(p.decide(&s), ScalingIntent::ScaleDown(1));
     }
 }

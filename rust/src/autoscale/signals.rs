@@ -3,13 +3,19 @@
 //! One [`SignalSnapshot`] per sample tick, assembled by [`SignalProbe`]
 //! from the broker's consumer-group offsets (per-topic lag, per-partition
 //! backlog), the observed produce/consume throughput (finite differences
-//! of the high watermarks) and the micro-batch engine's window-overrun
-//! gauges ([`crate::engine::JobStats`]).  Policies consume snapshots;
-//! nothing here decides anything.
+//! of the high watermarks), the broker tier's per-node NIC/disk
+//! token-bucket counters ([`crate::broker::BrokerCluster::broker_io`] —
+//! surfaced as first-class utilization gauges so the planner can see
+//! broker saturation, not just consumer lag) and the micro-batch
+//! engine's window-overrun gauges ([`crate::engine::JobStats`]).
+//! Policies and the planner consume snapshots; nothing here decides
+//! anything.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::broker::BrokerCluster;
+use crate::cluster::NodeId;
 use crate::engine::JobStats;
 use crate::error::Result;
 
@@ -49,6 +55,16 @@ pub struct SignalSnapshot {
     /// Smoothed per-node service rate estimate, msgs/sec/node
     /// (0.0 until the first consumption is observed).
     pub service_rate_per_node: f64,
+    /// Live broker-tier nodes serving the topic's partitions.
+    pub broker_nodes: usize,
+    /// Peak per-node NIC token-bucket utilization across the broker
+    /// tier over the last sample interval (0..~1; 0.0 on unthrottled
+    /// machines) — a first-class saturation gauge from
+    /// [`crate::cluster::Throttle`] byte counters.
+    pub broker_nic_util: f64,
+    /// Peak per-node disk token-bucket utilization across the broker
+    /// tier over the last sample interval (0..~1).
+    pub broker_disk_util: f64,
 }
 
 impl SignalSnapshot {
@@ -74,6 +90,9 @@ pub struct SignalProbe {
     prev_end_sum: u64,
     prev_lag: u64,
     ewma_rate_per_node: f64,
+    /// Per-broker-node (nic_in, nic_out, disk) byte counters from the
+    /// previous sample — finite-differenced into utilization gauges.
+    prev_broker_io: HashMap<NodeId, (u64, u64, u64)>,
 }
 
 impl SignalProbe {
@@ -96,15 +115,57 @@ impl SignalProbe {
             prev_end_sum: 0,
             prev_lag: 0,
             ewma_rate_per_node: 0.0,
+            prev_broker_io: HashMap::new(),
         };
         // Seed the watermark and lag baselines so the first sample sees
         // pre-existing topic history as standing lag, not as a produce
-        // burst or a runaway lag slope.
+        // burst or a runaway lag slope.  Broker I/O counters are seeded
+        // the same way: history must not read as a saturation spike.
         if let Ok((end_sum, backlog)) = probe.scan() {
             probe.prev_end_sum = end_sum;
             probe.prev_lag = backlog.iter().sum();
         }
+        for io in probe.cluster.broker_io() {
+            probe
+                .prev_broker_io
+                .insert(io.node, (io.nic_in_bytes, io.nic_out_bytes, io.disk_bytes));
+        }
         probe
+    }
+
+    /// Finite-difference the broker tier's token-bucket counters into
+    /// peak per-node NIC/disk utilization over `dt` seconds.  A node
+    /// first seen this sample (broker extension mid-run) is seeded at
+    /// its current counters — zero delta, so a freshly joined broker's
+    /// lifetime bytes never read as one interval's saturation spike.
+    /// Unthrottled buckets report 0.0.
+    fn broker_utilization(&mut self, dt: f64) -> (usize, f64, f64) {
+        let io = self.cluster.broker_io();
+        let mut nic_util = 0.0f64;
+        let mut disk_util = 0.0f64;
+        let mut next = HashMap::with_capacity(io.len());
+        for stat in &io {
+            let (prev_in, prev_out, prev_disk) = self
+                .prev_broker_io
+                .get(&stat.node)
+                .copied()
+                .unwrap_or((stat.nic_in_bytes, stat.nic_out_bytes, stat.disk_bytes));
+            if let Some(rate) = stat.nic_rate {
+                // Each direction has its own token bucket; the gauge is
+                // the worse of the two, so a produce-only flood (the
+                // backlog-building case) reads as full saturation.
+                let used_in = stat.nic_in_bytes.saturating_sub(prev_in) as f64 / dt;
+                let used_out = stat.nic_out_bytes.saturating_sub(prev_out) as f64 / dt;
+                nic_util = nic_util.max(used_in.max(used_out) / rate);
+            }
+            if let Some(rate) = stat.disk_rate {
+                let used = stat.disk_bytes.saturating_sub(prev_disk) as f64 / dt;
+                disk_util = disk_util.max(used / rate);
+            }
+            next.insert(stat.node, (stat.nic_in_bytes, stat.nic_out_bytes, stat.disk_bytes));
+        }
+        self.prev_broker_io = next;
+        (io.len(), nic_util, disk_util)
     }
 
     /// One pass over the topic: total end offset + per-partition
@@ -135,6 +196,7 @@ impl SignalProbe {
         let lag: u64 = partition_backlog.iter().sum();
 
         let dt = (t_secs - self.prev_t).max(1e-6);
+        let (broker_nodes, broker_nic_util, broker_disk_util) = self.broker_utilization(dt);
         let produce_rate = end_sum.saturating_sub(self.prev_end_sum) as f64 / dt;
         let lag_slope = (lag as f64 - self.prev_lag as f64) / dt;
         let consume_rate = (produce_rate - lag_slope).max(0.0);
@@ -172,6 +234,9 @@ impl SignalProbe {
             min_nodes,
             max_nodes,
             service_rate_per_node: self.ewma_rate_per_node,
+            broker_nodes,
+            broker_nic_util,
+            broker_disk_util,
         })
     }
 }
@@ -229,6 +294,42 @@ mod tests {
         assert_eq!(s.produce_rate, 0.0);
         assert_eq!(s.lag_slope, 0.0);
         assert_eq!(s.window_overrun(), 0.0);
+    }
+
+    #[test]
+    fn probe_surfaces_broker_io_utilization() {
+        // Wrangler nodes are throttled, so moved bytes show up as
+        // non-zero utilization gauges.
+        let machine = crate::cluster::Machine::wrangler(2);
+        let cluster = BrokerCluster::new(machine, vec![0]);
+        cluster.create_topic("t", 1).unwrap();
+        // Pre-probe history must be seeded away, not read as a spike.
+        cluster.produce("t", 0, 1, &[vec![0u8; 4096]]).unwrap();
+        let mut probe = SignalProbe::new(cluster.clone(), "t", "g", None, 1.0);
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        assert_eq!(s.broker_nodes, 1);
+        assert_eq!(s.broker_nic_util, 0.0, "seeded baseline");
+        assert_eq!(s.broker_disk_util, 0.0);
+        cluster.produce("t", 0, 1, &[vec![0u8; 8192]]).unwrap();
+        let s = probe.sample(2.0, 1, 1, 2).unwrap();
+        assert!(s.broker_nic_util > 0.0, "nic util {}", s.broker_nic_util);
+        assert!(s.broker_disk_util > 0.0, "disk util {}", s.broker_disk_util);
+        assert!(s.broker_nic_util <= 1.0 && s.broker_disk_util <= 1.0);
+        // Quiet interval: gauges fall back to zero.
+        let s = probe.sample(3.0, 1, 1, 2).unwrap();
+        assert_eq!(s.broker_nic_util, 0.0);
+    }
+
+    #[test]
+    fn probe_reports_unthrottled_brokers_as_unsaturated() {
+        let cluster = BrokerCluster::new(Machine::unthrottled(2), vec![0, 1]);
+        cluster.create_topic("t", 2).unwrap();
+        let mut probe = SignalProbe::new(cluster.clone(), "t", "g", None, 1.0);
+        cluster.produce("t", 0, 0, &[vec![0u8; 1 << 20]]).unwrap();
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        assert_eq!(s.broker_nodes, 2);
+        assert_eq!(s.broker_nic_util, 0.0);
+        assert_eq!(s.broker_disk_util, 0.0);
     }
 
     #[test]

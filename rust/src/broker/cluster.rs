@@ -117,6 +117,29 @@ pub(super) struct Inner {
     pub(super) epoch: Instant,
 }
 
+/// One broker node's cumulative I/O counters and bucket capacities
+/// (see [`BrokerCluster::broker_io`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BrokerIoStat {
+    pub node: NodeId,
+    /// NIC bytes received by this node (produce ingress).  Kept
+    /// separate from egress so a one-directional saturation (producers
+    /// flooding a broker whose consumers stalled) reads as full
+    /// utilization of that direction's bucket.
+    pub nic_in_bytes: u64,
+    /// NIC bytes sent by this node (fetch egress).
+    pub nic_out_bytes: u64,
+    /// Disk bytes appended on this node (log writes).
+    pub disk_bytes: u64,
+    /// NIC capacity, bytes/sec per direction (`None` = unthrottled).
+    /// [`crate::cluster::Machine`] builds ingress and egress from the
+    /// same configured `nic_mbps`, so one rate covers both directions;
+    /// an asymmetric machine shape would need a second field here.
+    pub nic_rate: Option<f64>,
+    /// Disk capacity, bytes/sec (`None` = unthrottled).
+    pub disk_rate: Option<f64>,
+}
+
 /// Cloneable handle to a broker cluster.
 #[derive(Clone)]
 pub struct BrokerCluster {
@@ -163,6 +186,30 @@ impl BrokerCluster {
 
     pub fn broker_nodes(&self) -> Vec<NodeId> {
         self.inner.broker_nodes.lock().unwrap().clone()
+    }
+
+    /// Per-broker-node I/O counters and capacities — the broker-tier
+    /// saturation signals.  Every produce/fetch pays NIC and disk
+    /// token-bucket costs on the nodes involved; exporting the raw
+    /// counters (plus each bucket's configured rate) lets the autoscale
+    /// probe derive first-class per-node utilization gauges by finite
+    /// difference, so the planner can weigh broker-tier pressure
+    /// against processing-tier lag.
+    pub fn broker_io(&self) -> Vec<BrokerIoStat> {
+        self.broker_nodes()
+            .into_iter()
+            .map(|id| {
+                let node = self.inner.machine.node(id);
+                BrokerIoStat {
+                    node: id,
+                    nic_in_bytes: node.ingress.acquired_bytes(),
+                    nic_out_bytes: node.egress.acquired_bytes(),
+                    disk_bytes: node.disk.acquired_bytes(),
+                    nic_rate: node.ingress.rate(),
+                    disk_rate: node.disk.rate(),
+                }
+            })
+            .collect()
     }
 
     fn now_ns(&self) -> u64 {
@@ -710,6 +757,27 @@ mod tests {
         c.stop();
         assert!(h.join().unwrap().is_err());
         assert!(c.produce("t", 0, 0, &[vec![1]]).is_err());
+    }
+
+    #[test]
+    fn broker_io_tracks_data_plane_bytes() {
+        let c = cluster(2);
+        c.create_topic("t", 2).unwrap();
+        let io0 = c.broker_io();
+        assert_eq!(io0.len(), 2);
+        assert!(io0.iter().all(|s| s.nic_rate.is_none()), "test machine unthrottled");
+        // Partition 0 leads on broker 0: its ingress + disk move.
+        c.produce("t", 0, 2, &[vec![0u8; 100]]).unwrap();
+        let io1 = c.broker_io();
+        assert_eq!(io1[0].nic_in_bytes - io0[0].nic_in_bytes, 100);
+        assert_eq!(io1[0].nic_out_bytes, io0[0].nic_out_bytes);
+        assert_eq!(io1[0].disk_bytes - io0[0].disk_bytes, 100);
+        assert_eq!(io1[1].nic_in_bytes, io0[1].nic_in_bytes, "other broker untouched");
+        // A fetch pays leader egress on the same node.
+        c.fetch("t", 0, 0, usize::MAX, 2, Duration::from_millis(10)).unwrap();
+        let io2 = c.broker_io();
+        assert_eq!(io2[0].nic_out_bytes - io1[0].nic_out_bytes, 100);
+        assert_eq!(io2[0].nic_in_bytes, io1[0].nic_in_bytes);
     }
 
     #[test]

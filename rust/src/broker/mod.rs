@@ -30,7 +30,7 @@ pub mod producer;
 pub mod repartition;
 
 pub use cloud::{CloudBroker, CloudLatencyModel, CloudRecord};
-pub use cluster::{BrokerCluster, Partition, Topic};
+pub use cluster::{BrokerCluster, BrokerIoStat, Partition, Topic};
 pub use consumer::{Consumer, ConsumerConfig, PartitionRecord};
 pub use log::{LogConfig, PartitionLog, Record};
 pub use producer::{Partitioner, Producer, ProducerConfig};

@@ -8,6 +8,7 @@
 //! in-process.
 
 use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -25,6 +26,10 @@ pub type NodeId = usize;
 #[derive(Debug)]
 pub struct Throttle {
     rate_bytes_per_sec: Option<f64>,
+    /// Cumulative bytes ever acquired through this throttle — the raw
+    /// counter behind the broker-tier saturation gauges (finite
+    /// differences against [`Throttle::rate`] give utilization).
+    acquired: AtomicU64,
     state: Mutex<ThrottleState>,
 }
 
@@ -40,6 +45,7 @@ impl Throttle {
         let burst = rate_bytes_per_sec.map(|r| r * 0.05).unwrap_or(f64::MAX);
         Throttle {
             rate_bytes_per_sec,
+            acquired: AtomicU64::new(0),
             state: Mutex::new(ThrottleState {
                 last_refill: Instant::now(),
                 available: burst,
@@ -57,8 +63,15 @@ impl Throttle {
         self.rate_bytes_per_sec
     }
 
+    /// Cumulative bytes acquired since construction (counted whether or
+    /// not the throttle enforces a rate).
+    pub fn acquired_bytes(&self) -> u64 {
+        self.acquired.load(Ordering::Relaxed)
+    }
+
     /// Consume `bytes` tokens, sleeping until available.
     pub fn acquire(&self, bytes: usize) {
+        self.acquired.fetch_add(bytes as u64, Ordering::Relaxed);
         let Some(rate) = self.rate_bytes_per_sec else {
             return;
         };
@@ -328,6 +341,20 @@ mod tests {
         let start = Instant::now();
         t.acquire(1_000_000_000);
         assert!(start.elapsed().as_secs_f64() < 0.05);
+    }
+
+    #[test]
+    fn throttle_counts_acquired_bytes() {
+        // Counted for both unlimited and rate-limited throttles, so
+        // saturation gauges work on every machine shape.
+        let t = Throttle::unlimited();
+        assert_eq!(t.acquired_bytes(), 0);
+        t.acquire(1_000);
+        t.acquire(500);
+        assert_eq!(t.acquired_bytes(), 1_500);
+        let limited = Throttle::new(Some(10e6));
+        limited.acquire(1_000);
+        assert_eq!(limited.acquired_bytes(), 1_000);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! | headline | §6.5      | 32-node max-scale run                      |
 //! | elastic  | §1, §4.2  | closed-loop autoscaling burst @ 32 nodes   |
 
-use crate::autoscale::{PartitionElastic, ThresholdPolicy};
+use crate::autoscale::{PartitionElastic, Planner, PlannerConfig, ThresholdPolicy};
 use crate::broker::cloud::CloudBroker;
 use crate::config::{CostPreset, ExperimentConfig};
 use crate::error::Result;
@@ -201,11 +201,15 @@ pub fn fig9(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
 /// the paper's "add/remove resources at runtime" claim, now closed-loop.
 ///
 /// Under the paper-era preset the threshold policy replays the §6.4
-/// regime.  Under the calibrated preset (Rust-speed processors, which
-/// the paper-era rates never saturate) the calibrated-scale scenario
-/// runs instead, with the partition-elastic policy: the burst demands
-/// more executor cores than the topic's 48 partitions can feed, so the
-/// controller repartitions mid-burst and the knee moves with the fleet.
+/// regime through the pre-planner decision path.  Under the calibrated
+/// preset (Rust-speed processors, which the paper-era rates never
+/// saturate) the calibrated-scale scenario runs *through the planner*
+/// instead, with the partition-elastic policy: the burst demands more
+/// executor cores than the topic's 48 partitions can feed, so the
+/// planner turns the mid-burst repartition intents into co-scheduled
+/// plans — broker-extension steps land whenever the new partition
+/// count would oversubscribe the 12-partition per-broker-node I/O
+/// budget, and the `broker_nodes` column tracks the tier growing.
 pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
     let rec = Recorder::new();
     let machine = SimMachine {
@@ -247,7 +251,14 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
                 .with_cooldown_secs(2.0 * window)
                 .with_step(8);
             let mut policy = PartitionElastic::new(inner, executors_per_node);
-            sim.run(&sc, &mut policy)
+            let planner = Planner::new(
+                PlannerConfig::default()
+                    .with_max_step(8)
+                    .with_drain_horizon_secs(6.0 * window)
+                    .with_partitions_per_broker_node(sc.partitions_per_node)
+                    .with_max_broker_step(2),
+            );
+            sim.run_planned(&sc, &mut policy, &planner)
         }
     };
     for r in &res.rows {
@@ -257,6 +268,7 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
                 .push("input_msgs_per_s", format!("{:.1}", r.input_rate))
                 .push("nodes", r.nodes)
                 .push("partitions", r.partitions)
+                .push("broker_nodes", r.broker_nodes)
                 .push("lag_msgs", format!("{:.0}", r.lag))
                 .push("decision", r.decision)
                 .push("behind", u8::from(r.behind)),
@@ -432,7 +444,9 @@ mod tests {
         let rec = elasticity(&config, &costs);
         let csv = rec.to_csv();
         assert_eq!(csv.lines().count(), 1 + 60, "one row per window");
-        assert!(csv.starts_with("t_s,input_msgs_per_s,nodes,partitions,lag_msgs,decision,behind"));
+        assert!(csv.starts_with(
+            "t_s,input_msgs_per_s,nodes,partitions,broker_nodes,lag_msgs,decision,behind"
+        ));
         // The burst must be visible both in the input and the footprint.
         let nodes: Vec<usize> = csv
             .lines()
@@ -469,6 +483,26 @@ mod tests {
             .collect();
         assert!(*nodes.iter().max().unwrap() > 24);
         assert_eq!(*nodes.last().unwrap(), 2, "footprint returns to the floor");
+        // The co-scheduled plan is visible on the timeline: when the
+        // grown partition count oversubscribes the 12-partition
+        // per-broker-node I/O budget, broker-extension steps land and
+        // the broker_nodes column moves with them.
+        let brokers: Vec<usize> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(4).unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(brokers[0], 4);
+        assert!(
+            brokers.iter().any(|b| *b > 4),
+            "broker tier never co-scheduled: {brokers:?}"
+        );
+        for (p, b) in partitions.iter().zip(&brokers) {
+            assert!(
+                *p <= *b * 12,
+                "window serves {p} partitions on {b} brokers (budget 12/node)"
+            );
+        }
     }
 
     #[test]

@@ -73,7 +73,8 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::autoscale::{
         Autoscaler, AutoscalerConfig, BinPackingPolicy, LagSlopePolicy, PartitionElastic,
-        PolicyDecision, ScalingPolicy, SignalSnapshot, ThresholdPolicy,
+        Planner, PlannerConfig, PolicyDecision, ScalingIntent, ScalingPlan, ScalingPolicy,
+        SignalSnapshot, ThresholdPolicy,
     };
     pub use crate::broker::{
         BrokerCluster, Consumer, ConsumerConfig, Producer, ProducerConfig, Record,

@@ -58,6 +58,35 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     out
 }
 
+/// Reject flags the command does not read.  Silently ignoring an
+/// unknown `--flag` turns typos (`--perset calibrated`) into runs with
+/// default settings that *look* like the requested experiment — a usage
+/// error is the honest answer.
+fn check_flags(cmd: &str, flags: &HashMap<String, String>, allowed: &[&str]) -> Result<()> {
+    let mut unknown: Vec<&str> = flags
+        .keys()
+        .map(String::as_str)
+        .filter(|k| !allowed.contains(k))
+        .collect();
+    if unknown.is_empty() {
+        return Ok(());
+    }
+    unknown.sort_unstable();
+    let expected = if allowed.is_empty() {
+        "the command takes no flags".to_string()
+    } else {
+        format!(
+            "expected: {}",
+            allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", ")
+        )
+    };
+    Err(Error::Config(format!(
+        "unknown flag{} for '{cmd}': {} ({expected})\n{USAGE}",
+        if unknown.len() == 1 { "" } else { "s" },
+        unknown.iter().map(|u| format!("--{u}")).collect::<Vec<_>>().join(", "),
+    )))
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&args) {
@@ -73,11 +102,26 @@ fn run(args: &[String]) -> Result<()> {
     };
     let flags = parse_flags(&args[1..]);
     match cmd.as_str() {
-        "start" => cmd_start(&flags),
-        "demo" => cmd_demo(&flags),
-        "exp" => cmd_exp(args.get(1).map(|s| s.as_str()).unwrap_or(""), &flags),
-        "calibrate" => cmd_calibrate(&flags),
-        "artifacts" => cmd_artifacts(),
+        "start" => {
+            check_flags("start", &flags, &["framework", "nodes", "machine-nodes", "extend"])?;
+            cmd_start(&flags)
+        }
+        "demo" => {
+            check_flags("demo", &flags, &["processor", "messages"])?;
+            cmd_demo(&flags)
+        }
+        "exp" => {
+            check_flags("exp", &flags, &["preset", "out", "config"])?;
+            cmd_exp(args.get(1).map(|s| s.as_str()).unwrap_or(""), &flags)
+        }
+        "calibrate" => {
+            check_flags("calibrate", &flags, &["reps"])?;
+            cmd_calibrate(&flags)
+        }
+        "artifacts" => {
+            check_flags("artifacts", &flags, &[])?;
+            cmd_artifacts()
+        }
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -306,4 +350,49 @@ fn cmd_artifacts() -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_reads_pairs_and_bools() {
+        let f = parse_flags(&args(&["elastic", "--preset", "calibrated", "--quick"]));
+        assert_eq!(f.get("preset").unwrap(), "calibrated");
+        assert_eq!(f.get("quick").unwrap(), "true");
+        assert_eq!(f.len(), 2, "positional args are not flags");
+    }
+
+    #[test]
+    fn check_flags_accepts_known_and_rejects_unknown() {
+        let f = parse_flags(&args(&["--preset", "calibrated", "--out", "dir"]));
+        assert!(check_flags("exp", &f, &["preset", "out", "config"]).is_ok());
+        // A typo'd flag is a usage error, not a silently-defaulted run.
+        let f = parse_flags(&args(&["--perset", "calibrated"]));
+        let err = check_flags("exp", &f, &["preset", "out", "config"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--perset"), "{msg}");
+        assert!(msg.contains("--preset"), "should list expected flags: {msg}");
+        assert!(msg.contains("USAGE"), "should print usage: {msg}");
+    }
+
+    #[test]
+    fn check_flags_rejects_any_flag_for_bare_commands() {
+        let f = parse_flags(&args(&["--verbose"]));
+        let err = check_flags("artifacts", &f, &[]).unwrap_err();
+        assert!(err.to_string().contains("takes no flags"));
+    }
+
+    #[test]
+    fn run_rejects_unknown_exp_flag_end_to_end() {
+        let err = run(&args(&["exp", "elastic", "--perset", "calibrated"])).unwrap_err();
+        assert!(err.to_string().contains("unknown flag"), "{err}");
+        let err = run(&args(&["start", "--nodse", "4"])).unwrap_err();
+        assert!(err.to_string().contains("--nodse"), "{err}");
+    }
 }

@@ -170,13 +170,24 @@ impl Histogram {
 /// Direction of an elastic-scaling action.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScalingAction {
-    /// Resources added (pilot extension).
+    /// Processing resources added (pilot extension).
     Up,
-    /// Resources released (extension stopped / pilot shrunk).
+    /// Processing resources released (extension stopped / pilot shrunk).
     Down,
     /// Topic repartitioned so the one-task-per-partition cap moves with
     /// the fleet (usually immediately followed by an `Up` extension).
     Repartition,
+    /// Broker-tier nodes added — a planner step co-scheduled when a
+    /// repartition would oversubscribe per-node NIC/disk budgets, or
+    /// when broker saturation gauges cross their threshold.
+    BrokerUp,
+    /// Broker-tier extension released (the processing fleet returned
+    /// to its base, so the co-scheduled broker capacity follows it
+    /// down instead of accumulating across burst cycles).
+    BrokerDown,
+    /// The planner declined a scale-up whose modeled cost could not pay
+    /// for itself within the drain horizon (cost-aware deferral).
+    Defer,
 }
 
 impl std::fmt::Display for ScalingAction {
@@ -185,6 +196,9 @@ impl std::fmt::Display for ScalingAction {
             ScalingAction::Up => write!(f, "up"),
             ScalingAction::Down => write!(f, "down"),
             ScalingAction::Repartition => write!(f, "repartition"),
+            ScalingAction::BrokerUp => write!(f, "broker-up"),
+            ScalingAction::BrokerDown => write!(f, "broker-down"),
+            ScalingAction::Defer => write!(f, "defer"),
         }
     }
 }
@@ -212,6 +226,9 @@ pub struct ScalingEvent {
     /// Detection-to-actuated latency: for scale-ups, the time from the
     /// triggering sample to the extension pilot reaching Running.
     pub reaction_secs: f64,
+    /// Modeled cost of this plan step (lead seconds until the bought
+    /// capacity is usable; 0 for shrinks and legacy events).
+    pub cost_secs: f64,
 }
 
 /// Thread-safe, append-only record of scaling events (share via `Arc`).
@@ -266,7 +283,8 @@ impl ScalingTimeline {
                     .push("lag_msgs", e.lag)
                     .push("partitions", e.partitions)
                     .push("policy", &e.policy)
-                    .push("reaction_s", format!("{:.4}", e.reaction_secs)),
+                    .push("reaction_s", format!("{:.4}", e.reaction_secs))
+                    .push("cost_s", format!("{:.1}", e.cost_secs)),
             );
         }
         rec
@@ -463,6 +481,7 @@ mod tests {
             partitions: 4,
             policy: "threshold".into(),
             reaction_secs: 0.05,
+            cost_secs: 16.0,
         });
         tl.record(ScalingEvent {
             at_secs: 4.0,
@@ -473,6 +492,7 @@ mod tests {
             partitions: 4,
             policy: "threshold".into(),
             reaction_secs: 0.0,
+            cost_secs: 0.0,
         });
         tl.record(ScalingEvent {
             at_secs: 5.0,
@@ -483,6 +503,7 @@ mod tests {
             partitions: 8,
             policy: "partition-elastic".into(),
             reaction_secs: 0.0,
+            cost_secs: 0.0,
         });
         assert_eq!(tl.len(), 3);
         assert_eq!(tl.count(ScalingAction::Up), 1);

@@ -76,6 +76,12 @@ impl Pilot {
         &self.description
     }
 
+    /// The framework this pilot manages (extensions report the parent's
+    /// framework, which is the same by construction).
+    pub fn framework(&self) -> crate::pilot::FrameworkKind {
+        self.description.framework
+    }
+
     pub fn state(&self) -> PilotState {
         *self.state.lock().unwrap()
     }
@@ -305,9 +311,13 @@ impl PilotComputeService {
                     })?;
                     let t0 = std::time::Instant::now();
                     plugin.extend(&env, &env.nodes)?;
-                    t0.elapsed().as_secs_f64().max(
-                        plugin.bootstrap_model().per_node_secs * env.nodes.len() as f64,
-                    )
+                    // Floor at the modeled per-framework extension cost
+                    // (shared with the autoscale planner, so plan
+                    // estimates and recorded bootstraps agree).
+                    t0.elapsed().as_secs_f64().max(crate::plugins::extension_cost_secs(
+                        description.framework,
+                        env.nodes.len(),
+                    ))
                 }
                 // Fresh framework bootstrap.
                 None => {

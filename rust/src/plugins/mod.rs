@@ -82,6 +82,27 @@ pub fn bootstrap_model_for(kind: FrameworkKind) -> BootstrapModel {
     }
 }
 
+/// Modeled cost of extending a *running* framework by `nodes` nodes —
+/// the per-framework scaling cost the autoscale planner weighs against
+/// expected drain benefit (Kafka broker join + partition rebalance vs
+/// Spark executor attach vs Dask worker join).
+///
+/// Unlike a fresh bootstrap there is no head-component cost: the
+/// extension pays the per-node launches (in `launch_parallelism`-wide
+/// waves) plus the settle phase (Kafka's rebalance, Spark's
+/// block-manager registration, Dask's scheduler handshake).  The same
+/// number floors the recorded extension bootstrap time in
+/// [`crate::pilot::PilotComputeService`], so planner estimates and the
+/// timeline's reaction latencies agree.
+pub fn extension_cost_secs(kind: FrameworkKind, nodes: usize) -> f64 {
+    if nodes == 0 {
+        return 0.0;
+    }
+    let m = bootstrap_model_for(kind);
+    let waves = nodes.div_ceil(m.launch_parallelism.max(1));
+    waves as f64 * m.per_node_secs + m.settle_secs
+}
+
 /// Shared helper: perform the modeled bootstrap wait.
 pub(crate) fn do_wait(model: &BootstrapModel, nodes: usize, time_scale: f64) -> f64 {
     let secs = model.init_secs(nodes);
@@ -117,5 +138,80 @@ mod tests {
             let m = bootstrap_model_for(kind);
             assert!(m.init_secs(32) > m.init_secs(1), "{kind:?}");
         }
+    }
+
+    /// Pin the per-framework cost tables exactly: the autoscale planner
+    /// and the Fig 6 harness both read these constants, so calibration
+    /// changes must be deliberate (this test is the change review).
+    #[test]
+    fn bootstrap_cost_tables_are_pinned() {
+        let expect = [
+            (FrameworkKind::Kafka, (20.0, 8.0, 2, 15.0)),
+            (FrameworkKind::Spark, (15.0, 6.0, 2, 10.0)),
+            (FrameworkKind::Dask, (5.0, 3.0, 2, 3.0)),
+            (FrameworkKind::Flink, (12.0, 5.0, 2, 8.0)),
+        ];
+        for (kind, (head, per_node, par, settle)) in expect {
+            let m = bootstrap_model_for(kind);
+            assert_eq!(m.head_secs, head, "{kind:?} head");
+            assert_eq!(m.per_node_secs, per_node, "{kind:?} per-node");
+            assert_eq!(m.launch_parallelism, par, "{kind:?} parallelism");
+            assert_eq!(m.settle_secs, settle, "{kind:?} settle");
+        }
+    }
+
+    /// Extension costs: no head cost, per-node waves + settle, with the
+    /// rebalance-dominated ordering the planner relies on (Kafka most
+    /// expensive to extend, Dask cheapest).
+    #[test]
+    fn extension_costs_pinned_and_ordered() {
+        assert_eq!(extension_cost_secs(FrameworkKind::Kafka, 0), 0.0);
+        // One wave of <= launch_parallelism nodes costs the same.
+        assert_eq!(extension_cost_secs(FrameworkKind::Kafka, 1), 8.0 + 15.0);
+        assert_eq!(extension_cost_secs(FrameworkKind::Kafka, 2), 8.0 + 15.0);
+        assert_eq!(extension_cost_secs(FrameworkKind::Kafka, 3), 16.0 + 15.0);
+        assert_eq!(extension_cost_secs(FrameworkKind::Spark, 1), 6.0 + 10.0);
+        assert_eq!(extension_cost_secs(FrameworkKind::Dask, 1), 3.0 + 3.0);
+        assert_eq!(extension_cost_secs(FrameworkKind::Flink, 1), 5.0 + 8.0);
+        for n in [1usize, 2, 4, 8] {
+            let kafka = extension_cost_secs(FrameworkKind::Kafka, n);
+            let spark = extension_cost_secs(FrameworkKind::Spark, n);
+            let flink = extension_cost_secs(FrameworkKind::Flink, n);
+            let dask = extension_cost_secs(FrameworkKind::Dask, n);
+            assert!(kafka > spark && spark > flink && flink > dask, "n={n}");
+        }
+        // Extension never exceeds a fresh bootstrap of the same size.
+        for kind in [
+            FrameworkKind::Kafka,
+            FrameworkKind::Spark,
+            FrameworkKind::Dask,
+            FrameworkKind::Flink,
+        ] {
+            for n in [1usize, 2, 4, 8, 16] {
+                assert!(
+                    extension_cost_secs(kind, n) < bootstrap_model_for(kind).init_secs(n),
+                    "{kind:?} n={n}"
+                );
+            }
+        }
+    }
+
+    /// `do_wait` returns the model's modeled seconds regardless of the
+    /// time scale, and only the sleep scales (time_scale 0 = no sleep).
+    #[test]
+    fn do_wait_scaling_is_pinned() {
+        let m = bootstrap_model_for(FrameworkKind::Dask);
+        let t0 = std::time::Instant::now();
+        let modeled = do_wait(&m, 4, 0.0);
+        assert!(t0.elapsed().as_secs_f64() < 0.05, "time_scale 0 must not sleep");
+        assert_eq!(modeled, m.init_secs(4));
+        // A tiny non-zero scale sleeps for secs * scale.
+        let scale = 1e-3;
+        let t0 = std::time::Instant::now();
+        let modeled = do_wait(&m, 4, scale);
+        let slept = t0.elapsed().as_secs_f64();
+        assert_eq!(modeled, m.init_secs(4));
+        assert!(slept >= modeled * scale, "slept {slept}s < {}s", modeled * scale);
+        assert!(slept < modeled * scale + 0.25, "slept {slept}s way past the model");
     }
 }

@@ -13,8 +13,16 @@
 //! Everything is pure arithmetic over virtual time — two runs of the
 //! same scenario produce byte-identical results, so policy behaviour is
 //! unit-testable at 32-node scale.
+//!
+//! Two entry points: [`ElasticSim::run`] exercises a bare policy (the
+//! pre-planner decision path, kept for controller-free studies), and
+//! [`ElasticSim::run_planned`] routes every intent through a
+//! [`Planner`], executing the costed plans with per-framework extension
+//! delays and a *dynamic broker tier* — `ExtendBroker` steps grow the
+//! broker node count mid-run, so repartition-aware broker scale-up is
+//! testable deterministically.
 
-use crate::autoscale::{PolicyDecision, ScalingPolicy, SignalSnapshot};
+use crate::autoscale::{PlanStep, Planner, ScalingIntent, ScalingPolicy, SignalSnapshot};
 use crate::util::RateSchedule;
 
 use super::cost::CostModel;
@@ -92,6 +100,9 @@ pub struct ElasticWindow {
     /// Topic partition count during this window (the task-parallelism
     /// cap; moves when the policy repartitions).
     pub partitions: usize,
+    /// Broker-tier nodes during this window (moves when a plan
+    /// co-schedules a broker extension).
+    pub broker_nodes: usize,
     /// Messages processed this window.
     pub processed: f64,
     /// Backlog (lag) at window end, messages.
@@ -111,6 +122,16 @@ pub struct ElasticSimResult {
     pub scale_downs: usize,
     /// Repartition decisions actuated.
     pub repartitions: usize,
+    /// Broker-extension plan steps actuated.
+    pub broker_ups: usize,
+    /// Broker nodes released once the fleet returned to its floor (the
+    /// controller's release rule, mirrored: only capacity the partition
+    /// count no longer needs within the per-node budget).
+    pub broker_downs: usize,
+    /// Largest broker-tier node count reached.
+    pub peak_broker_nodes: usize,
+    /// Scale-up intents the planner deferred on cost grounds.
+    pub deferrals: usize,
     /// Largest partition count reached.
     pub peak_partitions: usize,
     pub final_lag: f64,
@@ -131,13 +152,40 @@ impl ElasticSim {
         ElasticSim { machine, costs }
     }
 
-    /// Run `policy` through the scenario; deterministic.
+    /// Run `policy` through the scenario with its intents actuated
+    /// directly (the pre-planner decision path); deterministic.
     pub fn run(&self, sc: &ElasticScenario, policy: &mut dyn ScalingPolicy) -> ElasticSimResult {
+        self.run_inner(sc, policy, None)
+    }
+
+    /// Run `policy` with every intent routed through `planner`:
+    /// cost-aware deferral/resizing, per-framework extension lead times
+    /// added on top of the scenario's batch-queue delay, and a dynamic
+    /// broker tier (`ExtendBroker` plan steps land after the broker
+    /// framework's modeled extension cost); deterministic.
+    pub fn run_planned(
+        &self,
+        sc: &ElasticScenario,
+        policy: &mut dyn ScalingPolicy,
+        planner: &Planner,
+    ) -> ElasticSimResult {
+        self.run_inner(sc, policy, Some(planner))
+    }
+
+    fn run_inner(
+        &self,
+        sc: &ElasticScenario,
+        policy: &mut dyn ScalingPolicy,
+        planner: Option<&Planner>,
+    ) -> ElasticSimResult {
         let mut n_partitions = (sc.broker_nodes * sc.partitions_per_node).max(1);
         let proc_cost = self.costs.proc_cost(&sc.processor);
         let mut nodes = sc.initial_nodes.clamp(sc.min_nodes, sc.max_nodes);
+        let mut broker_nodes = sc.broker_nodes.max(1);
         // Scale-ups in flight: (ready_at_secs, nodes).
         let mut pending: Vec<(f64, usize)> = Vec::new();
+        // Broker extensions in flight: (ready_at_secs, nodes).
+        let mut pending_broker: Vec<(f64, usize)> = Vec::new();
         // Repartition in flight: (ready_at_secs, new_partition_count).
         let mut pending_repartition: Option<(f64, usize)> = None;
         let mut backlog = vec![0.0f64; n_partitions];
@@ -148,6 +196,10 @@ impl ElasticSim {
         let mut scale_ups = 0;
         let mut scale_downs = 0;
         let mut repartitions = 0;
+        let mut broker_ups = 0;
+        let mut broker_downs = 0;
+        let mut peak_broker_nodes = broker_nodes;
+        let mut deferrals = 0;
         let mut peak_partitions = n_partitions;
         let mut behind_windows = 0;
         let mut node_secs = 0.0;
@@ -167,6 +219,36 @@ impl ElasticSim {
             nodes = (nodes + arrived).min(sc.max_nodes);
             peak_nodes = peak_nodes.max(nodes);
             node_secs += nodes as f64 * sc.window_secs;
+            let mut broker_arrived = 0;
+            pending_broker.retain(|(ready_at, n)| {
+                if *ready_at <= t {
+                    broker_arrived += n;
+                    false
+                } else {
+                    true
+                }
+            });
+            broker_nodes += broker_arrived;
+            peak_broker_nodes = peak_broker_nodes.max(broker_nodes);
+            // Mirror the controller's broker-release rule: once the
+            // fleet is back at its floor with nothing in flight,
+            // saturation-driven broker extensions are released — but
+            // only down to what the (persistent) partition count still
+            // needs within the per-node I/O budget.
+            if let Some(planner) = planner {
+                if nodes <= sc.min_nodes
+                    && pending.is_empty()
+                    && pending_broker.is_empty()
+                    && pending_repartition.is_none()
+                {
+                    let budget = planner.config().partitions_per_broker_node.max(1);
+                    let needed = n_partitions.div_ceil(budget).max(sc.broker_nodes.max(1));
+                    if broker_nodes > needed {
+                        broker_downs += broker_nodes - needed;
+                        broker_nodes = needed;
+                    }
+                }
+            }
 
             // A decided repartition takes effect once its delay (the
             // old epoch's drain) elapses: grow appends empty partitions;
@@ -245,6 +327,14 @@ impl ElasticSim {
                 min_nodes: sc.min_nodes,
                 max_nodes: sc.max_nodes,
                 service_rate_per_node: per_node_rate,
+                // A broker extension on its way counts as present so
+                // the planner doesn't re-request it every window.
+                broker_nodes: broker_nodes + pending_broker.iter().map(|(_, n)| n).sum::<usize>(),
+                // The elastic model tracks messages, not bytes; broker
+                // pressure enters through the planner's per-node
+                // partition budgets rather than live byte gauges.
+                broker_nic_util: 0.0,
+                broker_disk_util: 0.0,
             };
             prev_lag = lag;
 
@@ -252,39 +342,96 @@ impl ElasticSim {
             // scale-down decided below takes effect afterwards.
             let nodes_used = nodes;
             let partitions_used = n_partitions;
+            let broker_nodes_used = broker_nodes;
             let mut decision = 0i64;
-            let mut queue_scale_up = |n: usize, pending: &mut Vec<(f64, usize)>| -> i64 {
-                let headroom = sc.max_nodes - (nodes + pending_nodes).min(sc.max_nodes);
-                let n = n.min(headroom);
-                if n > 0 {
-                    pending.push((t + sc.window_secs + sc.provision_delay_secs, n));
-                    scale_ups += 1;
-                }
-                n as i64
-            };
-            match policy.decide(&snapshot) {
-                PolicyDecision::Hold => {}
-                PolicyDecision::ScaleUp(n) => {
-                    decision = queue_scale_up(n, &mut pending);
-                }
-                PolicyDecision::Repartition { partitions, scale_up } => {
-                    let target = partitions.min(sc.max_partitions).max(1);
-                    if pending_repartition.is_none() && target != n_partitions {
-                        pending_repartition =
-                            Some((t + sc.window_secs + sc.repartition_delay_secs, target));
-                        repartitions += 1;
+            let headroom = sc.max_nodes - (nodes + pending_nodes).min(sc.max_nodes);
+            let provision_at = t + sc.window_secs + sc.provision_delay_secs;
+            let intent = policy.decide(&snapshot);
+            match planner {
+                // Plan-aware path: cost the intent, then execute the
+                // plan's steps with per-framework lead times.
+                Some(planner) => {
+                    let plan = planner.plan(intent, &snapshot);
+                    if plan.deferred.is_some() {
+                        deferrals += 1;
                     }
-                    decision = queue_scale_up(scale_up, &mut pending);
-                }
-                PolicyDecision::ScaleDown(n) => {
-                    // Shrinking is immediate (stop an extension pilot).
-                    let n = n.min(nodes.saturating_sub(sc.min_nodes));
-                    if n > 0 {
-                        nodes -= n;
-                        scale_downs += 1;
-                        decision = -(n as i64);
+                    for step in &plan.steps {
+                        match *step {
+                            PlanStep::ExtendBroker { nodes: n, cost } => {
+                                // Broker joins skip the batch queue
+                                // (the broker pilot already holds its
+                                // allocation request path); they pay
+                                // the framework's extension cost.
+                                pending_broker.push((t + sc.window_secs + cost.lead_secs, n));
+                                broker_ups += 1;
+                            }
+                            PlanStep::Repartition { partitions, .. } => {
+                                let target = partitions.min(sc.max_partitions).max(1);
+                                if pending_repartition.is_none() && target != n_partitions {
+                                    pending_repartition = Some((
+                                        t + sc.window_secs + sc.repartition_delay_secs,
+                                        target,
+                                    ));
+                                    repartitions += 1;
+                                }
+                            }
+                            PlanStep::ExtendProcessing { nodes: n, cost } => {
+                                // Batch-queue delay plus the planner's
+                                // per-framework extension lead.
+                                let n = n.min(headroom);
+                                if n > 0 {
+                                    pending.push((provision_at + cost.lead_secs, n));
+                                    scale_ups += 1;
+                                    decision = n as i64;
+                                }
+                            }
+                            PlanStep::ShrinkProcessing { nodes: n } => {
+                                let n = n.min(nodes.saturating_sub(sc.min_nodes));
+                                if n > 0 {
+                                    nodes -= n;
+                                    scale_downs += 1;
+                                    decision = -(n as i64);
+                                }
+                            }
+                        }
                     }
                 }
+                // Legacy path: actuate the raw intent with the
+                // scenario's flat provisioning delay.
+                None => match intent {
+                    ScalingIntent::Hold => {}
+                    ScalingIntent::ScaleUp(n) => {
+                        let n = n.min(headroom);
+                        if n > 0 {
+                            pending.push((provision_at, n));
+                            scale_ups += 1;
+                            decision = n as i64;
+                        }
+                    }
+                    ScalingIntent::Repartition { partitions, scale_up } => {
+                        let target = partitions.min(sc.max_partitions).max(1);
+                        if pending_repartition.is_none() && target != n_partitions {
+                            pending_repartition =
+                                Some((t + sc.window_secs + sc.repartition_delay_secs, target));
+                            repartitions += 1;
+                        }
+                        let n = scale_up.min(headroom);
+                        if n > 0 {
+                            pending.push((provision_at, n));
+                            scale_ups += 1;
+                            decision = n as i64;
+                        }
+                    }
+                    ScalingIntent::ScaleDown(n) => {
+                        // Shrinking is immediate (stop an extension pilot).
+                        let n = n.min(nodes.saturating_sub(sc.min_nodes));
+                        if n > 0 {
+                            nodes -= n;
+                            scale_downs += 1;
+                            decision = -(n as i64);
+                        }
+                    }
+                },
             }
 
             rows.push(ElasticWindow {
@@ -292,6 +439,7 @@ impl ElasticSim {
                 input_rate,
                 nodes: nodes_used,
                 partitions: partitions_used,
+                broker_nodes: broker_nodes_used,
                 processed,
                 lag,
                 decision,
@@ -304,6 +452,10 @@ impl ElasticSim {
             scale_ups,
             scale_downs,
             repartitions,
+            broker_ups,
+            broker_downs,
+            peak_broker_nodes,
+            deferrals,
             peak_partitions,
             final_lag: prev_lag,
             behind_windows,
@@ -513,6 +665,119 @@ mod tests {
             "repartition before the burst started"
         );
         assert!(rows_partitions.iter().all(|p| *p >= 48 && *p <= 128));
+    }
+
+    /// The tentpole scenario: routed through the planner, the
+    /// calibrated burst's repartitions oversubscribe the 12-partition
+    /// per-broker-node I/O budget, so the plans co-schedule broker
+    /// extensions — and the partition count never outruns the budget of
+    /// the (extended) broker tier.
+    #[test]
+    fn planned_calibrated_burst_coschedules_broker_extension() {
+        use crate::autoscale::{PartitionElastic, Planner, PlannerConfig};
+
+        let sim = ElasticSim::new(
+            SimMachine {
+                executors_per_node: 2,
+                ..Default::default()
+            },
+            CostModel::calibrated_default(),
+        );
+        let sc = ElasticScenario::calibrated_burst(60.0);
+        let planner = Planner::new(
+            PlannerConfig::default()
+                .with_max_step(8)
+                .with_drain_horizon_secs(6.0 * sc.window_secs)
+                .with_partitions_per_broker_node(sc.partitions_per_node)
+                .with_max_broker_step(2),
+        );
+        let mut policy = PartitionElastic::new(calibrated_threshold(), 2);
+        let res = sim.run_planned(&sc, &mut policy, &planner);
+
+        assert!(res.repartitions >= 1, "no repartition fired");
+        assert!(res.peak_partitions > 48, "cap never moved");
+        assert!(
+            res.broker_ups >= 1,
+            "repartition past the 48-partition budget must bring brokers"
+        );
+        assert!(res.peak_broker_nodes > sc.broker_nodes, "broker tier never grew");
+        assert!(
+            res.peak_partitions <= res.peak_broker_nodes * sc.partitions_per_node,
+            "partitions {} oversubscribe {} brokers x {} budget",
+            res.peak_partitions,
+            res.peak_broker_nodes,
+            sc.partitions_per_node
+        );
+        // The knee still moves and the burst still drains to the floor.
+        assert!(res.peak_nodes > 24, "fleet stuck at the knee: {}", res.peak_nodes);
+        assert!(res.final_lag < 2_000.0, "final lag {}", res.final_lag);
+        assert_eq!(res.rows.last().unwrap().nodes, sc.min_nodes);
+        // Broker growth is visible on the per-window rows.
+        assert_eq!(res.rows[0].broker_nodes, sc.broker_nodes);
+        assert!(res.rows.iter().any(|r| r.broker_nodes > sc.broker_nodes));
+    }
+
+    #[test]
+    fn planned_runs_are_deterministic() {
+        use crate::autoscale::{PartitionElastic, Planner, PlannerConfig};
+
+        let sim = ElasticSim::new(
+            SimMachine {
+                executors_per_node: 2,
+                ..Default::default()
+            },
+            CostModel::calibrated_default(),
+        );
+        let sc = ElasticScenario::calibrated_burst(60.0);
+        let run = || {
+            let planner = Planner::new(
+                PlannerConfig::default()
+                    .with_max_step(8)
+                    .with_drain_horizon_secs(6.0 * sc.window_secs)
+                    .with_partitions_per_broker_node(sc.partitions_per_node)
+                    .with_max_broker_step(2),
+            );
+            let mut policy = PartitionElastic::new(calibrated_threshold(), 2);
+            let res = sim.run_planned(&sc, &mut policy, &planner);
+            (
+                res.rows
+                    .iter()
+                    .map(|r| (r.nodes, r.partitions, r.broker_nodes, r.decision, r.lag.to_bits()))
+                    .collect::<Vec<_>>(),
+                res.broker_ups,
+                res.repartitions,
+                res.deferrals,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// Cost-aware deferral in virtual time: a drain horizon shorter
+    /// than the framework's extension lead means no scale-up can ever
+    /// pay for itself — the planner defers every one and the fleet
+    /// stays at the floor (eating the lag instead of the cost).
+    #[test]
+    fn short_horizon_defers_every_scale_up() {
+        use crate::autoscale::{Planner, PlannerConfig};
+
+        let sim = ElasticSim::new(
+            SimMachine {
+                executors_per_node: 2,
+                ..Default::default()
+            },
+            CostModel::calibrated_default(),
+        );
+        let sc = ElasticScenario::calibrated_burst(60.0);
+        // Spark extension lead is >= 16 s; a 10 s horizon can never pay.
+        let planner = Planner::new(
+            PlannerConfig::default().with_max_step(8).with_drain_horizon_secs(10.0),
+        );
+        let mut policy = calibrated_threshold();
+        let res = sim.run_planned(&sc, &mut policy, &planner);
+        assert_eq!(res.scale_ups, 0, "a deferred scale-up was actuated");
+        assert!(res.deferrals >= 1, "nothing was deferred");
+        assert_eq!(res.peak_nodes, sc.initial_nodes);
+        assert!(res.final_lag > 0.0, "the burst cannot drain at the floor");
     }
 
     #[test]

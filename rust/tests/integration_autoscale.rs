@@ -7,7 +7,9 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use pilot_streaming::autoscale::{Autoscaler, AutoscalerConfig, PartitionElastic, ThresholdPolicy};
+use pilot_streaming::autoscale::{
+    Autoscaler, AutoscalerConfig, PartitionElastic, PlannerConfig, ThresholdPolicy,
+};
 use pilot_streaming::broker::Record;
 use pilot_streaming::cluster::Machine;
 use pilot_streaming::engine::{StreamingJobConfig, TaskContext, TaskEngine};
@@ -218,9 +220,15 @@ fn repartition_moves_the_one_task_per_partition_knee() {
         "controller never repartitioned; lag={:?}",
         cluster.group_lag("knee", "knee")
     );
-    assert_eq!(cluster.partition_count("knee").unwrap(), 4);
+    // The planner may right-size the extension below the policy's full
+    // 3-node step once the service rate is calibrated (a smaller drain
+    // benefit already covers the projected backlog) — and it shrinks
+    // the partition ask with the fleet — so expect the cap to have
+    // moved past 1 rather than pinning the full 4-partition fan-out.
+    let parts = cluster.partition_count("knee").unwrap();
+    assert!((2..=4).contains(&parts), "cap never moved: {parts} partitions");
     assert!(
-        wait_until(|| engine.executor_count() == 4, 10.0),
+        wait_until(|| engine.executor_count() >= 2, 10.0),
         "extension executors never attached"
     );
 
@@ -244,13 +252,18 @@ fn repartition_moves_the_one_task_per_partition_knee() {
         "backlog never drained after the repartition"
     );
 
-    // Timeline sanity: repartition precedes (or accompanies) the up.
+    // Timeline sanity: repartition precedes (or accompanies) the up,
+    // and its recorded target matches the (possibly right-sized) ask.
     let events = timeline.events();
     let rp = events
         .iter()
         .position(|e| e.action == ScalingAction::Repartition)
         .unwrap();
-    assert_eq!(events[rp].partitions, 4);
+    assert!(
+        (2..=4).contains(&events[rp].partitions),
+        "repartition target {} outside the right-sized range",
+        events[rp].partitions
+    );
     assert!(events.iter().any(|e| e.action == ScalingAction::Up));
 
     for p in scaler.stop() {
@@ -259,6 +272,207 @@ fn repartition_moves_the_one_task_per_partition_knee() {
     job.stop();
     service.stop_pilot(&spark).unwrap();
     service.stop_pilot(&kafka).unwrap();
+}
+
+/// Cost-deferred scale-up: with a drain horizon shorter than the Spark
+/// extension lead (~16 s modeled), the planner must refuse to extend —
+/// the scale-up can never pay for itself before the horizon closes.
+/// The deferral is a first-class timeline event; no pilot is extended.
+#[test]
+fn cost_deferred_scale_up_is_recorded_not_actuated() {
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(6)));
+    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1)).unwrap();
+    let (spark, engine) = service
+        .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+        .unwrap();
+    cluster.create_topic("defer", 2).unwrap();
+
+    // A real consumer must run first: the cost gate only engages once
+    // the probe has calibrated a per-node service rate from observed
+    // consumption (an uncalibrated loop passes intents through).
+    let processor = |_: &TaskContext, recs: &[Record]| {
+        std::thread::sleep(Duration::from_millis(5) * recs.len() as u32);
+        Ok(())
+    };
+    let mut jc = StreamingJobConfig::new("defer", Duration::from_millis(50));
+    jc.group = "defer".into();
+    let job = engine
+        .start_job(cluster.clone(), jc, Arc::new(processor))
+        .unwrap();
+
+    let scaler = Autoscaler::spawn(
+        service.clone(),
+        spark.clone(),
+        cluster.clone(),
+        Some(job.stats().clone()),
+        Box::new(
+            ThresholdPolicy::new(15, 1)
+                .with_sustain(2)
+                .with_cooldown_secs(0.2)
+                .with_step(3),
+        ),
+        AutoscalerConfig::new("defer", "defer")
+            .with_sample_interval(Duration::from_millis(50))
+            .with_max_extension_nodes(3)
+            .with_max_step(3)
+            .with_window(Duration::from_millis(50))
+            // Spark extension lead is 16 modeled seconds; nothing can
+            // pay for itself inside a 1 s horizon.
+            .with_planner(PlannerConfig::default().with_drain_horizon_secs(1.0)),
+    );
+
+    // Priming trickle: enough to observe consumption (calibrating the
+    // service-rate EWMA) without crossing the scale-up threshold.
+    for i in 0..6u8 {
+        cluster.produce("defer", (i % 2) as usize, 0, &[vec![i]]).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    std::thread::sleep(Duration::from_millis(400));
+
+    // Backlog well past the threshold: the policy will demand nodes,
+    // the planner must keep deferring.
+    let batch: Vec<Vec<u8>> = (0..120u8).map(|i| vec![i]).collect();
+    cluster.produce("defer", 0, 0, &batch).unwrap();
+    cluster.produce("defer", 1, 0, &batch).unwrap();
+
+    let timeline = scaler.timeline();
+    assert!(
+        wait_until(|| timeline.count(ScalingAction::Defer) >= 1, 20.0),
+        "planner never recorded a deferral; lag={:?}",
+        cluster.group_lag("defer", "defer")
+    );
+    // Give the loop room to (incorrectly) extend after the deferrals.
+    std::thread::sleep(Duration::from_millis(500));
+    assert_eq!(timeline.count(ScalingAction::Up), 0, "a deferred scale-up was actuated");
+    assert_eq!(scaler.extension_count(), 0);
+    assert_eq!(engine.executor_count(), 1, "base executor only");
+    let defer = timeline
+        .events()
+        .into_iter()
+        .find(|e| e.action == ScalingAction::Defer)
+        .unwrap();
+    assert!(
+        defer.policy.contains("LeadBeyondHorizon"),
+        "defer reason missing from event: {}",
+        defer.policy
+    );
+    assert!(defer.lag >= 15, "deferral below the policy threshold: {}", defer.lag);
+
+    let remaining = scaler.stop();
+    assert!(remaining.is_empty());
+    job.stop();
+    service.stop_pilot(&spark).unwrap();
+    service.stop_pilot(&kafka).unwrap();
+    assert_eq!(service.machine().free_nodes(), 6);
+}
+
+/// Repartition-aware broker scale-up on the real plane: a repartition
+/// whose new partition count oversubscribes the configured per-node I/O
+/// budget must co-schedule a broker extension in the same plan — broker
+/// first, then the repartition, then the processing extension.
+#[test]
+fn oversubscribing_repartition_coschedules_broker_extension() {
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(8)));
+    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1)).unwrap();
+    let (spark, engine) = service
+        .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+        .unwrap();
+    cluster.create_topic("co", 2).unwrap();
+    assert_eq!(cluster.broker_nodes().len(), 1);
+
+    let inner = ThresholdPolicy::new(10, 1)
+        .with_sustain(2)
+        .with_cooldown_secs(0.3)
+        .with_step(3);
+    let scaler = Autoscaler::spawn_with_broker(
+        service.clone(),
+        spark.clone(),
+        Some(kafka.clone()),
+        cluster.clone(),
+        None,
+        Box::new(PartitionElastic::new(inner, 1)),
+        AutoscalerConfig::new("co", "g")
+            .with_sample_interval(Duration::from_millis(50))
+            .with_max_extension_nodes(3)
+            .with_max_step(3)
+            // Budget of 2 partitions per broker node: repartitioning to
+            // 4 (1 base + 3 extension slots) needs a second broker.
+            .with_planner(
+                PlannerConfig::default()
+                    .with_partitions_per_broker_node(2)
+                    .with_max_broker_step(2),
+            ),
+    );
+
+    // Standing lag, nobody consuming: the wrapped policy upgrades the
+    // capped scale-up to a repartition, which oversubscribes the
+    // 2-partition budget of the single broker.
+    let batch: Vec<Vec<u8>> = (0..30u8).map(|i| vec![i]).collect();
+    cluster.produce("co", 0, 0, &batch).unwrap();
+
+    let timeline = scaler.timeline();
+    assert!(
+        wait_until(|| timeline.count(ScalingAction::BrokerUp) >= 1, 15.0),
+        "no broker extension was co-scheduled"
+    );
+    assert!(
+        wait_until(|| timeline.count(ScalingAction::Repartition) >= 1, 5.0),
+        "no repartition followed the broker extension"
+    );
+    assert!(
+        wait_until(|| scaler.extension_count() >= 1, 5.0),
+        "no processing extension landed"
+    );
+    assert_eq!(cluster.broker_nodes().len(), 2, "broker tier extended");
+    assert_eq!(cluster.partition_count("co").unwrap(), 4);
+    assert_eq!(scaler.broker_extension_count(), 1);
+    assert!(
+        wait_until(|| engine.executor_count() == 4, 10.0),
+        "extension executors never attached"
+    );
+
+    // Step order within the plan: broker first (so the new partitions
+    // land on an unsaturated tier), then the repartition, then the
+    // processing extension.
+    let events = timeline.events();
+    let broker_up = events.iter().position(|e| e.action == ScalingAction::BrokerUp).unwrap();
+    let rp = events.iter().position(|e| e.action == ScalingAction::Repartition).unwrap();
+    let up = events.iter().position(|e| e.action == ScalingAction::Up).unwrap();
+    assert!(broker_up < rp && rp < up, "plan steps out of order: {events:?}");
+    assert_eq!(events[rp].partitions, 4);
+    // The broker step carries the Kafka extension cost model (one wave
+    // of 1 node + rebalance settle = 8 + 15), the processing step
+    // Spark's (two waves of 3 nodes + settle = 12 + 10).
+    assert_eq!(events[broker_up].cost_secs, 23.0);
+    assert_eq!(events[up].cost_secs, 22.0);
+
+    // Drain the backlog: the processing extensions are released, but
+    // the co-scheduled broker node must *stay* — the 4 partitions it
+    // was bought for persist, and the base broker alone (budget 2)
+    // cannot serve them.
+    for part in 0..4 {
+        let end = cluster.end_offset("co", part).unwrap();
+        cluster.commit("g", "co", part, end);
+    }
+    assert!(
+        wait_until(
+            || timeline.count(ScalingAction::Down) >= 1 && scaler.extension_count() == 0,
+            30.0
+        ),
+        "processing never scaled back down"
+    );
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(scaler.broker_extension_count(), 1, "broker released despite partitions");
+    assert_eq!(cluster.broker_nodes().len(), 2);
+    assert_eq!(timeline.count(ScalingAction::BrokerDown), 0);
+
+    for p in scaler.stop() {
+        service.stop_pilot(&p).unwrap();
+    }
+    assert_eq!(cluster.broker_nodes().len(), 1, "broker shrank back");
+    service.stop_pilot(&spark).unwrap();
+    service.stop_pilot(&kafka).unwrap();
+    assert_eq!(service.machine().free_nodes(), 8);
 }
 
 #[test]

@@ -1,0 +1,260 @@
+//! Property-based invariants over the scaling planner.
+//!
+//! The planner sits between every policy and every actuation, so its
+//! safety story is this suite: across random signal snapshots, random
+//! intents and random planner tunings we assert that every emitted
+//! [`ScalingPlan`]
+//!
+//! * **(a) respects the controller's limits** — planned processing
+//!   nodes never exceed `max_step` (mirroring
+//!   `AutoscalerConfig::max_step`) nor push the fleet past `max_nodes`
+//!   (the base allocation plus `AutoscalerConfig::max_extension_nodes`,
+//!   exactly how the controller derives the snapshot ceiling);
+//! * **(b) respects per-node I/O budgets** — a planned partition count
+//!   never oversubscribes `partitions_per_broker_node` across the
+//!   broker tier *including* the plan's own co-scheduled broker
+//!   extension, and that extension never exceeds `max_broker_step`;
+//! * **(c) is well-formed** — shrinks never cut below the fleet floor,
+//!   deferred plans carry no steps, steps execute broker → repartition
+//!   → processing, and the same inputs always produce the same plan.
+//!
+//! Like `proptest_invariants.rs`, this is a seeded-random harness (the
+//! offline dependency set has no `proptest`): failures print the seed
+//! for replay, and `PROPTEST_CASES` scales the case count (the CI
+//! `proptest` job runs these suites deeper than the default
+//! `cargo test` pass).
+
+use pilot_streaming::autoscale::{
+    PlanStep, Planner, PlannerConfig, ScalingIntent, SignalSnapshot,
+};
+use pilot_streaming::pilot::FrameworkKind;
+use pilot_streaming::util::Rng;
+
+/// Case count: `PROPTEST_CASES` env override, else the suite default.
+fn cases(default: usize) -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `f` over seeded cases; panic messages carry the seed for replay.
+fn check<F: Fn(&mut Rng)>(name: &str, default_cases: usize, f: F) {
+    for case in 0..cases(default_cases) {
+        let seed = 0xB1A5ED ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+const FRAMEWORKS: [FrameworkKind; 4] = [
+    FrameworkKind::Kafka,
+    FrameworkKind::Spark,
+    FrameworkKind::Dask,
+    FrameworkKind::Flink,
+];
+
+/// A random but internally consistent snapshot (the shape the live
+/// probe and the elastic sim both produce).
+fn random_snapshot(rng: &mut Rng) -> SignalSnapshot {
+    let min_nodes = 1 + rng.below(4);
+    // Mirror the controller: the ceiling is the base allocation plus a
+    // random AutoscalerConfig::max_extension_nodes.
+    let max_extension_nodes = rng.below(8);
+    let max_nodes = min_nodes + max_extension_nodes;
+    let nodes = min_nodes + rng.below(max_extension_nodes + 1);
+    let partitions = 1 + rng.below(200);
+    SignalSnapshot {
+        t_secs: rng.range_f64(0.0, 10_000.0),
+        lag: rng.below(2_000_000) as u64,
+        lag_slope: rng.range_f64(-10_000.0, 10_000.0),
+        produce_rate: rng.range_f64(0.0, 50_000.0),
+        consume_rate: rng.range_f64(0.0, 50_000.0),
+        partition_backlog: (0..partitions.min(16)).map(|_| rng.below(10_000) as u64).collect(),
+        partitions,
+        behind_batches: rng.below(100) as u64,
+        last_batch_secs: rng.range_f64(0.0, 10.0),
+        window_secs: rng.range_f64(0.05, 120.0),
+        nodes,
+        min_nodes,
+        max_nodes,
+        // Uncalibrated about a quarter of the time (cost gate off).
+        service_rate_per_node: if rng.below(4) == 0 { 0.0 } else { rng.range_f64(0.1, 5_000.0) },
+        broker_nodes: 1 + rng.below(8),
+        broker_nic_util: rng.range_f64(0.0, 1.2),
+        broker_disk_util: rng.range_f64(0.0, 1.2),
+    }
+}
+
+fn random_config(rng: &mut Rng) -> PlannerConfig {
+    PlannerConfig::default()
+        .with_frameworks(
+            FRAMEWORKS[rng.below(4)],
+            FRAMEWORKS[rng.below(4)],
+        )
+        .with_max_step(1 + rng.below(8))
+        .with_drain_horizon_secs([5.0, 30.0, 120.0, 600.0, 3_600.0][rng.below(5)])
+        .with_partitions_per_broker_node(1 + rng.below(24))
+        .with_broker_util_threshold(rng.range_f64(0.1, 1.0))
+        .with_max_broker_step(rng.below(4))
+}
+
+fn random_intent(rng: &mut Rng) -> ScalingIntent {
+    match rng.below(4) {
+        0 => ScalingIntent::Hold,
+        1 => ScalingIntent::ScaleUp(rng.below(24)),
+        2 => ScalingIntent::ScaleDown(rng.below(24)),
+        _ => ScalingIntent::Repartition {
+            partitions: 1 + rng.below(400),
+            scale_up: rng.below(24),
+        },
+    }
+}
+
+#[test]
+fn plans_respect_limits_budgets_and_shape() {
+    check("plan-invariants", 400, |rng| {
+        let config = random_config(rng);
+        let planner = Planner::new(config.clone());
+        // A short random signal sequence under one planner, as the
+        // control loop would see it.
+        for _ in 0..16 {
+            let s = random_snapshot(rng);
+            let intent = random_intent(rng);
+            let plan = planner.plan(intent, &s);
+
+            // (c) determinism: same inputs, same plan.
+            assert_eq!(plan, planner.plan(intent, &s), "plan not deterministic");
+            // (c) deferred plans are pure refusals.
+            if plan.deferred.is_some() {
+                assert!(plan.steps.is_empty(), "deferred plan has steps: {plan:?}");
+                continue;
+            }
+
+            // (a) controller limits.
+            let up = plan.added_processing_nodes();
+            assert!(up <= config.max_step, "{up} > max_step {}", config.max_step);
+            assert!(
+                s.nodes + up <= s.max_nodes,
+                "plan pushes fleet to {} past max_nodes {} (max_extension_nodes ceiling)",
+                s.nodes + up,
+                s.max_nodes
+            );
+
+            // (b) broker budget.
+            let broker_up = plan.added_broker_nodes();
+            assert!(
+                broker_up <= config.max_broker_step,
+                "{broker_up} > max_broker_step {}",
+                config.max_broker_step
+            );
+            if let Some(target) = plan.repartition_target() {
+                assert!(
+                    target <= (s.broker_nodes + broker_up) * config.partitions_per_broker_node,
+                    "{target} partitions oversubscribe {} brokers x {} budget",
+                    s.broker_nodes + broker_up,
+                    config.partitions_per_broker_node
+                );
+                assert!(target >= 1);
+            }
+
+            // (c) shrinks never cut below the floor; a plan never mixes
+            // growth and shrink.
+            let down: usize = plan
+                .steps
+                .iter()
+                .map(|st| match st {
+                    PlanStep::ShrinkProcessing { nodes } => *nodes,
+                    _ => 0,
+                })
+                .sum();
+            assert!(down <= s.nodes.saturating_sub(s.min_nodes), "shrink below floor");
+            assert!(down == 0 || (up == 0 && broker_up == 0), "mixed plan: {plan:?}");
+
+            // (c) step order: broker -> repartition -> processing.
+            let pos = |pred: fn(&PlanStep) -> bool| plan.steps.iter().position(pred);
+            let b = pos(|st| matches!(st, PlanStep::ExtendBroker { .. }));
+            let r = pos(|st| matches!(st, PlanStep::Repartition { .. }));
+            let p = pos(|st| matches!(st, PlanStep::ExtendProcessing { .. }));
+            if let (Some(b), Some(r)) = (b, r) {
+                assert!(b < r, "broker step after repartition: {plan:?}");
+            }
+            if let (Some(r), Some(p)) = (r, p) {
+                assert!(r < p, "repartition after processing step: {plan:?}");
+            }
+            if let (Some(b), Some(p)) = (b, p) {
+                assert!(b < p, "broker step after processing step: {plan:?}");
+            }
+
+            // Costs are finite and non-negative.
+            for st in &plan.steps {
+                if let PlanStep::ExtendBroker { cost, .. }
+                | PlanStep::Repartition { cost, .. }
+                | PlanStep::ExtendProcessing { cost, .. } = st
+                {
+                    assert!(cost.lead_secs.is_finite() && cost.lead_secs >= 0.0);
+                    assert!(cost.node_secs.is_finite() && cost.node_secs >= 0.0);
+                }
+            }
+            assert!(plan.expected_drain_msgs.is_finite() && plan.expected_drain_msgs >= 0.0);
+        }
+    });
+}
+
+/// Intents the policy layer can actually emit (via the shipped
+/// policies) keep the same invariants when the snapshot sequence is a
+/// coherent backlog trajectory rather than white noise.
+#[test]
+fn plans_hold_limits_across_backlog_trajectories() {
+    use pilot_streaming::autoscale::{PartitionElastic, ScalingPolicy, ThresholdPolicy};
+
+    check("plan-trajectory-invariants", 200, |rng| {
+        let config = random_config(rng);
+        let planner = Planner::new(config.clone());
+        let inner = ThresholdPolicy::new(1_000, 100)
+            .with_sustain(1 + rng.below(2))
+            .with_cooldown_secs(rng.range_f64(0.0, 2.0))
+            .with_step(1 + rng.below(8));
+        let mut policy = PartitionElastic::new(inner, 1 + rng.below(4));
+
+        let mut s = random_snapshot(rng);
+        let mut lag = rng.below(5_000) as i64;
+        for tick in 0..64 {
+            // Random-walk the backlog; keep the rest of the snapshot.
+            lag = (lag + rng.below(2_001) as i64 - 1_000).max(0);
+            s.t_secs = tick as f64;
+            s.lag = lag as u64;
+            s.lag_slope = rng.range_f64(-500.0, 500.0);
+            let plan = planner.plan(policy.decide(&s), &s);
+            if plan.deferred.is_some() {
+                assert!(plan.steps.is_empty());
+                continue;
+            }
+            let up = plan.added_processing_nodes();
+            assert!(up <= config.max_step);
+            assert!(s.nodes + up <= s.max_nodes);
+            assert!(plan.added_broker_nodes() <= config.max_broker_step);
+            if let Some(target) = plan.repartition_target() {
+                assert!(
+                    target
+                        <= (s.broker_nodes + plan.added_broker_nodes())
+                            * config.partitions_per_broker_node
+                );
+            }
+            // Feed the actuation back so the trajectory stays coherent.
+            s.nodes = (s.nodes + up).min(s.max_nodes);
+            if let Some(target) = plan.repartition_target() {
+                s.partitions = target;
+            }
+            s.broker_nodes += plan.added_broker_nodes();
+            for st in &plan.steps {
+                if let PlanStep::ShrinkProcessing { nodes } = st {
+                    s.nodes = s.nodes.saturating_sub(*nodes).max(s.min_nodes);
+                }
+            }
+        }
+    });
+}
