@@ -1,11 +1,19 @@
 //! Hot-path micro-benchmarks (the §Perf optimization targets).
 //!
-//! L3 data plane: log append/read, wire encode/decode, producer
-//! batching, payload generation.  L1/L2: per-artifact PJRT execution.
+//! L3 data plane: log append/read (zero-copy slab views), wire
+//! encode/decode (owned vs borrowed-payload), producer batching,
+//! payload generation, and a concurrent produce+fetch contention
+//! workload over the lock-split partition log.  L1/L2: per-artifact
+//! PJRT execution.
 //!
 //! Run: `cargo bench --bench hotpath`
+//! JSON (perf trajectory): `cargo bench --bench hotpath -- --json \
+//!   --baseline=BENCH_pr4.json > bench.json`
 
-use pilot_streaming::broker::{LogConfig, PartitionLog};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use pilot_streaming::broker::{BrokerCluster, LogConfig, PartitionLog};
 use pilot_streaming::cluster::Machine;
 use pilot_streaming::miniapp::mass::{MassConfig, PayloadGenerator, SourceKind};
 use pilot_streaming::miniapp::{Message, PayloadKind};
@@ -21,19 +29,15 @@ fn main() {
         // Fresh small log each run would dominate with allocation; use a
         // rolling log with retention to steady-state the append path.
         thread_local! {
-            static LOG: std::cell::RefCell<PartitionLog> =
-                std::cell::RefCell::new(PartitionLog::new(LogConfig {
-                    segment_bytes: 64 << 20,
-                    retention_bytes: Some(256 << 20),
-                }));
+            static LOG: PartitionLog = PartitionLog::new(LogConfig {
+                segment_bytes: 64 << 20,
+                retention_bytes: Some(256 << 20),
+            });
         }
-        LOG.with(|l| {
-            l.borrow_mut()
-                .append_batch([payload_320k.as_slice()], 0)
-        });
+        LOG.with(|l| l.append_batch([payload_320k.as_slice()], 0));
     });
 
-    let mut read_log = PartitionLog::new(LogConfig::default());
+    let read_log = PartitionLog::new(LogConfig::default());
     for _ in 0..64 {
         read_log.append_batch([payload_320k.as_slice()], 0);
     }
@@ -50,7 +54,13 @@ fn main() {
         std::hint::black_box(msg.encode(320_000));
     });
     let encoded = msg.encode(320_000);
+    // The borrowed-payload path consumers actually run: header parse +
+    // tensor view, no f32 materialization.
     bench.run("wire/decode-0.32MB", 2000, || {
+        std::hint::black_box(Message::decode_view(&encoded).unwrap());
+    });
+    // The owned decode kept for trajectory comparison (collects 15k f32).
+    bench.run("wire/decode-owned-0.32MB", 2000, || {
         std::hint::black_box(Message::decode(&encoded).unwrap());
     });
 
@@ -69,7 +79,7 @@ fn main() {
 
     // --- Broker end-to-end (unthrottled, real bytes) -----------------------
     let machine = Machine::unthrottled(2);
-    let cluster = pilot_streaming::broker::BrokerCluster::new(machine, vec![0]);
+    let cluster = BrokerCluster::new(machine, vec![0]);
     cluster.create_topic("bench", 1).unwrap();
     let mut produced = 0u64;
     bench.run("broker/produce-fetch-0.32MB", 500, || {
@@ -88,6 +98,85 @@ fn main() {
             .unwrap();
         produced += recs.len() as u64;
         std::hint::black_box(recs);
+    });
+
+    // --- Contention: concurrent producers vs fetchers ----------------------
+    // The lock-split acceptance workload: 4 producer threads append
+    // 64 KB records to 4 partitions while 4 fetcher threads tail them.
+    // Under the old single-mutex log every fetch serialized against
+    // every append; here fetch throughput is the headline metric.
+    let quick = bench.quick();
+    bench.run_once("broker/contended-produce-fetch-4x4", move || {
+        let machine = Machine::unthrottled(2);
+        let cluster = BrokerCluster::new(machine, vec![0]);
+        cluster.create_topic("cont", 4).unwrap();
+        let per_producer: u64 = if quick { 200 } else { 2000 };
+        let payload = vec![0u8; 64 * 1024];
+        let done = Arc::new(AtomicBool::new(false));
+        let fetched_msgs = Arc::new(AtomicU64::new(0));
+        let fetched_bytes = Arc::new(AtomicU64::new(0));
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            let producers: Vec<_> = (0..4usize)
+                .map(|p| {
+                    let cluster = cluster.clone();
+                    let payload = payload.clone();
+                    s.spawn(move || {
+                        for _ in 0..per_producer {
+                            cluster.produce("cont", p, 1, &[payload.clone()]).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for p in 0..4usize {
+                let cluster = cluster.clone();
+                let done = done.clone();
+                let fetched_msgs = fetched_msgs.clone();
+                let fetched_bytes = fetched_bytes.clone();
+                s.spawn(move || {
+                    let mut pos = 0u64;
+                    while pos < per_producer {
+                        let recs = cluster
+                            .fetch(
+                                "cont",
+                                p,
+                                pos,
+                                8 << 20,
+                                1,
+                                std::time::Duration::from_millis(50),
+                            )
+                            .unwrap();
+                        if recs.is_empty() {
+                            if done.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            continue;
+                        }
+                        pos = recs.last().unwrap().offset + 1;
+                        fetched_msgs.fetch_add(recs.len() as u64, Ordering::Relaxed);
+                        let bytes: u64 = recs.iter().map(|r| r.value.len() as u64).sum();
+                        fetched_bytes.fetch_add(bytes, Ordering::Relaxed);
+                    }
+                });
+            }
+            // Join producers, then release fetchers' empty-fetch exit
+            // path — every appended record is fetchable by then.
+            for h in producers {
+                h.join().unwrap();
+            }
+            done.store(true, Ordering::Relaxed);
+        });
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let msgs = fetched_msgs.load(Ordering::Relaxed);
+        let bytes = fetched_bytes.load(Ordering::Relaxed);
+        vec![
+            ("fetched_msgs".to_string(), msgs as f64),
+            ("fetch_msgs_per_sec".to_string(), msgs as f64 / secs),
+            (
+                "fetch_mb_per_sec".to_string(),
+                bytes as f64 / 1e6 / secs,
+            ),
+        ]
     });
 
     // --- L1/L2 artifact execution ------------------------------------------
@@ -109,7 +198,9 @@ fn main() {
         bench.run("xla/mlem", 10, || {
             std::hint::black_box(runtime.execute("mlem", &[&sino]).unwrap());
         });
-    } else {
+    } else if !bench.json() {
         eprintln!("(artifacts missing — run `make artifacts` for xla benches)");
     }
+
+    bench.emit("hotpath");
 }

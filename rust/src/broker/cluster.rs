@@ -6,6 +6,16 @@
 //! boundaries come from the simulated [`Machine`] — every produce/fetch
 //! pays the NIC/disk token-bucket costs of the nodes involved, so broker
 //! I/O saturation (the effect behind Figs 8/9) is observable in-process.
+//!
+//! Hot-path locking (§Perf L3): the topics map and broker-node list are
+//! copy-on-write snapshots behind [`ArcCell`]s — control-plane writers
+//! (create/repartition/extend) publish new snapshots; produce/fetch
+//! resolve against the current one without ever taking a global mutex,
+//! and clients holding an `Arc<Topic>` handle skip even that (see
+//! [`BrokerCluster::produce_to`] / [`BrokerCluster::fetch_from`]).
+//! Within a partition, appends serialize on the log's narrow writer
+//! lock while fetches read a published segment snapshot, so readers
+//! never contend with producers.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -14,6 +24,7 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use crate::cluster::{Machine, NodeId};
 use crate::error::{Error, Result};
+use crate::util::ArcCell;
 
 use super::log::{LogConfig, PartitionLog, Record};
 use super::repartition::EpochTransition;
@@ -24,15 +35,15 @@ pub struct Partition {
     /// Index into the cluster's broker-node list (leadership moves on
     /// rebalance).
     leader: AtomicUsize,
-    pub(super) log: Mutex<PartitionLog>,
+    pub(super) log: PartitionLog,
+    /// Companion mutex for `data_arrived` — held only around the
+    /// blocked-fetch wait and the producer's wakeup, never across log
+    /// I/O (the log itself is lock-split; see [`super::log`]).
+    wait_lock: Mutex<()>,
     data_arrived: Condvar,
-    /// High watermark mirror, refreshed on every append — lets lag
-    /// probes (consumer gauges, the autoscaler, the micro-batch driver)
-    /// read the end offset without touching the log lock.
-    end: AtomicU64,
     /// Topic epoch this partition's next append belongs to.  Bumped
-    /// under the log lock when a repartition seals the log, so a
-    /// produce that routed under an older partition-set epoch is
+    /// under the log's writer lock when a repartition seals the log, so
+    /// a produce that routed under an older partition-set epoch is
     /// detected (and rejected as [`Error::StaleEpoch`]) instead of
     /// landing above the fence consumers drain to.
     pub(super) epoch: AtomicU64,
@@ -43,9 +54,9 @@ impl Partition {
         Partition {
             id,
             leader: AtomicUsize::new(leader),
-            log: Mutex::new(PartitionLog::new(config)),
+            log: PartitionLog::new(config),
+            wait_lock: Mutex::new(()),
             data_arrived: Condvar::new(),
-            end: AtomicU64::new(0),
             epoch: AtomicU64::new(epoch),
         }
     }
@@ -54,8 +65,21 @@ impl Partition {
         self.leader.load(Ordering::Relaxed)
     }
 
+    /// High watermark — a lock-free atomic read, so lag probes (consumer
+    /// gauges, the autoscaler, the micro-batch driver) never touch the
+    /// write path.
     pub fn end_offset(&self) -> u64 {
-        self.end.load(Ordering::Acquire)
+        self.log.end_offset()
+    }
+
+    /// Wake every fetcher parked on this partition.  The empty critical
+    /// section orders the wakeup after the append's watermark publish —
+    /// a fetcher that re-checked the watermark under `wait_lock` and
+    /// saw nothing is guaranteed to be inside `wait_timeout` before the
+    /// notifying producer can acquire the lock.
+    fn notify_data(&self) {
+        drop(self.wait_lock.lock().unwrap());
+        self.data_arrived.notify_all();
     }
 }
 
@@ -88,6 +112,15 @@ impl Topic {
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
+
+    /// Whether this handle still describes the live partition set.
+    /// Every repartition bumps every partition's epoch atomic (shared
+    /// between the old and new `Topic` snapshots), so a handle whose
+    /// recorded epoch matches partition 0's live epoch is current —
+    /// a lock-free staleness probe clients use to cache handles.
+    pub fn is_current(&self) -> bool {
+        self.partitions[0].epoch.load(Ordering::Acquire) == self.epoch
+    }
 }
 
 /// Consumer-group coordination state for one (group, topic).
@@ -109,8 +142,14 @@ pub(super) struct GroupState {
 
 pub(super) struct Inner {
     pub(super) machine: Machine,
-    pub(super) broker_nodes: Mutex<Vec<NodeId>>,
-    pub(super) topics: Mutex<HashMap<String, Arc<Topic>>>,
+    /// Copy-on-write broker-node list (snapshot per control-plane edit).
+    pub(super) broker_nodes: ArcCell<Vec<NodeId>>,
+    /// Copy-on-write topics map: produce/fetch load the snapshot; only
+    /// create/repartition publish new ones (serialized by `control`).
+    pub(super) topics: ArcCell<HashMap<String, Arc<Topic>>>,
+    /// Serializes control-plane mutations (topic create/repartition,
+    /// broker add/remove) — the data plane never takes it.
+    pub(super) control: Mutex<()>,
     pub(super) groups: Mutex<HashMap<(String, String), GroupState>>,
     pub(super) log_config: LogConfig,
     pub(super) stopped: AtomicBool,
@@ -149,8 +188,8 @@ pub struct BrokerCluster {
 impl std::fmt::Debug for BrokerCluster {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("BrokerCluster")
-            .field("brokers", &self.broker_nodes().len())
-            .field("topics", &self.inner.topics.lock().unwrap().len())
+            .field("brokers", &self.inner.broker_nodes.load().len())
+            .field("topics", &self.inner.topics.load().len())
             .finish()
     }
 }
@@ -170,8 +209,9 @@ impl BrokerCluster {
         BrokerCluster {
             inner: Arc::new(Inner {
                 machine,
-                broker_nodes: Mutex::new(broker_nodes),
-                topics: Mutex::new(HashMap::new()),
+                broker_nodes: ArcCell::new(Arc::new(broker_nodes)),
+                topics: ArcCell::new(Arc::new(HashMap::new())),
+                control: Mutex::new(()),
                 groups: Mutex::new(HashMap::new()),
                 log_config,
                 stopped: AtomicBool::new(false),
@@ -185,7 +225,7 @@ impl BrokerCluster {
     }
 
     pub fn broker_nodes(&self) -> Vec<NodeId> {
-        self.inner.broker_nodes.lock().unwrap().clone()
+        self.inner.broker_nodes.load().as_ref().clone()
     }
 
     /// Per-broker-node I/O counters and capacities — the broker-tier
@@ -244,15 +284,17 @@ impl BrokerCluster {
         if partitions == 0 {
             return Err(Error::Broker("topic needs >= 1 partition".into()));
         }
-        let n_brokers = self.broker_nodes().len();
-        let mut topics = self.inner.topics.lock().unwrap();
+        let _control = self.inner.control.lock().unwrap();
+        let n_brokers = self.inner.broker_nodes.load().len();
+        let topics = self.inner.topics.load();
         if topics.contains_key(name) {
             return Err(Error::Broker(format!("topic {name} already exists")));
         }
         let parts = (0..partitions)
             .map(|i| Arc::new(Partition::new(i, i % n_brokers, 0, self.inner.log_config)))
             .collect();
-        topics.insert(
+        let mut next = topics.as_ref().clone();
+        next.insert(
             name.to_string(),
             Arc::new(Topic {
                 name: name.to_string(),
@@ -262,14 +304,18 @@ impl BrokerCluster {
                 transitions: Vec::new(),
             }),
         );
+        self.inner.topics.store(Arc::new(next));
         Ok(())
     }
 
+    /// Resolve a topic handle from the current snapshot — no global
+    /// lock on this path.  Hot callers (producers, consumers, the
+    /// micro-batch driver) cache the returned `Arc` and revalidate it
+    /// lock-free via [`Topic::is_current`].
     pub fn topic(&self, name: &str) -> Result<Arc<Topic>> {
         self.inner
             .topics
-            .lock()
-            .unwrap()
+            .load()
             .get(name)
             .cloned()
             .ok_or_else(|| Error::Broker(format!("unknown topic {name}")))
@@ -293,15 +339,20 @@ impl BrokerCluster {
         Ok(self.topic(topic)?.epoch)
     }
 
+    /// Leader broker *node id* for a partition of an already-resolved
+    /// topic handle.
+    fn leader_of(&self, t: &Topic, partition: usize) -> Result<NodeId> {
+        let p = t.partitions.get(partition).ok_or_else(|| {
+            Error::Broker(format!("{}/{partition}: no such partition", t.name))
+        })?;
+        let brokers = self.inner.broker_nodes.load();
+        Ok(brokers[p.leader_index() % brokers.len()])
+    }
+
     /// Leader broker *node id* for a topic partition.
     pub fn leader_node(&self, topic: &str, partition: usize) -> Result<NodeId> {
         let t = self.topic(topic)?;
-        let p = t
-            .partitions
-            .get(partition)
-            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?;
-        let brokers = self.inner.broker_nodes.lock().unwrap();
-        Ok(brokers[p.leader_index() % brokers.len()])
+        self.leader_of(&t, partition)
     }
 
     /// Produce a batch of values to a partition from `from_node`.
@@ -315,20 +366,37 @@ impl BrokerCluster {
         from_node: NodeId,
         values: &[Vec<u8>],
     ) -> Result<u64> {
-        self.check_running()?;
         let t = self.topic(topic)?;
+        self.produce_to(&t, partition, from_node, values)
+    }
+
+    /// [`BrokerCluster::produce`] against a cached topic handle — the
+    /// producer hot path, which never touches the topics snapshot.  A
+    /// stale handle is harmless: the per-partition epoch fence rejects
+    /// the append ([`Error::StaleEpoch`]) and the caller re-resolves.
+    pub fn produce_to(
+        &self,
+        t: &Topic,
+        partition: usize,
+        from_node: NodeId,
+        values: &[Vec<u8>],
+    ) -> Result<u64> {
+        self.check_running()?;
         if partition >= t.active {
             return if partition < t.partitions.len() {
                 Err(Error::StaleEpoch(format!(
-                    "{topic}/{partition}: partition retired at epoch {}",
-                    t.epoch
+                    "{}/{partition}: partition retired at epoch {}",
+                    t.name, t.epoch
                 )))
             } else {
-                Err(Error::Broker(format!("{topic}/{partition}: no such partition")))
+                Err(Error::Broker(format!(
+                    "{}/{partition}: no such partition",
+                    t.name
+                )))
             };
         }
-        let p = t.partitions[partition].clone();
-        let leader = self.leader_node(topic, partition)?;
+        let p = &t.partitions[partition];
+        let leader = self.leader_of(t, partition)?;
         let bytes: usize = values.iter().map(|v| v.len()).sum();
 
         // Data-plane costs: sender NIC out, leader NIC in, leader disk.
@@ -337,24 +405,26 @@ impl BrokerCluster {
         self.inner.machine.node(leader).disk.acquire(bytes);
 
         let ts = self.now_ns();
-        let base = {
-            let mut log = p.log.lock().unwrap();
-            // Epoch fence: if a repartition sealed this log after we
-            // routed (the topic handle above is already stale), the
-            // append must not land above the fence — the caller
-            // re-routes under the new partition set instead.
-            if p.epoch.load(Ordering::Acquire) != t.epoch {
-                return Err(Error::StaleEpoch(format!(
-                    "{topic}/{partition}: routed at epoch {}, log sealed at epoch {}",
-                    t.epoch,
-                    p.epoch.load(Ordering::Acquire)
-                )));
-            }
-            let base = log.append_batch(values.iter().map(|v| v.as_slice()), ts);
-            p.end.store(log.end_offset(), Ordering::Release);
-            base
-        };
-        p.data_arrived.notify_all();
+        // Epoch fence, checked under the log's writer lock: if a
+        // repartition sealed this log after we routed (the topic handle
+        // is already stale), the append must not land above the fence —
+        // the caller re-routes under the new partition set instead.
+        let base = p.log.append_batch_fenced(
+            values.iter().map(|v| v.as_slice()),
+            ts,
+            || {
+                if p.epoch.load(Ordering::Acquire) != t.epoch {
+                    return Err(Error::StaleEpoch(format!(
+                        "{}/{partition}: routed at epoch {}, log sealed at epoch {}",
+                        t.name,
+                        t.epoch,
+                        p.epoch.load(Ordering::Acquire)
+                    )));
+                }
+                Ok(())
+            },
+        )?;
+        p.notify_data();
         Ok(base)
     }
 
@@ -370,35 +440,63 @@ impl BrokerCluster {
         to_node: NodeId,
         timeout: Duration,
     ) -> Result<Vec<Record>> {
-        self.check_running()?;
         let t = self.topic(topic)?;
+        self.fetch_from(&t, partition, offset, max_bytes, to_node, timeout)
+    }
+
+    /// [`BrokerCluster::fetch`] against a cached topic handle — the
+    /// consumer hot path.  Reads are always safe on a stale handle
+    /// (partition ids are stable and logs are shared across snapshots).
+    /// The returned records are zero-copy slab views; the modeled
+    /// network cost is still charged per byte at this boundary.
+    pub fn fetch_from(
+        &self,
+        t: &Topic,
+        partition: usize,
+        offset: u64,
+        max_bytes: usize,
+        to_node: NodeId,
+        timeout: Duration,
+    ) -> Result<Vec<Record>> {
+        self.check_running()?;
         let p = t
             .partitions
             .get(partition)
-            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?
+            .ok_or_else(|| {
+                Error::Broker(format!("{}/{partition}: no such partition", t.name))
+            })?
             .clone();
-        let leader = self.leader_node(topic, partition)?;
+        let leader = self.leader_of(t, partition)?;
 
-        let records = {
-            let mut log = p.log.lock().unwrap();
-            let deadline = Instant::now() + timeout;
-            loop {
-                let recs = log.read(offset, max_bytes)?;
-                if !recs.is_empty() {
-                    break recs;
-                }
-                let now = Instant::now();
-                if now >= deadline {
-                    break Vec::new();
-                }
-                let (guard, _) = p
-                    .data_arrived
-                    .wait_timeout(log, deadline - now)
-                    .map_err(|_| Error::Broker("partition lock poisoned".into()))?;
-                log = guard;
-                if self.inner.stopped.load(Ordering::Relaxed) {
-                    return Err(Error::Broker("broker cluster is stopped".into()));
-                }
+        let deadline = Instant::now() + timeout;
+        let records = loop {
+            // Lock-free read against the published segment snapshot —
+            // concurrent producers are never blocked by this.
+            let recs = p.log.read(offset, max_bytes)?;
+            if !recs.is_empty() {
+                break recs;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break Vec::new();
+            }
+            let guard = p.wait_lock.lock().unwrap();
+            // Re-check under the wait lock: an append that landed between
+            // the read above and this acquisition already published its
+            // watermark, so we must not sleep through its notify.
+            if p.log.end_offset() > offset {
+                continue;
+            }
+            if self.inner.stopped.load(Ordering::Relaxed) {
+                return Err(Error::Broker("broker cluster is stopped".into()));
+            }
+            let (guard, _) = p
+                .data_arrived
+                .wait_timeout(guard, deadline - now)
+                .map_err(|_| Error::Broker("partition wait lock poisoned".into()))?;
+            drop(guard);
+            if self.inner.stopped.load(Ordering::Relaxed) {
+                return Err(Error::Broker("broker cluster is stopped".into()));
             }
         };
         if !records.is_empty() {
@@ -421,11 +519,12 @@ impl BrokerCluster {
     /// Add broker nodes at runtime (pilot extend): leaders rebalance
     /// round-robin over the enlarged broker set.
     pub fn add_brokers(&self, nodes: Vec<NodeId>) {
-        let mut brokers = self.inner.broker_nodes.lock().unwrap();
+        let _control = self.inner.control.lock().unwrap();
+        let mut brokers = self.inner.broker_nodes.load().as_ref().clone();
         brokers.extend(nodes);
         let n = brokers.len();
-        drop(brokers);
-        for topic in self.inner.topics.lock().unwrap().values() {
+        self.inner.broker_nodes.store(Arc::new(brokers));
+        for topic in self.inner.topics.load().values() {
             for (i, p) in topic.partitions.iter().enumerate() {
                 p.leader.store(i % n, Ordering::Relaxed);
             }
@@ -436,14 +535,15 @@ impl BrokerCluster {
     /// rebalances over the remaining brokers (Kafka partition
     /// reassignment).  The last broker cannot be removed.
     pub fn remove_brokers(&self, nodes: &[NodeId]) -> Result<()> {
-        let mut brokers = self.inner.broker_nodes.lock().unwrap();
+        let _control = self.inner.control.lock().unwrap();
+        let mut brokers = self.inner.broker_nodes.load().as_ref().clone();
         if brokers.iter().filter(|b| !nodes.contains(b)).count() == 0 {
             return Err(Error::Broker("cannot remove the last broker".into()));
         }
         brokers.retain(|b| !nodes.contains(b));
         let n = brokers.len();
-        drop(brokers);
-        for topic in self.inner.topics.lock().unwrap().values() {
+        self.inner.broker_nodes.store(Arc::new(brokers));
+        for topic in self.inner.topics.load().values() {
             for (i, p) in topic.partitions.iter().enumerate() {
                 p.leader.store(i % n, Ordering::Relaxed);
             }
@@ -454,9 +554,9 @@ impl BrokerCluster {
     /// Stop the cluster: producers/consumers error out, fetchers wake.
     pub fn stop(&self) {
         self.inner.stopped.store(true, Ordering::Relaxed);
-        for topic in self.inner.topics.lock().unwrap().values() {
+        for topic in self.inner.topics.load().values() {
             for p in &topic.partitions {
-                p.data_arrived.notify_all();
+                p.notify_data();
             }
         }
     }
@@ -523,12 +623,12 @@ impl BrokerCluster {
         member: u64,
     ) -> Result<super::repartition::ServePlan> {
         // The topic handle must be read before the groups lock (lock
-        // order: topics, then groups — same as repartition_topic), so a
-        // repartition can complete between the two acquisitions.  If it
-        // does, the plan below would pair the *bumped* generation with
-        // the stale topic view (no fences) and the member would never
-        // re-refresh — so re-read the topic afterwards and retry until
-        // the epoch is stable across the computation.
+        // order: topic snapshot, then groups — same as repartition), so
+        // a repartition can complete between the two acquisitions.  If
+        // it does, the plan below would pair the *bumped* generation
+        // with the stale topic view (no fences) and the member would
+        // never re-refresh — so re-read the topic afterwards and retry
+        // until the epoch is stable across the computation.
         loop {
             let t = self.topic(topic)?;
             let plan = self.serve_plan_for(&t, group, topic, member)?;
@@ -629,7 +729,7 @@ impl BrokerCluster {
     /// onto the new partition set).
     pub fn commit(&self, group: &str, topic: &str, partition: usize, offset: u64) {
         // Topic handle fetched before the groups lock (lock order:
-        // topics, then groups — same as repartition_topic).
+        // topic snapshot, then groups — same as repartition_topic).
         let t = self.topic(topic).ok();
         let mut groups = self.inner.groups.lock().unwrap();
         let st = groups
@@ -674,6 +774,7 @@ impl BrokerCluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::broker::log::copytrack;
     use crate::cluster::Machine;
 
     fn cluster(brokers: usize) -> BrokerCluster {
@@ -773,11 +874,61 @@ mod tests {
         assert_eq!(io1[0].nic_out_bytes, io0[0].nic_out_bytes);
         assert_eq!(io1[0].disk_bytes - io0[0].disk_bytes, 100);
         assert_eq!(io1[1].nic_in_bytes, io0[1].nic_in_bytes, "other broker untouched");
-        // A fetch pays leader egress on the same node.
+        // A fetch pays leader egress on the same node — the modeled
+        // per-byte network cost survives the zero-copy fetch path.
         c.fetch("t", 0, 0, usize::MAX, 2, Duration::from_millis(10)).unwrap();
         let io2 = c.broker_io();
         assert_eq!(io2[0].nic_out_bytes - io1[0].nic_out_bytes, 100);
         assert_eq!(io2[0].nic_in_bytes, io1[0].nic_in_bytes);
+    }
+
+    #[test]
+    fn fetch_performs_no_payload_copies() {
+        // The zero-copy acceptance check: a produce→fetch roundtrip
+        // must not materialize payload bytes anywhere on the fetch
+        // path (debug builds count every materialization).
+        let c = cluster(1);
+        c.create_topic("t", 1).unwrap();
+        c.produce("t", 0, 1, &[vec![5u8; 4096], vec![6u8; 4096]])
+            .unwrap();
+        let before = copytrack::payload_copies();
+        let recs = c
+            .fetch("t", 0, 0, usize::MAX, 1, Duration::from_millis(10))
+            .unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].value, vec![5u8; 4096]);
+        assert_eq!(
+            copytrack::payload_copies(),
+            before,
+            "fetch must return views, not copies"
+        );
+    }
+
+    #[test]
+    fn cached_handle_produce_fetch_and_staleness() {
+        // The hot-path variants work against a cached Arc<Topic>, and
+        // a repartition flips the handle's validity probe so clients
+        // know to re-resolve.
+        let c = cluster(1);
+        c.create_topic("t", 2).unwrap();
+        let t = c.topic("t").unwrap();
+        assert!(t.is_current());
+        c.produce_to(&t, 0, 1, &[b"via-handle".to_vec()]).unwrap();
+        let recs = c
+            .fetch_from(&t, 0, 0, usize::MAX, 1, Duration::from_millis(10))
+            .unwrap();
+        assert_eq!(recs[0].value, b"via-handle");
+        c.repartition_topic("t", 4).unwrap();
+        assert!(!t.is_current(), "repartition invalidates cached handles");
+        // Stale produce is fenced; stale fetch still reads.
+        assert!(matches!(
+            c.produce_to(&t, 0, 1, &[vec![1]]),
+            Err(Error::StaleEpoch(_))
+        ));
+        let recs = c
+            .fetch_from(&t, 0, 0, usize::MAX, 1, Duration::from_millis(10))
+            .unwrap();
+        assert_eq!(recs.len(), 1);
     }
 
     #[test]

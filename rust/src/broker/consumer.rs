@@ -58,6 +58,10 @@ pub struct PartitionRecord {
 pub struct Consumer {
     cluster: BrokerCluster,
     topic: String,
+    /// Cached topic handle for the fetch hot path; revalidated
+    /// lock-free via [`super::cluster::Topic::is_current`] so polls
+    /// never resolve the topics snapshot while the handle is fresh.
+    topic_handle: Arc<super::cluster::Topic>,
     group: String,
     node: NodeId,
     member_id: u64,
@@ -93,9 +97,11 @@ impl Consumer {
         config: ConsumerConfig,
     ) -> Result<Self> {
         let (member_id, _) = cluster.group_join(group, topic);
+        let topic_handle = cluster.topic(topic)?;
         let mut c = Consumer {
             cluster,
             topic: topic.to_string(),
+            topic_handle,
             group: group.to_string(),
             node,
             member_id,
@@ -115,6 +121,12 @@ impl Consumer {
     }
 
     fn refresh_assignment(&mut self) -> Result<()> {
+        // Revalidate the cached topic handle first (lock-free when
+        // current): the fetch path below reads through it, and a grown
+        // partition set only exists on a fresh handle.
+        if !self.topic_handle.is_current() {
+            self.topic_handle = self.cluster.topic(&self.topic)?;
+        }
         let plan = self
             .cluster
             .group_serve_plan(&self.group, &self.topic, self.member_id)?;
@@ -218,8 +230,14 @@ impl Consumer {
                     continue;
                 }
             }
-            let mut recs = self.cluster.fetch(
-                &self.topic,
+            if p >= self.topic_handle.partitions.len() {
+                // A repartition grew the topic after the handle was
+                // refreshed but before this plan was computed: the new
+                // partition only exists on a fresh handle.
+                self.topic_handle = self.cluster.topic(&self.topic)?;
+            }
+            let mut recs = self.cluster.fetch_from(
+                &self.topic_handle,
                 p,
                 pos,
                 self.config.max_poll_bytes,

@@ -5,7 +5,10 @@
 //! scratch equivalent (DESIGN.md §3): a log-based publish/subscribe
 //! broker with
 //!
-//! * segmented append-only partition logs ([`log`]),
+//! * zero-copy shared-slab partition logs ([`log`]): appends land in
+//!   `Arc`-backed segment slabs behind a narrow writer lock, fetches
+//!   return [`SharedSlice`] views published through snapshot swaps —
+//!   readers never contend with producers and never copy payloads,
 //! * a cluster layer with partition leadership over simulated broker
 //!   nodes, blocking fetches, and consumer-group coordination
 //!   ([`cluster`]),
@@ -32,6 +35,6 @@ pub mod repartition;
 pub use cloud::{CloudBroker, CloudLatencyModel, CloudRecord};
 pub use cluster::{BrokerCluster, BrokerIoStat, Partition, Topic};
 pub use consumer::{Consumer, ConsumerConfig, PartitionRecord};
-pub use log::{LogConfig, PartitionLog, Record};
+pub use log::{copytrack, LogConfig, PartitionLog, Record, SharedSlice};
 pub use producer::{Partitioner, Producer, ProducerConfig};
-pub use repartition::{jump_hash, key_partition, EpochTransition, ServePlan};
+pub use repartition::{jump_hash, key_hash, key_partition, EpochTransition, ServePlan};

@@ -6,8 +6,17 @@
 //! batch flushes — backpressure arrives naturally as blocking time on
 //! the broker-side token buckets (NIC/disk), which is exactly how a
 //! saturated Kafka broker pushes back on `acks=all` producers.
+//!
+//! Fast path (§Perf L3): the key→partition route is resolved at append
+//! time into a 64-bit [`key_hash`] — batches carry `(route, value)`
+//! instead of an owned key `Vec`, so keyed sends allocate nothing
+//! beyond the payload.  A topic resize re-routes pending records by
+//! re-jump-hashing the stored route under the new partition count
+//! (per-key order is preserved: the hash determines the partition
+//! deterministically).  Flushes go through the cached topic handle
+//! ([`BrokerCluster::produce_to`]), so the send path never touches the
+//! cluster's topics snapshot, let alone a global lock.
 
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -16,7 +25,7 @@ use crate::error::{Error, Result};
 use crate::metrics::RateMeter;
 
 use super::cluster::BrokerCluster;
-use super::repartition::key_partition;
+use super::repartition::{jump_hash, key_hash};
 
 /// Partition selection strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,12 +61,13 @@ impl Default for ProducerConfig {
     }
 }
 
-/// A pending per-partition batch.  Records keep their key so that a
-/// topic resize can re-route not-yet-flushed records through the *new*
-/// key mapping (flushing them under stale routing would break per-key
-/// order across the repartition fence).
+/// A pending per-partition batch.  Records keep their key's *route
+/// hash* (not the key bytes) so that a topic resize can re-route
+/// not-yet-flushed records through the new key mapping (flushing them
+/// under stale routing would break per-key order across the
+/// repartition fence).
 struct Batch {
-    records: Vec<(Option<Vec<u8>>, Vec<u8>)>,
+    records: Vec<(Option<u64>, Vec<u8>)>,
     bytes: usize,
     opened: Instant,
 }
@@ -113,14 +123,13 @@ impl Producer {
     /// when the autoscaler repartitions).  The fast path is lock-free:
     /// every repartition bumps partition 0's epoch atomic (shared with
     /// our cached handle), so a matching epoch proves the cache is
-    /// current without touching the topics mutex on the send hot path.
-    /// On a change, every pending record is re-routed through the *new*
-    /// partition mapping — per-batch order is preserved, and keyed
-    /// records land where their key now lives, keeping per-key order
-    /// across the epoch fence.
+    /// current without touching the topics snapshot on the send hot
+    /// path.  On a change, every pending record is re-routed through
+    /// the *new* partition mapping — per-batch order is preserved, and
+    /// keyed records land where their route hash now maps, keeping
+    /// per-key order across the epoch fence.
     fn refresh_partitions(&mut self) -> Result<()> {
-        let cached = &self.topic_handle;
-        if cached.partitions[0].epoch.load(Ordering::Acquire) == cached.epoch() {
+        if self.topic_handle.is_current() {
             return Ok(());
         }
         self.topic_handle = self.cluster.topic(&self.topic)?;
@@ -128,7 +137,7 @@ impl Producer {
         if n == self.n_partitions {
             return Ok(());
         }
-        let pending: Vec<(Option<Vec<u8>>, Vec<u8>)> = self
+        let pending: Vec<(Option<u64>, Vec<u8>)> = self
             .batches
             .iter_mut()
             .flat_map(|b| std::mem::take(&mut b.records))
@@ -136,18 +145,20 @@ impl Producer {
         self.n_partitions = n;
         self.batches = (0..n).map(|_| Batch::new()).collect();
         self.rr_next = 0;
-        for (key, value) in pending {
+        for (route, value) in pending {
             // Recursion is benign: the count now matches, so the nested
             // refresh is a no-op unless another resize races in.
-            self.send(key.as_deref(), value)?;
+            self.send_routed(route, value)?;
         }
         Ok(())
     }
 
-    fn partition_for(&mut self, key: Option<&[u8]>) -> usize {
+    fn partition_for(&mut self, route: Option<u64>) -> usize {
         match self.config.partitioner {
             Partitioner::Fixed(p) => p % self.n_partitions,
-            Partitioner::Keyed => key_partition(key.unwrap_or(b""), self.n_partitions),
+            Partitioner::Keyed => {
+                jump_hash(route.unwrap_or_else(|| key_hash(b"")), self.n_partitions)
+            }
             Partitioner::RoundRobin => {
                 let p = self.rr_next;
                 self.rr_next = (self.rr_next + 1) % self.n_partitions;
@@ -158,15 +169,22 @@ impl Producer {
 
     /// Queue one record; flushes the target partition's batch if full or
     /// lingered out.  Returns true if a flush happened.
+    ///
+    /// The key is hashed once here — only the 8-byte route travels with
+    /// the record from this point on.
     pub fn send(&mut self, key: Option<&[u8]>, value: Vec<u8>) -> Result<bool> {
+        self.send_routed(key.map(key_hash), value)
+    }
+
+    fn send_routed(&mut self, route: Option<u64>, value: Vec<u8>) -> Result<bool> {
         self.refresh_partitions()?;
-        let p = self.partition_for(key);
+        let p = self.partition_for(route);
         let batch = &mut self.batches[p];
         if batch.records.is_empty() {
             batch.opened = Instant::now();
         }
         batch.bytes += value.len();
-        batch.records.push((key.map(|k| k.to_vec()), value));
+        batch.records.push((route, value));
         if batch.bytes >= self.config.batch_bytes || batch.opened.elapsed() >= self.config.linger
         {
             self.flush_partition(p)?;
@@ -180,9 +198,12 @@ impl Producer {
             return Ok(());
         }
         let batch = std::mem::replace(&mut self.batches[p], Batch::new());
-        let (keys, values): (Vec<Option<Vec<u8>>>, Vec<Vec<u8>>) =
+        let (routes, values): (Vec<Option<u64>>, Vec<Vec<u8>>) =
             batch.records.into_iter().unzip();
-        match self.cluster.produce(&self.topic, p, self.node, &values) {
+        match self
+            .cluster
+            .produce_to(&self.topic_handle, p, self.node, &values)
+        {
             Ok(_) => {
                 self.metrics
                     .record_many(values.len() as u64, batch.bytes as u64);
@@ -190,11 +211,11 @@ impl Producer {
             }
             // The produce raced a repartition (partition retired, or the
             // log was sealed after routing): re-send every record, which
-            // refreshes the routing table and re-hashes keys onto the
+            // refreshes the routing table and re-maps routes onto the
             // new partition set.
             Err(Error::StaleEpoch(_)) => {
-                for (key, value) in keys.into_iter().zip(values) {
-                    self.send(key.as_deref(), value)?;
+                for (route, value) in routes.into_iter().zip(values) {
+                    self.send_routed(route, value)?;
                 }
                 Ok(())
             }
@@ -298,6 +319,33 @@ mod tests {
     }
 
     #[test]
+    fn keyed_route_matches_key_partition() {
+        // The stored route must land exactly where key_partition says
+        // the key lives — applications predicting placements and the
+        // producer's batch routing agree.
+        let c = setup(8);
+        let mut p = Producer::new(
+            c.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: 1,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for key in [b"alpha".as_slice(), b"beta", b"gamma", b""] {
+            p.send(Some(key), key.to_vec()).unwrap();
+            let expect = super::super::repartition::key_partition(key, 8);
+            assert!(
+                c.end_offset("t", expect).unwrap() > 0,
+                "key {key:?} should land on partition {expect}"
+            );
+        }
+    }
+
+    #[test]
     fn batching_defers_until_flush() {
         let c = setup(1);
         let mut p = Producer::new(
@@ -351,6 +399,42 @@ mod tests {
         }
         assert_eq!(c.end_offset("t", 0).unwrap(), counts[0] + 3);
         assert_eq!(p.metrics.messages(), 15);
+    }
+
+    #[test]
+    fn pending_keyed_records_reroute_on_resize() {
+        // Records batched before a resize must land where their key
+        // maps under the *new* partition count — the stored route hash
+        // re-jump-hashes without the original key bytes.
+        let c = setup(2);
+        let mut p = Producer::new(
+            c.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: usize::MAX,
+                linger: Duration::from_secs(3600),
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let keys = [b"k1".as_slice(), b"k2", b"k3", b"k4", b"k5"];
+        for key in keys {
+            p.send(Some(key), key.to_vec()).unwrap();
+        }
+        c.repartition_topic("t", 8).unwrap();
+        p.flush().unwrap();
+        for key in keys {
+            let expect = super::super::repartition::key_partition(key, 8);
+            let recs = c
+                .fetch("t", expect, 0, usize::MAX, 1, Duration::from_millis(10))
+                .unwrap();
+            assert!(
+                recs.iter().any(|r| r.value == key),
+                "key {key:?} must land on its new partition {expect}"
+            );
+        }
     }
 
     #[test]

@@ -94,16 +94,26 @@ pub fn jump_hash(mut key: u64, buckets: usize) -> usize {
     b as usize
 }
 
-/// FNV-1a over the key bytes, then jump-hash into the partition count —
-/// the keyed-routing function producers use, shared here so tests and
-/// applications can predict placements.
-pub fn key_partition(key: &[u8], partitions: usize) -> usize {
+/// FNV-1a over the key bytes — the stable 64-bit route a keyed producer
+/// resolves *once at append time* and carries in its batches instead of
+/// an owned copy of the key (§Perf: no per-record key `Vec`).  Feeding
+/// the same hash into [`jump_hash`] under any partition count yields the
+/// key's partition there, so pending records re-route across resizes
+/// without ever re-reading key bytes.
+pub fn key_hash(key: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in key {
         h ^= *b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
-    jump_hash(h, partitions)
+    h
+}
+
+/// [`key_hash`] then jump-hash into the partition count — the
+/// keyed-routing function producers use, shared here so tests and
+/// applications can predict placements.
+pub fn key_partition(key: &[u8], partitions: usize) -> usize {
+    jump_hash(key_hash(key), partitions)
 }
 
 impl BrokerCluster {
@@ -121,8 +131,9 @@ impl BrokerCluster {
         if new_active == 0 {
             return Err(Error::Broker("topic needs >= 1 partition".into()));
         }
-        let n_brokers = self.inner.broker_nodes.lock().unwrap().len().max(1);
-        let mut topics = self.inner.topics.lock().unwrap();
+        let control = self.inner.control.lock().unwrap();
+        let n_brokers = self.inner.broker_nodes.load().len().max(1);
+        let topics = self.inner.topics.load();
         let t = topics
             .get(topic)
             .cloned()
@@ -133,13 +144,14 @@ impl BrokerCluster {
         let new_epoch = t.epoch + 1;
 
         // Seal every existing log: record the fence and bump the
-        // partition's epoch under the log lock, so concurrent produces
-        // either land below the fence or fail StaleEpoch and re-route.
+        // partition's epoch while the log's writer lock is held, so
+        // concurrent produces either land below the fence or fail
+        // StaleEpoch and re-route.
         let mut fences = Vec::with_capacity(t.partitions.len());
         for p in &t.partitions {
-            let mut log = p.log.lock().unwrap();
-            fences.push(log.seal_epoch(new_epoch));
-            p.epoch.store(new_epoch, Ordering::Release);
+            fences.push(p.log.seal_epoch_then(new_epoch, || {
+                p.epoch.store(new_epoch, Ordering::Release);
+            }));
         }
 
         let mut partitions = t.partitions.clone();
@@ -158,7 +170,12 @@ impl BrokerCluster {
             active: new_active,
             fences,
         });
-        topics.insert(
+        // Publish the new epoch's topic snapshot copy-on-write: in-
+        // flight produce/fetch keep their old `Arc<Topic>` (partition
+        // objects are shared, so reads stay valid), and the epoch
+        // fences above already routed stale producers to re-resolve.
+        let mut next = topics.as_ref().clone();
+        next.insert(
             topic.to_string(),
             Arc::new(Topic {
                 name: t.name.clone(),
@@ -168,7 +185,8 @@ impl BrokerCluster {
                 transitions,
             }),
         );
-        drop(topics);
+        self.inner.topics.store(Arc::new(next));
+        drop(control);
 
         // Rebalance every attached group so consumers pick up the
         // transition (fences / new partition set) on their next poll.

@@ -345,9 +345,14 @@ fn process_range(
         node,
         batch,
     };
+    // Resolve the topic handle once per task: the fetch loop below runs
+    // against it without re-touching the cluster's topics snapshot
+    // (partition ids are stable across epochs, so a mid-range
+    // repartition cannot invalidate reads).
+    let topic = cluster.topic(&config.topic)?;
     while pos < end {
-        let records = cluster.fetch(
-            &config.topic,
+        let records = cluster.fetch_from(
+            &topic,
             partition,
             pos,
             config.max_fetch_bytes,

@@ -23,6 +23,7 @@ use pilot_streaming::miniapp::{
 use pilot_streaming::pilot::{FrameworkKind, PilotComputeDescription, PilotComputeService};
 use pilot_streaming::runtime::ModelRuntime;
 use pilot_streaming::sim::CostModel;
+use pilot_streaming::util::Json;
 use pilot_streaming::{Error, Result};
 
 const USAGE: &str = "\
@@ -37,6 +38,8 @@ USAGE:
                         [--config <file.json>]
   pilot-streaming calibrate [--reps <n>]
   pilot-streaming artifacts
+  pilot-streaming bench-gate --current <run.json> --baseline <committed.json>
+                        --name <bench-name> [--max-ratio <r>] [--stat <mean|p50|p95>]
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -121,6 +124,14 @@ fn run(args: &[String]) -> Result<()> {
         "artifacts" => {
             check_flags("artifacts", &flags, &[])?;
             cmd_artifacts()
+        }
+        "bench-gate" => {
+            check_flags(
+                "bench-gate",
+                &flags,
+                &["current", "baseline", "name", "max-ratio", "stat"],
+            )?;
+            cmd_bench_gate(&flags)
         }
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -352,6 +363,80 @@ fn cmd_artifacts() -> Result<()> {
     Ok(())
 }
 
+/// Perf smoke gate: fail if a named hotpath measurement in `--current`
+/// (a `cargo bench -- --json` document) regressed more than
+/// `--max-ratio` versus the committed `--baseline` (`BENCH_pr*.json`).
+/// Coarse by design — it catches "someone reintroduced the memcpy", not
+/// single-digit-percent drift.
+fn cmd_bench_gate(flags: &HashMap<String, String>) -> Result<()> {
+    let need = |key: &str| {
+        flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| Error::Config(format!("bench-gate requires --{key}\n{USAGE}")))
+    };
+    let current_path = need("current")?;
+    let baseline_path = need("baseline")?;
+    let name = need("name")?;
+    let max_ratio: f64 = flags
+        .get("max-ratio")
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| Error::Config(format!("--max-ratio '{s}' is not a number")))
+        })
+        .transpose()?
+        .unwrap_or(2.0);
+    let stat = flags.get("stat").map(String::as_str).unwrap_or("p50");
+    let stat_key = match stat {
+        "mean" => "mean_secs",
+        "p50" => "p50_secs",
+        "p95" => "p95_secs",
+        other => {
+            return Err(Error::Config(format!(
+                "--stat must be mean|p50|p95, got '{other}'"
+            )))
+        }
+    };
+
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {path}: {e}")))?;
+        Json::parse(&text)
+    };
+    let current = bench_result(&load(&current_path)?, &name, stat_key).ok_or_else(|| {
+        Error::Config(format!("{current_path}: no '{name}' measurement with {stat_key}"))
+    })?;
+    let baseline = bench_result(&load(&baseline_path)?, &name, stat_key).ok_or_else(|| {
+        Error::Config(format!("{baseline_path}: no '{name}' measurement with {stat_key}"))
+    })?;
+    let ratio = current / baseline.max(1e-12);
+    println!(
+        "bench-gate: {name} {stat} current={current:.3e}s baseline={baseline:.3e}s \
+         ratio={ratio:.2} (max {max_ratio})"
+    );
+    if ratio > max_ratio {
+        return Err(Error::Config(format!(
+            "perf gate failed: {name} regressed {ratio:.2}x > {max_ratio}x vs baseline"
+        )));
+    }
+    Ok(())
+}
+
+/// Find measurement `name`'s `stat_key` in a bench JSON document —
+/// top-level `results` first, then an embedded `baseline` document (so
+/// a trajectory file works as either side of the gate).
+fn bench_result(doc: &Json, name: &str, stat_key: &str) -> Option<f64> {
+    let find = |doc: &Json| -> Option<f64> {
+        doc.get("results")?
+            .as_arr()?
+            .iter()
+            .find(|r| r.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|r| r.get(stat_key))
+            .and_then(Json::as_f64)
+    };
+    find(doc).or_else(|| doc.get("baseline").and_then(find))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -394,5 +479,57 @@ mod tests {
         assert!(err.to_string().contains("unknown flag"), "{err}");
         let err = run(&args(&["start", "--nodse", "4"])).unwrap_err();
         assert!(err.to_string().contains("--nodse"), "{err}");
+    }
+
+    fn bench_doc(name: &str, p50: f64) -> Json {
+        Json::obj().set(
+            "results",
+            Json::Arr(vec![Json::obj()
+                .set("name", name)
+                .set("iters", 10usize)
+                .set("mean_secs", p50)
+                .set("p50_secs", p50)
+                .set("p95_secs", p50)]),
+        )
+    }
+
+    #[test]
+    fn bench_result_reads_top_level_and_embedded_baseline() {
+        let doc = bench_doc("log/read-8x320k", 2e-6);
+        assert_eq!(bench_result(&doc, "log/read-8x320k", "p50_secs"), Some(2e-6));
+        assert_eq!(bench_result(&doc, "missing", "p50_secs"), None);
+        // A trajectory file: current results wrap an embedded baseline.
+        let wrapped = bench_doc("other", 1.0).set("baseline", bench_doc("log/read-8x320k", 5e-4));
+        assert_eq!(
+            bench_result(&wrapped, "log/read-8x320k", "p50_secs"),
+            Some(5e-4)
+        );
+    }
+
+    #[test]
+    fn bench_gate_passes_and_fails_on_ratio() {
+        let dir = std::env::temp_dir().join(format!("bench-gate-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let current = dir.join("current.json");
+        let baseline = dir.join("baseline.json");
+        std::fs::write(&current, bench_doc("log/read-8x320k", 3e-6).to_string()).unwrap();
+        std::fs::write(&baseline, bench_doc("log/read-8x320k", 2e-6).to_string()).unwrap();
+        let gate = |ratio: &str| {
+            run(&args(&[
+                "bench-gate",
+                "--current",
+                current.to_str().unwrap(),
+                "--baseline",
+                baseline.to_str().unwrap(),
+                "--name",
+                "log/read-8x320k",
+                "--max-ratio",
+                ratio,
+            ]))
+        };
+        assert!(gate("2.0").is_ok(), "1.5x fits under 2x");
+        let err = gate("1.2").unwrap_err();
+        assert!(err.to_string().contains("perf gate failed"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

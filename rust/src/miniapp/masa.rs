@@ -21,7 +21,7 @@ use crate::metrics::{Histogram, RateMeter};
 use crate::runtime::ModelRuntime;
 use crate::util::Rng;
 
-use super::wire::{now_ns, Message, PayloadKind};
+use super::wire::{now_ns, Message, MessageView, PayloadKind};
 
 /// Processing algorithm kinds (paper §6.4 evaluates exactly these).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -236,12 +236,49 @@ impl MasaProcessor {
     }
 }
 
+impl MasaProcessor {
+    /// Process a borrowed-payload view: kind and tensor-shape checks
+    /// run against the 26-byte header, so a mismatched or misrouted
+    /// message is rejected *before* the tensor is materialized.  Only a
+    /// view that will actually reach compute pays the one f32 copy the
+    /// PJRT execute boundary needs.
+    pub fn process_view(&self, view: &MessageView<'_>) -> Result<()> {
+        let expect = match (self.kind, view.kind) {
+            (ProcessorKind::KMeans, PayloadKind::KmeansPoints) => {
+                let m = self.runtime.manifest();
+                m.kmeans.n_points * m.kmeans.dim
+            }
+            (ProcessorKind::GridRec, PayloadKind::Sinogram)
+            | (ProcessorKind::MlEm, PayloadKind::Sinogram) => {
+                let m = self.runtime.manifest();
+                m.tomo.n_angles * m.tomo.n_det
+            }
+            (kind, payload) => {
+                return Err(Error::Wire(format!(
+                    "processor {kind:?} cannot handle payload {payload:?}"
+                )));
+            }
+        };
+        if view.n_values() != expect {
+            return Err(Error::Wire(format!(
+                "message has {} values, artifact expects {expect}",
+                view.n_values()
+            )));
+        }
+        self.process_message(&view.to_message())
+    }
+}
+
 impl BatchProcessor for MasaProcessor {
     fn process(&self, _ctx: &TaskContext, records: &[Record]) -> Result<()> {
         for r in records {
-            match Message::decode(&r.value) {
-                Ok(msg) => {
-                    if let Err(e) = self.process_message(&msg) {
+            // Borrowed-payload decode straight out of the log slab: the
+            // record value is a zero-copy view, and decode_view parses
+            // only the header — stats and latency stamps never touch
+            // the tensor bytes.
+            match Message::decode_view(&r.value) {
+                Ok(view) => {
+                    if let Err(e) = self.process_view(&view) {
                         self.stats.errors.fetch_add(1, Ordering::Relaxed);
                         return Err(e);
                     }
@@ -249,7 +286,7 @@ impl BatchProcessor for MasaProcessor {
                     let now = now_ns();
                     self.stats
                         .e2e_latency
-                        .record_ns(now.saturating_sub(msg.produced_ns));
+                        .record_ns(now.saturating_sub(view.produced_ns));
                 }
                 Err(e) => {
                     self.stats.errors.fetch_add(1, Ordering::Relaxed);

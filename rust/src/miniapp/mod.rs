@@ -21,4 +21,4 @@ pub mod wire;
 
 pub use masa::{KmeansModel, MasaApp, MasaConfig, MasaProcessor, ProcessorKind, ProcessorStats};
 pub use mass::{MassConfig, MassReport, MassSource, SourceKind};
-pub use wire::{Message, PayloadKind};
+pub use wire::{Message, MessageView, PayloadKind};

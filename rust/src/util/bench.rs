@@ -2,10 +2,17 @@
 //! set, so `cargo bench` targets use this instead).
 //!
 //! Measures wall-clock per iteration with warmup, reports mean / p50 /
-//! p95 and throughput, and supports `--quick` (fewer iterations) and
-//! name filters passed by `cargo bench <filter>`.
+//! p95 and throughput, and supports `--quick` (fewer iterations), name
+//! filters passed by `cargo bench <filter>`, and machine-readable
+//! output: `--json` prints a JSON document of every measurement on
+//! [`Bench::emit`] (suppressing the human-readable lines), and
+//! `--baseline=FILE` embeds a previously-committed JSON document under
+//! a `"baseline"` key — that is how `BENCH_pr*.json` files carry the
+//! perf trajectory forward (each PR's run embeds its predecessor).
 
 use std::time::Instant;
+
+use super::json::Json;
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
@@ -28,6 +35,24 @@ impl Measurement {
             fmt_secs(self.p95_secs),
         );
     }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_secs", self.mean_secs)
+            .set("p50_secs", self.p50_secs)
+            .set("p95_secs", self.p95_secs)
+    }
+}
+
+/// One whole-workload measurement with custom metrics (see
+/// [`Bench::run_once`]).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub secs: f64,
+    pub metrics: Vec<(String, f64)>,
 }
 
 pub fn fmt_secs(s: f64) -> String {
@@ -46,7 +71,10 @@ pub fn fmt_secs(s: f64) -> String {
 pub struct Bench {
     filter: Option<String>,
     quick: bool,
+    json: bool,
+    baseline: Option<String>,
     results: Vec<Measurement>,
+    workloads: Vec<Workload>,
 }
 
 impl Default for Bench {
@@ -57,16 +85,23 @@ impl Default for Bench {
 
 impl Bench {
     /// Parse `cargo bench`-style args: optional name filter, `--quick`,
-    /// and ignore harness flags like `--bench`.  `--test` (what
-    /// `cargo bench -- --test` passes for libtest's smoke mode) maps to
-    /// quick mode, so CI can compile + one-shot every bench cheaply.
+    /// `--json`, `--baseline=FILE`, and ignore harness flags like
+    /// `--bench`.  `--test` (what `cargo bench -- --test` passes for
+    /// libtest's smoke mode) maps to quick mode, so CI can compile +
+    /// one-shot every bench cheaply.
     pub fn from_args() -> Self {
         let mut filter = None;
         let mut quick = std::env::var_os("PILOT_BENCH_QUICK").is_some();
+        let mut json = false;
+        let mut baseline = None;
         for a in std::env::args().skip(1) {
             match a.as_str() {
                 "--quick" | "--test" => quick = true,
+                "--json" => json = true,
                 "--bench" | "--exact" => {}
+                s if s.starts_with("--baseline=") => {
+                    baseline = Some(s["--baseline=".len()..].to_string());
+                }
                 s if s.starts_with("--") => {}
                 s => filter = Some(s.to_string()),
             }
@@ -74,12 +109,21 @@ impl Bench {
         Bench {
             filter,
             quick,
+            json,
+            baseline,
             results: Vec::new(),
+            workloads: Vec::new(),
         }
     }
 
     pub fn quick(&self) -> bool {
         self.quick
+    }
+
+    /// Whether `--json` was requested (human-readable lines are
+    /// suppressed; callers should invoke [`Bench::emit`] at the end).
+    pub fn json(&self) -> bool {
+        self.json
     }
 
     fn enabled(&self, name: &str) -> bool {
@@ -110,14 +154,16 @@ impl Bench {
             p50_secs: samples[samples.len() / 2],
             p95_secs: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
         };
-        m.print();
+        if !self.json {
+            m.print();
+        }
         self.results.push(m.clone());
         Some(m)
     }
 
     /// Run a whole-workload measurement once and report custom metrics
-    /// (used by the figure harnesses where "one iteration" is a full
-    /// simulated experiment).
+    /// (used by the figure harnesses — and the contention benches —
+    /// where "one iteration" is a full experiment).
     pub fn run_once<F: FnOnce() -> Vec<(String, f64)>>(&mut self, name: &str, f: F) {
         if !self.enabled(name) {
             return;
@@ -125,15 +171,73 @@ impl Bench {
         let t0 = Instant::now();
         let metrics = f();
         let secs = t0.elapsed().as_secs_f64();
-        print!("{:<44} {:>10}  ", name, fmt_secs(secs));
-        for (k, v) in &metrics {
-            print!("{k}={v:.3}  ");
+        if !self.json {
+            print!("{:<44} {:>10}  ", name, fmt_secs(secs));
+            for (k, v) in &metrics {
+                print!("{k}={v:.3}  ");
+            }
+            println!();
         }
-        println!();
+        self.workloads.push(Workload {
+            name: name.to_string(),
+            secs,
+            metrics,
+        });
     }
 
     pub fn results(&self) -> &[Measurement] {
         &self.results
+    }
+
+    pub fn workloads(&self) -> &[Workload] {
+        &self.workloads
+    }
+
+    /// The full run as a JSON document: measurements, workloads, and —
+    /// when `--baseline=FILE` parsed — that file embedded verbatim
+    /// under `"baseline"` (so one document carries the perf trajectory).
+    pub fn to_json(&self, bench_name: &str) -> Json {
+        let results = Json::Arr(self.results.iter().map(|m| m.to_json()).collect());
+        let workloads = Json::Arr(
+            self.workloads
+                .iter()
+                .map(|w| {
+                    let mut metrics = Json::obj();
+                    for (k, v) in &w.metrics {
+                        metrics = metrics.set(k, *v);
+                    }
+                    Json::obj()
+                        .set("name", w.name.as_str())
+                        .set("secs", w.secs)
+                        .set("metrics", metrics)
+                })
+                .collect(),
+        );
+        let mut doc = Json::obj()
+            .set("bench", bench_name)
+            .set("quick", self.quick)
+            .set("results", results)
+            .set("workloads", workloads);
+        if let Some(path) = &self.baseline {
+            match std::fs::read_to_string(path).map_err(|e| e.to_string()) {
+                Ok(text) => match Json::parse(&text) {
+                    Ok(parsed) => doc = doc.set("baseline", parsed),
+                    Err(e) => {
+                        doc = doc.set("baseline_error", format!("parse {path}: {e}").as_str())
+                    }
+                },
+                Err(e) => doc = doc.set("baseline_error", format!("read {path}: {e}").as_str()),
+            }
+        }
+        doc
+    }
+
+    /// Print the JSON document to stdout when `--json` was requested;
+    /// no-op otherwise.  Call once at the end of a bench main.
+    pub fn emit(&self, bench_name: &str) {
+        if self.json {
+            println!("{}", self.to_json(bench_name));
+        }
     }
 }
 
@@ -147,5 +251,41 @@ mod tests {
         assert!(fmt_secs(5e-6).contains("µs"));
         assert!(fmt_secs(5e-3).contains("ms"));
         assert!(fmt_secs(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn json_doc_carries_results_and_workloads() {
+        let mut bench = Bench {
+            filter: None,
+            quick: true,
+            json: true,
+            baseline: None,
+            results: Vec::new(),
+            workloads: Vec::new(),
+        };
+        bench.run("unit/spin", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        bench.run_once("unit/workload", || vec![("msgs_per_sec".to_string(), 42.0)]);
+        let doc = bench.to_json("unit");
+        assert_eq!(doc.get("bench").and_then(|j| j.as_str()), Some("unit"));
+        let results = doc.get("results").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("name").and_then(|j| j.as_str()),
+            Some("unit/spin")
+        );
+        assert!(results[0].get("mean_secs").and_then(|j| j.as_f64()).unwrap() >= 0.0);
+        let workloads = doc.get("workloads").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(workloads.len(), 1);
+        let metrics = workloads[0].get("metrics").unwrap();
+        assert_eq!(
+            metrics.get("msgs_per_sec").and_then(|j| j.as_f64()),
+            Some(42.0)
+        );
+        // Round-trips through the parser (what bench-gate consumes).
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, doc);
     }
 }

@@ -2,11 +2,13 @@
 //! clap or criterion in the vendored dependency set — see DESIGN.md
 //! §Substitutions).
 
+pub mod arcswap;
 pub mod bench;
 pub mod json;
 pub mod rng;
 pub mod schedule;
 
+pub use arcswap::ArcCell;
 pub use json::Json;
 pub use rng::Rng;
 pub use schedule::RateSchedule;

@@ -37,7 +37,7 @@ fn check<F: Fn(&mut Rng)>(name: &str, f: F) {
 #[test]
 fn prop_log_offsets_dense_and_values_roundtrip() {
     check("log-roundtrip", |rng| {
-        let mut log = PartitionLog::new(LogConfig {
+        let log = PartitionLog::new(LogConfig {
             segment_bytes: 1 + rng.below(64),
             retention_bytes: None,
         });
@@ -71,7 +71,7 @@ fn prop_log_offsets_dense_and_values_roundtrip() {
 fn prop_log_retention_never_loses_tail() {
     check("log-retention", |rng| {
         let retention = 64 + rng.below(256);
-        let mut log = PartitionLog::new(LogConfig {
+        let log = PartitionLog::new(LogConfig {
             segment_bytes: 16 + rng.below(32),
             retention_bytes: Some(retention),
         });
