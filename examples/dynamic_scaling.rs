@@ -1,5 +1,7 @@
 //! Dynamic resource management under backpressure (paper §1, §4) —
-//! now *closed-loop*: no manual `extend_pilot` calls anywhere.
+//! *closed-loop and declarative*: the whole application, including both
+//! autoscale loops, is one `StreamingApp` spec; no manual
+//! `extend_pilot` calls anywhere.
 //!
 //! "Minor changes in data rates ... can lead to backpressure and a
 //! dysfunctional system.  Pilot-Streaming provides the ability to
@@ -7,46 +9,46 @@
 //! runtime."
 //!
 //! A bursty MASS source streams KMeans batches through the pilot-managed
-//! broker into a MASA KMeans consumer on the micro-batch engine.  Every
-//! decision now flows through the two-stage pipeline: policies emit
-//! *intents*, and the planner turns each intent into a costed plan
-//! (per-framework extension costs weighed against drain benefit;
-//! broker-tier steps co-scheduled when needed) before the controller
-//! actuates anything.  Two [`Autoscaler`] control loops watch the same
-//! consumer-lag signal:
+//! broker into a KMeans consumer stage.  Every decision flows through
+//! the two-stage pipeline: policies emit *intents*, and the planner
+//! turns each intent into a costed plan (per-framework extension costs
+//! weighed against drain benefit; broker-tier steps co-scheduled when
+//! needed) before the controller actuates anything.  Two autoscale
+//! specs watch the same stage signals:
 //!
 //! * the **processing loop** (threshold policy + hysteresis) extends the
-//!   Spark pilot while lag stays high and shrinks it back after the
-//!   burst drains — spawned with the Kafka pilot as its broker target,
-//!   so plans may co-schedule broker extensions;
+//!   stage's Spark pilot while lag stays high and shrinks it back after
+//!   the burst drains — with broker co-scheduling enabled, so plans may
+//!   pair broker extensions with repartitions;
 //! * the **broker loop** (a custom produce-rate policy, showing the
 //!   pluggable [`ScalingPolicy`] SPI) adds a broker node while the
 //!   offered rate saturates the cluster and releases it afterwards.
 //!
-//! The full step-by-step plan history lands on a [`ScalingTimeline`]
-//! (with each step's modeled cost in the `cost_s` column); the run
-//! asserts a complete scale-up AND scale-down cycle happened, then
-//! replays the planner's co-scheduled repartition + broker-extension
-//! behaviour deterministically at 32-node Wrangler scale on the
-//! simulation plane.
+//! The full step-by-step plan history lands on the handle's scaling
+//! timelines (with each step's modeled cost in the `cost_s` column);
+//! the run asserts a complete scale-up AND scale-down cycle happened,
+//! then replays the planner's co-scheduled repartition +
+//! broker-extension behaviour deterministically at 32-node Wrangler
+//! scale on the simulation plane.
 //!
 //! Run with: `cargo run --release --example dynamic_scaling`
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use pilot_streaming::app::{
+    AutoscaleSpec, SourceSpec, StageSpec, StreamProcessor, StreamingApp,
+};
 use pilot_streaming::autoscale::{
-    Autoscaler, AutoscalerConfig, PartitionElastic, Planner, PlannerConfig, ScalingIntent,
-    ScalingPolicy, SignalSnapshot, ThresholdPolicy,
+    PartitionElastic, Planner, PlannerConfig, ScalingIntent, ScalingPolicy, SignalSnapshot,
+    ThresholdPolicy,
 };
 use pilot_streaming::broker::Record;
 use pilot_streaming::cluster::Machine;
-use pilot_streaming::engine::{StreamingJobConfig, TaskContext};
+use pilot_streaming::engine::TaskContext;
 use pilot_streaming::metrics::ScalingAction;
-use pilot_streaming::miniapp::{MasaApp, MasaConfig, MassConfig, MassSource, SourceKind};
-use pilot_streaming::pilot::{
-    DaskDescription, KafkaDescription, PilotComputeService, PilotScalingEvent, SparkDescription,
-};
+use pilot_streaming::miniapp::{MasaProcessor, MassConfig, ProcessorKind, SourceKind};
+use pilot_streaming::pilot::{KafkaDescription, PilotComputeService, PilotScalingEvent};
 use pilot_streaming::runtime::ModelRuntime;
 use pilot_streaming::sim::{CostModel, ElasticScenario, ElasticSim, SimMachine};
 use pilot_streaming::util::RateSchedule;
@@ -84,22 +86,15 @@ impl ScalingPolicy for BrokerLoadPolicy {
 }
 
 fn main() -> Result<()> {
-    // ---- Pilot-managed deployment -----------------------------------
     let service = Arc::new(PilotComputeService::new(Machine::unthrottled(8)));
-    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1))?;
-    let (dask, producers) =
-        service.start_dask(DaskDescription::new(1).with_config("workers_per_node", "2"))?;
-    let (spark, engine) =
-        service.start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))?;
-    cluster.create_topic("load", 8)?;
 
     // Every pilot lifecycle change is observable through the service's
-    // scaling hooks — here they narrate the run.
+    // scaling hooks — here they narrate the run (launch included).
     service.add_scaling_hook(Arc::new(|e: &PilotScalingEvent| {
         println!("[pilot-event] {:?}: {} ({} nodes)", e.kind, e.pilot_id, e.nodes);
     }));
 
-    // ---- MASA KMeans consumer ---------------------------------------
+    // ---- Consumer stage ----------------------------------------------
     // With AOT artifacts present the real PJRT-executed KMeans runs;
     // otherwise a stand-in with the same per-message cost keeps the
     // control problem identical.
@@ -107,79 +102,25 @@ fn main() -> Result<()> {
     let masa = match ModelRuntime::load_default() {
         Ok(rt) if rt.warmup("kmeans_score").is_ok() => {
             points_per_msg = rt.manifest().kmeans.n_points;
-            Some(MasaApp::new(
-                MasaConfig::new(
-                    pilot_streaming::miniapp::ProcessorKind::KMeans,
-                    "load",
-                    Duration::from_millis(100),
-                ),
-                rt,
-            ))
+            Some(MasaProcessor::new(ProcessorKind::KMeans, rt))
         }
         _ => None,
     };
-    // The group whose committed offsets define lag (what both
-    // autoscalers watch).
-    let group = masa
-        .as_ref()
-        .map(|app| app.group())
-        .unwrap_or_else(|| "scaler".to_string());
-    let job = match &masa {
-        Some(app) => {
+    let processor: Arc<dyn StreamProcessor> = match &masa {
+        Some(p) => {
             println!("consumer: MASA streaming KMeans (PJRT artifacts)");
-            app.start(&engine, cluster.clone())?
+            p.clone()
         }
         None => {
             println!("consumer: synthetic 25 ms/msg KMeans stand-in (`make artifacts` for real)");
-            let processor = |_: &TaskContext, recs: &[Record]| {
+            Arc::new(|_: &TaskContext, recs: &[Record]| {
                 std::thread::sleep(Duration::from_millis(25) * recs.len() as u32);
                 Ok(())
-            };
-            let mut jc = StreamingJobConfig::new("load", Duration::from_millis(100));
-            jc.group = group.clone();
-            engine.start_job(cluster.clone(), jc, Arc::new(processor))?
+            })
         }
     };
 
-    // ---- Two closed control loops -----------------------------------
-    let processing_scaler = Autoscaler::spawn_with_broker(
-        service.clone(),
-        spark.clone(),
-        // The planner may co-schedule broker extensions with a
-        // processing scale-up (saturation-triggered here; the machine
-        // is unthrottled, so in this run they stay hypothetical).
-        Some(kafka.clone()),
-        cluster.clone(),
-        Some(job.stats().clone()),
-        Box::new(
-            ThresholdPolicy::new(24, 2)
-                .with_sustain(2)
-                .with_cooldown_secs(0.5)
-                .with_step(3),
-        ),
-        AutoscalerConfig::new("load", &group)
-            .with_sample_interval(Duration::from_millis(100))
-            .with_max_extension_nodes(3)
-            .with_max_step(3)
-            .with_window(Duration::from_millis(100)),
-    );
-    let broker_scaler = Autoscaler::spawn(
-        service.clone(),
-        kafka.clone(),
-        cluster.clone(),
-        None,
-        Box::new(BrokerLoadPolicy {
-            up_msgs_per_sec: 60.0,
-            down_msgs_per_sec: 10.0,
-            cooldown_secs: 1.0,
-            last_action_t: f64::NEG_INFINITY,
-        }),
-        AutoscalerConfig::new("load", &group)
-            .with_sample_interval(Duration::from_millis(200))
-            .with_max_extension_nodes(1),
-    );
-
-    // ---- Bursty MASS source -----------------------------------------
+    // ---- The whole application, both control loops included ----------
     // A 1.2 s burst far above what the single base executor absorbs,
     // then a trickle.  The real PJRT KMeans is much faster per message
     // than the stand-in, so the burst rate scales with the consumer.
@@ -190,39 +131,81 @@ fn main() -> Result<()> {
     cfg.messages_per_producer = (per_producer_burst * burst_secs) as usize + 6;
     cfg.schedule =
         Some(RateSchedule::starting_at(burst_secs, per_producer_burst).then(f64::INFINITY, 3.0));
-    let mass = MassSource::new(cfg);
+
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("load", 8)])
+        .source(SourceSpec::mass(cfg).with_producers(2))
+        .stage(
+            StageSpec::new("analyze", "load", processor)
+                .with_window(Duration::from_millis(100))
+                .with_executors_per_node(1),
+        )
+        .autoscale(
+            AutoscaleSpec::for_stage(
+                "analyze",
+                ThresholdPolicy::new(24, 2)
+                    .with_sustain(2)
+                    .with_cooldown_secs(0.5)
+                    .with_step(3),
+            )
+            .with_sample_interval(Duration::from_millis(100))
+            .with_max_extension_nodes(3)
+            .with_max_step(3)
+            // The planner may co-schedule broker extensions with a
+            // processing scale-up (saturation-triggered here; the
+            // machine is unthrottled, so in this run they stay
+            // hypothetical).
+            .with_broker_coscheduling(),
+        )
+        .autoscale(
+            AutoscaleSpec::for_broker(
+                "analyze",
+                BrokerLoadPolicy {
+                    up_msgs_per_sec: 60.0,
+                    down_msgs_per_sec: 10.0,
+                    cooldown_secs: 1.0,
+                    last_action_t: f64::NEG_INFINITY,
+                },
+            )
+            .with_sample_interval(Duration::from_millis(200))
+            .with_max_extension_nodes(1),
+        )
+        .build()?;
+    let handle = app.launch(&service)?;
+
     println!(
         "offering a {:.0} msg/s burst, then a 6 msg/s trickle...",
         2.0 * per_producer_burst
     );
-    let report = mass.run(&producers, &cluster, 2)?;
+    let produced = handle.await_sources()?;
     println!(
         "produced {} msgs at {:.0} msg/s peak-inclusive",
-        report.messages,
-        report.msg_rate()
+        produced[0].messages,
+        produced[0].msg_rate()
     );
 
     // ---- Watch the cycle complete -----------------------------------
-    let timeline = processing_scaler.timeline();
+    let timeline = handle.timeline("analyze").expect("processing timeline");
     let deadline = Instant::now() + Duration::from_secs(120);
     while Instant::now() < deadline {
-        let drained = cluster.group_lag(&group, "load")? == 0;
+        let drained = handle.lag("analyze")? == 0;
         let cycled = timeline.count(ScalingAction::Up) >= 1
             && timeline.count(ScalingAction::Down) >= 1
-            && processing_scaler.extension_count() == 0;
+            && handle.extension_count("analyze") == Some(0);
         if drained && cycled {
             break;
         }
         std::thread::sleep(Duration::from_millis(100));
     }
 
-    let lag = cluster.group_lag(&group, "load")?;
     println!("\nprocessing-tier scaling timeline:");
     print!("{}", timeline.to_recorder().to_table());
     println!("broker-tier scaling timeline:");
-    print!("{}", broker_scaler.timeline().to_recorder().to_table());
+    print!(
+        "{}",
+        handle.timeline("analyze-broker").expect("broker timeline").to_recorder().to_table()
+    );
 
-    assert_eq!(lag, 0, "burst failed to drain");
     assert!(
         timeline.count(ScalingAction::Up) >= 1,
         "no automatic scale-up happened"
@@ -231,23 +214,15 @@ fn main() -> Result<()> {
         timeline.count(ScalingAction::Down) >= 1,
         "no automatic scale-down happened"
     );
-    let stats = job.stop();
+    let report = handle.drain_and_stop()?;
+    assert!(report.drained, "burst failed to drain");
+    assert_eq!(report.terminal_lag(), 0);
     println!(
         "processed {} msgs across {} batches ({} fell behind the window during the burst)",
-        stats.processed.messages(),
-        stats.batches.load(std::sync::atomic::Ordering::Relaxed),
-        stats.behind.load(std::sync::atomic::Ordering::Relaxed),
+        report.processed_messages(),
+        report.stages[0].batches,
+        report.stages[0].behind,
     );
-
-    for pilot in processing_scaler.stop() {
-        service.stop_pilot(&pilot)?;
-    }
-    for pilot in broker_scaler.stop() {
-        service.stop_pilot(&pilot)?;
-    }
-    service.stop_pilot(&spark)?;
-    service.stop_pilot(&dask)?;
-    service.stop_pilot(&kafka)?;
 
     // ---- The same control problem at Wrangler scale -----------------
     // The calibrated burst oversubscribes the 48-partition topic, so the

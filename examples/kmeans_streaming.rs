@@ -1,78 +1,76 @@
-//! Streaming KMeans end-to-end (paper §6.4's first workload).
+//! Streaming KMeans end-to-end (paper §6.4's first workload), on the
+//! declarative application API.
 //!
-//! MASS cluster-source producers stream batches of 5,000 3-D points
-//! (0.32 MB messages) through the pilot-managed broker; the MASA KMeans
-//! processor scores each batch against the model with the Pallas
-//! assignment kernel (AOT artifact `kmeans_score`) and applies the
-//! MLlib-style decayed update (`kmeans_update`).  The example verifies
-//! the streaming model actually *locks onto the source's cluster
-//! structure*: the final within-cluster variance (inertia per point)
-//! must be a small fraction of the raw data variance.
+//! A `StreamingApp` spec wires MASS cluster-source producers (batches
+//! of 5,000 3-D points, 0.32 MB messages) through the pilot-managed
+//! broker into the MASA KMeans processor — the Pallas assignment kernel
+//! (AOT artifact `kmeans_score`) plus the MLlib-style decayed update
+//! (`kmeans_update`) — as one `.broker().source().stage()` chain.  The
+//! example verifies the streaming model actually *locks onto the
+//! source's cluster structure*: the final within-cluster variance
+//! (inertia per point) must be a small fraction of the raw data
+//! variance.
 //!
 //! Run with: `cargo run --release --example kmeans_streaming`
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use pilot_streaming::app::{SourceSpec, StageSpec, StreamingApp};
 use pilot_streaming::cluster::Machine;
-use pilot_streaming::miniapp::{
-    MasaApp, MasaConfig, MassConfig, MassSource, ProcessorKind, SourceKind,
-};
-use pilot_streaming::pilot::{
-    DaskDescription, KafkaDescription, PilotComputeService, SparkDescription,
-};
+use pilot_streaming::miniapp::{MasaProcessor, MassConfig, ProcessorKind, SourceKind};
+use pilot_streaming::pilot::{KafkaDescription, PilotComputeService};
 use pilot_streaming::runtime::ModelRuntime;
 use pilot_streaming::Result;
 
 fn main() -> Result<()> {
     let runtime = ModelRuntime::load_default()?;
     let k = runtime.manifest().kmeans.k;
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(4)));
+    let processor = MasaProcessor::new(ProcessorKind::KMeans, runtime);
 
-    // Pilot-managed deployment: 1 broker, 1 producer, 1 processing node.
-    let service = PilotComputeService::new(Machine::unthrottled(4));
-    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1))?;
-    let (dask, producers) =
-        service.start_dask(DaskDescription::new(1).with_config("workers_per_node", "2"))?;
-    let (spark, engine) =
-        service.start_spark(SparkDescription::new(1).with_config("executors_per_node", "2"))?;
-    cluster.create_topic("points", 4)?;
+    let total_msgs = 30u64;
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("points", 4)])
+        .source(
+            SourceSpec::mass(MassConfig::new(
+                SourceKind::KmeansRandom { n_centroids: k },
+                "points",
+            ))
+            .with_producers(2)
+            .with_total_messages(total_msgs),
+        )
+        .stage(
+            StageSpec::new("kmeans", "points", processor.clone())
+                .with_window(Duration::from_millis(150))
+                .with_executors_per_node(2),
+        )
+        .build()?;
 
-    // MASA: streaming KMeans with a short window for the demo.
-    let masa = MasaApp::new(
-        MasaConfig::new(ProcessorKind::KMeans, "points", Duration::from_millis(150)),
-        runtime,
-    );
     println!("compiling kmeans artifacts...");
-    masa.processor.warmup()?;
-    let job = masa.start(&engine, cluster.clone())?;
-
-    // MASS: the paper's `cluster` source — points around k centers.
-    let mut cfg = MassConfig::new(SourceKind::KmeansRandom { n_centroids: k }, "points");
-    cfg.messages_per_producer = 15;
-    let mass = MassSource::new(cfg);
-    println!("streaming {} messages of 5,000 points...", 2 * 15);
-    let report = mass.run(&producers, &cluster, 2)?;
+    let handle = app.launch(&service)?; // warmup runs before the job starts
+    println!("streaming {total_msgs} messages of 5,000 points...");
+    let produced = handle.await_sources()?;
     println!(
         "produced {} msgs ({:.2} MB/s)",
-        report.messages,
-        report.mb_rate()
+        produced[0].messages,
+        produced[0].mb_rate()
     );
 
-    // Drain.
-    let deadline = std::time::Instant::now() + Duration::from_secs(300);
-    while job.stats().processed.messages() < report.messages
-        && std::time::Instant::now() < deadline
-    {
-        std::thread::sleep(Duration::from_millis(100));
-    }
-    let stats = job.stop();
+    let report = handle.drain_and_stop()?;
+    assert!(report.drained, "burst failed to drain");
+    assert_eq!(
+        report.processed_messages(),
+        report.produced_messages(),
+        "pipeline dropped messages"
+    );
 
-    let model = masa.processor.model();
+    let model = processor.model();
     println!(
         "processed {} msgs; model updates: {}; exec {:.2} ms/msg",
-        stats.processed.messages(),
+        report.processed_messages(),
         model.updates,
-        masa.processor.stats.exec_secs.mean_secs() * 1e3
+        processor.stats.exec_secs.mean_secs() * 1e3
     );
     println!(
         "inertia: first batch {:.0} -> final {:.0}",
@@ -97,10 +95,6 @@ fn main() -> Result<()> {
     // Weights must be positive for (almost) all clusters.
     let live = model.weights.iter().filter(|w| **w > 0.0).count();
     println!("clusters with mass: {live}/{k}");
-
-    let _ = Arc::strong_count(&masa.processor);
-    service.stop_pilot(&spark)?;
-    service.stop_pilot(&dask)?;
-    service.stop_pilot(&kafka)?;
+    println!("all pilots stopped; free nodes: {}", service.machine().free_nodes());
     Ok(())
 }

@@ -1,27 +1,27 @@
 //! End-to-end light-source pipeline — the repo's full-system driver
-//! (EXPERIMENTS.md §End-to-end).
+//! (EXPERIMENTS.md §End-to-end), on the declarative application API.
 //!
-//! Exercises every layer on a real workload: pilot-managed Kafka /
-//! Dask / Spark deployments on the simulated machine; MASS streaming
-//! APS-format frames (2 MB messages, the paper's LCLS-like feed); the
-//! micro-batch engine scheduling one task per partition; GridRec
-//! reconstruction through the PJRT-compiled Pallas backprojection
-//! artifact; a *runtime pilot extension* mid-stream (the paper's core
-//! capability); and a final reconstruction-quality check against the
-//! ground-truth phantom.
+//! One `StreamingApp` spec exercises every layer on a real workload:
+//! pilot-managed Kafka / Dask / Spark deployments on the simulated
+//! machine; MASS streaming APS-format frames (2 MB messages, the
+//! paper's LCLS-like feed); the micro-batch engine scheduling one task
+//! per partition; GridRec reconstruction through the PJRT-compiled
+//! Pallas backprojection artifact; a *runtime pilot extension*
+//! mid-stream via `AppHandle::extend` (the paper's core capability);
+//! and a final reconstruction-quality check against the ground-truth
+//! phantom.  Teardown is `drain_and_stop` — fence the source, drain
+//! consumer lag to zero, stop jobs and pilots — instead of the old
+//! sleep-and-hope loop.
 //!
 //! Run with: `cargo run --release --example light_source_pipeline`
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use pilot_streaming::app::{SourceSpec, StageSpec, StreamingApp};
 use pilot_streaming::cluster::Machine;
-use pilot_streaming::miniapp::{
-    MasaApp, MasaConfig, MassConfig, MassSource, ProcessorKind, SourceKind,
-};
-use pilot_streaming::pilot::{
-    DaskDescription, KafkaDescription, PilotComputeService, SparkDescription,
-};
+use pilot_streaming::miniapp::{MasaProcessor, MassConfig, ProcessorKind, SourceKind};
+use pilot_streaming::pilot::{KafkaDescription, PilotComputeService};
 use pilot_streaming::runtime::ModelRuntime;
 use pilot_streaming::Result;
 
@@ -30,108 +30,88 @@ fn main() -> Result<()> {
     let tomo = runtime.manifest().tomo.clone();
     let template = Arc::new(runtime.read_f32_file("template_sinogram.bin")?);
     let phantom = runtime.read_f32_file("phantom.bin")?;
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(8)));
+    let processor = MasaProcessor::new(ProcessorKind::GridRec, runtime);
 
-    // ---- Pilot-managed deployment (paper Fig 3/4 control flow) ------
-    let service = PilotComputeService::new(Machine::unthrottled(8));
-    let (kafka, cluster) = service.start_kafka(KafkaDescription::new(1))?;
-    let (dask, producers) =
-        service.start_dask(DaskDescription::new(1).with_config("workers_per_node", "2"))?;
-    let (spark, engine) =
-        service.start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))?;
-    for p in [&kafka, &dask, &spark] {
-        let s = p.startup().unwrap();
+    // ---- The whole pipeline as one spec (paper Fig 3/4 control flow):
+    // 24 APS frames split across 2 producers (remainders distribute —
+    // no hand-computed total/2), reconstructed in 250 ms windows.
+    let total_msgs = 24u64;
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("aps-frames", 4)])
+        .source(
+            SourceSpec::mass(MassConfig::new(
+                SourceKind::Lightsource { template },
+                "aps-frames",
+            ))
+            .with_producers(2)
+            .with_total_messages(total_msgs),
+        )
+        .stage(
+            StageSpec::new("recon", "aps-frames", processor.clone())
+                .with_window(Duration::from_millis(250))
+                .with_executors_per_node(1),
+        )
+        .build()?;
+
+    println!("compiling gridrec artifact (Pallas backprojection, AOT via PJRT)...");
+    let handle = app.launch(&service)?;
+    // Streaming starts inside launch; stamp t0 here so the end-to-end
+    // rate excludes artifact compilation and modeled pilot startup.
+    let t0 = Instant::now();
+    for (pilot, s) in handle.startup_breakdowns() {
         println!(
-            "pilot {:<16} nodes={} startup {:.1}s (queue {:.1} + bootstrap {:.1})",
-            p.id(),
-            p.nodes().len(),
+            "pilot {pilot:<16} startup {:.1}s (queue {:.1} + bootstrap {:.1})",
             s.total_secs(),
             s.queue_wait_secs,
             s.bootstrap_secs
         );
     }
-    cluster.create_topic("aps-frames", 4)?;
-
-    // ---- MASA: GridRec reconstruction job ----------------------------
-    let masa = MasaApp::new(
-        MasaConfig::new(ProcessorKind::GridRec, "aps-frames", Duration::from_millis(250)),
-        runtime.clone(),
-    );
-    println!("compiling gridrec artifact (Pallas backprojection, AOT via PJRT)...");
-    masa.processor.warmup()?;
-    let job = masa.start(&engine, cluster.clone())?;
-
-    // ---- MASS: template source streaming APS frames -------------------
-    let total_msgs = 24u64;
-    let mut cfg = MassConfig::new(
-        SourceKind::Lightsource {
-            template: template.clone(),
-        },
-        "aps-frames",
-    );
-    cfg.messages_per_producer = (total_msgs / 2) as usize;
-    let mass = MassSource::new(cfg);
     println!("streaming {total_msgs} APS frames (2 MB each)...");
-    let t0 = Instant::now();
-    let producer_handle = {
-        let mass_cfg = mass.config().clone();
-        let cluster2 = cluster.clone();
-        let producers2 = producers.clone();
-        std::thread::spawn(move || MassSource::new(mass_cfg).run(&producers2, &cluster2, 2))
-    };
 
     // ---- Mid-stream pilot extension (paper Listing 4) ----------------
+    // The source streams in the background; grow the recon stage now.
     std::thread::sleep(Duration::from_millis(300));
-    let before = engine.executor_count();
-    let extension = service.extend_pilot(&spark, 1)?;
-    println!(
-        "mid-stream extend: {} -> {} executors (pilot {})",
-        before,
-        engine.executor_count(),
-        extension.id()
-    );
+    let extension = handle.extend("recon", 1)?;
+    println!("mid-stream extend: recon stage grew via pilot {}", extension.id());
 
-    let report = producer_handle
-        .join()
-        .expect("producer thread")?;
+    let produced = handle.await_sources()?;
     println!(
         "producer side: {} msgs, {:.1} MB/s",
-        report.messages,
-        report.mb_rate()
+        produced[0].messages,
+        produced[0].mb_rate()
     );
 
     // ---- Drain and report --------------------------------------------
-    let deadline = Instant::now() + Duration::from_secs(600);
-    while job.stats().processed.messages() < report.messages && Instant::now() < deadline {
-        std::thread::sleep(Duration::from_millis(100));
-    }
-    let stats = job.stop();
+    let report = handle.drain_and_stop()?;
     let elapsed = t0.elapsed().as_secs_f64();
+    assert!(report.drained, "pipeline failed to drain");
     assert_eq!(
-        stats.processed.messages(),
-        report.messages,
+        report.processed_messages(),
+        report.produced_messages(),
         "pipeline dropped messages"
     );
     println!("--- end-to-end results -------------------------------------");
     println!(
         "frames processed   : {} in {:.1} s  ({:.1} msg/s, {:.1} MB/s end-to-end)",
-        stats.processed.messages(),
+        report.processed_messages(),
         elapsed,
-        stats.processed.messages() as f64 / elapsed,
-        stats.processed.bytes() as f64 / 1e6 / elapsed,
+        report.processed_messages() as f64 / elapsed,
+        report.stages[0].processed_bytes as f64 / 1e6 / elapsed,
     );
     println!(
         "reconstruction     : {:.1} ms/frame (p50), {:.1} ms (p99)",
-        masa.processor.stats.exec_secs.p50_secs() * 1e3,
-        masa.processor.stats.exec_secs.p99_secs() * 1e3,
+        processor.stats.exec_secs.p50_secs() * 1e3,
+        processor.stats.exec_secs.p99_secs() * 1e3,
     );
     println!(
         "e2e frame latency  : p50 {:.2} s, p99 {:.2} s",
-        masa.processor.stats.e2e_latency.p50_secs(),
-        masa.processor.stats.e2e_latency.p99_secs(),
+        processor.stats.e2e_latency.p50_secs(),
+        processor.stats.e2e_latency.p99_secs(),
     );
 
     // Reconstruction quality vs ground truth (interior RMSE).
-    let img = masa.processor.last_image();
+    let img = processor.last_image();
     let (h, w) = (tomo.img_h, tomo.img_w);
     let mut se = 0.0f64;
     let mut n = 0usize;
@@ -146,10 +126,9 @@ fn main() -> Result<()> {
     println!("reconstruction RMSE vs phantom (interior): {rmse:.4}");
     assert!(rmse < 0.12, "reconstruction quality regression: {rmse}");
 
-    service.stop_pilot(&extension)?;
-    service.stop_pilot(&spark)?;
-    service.stop_pilot(&dask)?;
-    service.stop_pilot(&kafka)?;
-    println!("pipeline complete; all pilots stopped");
+    println!(
+        "pipeline complete; all pilots stopped (free nodes: {})",
+        service.machine().free_nodes()
+    );
     Ok(())
 }

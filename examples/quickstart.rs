@@ -1,77 +1,39 @@
-//! Quickstart: the paper's Listings 2-6 as one runnable program.
-//!
-//! * Listing 2 — create a pilot-managed Spark cluster from a
-//!   Pilot-Compute-Description;
-//! * Listing 4 — extend it at runtime by referencing the parent pilot;
-//! * Listing 5 — submit a framework-agnostic Compute-Unit;
-//! * Listing 6 — use the native framework context directly.
+//! Quickstart: one declarative `StreamingApp` spec — pilot-managed
+//! broker, paced source, processing stage — replaces the hand-wired
+//! assembly of the paper's Listings 2-6.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
+use std::sync::Arc;
+
+use pilot_streaming::app::{CountingProcessor, SourceSpec, StageSpec, StreamingApp};
 use pilot_streaming::cluster::Machine;
-use pilot_streaming::cu::{submit_unit, ComputeUnitDescription};
-use pilot_streaming::pilot::{DaskDescription, PilotComputeService, SparkDescription};
+use pilot_streaming::miniapp::{MassConfig, SourceKind};
+use pilot_streaming::pilot::{KafkaDescription, PilotComputeService};
 use pilot_streaming::Result;
 
 fn main() -> Result<()> {
-    // An 8-node Wrangler-like machine managed by a modeled SLURM queue.
-    let machine = Machine::wrangler(8);
-    let service = PilotComputeService::new(machine);
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(8)));
+    let counter = CountingProcessor::new();
+    let mut points = MassConfig::new(SourceKind::KmeansStatic, "points");
+    points.points_per_msg = 500;
+    points.target_msg_bytes = Some(0); // unpadded: keep the smoke run snappy
 
-    // --- Listing 2: pilot_compute_description for a Spark cluster ----
-    let (spark_pilot, engine) = service.start_spark(
-        SparkDescription::new(2).with_config("executors_per_node", "2"),
-    )?;
-    let startup = spark_pilot.startup().unwrap();
-    println!(
-        "spark pilot {} RUNNING: {} nodes, {} executors",
-        spark_pilot.id(),
-        spark_pilot.nodes().len(),
-        engine.executor_count()
-    );
-    println!(
-        "  startup: queue {:.1}s + bootstrap {:.1}s = {:.1}s (modeled Wrangler)",
-        startup.queue_wait_secs,
-        startup.bootstrap_secs,
-        startup.total_secs()
-    );
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("points", 4)])
+        .source(SourceSpec::mass(points).with_producers(2).with_total_messages(25))
+        .stage(StageSpec::new("count", "points", counter.clone()))
+        .build()?;
 
-    // --- Listing 5: framework-agnostic compute unit ------------------
-    // def compute(x): return x*x ; pilot.submit(compute, 2)
-    let cu = submit_unit(&spark_pilot, ComputeUnitDescription::new("square"), || {
-        2 * 2
-    })?;
-    println!("compute unit result: {}", cu.wait()?);
-
-    // --- Listing 6: native context (Spark-like map over a batch) -----
-    let pool = engine.executor_pool();
-    let futures: Vec<_> = [1, 2, 3]
-        .into_iter()
-        .map(|x| pool.submit(move |_| x * x).unwrap())
-        .collect();
-    let mapped: Vec<i32> = futures.into_iter().map(|f| f.wait().unwrap()).collect();
-    println!("native map([1,2,3], x*x) = {mapped:?}");
-
-    // --- Listing 4: extend the cluster by referencing the parent -----
-    let before = engine.executor_count();
-    let extension = service.extend_pilot(&spark_pilot, 2)?;
-    println!(
-        "extended {} -> {} executors via pilot {}",
-        before,
-        engine.executor_count(),
-        extension.id()
-    );
-    // Stopping the extension resizes the cluster back down.
-    service.stop_pilot(&extension)?;
-    println!("extension stopped; machine free nodes: {}", service.machine().free_nodes());
-
-    // The same CU also runs on a Dask pilot (interoperability).
-    let (dask_pilot, _dask) = service.start_dask(DaskDescription::new(1))?;
-    let cu = submit_unit(&dask_pilot, ComputeUnitDescription::new("square"), || 2 * 2)?;
-    println!("same compute unit on dask pilot: {}", cu.wait()?);
-
-    service.stop_pilot(&dask_pilot)?;
-    service.stop_pilot(&spark_pilot)?;
+    let handle = app.launch(&service)?;
+    for (pilot, s) in handle.startup_breakdowns() {
+        println!("{pilot}: queue {:.1}s + boot {:.1}s", s.queue_wait_secs, s.bootstrap_secs);
+    }
+    handle.await_sources()?;
+    let report = handle.drain_and_stop()?;
+    println!("produced {} msgs, processed {} msgs, terminal lag {}",
+        report.produced_messages(), report.processed_messages(), report.terminal_lag());
+    assert!(report.drained && counter.messages() == 25, "quickstart lost messages");
     println!("all pilots stopped; free nodes: {}", service.machine().free_nodes());
     Ok(())
 }

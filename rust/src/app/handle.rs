@@ -1,0 +1,687 @@
+//! Launching a [`StreamingApp`] and driving it to a clean stop.
+//!
+//! [`StreamingApp::launch`] starts pilots in dependency order — broker
+//! first (everything produces into or consumes from it), then
+//! processing stages (consumers are live before the first message
+//! lands), then sources, then autoscale loops (last, so a failed
+//! launch can never leak policy-driven extension pilots) — and returns
+//! an [`AppHandle`].  The handle unifies what the hand-wired examples used
+//! to assemble from five subsystems: live [`stats`](AppHandle::stats),
+//! per-pilot [`startup_breakdowns`](AppHandle::startup_breakdowns),
+//! manual [`extend`](AppHandle::extend) (paper Listing 4) and a real
+//! termination protocol, [`drain_and_stop`](AppHandle::drain_and_stop):
+//! fence the sources, drain consumer lag to zero, then stop jobs and
+//! pilots in reverse dependency order.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::autoscale::{Autoscaler, AutoscalerConfig};
+use crate::broker::{BrokerCluster, Producer, ProducerConfig};
+use crate::engine::{JobStats, MicroBatchEngine, StreamingJobConfig, StreamingJobHandle, TaskEngine};
+use crate::error::{Error, Result};
+use crate::metrics::{RateMeter, ScalingTimeline};
+use crate::pilot::{
+    FrameworkContext, FrameworkKind, Pilot, PilotComputeDescription, PilotComputeService,
+    StartupBreakdown,
+};
+use crate::util::RateSchedule;
+
+use super::spec::{ScaleTarget, SourceSpec, StreamingApp};
+use super::{AsBatch, DataSource, StreamProcessor};
+
+/// One source's aggregate production report.
+#[derive(Debug, Clone)]
+pub struct SourceReport {
+    pub name: String,
+    pub topic: String,
+    pub messages: u64,
+    pub bytes: u64,
+    pub elapsed_secs: f64,
+    pub producers: usize,
+}
+
+impl SourceReport {
+    pub fn msg_rate(&self) -> f64 {
+        self.messages as f64 / self.elapsed_secs.max(1e-9)
+    }
+
+    pub fn mb_rate(&self) -> f64 {
+        self.bytes as f64 / 1e6 / self.elapsed_secs.max(1e-9)
+    }
+}
+
+/// One stage's processing snapshot (live or terminal).
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub name: String,
+    pub topic: String,
+    pub group: String,
+    pub processed_messages: u64,
+    pub processed_bytes: u64,
+    pub batches: u64,
+    /// Batches whose processing outran the window (backpressure).
+    pub behind: u64,
+    pub errors: u64,
+    /// Consumer lag at snapshot time (zero after a successful drain).
+    pub lag: u64,
+}
+
+/// Unified application snapshot: live from [`AppHandle::stats`], or the
+/// terminal report cached by [`AppHandle::drain_and_stop`].
+#[derive(Debug, Clone)]
+pub struct AppReport {
+    /// True once `drain_and_stop` drove every stage's consumer lag to
+    /// zero before the drain timeout; false on live snapshots.
+    pub drained: bool,
+    pub sources: Vec<SourceReport>,
+    pub stages: Vec<StageReport>,
+}
+
+impl AppReport {
+    /// Messages that actually landed in the broker, across sources.
+    pub fn produced_messages(&self) -> u64 {
+        self.sources.iter().map(|s| s.messages).sum()
+    }
+
+    /// Messages processed across stages.
+    pub fn processed_messages(&self) -> u64 {
+        self.stages.iter().map(|s| s.processed_messages).sum()
+    }
+
+    /// Remaining consumer lag summed across stages.
+    pub fn terminal_lag(&self) -> u64 {
+        self.stages.iter().map(|s| s.lag).sum()
+    }
+}
+
+struct StageRuntime {
+    name: String,
+    topic: String,
+    group: String,
+    window: Duration,
+    pilot: Arc<Pilot>,
+    #[allow(dead_code)]
+    engine: MicroBatchEngine,
+    stats: Arc<JobStats>,
+    job: Mutex<Option<StreamingJobHandle>>,
+    processor: Arc<dyn StreamProcessor>,
+}
+
+/// The background thread aggregating one source's producer futures.
+type SourceThread = JoinHandle<Result<SourceReport>>;
+
+struct SourceRuntime {
+    name: String,
+    topic: String,
+    producers: usize,
+    pilot: Arc<Pilot>,
+    meter: Arc<RateMeter>,
+    thread: Mutex<Option<SourceThread>>,
+    report: Mutex<Option<SourceReport>>,
+    error: Mutex<Option<String>>,
+}
+
+struct ScalerRuntime {
+    name: String,
+    timeline: Arc<ScalingTimeline>,
+    scaler: Option<Autoscaler>,
+}
+
+/// A launched application; see the [module docs](self).
+///
+/// Call [`drain_and_stop`](AppHandle::drain_and_stop) when done —
+/// dropping the handle stops job drivers and autoscale loops but does
+/// not release pilot allocations.
+pub struct AppHandle {
+    service: Arc<PilotComputeService>,
+    cluster: BrokerCluster,
+    broker_pilot: Arc<Pilot>,
+    stages: Vec<StageRuntime>,
+    sources: Vec<SourceRuntime>,
+    scalers: Mutex<Vec<ScalerRuntime>>,
+    manual_extensions: Mutex<Vec<Arc<Pilot>>>,
+    fence: Arc<AtomicBool>,
+    drain_timeout: Duration,
+    report: Mutex<Option<AppReport>>,
+}
+
+impl StreamingApp {
+    /// Launch the application: pilots start in dependency order and the
+    /// returned handle owns the running system.  On a partial failure
+    /// every already-started pilot is stopped before the error returns.
+    pub fn launch(self, service: &Arc<PilotComputeService>) -> Result<AppHandle> {
+        let mut started: Vec<Arc<Pilot>> = Vec::new();
+        match launch_inner(self, service, &mut started) {
+            Ok(handle) => Ok(handle),
+            Err(e) => {
+                for pilot in started.iter().rev() {
+                    let _ = service.stop_pilot(pilot);
+                }
+                Err(e)
+            }
+        }
+    }
+}
+
+fn launch_inner(
+    app: StreamingApp,
+    service: &Arc<PilotComputeService>,
+    started: &mut Vec<Arc<Pilot>>,
+) -> Result<AppHandle> {
+    // ---- Broker tier -------------------------------------------------
+    let resource = app.broker.description.0.resource.clone();
+    let (broker_pilot, cluster) = service.start_kafka(app.broker.description.clone())?;
+    started.push(broker_pilot.clone());
+    for t in &app.broker.topics {
+        cluster.create_topic(&t.name, t.partitions)?;
+    }
+
+    // ---- Processing stages (consumers before producers) --------------
+    let mut stages = Vec::new();
+    for spec in app.stages {
+        let mut desc = PilotComputeDescription::new(&resource, spec.framework, spec.nodes);
+        if let Some(key) = spec.framework.parallelism_key() {
+            desc = desc.with_config(key, &spec.executors_per_node.to_string());
+        }
+        let pilot = service.create_pilot(desc)?;
+        started.push(pilot.clone());
+        // Spark provides the micro-batch engine natively; Dask/Flink
+        // serve the same windows through their task-parallel pools.
+        let engine = match pilot.context()? {
+            FrameworkContext::MicroBatch(e) => e,
+            FrameworkContext::TaskPar(pool) => MicroBatchEngine::with_pool(pool),
+            FrameworkContext::Kafka(_) => unreachable!("rejected by build()"),
+        };
+        spec.processor.warmup()?;
+        let group = spec.group_name();
+        let mut job_config = StreamingJobConfig::new(&spec.topic, spec.window);
+        job_config.group = group.clone();
+        let job = engine.start_job(
+            cluster.clone(),
+            job_config,
+            Arc::new(AsBatch(spec.processor.clone())),
+        )?;
+        stages.push(StageRuntime {
+            name: spec.name,
+            topic: spec.topic,
+            group,
+            window: spec.window,
+            pilot,
+            engine,
+            stats: job.stats().clone(),
+            job: Mutex::new(Some(job)),
+            processor: spec.processor,
+        });
+    }
+
+    // ---- Sources -----------------------------------------------------
+    let fence = Arc::new(AtomicBool::new(false));
+    let mut sources = Vec::new();
+    for spec in app.sources {
+        let desc = PilotComputeDescription::new(&resource, FrameworkKind::Dask, spec.nodes)
+            .with_config("workers_per_node", &spec.workers_per_node.to_string());
+        let pilot = service.create_pilot(desc)?;
+        started.push(pilot.clone());
+        let Some(engine) = pilot.context()?.as_taskpar().cloned() else {
+            return Err(Error::App(format!(
+                "source '{}': dask pilot has no task engine",
+                spec.name
+            )));
+        };
+        let meter = Arc::new(RateMeter::new());
+        let thread = spawn_source(&spec, engine, cluster.clone(), meter.clone(), fence.clone())?;
+        sources.push(SourceRuntime {
+            name: spec.name,
+            topic: spec.topic,
+            producers: spec.producers,
+            pilot,
+            meter,
+            thread: Mutex::new(Some(thread)),
+            report: Mutex::new(None),
+            error: Mutex::new(None),
+        });
+    }
+
+    // ---- Autoscale loops, once every pilot is up ----------------------
+    // Started last so a failure earlier in launch can never race a
+    // policy-driven extension: the rollback path only has base pilots
+    // to release, and extension pilots exist solely under a live
+    // AppHandle (whose drain_and_stop releases them).
+    let mut scalers = Vec::new();
+    for spec in app.autoscalers {
+        let stage = stages
+            .iter()
+            .find(|s| s.name == spec.stage)
+            .expect("validated by build()");
+        let config = AutoscalerConfig::new(&stage.topic, &stage.group)
+            .with_sample_interval(spec.sample_interval)
+            .with_max_extension_nodes(spec.max_extension_nodes)
+            .with_max_step(spec.max_step)
+            .with_window(stage.window)
+            .with_planner(spec.planner);
+        let scaler = match spec.target {
+            ScaleTarget::Stage => Autoscaler::spawn_with_broker(
+                service.clone(),
+                stage.pilot.clone(),
+                spec.coschedule_broker.then(|| broker_pilot.clone()),
+                cluster.clone(),
+                Some(stage.stats.clone()),
+                spec.policy,
+                config,
+            ),
+            ScaleTarget::Broker => Autoscaler::spawn(
+                service.clone(),
+                broker_pilot.clone(),
+                cluster.clone(),
+                None,
+                spec.policy,
+                config,
+            ),
+        };
+        scalers.push(ScalerRuntime {
+            name: spec.name,
+            timeline: scaler.timeline(),
+            scaler: Some(scaler),
+        });
+    }
+
+    Ok(AppHandle {
+        service: service.clone(),
+        cluster,
+        broker_pilot,
+        stages,
+        sources,
+        scalers: Mutex::new(scalers),
+        manual_extensions: Mutex::new(Vec::new()),
+        fence,
+        drain_timeout: app.drain_timeout,
+        report: Mutex::new(None),
+    })
+}
+
+/// Drive one source's producer tasks on its Dask engine.  Producers
+/// pace against the spec's schedule or rate limit and check the fence
+/// between messages (and inside pacing sleeps), so a drain cuts
+/// production short without losing anything already sent.
+fn spawn_source(
+    spec: &SourceSpec,
+    engine: TaskEngine,
+    cluster: BrokerCluster,
+    meter: Arc<RateMeter>,
+    fence: Arc<AtomicBool>,
+) -> Result<SourceThread> {
+    let name = spec.name.clone();
+    let topic = spec.topic.clone();
+    let producers = spec.producers;
+    let counts: Vec<usize> = (0..producers).map(|i| spec.messages_for(i)).collect();
+    let rate_limit = spec.rate_limit;
+    let schedule = spec.schedule.clone();
+    let source: Arc<dyn DataSource> = spec.source.clone();
+    std::thread::Builder::new()
+        .name(format!("app-source-{name}"))
+        .spawn(move || -> Result<SourceReport> {
+            let start = Instant::now();
+            let mut futures = Vec::with_capacity(producers);
+            for (i, count) in counts.into_iter().enumerate() {
+                let cluster = cluster.clone();
+                let topic = topic.clone();
+                let schedule = schedule.clone();
+                let source = source.clone();
+                let meter = meter.clone();
+                let fence = fence.clone();
+                futures.push(engine.submit(move |node| -> Result<(u64, u64)> {
+                    run_producer(
+                        &*source, i as u64 + 1, count, &cluster, &topic, node, rate_limit,
+                        schedule.as_ref(), &meter, &fence,
+                    )
+                })?);
+            }
+            let mut messages = 0;
+            let mut bytes = 0;
+            for f in futures {
+                let (m, b) = f.wait()??;
+                messages += m;
+                bytes += b;
+            }
+            Ok(SourceReport {
+                name,
+                topic,
+                messages,
+                bytes,
+                elapsed_secs: start.elapsed().as_secs_f64(),
+                producers,
+            })
+        })
+        .map_err(|e| Error::App(format!("spawn source thread: {e}")))
+}
+
+/// The one paced-producer loop in the repo: open a [`DataSource`]
+/// stream, pace each message against the schedule or fixed rate
+/// (fence-responsive in ≤20 ms slices), send through a
+/// flush-per-message [`Producer`], and report `(messages, bytes)` that
+/// actually landed.  [`crate::miniapp::MassSource::run`] delegates
+/// here with a never-set fence, so MASS and the application layer
+/// cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_producer(
+    source: &dyn DataSource,
+    stream: u64,
+    count: usize,
+    cluster: &BrokerCluster,
+    topic: &str,
+    node: crate::cluster::NodeId,
+    rate_limit: Option<f64>,
+    schedule: Option<&RateSchedule>,
+    meter: &RateMeter,
+    fence: &AtomicBool,
+) -> Result<(u64, u64)> {
+    let mut msg_stream = source.open(stream);
+    let mut producer = Producer::new(
+        cluster.clone(),
+        topic,
+        node,
+        ProducerConfig {
+            // PyKafka-style: flush each ~message (they're big), so every
+            // counted message has actually landed in the broker.
+            batch_bytes: 1,
+            ..Default::default()
+        },
+    )?;
+    let interval_secs = rate_limit.map(|r| 1.0 / r.max(1e-9));
+    let t0 = Instant::now();
+    let mut sent = (0u64, 0u64);
+    'messages: for seq in 0..count {
+        if fence.load(Ordering::Relaxed) {
+            break 'messages;
+        }
+        // Pace against the variable-rate schedule or the fixed rate,
+        // staying fence-responsive while sleeping.
+        let due_secs = match (schedule, interval_secs) {
+            (Some(s), _) => Some(s.time_for_count(seq as f64)),
+            (None, Some(iv)) => Some(iv * seq as f64),
+            (None, None) => None,
+        };
+        if let Some(due) = due_secs {
+            if due.is_finite() {
+                loop {
+                    let elapsed = t0.elapsed().as_secs_f64();
+                    if elapsed >= due {
+                        break;
+                    }
+                    if fence.load(Ordering::Relaxed) {
+                        break 'messages;
+                    }
+                    std::thread::sleep(Duration::from_secs_f64((due - elapsed).min(0.02)));
+                }
+            }
+        }
+        let bytes = msg_stream.next_message(seq as u64);
+        let n = bytes.len();
+        producer.send(None, bytes)?;
+        meter.record(n);
+        sent.0 += 1;
+        sent.1 += n as u64;
+    }
+    producer.flush()?;
+    Ok(sent)
+}
+
+impl AppHandle {
+    pub fn cluster(&self) -> &BrokerCluster {
+        &self.cluster
+    }
+
+    pub fn service(&self) -> &Arc<PilotComputeService> {
+        &self.service
+    }
+
+    /// `(pilot id, startup breakdown)` for every base pilot the app
+    /// launched — broker, stages, sources — in launch order (paper
+    /// Fig 6's queue-wait vs bootstrap decomposition, without touching
+    /// any pilot handle directly).
+    pub fn startup_breakdowns(&self) -> Vec<(String, StartupBreakdown)> {
+        let mut out = Vec::new();
+        let mut push = |pilot: &Arc<Pilot>| {
+            if let Some(s) = pilot.startup() {
+                out.push((pilot.id().to_string(), s));
+            }
+        };
+        push(&self.broker_pilot);
+        for s in &self.stages {
+            push(&s.pilot);
+        }
+        for s in &self.sources {
+            push(&s.pilot);
+        }
+        out
+    }
+
+    /// A stage's live job statistics.
+    pub fn stage_stats(&self, stage: &str) -> Option<Arc<JobStats>> {
+        self.stages.iter().find(|s| s.name == stage).map(|s| s.stats.clone())
+    }
+
+    /// A stage's processor, for algorithm-specific probes.
+    pub fn processor(&self, stage: &str) -> Option<Arc<dyn StreamProcessor>> {
+        self.stages.iter().find(|s| s.name == stage).map(|s| s.processor.clone())
+    }
+
+    /// A stage's current consumer lag.
+    pub fn lag(&self, stage: &str) -> Result<u64> {
+        let s = self
+            .stages
+            .iter()
+            .find(|s| s.name == stage)
+            .ok_or_else(|| Error::App(format!("unknown stage '{stage}'")))?;
+        self.cluster.group_lag(&s.group, &s.topic)
+    }
+
+    /// An autoscale loop's scaling timeline, by spec name.
+    pub fn timeline(&self, scaler: &str) -> Option<Arc<ScalingTimeline>> {
+        self.scalers
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|s| s.name == scaler)
+            .map(|s| s.timeline.clone())
+    }
+
+    /// Extension pilots an autoscale loop currently holds.
+    pub fn extension_count(&self, scaler: &str) -> Option<usize> {
+        self.scalers
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|s| s.name == scaler)
+            .and_then(|s| s.scaler.as_ref().map(|sc| sc.extension_count()))
+    }
+
+    /// Manually extend a stage's pilot by `nodes` (paper Listing 4);
+    /// the extension is tracked and released by
+    /// [`drain_and_stop`](Self::drain_and_stop).
+    pub fn extend(&self, stage: &str, nodes: usize) -> Result<Arc<Pilot>> {
+        let s = self
+            .stages
+            .iter()
+            .find(|s| s.name == stage)
+            .ok_or_else(|| Error::App(format!("unknown stage '{stage}'")))?;
+        let ext = self.service.extend_pilot(&s.pilot, nodes)?;
+        self.manual_extensions.lock().unwrap().push(ext.clone());
+        Ok(ext)
+    }
+
+    /// Block until every source finished its message budget (no fence);
+    /// returns the per-source reports.  Errors if any producer failed.
+    pub fn await_sources(&self) -> Result<Vec<SourceReport>> {
+        let mut reports = Vec::new();
+        for s in &self.sources {
+            self.join_source(s);
+            if let Some(e) = s.error.lock().unwrap().clone() {
+                return Err(Error::App(format!("source '{}': {e}", s.name)));
+            }
+            if let Some(r) = s.report.lock().unwrap().clone() {
+                reports.push(r);
+            }
+        }
+        Ok(reports)
+    }
+
+    fn join_source(&self, s: &SourceRuntime) {
+        if let Some(handle) = s.thread.lock().unwrap().take() {
+            let report = match handle.join() {
+                Ok(Ok(r)) => r,
+                Ok(Err(e)) => {
+                    *s.error.lock().unwrap() = Some(e.to_string());
+                    self.meter_report(s)
+                }
+                Err(_) => {
+                    *s.error.lock().unwrap() = Some("source thread panicked".into());
+                    self.meter_report(s)
+                }
+            };
+            *s.report.lock().unwrap() = Some(report);
+        }
+    }
+
+    /// Fallback report from the live meter (what actually landed).
+    fn meter_report(&self, s: &SourceRuntime) -> SourceReport {
+        SourceReport {
+            name: s.name.clone(),
+            topic: s.topic.clone(),
+            messages: s.meter.messages(),
+            bytes: s.meter.bytes(),
+            elapsed_secs: s.meter.elapsed_secs(),
+            producers: s.producers,
+        }
+    }
+
+    fn stage_report(&self, s: &StageRuntime, lag: u64) -> StageReport {
+        StageReport {
+            name: s.name.clone(),
+            topic: s.topic.clone(),
+            group: s.group.clone(),
+            processed_messages: s.stats.processed.messages(),
+            processed_bytes: s.stats.processed.bytes(),
+            batches: s.stats.batches.load(Ordering::Relaxed),
+            behind: s.stats.behind.load(Ordering::Relaxed),
+            errors: s.stats.errors.load(Ordering::Relaxed),
+            lag,
+        }
+    }
+
+    /// Unified snapshot: live counters while running, the cached
+    /// terminal report after [`drain_and_stop`](Self::drain_and_stop).
+    pub fn stats(&self) -> AppReport {
+        if let Some(r) = self.report.lock().unwrap().clone() {
+            return r;
+        }
+        AppReport {
+            drained: false,
+            sources: self
+                .sources
+                .iter()
+                .map(|s| s.report.lock().unwrap().clone().unwrap_or_else(|| self.meter_report(s)))
+                .collect(),
+            stages: self
+                .stages
+                .iter()
+                .map(|s| {
+                    let lag = self.cluster.group_lag(&s.group, &s.topic).unwrap_or(0);
+                    self.stage_report(s, lag)
+                })
+                .collect(),
+        }
+    }
+
+    /// Terminate the application cleanly:
+    ///
+    /// 1. **fence** the sources (producers stop at the next message
+    ///    boundary; in-flight sends still land and are counted);
+    /// 2. **drain**: wait until every stage's committed offsets reach
+    ///    the broker's high watermarks (consumer lag zero), up to the
+    ///    builder's drain timeout;
+    /// 3. **stop**: autoscale loops (releasing their extension pilots),
+    ///    manual extensions, streaming jobs, then pilots in reverse
+    ///    dependency order (sources, stages, broker).
+    ///
+    /// Returns the terminal [`AppReport`]; `report.drained` is false if
+    /// the timeout hit first.  A second call is a clean no-op returning
+    /// the cached report.
+    pub fn drain_and_stop(&self) -> Result<AppReport> {
+        if let Some(r) = self.report.lock().unwrap().clone() {
+            return Ok(r);
+        }
+        self.fence.store(true, Ordering::Relaxed);
+        for s in &self.sources {
+            self.join_source(s);
+        }
+        let source_reports: Vec<SourceReport> = self
+            .sources
+            .iter()
+            .map(|s| s.report.lock().unwrap().clone().unwrap_or_else(|| self.meter_report(s)))
+            .collect();
+
+        // Drain: lag commits advance batch by batch, so poll gently.
+        let deadline = Instant::now() + self.drain_timeout;
+        let mut drained = true;
+        for s in &self.stages {
+            loop {
+                match self.cluster.group_lag(&s.group, &s.topic) {
+                    Ok(0) => break,
+                    Ok(_) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20))
+                    }
+                    Ok(_) => {
+                        drained = false;
+                        break;
+                    }
+                    Err(_) => break, // topic gone (shutdown race)
+                }
+            }
+        }
+
+        // Scale-downs first: autoscaler extensions, then manual ones —
+        // extension pilots must stop while their parents still run.
+        for sr in self.scalers.lock().unwrap().iter_mut() {
+            if let Some(scaler) = sr.scaler.take() {
+                for pilot in scaler.stop() {
+                    let _ = self.service.stop_pilot(&pilot);
+                }
+            }
+        }
+        for pilot in std::mem::take(&mut *self.manual_extensions.lock().unwrap()) {
+            let _ = self.service.stop_pilot(&pilot);
+        }
+
+        // Stop jobs and collect terminal stage reports (lag read while
+        // the broker is still up).
+        let mut stage_reports = Vec::new();
+        for s in &self.stages {
+            if let Some(job) = s.job.lock().unwrap().take() {
+                job.stop();
+            }
+            let lag = self.cluster.group_lag(&s.group, &s.topic).unwrap_or(0);
+            stage_reports.push(self.stage_report(s, lag));
+        }
+
+        // Pilots in reverse dependency order.
+        for s in &self.sources {
+            let _ = self.service.stop_pilot(&s.pilot);
+        }
+        for s in &self.stages {
+            let _ = self.service.stop_pilot(&s.pilot);
+        }
+        let _ = self.service.stop_pilot(&self.broker_pilot);
+
+        let report = AppReport {
+            drained,
+            sources: source_reports,
+            stages: stage_reports,
+        };
+        *self.report.lock().unwrap() = Some(report.clone());
+        Ok(report)
+    }
+}

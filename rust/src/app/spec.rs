@@ -1,0 +1,939 @@
+//! Declarative application specs and the [`StreamingApp`] builder.
+//!
+//! A spec is assembled with [`StreamingApp::builder`] and checked by
+//! [`StreamingAppBuilder::build`] *before anything launches*:
+//!
+//! * every topic a source produces to or a stage consumes from must be
+//!   declared on the broker;
+//! * per-topic partition counts must fit the broker tier's per-node
+//!   I/O budget (the same `partitions_per_broker_node` budget the
+//!   autoscale planner co-schedules broker extensions against);
+//! * stage frameworks must provide a processing engine — Spark's
+//!   micro-batch engine directly, Dask/Flink through their
+//!   task-parallel pools; Kafka is the broker tier, not a stage
+//!   backend;
+//! * names are unique and autoscalers reference existing stages.
+//!
+//! Specs can also be read from JSON files
+//! ([`StreamingAppBuilder::from_json`], the `exp app` subcommand) with
+//! the built-in source kinds and processors; programmatic builders
+//! additionally accept arbitrary [`DataSource`] / [`StreamProcessor`]
+//! implementations.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::autoscale::{PlannerConfig, ScalingPolicy};
+use crate::error::{Error, Result};
+use crate::miniapp::{MassConfig, SourceKind};
+use crate::pilot::{FrameworkKind, KafkaDescription};
+use crate::util::{Json, RateSchedule};
+
+use super::{CountingProcessor, DataSource, StreamProcessor};
+
+/// One topic on the pilot-managed broker.
+#[derive(Debug, Clone)]
+pub struct TopicSpec {
+    pub name: String,
+    pub partitions: usize,
+}
+
+/// The broker tier: a Kafka pilot description plus the topics created
+/// on it before anything else launches.
+#[derive(Clone)]
+pub struct BrokerSpec {
+    pub description: KafkaDescription,
+    pub topics: Vec<TopicSpec>,
+}
+
+/// One data source: `producers` producer tasks on a pilot-managed
+/// Dask(-like) engine, each generating messages from a shared
+/// [`DataSource`] recipe against the spec's pacing (fixed rate or
+/// [`RateSchedule`]) and message budget.
+#[derive(Clone)]
+pub struct SourceSpec {
+    pub name: String,
+    pub topic: String,
+    /// Producer tasks (the paper runs several producer processes per
+    /// Dask node).
+    pub producers: usize,
+    /// Per-producer message count when `total_messages` is unset.
+    pub messages_per_producer: usize,
+    /// Total message budget, split near-evenly across producers (the
+    /// remainder is distributed, not dropped).
+    pub total_messages: Option<u64>,
+    /// Fixed per-producer rate limit (messages/sec).
+    pub rate_limit: Option<f64>,
+    /// Variable-rate schedule (takes precedence over `rate_limit`).
+    pub schedule: Option<RateSchedule>,
+    /// Nodes for this source's Dask pilot.
+    pub nodes: usize,
+    pub workers_per_node: usize,
+    pub(crate) source: Arc<dyn DataSource>,
+}
+
+impl SourceSpec {
+    /// A source around any [`DataSource`] implementation.
+    pub fn new(name: &str, topic: &str, source: Arc<dyn DataSource>) -> Self {
+        SourceSpec {
+            name: name.to_string(),
+            topic: topic.to_string(),
+            producers: 2,
+            messages_per_producer: 100,
+            total_messages: None,
+            rate_limit: None,
+            schedule: None,
+            nodes: 1,
+            workers_per_node: 2,
+            source,
+        }
+    }
+
+    /// A source from a full MASS recipe: topic, pacing, message budget
+    /// and payload knobs all come from the [`MassConfig`].
+    pub fn mass(config: MassConfig) -> Self {
+        SourceSpec {
+            name: config.source.name().to_string(),
+            topic: config.topic.clone(),
+            producers: 2,
+            messages_per_producer: config.messages_per_producer,
+            total_messages: config.total_messages,
+            rate_limit: config.rate_limit,
+            schedule: config.schedule.clone(),
+            nodes: 1,
+            workers_per_node: 2,
+            source: Arc::new(config),
+        }
+    }
+
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn with_producers(mut self, producers: usize) -> Self {
+        self.producers = producers;
+        self
+    }
+
+    pub fn with_messages_per_producer(mut self, messages: usize) -> Self {
+        self.messages_per_producer = messages;
+        self
+    }
+
+    /// Total message budget across all producers; the remainder of
+    /// `total / producers` is distributed, never silently dropped.
+    pub fn with_total_messages(mut self, total: u64) -> Self {
+        self.total_messages = Some(total);
+        self
+    }
+
+    pub fn with_rate(mut self, msgs_per_sec: f64) -> Self {
+        self.rate_limit = Some(msgs_per_sec);
+        self
+    }
+
+    pub fn with_schedule(mut self, schedule: RateSchedule) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_workers_per_node(mut self, workers: usize) -> Self {
+        self.workers_per_node = workers;
+        self
+    }
+
+    /// Message count for one producer (near-even split of the total
+    /// budget when one is set).
+    pub(crate) fn messages_for(&self, producer: usize) -> usize {
+        match self.total_messages {
+            Some(total) => crate::util::split_evenly(total, self.producers)[producer],
+            None => self.messages_per_producer,
+        }
+    }
+}
+
+/// One processing stage: a [`StreamProcessor`] consuming a topic in
+/// micro-batch windows on a pilot-managed engine.
+#[derive(Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub topic: String,
+    /// Micro-batch window (paper §6.4 uses 60 s; examples use shorter).
+    pub window: Duration,
+    /// Processing backend: Spark runs the micro-batch engine natively;
+    /// Dask and Flink serve the same windows through their
+    /// task-parallel pools.  Kafka is rejected by validation.
+    pub framework: FrameworkKind,
+    pub nodes: usize,
+    pub executors_per_node: usize,
+    /// Consumer group for offset commits (default `app-{name}`) — what
+    /// lag probes and autoscalers watch.
+    pub group: Option<String>,
+    pub(crate) processor: Arc<dyn StreamProcessor>,
+}
+
+impl StageSpec {
+    pub fn new(name: &str, topic: &str, processor: Arc<dyn StreamProcessor>) -> Self {
+        StageSpec {
+            name: name.to_string(),
+            topic: topic.to_string(),
+            window: Duration::from_millis(250),
+            framework: FrameworkKind::Spark,
+            nodes: 1,
+            executors_per_node: 2,
+            group: None,
+            processor,
+        }
+    }
+
+    pub fn with_window(mut self, window: Duration) -> Self {
+        self.window = window;
+        self
+    }
+
+    pub fn with_framework(mut self, framework: FrameworkKind) -> Self {
+        self.framework = framework;
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_executors_per_node(mut self, executors: usize) -> Self {
+        self.executors_per_node = executors;
+        self
+    }
+
+    pub fn with_group(mut self, group: &str) -> Self {
+        self.group = Some(group.to_string());
+        self
+    }
+
+    /// The consumer group this stage commits offsets under.
+    pub fn group_name(&self) -> String {
+        self.group
+            .clone()
+            .unwrap_or_else(|| format!("app-{}", self.name))
+    }
+}
+
+/// What an autoscale loop actuates on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleTarget {
+    /// Extend/shrink the watched stage's processing pilot.
+    Stage,
+    /// Extend/shrink the broker pilot (watching the stage's signals).
+    Broker,
+}
+
+/// One closed autoscale loop: a policy watching a stage's signals
+/// (consumer lag, rates, window overrun) and actuating — through the
+/// cost-aware planner — on the stage's pilot or the broker tier.
+pub struct AutoscaleSpec {
+    /// Timeline key ([`crate::app::AppHandle::timeline`]); defaults to
+    /// the stage name, or `{stage}-broker` for broker targets.
+    pub name: String,
+    /// The stage whose topic/group/window provide the signals.
+    pub stage: String,
+    pub target: ScaleTarget,
+    pub sample_interval: Duration,
+    pub max_extension_nodes: usize,
+    pub max_step: usize,
+    /// Planner tuning (drain horizon, per-node I/O budgets, broker
+    /// co-scheduling).
+    pub planner: PlannerConfig,
+    /// Stage targets only: hand the broker pilot to the planner so
+    /// plans may co-schedule broker extensions with repartitions.
+    pub coschedule_broker: bool,
+    pub(crate) policy: Box<dyn ScalingPolicy>,
+}
+
+impl AutoscaleSpec {
+    /// Scale `stage`'s processing pilot with `policy`.
+    pub fn for_stage(stage: &str, policy: impl ScalingPolicy + 'static) -> Self {
+        AutoscaleSpec {
+            name: stage.to_string(),
+            stage: stage.to_string(),
+            target: ScaleTarget::Stage,
+            sample_interval: Duration::from_millis(250),
+            max_extension_nodes: 4,
+            max_step: 1,
+            planner: PlannerConfig::default(),
+            coschedule_broker: false,
+            policy: Box::new(policy),
+        }
+    }
+
+    /// Scale the broker pilot with `policy`, watching `stage`'s signals
+    /// (a saturated broker slows producers; consumer lag alone would
+    /// mis-attribute that to the processing tier).
+    pub fn for_broker(stage: &str, policy: impl ScalingPolicy + 'static) -> Self {
+        AutoscaleSpec {
+            name: format!("{stage}-broker"),
+            stage: stage.to_string(),
+            target: ScaleTarget::Broker,
+            sample_interval: Duration::from_millis(250),
+            max_extension_nodes: 1,
+            max_step: 1,
+            planner: PlannerConfig::default(),
+            coschedule_broker: false,
+            policy: Box::new(policy),
+        }
+    }
+
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn with_sample_interval(mut self, interval: Duration) -> Self {
+        self.sample_interval = interval;
+        self
+    }
+
+    pub fn with_max_extension_nodes(mut self, nodes: usize) -> Self {
+        self.max_extension_nodes = nodes;
+        self
+    }
+
+    pub fn with_max_step(mut self, nodes: usize) -> Self {
+        self.max_step = nodes.max(1);
+        self
+    }
+
+    pub fn with_planner(mut self, planner: PlannerConfig) -> Self {
+        self.planner = planner;
+        self
+    }
+
+    /// Allow plans to pair broker-extension steps with processing
+    /// scale-ups (stage targets only).
+    pub fn with_broker_coscheduling(mut self) -> Self {
+        self.coschedule_broker = true;
+        self
+    }
+}
+
+/// A validated streaming application, ready to
+/// [`launch`](StreamingApp::launch).
+pub struct StreamingApp {
+    pub(crate) broker: BrokerSpec,
+    pub(crate) sources: Vec<SourceSpec>,
+    pub(crate) stages: Vec<StageSpec>,
+    pub(crate) autoscalers: Vec<AutoscaleSpec>,
+    pub(crate) drain_timeout: Duration,
+}
+
+impl StreamingApp {
+    pub fn builder() -> StreamingAppBuilder {
+        StreamingAppBuilder {
+            broker: None,
+            sources: Vec::new(),
+            stages: Vec::new(),
+            autoscalers: Vec::new(),
+            drain_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// Composable application builder; see the [module docs](self).
+pub struct StreamingAppBuilder {
+    broker: Option<BrokerSpec>,
+    sources: Vec<SourceSpec>,
+    stages: Vec<StageSpec>,
+    autoscalers: Vec<AutoscaleSpec>,
+    drain_timeout: Duration,
+}
+
+impl StreamingAppBuilder {
+    /// The broker tier: a Kafka pilot plus `(topic, partitions)` pairs
+    /// created before anything else launches.
+    pub fn broker(self, description: KafkaDescription, topics: &[(&str, usize)]) -> Self {
+        self.broker_spec(BrokerSpec {
+            description,
+            topics: topics
+                .iter()
+                .map(|(name, partitions)| TopicSpec {
+                    name: name.to_string(),
+                    partitions: *partitions,
+                })
+                .collect(),
+        })
+    }
+
+    pub fn broker_spec(mut self, spec: BrokerSpec) -> Self {
+        self.broker = Some(spec);
+        self
+    }
+
+    pub fn source(mut self, spec: SourceSpec) -> Self {
+        self.sources.push(spec);
+        self
+    }
+
+    pub fn stage(mut self, spec: StageSpec) -> Self {
+        self.stages.push(spec);
+        self
+    }
+
+    pub fn autoscale(mut self, spec: AutoscaleSpec) -> Self {
+        self.autoscalers.push(spec);
+        self
+    }
+
+    /// Ceiling on how long [`crate::app::AppHandle::drain_and_stop`]
+    /// waits for consumer lag to reach zero (default 600 s).
+    pub fn drain_timeout(mut self, timeout: Duration) -> Self {
+        self.drain_timeout = timeout;
+        self
+    }
+
+    /// Validate the spec; every cross-reference and budget is checked
+    /// here, before any pilot launches.
+    pub fn build(self) -> Result<StreamingApp> {
+        let err = |m: String| Err(Error::App(m));
+        let Some(broker) = self.broker else {
+            return err("no broker tier: call .broker(KafkaDescription, topics) first".into());
+        };
+        if broker.topics.is_empty() {
+            return err("broker declares no topics".into());
+        }
+        if self.sources.is_empty() && self.stages.is_empty() {
+            return err("app has neither sources nor stages".into());
+        }
+        let mut topic_names = Vec::new();
+        // The same per-broker-node partition budget the planner
+        // co-schedules broker extensions against; take the most
+        // conservative configured budget.
+        let budget = self
+            .autoscalers
+            .iter()
+            .map(|a| a.planner.partitions_per_broker_node)
+            .min()
+            .unwrap_or(PlannerConfig::default().partitions_per_broker_node)
+            .max(1);
+        let broker_nodes = broker.description.0.number_of_nodes;
+        for t in &broker.topics {
+            if t.partitions == 0 {
+                return err(format!("topic '{}': zero partitions", t.name));
+            }
+            if topic_names.contains(&t.name) {
+                return err(format!("duplicate topic '{}'", t.name));
+            }
+            if t.partitions > broker_nodes * budget {
+                return err(format!(
+                    "topic '{}': {} partitions oversubscribe {broker_nodes} broker node(s) x \
+                     {budget} partitions/node I/O budget — add broker nodes or lower partitions",
+                    t.name, t.partitions
+                ));
+            }
+            topic_names.push(t.name.clone());
+        }
+        let mut source_names = Vec::new();
+        for s in &self.sources {
+            if !topic_names.contains(&s.topic) {
+                return err(format!(
+                    "source '{}' produces to unknown topic '{}'",
+                    s.name, s.topic
+                ));
+            }
+            if s.producers == 0 || s.nodes == 0 || s.workers_per_node == 0 {
+                return err(format!("source '{}': producers/nodes must be > 0", s.name));
+            }
+            if source_names.contains(&s.name) {
+                return err(format!("duplicate source '{}'", s.name));
+            }
+            source_names.push(s.name.clone());
+        }
+        let mut stage_names = Vec::new();
+        for s in &self.stages {
+            if !topic_names.contains(&s.topic) {
+                return err(format!(
+                    "stage '{}' consumes unknown topic '{}'",
+                    s.name, s.topic
+                ));
+            }
+            if s.framework == FrameworkKind::Kafka {
+                return err(format!(
+                    "stage '{}': kafka is the broker tier, not a processing engine \
+                     (use spark, dask or flink)",
+                    s.name
+                ));
+            }
+            if s.window.is_zero() {
+                return err(format!("stage '{}': zero micro-batch window", s.name));
+            }
+            if s.nodes == 0 || s.executors_per_node == 0 {
+                return err(format!("stage '{}': nodes/executors must be > 0", s.name));
+            }
+            if stage_names.contains(&s.name) {
+                return err(format!("duplicate stage '{}'", s.name));
+            }
+            stage_names.push(s.name.clone());
+        }
+        let mut scaler_names = Vec::new();
+        for a in &self.autoscalers {
+            if !stage_names.contains(&a.stage) {
+                return err(format!(
+                    "autoscaler '{}' watches unknown stage '{}'",
+                    a.name, a.stage
+                ));
+            }
+            if scaler_names.contains(&a.name) {
+                return err(format!("duplicate autoscaler '{}'", a.name));
+            }
+            if a.target == ScaleTarget::Broker && a.coschedule_broker {
+                return err(format!(
+                    "autoscaler '{}': broker targets already actuate on the broker pilot",
+                    a.name
+                ));
+            }
+            scaler_names.push(a.name.clone());
+        }
+        Ok(StreamingApp {
+            broker,
+            sources: self.sources,
+            stages: self.stages,
+            autoscalers: self.autoscalers,
+            drain_timeout: self.drain_timeout,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // JSON specs (`pilot-streaming exp app --spec file.json`)
+    // ------------------------------------------------------------------
+
+    /// Build from a JSON application spec:
+    ///
+    /// ```json
+    /// {
+    ///   "broker": { "nodes": 1, "topics": [{"name": "points", "partitions": 4}] },
+    ///   "sources": [{ "name": "gen", "topic": "points", "kind": "kmeans-static",
+    ///                 "producers": 2, "total_messages": 24 }],
+    ///   "stages":  [{ "name": "count", "topic": "points", "processor": "counter",
+    ///                 "window_ms": 50 }]
+    /// }
+    /// ```
+    ///
+    /// Source kinds: `kmeans-random` (`n_centroids`), `kmeans-static`,
+    /// `lightsource` (needs AOT artifacts); payload knobs
+    /// `points_per_msg`, `msg_bytes`, `seed`; pacing via `rate`
+    /// (msgs/s) or `schedule` (`[[duration_secs, rate], ...]`; the last
+    /// segment's rate holds forever).  Processors: `counter` (optional
+    /// `work_ms` per-message cost) or `kmeans`/`gridrec`/`mlem` (need
+    /// AOT artifacts).  Autoscale loops are builder-only for now (see
+    /// ROADMAP).
+    pub fn from_json(doc: &Json) -> Result<StreamingAppBuilder> {
+        // Unknown keys are rejected, mirroring the CLI's strict
+        // unknown-flag handling: a typo'd "total_mesages" must be a
+        // spec error, not a silent run with defaults.
+        check_keys(
+            doc,
+            "spec",
+            &["machine_nodes", "broker", "sources", "stages", "drain_timeout_secs"],
+        )?;
+        let mut b = StreamingApp::builder();
+        let broker = doc.req("broker")?;
+        check_keys(broker, "broker", &["nodes", "topics"])?;
+        let nodes = broker.get("nodes").and_then(Json::as_usize).unwrap_or(1);
+        let topics = broker
+            .req("topics")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("broker.topics must be an array".into()))?;
+        let mut spec_topics = Vec::new();
+        for t in topics {
+            check_keys(t, "topic", &["name", "partitions"])?;
+            spec_topics.push(TopicSpec {
+                name: req_str(t, "name")?,
+                partitions: req_usize(t, "partitions")?,
+            });
+        }
+        b = b.broker_spec(BrokerSpec {
+            description: KafkaDescription::new(nodes),
+            topics: spec_topics,
+        });
+        for s in doc.get("sources").and_then(Json::as_arr).unwrap_or(&[]) {
+            b = b.source(source_from_json(s)?);
+        }
+        for s in doc.get("stages").and_then(Json::as_arr).unwrap_or(&[]) {
+            b = b.stage(stage_from_json(s)?);
+        }
+        if let Some(secs) = doc.get("drain_timeout_secs").and_then(Json::as_f64) {
+            b = b.drain_timeout(Duration::from_secs_f64(secs.max(0.0)));
+        }
+        Ok(b)
+    }
+
+    /// [`from_json`](Self::from_json) over raw text.
+    pub fn from_json_str(text: &str) -> Result<StreamingAppBuilder> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
+
+/// Reject unknown keys in a spec object — the file-spec analogue of the
+/// CLI's strict unknown-flag rejection.
+fn check_keys(j: &Json, what: &str, allowed: &[&str]) -> Result<()> {
+    let Some(obj) = j.as_obj() else {
+        return Err(Error::Config(format!("{what} must be a JSON object")));
+    };
+    let mut unknown: Vec<&str> = obj
+        .keys()
+        .map(String::as_str)
+        .filter(|k| !allowed.contains(k))
+        .collect();
+    if unknown.is_empty() {
+        return Ok(());
+    }
+    unknown.sort_unstable();
+    Err(Error::Config(format!(
+        "unknown {what} key{}: {} (expected: {})",
+        if unknown.len() == 1 { "" } else { "s" },
+        unknown.join(", "),
+        allowed.join(", "),
+    )))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    j.req(key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Config(format!("'{key}' must be a string")))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| Error::Config(format!("'{key}' must be a number")))
+}
+
+fn source_from_json(j: &Json) -> Result<SourceSpec> {
+    check_keys(
+        j,
+        "source",
+        &[
+            "name", "topic", "kind", "n_centroids", "points_per_msg", "msg_bytes", "seed",
+            "rate", "schedule", "producers", "total_messages", "messages_per_producer",
+            "nodes", "workers_per_node",
+        ],
+    )?;
+    let topic = req_str(j, "topic")?;
+    let kind = req_str(j, "kind")?;
+    let source_kind = match kind.as_str() {
+        "kmeans-random" => SourceKind::KmeansRandom {
+            n_centroids: j.get("n_centroids").and_then(Json::as_usize).unwrap_or(8),
+        },
+        "kmeans-static" => SourceKind::KmeansStatic,
+        "lightsource" => {
+            let rt = crate::runtime::ModelRuntime::load_default()?;
+            SourceKind::Lightsource {
+                template: Arc::new(rt.read_f32_file("template_sinogram.bin")?),
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown source kind '{other}' (expected kmeans-random|kmeans-static|lightsource)"
+            )))
+        }
+    };
+    let mut cfg = MassConfig::new(source_kind, &topic);
+    if let Some(n) = j.get("points_per_msg").and_then(Json::as_usize) {
+        cfg.points_per_msg = n;
+    }
+    if let Some(n) = j.get("msg_bytes").and_then(Json::as_usize) {
+        cfg.target_msg_bytes = Some(n);
+    }
+    if let Some(n) = j.get("seed").and_then(Json::as_u64) {
+        cfg.seed = n;
+    }
+    if let Some(r) = j.get("rate").and_then(Json::as_f64) {
+        cfg.rate_limit = Some(r);
+    }
+    if let Some(segments) = j.get("schedule").and_then(Json::as_arr) {
+        cfg.schedule = Some(schedule_from_json(segments)?);
+    }
+    let mut spec = SourceSpec::mass(cfg).with_name(&kind);
+    if let Some(name) = j.get("name").and_then(Json::as_str) {
+        spec = spec.with_name(name);
+    }
+    if let Some(n) = j.get("producers").and_then(Json::as_usize) {
+        spec = spec.with_producers(n);
+    }
+    if let Some(n) = j.get("total_messages").and_then(Json::as_u64) {
+        spec = spec.with_total_messages(n);
+    }
+    if let Some(n) = j.get("messages_per_producer").and_then(Json::as_usize) {
+        spec = spec.with_messages_per_producer(n);
+    }
+    if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+        spec = spec.with_nodes(n);
+    }
+    if let Some(n) = j.get("workers_per_node").and_then(Json::as_usize) {
+        spec = spec.with_workers_per_node(n);
+    }
+    Ok(spec)
+}
+
+fn stage_from_json(j: &Json) -> Result<StageSpec> {
+    check_keys(
+        j,
+        "stage",
+        &[
+            "name", "topic", "processor", "work_ms", "window_ms", "framework", "nodes",
+            "executors_per_node", "group",
+        ],
+    )?;
+    let name = req_str(j, "name")?;
+    let topic = req_str(j, "topic")?;
+    let processor_name = req_str(j, "processor")?;
+    let processor: Arc<dyn StreamProcessor> = match processor_name.as_str() {
+        "counter" => match j.get("work_ms").and_then(Json::as_f64) {
+            Some(ms) => CountingProcessor::with_cost(Duration::from_secs_f64(ms.max(0.0) / 1e3)),
+            None => CountingProcessor::new(),
+        },
+        "kmeans" | "gridrec" | "mlem" => {
+            let kind = crate::miniapp::ProcessorKind::parse(&processor_name)?;
+            let rt = crate::runtime::ModelRuntime::load_default()?;
+            crate::miniapp::MasaProcessor::new(kind, rt)
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown processor '{other}' (expected counter|kmeans|gridrec|mlem)"
+            )))
+        }
+    };
+    let mut spec = StageSpec::new(&name, &topic, processor);
+    if let Some(ms) = j.get("window_ms").and_then(Json::as_f64) {
+        spec = spec.with_window(Duration::from_secs_f64(ms.max(0.0) / 1e3));
+    }
+    if let Some(f) = j.get("framework").and_then(Json::as_str) {
+        spec = spec.with_framework(FrameworkKind::parse(f)?);
+    }
+    if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+        spec = spec.with_nodes(n);
+    }
+    if let Some(n) = j.get("executors_per_node").and_then(Json::as_usize) {
+        spec = spec.with_executors_per_node(n);
+    }
+    if let Some(g) = j.get("group").and_then(Json::as_str) {
+        spec = spec.with_group(g);
+    }
+    Ok(spec)
+}
+
+fn schedule_from_json(segments: &[Json]) -> Result<RateSchedule> {
+    let mut schedule: Option<RateSchedule> = None;
+    for seg in segments {
+        let bad_pair = || Error::Config("schedule segments must be [secs, rate] pairs".into());
+        let pair = seg.as_arr().filter(|p| p.len() == 2).ok_or_else(bad_pair)?;
+        let (secs, rate) = (
+            pair[0].as_f64().ok_or_else(bad_pair)?,
+            pair[1].as_f64().ok_or_else(bad_pair)?,
+        );
+        schedule = Some(match schedule {
+            None => RateSchedule::starting_at(secs, rate),
+            Some(s) => s.then(secs, rate),
+        });
+    }
+    schedule.ok_or_else(|| Error::Config("schedule must have at least one segment".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::ThresholdPolicy;
+
+    fn counter_stage(name: &str, topic: &str) -> StageSpec {
+        StageSpec::new(name, topic, CountingProcessor::new())
+    }
+
+    fn static_source(name: &str, topic: &str) -> SourceSpec {
+        SourceSpec::mass(MassConfig::new(SourceKind::KmeansStatic, topic)).with_name(name)
+    }
+
+    #[test]
+    fn build_validates_a_complete_spec() {
+        let app = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 4)])
+            .source(static_source("s", "t").with_total_messages(10))
+            .stage(counter_stage("c", "t"))
+            .autoscale(AutoscaleSpec::for_stage("c", ThresholdPolicy::new(10, 1)))
+            .build()
+            .unwrap();
+        assert_eq!(app.broker.topics[0].partitions, 4);
+        assert_eq!(app.sources[0].messages_for(0), 5);
+        assert_eq!(app.stages[0].group_name(), "app-c");
+        assert_eq!(app.autoscalers[0].name, "c");
+    }
+
+    #[test]
+    fn build_rejects_unknown_topics_and_duplicates() {
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 1)])
+            .stage(counter_stage("c", "other"))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown topic 'other'"), "{err}");
+
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 1)])
+            .source(static_source("s", "missing"))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown topic 'missing'"), "{err}");
+
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 1)])
+            .stage(counter_stage("c", "t"))
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate stage 'c'"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_missing_broker_and_oversubscribed_partitions() {
+        let err = StreamingApp::builder().stage(counter_stage("c", "t")).build().unwrap_err();
+        assert!(err.to_string().contains("no broker tier"), "{err}");
+
+        // 1 broker node x 12 partitions/node default budget: 13 is over.
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 13)])
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("oversubscribe"), "{err}");
+
+        // Two broker nodes carry the same topic fine.
+        StreamingApp::builder()
+            .broker(KafkaDescription::new(2), &[("t", 13)])
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap();
+    }
+
+    #[test]
+    fn build_rejects_incompatible_frameworks_and_bad_autoscalers() {
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 1)])
+            .stage(counter_stage("c", "t").with_framework(FrameworkKind::Kafka))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("not a processing engine"), "{err}");
+
+        // Dask and Flink are valid stage backends (task-parallel pools).
+        for fw in [FrameworkKind::Dask, FrameworkKind::Flink] {
+            StreamingApp::builder()
+                .broker(KafkaDescription::new(1), &[("t", 1)])
+                .stage(counter_stage("c", "t").with_framework(fw))
+                .build()
+                .unwrap();
+        }
+
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 1)])
+            .stage(counter_stage("c", "t"))
+            .autoscale(AutoscaleSpec::for_stage("ghost", ThresholdPolicy::new(10, 1)))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown stage 'ghost'"), "{err}");
+    }
+
+    #[test]
+    fn json_spec_round_trips_through_the_builder() {
+        let text = r#"{
+            "machine_nodes": 6,
+            "broker": { "nodes": 1, "topics": [ { "name": "points", "partitions": 4 } ] },
+            "sources": [ { "name": "gen", "topic": "points", "kind": "kmeans-static",
+                           "points_per_msg": 100, "msg_bytes": 0,
+                           "producers": 2, "total_messages": 25,
+                           "schedule": [[0.5, 100.0], [0.5, 10.0]] } ],
+            "stages": [ { "name": "count", "topic": "points", "processor": "counter",
+                          "window_ms": 50, "executors_per_node": 2 } ],
+            "drain_timeout_secs": 120
+        }"#;
+        let app = StreamingAppBuilder::from_json_str(text).unwrap().build().unwrap();
+        assert_eq!(app.broker.topics[0].name, "points");
+        assert_eq!(app.sources[0].name, "gen");
+        assert_eq!(app.sources[0].producers, 2);
+        assert_eq!(app.sources[0].total_messages, Some(25));
+        // 25 over 2 producers: 13 + 12, remainder distributed.
+        assert_eq!(app.sources[0].messages_for(0), 13);
+        assert_eq!(app.sources[0].messages_for(1), 12);
+        assert!(app.sources[0].schedule.is_some());
+        assert_eq!(app.stages[0].window, Duration::from_millis(50));
+        assert_eq!(app.drain_timeout, Duration::from_secs(120));
+    }
+
+    #[test]
+    fn json_spec_errors_are_diagnosable() {
+        // Missing broker section.
+        let err = StreamingAppBuilder::from_json_str(r#"{ "stages": [] }"#).unwrap_err();
+        assert!(err.to_string().contains("broker"), "{err}");
+
+        // Unknown source kind.
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ] },
+                 "sources": [ { "topic": "t", "kind": "storm" } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown source kind 'storm'"), "{err}");
+
+        // Unknown processor.
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ] },
+                 "stages": [ { "name": "s", "topic": "t", "processor": "wordcount" } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown processor 'wordcount'"), "{err}");
+
+        // Malformed schedule and missing keys.
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ] },
+                 "sources": [ { "topic": "t", "kind": "kmeans-static", "schedule": [[1.0]] } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("schedule segments"), "{err}");
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "partitions": 1 } ] } }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("missing JSON key 'name'"), "{err}");
+
+        // Not even JSON.
+        assert!(StreamingAppBuilder::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn json_spec_rejects_unknown_keys_like_the_cli_rejects_flags() {
+        // A typo'd key must be a spec error, not a silent default run.
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ] },
+                 "sources": [ { "topic": "t", "kind": "kmeans-static",
+                                "total_mesages": 10 } ] }"#,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown source key: total_mesages"), "{msg}");
+        assert!(msg.contains("total_messages"), "should list expected keys: {msg}");
+
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [], "replication": 3 } }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown broker key: replication"), "{err}");
+
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [] }, "autoscale": [] }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown spec key: autoscale"), "{err}");
+    }
+}

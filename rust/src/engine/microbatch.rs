@@ -169,6 +169,16 @@ impl MicroBatchEngine {
         }
     }
 
+    /// Serve micro-batch jobs on an existing executor pool.  This is
+    /// the cross-framework path of the application layer: a Dask- or
+    /// Flink-managed [`TaskEngine`] (whose pilot handles extension and
+    /// shrinking) runs the same windowed jobs Spark's engine does —
+    /// both handles share the pool, so workers added through the pilot
+    /// are visible here immediately.
+    pub fn with_pool(pool: TaskEngine) -> Self {
+        MicroBatchEngine { pool }
+    }
+
     pub fn executor_count(&self) -> usize {
         self.pool.worker_count()
     }
@@ -570,6 +580,36 @@ mod tests {
         let mut got = seen.lock().unwrap().clone();
         got.sort();
         assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn with_pool_shares_workers_with_the_task_engine() {
+        // A Dask/Flink-style pool serves micro-batch jobs; growing the
+        // pool through its own handle is visible to the wrapper.
+        let (m, c) = setup(2);
+        let pool = TaskEngine::new(m, vec![1], 1);
+        let engine = MicroBatchEngine::with_pool(pool.clone());
+        assert_eq!(engine.executor_count(), 1);
+        pool.add_workers(vec![2]);
+        assert_eq!(engine.executor_count(), 2);
+
+        let count = Arc::new(AtomicUsize::new(0));
+        let count2 = count.clone();
+        let job = engine
+            .start_job(
+                c.clone(),
+                StreamingJobConfig::new("t", Duration::from_millis(30)),
+                Arc::new(move |_: &TaskContext, recs: &[Record]| {
+                    count2.fetch_add(recs.len(), Ordering::Relaxed);
+                    Ok(())
+                }),
+            )
+            .unwrap();
+        c.produce("t", 0, 3, &[vec![1], vec![2]]).unwrap();
+        c.produce("t", 1, 3, &[vec![3]]).unwrap();
+        assert!(wait_for(|| count.load(Ordering::Relaxed) == 3, 5.0));
+        job.stop();
+        engine.stop();
     }
 
     #[test]

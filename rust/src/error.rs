@@ -42,6 +42,11 @@ pub enum Error {
 
     /// Malformed wire message on the data plane.
     Wire(String),
+
+    /// Streaming-application spec violations (stage referencing an
+    /// unknown topic, oversubscribed broker I/O budget, incompatible
+    /// stage framework) and application-lifecycle misuse.
+    App(String),
 }
 
 impl std::fmt::Display for Error {
@@ -56,6 +61,7 @@ impl std::fmt::Display for Error {
             Error::Engine(m) => write!(f, "engine: {m}"),
             Error::Pilot(m) => write!(f, "pilot: {m}"),
             Error::Wire(m) => write!(f, "wire: {m}"),
+            Error::App(m) => write!(f, "app: {m}"),
         }
     }
 }
@@ -93,6 +99,7 @@ mod tests {
     fn display_prefixes_by_layer() {
         assert_eq!(Error::Broker("x".into()).to_string(), "broker: x");
         assert_eq!(Error::Pilot("y".into()).to_string(), "pilot: y");
+        assert_eq!(Error::App("z".into()).to_string(), "app: z");
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().starts_with("io: "));
         assert!(std::error::Error::source(&io).is_some());

@@ -32,24 +32,42 @@
 //!
 //! ## Quickstart
 //!
+//! The [`app`] layer declares a whole streaming application — broker,
+//! sources, processing stages, autoscaling — as one validated spec:
+//!
 //! ```no_run
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//! use pilot_streaming::app::{CountingProcessor, SourceSpec, StageSpec, StreamingApp};
 //! use pilot_streaming::prelude::*;
 //!
-//! let machine = Machine::wrangler(8);
-//! let service = PilotComputeService::new(machine);
-//! // Paper Listing 2: boot a pilot-managed Kafka cluster.
-//! let (pilot, broker) = service.start_kafka(KafkaDescription::new(2))?;
-//! broker.create_topic("frames", 24)?;
-//! // Paper Listing 4: extend it at runtime.
-//! let extension = service.extend_pilot(&pilot, 2)?;
-//! service.stop_pilot(&extension)?;
-//! service.stop_pilot(&pilot)?;
+//! let service = Arc::new(PilotComputeService::new(Machine::wrangler(8)));
+//! let app = StreamingApp::builder()
+//!     .broker(KafkaDescription::new(1), &[("frames", 4)])
+//!     .source(
+//!         SourceSpec::mass(MassConfig::new(SourceKind::KmeansStatic, "frames"))
+//!             .with_producers(2)
+//!             .with_total_messages(24),
+//!     )
+//!     .stage(
+//!         StageSpec::new("count", "frames", CountingProcessor::new())
+//!             .with_window(Duration::from_millis(100)),
+//!     )
+//!     .build()?;
+//! let handle = app.launch(&service)?;
+//! handle.await_sources()?;
+//! let report = handle.drain_and_stop()?;
+//! assert!(report.drained);
 //! # Ok::<(), pilot_streaming::Error>(())
 //! ```
 //!
-//! See `examples/` for the end-to-end light-source pipeline, streaming
-//! KMeans, and dynamic scaling under backpressure.
+//! The paper's raw primitives (Listing 2's descriptions, Listing 4's
+//! `extend_pilot`, Listing 6's native contexts) remain available
+//! underneath; `AppHandle::extend` is Listing 4 at the application
+//! level.  See `examples/` for the end-to-end light-source pipeline,
+//! streaming KMeans, and dynamic scaling under backpressure.
 
+pub mod app;
 pub mod autoscale;
 pub mod broker;
 pub mod cluster;
@@ -71,6 +89,10 @@ pub use error::{Error, Result};
 
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::app::{
+        AppHandle, AppReport, AutoscaleSpec, BatchAdapter, CountingProcessor, DataSource,
+        SourceSpec, StageSpec, StreamProcessor, StreamingApp, StreamingAppBuilder,
+    };
     pub use crate::autoscale::{
         Autoscaler, AutoscalerConfig, BinPackingPolicy, LagSlopePolicy, PartitionElastic,
         Planner, PlannerConfig, PolicyDecision, ScalingIntent, ScalingPlan, ScalingPolicy,

@@ -36,6 +36,8 @@ USAGE:
   pilot-streaming exp   <fig6|fig7|fig8|fig9|table1|headline|elastic|all>
                         [--preset <calibrated|paper-era>] [--out <dir>]
                         [--config <file.json>]
+  pilot-streaming exp   app --spec <app.json>
+
   pilot-streaming calibrate [--reps <n>]
   pilot-streaming artifacts
   pilot-streaming bench-gate --current <run.json> --baseline <committed.json>
@@ -112,6 +114,10 @@ fn run(args: &[String]) -> Result<()> {
         "demo" => {
             check_flags("demo", &flags, &["processor", "messages"])?;
             cmd_demo(&flags)
+        }
+        "exp" if args.get(1).map(String::as_str) == Some("app") => {
+            check_flags("exp app", &flags, &["spec"])?;
+            cmd_app(&flags)
         }
         "exp" => {
             check_flags("exp", &flags, &["preset", "out", "config"])?;
@@ -264,6 +270,62 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     service.stop_pilot(&spark_pilot)?;
     service.stop_pilot(&dask_pilot)?;
     service.stop_pilot(&kafka_pilot)?;
+    Ok(())
+}
+
+/// Run a declarative `StreamingApp` spec from a JSON file: launch the
+/// whole application (broker, sources, stages), wait for the sources to
+/// finish their budget, drain consumer lag to zero and stop everything.
+fn cmd_app(flags: &HashMap<String, String>) -> Result<()> {
+    let path = flags
+        .get("spec")
+        .ok_or_else(|| Error::Config(format!("exp app requires --spec <file.json>\n{USAGE}")))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("read {path}: {e}")))?;
+    let doc = Json::parse(&text)?;
+    let machine_nodes = doc.get("machine_nodes").and_then(Json::as_usize).unwrap_or(8);
+    let app = pilot_streaming::app::StreamingAppBuilder::from_json(&doc)?.build()?;
+
+    let machine = Machine::unthrottled(machine_nodes);
+    let service = std::sync::Arc::new(PilotComputeService::new(machine));
+    let handle = app.launch(&service)?;
+    for (pilot, s) in handle.startup_breakdowns() {
+        println!(
+            "pilot {pilot:<16} startup {:.1}s (queue {:.1} + bootstrap {:.1}, modeled)",
+            s.total_secs(),
+            s.queue_wait_secs,
+            s.bootstrap_secs
+        );
+    }
+    let produced = handle.await_sources()?;
+    for r in &produced {
+        println!(
+            "source {:<12} -> {:<12} {:>6} msgs  {:>8.2} MB  {:>7.1} msg/s",
+            r.name,
+            r.topic,
+            r.messages,
+            r.bytes as f64 / 1e6,
+            r.msg_rate()
+        );
+    }
+    let report = handle.drain_and_stop()?;
+    for s in &report.stages {
+        println!(
+            "stage  {:<12} <- {:<12} {:>6} msgs  {:>5} batches  {:>3} behind  lag {}",
+            s.name, s.topic, s.processed_messages, s.batches, s.behind, s.lag
+        );
+    }
+    if !report.drained {
+        return Err(Error::App(format!(
+            "drain timed out with {} messages of lag outstanding",
+            report.terminal_lag()
+        )));
+    }
+    println!(
+        "app drained cleanly: {} produced / {} processed",
+        report.produced_messages(),
+        report.processed_messages()
+    );
     Ok(())
 }
 
@@ -479,6 +541,44 @@ mod tests {
         assert!(err.to_string().contains("unknown flag"), "{err}");
         let err = run(&args(&["start", "--nodse", "4"])).unwrap_err();
         assert!(err.to_string().contains("--nodse"), "{err}");
+    }
+
+    #[test]
+    fn exp_app_rejects_unknown_flags_and_requires_spec() {
+        // Strict flag rejection, same as every other subcommand.
+        let err = run(&args(&["exp", "app", "--sepc", "x.json"])).unwrap_err();
+        assert!(err.to_string().contains("--sepc"), "{err}");
+        assert!(err.to_string().contains("--spec"), "should list expected flags: {err}");
+        let err = run(&args(&["exp", "app"])).unwrap_err();
+        assert!(err.to_string().contains("requires --spec"), "{err}");
+        let err = run(&args(&["exp", "app", "--spec", "/nonexistent/app.json"])).unwrap_err();
+        assert!(err.to_string().contains("read /nonexistent/app.json"), "{err}");
+    }
+
+    #[test]
+    fn exp_app_runs_a_minimal_spec_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("exp-app-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("app.json");
+        std::fs::write(
+            &spec,
+            r#"{
+              "machine_nodes": 4,
+              "broker": { "nodes": 1, "topics": [ { "name": "t", "partitions": 2 } ] },
+              "sources": [ { "name": "gen", "topic": "t", "kind": "kmeans-static",
+                             "points_per_msg": 50, "msg_bytes": 0,
+                             "producers": 2, "total_messages": 7 } ],
+              "stages": [ { "name": "count", "topic": "t", "processor": "counter",
+                            "window_ms": 30 } ]
+            }"#,
+        )
+        .unwrap();
+        run(&args(&["exp", "app", "--spec", spec.to_str().unwrap()])).unwrap();
+        // A malformed spec surfaces as a config error, not a launch.
+        std::fs::write(&spec, r#"{ "stages": [] }"#).unwrap();
+        let err = run(&args(&["exp", "app", "--spec", spec.to_str().unwrap()])).unwrap_err();
+        assert!(err.to_string().contains("broker"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     fn bench_doc(name: &str, p50: f64) -> Json {

@@ -269,6 +269,25 @@ impl MasaProcessor {
     }
 }
 
+/// MASA processors are the built-in [`crate::app::StreamProcessor`]s:
+/// an application stage runs them directly
+/// (`StageSpec::new("recon", topic, MasaProcessor::new(kind, rt))`),
+/// with artifact compilation happening in `warmup` before the stage's
+/// streaming job starts.
+impl crate::app::StreamProcessor for MasaProcessor {
+    fn name(&self) -> &str {
+        self.kind.name()
+    }
+
+    fn warmup(&self) -> Result<()> {
+        MasaProcessor::warmup(self)
+    }
+
+    fn process_window(&self, ctx: &TaskContext, window: &[Record]) -> Result<()> {
+        <Self as BatchProcessor>::process(self, ctx, window)
+    }
+}
+
 impl BatchProcessor for MasaProcessor {
     fn process(&self, _ctx: &TaskContext, records: &[Record]) -> Result<()> {
         for r in records {

@@ -13,12 +13,14 @@
 //!
 //! Producers run as tasks on a Dask-like [`TaskEngine`] (the paper runs
 //! "8 producer processes in Dask" per node), each with its own RNG
-//! stream and a PyKafka-style batching [`Producer`].
+//! stream and a PyKafka-style batching [`crate::broker::Producer`]
+//! (the shared paced loop in [`crate::app::handle::run_producer`]).
 
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use crate::broker::{BrokerCluster, Producer, ProducerConfig};
+use crate::broker::BrokerCluster;
 use crate::config::messages;
 use crate::engine::TaskEngine;
 use crate::error::Result;
@@ -73,8 +75,14 @@ pub struct MassConfig {
     /// Points per KMeans message (paper: 5,000).
     pub points_per_msg: usize,
     pub point_dim: usize,
-    /// Messages each producer sends.
+    /// Messages each producer sends (ignored when `total_messages` is
+    /// set).
     pub messages_per_producer: usize,
+    /// Total message budget across all producers, split near-evenly —
+    /// the remainder of `total / producers` is distributed one message
+    /// per producer, never silently dropped (callers used to compute
+    /// `total / producers` by hand and lose it).
+    pub total_messages: Option<u64>,
     /// Optional per-producer rate limit (messages/sec) — Fig 7 uses a
     /// fixed 100 msg/s aggregate rate.
     pub rate_limit: Option<f64>,
@@ -94,10 +102,28 @@ impl MassConfig {
             points_per_msg: 5000,
             point_dim: 3,
             messages_per_producer: 100,
+            total_messages: None,
             rate_limit: None,
             schedule: None,
             target_msg_bytes: None,
             seed: 42,
+        }
+    }
+
+    /// Set the total message budget across all producers;
+    /// [`messages_for`](Self::messages_for) splits it near-evenly with
+    /// the remainder distributed, not dropped.
+    pub fn with_total_messages(mut self, total: u64) -> Self {
+        self.total_messages = Some(total);
+        self
+    }
+
+    /// Message count for producer `producer` of `producers`: the even
+    /// split of `total_messages` when set, else `messages_per_producer`.
+    pub fn messages_for(&self, producer: usize, producers: usize) -> usize {
+        match self.total_messages {
+            Some(total) => crate::util::split_evenly(total, producers)[producer],
+            None => self.messages_per_producer,
         }
     }
 }
@@ -206,9 +232,14 @@ impl MassSource {
         &self.config
     }
 
-    /// Run `producers` producer tasks on `engine`, each sending
-    /// `messages_per_producer` messages to `cluster`.  Blocks until all
+    /// Run `producers` producer tasks on `engine`, each sending its
+    /// share of the message budget to `cluster`.  Blocks until all
     /// producers finish; returns the aggregate report.
+    ///
+    /// The per-producer loop is the application layer's shared
+    /// [`crate::app::handle::run_producer`] (with a never-set fence),
+    /// so MASS pacing and the `StreamingApp` source driver are one
+    /// code path.
     pub fn run(
         &self,
         engine: &TaskEngine,
@@ -216,63 +247,27 @@ impl MassSource {
         producers: usize,
     ) -> Result<MassReport> {
         let start = Instant::now();
+        let never_fenced = Arc::new(AtomicBool::new(false));
         let mut futures = Vec::with_capacity(producers);
         for i in 0..producers {
             let config = self.config.clone();
+            let messages = config.messages_for(i, producers);
             let cluster = cluster.clone();
             let metrics = self.metrics.clone();
+            let fence = never_fenced.clone();
             futures.push(engine.submit(move |node| -> Result<(u64, u64)> {
-                let mut generator = PayloadGenerator::new(&config, i as u64 + 1);
-                let mut producer = Producer::new(
-                    cluster,
+                crate::app::handle::run_producer(
+                    &config,
+                    i as u64 + 1,
+                    messages,
+                    &cluster,
                     &config.topic,
                     node,
-                    ProducerConfig {
-                        // PyKafka-style: flush each ~message (they're big).
-                        batch_bytes: 1,
-                        ..Default::default()
-                    },
-                )?;
-                let target = config
-                    .target_msg_bytes
-                    .unwrap_or_else(|| config.source.target_bytes());
-                let interval = config.rate_limit.map(|r| Duration::from_secs_f64(1.0 / r));
-                let mut sent = (0u64, 0u64);
-                let t0 = Instant::now();
-                for seq in 0..config.messages_per_producer {
-                    if let Some(schedule) = &config.schedule {
-                        // Pace against the variable-rate schedule.
-                        let due_secs = schedule.time_for_count(seq as f64);
-                        if due_secs.is_finite() {
-                            let elapsed = t0.elapsed().as_secs_f64();
-                            if due_secs > elapsed {
-                                std::thread::sleep(Duration::from_secs_f64(due_secs - elapsed));
-                            }
-                        }
-                    } else if let Some(iv) = interval {
-                        // Pace to the configured fixed rate.
-                        let due = iv * seq as u32;
-                        let elapsed = t0.elapsed();
-                        if due > elapsed {
-                            std::thread::sleep(due - elapsed);
-                        }
-                    }
-                    let values = generator.generate();
-                    let msg = Message::new(
-                        config.source.payload_kind(),
-                        seq as u64,
-                        now_ns(),
-                        values,
-                    );
-                    let bytes = msg.encode(target);
-                    let n = bytes.len();
-                    producer.send(None, bytes)?;
-                    metrics.record(n);
-                    sent.0 += 1;
-                    sent.1 += n as u64;
-                }
-                producer.flush()?;
-                Ok(sent)
+                    config.rate_limit,
+                    config.schedule.as_ref(),
+                    &metrics,
+                    &fence,
+                )
             })?);
         }
         let mut messages = 0;
@@ -291,10 +286,63 @@ impl MassSource {
     }
 }
 
+// ---------------------------------------------------------------------
+// Application-layer plug-in surface
+// ---------------------------------------------------------------------
+
+/// The built-in per-producer stream behind the [`crate::app::DataSource`]
+/// impls: a [`PayloadGenerator`] whose values are framed as wire
+/// messages (padded to the paper's message sizes).
+pub struct MassStream {
+    generator: PayloadGenerator,
+    kind: PayloadKind,
+    target_bytes: usize,
+}
+
+impl crate::app::SourceStream for MassStream {
+    fn next_message(&mut self, seq: u64) -> Vec<u8> {
+        Message::new(self.kind, seq, now_ns(), self.generator.generate()).encode(self.target_bytes)
+    }
+}
+
+/// A [`MassConfig`] is a complete production recipe, so it is the
+/// full-knob built-in [`crate::app::DataSource`]: payload kind, points
+/// per message, seed and padded message size all come from the config
+/// (pacing and message counts are owned by the application layer's
+/// [`crate::app::SourceSpec`]).
+impl crate::app::DataSource for MassConfig {
+    fn name(&self) -> &str {
+        self.source.name()
+    }
+
+    fn open(&self, stream: u64) -> Box<dyn crate::app::SourceStream> {
+        Box::new(MassStream {
+            generator: PayloadGenerator::new(self, stream),
+            kind: self.source.payload_kind(),
+            target_bytes: self
+                .target_msg_bytes
+                .unwrap_or_else(|| self.source.target_bytes()),
+        })
+    }
+}
+
+/// A bare [`SourceKind`] is the paper-defaults built-in
+/// [`crate::app::DataSource`] (5,000-point messages, paper padding).
+impl crate::app::DataSource for SourceKind {
+    fn name(&self) -> &str {
+        SourceKind::name(self)
+    }
+
+    fn open(&self, stream: u64) -> Box<dyn crate::app::SourceStream> {
+        crate::app::DataSource::open(&MassConfig::new(self.clone(), ""), stream)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::Machine;
+    use std::time::Duration;
 
     fn setup() -> (Machine, BrokerCluster, TaskEngine) {
         let m = Machine::unthrottled(3);
@@ -322,6 +370,42 @@ mod tests {
         assert_eq!(total, 15, "all messages landed in the broker");
         assert!(report.msg_rate() > 0.0);
         e.stop();
+    }
+
+    #[test]
+    fn total_messages_distributes_the_remainder() {
+        // 25 over 4 producers: 7+6+6+6, nothing silently dropped (the
+        // old callers' `total / producers` would send 24).
+        let cfg = small(SourceKind::KmeansStatic).with_total_messages(25);
+        assert_eq!(
+            (0..4).map(|i| cfg.messages_for(i, 4)).collect::<Vec<_>>(),
+            vec![7, 6, 6, 6]
+        );
+        let (_m, c, e) = setup();
+        let mass = MassSource::new(cfg);
+        let report = mass.run(&e, &c, 4).unwrap();
+        assert_eq!(report.messages, 25, "full budget produced");
+        let total: u64 = (0..3).map(|p| c.end_offset("t", p).unwrap()).sum();
+        assert_eq!(total, 25);
+        e.stop();
+    }
+
+    #[test]
+    fn mass_config_is_a_data_source() {
+        use crate::app::DataSource;
+        let cfg = small(SourceKind::KmeansRandom { n_centroids: 2 });
+        assert_eq!(DataSource::name(&cfg), "kmeans-random");
+        let mut a = cfg.open(1);
+        let mut b = cfg.open(2);
+        let (m1, m2) = (a.next_message(0), b.next_message(0));
+        let d1 = Message::decode(&m1).unwrap();
+        assert_eq!(d1.kind, PayloadKind::KmeansPoints);
+        assert_eq!(d1.values.len(), 100 * 3);
+        assert_ne!(m1, m2, "producer streams fork the RNG");
+        // A bare SourceKind works with paper defaults (5,000 points).
+        let mut s = DataSource::open(&SourceKind::KmeansStatic, 1);
+        let d = Message::decode(&s.next_message(0)).unwrap();
+        assert_eq!(d.values.len(), 5000 * 3);
     }
 
     #[test]

@@ -20,5 +20,5 @@ pub mod mass;
 pub mod wire;
 
 pub use masa::{KmeansModel, MasaApp, MasaConfig, MasaProcessor, ProcessorKind, ProcessorStats};
-pub use mass::{MassConfig, MassReport, MassSource, SourceKind};
+pub use mass::{MassConfig, MassReport, MassSource, MassStream, PayloadGenerator, SourceKind};
 pub use wire::{Message, MessageView, PayloadKind};

@@ -38,6 +38,20 @@ impl FrameworkKind {
             other => Err(Error::Pilot(format!("unknown framework '{other}'"))),
         }
     }
+
+    /// The framework-native configuration key naming per-node worker
+    /// parallelism (Spark executors, Dask workers, Flink task slots) —
+    /// the single source of truth shared by the framework plugins and
+    /// the application layer's stage specs.  `None` for Kafka, whose
+    /// parallelism is one broker per node.
+    pub fn parallelism_key(self) -> Option<&'static str> {
+        match self {
+            FrameworkKind::Kafka => None,
+            FrameworkKind::Spark => Some("executors_per_node"),
+            FrameworkKind::Dask => Some("workers_per_node"),
+            FrameworkKind::Flink => Some("taskmanager.numberOfTaskSlots"),
+        }
+    }
 }
 
 impl std::fmt::Display for FrameworkKind {
@@ -87,6 +101,16 @@ impl PilotComputeDescription {
     pub fn with_config(mut self, key: &str, value: &str) -> Self {
         self.config.insert(key.to_string(), value.to_string());
         self
+    }
+
+    /// Per-node worker parallelism read from the framework's
+    /// [`FrameworkKind::parallelism_key`] config entry, or `default`.
+    pub fn parallelism_per_node(&self, default: usize) -> usize {
+        self.framework
+            .parallelism_key()
+            .and_then(|key| self.config.get(key))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
     }
 
     /// Scheme part of the resource URL ("slurm", "local", ...).
@@ -197,6 +221,28 @@ mod tests {
         );
         assert_eq!(pcd.scheme(), "slurm");
         pcd.validate().unwrap();
+    }
+
+    #[test]
+    fn parallelism_keys_are_pinned_and_read_back() {
+        // The app layer and the framework plugins share these keys; a
+        // rename must update both sides through this single source.
+        assert_eq!(FrameworkKind::Spark.parallelism_key(), Some("executors_per_node"));
+        assert_eq!(FrameworkKind::Dask.parallelism_key(), Some("workers_per_node"));
+        assert_eq!(
+            FrameworkKind::Flink.parallelism_key(),
+            Some("taskmanager.numberOfTaskSlots")
+        );
+        assert_eq!(FrameworkKind::Kafka.parallelism_key(), None);
+
+        let pcd = PilotComputeDescription::new("local://x", FrameworkKind::Spark, 1)
+            .with_config("executors_per_node", "3");
+        assert_eq!(pcd.parallelism_per_node(2), 3);
+        let pcd = PilotComputeDescription::new("local://x", FrameworkKind::Dask, 1);
+        assert_eq!(pcd.parallelism_per_node(8), 8, "default when unset");
+        let pcd = PilotComputeDescription::new("local://x", FrameworkKind::Kafka, 1)
+            .with_config("executors_per_node", "3");
+        assert_eq!(pcd.parallelism_per_node(1), 1, "kafka has no parallelism key");
     }
 
     #[test]

@@ -23,11 +23,7 @@ pub struct DaskPlugin {
 
 impl DaskPlugin {
     pub fn new(pcd: &PilotComputeDescription, time_scale: f64) -> Self {
-        let workers_per_node = pcd
-            .config
-            .get("workers_per_node")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(8);
+        let workers_per_node = pcd.parallelism_per_node(8);
         DaskPlugin {
             model: super::bootstrap_model_for(FrameworkKind::Dask),
             time_scale,

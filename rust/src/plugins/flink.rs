@@ -25,11 +25,7 @@ pub struct FlinkPlugin {
 
 impl FlinkPlugin {
     pub fn new(pcd: &PilotComputeDescription, time_scale: f64) -> Self {
-        let slots_per_node = pcd
-            .config
-            .get("taskmanager.numberOfTaskSlots")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(2);
+        let slots_per_node = pcd.parallelism_per_node(2);
         FlinkPlugin {
             model: super::bootstrap_model_for(FrameworkKind::Flink),
             time_scale,

@@ -22,11 +22,7 @@ pub struct SparkPlugin {
 
 impl SparkPlugin {
     pub fn new(pcd: &PilotComputeDescription, time_scale: f64) -> Self {
-        let executors_per_node = pcd
-            .config
-            .get("executors_per_node")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(2);
+        let executors_per_node = pcd.parallelism_per_node(2);
         SparkPlugin {
             model: super::bootstrap_model_for(FrameworkKind::Spark),
             time_scale,

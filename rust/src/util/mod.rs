@@ -12,3 +12,34 @@ pub use arcswap::ArcCell;
 pub use json::Json;
 pub use rng::Rng;
 pub use schedule::RateSchedule;
+
+/// Split `total` work items into `parts` near-equal integer shares: the
+/// first `total % parts` shares are one item larger, so nothing is
+/// silently dropped (callers used to compute `total / parts` by hand
+/// and lose the remainder).
+pub fn split_evenly(total: u64, parts: usize) -> Vec<usize> {
+    let parts = parts.max(1);
+    let base = (total / parts as u64) as usize;
+    let rem = (total % parts as u64) as usize;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::split_evenly;
+
+    #[test]
+    fn split_evenly_conserves_total_and_spreads_remainder() {
+        assert_eq!(split_evenly(25, 4), vec![7, 6, 6, 6]);
+        assert_eq!(split_evenly(24, 2), vec![12, 12]);
+        assert_eq!(split_evenly(2, 5), vec![1, 1, 0, 0, 0]);
+        assert_eq!(split_evenly(0, 3), vec![0, 0, 0]);
+        assert_eq!(split_evenly(7, 0), vec![7], "zero parts clamps to one");
+        for (total, parts) in [(101u64, 7usize), (13, 13), (1, 2)] {
+            let shares = split_evenly(total, parts);
+            assert_eq!(shares.iter().map(|s| *s as u64).sum::<u64>(), total);
+            let (min, max) = (shares.iter().min().unwrap(), shares.iter().max().unwrap());
+            assert!(max - min <= 1, "shares uneven: {shares:?}");
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Application-API integration on the real plane: third-party
+//! `DataSource` + `StreamProcessor` implementations running end-to-end
+//! through `StreamingApp::launch()` / `drain_and_stop()` — without
+//! touching `miniapp` — plus the drain protocol's no-loss guarantees
+//! under an in-flight burst.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use pilot_streaming::app::{
+    CountingProcessor, DataSource, SourceSpec, SourceStream, StageSpec, StreamProcessor,
+    StreamingApp,
+};
+use pilot_streaming::broker::Record;
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::engine::TaskContext;
+use pilot_streaming::miniapp::{MassConfig, SourceKind};
+use pilot_streaming::pilot::{FrameworkKind, KafkaDescription, PilotComputeService};
+use pilot_streaming::Result;
+
+// ---------------------------------------------------------------------
+// A third-party mini-app: fixed-width sequence records (no `miniapp`
+// wire format anywhere) summed by a stateful processor.
+// ---------------------------------------------------------------------
+
+struct SeqSource;
+
+struct SeqStream {
+    stream: u64,
+}
+
+impl DataSource for SeqSource {
+    fn name(&self) -> &str {
+        "seq"
+    }
+
+    fn open(&self, stream: u64) -> Box<dyn SourceStream> {
+        Box::new(SeqStream { stream })
+    }
+}
+
+impl SourceStream for SeqStream {
+    fn next_message(&mut self, seq: u64) -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(16);
+        bytes.extend_from_slice(&self.stream.to_le_bytes());
+        bytes.extend_from_slice(&seq.to_le_bytes());
+        bytes
+    }
+}
+
+#[derive(Default)]
+struct SumProcessor {
+    count: AtomicU64,
+    seq_sum: AtomicU64,
+    warmed: AtomicU64,
+}
+
+impl StreamProcessor for SumProcessor {
+    fn name(&self) -> &str {
+        "sum"
+    }
+
+    fn warmup(&self) -> Result<()> {
+        self.warmed.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn process_window(&self, _ctx: &TaskContext, window: &[Record]) -> Result<()> {
+        for r in window {
+            let bytes: &[u8] = &r.value;
+            assert_eq!(bytes.len(), 16, "third-party frame size");
+            let seq = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+            self.count.fetch_add(1, Ordering::Relaxed);
+            self.seq_sum.fetch_add(seq, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+}
+
+fn service(nodes: usize) -> Arc<PilotComputeService> {
+    Arc::new(PilotComputeService::new(Machine::unthrottled(nodes)))
+}
+
+#[test]
+fn third_party_source_and_processor_run_end_to_end() {
+    let service = service(4);
+    let processor = Arc::new(SumProcessor::default());
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("frames", 3)])
+        .source(
+            SourceSpec::new("seq", "frames", Arc::new(SeqSource))
+                .with_producers(3)
+                .with_total_messages(20),
+        )
+        .stage(
+            StageSpec::new("sum", "frames", processor.clone())
+                .with_window(Duration::from_millis(20)),
+        )
+        .build()
+        .unwrap();
+
+    let handle = app.launch(&service).unwrap();
+    assert_eq!(processor.warmed.load(Ordering::Relaxed), 1, "warmup ran once");
+
+    // Broker + stage + source pilots, each with a startup breakdown.
+    let startups = handle.startup_breakdowns();
+    assert_eq!(startups.len(), 3);
+    assert!(startups.iter().all(|(_, s)| s.total_secs() > 0.0));
+    assert!(startups[0].0.contains("kafka"), "broker first: {startups:?}");
+
+    // 20 over 3 producers: 7 + 7 + 6 — the remainder is distributed.
+    let produced = handle.await_sources().unwrap();
+    assert_eq!(produced.len(), 1);
+    assert_eq!(produced[0].messages, 20);
+
+    let report = handle.drain_and_stop().unwrap();
+    assert!(report.drained);
+    assert_eq!(report.produced_messages(), 20);
+    assert_eq!(report.processed_messages(), 20, "no loss through the app");
+    assert_eq!(report.terminal_lag(), 0);
+    assert_eq!(processor.count.load(Ordering::Relaxed), 20);
+    // Per-producer seqs are 0..7, 0..7, 0..6: 21 + 21 + 15.
+    assert_eq!(processor.seq_sum.load(Ordering::Relaxed), 57);
+    assert_eq!(report.stages[0].errors, 0);
+
+    // Everything released.
+    assert_eq!(service.machine().free_nodes(), 4);
+}
+
+#[test]
+fn drain_and_stop_races_an_inflight_burst_without_loss() {
+    let service = service(4);
+    let counter = CountingProcessor::new();
+    // A slow trickle with a huge budget: the fence will cut production
+    // mid-stream, and drain must still account for every landed record.
+    let mut cfg = MassConfig::new(SourceKind::KmeansStatic, "burst");
+    cfg.points_per_msg = 50;
+    cfg.target_msg_bytes = Some(0);
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("burst", 2)])
+        .source(
+            SourceSpec::mass(cfg)
+                .with_producers(2)
+                .with_total_messages(100_000)
+                .with_rate(200.0),
+        )
+        .stage(
+            StageSpec::new("count", "burst", counter.clone())
+                .with_window(Duration::from_millis(20)),
+        )
+        .build()
+        .unwrap();
+
+    let handle = app.launch(&service).unwrap();
+    // Let some of the burst flow, then stop mid-flight.
+    std::thread::sleep(Duration::from_millis(300));
+    let report = handle.drain_and_stop().unwrap();
+
+    assert!(report.drained, "drain timed out");
+    assert_eq!(report.terminal_lag(), 0, "lag must be fully drained");
+    let produced = report.produced_messages();
+    assert!(produced > 0, "nothing flowed before the fence");
+    assert!(
+        produced < 100_000,
+        "fence did not cut the burst short: {produced}"
+    );
+    assert_eq!(
+        report.processed_messages(),
+        produced,
+        "every landed message must be processed"
+    );
+    assert_eq!(counter.messages(), produced);
+
+    // A second call is a clean no-op returning the cached report.
+    let again = handle.drain_and_stop().unwrap();
+    assert_eq!(again.produced_messages(), produced);
+    assert_eq!(again.processed_messages(), report.processed_messages());
+    assert_eq!(service.machine().free_nodes(), 4, "no pilots leaked");
+}
+
+#[test]
+fn stats_and_extend_work_while_running() {
+    let service = service(5);
+    let counter = CountingProcessor::new();
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("t", 2)])
+        .source(
+            SourceSpec::new("seq", "t", Arc::new(SeqSource))
+                .with_producers(1)
+                .with_total_messages(5),
+        )
+        .stage(StageSpec::new("count", "t", counter).with_window(Duration::from_millis(20)))
+        .build()
+        .unwrap();
+    let handle = app.launch(&service).unwrap();
+
+    // Listing 4 at the application level: grow the stage mid-run.
+    let ext = handle.extend("count", 1).unwrap();
+    assert!(ext.id().contains("spark"));
+    assert!(handle.extend("ghost", 1).is_err());
+    assert!(handle.lag("ghost").is_err());
+
+    handle.await_sources().unwrap();
+    let live = handle.stats();
+    assert!(!live.drained, "live snapshot is not terminal");
+    assert_eq!(live.sources[0].messages, 5);
+
+    let report = handle.drain_and_stop().unwrap();
+    assert!(report.drained);
+    assert_eq!(report.processed_messages(), 5);
+    // The manual extension was released with everything else.
+    assert_eq!(service.machine().free_nodes(), 5);
+}
+
+#[test]
+fn dask_backed_stage_processes_the_same_windows() {
+    // Framework interoperability: the same stage spec runs on a
+    // Dask-managed task pool instead of the Spark micro-batch engine.
+    let service = service(4);
+    let counter = CountingProcessor::new();
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("t", 2)])
+        .source(
+            SourceSpec::new("seq", "t", Arc::new(SeqSource))
+                .with_producers(2)
+                .with_total_messages(9),
+        )
+        .stage(
+            StageSpec::new("count", "t", counter.clone())
+                .with_framework(FrameworkKind::Dask)
+                .with_window(Duration::from_millis(20)),
+        )
+        .build()
+        .unwrap();
+    let handle = app.launch(&service).unwrap();
+    handle.await_sources().unwrap();
+    let report = handle.drain_and_stop().unwrap();
+    assert!(report.drained);
+    assert_eq!(report.processed_messages(), 9);
+    assert_eq!(counter.messages(), 9);
+    assert_eq!(service.machine().free_nodes(), 4);
+}
+
+#[test]
+fn launch_failure_releases_every_started_pilot() {
+    struct FailingWarmup;
+    impl StreamProcessor for FailingWarmup {
+        fn warmup(&self) -> Result<()> {
+            Err(pilot_streaming::Error::App("no artifacts".into()))
+        }
+        fn process_window(&self, _: &TaskContext, _: &[Record]) -> Result<()> {
+            Ok(())
+        }
+    }
+    let service = service(4);
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("t", 1)])
+        .source(
+            SourceSpec::new("seq", "t", Arc::new(SeqSource)).with_total_messages(1),
+        )
+        .stage(StageSpec::new("fail", "t", Arc::new(FailingWarmup)))
+        .build()
+        .unwrap();
+    let err = app.launch(&service).unwrap_err();
+    assert!(err.to_string().contains("no artifacts"), "{err}");
+    assert_eq!(service.machine().free_nodes(), 4, "partial launch leaked nodes");
+}

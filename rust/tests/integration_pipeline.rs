@@ -159,6 +159,51 @@ fn pipeline_survives_mid_stream_extension() {
 }
 
 #[test]
+fn app_builder_runs_the_masa_pipeline() {
+    // Builder-level coverage of the same pipeline the hand-wired tests
+    // above assemble: one StreamingApp spec, MASA KMeans as the stage
+    // processor (its artifacts compiled by the launch-time warmup), and
+    // the drain protocol instead of polling.
+    use pilot_streaming::app::{SourceSpec, StageSpec, StreamingApp};
+    use pilot_streaming::miniapp::MasaProcessor;
+
+    let Some(rt) = runtime() else { return };
+    let k = rt.manifest().kmeans.k;
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(4)));
+    let processor = MasaProcessor::new(ProcessorKind::KMeans, rt);
+
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("km-app", 3)])
+        .source(
+            SourceSpec::mass(MassConfig::new(
+                SourceKind::KmeansRandom { n_centroids: k },
+                "km-app",
+            ))
+            .with_producers(2)
+            .with_total_messages(13),
+        )
+        .stage(
+            StageSpec::new("kmeans", "km-app", processor.clone())
+                .with_window(Duration::from_millis(100)),
+        )
+        .build()
+        .unwrap();
+
+    let handle = app.launch(&service).unwrap();
+    // 13 over 2 producers: 7 + 6 — with_total_messages keeps the odd
+    // message the old `total / producers` wiring dropped.
+    let produced = handle.await_sources().unwrap();
+    assert_eq!(produced[0].messages, 13);
+
+    let report = handle.drain_and_stop().unwrap();
+    assert!(report.drained);
+    assert_eq!(report.processed_messages(), 13, "message conservation");
+    assert_eq!(report.terminal_lag(), 0);
+    assert_eq!(processor.model().updates, 13, "one model update per message");
+    assert_eq!(service.machine().free_nodes(), 4, "all pilots released");
+}
+
+#[test]
 fn table1_characterization_runs() {
     let Some(rt) = runtime() else { return };
     let rec = pilot_streaming::exp::table1(&rt).unwrap();
