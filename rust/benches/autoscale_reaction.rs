@@ -47,6 +47,7 @@ fn snapshot(lag: u64, partitions: usize) -> SignalSnapshot {
         broker_nodes: 4,
         broker_nic_util: 0.9,
         broker_disk_util: 0.4,
+        degraded_partitions: 0,
     }
 }
 
@@ -175,6 +176,8 @@ fn main() {
             provision_delay_secs: 90.0,
             repartition_delay_secs: 60.0,
             max_partitions: 128,
+            replication_factor: 1,
+            node_death_window: None,
         };
         let mut policy = ThresholdPolicy::new(600, 60)
             .with_sustain(1)

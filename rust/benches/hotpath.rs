@@ -8,12 +8,12 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 //! JSON (perf trajectory): `cargo bench --bench hotpath -- --json \
-//!   --baseline=BENCH_pr4.json > bench.json`
+//!   --baseline=BENCH_pr6.json > bench.json`
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use pilot_streaming::broker::{BrokerCluster, LogConfig, PartitionLog};
+use pilot_streaming::broker::{BrokerCluster, LogConfig, PartitionLog, ReplicationConfig};
 use pilot_streaming::cluster::Machine;
 use pilot_streaming::miniapp::mass::{MassConfig, PayloadGenerator, SourceKind};
 use pilot_streaming::miniapp::{Message, PayloadKind};
@@ -177,6 +177,28 @@ fn main() {
                 bytes as f64 / 1e6 / secs,
             ),
         ]
+    });
+
+    // --- Failover: broker death to promoted leaders ------------------------
+    // Time-to-recover for a factor-2 replicated topic: one iteration
+    // kills a broker (every partition it led fails over to its
+    // follower) and heals the tier by re-adding the node as a follower.
+    // Recovery sits on the lag path of every consumer during a node
+    // death, so its p50 is gated in CI like the data-plane rows.
+    let machine = Machine::unthrottled(3);
+    let failover_cluster = BrokerCluster::new(machine, vec![0, 1]);
+    failover_cluster
+        .create_topic_replicated("fo", 8, ReplicationConfig::new(2))
+        .unwrap();
+    for p in 0..8 {
+        failover_cluster.produce("fo", p, 2, &[vec![0u8; 1024]]).unwrap();
+    }
+    let mut victim = 0;
+    bench.run("broker/failover-8part", 300, || {
+        let report = failover_cluster.kill_broker(victim).unwrap();
+        failover_cluster.add_brokers(vec![victim]);
+        victim ^= 1;
+        std::hint::black_box(report);
     });
 
     // --- L1/L2 artifact execution ------------------------------------------

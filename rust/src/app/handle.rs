@@ -19,7 +19,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::autoscale::{Autoscaler, AutoscalerConfig};
-use crate::broker::{BrokerCluster, Producer, ProducerConfig};
+use crate::broker::{BrokerCluster, Producer, ProducerConfig, Topic};
 use crate::engine::{JobStats, MicroBatchEngine, StreamingJobConfig, StreamingJobHandle, TaskEngine};
 use crate::error::{Error, Result};
 use crate::metrics::{RateMeter, ScalingTimeline};
@@ -176,7 +176,7 @@ fn launch_inner(
     let (broker_pilot, cluster) = service.start_kafka(app.broker.description.clone())?;
     started.push(broker_pilot.clone());
     for t in &app.broker.topics {
-        cluster.create_topic(&t.name, t.partitions)?;
+        cluster.create_topic_replicated(&t.name, t.partitions, app.broker.replication)?;
     }
 
     // ---- Processing stages (consumers before producers) --------------
@@ -625,12 +625,20 @@ impl AppHandle {
             .collect();
 
         // Drain: lag commits advance batch by batch, so poll gently.
+        // A lag-zero reading is trusted only if the partition-set
+        // snapshot captured *before* the read is still current: a
+        // leader failover or repartition swapping the set mid-read can
+        // produce a zero measured against the retired leaders'
+        // watermarks (the promoted leader's log is the live truth).
+        // Stale reads fall through to the retry arm and re-measure
+        // against the new snapshot.
         let deadline = Instant::now() + self.drain_timeout;
         let mut drained = true;
         for s in &self.stages {
             loop {
+                let snapshot = self.cluster.topic(&s.topic).ok();
                 match self.cluster.group_lag(&s.group, &s.topic) {
-                    Ok(0) => break,
+                    Ok(0) if snapshot.as_deref().map_or(true, Topic::is_current) => break,
                     Ok(_) if Instant::now() < deadline => {
                         std::thread::sleep(Duration::from_millis(20))
                     }

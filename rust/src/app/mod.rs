@@ -29,8 +29,8 @@
 //!   [`BatchProcessor`] adapt to it).
 //!
 //! See `examples/quickstart.rs` for the ~30-line end-to-end shape, and
-//! `pilot-streaming exp app --spec <file.json>` to run a spec from a
-//! JSON file.
+//! `pilot-streaming exp app --spec <file.json|file.toml>` to run a
+//! spec from a JSON or TOML file.
 
 pub mod handle;
 pub mod spec;
@@ -45,8 +45,8 @@ use crate::error::Result;
 
 pub use handle::{AppHandle, AppReport, SourceReport, StageReport};
 pub use spec::{
-    AutoscaleSpec, BrokerSpec, ScaleTarget, SourceSpec, StageSpec, StreamingApp,
-    StreamingAppBuilder, TopicSpec,
+    AckMode, AutoscaleSpec, BrokerSpec, ReplicationSpec, ScaleTarget, SourceSpec, StageSpec,
+    StreamingApp, StreamingAppBuilder, TopicSpec,
 };
 
 /// A plug-able streaming data source (the MASS side of the Mini-App

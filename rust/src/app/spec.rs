@@ -14,20 +14,26 @@
 //!   backend;
 //! * names are unique and autoscalers reference existing stages.
 //!
-//! Specs can also be read from JSON files
-//! ([`StreamingAppBuilder::from_json`], the `exp app` subcommand) with
-//! the built-in source kinds and processors; programmatic builders
+//! Specs can also be read from JSON or TOML files
+//! ([`StreamingAppBuilder::from_json`] /
+//! [`StreamingAppBuilder::from_toml_str`], the `exp app` subcommand)
+//! with the built-in source kinds and processors; programmatic builders
 //! additionally accept arbitrary [`DataSource`] / [`StreamProcessor`]
-//! implementations.
+//! implementations.  The broker tier's resilience posture —
+//! [`ReplicationSpec`]: replica factor, ack mode, minimum in-sync
+//! replicas — is part of the spec and validated against the broker
+//! fleet size before launch.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::autoscale::{PlannerConfig, ScalingPolicy};
+use crate::autoscale::{BinPackingPolicy, PlannerConfig, ScalingPolicy, ThresholdPolicy};
 use crate::error::{Error, Result};
 use crate::miniapp::{MassConfig, SourceKind};
 use crate::pilot::{FrameworkKind, KafkaDescription};
 use crate::util::{Json, RateSchedule};
+
+pub use crate::broker::{AckMode, ReplicationConfig as ReplicationSpec};
 
 use super::{CountingProcessor, DataSource, StreamProcessor};
 
@@ -44,6 +50,11 @@ pub struct TopicSpec {
 pub struct BrokerSpec {
     pub description: KafkaDescription,
     pub topics: Vec<TopicSpec>,
+    /// Resilience posture for every topic on this tier: replica factor,
+    /// ack mode and minimum in-sync replicas
+    /// ([`ReplicationSpec::validate`]d against the fleet size by
+    /// [`StreamingAppBuilder::build`]).
+    pub replication: ReplicationSpec,
 }
 
 /// One data source: `producers` producer tasks on a pilot-managed
@@ -336,6 +347,7 @@ impl StreamingApp {
     pub fn builder() -> StreamingAppBuilder {
         StreamingAppBuilder {
             broker: None,
+            replication: None,
             sources: Vec::new(),
             stages: Vec::new(),
             autoscalers: Vec::new(),
@@ -347,6 +359,9 @@ impl StreamingApp {
 /// Composable application builder; see the [module docs](self).
 pub struct StreamingAppBuilder {
     broker: Option<BrokerSpec>,
+    /// `.replication(..)` override; applied to the broker tier at
+    /// build time so call order doesn't matter.
+    replication: Option<ReplicationSpec>,
     sources: Vec<SourceSpec>,
     stages: Vec<StageSpec>,
     autoscalers: Vec<AutoscaleSpec>,
@@ -366,11 +381,23 @@ impl StreamingAppBuilder {
                     partitions: *partitions,
                 })
                 .collect(),
+            replication: ReplicationSpec::default(),
         })
     }
 
     pub fn broker_spec(mut self, spec: BrokerSpec) -> Self {
         self.broker = Some(spec);
+        self
+    }
+
+    /// Replication posture for the broker tier's topics: replica
+    /// factor, ack mode and minimum in-sync replicas.  Applied at
+    /// [`build`](Self::build) (so it composes with `.broker(..)` in
+    /// either order) and validated against the broker fleet size —
+    /// factor 0 and factor > broker nodes are rejected before any
+    /// pilot launches.
+    pub fn replication(mut self, spec: ReplicationSpec) -> Self {
+        self.replication = Some(spec);
         self
     }
 
@@ -400,9 +427,12 @@ impl StreamingAppBuilder {
     /// here, before any pilot launches.
     pub fn build(self) -> Result<StreamingApp> {
         let err = |m: String| Err(Error::App(m));
-        let Some(broker) = self.broker else {
+        let Some(mut broker) = self.broker else {
             return err("no broker tier: call .broker(KafkaDescription, topics) first".into());
         };
+        if let Some(replication) = self.replication {
+            broker.replication = replication;
+        }
         if broker.topics.is_empty() {
             return err("broker declares no topics".into());
         }
@@ -421,6 +451,9 @@ impl StreamingAppBuilder {
             .unwrap_or(PlannerConfig::default().partitions_per_broker_node)
             .max(1);
         let broker_nodes = broker.description.0.number_of_nodes;
+        // Same check topic creation applies, surfaced pre-launch: a
+        // replica factor the fleet can't host is a spec error.
+        broker.replication.validate(broker_nodes)?;
         for t in &broker.topics {
             if t.partitions == 0 {
                 return err(format!("topic '{}': zero partitions", t.name));
@@ -529,8 +562,12 @@ impl StreamingAppBuilder {
     /// (msgs/s) or `schedule` (`[[duration_secs, rate], ...]`; the last
     /// segment's rate holds forever).  Processors: `counter` (optional
     /// `work_ms` per-message cost) or `kmeans`/`gridrec`/`mlem` (need
-    /// AOT artifacts).  Autoscale loops are builder-only for now (see
-    /// ROADMAP).
+    /// AOT artifacts).  The broker block takes an optional
+    /// `replication` object (`factor` required, `ack_mode`
+    /// leader|quorum, `min_insync`); each stage takes an optional
+    /// `autoscale` block (`policy` threshold|bin-packing with its
+    /// knobs, `target` stage|broker, `max_extension_nodes`, `max_step`,
+    /// `sample_interval_ms`, `coschedule_broker`).
     pub fn from_json(doc: &Json) -> Result<StreamingAppBuilder> {
         // Unknown keys are rejected, mirroring the CLI's strict
         // unknown-flag handling: a typo'd "total_mesages" must be a
@@ -542,7 +579,7 @@ impl StreamingAppBuilder {
         )?;
         let mut b = StreamingApp::builder();
         let broker = doc.req("broker")?;
-        check_keys(broker, "broker", &["nodes", "topics"])?;
+        check_keys(broker, "broker", &["nodes", "topics", "replication"])?;
         let nodes = broker.get("nodes").and_then(Json::as_usize).unwrap_or(1);
         let topics = broker
             .req("topics")?
@@ -556,15 +593,24 @@ impl StreamingAppBuilder {
                 partitions: req_usize(t, "partitions")?,
             });
         }
+        let replication = match broker.get("replication") {
+            Some(r) => replication_from_json(r)?,
+            None => ReplicationSpec::default(),
+        };
         b = b.broker_spec(BrokerSpec {
             description: KafkaDescription::new(nodes),
             topics: spec_topics,
+            replication,
         });
         for s in doc.get("sources").and_then(Json::as_arr).unwrap_or(&[]) {
             b = b.source(source_from_json(s)?);
         }
         for s in doc.get("stages").and_then(Json::as_arr).unwrap_or(&[]) {
-            b = b.stage(stage_from_json(s)?);
+            let (stage, autoscale) = stage_from_json(s)?;
+            b = b.stage(stage);
+            if let Some(a) = autoscale {
+                b = b.autoscale(a);
+            }
         }
         if let Some(secs) = doc.get("drain_timeout_secs").and_then(Json::as_f64) {
             b = b.drain_timeout(Duration::from_secs_f64(secs.max(0.0)));
@@ -575,6 +621,14 @@ impl StreamingAppBuilder {
     /// [`from_json`](Self::from_json) over raw text.
     pub fn from_json_str(text: &str) -> Result<StreamingAppBuilder> {
         Self::from_json(&Json::parse(text)?)
+    }
+
+    /// [`from_json`](Self::from_json) over a TOML spec: the TOML is
+    /// lowered to the same [`Json`] tree, so both formats share one
+    /// schema, one set of defaults, and the same strict unknown-key
+    /// rejection (`exp app --spec file.toml` sniffs the extension).
+    pub fn from_toml_str(text: &str) -> Result<StreamingAppBuilder> {
+        Self::from_json(&crate::util::toml::parse(text)?)
     }
 }
 
@@ -611,6 +665,12 @@ fn req_str(j: &Json, key: &str) -> Result<String> {
 fn req_usize(j: &Json, key: &str) -> Result<usize> {
     j.req(key)?
         .as_usize()
+        .ok_or_else(|| Error::Config(format!("'{key}' must be a number")))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    j.req(key)?
+        .as_u64()
         .ok_or_else(|| Error::Config(format!("'{key}' must be a number")))
 }
 
@@ -681,13 +741,29 @@ fn source_from_json(j: &Json) -> Result<SourceSpec> {
     Ok(spec)
 }
 
-fn stage_from_json(j: &Json) -> Result<StageSpec> {
+/// Parse a `broker.replication` block: `factor` is required (an
+/// implicit factor is exactly the kind of silent resilience downgrade
+/// spec files exist to prevent); `ack_mode` and `min_insync` default
+/// like [`ReplicationSpec::new`].
+fn replication_from_json(j: &Json) -> Result<ReplicationSpec> {
+    check_keys(j, "broker.replication", &["factor", "ack_mode", "min_insync"])?;
+    let mut spec = ReplicationSpec::new(req_usize(j, "factor")?);
+    if let Some(mode) = j.get("ack_mode").and_then(Json::as_str) {
+        spec = spec.with_ack_mode(AckMode::parse(mode)?);
+    }
+    if let Some(n) = j.get("min_insync").and_then(Json::as_usize) {
+        spec = spec.with_min_insync(n);
+    }
+    Ok(spec)
+}
+
+fn stage_from_json(j: &Json) -> Result<(StageSpec, Option<AutoscaleSpec>)> {
     check_keys(
         j,
         "stage",
         &[
             "name", "topic", "processor", "work_ms", "window_ms", "framework", "nodes",
-            "executors_per_node", "group",
+            "executors_per_node", "group", "autoscale",
         ],
     )?;
     let name = req_str(j, "name")?;
@@ -724,6 +800,91 @@ fn stage_from_json(j: &Json) -> Result<StageSpec> {
     }
     if let Some(g) = j.get("group").and_then(Json::as_str) {
         spec = spec.with_group(g);
+    }
+    let autoscale = match j.get("autoscale") {
+        Some(a) => Some(autoscale_from_json(&name, a)?),
+        None => None,
+    };
+    Ok((spec, autoscale))
+}
+
+/// Parse a per-stage `autoscale` block into a closed loop on that
+/// stage.  `policy` picks the decision rule — `threshold` (required
+/// `up`/`down` lag marks) or `bin-packing` (optional `node_capacity`
+/// msgs/s per node) — and `target` picks what it actuates on (`stage`,
+/// the default, or `broker`).
+fn autoscale_from_json(stage: &str, j: &Json) -> Result<AutoscaleSpec> {
+    check_keys(
+        j,
+        "stage autoscale",
+        &[
+            "policy", "up", "down", "step", "sustain", "cooldown_secs", "node_capacity",
+            "target", "max_extension_nodes", "max_step", "sample_interval_ms",
+            "coschedule_broker",
+        ],
+    )?;
+    let policy_name = j.get("policy").and_then(Json::as_str).unwrap_or("threshold");
+    let policy: Box<dyn ScalingPolicy> = match policy_name {
+        "threshold" => {
+            let (up, down) = (req_u64(j, "up")?, req_u64(j, "down")?);
+            if down >= up {
+                return Err(Error::Config(format!(
+                    "autoscale on stage '{stage}': threshold hysteresis band is empty \
+                     (up {up} must exceed down {down})"
+                )));
+            }
+            let mut p = ThresholdPolicy::new(up, down);
+            if let Some(n) = j.get("step").and_then(Json::as_usize) {
+                p = p.with_step(n);
+            }
+            if let Some(n) = j.get("sustain").and_then(Json::as_usize) {
+                p = p.with_sustain(n);
+            }
+            if let Some(secs) = j.get("cooldown_secs").and_then(Json::as_f64) {
+                p = p.with_cooldown_secs(secs.max(0.0));
+            }
+            Box::new(p)
+        }
+        "bin-packing" => {
+            let mut p = BinPackingPolicy::new();
+            if let Some(cap) = j.get("node_capacity").and_then(Json::as_f64) {
+                p = p.with_node_capacity(cap);
+            }
+            if let Some(secs) = j.get("cooldown_secs").and_then(Json::as_f64) {
+                p = p.with_cooldown_secs(secs.max(0.0));
+            }
+            Box::new(p)
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown autoscale policy '{other}' (expected threshold|bin-packing)"
+            )))
+        }
+    };
+    // Placeholder policy only: `for_stage`/`for_broker` set the
+    // name/target/defaults, then the parsed policy replaces it.
+    let placeholder = ThresholdPolicy::new(1, 0);
+    let mut spec = match j.get("target").and_then(Json::as_str).unwrap_or("stage") {
+        "stage" => AutoscaleSpec::for_stage(stage, placeholder),
+        "broker" => AutoscaleSpec::for_broker(stage, placeholder),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown autoscale target '{other}' (expected stage|broker)"
+            )))
+        }
+    };
+    spec.policy = policy;
+    if let Some(n) = j.get("max_extension_nodes").and_then(Json::as_usize) {
+        spec = spec.with_max_extension_nodes(n);
+    }
+    if let Some(n) = j.get("max_step").and_then(Json::as_usize) {
+        spec = spec.with_max_step(n);
+    }
+    if let Some(ms) = j.get("sample_interval_ms").and_then(Json::as_f64) {
+        spec = spec.with_sample_interval(Duration::from_secs_f64(ms.max(1.0) / 1e3));
+    }
+    if j.get("coschedule_broker").and_then(Json::as_bool) == Some(true) {
+        spec = spec.with_broker_coscheduling();
     }
     Ok(spec)
 }
@@ -925,15 +1086,194 @@ mod tests {
         assert!(msg.contains("total_messages"), "should list expected keys: {msg}");
 
         let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [], "replicas": 3 } }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown broker key: replicas"), "{err}");
+
+        // "replication" is a valid broker key now, but it must be the
+        // structured block, not a bare count.
+        let err = StreamingAppBuilder::from_json_str(
             r#"{ "broker": { "topics": [], "replication": 3 } }"#,
         )
         .unwrap_err();
-        assert!(err.to_string().contains("unknown broker key: replication"), "{err}");
+        assert!(
+            err.to_string().contains("broker.replication must be a JSON object"),
+            "{err}"
+        );
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [], "replication": { "factor": 2, "acks": "all" } } }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown broker.replication key: acks"), "{err}");
 
+        // Autoscale loops hang off stages, not the top level.
         let err = StreamingAppBuilder::from_json_str(
             r#"{ "broker": { "topics": [] }, "autoscale": [] }"#,
         )
         .unwrap_err();
         assert!(err.to_string().contains("unknown spec key: autoscale"), "{err}");
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ] },
+                 "stages": [ { "name": "s", "topic": "t", "processor": "counter",
+                               "autoscale": { "up": 100, "down": 10, "cooldown": 5 } } ] }"#,
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("unknown stage autoscale key: cooldown"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn replication_spec_round_trips_and_is_validated_prelaunch() {
+        // Builder surface: .replication composes with .broker in either
+        // order (applied at build time).
+        let app = StreamingApp::builder()
+            .replication(ReplicationSpec::new(2).with_ack_mode(AckMode::Quorum).with_min_insync(2))
+            .broker(KafkaDescription::new(3), &[("t", 4)])
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap();
+        assert_eq!(app.broker.replication.factor, 2);
+        assert_eq!(app.broker.replication.ack_mode, AckMode::Quorum);
+        assert_eq!(app.broker.replication.min_insync, 2);
+
+        // Factor 0 and factor > broker nodes are rejected pre-launch.
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 1)])
+            .replication(ReplicationSpec::new(0))
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("replication factor must be >= 1"), "{err}");
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(2), &[("t", 1)])
+            .replication(ReplicationSpec::new(3))
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("exceeds the broker tier's 2 nodes"), "{err}");
+
+        // JSON surface: same config through the file spec.
+        let app = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "nodes": 3,
+                             "topics": [ { "name": "t", "partitions": 4 } ],
+                             "replication": { "factor": 2, "ack_mode": "quorum",
+                                              "min_insync": 2 } },
+                 "stages": [ { "name": "s", "topic": "t", "processor": "counter" } ] }"#,
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+        assert_eq!(app.broker.replication.factor, 2);
+        assert_eq!(app.broker.replication.ack_mode, AckMode::Quorum);
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ],
+                             "replication": { "factor": 1, "ack_mode": "always" } } }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown ack_mode 'always'"), "{err}");
+    }
+
+    #[test]
+    fn per_stage_autoscale_blocks_parse_into_loops() {
+        let app = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "nodes": 2, "topics": [ { "name": "t", "partitions": 4 } ] },
+                 "stages": [ { "name": "s", "topic": "t", "processor": "counter",
+                               "autoscale": { "up": 500, "down": 50, "step": 2,
+                                              "sustain": 3, "cooldown_secs": 1.5,
+                                              "max_extension_nodes": 6, "max_step": 2,
+                                              "sample_interval_ms": 100,
+                                              "coschedule_broker": true } },
+                             { "name": "b", "topic": "t", "processor": "counter",
+                               "autoscale": { "policy": "bin-packing",
+                                              "node_capacity": 400,
+                                              "target": "broker" } } ] }"#,
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+        assert_eq!(app.autoscalers.len(), 2);
+        let stage_loop = &app.autoscalers[0];
+        assert_eq!(stage_loop.name, "s");
+        assert_eq!(stage_loop.target, ScaleTarget::Stage);
+        assert_eq!(stage_loop.max_extension_nodes, 6);
+        assert_eq!(stage_loop.max_step, 2);
+        assert_eq!(stage_loop.sample_interval, Duration::from_millis(100));
+        assert!(stage_loop.coschedule_broker);
+        let broker_loop = &app.autoscalers[1];
+        assert_eq!(broker_loop.name, "b-broker");
+        assert_eq!(broker_loop.target, ScaleTarget::Broker);
+
+        // An empty hysteresis band is a spec error, not a panic.
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ] },
+                 "stages": [ { "name": "s", "topic": "t", "processor": "counter",
+                               "autoscale": { "up": 10, "down": 10 } } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("hysteresis band is empty"), "{err}");
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ] },
+                 "stages": [ { "name": "s", "topic": "t", "processor": "counter",
+                               "autoscale": { "policy": "pid", "up": 10, "down": 1 } } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown autoscale policy 'pid'"), "{err}");
+    }
+
+    #[test]
+    fn toml_specs_lower_to_the_same_schema_as_json() {
+        let toml = r#"
+            machine_nodes = 6
+            drain_timeout_secs = 120
+
+            [broker]
+            nodes = 2
+
+            [[broker.topics]]
+            name = "points"
+            partitions = 4
+
+            [broker.replication]
+            factor = 2
+            ack_mode = "quorum"
+            min_insync = 2
+
+            [[sources]]
+            name = "gen"
+            topic = "points"
+            kind = "kmeans-static"
+            producers = 2
+            total_messages = 25
+
+            [[stages]]
+            name = "count"
+            topic = "points"
+            processor = "counter"
+            window_ms = 50
+
+            [stages.autoscale]
+            up = 500
+            down = 50
+            coschedule_broker = true
+        "#;
+        let app = StreamingAppBuilder::from_toml_str(toml).unwrap().build().unwrap();
+        assert_eq!(app.broker.topics[0].name, "points");
+        assert_eq!(app.broker.replication.factor, 2);
+        assert_eq!(app.broker.replication.ack_mode, AckMode::Quorum);
+        assert_eq!(app.sources[0].total_messages, Some(25));
+        assert_eq!(app.stages[0].window, Duration::from_millis(50));
+        assert_eq!(app.autoscalers.len(), 1);
+        assert!(app.autoscalers[0].coschedule_broker);
+        assert_eq!(app.drain_timeout, Duration::from_secs(120));
+
+        // Strict unknown-key rejection flows through the TOML path too.
+        let err = StreamingAppBuilder::from_toml_str(
+            "[broker]\nreplicas = 3\n\n[[broker.topics]]\nname = \"t\"\npartitions = 1\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown broker key: replicas"), "{err}");
     }
 }

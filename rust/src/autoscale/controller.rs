@@ -24,6 +24,7 @@ use crate::broker::BrokerCluster;
 use crate::engine::JobStats;
 use crate::metrics::{ScalingAction, ScalingEvent, ScalingTimeline};
 use crate::pilot::{Pilot, PilotComputeService};
+use crate::util::{CircuitBreaker, CircuitBreakerConfig};
 
 use super::planner::{PlanStep, Planner, PlannerConfig};
 use super::policy::ScalingPolicy;
@@ -49,6 +50,10 @@ pub struct AutoscalerConfig {
     /// co-scheduling).  `max_step` and the framework kinds are derived
     /// from this config and the target pilots at spawn time.
     pub planner: PlannerConfig,
+    /// Circuit breaker guarding every pilot actuation (extend/stop): a
+    /// flapping framework trips the breaker Open and the loop keeps
+    /// sampling instead of hammering doomed calls every tick.
+    pub breaker: CircuitBreakerConfig,
 }
 
 impl AutoscalerConfig {
@@ -61,6 +66,7 @@ impl AutoscalerConfig {
             max_step: 1,
             window: Duration::from_secs(1),
             planner: PlannerConfig::default(),
+            breaker: CircuitBreakerConfig::default(),
         }
     }
 
@@ -86,6 +92,11 @@ impl AutoscalerConfig {
 
     pub fn with_planner(mut self, planner: PlannerConfig) -> Self {
         self.planner = planner;
+        self
+    }
+
+    pub fn with_breaker(mut self, breaker: CircuitBreakerConfig) -> Self {
+        self.breaker = breaker;
         self
     }
 }
@@ -165,6 +176,7 @@ impl Autoscaler {
             std::thread::Builder::new()
                 .name(format!("autoscaler-{}", config.topic))
                 .spawn(move || {
+                    let breaker = CircuitBreaker::new(config.breaker);
                     let mut loop_state = ControlLoop {
                         service,
                         target,
@@ -175,6 +187,7 @@ impl Autoscaler {
                         timeline,
                         extensions,
                         broker_extensions,
+                        breaker,
                     };
                     loop_state.run(probe, policy, stop)
                 })
@@ -238,6 +251,8 @@ struct ControlLoop {
     timeline: Arc<ScalingTimeline>,
     extensions: Arc<Mutex<Vec<Arc<Pilot>>>>,
     broker_extensions: Arc<Mutex<Vec<Arc<Pilot>>>>,
+    /// Guards every extend/stop against a flapping pilot framework.
+    breaker: CircuitBreaker,
 }
 
 impl ControlLoop {
@@ -269,6 +284,24 @@ impl ControlLoop {
                 continue; // topic gone (e.g. broker stopped mid-shutdown)
             };
             let policy_name = policy.name();
+            // Broker-node deaths handled by the cluster's failover path
+            // land on this loop's timeline with their measured recovery
+            // time, so experiments see failovers next to scale-ups on
+            // one axis (and the degraded-replication signal the planner
+            // acts on below has a visible cause).
+            for ev in self.cluster.take_failover_events() {
+                self.timeline.record(ScalingEvent {
+                    at_secs: t,
+                    action: ScalingAction::Failover,
+                    delta_nodes: ev.promoted + ev.unreplicated,
+                    total_nodes: self.cluster.broker_nodes().len(),
+                    lag: snapshot.lag,
+                    partitions: snapshot.partitions,
+                    policy: "failover".to_string(),
+                    reaction_secs: ev.recovery_secs,
+                    cost_secs: ev.recovery_secs,
+                });
+            }
             self.release_idle_broker_extensions(&snapshot, t, policy_name);
             let intent = policy.decide(&snapshot);
             let plan = self.planner.plan(intent, &snapshot);
@@ -399,7 +432,7 @@ impl ControlLoop {
             return 0;
         }
         let detected = Instant::now();
-        if let Ok(ext) = self.service.extend_pilot(broker, step) {
+        if let Ok(ext) = self.breaker.call(|| self.service.extend_pilot(broker, step)) {
             self.broker_extensions.lock().unwrap().push(ext);
             self.timeline.record(ScalingEvent {
                 at_secs: t,
@@ -446,7 +479,7 @@ impl ControlLoop {
         let detected = Instant::now();
         // extend_pilot blocks through queue + bootstrap, so the elapsed
         // time is the full detection→Running latency.
-        if let Ok(ext) = self.service.extend_pilot(&self.target, step) {
+        if let Ok(ext) = self.breaker.call(|| self.service.extend_pilot(&self.target, step)) {
             self.extensions.lock().unwrap().push(ext);
             self.timeline.record(ScalingEvent {
                 at_secs: t,
@@ -481,7 +514,7 @@ impl ControlLoop {
                 break;
             };
             let ext_nodes = ext.nodes().len();
-            match self.service.stop_pilot(&ext) {
+            match self.breaker.call(|| self.service.stop_pilot(&ext)) {
                 Ok(()) => removed += ext_nodes,
                 Err(_) => {
                     // Keep tracking the pilot (it still holds nodes);
@@ -548,7 +581,7 @@ impl ControlLoop {
                 break;
             };
             let ext_nodes = ext.nodes().len();
-            match self.service.stop_pilot(&ext) {
+            match self.breaker.call(|| self.service.stop_pilot(&ext)) {
                 Ok(()) => {
                     self.timeline.record(ScalingEvent {
                         at_secs: t,
@@ -699,6 +732,59 @@ mod tests {
 
         for p in scaler.stop() {
             service.stop_pilot(&p).unwrap();
+        }
+        service.stop_pilot(&spark).unwrap();
+        service.stop_pilot(&kafka).unwrap();
+    }
+
+    #[test]
+    fn failover_events_drain_onto_the_controller_timeline() {
+        use crate::broker::ReplicationConfig;
+
+        let service = Arc::new(PilotComputeService::new(Machine::unthrottled(5)));
+        let (kafka, cluster) = service
+            .start_kafka(crate::pilot::KafkaDescription::new(2))
+            .unwrap();
+        let (spark, _engine) = service
+            .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+            .unwrap();
+        cluster
+            .create_topic_replicated("ft", 2, ReplicationConfig::new(2))
+            .unwrap();
+
+        // Quiet policy: the loop only samples, drains failover events,
+        // and (via the planner's repair branch) would plan a broker
+        // replacement — which spawn() disables (no broker pilot).
+        let policy = ThresholdPolicy::new(1_000, 0).with_cooldown_secs(0.05);
+        let scaler = Autoscaler::spawn(
+            service.clone(),
+            spark.clone(),
+            cluster.clone(),
+            None,
+            Box::new(policy),
+            AutoscalerConfig::new("ft", "g").with_sample_interval(Duration::from_millis(20)),
+        );
+
+        let victim = cluster.broker_nodes()[1];
+        cluster.kill_broker(victim).unwrap();
+
+        let timeline = scaler.timeline();
+        assert!(
+            wait_until(|| timeline.count(ScalingAction::Failover) >= 1, 5.0),
+            "no Failover event within 5s"
+        );
+        let events = timeline.events();
+        let ev = events.iter().find(|e| e.action == ScalingAction::Failover).unwrap();
+        assert_eq!(ev.policy, "failover");
+        assert_eq!(ev.total_nodes, 1, "one broker left after the kill");
+        assert!(ev.cost_secs >= 0.0, "recovery time is the event's cost");
+        assert_eq!(ev.cost_secs, ev.reaction_secs);
+        // The queue drained: no duplicate events on later ticks.
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(scaler.timeline().count(ScalingAction::Failover), 1);
+
+        for p in scaler.stop() {
+            let _ = service.stop_pilot(&p);
         }
         service.stop_pilot(&spark).unwrap();
         service.stop_pilot(&kafka).unwrap();

@@ -246,7 +246,7 @@ impl Planner {
     /// Turn one policy intent into a costed plan for this snapshot.
     pub fn plan(&self, intent: ScalingIntent, s: &SignalSnapshot) -> ScalingPlan {
         match intent {
-            ScalingIntent::Hold => ScalingPlan::hold(),
+            ScalingIntent::Hold => self.plan_replication_repair(s),
             ScalingIntent::ScaleDown(n) => {
                 let n = n.min(s.nodes.saturating_sub(s.min_nodes));
                 if n == 0 {
@@ -262,6 +262,29 @@ impl Planner {
             ScalingIntent::Repartition { partitions, scale_up } => {
                 self.plan_growth(scale_up, Some(partitions), s)
             }
+        }
+    }
+
+    /// Degraded replication is a first-class scaling signal: a Hold
+    /// intent (lag is fine) still becomes a broker-replacement plan
+    /// while partitions run with fewer in-sync replicas than their
+    /// topic's configured factor — under `AckMode::Quorum` those
+    /// partitions reject produces until the tier heals, so waiting for
+    /// lag to show the damage is waiting too long.  One replacement
+    /// node per plan: `BrokerCluster::add_brokers` reassigns every
+    /// degraded replica set as soon as the node lands, and the next
+    /// probe re-plans if the tier lost more than one node.
+    fn plan_replication_repair(&self, s: &SignalSnapshot) -> ScalingPlan {
+        if s.degraded_partitions == 0 || self.config.max_broker_step == 0 {
+            return ScalingPlan::hold();
+        }
+        ScalingPlan {
+            steps: vec![PlanStep::ExtendBroker {
+                nodes: 1,
+                cost: self.extend_cost(self.config.broker_framework, 1),
+            }],
+            expected_drain_msgs: 0.0,
+            deferred: None,
         }
     }
 
@@ -376,8 +399,14 @@ impl Planner {
                 // No repartition in the intent, but a saturated broker
                 // tier still travels with the scale-up: new executors
                 // behind a saturated broker just move the bottleneck.
+                // Degraded replication rides along the same way — the
+                // replacement node heals the replica sets the moment
+                // `add_brokers` lands it.
                 let util = s.broker_nic_util.max(s.broker_disk_util);
-                if util >= self.config.broker_util_threshold && self.config.max_broker_step > 0 {
+                let degraded = s.degraded_partitions > 0;
+                if (util >= self.config.broker_util_threshold || degraded)
+                    && self.config.max_broker_step > 0
+                {
                     steps.push(PlanStep::ExtendBroker {
                         nodes: 1,
                         cost: self.extend_cost(self.config.broker_framework, 1),
@@ -416,6 +445,7 @@ mod tests {
             broker_nodes: 2,
             broker_nic_util: 0.0,
             broker_disk_util: 0.0,
+            degraded_partitions: 0,
         }
     }
 
@@ -595,6 +625,39 @@ mod tests {
         s.broker_nic_util = 0.5;
         let plan = p.plan(ScalingIntent::ScaleUp(2), &s);
         assert_eq!(plan.added_broker_nodes(), 0);
+    }
+
+    #[test]
+    fn degraded_replication_turns_hold_into_broker_replacement() {
+        let p = planner();
+        let mut s = snap(0, 4);
+        s.degraded_partitions = 3;
+        let plan = p.plan(ScalingIntent::Hold, &s);
+        assert_eq!(plan.added_broker_nodes(), 1, "one replacement node");
+        assert_eq!(plan.added_processing_nodes(), 0);
+        let PlanStep::ExtendBroker { cost, .. } = plan.steps[0] else {
+            panic!("expected broker step, got {:?}", plan.steps);
+        };
+        // Kafka: one wave of 1 node (8 s) + rebalance settle (15 s).
+        assert_eq!(cost.lead_secs, 23.0);
+        // With co-scheduling disabled the planner cannot buy brokers.
+        let p0 = Planner::new(PlannerConfig::default().with_max_broker_step(0));
+        assert!(p0.plan(ScalingIntent::Hold, &s).is_hold());
+        // A healthy tier holds a Hold.
+        s.degraded_partitions = 0;
+        assert!(p.plan(ScalingIntent::Hold, &s).is_hold());
+    }
+
+    #[test]
+    fn degraded_replication_rides_along_a_scale_up() {
+        let p = planner();
+        let mut s = snap(500, 2);
+        s.degraded_partitions = 2;
+        // Broker tier far from saturated — the replacement still rides.
+        let plan = p.plan(ScalingIntent::ScaleUp(2), &s);
+        assert_eq!(plan.added_broker_nodes(), 1);
+        assert!(matches!(plan.steps[0], PlanStep::ExtendBroker { .. }));
+        assert_eq!(plan.added_processing_nodes(), 2);
     }
 
     #[test]

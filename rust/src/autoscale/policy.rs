@@ -412,6 +412,7 @@ mod tests {
             broker_nodes: 1,
             broker_nic_util: 0.0,
             broker_disk_util: 0.0,
+            degraded_partitions: 0,
         }
     }
 

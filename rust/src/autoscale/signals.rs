@@ -65,6 +65,12 @@ pub struct SignalSnapshot {
     /// Peak per-node disk token-bucket utilization across the broker
     /// tier over the last sample interval (0..~1).
     pub broker_disk_util: f64,
+    /// Partitions of the watched topic whose alive replica count is
+    /// below the topic's configured replication factor — non-zero after
+    /// a broker-node death until a replacement heals the replica sets.
+    /// The planner treats this as a first-class signal and answers with
+    /// a broker replacement step even when lag alone says Hold.
+    pub degraded_partitions: usize,
 }
 
 impl SignalSnapshot {
@@ -193,6 +199,7 @@ impl SignalProbe {
     ) -> Result<SignalSnapshot> {
         let (end_sum, partition_backlog) = self.scan()?;
         let partitions = self.cluster.partition_count(&self.topic)?;
+        let degraded_partitions = self.cluster.degraded_partitions(&self.topic)?;
         let lag: u64 = partition_backlog.iter().sum();
 
         let dt = (t_secs - self.prev_t).max(1e-6);
@@ -237,6 +244,7 @@ impl SignalProbe {
             broker_nodes,
             broker_nic_util,
             broker_disk_util,
+            degraded_partitions,
         })
     }
 }
@@ -330,6 +338,22 @@ mod tests {
         assert_eq!(s.broker_nodes, 2);
         assert_eq!(s.broker_nic_util, 0.0);
         assert_eq!(s.broker_disk_util, 0.0);
+    }
+
+    #[test]
+    fn probe_surfaces_degraded_replication() {
+        use crate::broker::ReplicationConfig;
+        let cluster = BrokerCluster::new(Machine::unthrottled(3), vec![0, 1]);
+        cluster
+            .create_topic_replicated("t", 2, ReplicationConfig::new(2))
+            .unwrap();
+        let mut probe = SignalProbe::new(cluster.clone(), "t", "g", None, 1.0);
+        assert_eq!(probe.sample(1.0, 1, 1, 2).unwrap().degraded_partitions, 0);
+        cluster.kill_broker(1).unwrap();
+        assert_eq!(probe.sample(2.0, 1, 1, 2).unwrap().degraded_partitions, 2);
+        // A replacement broker heals the replica sets.
+        cluster.add_brokers(vec![2]);
+        assert_eq!(probe.sample(3.0, 1, 1, 2).unwrap().degraded_partitions, 0);
     }
 
     #[test]

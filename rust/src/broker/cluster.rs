@@ -24,10 +24,12 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use crate::cluster::{Machine, NodeId};
 use crate::error::{Error, Result};
+use crate::metrics::ScalingTimeline;
 use crate::util::ArcCell;
 
 use super::log::{LogConfig, PartitionLog, Record};
 use super::repartition::EpochTransition;
+use super::replication::{AckMode, FailoverEvent, ReplicaSet, ReplicationConfig};
 
 /// One partition: leader broker node + the log + fetch wakeups.
 pub struct Partition {
@@ -47,6 +49,17 @@ pub struct Partition {
     /// detected (and rejected as [`Error::StaleEpoch`]) instead of
     /// landing above the fence consumers drain to.
     pub(super) epoch: AtomicU64,
+    /// Replica set: broker node ids in priority order (leader first)
+    /// plus each follower's adopted log mirror — see
+    /// [`super::replication`].
+    pub(super) replicas: Mutex<ReplicaSet>,
+    /// Replication high watermark: fetches only see offsets below it,
+    /// so a record is never served before it is on every alive replica.
+    /// Advanced monotonically via `fetch_max` (racing producers can
+    /// publish their ends out of order).  Replication is synchronous
+    /// in-process, so after every produce this equals the log end —
+    /// unreplicated topics behave exactly as before.
+    pub(super) high_watermark: AtomicU64,
 }
 
 impl Partition {
@@ -58,11 +71,23 @@ impl Partition {
             wait_lock: Mutex::new(()),
             data_arrived: Condvar::new(),
             epoch: AtomicU64::new(epoch),
+            replicas: Mutex::new(ReplicaSet::default()),
+            high_watermark: AtomicU64::new(0),
         }
     }
 
     pub fn leader_index(&self) -> usize {
         self.leader.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn set_leader_index(&self, idx: usize) {
+        self.leader.store(idx, Ordering::Relaxed);
+    }
+
+    /// This partition's replica set: broker node ids in priority order
+    /// (leader first; failover promotes the first surviving entry).
+    pub fn replica_nodes(&self) -> Vec<NodeId> {
+        self.replicas.lock().unwrap().nodes.clone()
     }
 
     /// High watermark — a lock-free atomic read, so lag probes (consumer
@@ -77,7 +102,7 @@ impl Partition {
     /// a fetcher that re-checked the watermark under `wait_lock` and
     /// saw nothing is guaranteed to be inside `wait_timeout` before the
     /// notifying producer can acquire the lock.
-    fn notify_data(&self) {
+    pub(super) fn notify_data(&self) {
         drop(self.wait_lock.lock().unwrap());
         self.data_arrived.notify_all();
     }
@@ -100,6 +125,9 @@ pub struct Topic {
     pub(super) epoch: u64,
     /// One entry per epoch transition, ascending by epoch.
     pub(super) transitions: Vec<EpochTransition>,
+    /// Replication configuration (factor, ack mode, min in-sync) every
+    /// partition of this topic carries.
+    pub(super) replication: ReplicationConfig,
 }
 
 impl Topic {
@@ -120,6 +148,11 @@ impl Topic {
     /// a lock-free staleness probe clients use to cache handles.
     pub fn is_current(&self) -> bool {
         self.partitions[0].epoch.load(Ordering::Acquire) == self.epoch
+    }
+
+    /// Replication configuration this topic was created with.
+    pub fn replication(&self) -> ReplicationConfig {
+        self.replication
     }
 }
 
@@ -154,6 +187,12 @@ pub(super) struct Inner {
     pub(super) log_config: LogConfig,
     pub(super) stopped: AtomicBool,
     pub(super) epoch: Instant,
+    /// Timelines that record a `Failover` event per broker-node death
+    /// (see [`BrokerCluster::add_scaling_timeline`]).
+    pub(super) timelines: Mutex<Vec<Arc<ScalingTimeline>>>,
+    /// Queued failover notifications the autoscale control loop drains
+    /// ([`BrokerCluster::take_failover_events`]).
+    pub(super) failover_events: Mutex<Vec<FailoverEvent>>,
 }
 
 /// One broker node's cumulative I/O counters and bucket capacities
@@ -216,6 +255,8 @@ impl BrokerCluster {
                 log_config,
                 stopped: AtomicBool::new(false),
                 epoch: Instant::now(),
+                timelines: Mutex::new(Vec::new()),
+                failover_events: Mutex::new(Vec::new()),
             }),
         }
     }
@@ -277,22 +318,41 @@ impl BrokerCluster {
         Ok(())
     }
 
-    /// Create a topic with `partitions` partitions; leaders assigned
-    /// round-robin over broker nodes.  Errors if the topic exists.
+    /// Create an unreplicated topic (`factor` 1) with `partitions`
+    /// partitions; leaders assigned round-robin over broker nodes.
+    /// Errors if the topic exists.
     pub fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        self.create_topic_replicated(name, partitions, ReplicationConfig::default())
+    }
+
+    /// [`BrokerCluster::create_topic`] with a per-partition replica
+    /// set: partition `i` is led by broker `i % n` with followers on
+    /// the next `factor - 1` brokers of the ring, each adopting the
+    /// leader's shared-slab segments (see [`super::replication`]).
+    /// Rejects a factor of 0 or one exceeding the broker tier.
+    pub fn create_topic_replicated(
+        &self,
+        name: &str,
+        partitions: usize,
+        replication: ReplicationConfig,
+    ) -> Result<()> {
         self.check_running()?;
         if partitions == 0 {
             return Err(Error::Broker("topic needs >= 1 partition".into()));
         }
         let _control = self.inner.control.lock().unwrap();
-        let n_brokers = self.inner.broker_nodes.load().len();
+        let brokers = self.inner.broker_nodes.load();
+        replication.validate(brokers.len())?;
         let topics = self.inner.topics.load();
         if topics.contains_key(name) {
             return Err(Error::Broker(format!("topic {name} already exists")));
         }
-        let parts = (0..partitions)
-            .map(|i| Arc::new(Partition::new(i, i % n_brokers, 0, self.inner.log_config)))
+        let parts: Vec<Arc<Partition>> = (0..partitions)
+            .map(|i| {
+                Arc::new(Partition::new(i, i % brokers.len(), 0, self.inner.log_config))
+            })
             .collect();
+        Self::assign_replica_sets(&parts, replication.factor, &brokers);
         let mut next = topics.as_ref().clone();
         next.insert(
             name.to_string(),
@@ -302,6 +362,7 @@ impl BrokerCluster {
                 active: partitions,
                 epoch: 0,
                 transitions: Vec::new(),
+                replication,
             }),
         );
         self.inner.topics.store(Arc::new(next));
@@ -399,6 +460,20 @@ impl BrokerCluster {
         let leader = self.leader_of(t, partition)?;
         let bytes: usize = values.iter().map(|v| v.len()).sum();
 
+        // Quorum acks sacrifice availability for durability: while the
+        // alive replica set is below `min_insync`, reject the produce
+        // instead of acking a record a node death could lose.
+        let rep = t.replication;
+        if rep.ack_mode == AckMode::Quorum {
+            let in_sync = p.replicas.lock().unwrap().nodes.len();
+            if in_sync < rep.min_insync {
+                return Err(Error::Broker(format!(
+                    "{}/{partition}: not enough in-sync replicas ({in_sync} of min_insync {})",
+                    t.name, rep.min_insync
+                )));
+            }
+        }
+
         // Data-plane costs: sender NIC out, leader NIC in, leader disk.
         self.inner.machine.node(from_node).egress.acquire(bytes);
         self.inner.machine.node(leader).ingress.acquire(bytes);
@@ -424,6 +499,31 @@ impl BrokerCluster {
                 Ok(())
             },
         )?;
+        // Synchronous in-process replication: each follower adopts the
+        // leader's segment `Arc`s (zero payload copies) but pays the
+        // modeled inter-broker stream costs — leader egress, follower
+        // ingress, follower disk — so a replicated topic's bandwidth
+        // bill is `factor` times the unreplicated one, exactly as on
+        // real hardware.  Only then does the high watermark advance:
+        // an acked record is on every alive replica before any fetcher
+        // can see it.
+        {
+            let mut set = p.replicas.lock().unwrap();
+            if set.nodes.len() > 1 {
+                let followers: Vec<NodeId> = set.nodes[1..].to_vec();
+                for &f in &followers {
+                    self.inner.machine.node(leader).egress.acquire(bytes);
+                    self.inner.machine.node(f).ingress.acquire(bytes);
+                    self.inner.machine.node(f).disk.acquire(bytes);
+                }
+                let mirror = p.log.mirror();
+                for f in followers {
+                    set.mirrors.insert(f, mirror.clone());
+                }
+            }
+        }
+        p.high_watermark
+            .fetch_max(base + values.len() as u64, Ordering::AcqRel);
         p.notify_data();
         Ok(base)
     }
@@ -466,13 +566,21 @@ impl BrokerCluster {
                 Error::Broker(format!("{}/{partition}: no such partition", t.name))
             })?
             .clone();
-        let leader = self.leader_of(t, partition)?;
 
         let deadline = Instant::now() + timeout;
         let records = loop {
+            // Visibility is capped at the replication high watermark:
+            // a record is never served before it is on every alive
+            // replica.  The watermark is loaded *before* the segment
+            // read, so a concurrent produce can only hide records this
+            // pass (the loop re-reads), never expose unreplicated ones.
+            let hw = p.high_watermark.load(Ordering::Acquire);
             // Lock-free read against the published segment snapshot —
             // concurrent producers are never blocked by this.
-            let recs = p.log.read(offset, max_bytes)?;
+            let mut recs = p.log.read(offset, max_bytes)?;
+            if let Some(cut) = recs.iter().position(|r| r.offset >= hw) {
+                recs.truncate(cut);
+            }
             if !recs.is_empty() {
                 break recs;
             }
@@ -484,7 +592,7 @@ impl BrokerCluster {
             // Re-check under the wait lock: an append that landed between
             // the read above and this acquisition already published its
             // watermark, so we must not sleep through its notify.
-            if p.log.end_offset() > offset {
+            if p.high_watermark.load(Ordering::Acquire) > offset {
                 continue;
             }
             if self.inner.stopped.load(Ordering::Relaxed) {
@@ -500,6 +608,11 @@ impl BrokerCluster {
             }
         };
         if !records.is_empty() {
+            // Resolve the leader only now, *after* any blocking wait: a
+            // failover while this fetcher was parked means the bytes
+            // come from (and are billed to) the promoted leader, not
+            // the node that died under us.
+            let leader = self.leader_of(t, partition)?;
             let bytes: usize = records.iter().map(|r| r.value.len()).sum();
             self.inner.machine.node(leader).egress.acquire(bytes);
             self.inner.machine.node(to_node).ingress.acquire(bytes);
@@ -517,17 +630,21 @@ impl BrokerCluster {
     }
 
     /// Add broker nodes at runtime (pilot extend): leaders rebalance
-    /// round-robin over the enlarged broker set.
+    /// round-robin over the enlarged broker set, and every partition's
+    /// replica set is refilled — the path that heals degraded
+    /// replication after a node death.
     pub fn add_brokers(&self, nodes: Vec<NodeId>) {
         let _control = self.inner.control.lock().unwrap();
         let mut brokers = self.inner.broker_nodes.load().as_ref().clone();
         brokers.extend(nodes);
         let n = brokers.len();
-        self.inner.broker_nodes.store(Arc::new(brokers));
+        let brokers = Arc::new(brokers);
+        self.inner.broker_nodes.store(brokers.clone());
         for topic in self.inner.topics.load().values() {
             for (i, p) in topic.partitions.iter().enumerate() {
                 p.leader.store(i % n, Ordering::Relaxed);
             }
+            Self::assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
         }
     }
 
@@ -542,11 +659,13 @@ impl BrokerCluster {
         }
         brokers.retain(|b| !nodes.contains(b));
         let n = brokers.len();
-        self.inner.broker_nodes.store(Arc::new(brokers));
+        let brokers = Arc::new(brokers);
+        self.inner.broker_nodes.store(brokers.clone());
         for topic in self.inner.topics.load().values() {
             for (i, p) in topic.partitions.iter().enumerate() {
                 p.leader.store(i % n, Ordering::Relaxed);
             }
+            Self::assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
         }
         Ok(())
     }

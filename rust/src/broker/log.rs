@@ -618,6 +618,24 @@ impl PartitionLog {
         dropped
     }
 
+    /// Snapshot this log as a follower [`LogMirror`]: the replica
+    /// adopts the leader's segment `Arc`s, so in-process replication
+    /// copies no payload bytes — a mirror is a refcount bump per
+    /// segment plus two counters.  The end offset is read *before* the
+    /// segment snapshot, so every record the mirror claims is reachable
+    /// through the segments it holds (a roll between the two reads can
+    /// only add records past the claimed end, never lose any).
+    pub fn mirror(&self) -> LogMirror {
+        let end_offset = self.end_offset();
+        let total_bytes = self.total_bytes();
+        let view = self.view.load();
+        LogMirror {
+            segments: view.segments.clone(),
+            end_offset,
+            total_bytes,
+        }
+    }
+
     /// Read records starting at `offset`, up to `max_bytes` of payload
     /// (at least one record if available).  Returns an error if `offset`
     /// was already garbage-collected; an empty vec if `offset` is at or
@@ -667,6 +685,45 @@ impl PartitionLog {
             seg_idx += 1;
         }
         Ok(out)
+    }
+}
+
+/// A follower's zero-copy replica of a leader partition log: the
+/// leader's segment list adopted by `Arc` at replication time, plus the
+/// replicated watermark.  Holding a mirror keeps every replicated slab
+/// alive (the same liveness rule as [`SharedSlice`]), so a promoted
+/// follower serves the full replicated prefix even after the leader
+/// node is gone — without a single payload byte having been copied.
+#[derive(Clone)]
+pub struct LogMirror {
+    segments: Vec<Segment>,
+    end_offset: u64,
+    total_bytes: usize,
+}
+
+impl LogMirror {
+    /// Offset up to which this mirror has replicated (exclusive).
+    pub fn end_offset(&self) -> u64 {
+        self.end_offset
+    }
+
+    /// Payload bytes reachable through the adopted segments.
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+}
+
+impl std::fmt::Debug for LogMirror {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogMirror")
+            .field("end_offset", &self.end_offset)
+            .field("total_bytes", &self.total_bytes)
+            .field("segments", &self.segments.len())
+            .finish()
     }
 }
 
@@ -830,6 +887,41 @@ mod tests {
         assert_eq!(log.seal_epoch(2), 3);
         assert_eq!(log.epoch_watermark(1), Some(2));
         assert_eq!(log.epoch_watermark(2), Some(3));
+    }
+
+    #[test]
+    fn mirror_adopts_segments_without_copying() {
+        let log = log_with(64, None);
+        log.append_batch([[1u8; 32].as_slice(), [2u8; 32].as_slice()], 0);
+        let before = copytrack::payload_copies();
+        let mirror = log.mirror();
+        assert_eq!(mirror.end_offset(), 2);
+        assert_eq!(mirror.total_bytes(), 64);
+        assert_eq!(mirror.segment_count(), log.segment_count());
+        assert_eq!(
+            copytrack::payload_copies(),
+            before,
+            "mirroring must be Arc adoption, not a copy"
+        );
+        // The mirror is a snapshot: later appends move the log, not it.
+        log.append_batch([[3u8; 8].as_slice()], 0);
+        assert_eq!(mirror.end_offset(), 2);
+        assert_eq!(log.end_offset(), 3);
+    }
+
+    #[test]
+    fn mirror_keeps_replicated_segments_alive_past_retention() {
+        // A follower that replicated before retention evicted a segment
+        // still holds the bytes — the failover story's liveness rule.
+        let log = log_with(16, Some(32));
+        log.append_batch([[7u8; 12].as_slice()], 1);
+        let mirror = log.mirror();
+        for i in 0..10u8 {
+            log.append_batch([[i; 12].as_slice()], 2);
+        }
+        assert!(log.start_offset() > 0, "offset 0 must be evicted");
+        assert_eq!(mirror.end_offset(), 1, "mirror still claims its prefix");
+        assert!(mirror.segment_count() >= 1);
     }
 
     #[test]

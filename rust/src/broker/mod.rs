@@ -31,10 +31,12 @@ pub mod consumer;
 pub mod log;
 pub mod producer;
 pub mod repartition;
+pub mod replication;
 
 pub use cloud::{CloudBroker, CloudLatencyModel, CloudRecord};
 pub use cluster::{BrokerCluster, BrokerIoStat, Partition, Topic};
 pub use consumer::{Consumer, ConsumerConfig, PartitionRecord};
-pub use log::{copytrack, LogConfig, PartitionLog, Record, SharedSlice};
+pub use log::{copytrack, LogConfig, LogMirror, PartitionLog, Record, SharedSlice};
 pub use producer::{Partitioner, Producer, ProducerConfig};
 pub use repartition::{jump_hash, key_hash, key_partition, EpochTransition, ServePlan};
+pub use replication::{AckMode, FailoverEvent, FailoverReport, ReplicationConfig};

@@ -155,6 +155,7 @@ impl BrokerCluster {
         }
 
         let mut partitions = t.partitions.clone();
+        let first_new = partitions.len();
         while partitions.len() < new_active {
             let id = partitions.len();
             partitions.push(Arc::new(Partition::new(
@@ -163,6 +164,15 @@ impl BrokerCluster {
                 new_epoch,
                 self.inner.log_config,
             )));
+        }
+        // Fresh partitions inherit the topic's replication: followers on
+        // the next brokers of the ring, adopting the (empty) leader log.
+        if first_new < partitions.len() {
+            Self::assign_replica_sets(
+                &partitions[first_new..],
+                t.replication.factor,
+                &self.inner.broker_nodes.load(),
+            );
         }
         let mut transitions = t.transitions.clone();
         transitions.push(EpochTransition {
@@ -183,6 +193,7 @@ impl BrokerCluster {
                 active: new_active,
                 epoch: new_epoch,
                 transitions,
+                replication: t.replication,
             }),
         );
         self.inner.topics.store(Arc::new(next));

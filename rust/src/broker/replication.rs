@@ -1,0 +1,513 @@
+//! Per-partition replication and crash-tolerant failover.
+//!
+//! Every partition carries a replica set — a leader plus `factor - 1`
+//! followers — layered over the shared-slab segments of [`super::log`]:
+//! followers replicate by adopting the leader's segment `Arc`s
+//! ([`super::log::LogMirror`]), so in-process replication moves zero
+//! payload bytes while still paying the modeled leader-egress /
+//! follower-ingress / follower-disk costs a real inter-broker
+//! replication stream would.  Produces are *acked* under a configurable
+//! [`AckMode`]:
+//!
+//! * [`AckMode::Leader`] — acked once the leader appended (and, when
+//!   followers exist, synchronously mirrored).  Stays available while
+//!   the replica set is degraded, like Kafka `acks=1`.
+//! * [`AckMode::Quorum`] — additionally *rejects* produces while fewer
+//!   than `min_insync` replicas are alive (Kafka `acks=all` +
+//!   `min.insync.replicas`): availability is sacrificed so that no
+//!   acked record can ever be lost to a node death.
+//!
+//! [`BrokerCluster::kill_broker`] models a broker node crash: the node
+//! leaves the membership, every partition it led fails over —
+//! deterministically, to the first surviving follower in replica-set
+//! order — consumer-group offsets survive untouched (the group
+//! coordinator state is modeled as replicated), blocked fetchers wake
+//! against the new leader, and the recovery is recorded as a
+//! [`ScalingAction::Failover`] event on every attached
+//! [`ScalingTimeline`] plus a [`FailoverEvent`] the autoscale
+//! controller drains, so recovery time lands on the same timeline as
+//! every other scaling action (Luckow & Jha: startup/recovery time is a
+//! first-class performance axis).
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::NodeId;
+use crate::error::{Error, Result};
+use crate::metrics::{ScalingAction, ScalingEvent, ScalingTimeline};
+
+use super::cluster::{BrokerCluster, Partition};
+use super::log::LogMirror;
+
+/// When a produce is acknowledged (and what happens while degraded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AckMode {
+    /// Ack after the leader append (+ synchronous mirror adoption when
+    /// followers are alive).  Keeps accepting writes while degraded.
+    #[default]
+    Leader,
+    /// Ack only while at least `min_insync` replicas are alive; reject
+    /// produces otherwise.  No acked record can be lost to failover.
+    Quorum,
+}
+
+impl AckMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "leader" => Ok(AckMode::Leader),
+            "quorum" => Ok(AckMode::Quorum),
+            other => Err(Error::Config(format!(
+                "unknown ack_mode '{other}' (expected: leader, quorum)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for AckMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AckMode::Leader => write!(f, "leader"),
+            AckMode::Quorum => write!(f, "quorum"),
+        }
+    }
+}
+
+/// Per-topic replication configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicationConfig {
+    /// Replicas per partition (leader included).  1 = unreplicated.
+    pub factor: usize,
+    pub ack_mode: AckMode,
+    /// Minimum alive replicas a [`AckMode::Quorum`] produce requires.
+    pub min_insync: usize,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        ReplicationConfig { factor: 1, ack_mode: AckMode::Leader, min_insync: 1 }
+    }
+}
+
+impl ReplicationConfig {
+    pub fn new(factor: usize) -> Self {
+        ReplicationConfig { factor, ..Default::default() }
+    }
+
+    pub fn with_ack_mode(mut self, mode: AckMode) -> Self {
+        self.ack_mode = mode;
+        self
+    }
+
+    pub fn with_min_insync(mut self, min_insync: usize) -> Self {
+        self.min_insync = min_insync;
+        self
+    }
+
+    /// Validate against a broker-tier size (spec builders and topic
+    /// creation share this, so both reject the same configs).
+    pub fn validate(&self, broker_nodes: usize) -> Result<()> {
+        if self.factor == 0 {
+            return Err(Error::Config("replication factor must be >= 1".into()));
+        }
+        if self.factor > broker_nodes {
+            return Err(Error::Config(format!(
+                "replication factor {} exceeds the broker tier's {broker_nodes} node{}",
+                self.factor,
+                if broker_nodes == 1 { "" } else { "s" }
+            )));
+        }
+        if self.min_insync == 0 || self.min_insync > self.factor {
+            return Err(Error::Config(format!(
+                "min_insync {} must be in 1..=factor ({})",
+                self.min_insync, self.factor
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One partition's replica set: node ids in priority order (leader
+/// first; failover promotes the first surviving entry) plus each
+/// follower's adopted [`LogMirror`].
+#[derive(Debug, Default)]
+pub(super) struct ReplicaSet {
+    pub(super) nodes: Vec<NodeId>,
+    pub(super) mirrors: HashMap<NodeId, LogMirror>,
+}
+
+/// What one [`BrokerCluster::kill_broker`] did, for assertions and logs.
+#[derive(Debug, Clone)]
+pub struct FailoverReport {
+    pub killed: NodeId,
+    /// Partitions whose leadership moved to a surviving follower from
+    /// the replica set (planned, replicated failover).
+    pub promoted: usize,
+    /// Partitions the dead node led with no replica to promote
+    /// (factor 1): reassigned round-robin; their unconsumed tail above
+    /// the last committed offset had no other home and is the data-loss
+    /// exposure an unreplicated topic accepts.
+    pub unreplicated: usize,
+    /// Partitions (across all topics) inspected during the failover.
+    pub partitions: usize,
+    /// Wall-clock seconds the failover took (membership edit, leader
+    /// promotion, replica reassignment, fetcher wakeup).
+    pub recovery_secs: f64,
+}
+
+/// A queued failover notification the autoscale controller drains
+/// ([`BrokerCluster::take_failover_events`]) so node death enters the
+/// control loop as a first-class signal.
+#[derive(Debug, Clone)]
+pub struct FailoverEvent {
+    /// Seconds since the cluster's epoch.
+    pub at_secs: f64,
+    pub killed: NodeId,
+    pub promoted: usize,
+    pub unreplicated: usize,
+    pub recovery_secs: f64,
+}
+
+impl BrokerCluster {
+    /// Recompute every partition's replica set against `brokers`:
+    /// leader = the partition's current leader index, followers = the
+    /// next `factor - 1` brokers on the ring (capped at the tier size —
+    /// a tier smaller than the factor leaves partitions *degraded*,
+    /// visible through [`BrokerCluster::degraded_partitions`]).
+    /// Followers adopt the leader log's current segments.
+    pub(super) fn assign_replica_sets(
+        partitions: &[Arc<Partition>],
+        factor: usize,
+        brokers: &[NodeId],
+    ) {
+        let n = brokers.len().max(1);
+        for p in partitions {
+            let leader_idx = p.leader_index() % n;
+            let nodes: Vec<NodeId> =
+                (0..factor.min(n)).map(|k| brokers[(leader_idx + k) % n]).collect();
+            let mut set = p.replicas.lock().unwrap();
+            set.mirrors.retain(|node, _| nodes[1..].contains(node));
+            for &f in &nodes[1..] {
+                set.mirrors.insert(f, p.log.mirror());
+            }
+            set.nodes = nodes;
+        }
+    }
+
+    /// Partitions of `topic` whose alive replica count is below the
+    /// topic's configured factor — the degraded-replication signal the
+    /// autoscale probe samples and the planner answers with a broker
+    /// replacement step.
+    pub fn degraded_partitions(&self, topic: &str) -> Result<usize> {
+        let t = self.topic(topic)?;
+        Ok(t.partitions
+            .iter()
+            .filter(|p| p.replicas.lock().unwrap().nodes.len() < t.replication.factor)
+            .count())
+    }
+
+    /// The broker node coordinating `group`'s offsets — deterministic
+    /// over the alive membership, so it *moves* when its node dies.
+    /// The offset store itself is modeled as replicated coordinator
+    /// state (it lives with the cluster, not the node), which is
+    /// exactly the durability claim
+    /// `offsets_survive_coordinator_death` pins: killing the
+    /// coordinator changes this answer but not one committed offset.
+    pub fn group_coordinator(&self, group: &str) -> NodeId {
+        let brokers = self.inner.broker_nodes.load();
+        let h = super::repartition::key_hash(group.as_bytes());
+        brokers[(h % brokers.len() as u64) as usize]
+    }
+
+    /// Attach a timeline: every subsequent failover records a
+    /// [`ScalingAction::Failover`] event (with its recovery time as the
+    /// event cost) on it, alongside whatever the autoscaler records.
+    pub fn add_scaling_timeline(&self, timeline: Arc<ScalingTimeline>) {
+        self.inner.timelines.lock().unwrap().push(timeline);
+    }
+
+    /// Drain queued failover notifications (the autoscale control loop
+    /// calls this every tick).
+    pub fn take_failover_events(&self) -> Vec<FailoverEvent> {
+        std::mem::take(&mut *self.inner.failover_events.lock().unwrap())
+    }
+
+    /// Kill broker `node`: remove it from the membership and fail over
+    /// every partition it led — deterministically, to the first
+    /// surviving follower in replica-set order (factor-1 partitions
+    /// fall back to round-robin reassignment and are counted as
+    /// `unreplicated`).  Committed consumer-group offsets survive
+    /// untouched; blocked fetchers wake and re-resolve the new leader.
+    /// The last alive broker cannot be killed.
+    pub fn kill_broker(&self, node: NodeId) -> Result<FailoverReport> {
+        self.check_running()?;
+        let started = Instant::now();
+        let _control = self.inner.control.lock().unwrap();
+        let old_brokers = self.inner.broker_nodes.load();
+        if !old_brokers.contains(&node) {
+            return Err(Error::Broker(format!("broker node {node} is not in the cluster")));
+        }
+        let brokers: Vec<NodeId> =
+            old_brokers.iter().copied().filter(|b| *b != node).collect();
+        if brokers.is_empty() {
+            return Err(Error::Broker("cannot kill the last broker".into()));
+        }
+        let n_old = old_brokers.len();
+        let n = brokers.len();
+        self.inner.broker_nodes.store(Arc::new(brokers.clone()));
+
+        let mut promoted = 0usize;
+        let mut unreplicated = 0usize;
+        let mut partitions = 0usize;
+        let topics = self.inner.topics.load();
+        for topic in topics.values() {
+            for p in &topic.partitions {
+                partitions += 1;
+                let old_leader = old_brokers[p.leader_index() % n_old];
+                let new_leader = if old_leader != node {
+                    // Leadership survives; only its index moved with the
+                    // membership edit.
+                    old_leader
+                } else {
+                    // Deterministic promotion: first surviving follower
+                    // in replica-set order; factor-1 partitions have
+                    // none and fall back to round-robin placement.
+                    let survivor = {
+                        let set = p.replicas.lock().unwrap();
+                        set.nodes.iter().copied().find(|r| *r != node)
+                    };
+                    match survivor {
+                        Some(s) => {
+                            promoted += 1;
+                            s
+                        }
+                        None => {
+                            unreplicated += 1;
+                            brokers[p.id % n]
+                        }
+                    }
+                };
+                let idx = brokers
+                    .iter()
+                    .position(|b| *b == new_leader)
+                    .expect("new leader is an alive broker");
+                p.set_leader_index(idx);
+                // The promoted leader owns the full shared log, so
+                // everything replicated (and, in this in-process model,
+                // everything appended) stays readable: re-publish the
+                // visibility watermark at the log end.
+                p.high_watermark.fetch_max(p.log.end_offset(), Ordering::AcqRel);
+            }
+            // Refill follower slots from the survivors (a tier now
+            // smaller than the factor leaves partitions degraded).
+            Self::assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
+        }
+
+        // Wake every parked fetcher: the leader it resolved may be the
+        // dead node; the fetch loop re-resolves against the new
+        // membership on its next pass.
+        for topic in topics.values() {
+            for p in &topic.partitions {
+                p.notify_data();
+            }
+        }
+
+        let recovery_secs = started.elapsed().as_secs_f64();
+        let at_secs = self.elapsed_ns() as f64 / 1e9;
+        let event = ScalingEvent {
+            at_secs,
+            action: ScalingAction::Failover,
+            delta_nodes: 1,
+            total_nodes: n,
+            lag: 0,
+            partitions,
+            policy: "failover".to_string(),
+            reaction_secs: recovery_secs,
+            cost_secs: recovery_secs,
+        };
+        for timeline in self.inner.timelines.lock().unwrap().iter() {
+            timeline.record(event.clone());
+        }
+        self.inner.failover_events.lock().unwrap().push(FailoverEvent {
+            at_secs,
+            killed: node,
+            promoted,
+            unreplicated,
+            recovery_secs,
+        });
+        Ok(FailoverReport { killed: node, promoted, unreplicated, partitions, recovery_secs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Machine;
+    use std::time::Duration;
+
+    fn cluster(brokers: usize) -> BrokerCluster {
+        BrokerCluster::new(Machine::unthrottled(brokers + 2), (0..brokers).collect())
+    }
+
+    #[test]
+    fn ack_mode_parses_and_displays() {
+        assert_eq!(AckMode::parse("leader").unwrap(), AckMode::Leader);
+        assert_eq!(AckMode::parse("quorum").unwrap(), AckMode::Quorum);
+        assert!(AckMode::parse("all").is_err());
+        assert_eq!(AckMode::Quorum.to_string(), "quorum");
+    }
+
+    #[test]
+    fn replication_config_validates_bounds() {
+        assert!(ReplicationConfig::new(0).validate(4).is_err(), "factor 0");
+        assert!(ReplicationConfig::new(3).validate(2).is_err(), "factor > brokers");
+        assert!(ReplicationConfig::new(2).validate(2).is_ok());
+        assert!(
+            ReplicationConfig::new(2).with_min_insync(3).validate(4).is_err(),
+            "min_insync > factor"
+        );
+        assert!(ReplicationConfig::new(2).with_min_insync(0).validate(4).is_err());
+    }
+
+    #[test]
+    fn replicated_topic_assigns_follower_sets_round_robin() {
+        let c = cluster(3);
+        c.create_topic_replicated("t", 3, ReplicationConfig::new(2)).unwrap();
+        let t = c.topic("t").unwrap();
+        for (i, p) in t.partitions.iter().enumerate() {
+            let set = p.replicas.lock().unwrap();
+            assert_eq!(set.nodes.len(), 2);
+            assert_eq!(set.nodes[0], i % 3, "leader first");
+            assert_eq!(set.nodes[1], (i + 1) % 3, "next broker on the ring follows");
+        }
+        assert_eq!(c.degraded_partitions("t").unwrap(), 0);
+    }
+
+    #[test]
+    fn produce_mirrors_to_followers_and_charges_their_io() {
+        let c = cluster(2);
+        c.create_topic_replicated("t", 1, ReplicationConfig::new(2)).unwrap();
+        let io0 = c.broker_io();
+        c.produce("t", 0, 2, &[vec![0u8; 100]]).unwrap();
+        let io1 = c.broker_io();
+        // Leader (node 0): producer ingress + replication egress.
+        assert_eq!(io1[0].nic_in_bytes - io0[0].nic_in_bytes, 100);
+        assert_eq!(io1[0].nic_out_bytes - io0[0].nic_out_bytes, 100);
+        assert_eq!(io1[0].disk_bytes - io0[0].disk_bytes, 100);
+        // Follower (node 1): replication ingress + its own disk append.
+        assert_eq!(io1[1].nic_in_bytes - io0[1].nic_in_bytes, 100);
+        assert_eq!(io1[1].disk_bytes - io0[1].disk_bytes, 100);
+        // And the mirror tracks the leader's end offset, zero-copy.
+        let t = c.topic("t").unwrap();
+        let set = t.partitions[0].replicas.lock().unwrap();
+        assert_eq!(set.mirrors[&1].end_offset(), 1);
+    }
+
+    #[test]
+    fn kill_broker_promotes_first_surviving_follower() {
+        let c = cluster(3);
+        c.create_topic_replicated("t", 3, ReplicationConfig::new(2)).unwrap();
+        c.produce("t", 0, 3, &[b"a".to_vec(), b"b".to_vec()]).unwrap();
+        assert_eq!(c.leader_node("t", 0).unwrap(), 0);
+        let report = c.kill_broker(0).unwrap();
+        assert_eq!(report.killed, 0);
+        assert_eq!(report.promoted, 1, "partition 0's leadership moves");
+        assert_eq!(report.unreplicated, 0);
+        assert!(report.recovery_secs >= 0.0);
+        // Partition 0 promoted to its follower (node 1), deterministically.
+        assert_eq!(c.leader_node("t", 0).unwrap(), 1);
+        assert_eq!(c.broker_nodes(), vec![1, 2]);
+        // Every record is still readable through the shared slabs.
+        let recs = c.fetch("t", 0, 0, usize::MAX, 3, Duration::from_millis(10)).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].value, b"b");
+    }
+
+    #[test]
+    fn kill_broker_rejects_unknown_and_last_node() {
+        let c = cluster(1);
+        assert!(c.kill_broker(7).is_err(), "not a member");
+        assert!(c.kill_broker(0).is_err(), "last broker");
+        assert_eq!(c.broker_nodes(), vec![0]);
+    }
+
+    #[test]
+    fn quorum_rejects_produce_when_insync_below_minimum() {
+        let c = cluster(2);
+        c.create_topic_replicated(
+            "t",
+            1,
+            ReplicationConfig::new(2).with_ack_mode(AckMode::Quorum).with_min_insync(2),
+        )
+        .unwrap();
+        c.produce("t", 0, 2, &[vec![1]]).unwrap();
+        c.kill_broker(0).unwrap();
+        assert_eq!(c.degraded_partitions("t").unwrap(), 1);
+        // Quorum: degraded partition rejects produces...
+        let err = c.produce("t", 0, 2, &[vec![2]]).unwrap_err();
+        assert!(err.to_string().contains("in-sync"), "{err}");
+        // ...until a replacement broker restores the replica set.
+        c.add_brokers(vec![3]);
+        assert_eq!(c.degraded_partitions("t").unwrap(), 0);
+        c.produce("t", 0, 2, &[vec![2]]).unwrap();
+        assert_eq!(c.end_offset("t", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn leader_ack_keeps_accepting_while_degraded() {
+        let c = cluster(2);
+        c.create_topic_replicated("t", 1, ReplicationConfig::new(2)).unwrap();
+        c.kill_broker(1).unwrap();
+        assert_eq!(c.degraded_partitions("t").unwrap(), 1);
+        c.produce("t", 0, 2, &[vec![9]]).unwrap();
+        assert_eq!(c.end_offset("t", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn offsets_survive_coordinator_death() {
+        let c = cluster(3);
+        c.create_topic_replicated("t", 2, ReplicationConfig::new(2)).unwrap();
+        c.produce("t", 0, 3, &[vec![1], vec![2], vec![3]]).unwrap();
+        c.group_join("g", "t");
+        c.commit("g", "t", 0, 2);
+        let coordinator = c.group_coordinator("g");
+        c.kill_broker(coordinator).unwrap();
+        // The coordinator moved to a survivor; not one offset moved.
+        assert_ne!(c.group_coordinator("g"), coordinator);
+        assert_eq!(c.committed("g", "t", 0), 2);
+        assert_eq!(c.group_lag("g", "t").unwrap(), 1);
+    }
+
+    #[test]
+    fn failover_lands_on_attached_timelines_and_event_queue() {
+        let c = cluster(2);
+        c.create_topic_replicated("t", 2, ReplicationConfig::new(2)).unwrap();
+        let timeline = Arc::new(ScalingTimeline::new());
+        c.add_scaling_timeline(timeline.clone());
+        c.kill_broker(1).unwrap();
+        assert_eq!(timeline.count(ScalingAction::Failover), 1);
+        let ev = &timeline.events()[0];
+        assert_eq!(ev.total_nodes, 1);
+        assert_eq!(ev.partitions, 2);
+        assert_eq!(ev.policy, "failover");
+        assert!(ev.cost_secs >= 0.0, "recovery time is the event's cost");
+        let queued = c.take_failover_events();
+        assert_eq!(queued.len(), 1);
+        assert_eq!(queued[0].killed, 1);
+        assert_eq!(queued[0].promoted + queued[0].unreplicated, 1, "node 1 led partition 1");
+        assert!(c.take_failover_events().is_empty(), "drained");
+    }
+
+    #[test]
+    fn unreplicated_partitions_fall_back_to_round_robin() {
+        let c = cluster(2);
+        c.create_topic("t", 4).unwrap(); // factor 1
+        let report = c.kill_broker(1).unwrap();
+        assert_eq!(report.promoted, 0);
+        assert_eq!(report.unreplicated, 2, "node 1 led partitions 1 and 3");
+        for p in 0..4 {
+            assert_eq!(c.leader_node("t", p).unwrap(), 0);
+        }
+    }
+}

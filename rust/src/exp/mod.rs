@@ -237,6 +237,8 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
                 provision_delay_secs: 1.5 * window,
                 repartition_delay_secs: window,
                 max_partitions: 128,
+                replication_factor: 1,
+                node_death_window: None,
             };
             let mut policy = ThresholdPolicy::new(600, 60)
                 .with_sustain(1)

@@ -91,7 +91,8 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::app::{
         AppHandle, AppReport, AutoscaleSpec, BatchAdapter, CountingProcessor, DataSource,
-        SourceSpec, StageSpec, StreamProcessor, StreamingApp, StreamingAppBuilder,
+        ReplicationSpec, SourceSpec, StageSpec, StreamProcessor, StreamingApp,
+        StreamingAppBuilder,
     };
     pub use crate::autoscale::{
         Autoscaler, AutoscalerConfig, BinPackingPolicy, LagSlopePolicy, PartitionElastic,
@@ -99,7 +100,8 @@ pub mod prelude {
         SignalSnapshot, ThresholdPolicy,
     };
     pub use crate::broker::{
-        BrokerCluster, Consumer, ConsumerConfig, Producer, ProducerConfig, Record,
+        AckMode, BrokerCluster, Consumer, ConsumerConfig, FailoverReport, Producer,
+        ProducerConfig, Record, ReplicationConfig,
     };
     pub use crate::cluster::Machine;
     pub use crate::config::{CostPreset, ExperimentConfig, MachineConfig};

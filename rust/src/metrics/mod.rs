@@ -188,6 +188,11 @@ pub enum ScalingAction {
     /// The planner declined a scale-up whose modeled cost could not pay
     /// for itself within the drain horizon (cost-aware deferral).
     Defer,
+    /// A broker node died and its partitions failed over to surviving
+    /// replicas — `cost_secs` carries the measured recovery time, so
+    /// failures land on the same timeline (and cost axis) as planned
+    /// scaling actions.
+    Failover,
 }
 
 impl std::fmt::Display for ScalingAction {
@@ -199,6 +204,7 @@ impl std::fmt::Display for ScalingAction {
             ScalingAction::BrokerUp => write!(f, "broker-up"),
             ScalingAction::BrokerDown => write!(f, "broker-down"),
             ScalingAction::Defer => write!(f, "defer"),
+            ScalingAction::Failover => write!(f, "failover"),
         }
     }
 }

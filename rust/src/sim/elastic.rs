@@ -58,6 +58,16 @@ pub struct ElasticScenario {
     /// Ceiling on the partition count a `Repartition` decision can
     /// request.
     pub max_partitions: usize,
+    /// Modeled topic replication factor for fault injection (1 = no
+    /// replication; a node death exposes every partition).
+    pub replication_factor: usize,
+    /// Opt-in fault injection: window index at which one broker node
+    /// dies.  Partitions with a replica on the dead node fail over
+    /// (leaders move; no acked data is lost under replication) but run
+    /// *degraded* — fewer in-sync replicas than the factor — until a
+    /// replacement broker lands, which is exactly the window the
+    /// planner's replication-repair branch exists to close.
+    pub node_death_window: Option<usize>,
 }
 
 impl ElasticScenario {
@@ -85,6 +95,8 @@ impl ElasticScenario {
             provision_delay_secs: 1.5 * window_secs,
             repartition_delay_secs: window_secs,
             max_partitions: 128,
+            replication_factor: 1,
+            node_death_window: None,
         }
     }
 }
@@ -132,6 +144,11 @@ pub struct ElasticSimResult {
     pub peak_broker_nodes: usize,
     /// Scale-up intents the planner deferred on cost grounds.
     pub deferrals: usize,
+    /// Broker-node deaths injected by the scenario.
+    pub failovers: usize,
+    /// Windows during which replication ran degraded (a dead replica
+    /// not yet replaced).
+    pub degraded_windows: usize,
     /// Largest partition count reached.
     pub peak_partitions: usize,
     pub final_lag: f64,
@@ -200,6 +217,11 @@ impl ElasticSim {
         let mut broker_downs = 0;
         let mut peak_broker_nodes = broker_nodes;
         let mut deferrals = 0;
+        let mut failovers = 0;
+        let mut degraded_windows = 0;
+        // Partitions currently running with fewer in-sync replicas than
+        // the scenario's factor (nonzero only after a node death).
+        let mut degraded = 0usize;
         let mut peak_partitions = n_partitions;
         let mut behind_windows = 0;
         let mut node_secs = 0.0;
@@ -230,6 +252,33 @@ impl ElasticSim {
             });
             broker_nodes += broker_arrived;
             peak_broker_nodes = peak_broker_nodes.max(broker_nodes);
+            // A broker landing heals every degraded replica set (the
+            // real plane's `add_brokers` reassigns follower sets as the
+            // node joins).
+            if broker_arrived > 0 {
+                degraded = 0;
+            }
+            // Fault injection: one broker node dies this window.  The
+            // affected partitions fail over to surviving replicas;
+            // until a replacement lands they run with fewer in-sync
+            // replicas than the factor.
+            if sc.node_death_window == Some(w) && broker_nodes > 1 {
+                let before = broker_nodes;
+                broker_nodes -= 1;
+                failovers += 1;
+                degraded = if sc.replication_factor > 1 {
+                    // Each node hosts ~factor/before of the replica
+                    // slots; those partitions lost one replica.
+                    (n_partitions * sc.replication_factor).div_ceil(before).min(n_partitions)
+                } else {
+                    // Unreplicated: every partition is exposed until
+                    // the tier is rebuilt.
+                    n_partitions
+                };
+            }
+            if degraded > 0 {
+                degraded_windows += 1;
+            }
             // Mirror the controller's broker-release rule: once the
             // fleet is back at its floor with nothing in flight,
             // saturation-driven broker extensions are released — but
@@ -335,6 +384,10 @@ impl ElasticSim {
                 // partition budgets rather than live byte gauges.
                 broker_nic_util: 0.0,
                 broker_disk_util: 0.0,
+                // Like the node counts above, a replacement broker on
+                // its way counts as healing so the planner's repair
+                // branch doesn't buy another node every window.
+                degraded_partitions: if pending_broker.is_empty() { degraded } else { 0 },
             };
             prev_lag = lag;
 
@@ -456,6 +509,8 @@ impl ElasticSim {
             broker_downs,
             peak_broker_nodes,
             deferrals,
+            failovers,
+            degraded_windows,
             peak_partitions,
             final_lag: prev_lag,
             behind_windows,
@@ -497,6 +552,8 @@ mod tests {
             provision_delay_secs: 90.0,
             repartition_delay_secs: 60.0,
             max_partitions: 128,
+            replication_factor: 1,
+            node_death_window: None,
         }
     }
 
@@ -715,6 +772,66 @@ mod tests {
         // Broker growth is visible on the per-window rows.
         assert_eq!(res.rows[0].broker_nodes, sc.broker_nodes);
         assert!(res.rows.iter().any(|r| r.broker_nodes > sc.broker_nodes));
+    }
+
+    /// Fault injection meets the planner's replication-repair branch: a
+    /// broker node dies before the burst, the affected partitions run
+    /// degraded, and the very next Hold intent becomes a
+    /// broker-replacement plan whose landing heals the tier — windows
+    /// degraded is bounded by the replacement's extension lead, not the
+    /// run length.
+    #[test]
+    fn node_death_heals_via_planned_broker_replacement() {
+        use crate::autoscale::{PartitionElastic, Planner, PlannerConfig};
+
+        let sim = ElasticSim::new(
+            SimMachine {
+                executors_per_node: 2,
+                ..Default::default()
+            },
+            CostModel::calibrated_default(),
+        );
+        let mut sc = ElasticScenario::calibrated_burst(60.0);
+        sc.replication_factor = 2;
+        sc.node_death_window = Some(5); // quiet pre-burst window: intent is Hold
+        let planner = Planner::new(
+            PlannerConfig::default()
+                .with_max_step(8)
+                .with_drain_horizon_secs(6.0 * sc.window_secs)
+                .with_partitions_per_broker_node(sc.partitions_per_node)
+                .with_max_broker_step(2),
+        );
+        let mut policy = PartitionElastic::new(calibrated_threshold(), 2);
+        let res = sim.run_planned(&sc, &mut policy, &planner);
+
+        assert_eq!(res.failovers, 1);
+        assert!(res.degraded_windows >= 1, "the death never degraded the tier");
+        // Kafka replacement lead is 23 s on top of one 60 s window:
+        // healed within 2 windows, not the remaining 55.
+        assert!(
+            res.degraded_windows <= 3,
+            "replacement never landed: {} degraded windows",
+            res.degraded_windows
+        );
+        // Exactly one repair purchase (in-flight replacement counts as
+        // healing, so the planner does not re-buy every window) — any
+        // further broker growth comes from the burst's repartitions.
+        assert!(res.broker_ups >= 1);
+        // The burst is still tracked and drained afterwards.
+        assert!(res.final_lag < 2_000.0, "final lag {}", res.final_lag);
+        assert_eq!(res.rows.last().unwrap().nodes, sc.min_nodes);
+
+        // Without the planner (legacy intent path) nothing repairs the
+        // tier: replication stays degraded for the rest of the run.
+        let mut policy = PartitionElastic::new(calibrated_threshold(), 2);
+        let unplanned = sim.run(&sc, &mut policy);
+        assert_eq!(unplanned.failovers, 1);
+        assert!(
+            unplanned.degraded_windows > res.degraded_windows,
+            "unplanned {} !> planned {}",
+            unplanned.degraded_windows,
+            res.degraded_windows
+        );
     }
 
     #[test]

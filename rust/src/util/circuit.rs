@@ -1,0 +1,283 @@
+//! Circuit breaker + retry budget for pilot/broker actuation.
+//!
+//! The autoscale control loop actuates external frameworks (pilot
+//! extend/stop).  A flapping framework — one that fails every actuation
+//! attempt for a while — must not wedge the loop into retrying the same
+//! doomed call on every tick.  The classic answer is a three-state
+//! circuit breaker:
+//!
+//! * **Closed** — calls flow; each call gets a small retry budget.
+//!   `failure_threshold` *consecutive* exhausted calls trip the breaker.
+//! * **Open** — calls fast-fail without touching the framework until
+//!   `cooldown` has elapsed.
+//! * **HalfOpen** — after the cooldown, up to `half_open_probes` calls
+//!   are let through; one success re-closes the breaker, one failure
+//!   re-opens it (and restarts the cooldown).
+//!
+//! Interior mutability (a mutex around the small state machine) keeps
+//! the API `&self`, matching how the control loop shares itself across
+//! its tick body.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// Breaker states (see module docs for the transition rules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl std::fmt::Display for BreakerState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BreakerState::Closed => write!(f, "closed"),
+            BreakerState::Open => write!(f, "open"),
+            BreakerState::HalfOpen => write!(f, "half-open"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CircuitBreakerConfig {
+    /// Consecutive failed calls (retry budget exhausted) before the
+    /// breaker trips Open.
+    pub failure_threshold: usize,
+    /// How long an Open breaker fast-fails before probing again.
+    pub cooldown: Duration,
+    /// Probe calls admitted in HalfOpen before a failure re-opens.
+    pub half_open_probes: usize,
+    /// Attempts per [`CircuitBreaker::call`] (1 = no retry).
+    pub retry_budget: usize,
+}
+
+impl Default for CircuitBreakerConfig {
+    fn default() -> Self {
+        CircuitBreakerConfig {
+            failure_threshold: 3,
+            cooldown: Duration::from_secs(5),
+            half_open_probes: 1,
+            retry_budget: 2,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    /// Consecutive exhausted calls while Closed.
+    consecutive_failures: usize,
+    /// When the breaker tripped (valid while Open).
+    opened_at: Instant,
+    /// Probes admitted since entering HalfOpen.
+    probes: usize,
+}
+
+/// A Closed/Open/HalfOpen circuit breaker with a per-call retry budget.
+/// Cheap to share behind the control loop's `&self` methods; see the
+/// module docs for the state machine.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    config: CircuitBreakerConfig,
+    inner: Mutex<Inner>,
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        Self::new(CircuitBreakerConfig::default())
+    }
+}
+
+impl CircuitBreaker {
+    pub fn new(config: CircuitBreakerConfig) -> Self {
+        CircuitBreaker {
+            config,
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: Instant::now(),
+                probes: 0,
+            }),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+
+    /// Whether a call would currently be admitted (advances Open →
+    /// HalfOpen when the cooldown has elapsed).
+    pub fn is_callable(&self) -> bool {
+        self.admit().is_ok()
+    }
+
+    /// Admit or fast-fail, advancing Open → HalfOpen on cooldown expiry.
+    fn admit(&self) -> Result<()> {
+        let mut st = self.inner.lock().unwrap();
+        match st.state {
+            BreakerState::Closed => Ok(()),
+            BreakerState::Open => {
+                if st.opened_at.elapsed() >= self.config.cooldown {
+                    st.state = BreakerState::HalfOpen;
+                    st.probes = 0;
+                    Ok(())
+                } else {
+                    Err(Error::Pilot(format!(
+                        "circuit breaker open ({}s cooldown); actuation skipped",
+                        self.config.cooldown.as_secs_f64()
+                    )))
+                }
+            }
+            BreakerState::HalfOpen => {
+                if st.probes < self.config.half_open_probes {
+                    st.probes += 1;
+                    Ok(())
+                } else {
+                    Err(Error::Pilot(
+                        "circuit breaker half-open probe budget spent; actuation skipped".into(),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn on_success(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.state = BreakerState::Closed;
+        st.consecutive_failures = 0;
+    }
+
+    fn on_failure(&self) {
+        let mut st = self.inner.lock().unwrap();
+        match st.state {
+            BreakerState::Closed => {
+                st.consecutive_failures += 1;
+                if st.consecutive_failures >= self.config.failure_threshold {
+                    st.state = BreakerState::Open;
+                    st.opened_at = Instant::now();
+                }
+            }
+            // A failed half-open probe re-opens and restarts cooldown.
+            BreakerState::HalfOpen | BreakerState::Open => {
+                st.state = BreakerState::Open;
+                st.opened_at = Instant::now();
+            }
+        }
+    }
+
+    /// Run `f` through the breaker: fast-fail while Open, otherwise try
+    /// up to `retry_budget` times, returning the first success.  Every
+    /// exhausted budget counts one failure toward the trip threshold;
+    /// any success re-closes the breaker.
+    pub fn call<T>(&self, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        self.admit()?;
+        let mut last = None;
+        for _ in 0..self.config.retry_budget.max(1) {
+            match f() {
+                Ok(v) => {
+                    self.on_success();
+                    return Ok(v);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        self.on_failure();
+        Err(last.expect("retry budget >= 1 attempt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn config(cooldown_ms: u64) -> CircuitBreakerConfig {
+        CircuitBreakerConfig {
+            failure_threshold: 2,
+            cooldown: Duration::from_millis(cooldown_ms),
+            half_open_probes: 1,
+            retry_budget: 2,
+        }
+    }
+
+    fn fail() -> Result<()> {
+        Err(Error::Pilot("framework down".into()))
+    }
+
+    #[test]
+    fn success_passes_through_closed() {
+        let b = CircuitBreaker::new(config(50));
+        assert_eq!(b.call(|| Ok(7)).unwrap(), 7);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn retry_budget_retries_within_one_call() {
+        let b = CircuitBreaker::new(config(50));
+        let attempts = AtomicUsize::new(0);
+        let out = b.call(|| {
+            if attempts.fetch_add(1, Ordering::Relaxed) == 0 {
+                fail()
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(attempts.load(Ordering::Relaxed), 2, "retried once");
+        assert_eq!(b.state(), BreakerState::Closed, "a success never counts");
+    }
+
+    #[test]
+    fn consecutive_exhausted_calls_trip_open_and_fast_fail() {
+        let b = CircuitBreaker::new(config(10_000));
+        let attempts = AtomicUsize::new(0);
+        for _ in 0..2 {
+            let _ = b.call(|| {
+                attempts.fetch_add(1, Ordering::Relaxed);
+                fail()
+            });
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(attempts.load(Ordering::Relaxed), 4, "2 calls x 2 attempts");
+        // Open: the framework is not touched at all.
+        let err = b.call(|| {
+            attempts.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        });
+        assert!(err.unwrap_err().to_string().contains("circuit breaker open"));
+        assert_eq!(attempts.load(Ordering::Relaxed), 4);
+        assert!(!b.is_callable());
+    }
+
+    #[test]
+    fn half_open_probe_success_recloses() {
+        let b = CircuitBreaker::new(config(20));
+        for _ in 0..2 {
+            let _ = b.call(fail);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.is_callable(), "cooldown elapsed: half-open");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.call(|| Ok(())).unwrap();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // And the failure streak restarted from zero.
+        let _ = b.call(fail);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn half_open_probe_failure_reopens_with_fresh_cooldown() {
+        let b = CircuitBreaker::new(config(20));
+        for _ in 0..2 {
+            let _ = b.call(fail);
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        let _ = b.call(fail); // the probe fails
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.is_callable(), "cooldown restarted");
+    }
+}

@@ -4,11 +4,14 @@
 
 pub mod arcswap;
 pub mod bench;
+pub mod circuit;
 pub mod json;
 pub mod rng;
 pub mod schedule;
+pub mod toml;
 
 pub use arcswap::ArcCell;
+pub use circuit::{BreakerState, CircuitBreaker, CircuitBreakerConfig};
 pub use json::Json;
 pub use rng::Rng;
 pub use schedule::RateSchedule;

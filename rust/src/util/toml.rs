@@ -1,0 +1,539 @@
+//! Minimal TOML parser emitting [`Json`] values.
+//!
+//! The offline dependency set has no `toml` crate, and the app-spec
+//! loader already has a strict, well-tested validation pipeline over
+//! [`Json`] (unknown-key rejection, typed accessors).  So instead of a
+//! second document model, this parser maps a practical TOML subset onto
+//! the existing `Json` tree — `StreamingAppBuilder::from_toml` is then
+//! literally `toml::parse` followed by `from_json`, and both formats
+//! share every validation rule and error message.
+//!
+//! Supported subset (everything the spec format needs, and the common
+//! shapes around it):
+//!
+//! * `[table]` and `[[array-of-tables]]` headers, with dotted paths;
+//!   a header path descends into the *last* element of an
+//!   array-of-tables (so `[stages.autoscale]` after `[[stages]]`
+//!   attaches to the most recent stage, per the TOML spec);
+//! * dotted keys (`broker.nodes = 2`), basic (`"..."`, with escapes)
+//!   and literal (`'...'`) strings, integers (underscore separators),
+//!   floats, booleans, single- or multi-line arrays, inline tables;
+//! * `#` comments and blank lines.
+//!
+//! Not supported (rejected with a parse error): dates/times, multi-line
+//! strings, and re-opening a table already defined — none appear in
+//! spec files.
+
+use std::collections::btree_map::Entry;
+
+use crate::error::{Error, Result};
+
+use super::json::Json;
+
+/// Parse a TOML document into a [`Json::Obj`] tree.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let mut root = Json::obj();
+    // Path of the table subsequent key/value lines land in.
+    let mut table: Vec<String> = Vec::new();
+    loop {
+        p.skip_trivia();
+        match p.peek() {
+            None => break,
+            Some(b'[') => {
+                p.pos += 1;
+                let array = p.peek() == Some(b'[');
+                if array {
+                    p.pos += 1;
+                }
+                let path = p.key_path()?;
+                p.expect(b']')?;
+                if array {
+                    p.expect(b']')?;
+                }
+                p.end_of_line()?;
+                if array {
+                    push_array_table(&mut root, &path, &p)?;
+                } else {
+                    let node = navigate(&mut root, &path, &p)?;
+                    if !matches!(node, Json::Obj(_)) {
+                        return Err(p.err(&format!(
+                            "[{}] redefines a non-table value",
+                            path.join(".")
+                        )));
+                    }
+                }
+                table = path;
+            }
+            Some(_) => {
+                let path = p.key_path()?;
+                p.expect(b'=')?;
+                let value = p.value()?;
+                p.end_of_line()?;
+                let (key, parents) = path.split_last().expect("key path is never empty");
+                let mut full = table.clone();
+                full.extend(parents.iter().cloned());
+                let node = navigate(&mut root, &full, &p)?;
+                let Json::Obj(map) = node else {
+                    return Err(p.err(&format!(
+                        "key '{}' assigned inside a non-table value",
+                        path.join(".")
+                    )));
+                };
+                match map.entry(key.clone()) {
+                    Entry::Vacant(e) => {
+                        e.insert(value);
+                    }
+                    Entry::Occupied(_) => {
+                        return Err(p.err(&format!("duplicate key '{key}'")));
+                    }
+                }
+            }
+        }
+    }
+    Ok(root)
+}
+
+/// Walk (and create) tables along `path`, descending into the last
+/// element of any array-of-tables encountered.
+fn navigate<'j>(root: &'j mut Json, path: &[String], p: &Parser) -> Result<&'j mut Json> {
+    let mut cur = root;
+    for seg in path {
+        let Json::Obj(map) = cur else {
+            return Err(p.err(&format!("'{seg}' traverses a non-table value")));
+        };
+        let entry = map.entry(seg.clone()).or_insert_with(Json::obj);
+        cur = match entry {
+            Json::Arr(items) => items
+                .last_mut()
+                .ok_or_else(|| p.err(&format!("'{seg}' is an empty array of tables")))?,
+            other => other,
+        };
+    }
+    Ok(cur)
+}
+
+/// `[[path]]`: append a fresh table to the array at `path`.
+fn push_array_table(root: &mut Json, path: &[String], p: &Parser) -> Result<()> {
+    let (last, parents) = path.split_last().expect("header path is never empty");
+    let node = navigate(root, parents, p)?;
+    let Json::Obj(map) = node else {
+        return Err(p.err(&format!("[[{}]] inside a non-table value", path.join("."))));
+    };
+    let entry = map
+        .entry(last.clone())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    let Json::Arr(items) = entry else {
+        return Err(p.err(&format!("[[{last}]] redefines a non-array value")));
+    };
+    items.push(Json::obj());
+    Ok(())
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        let line = self.bytes[..self.pos.min(self.bytes.len())]
+            .iter()
+            .filter(|b| **b == b'\n')
+            .count()
+            + 1;
+        Error::Config(format!("toml parse error at line {line}: {msg}"))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    /// Skip spaces/tabs (not newlines) and a trailing comment.
+    fn skip_inline_ws(&mut self) {
+        while let Some(b) = self.peek() {
+            match b {
+                b' ' | b'\t' => self.pos += 1,
+                b'#' => {
+                    while !matches!(self.peek(), None | Some(b'\n')) {
+                        self.pos += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Skip whitespace, newlines and comments between top-level items.
+    fn skip_trivia(&mut self) {
+        loop {
+            self.skip_inline_ws();
+            if self.peek() == Some(b'\n') || self.peek() == Some(b'\r') {
+                self.pos += 1;
+            } else {
+                return;
+            }
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        self.skip_inline_ws();
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    /// The line must hold nothing further but whitespace/comment.
+    fn end_of_line(&mut self) -> Result<()> {
+        self.skip_inline_ws();
+        match self.peek() {
+            None => Ok(()),
+            Some(b'\n') | Some(b'\r') => Ok(()),
+            Some(b) => Err(self.err(&format!("unexpected '{}' after value", b as char))),
+        }
+    }
+
+    /// A dotted key path: bare or quoted segments separated by '.'.
+    fn key_path(&mut self) -> Result<Vec<String>> {
+        let mut path = Vec::new();
+        loop {
+            self.skip_inline_ws();
+            path.push(self.key_segment()?);
+            self.skip_inline_ws();
+            if self.peek() == Some(b'.') {
+                self.pos += 1;
+            } else {
+                return Ok(path);
+            }
+        }
+    }
+
+    fn key_segment(&mut self) -> Result<String> {
+        match self.peek() {
+            Some(b'"') => self.basic_string(),
+            Some(b'\'') => self.literal_string(),
+            Some(b) if b.is_ascii_alphanumeric() || b == b'_' || b == b'-' => {
+                let start = self.pos;
+                while matches!(self.peek(),
+                    Some(b) if b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+                {
+                    self.pos += 1;
+                }
+                Ok(std::str::from_utf8(&self.bytes[start..self.pos])
+                    .expect("bare key bytes are ascii")
+                    .to_string())
+            }
+            _ => Err(self.err("expected a key")),
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_inline_ws();
+        match self.peek() {
+            Some(b'"') => Ok(Json::Str(self.basic_string()?)),
+            Some(b'\'') => Ok(Json::Str(self.literal_string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.inline_table(),
+            Some(b't') | Some(b'f') => self.boolean(),
+            Some(b) if b == b'+' || b == b'-' || b.is_ascii_digit() => self.number(),
+            Some(b) => Err(self.err(&format!("unexpected '{}' in value", b as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn boolean(&mut self) -> Result<Json> {
+        for (word, value) in [("true", true), ("false", false)] {
+            if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+                self.pos += word.len();
+                return Ok(Json::Bool(value));
+            }
+        }
+        Err(self.err("expected 'true' or 'false'"))
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+            self.pos += 1;
+        }
+        let digits = |p: &mut Self| {
+            while matches!(p.peek(), Some(b) if b.is_ascii_digit() || b == b'_') {
+                p.pos += 1;
+            }
+        };
+        digits(self);
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            digits(self);
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            digits(self);
+        }
+        let text: String = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?
+            .chars()
+            .filter(|c| *c != '_')
+            .collect();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err(&format!("invalid number '{text}'")))
+    }
+
+    /// `[v, v, ...]` — newlines, comments and a trailing comma allowed.
+    fn array(&mut self) -> Result<Json> {
+        self.pos += 1; // consume '['
+        let mut out = Vec::new();
+        loop {
+            self.skip_trivia();
+            if self.peek() == Some(b']') {
+                self.pos += 1;
+                return Ok(Json::Arr(out));
+            }
+            out.push(self.value()?);
+            self.skip_trivia();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {}
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    /// `{ k = v, ... }` inline table.
+    fn inline_table(&mut self) -> Result<Json> {
+        self.pos += 1; // consume '{'
+        let mut obj = Json::obj();
+        self.skip_inline_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(obj);
+        }
+        loop {
+            let path = self.key_path()?;
+            self.expect(b'=')?;
+            let value = self.value()?;
+            let (key, parents) = path.split_last().expect("key path is never empty");
+            let node = navigate(&mut obj, parents, self)?;
+            let Json::Obj(map) = node else {
+                return Err(self.err("inline-table key traverses a non-table value"));
+            };
+            if map.insert(key.clone(), value).is_some() {
+                return Err(self.err(&format!("duplicate key '{key}'")));
+            }
+            self.skip_inline_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(obj),
+                _ => return Err(self.err("expected ',' or '}' in inline table")),
+            }
+        }
+    }
+
+    fn basic_string(&mut self) -> Result<String> {
+        self.pos += 1; // consume '"'
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None | Some(b'\n') => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.bump().ok_or_else(|| self.err("bad \\u escape"))?;
+                            code = code * 16
+                                + (d as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| self.err("bad hex digit"))?;
+                        }
+                        out.push(
+                            char::from_u32(code).ok_or_else(|| self.err("bad codepoint"))?,
+                        );
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                Some(b) if b < 0x80 => out.push(b as char),
+                Some(b) => {
+                    let len = if b >= 0xF0 {
+                        4
+                    } else if b >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let start = self.pos - 1;
+                    let end = start + len;
+                    if end > self.bytes.len() {
+                        return Err(self.err("truncated utf-8"));
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn literal_string(&mut self) -> Result<String> {
+        self.pos += 1; // consume '\''
+        let start = self.pos;
+        loop {
+            match self.bump() {
+                None | Some(b'\n') => return Err(self.err("unterminated string")),
+                Some(b'\'') => {
+                    return Ok(std::str::from_utf8(&self.bytes[start..self.pos - 1])
+                        .map_err(|_| self.err("invalid utf-8"))?
+                        .to_string());
+                }
+                Some(_) => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_tables_and_dotted_keys() {
+        let doc = parse(
+            r#"
+            # top-level scalars
+            machine_nodes = 6
+            ratio = 2.5
+            on = true
+            name = "points stream"
+            raw = 'C:\no\escapes'
+            big = 1_000_000
+
+            [broker]
+            nodes = 2
+            limits.max_mb = 64
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("machine_nodes").unwrap().as_usize(), Some(6));
+        assert_eq!(doc.get("ratio").unwrap().as_f64(), Some(2.5));
+        assert_eq!(doc.get("on").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("points stream"));
+        assert_eq!(doc.get("raw").unwrap().as_str(), Some(r"C:\no\escapes"));
+        assert_eq!(doc.get("big").unwrap().as_usize(), Some(1_000_000));
+        let broker = doc.get("broker").unwrap();
+        assert_eq!(broker.get("nodes").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            broker.get("limits").unwrap().get("max_mb").unwrap().as_usize(),
+            Some(64)
+        );
+    }
+
+    #[test]
+    fn array_of_tables_and_subtables_of_last_element() {
+        let doc = parse(
+            r#"
+            [[stages]]
+            name = "a"
+
+            [stages.autoscale]
+            policy = "threshold"
+
+            [[stages]]
+            name = "b"
+            "#,
+        )
+        .unwrap();
+        let stages = doc.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].get("name").unwrap().as_str(), Some("a"));
+        // The sub-table landed on the element open at that point.
+        assert_eq!(
+            stages[0].get("autoscale").unwrap().get("policy").unwrap().as_str(),
+            Some("threshold")
+        );
+        assert!(stages[1].get("autoscale").is_none());
+    }
+
+    #[test]
+    fn arrays_and_inline_tables() {
+        let doc = parse(
+            r#"
+            ports = [1, 2, 3,]
+            multi = [
+                "a",  # with a comment
+                "b",
+            ]
+            replication = { factor = 2, ack_mode = "quorum" }
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("ports").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(doc.get("multi").unwrap().as_arr().unwrap()[1].as_str(), Some("b"));
+        let rep = doc.get("replication").unwrap();
+        assert_eq!(rep.get("factor").unwrap().as_usize(), Some(2));
+        assert_eq!(rep.get("ack_mode").unwrap().as_str(), Some("quorum"));
+    }
+
+    #[test]
+    fn emits_the_same_tree_as_the_json_parser() {
+        let from_toml = parse(
+            r#"
+            machine_nodes = 4
+            [broker]
+            nodes = 1
+            [[broker.topics]]
+            name = "t"
+            partitions = 2
+            "#,
+        )
+        .unwrap();
+        let from_json = Json::parse(
+            r#"{"machine_nodes": 4,
+                "broker": {"nodes": 1, "topics": [{"name": "t", "partitions": 2}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(from_toml, from_json);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "x =",                      // missing value
+            "x = 1 y = 2",              // junk after value
+            "[table",                   // unterminated header
+            "x = \"unterminated",       // unterminated string
+            "x = 1\nx = 2",             // duplicate key
+            "[[a]]\n[a]\nx = nope",     // bare word value
+            "x = 1979-05-27",           // dates unsupported (parses as junk)
+        ] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+        let err = parse("a = 1\nb = ?").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "line numbers in errors: {err}");
+    }
+
+    #[test]
+    fn duplicate_keys_and_redefined_tables_error() {
+        assert!(parse("[a]\nx = 1\n[a.x]\ny = 2").is_err(), "scalar redefined as table");
+        assert!(parse("a = 1\n[[a]]").is_err(), "scalar redefined as array of tables");
+    }
+}

@@ -5,8 +5,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pilot_streaming::broker::{
-    copytrack, BrokerCluster, Consumer, ConsumerConfig, LogConfig, Partitioner, Producer,
-    ProducerConfig,
+    copytrack, AckMode, BrokerCluster, Consumer, ConsumerConfig, LogConfig, Partitioner,
+    Producer, ProducerConfig, ReplicationConfig,
 };
 use pilot_streaming::cluster::Machine;
 use pilot_streaming::config::MachineConfig;
@@ -276,7 +276,118 @@ fn fetch_path_is_zero_copy_end_to_end() {
 }
 
 #[test]
-fn cloud_brokers_deliver_after_model_latency() {
+fn leader_failover_mid_fetch_wakes_against_the_new_leader() {
+    // A fetch blocked on the high watermark survives the leader's node
+    // dying mid-wait: failover promotes the follower (which holds every
+    // acked record via synchronous mirror adoption), and the next
+    // produce — served by the new leader — wakes the fetcher.
+    let machine = Machine::unthrottled(4);
+    let cluster = BrokerCluster::new(machine, vec![0, 1]);
+    cluster
+        .create_topic_replicated("ft", 1, ReplicationConfig::new(2))
+        .unwrap();
+    cluster.produce("ft", 0, 2, &[vec![1u8]]).unwrap();
+
+    // Block past the current watermark (offset 1 doesn't exist yet).
+    let c = cluster.clone();
+    let fetcher = std::thread::spawn(move || {
+        c.fetch("ft", 0, 1, usize::MAX, 2, Duration::from_secs(10))
+    });
+    std::thread::sleep(Duration::from_millis(50));
+
+    // Partition 0's leader is the first broker (round-robin placement).
+    let victim = cluster.broker_nodes()[0];
+    let report = cluster.kill_broker(victim).unwrap();
+    assert_eq!(report.killed, victim);
+    assert_eq!(report.promoted, 1, "the follower takes over partition 0");
+    assert_eq!(report.unreplicated, 0, "factor 2 leaves no partition stranded");
+    assert_eq!(cluster.broker_nodes(), vec![1]);
+
+    // The record produced after the failover lands on the promoted
+    // leader and reaches the still-blocked fetcher.
+    cluster.produce("ft", 0, 2, &[vec![2u8]]).unwrap();
+    let recs = fetcher.join().unwrap().unwrap();
+    assert_eq!(recs.len(), 1);
+    assert_eq!(recs[0].offset, 1);
+    assert_eq!(recs[0].value, vec![2u8]);
+}
+
+#[test]
+fn consumer_offsets_survive_node_death_and_quorum_rejects_degraded_produces() {
+    // Group coordinator state is modeled as replicated: committed
+    // offsets read back bit-identically across a broker death, so a
+    // resuming consumer replays nothing.  Quorum acks meanwhile turn
+    // the degraded replica set into produce *rejections* rather than
+    // records a second death could lose.
+    let machine = Machine::unthrottled(4);
+    let cluster = BrokerCluster::new(machine, vec![0, 1]);
+    cluster
+        .create_topic_replicated(
+            "dur",
+            2,
+            ReplicationConfig::new(2).with_ack_mode(AckMode::Quorum).with_min_insync(2),
+        )
+        .unwrap();
+    cluster.group_join("g", "dur");
+    for i in 0..5u8 {
+        cluster.produce("dur", 0, 2, &[vec![i]]).unwrap();
+        cluster.produce("dur", 1, 2, &[vec![i]]).unwrap();
+    }
+    cluster.commit("g", "dur", 0, 3);
+    cluster.commit("g", "dur", 1, 5);
+    assert_eq!(cluster.group_lag("g", "dur").unwrap(), 2);
+
+    // Node 1 led partition 1 (round-robin placement); its follower on
+    // node 0 is promoted.
+    let report = cluster.kill_broker(cluster.broker_nodes()[1]).unwrap();
+    assert_eq!(report.promoted, 1);
+    assert_eq!(report.unreplicated, 0);
+
+    // Offsets and lag are exactly what they were before the death.
+    assert_eq!(cluster.committed("g", "dur", 0), 3);
+    assert_eq!(cluster.committed("g", "dur", 1), 5);
+    assert_eq!(cluster.group_lag("g", "dur").unwrap(), 2);
+
+    // One alive replica < min_insync 2: quorum produces are refused.
+    let err = cluster.produce("dur", 0, 2, &[vec![9u8]]).unwrap_err();
+    assert!(
+        err.to_string().contains("not enough in-sync replicas"),
+        "diagnosable quorum rejection: {err}"
+    );
+
+    // A consumer resuming in the group drains exactly the 2 uncommitted
+    // records — nothing lost to the death, nothing replayed.
+    let mut consumer = Consumer::join(
+        cluster.clone(),
+        "dur",
+        "g",
+        2,
+        ConsumerConfig {
+            fetch_timeout: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut got = Vec::new();
+    for _ in 0..32 {
+        for r in consumer.poll().unwrap() {
+            got.push((r.partition, r.record.offset, r.record.value.to_vec()));
+        }
+        if got.len() >= 2 {
+            break;
+        }
+    }
+    got.sort();
+    assert_eq!(got.len(), 2, "exactly the uncommitted tail: {got:?}");
+    assert_eq!(got[0], (0, 3, vec![3u8]));
+    assert_eq!(got[1], (0, 4, vec![4u8]));
+    assert_eq!(cluster.group_lag("g", "dur").unwrap(), 0);
+
+    // Healing the tier (the autoscaler's broker replacement landing)
+    // restores quorum produces.
+    cluster.add_brokers(vec![2]);
+    cluster.produce("dur", 0, 2, &[vec![9u8]]).unwrap();
+}
     use pilot_streaming::broker::cloud::{CloudBroker, CloudLatencyModel};
     let broker = CloudBroker::new(
         "test-fast",

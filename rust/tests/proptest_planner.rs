@@ -86,6 +86,9 @@ fn random_snapshot(rng: &mut Rng) -> SignalSnapshot {
         broker_nodes: 1 + rng.below(8),
         broker_nic_util: rng.range_f64(0.0, 1.2),
         broker_disk_util: rng.range_f64(0.0, 1.2),
+        // Occasionally the tier runs degraded (a dead replica awaiting
+        // replacement), so repair plans flow through the invariants too.
+        degraded_partitions: if rng.below(5) == 0 { rng.below(16) } else { 0 },
     }
 }
 

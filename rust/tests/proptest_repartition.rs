@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use pilot_streaming::broker::{
     BrokerCluster, Consumer, ConsumerConfig, PartitionRecord, Partitioner, Producer,
-    ProducerConfig,
+    ProducerConfig, ReplicationConfig,
 };
 use pilot_streaming::cluster::Machine;
 use pilot_streaming::util::Rng;
@@ -200,6 +200,139 @@ fn prop_repartition_exactly_once_ordered_nonnegative() {
         );
         assert_eq!(consumed_seq, produced_seq, "per-key completeness");
         // And the group's lag is fully drained.
+        assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
+    });
+}
+
+/// The chaos variant: same interleaving over a *replicated* topic on a
+/// three-node broker tier, with one broker killed at a random point —
+/// possibly between a repartition and the drains it fences.  Factor-2
+/// replication mirrors every append synchronously, so every acked
+/// produce must survive the failover: exactly-once (a), per-key order
+/// (b) and non-negative lag (c) all hold across the node death, and
+/// committed group offsets are never rolled back by it.
+#[test]
+fn prop_failover_mid_repartition_keeps_acked_records_exactly_once() {
+    check("failover-mid-repartition", 15, |rng| {
+        let n_keys = 2 + rng.below(6);
+        let machine = Machine::unthrottled(6);
+        let cluster = BrokerCluster::new(machine, vec![0, 1, 2]);
+        cluster
+            .create_topic_replicated("t", 1 + rng.below(4), ReplicationConfig::new(2))
+            .unwrap();
+
+        let batch_bytes = if rng.below(2) == 0 { 1 } else { 24 };
+        let mut producer = Producer::new(
+            cluster.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut consumers =
+            vec![Consumer::join(cluster.clone(), "t", "g", 2, consumer_config()).unwrap()];
+
+        let mut produced_seq = vec![0u32; n_keys];
+        let mut consumed_seq = vec![0u32; n_keys];
+        let mut produced_total = 0usize;
+        let mut consumed_total = 0usize;
+
+        // Exactly one node death per case, at a random step (killing a
+        // second of three nodes would leave factor 2 > fleet and is the
+        // spec-level rejection's job, not this property's).
+        let mut killed = false;
+        let steps = 10 + rng.below(25);
+        for step in 0..steps {
+            let kill_at = !killed && (rng.below(steps - step) == 0 || step == steps - 1);
+            if kill_at {
+                let nodes = cluster.broker_nodes();
+                let victim = nodes[rng.below(nodes.len())];
+                let report = cluster.kill_broker(victim).unwrap();
+                // Factor 2 over 3 nodes: every partition the victim led
+                // had a live follower to promote; none were stranded.
+                assert_eq!(report.unreplicated, 0, "factor-2 partition had no follower");
+                killed = true;
+                continue;
+            }
+            match rng.below(10) {
+                0..=4 => {
+                    for _ in 0..1 + rng.below(8) {
+                        let k = rng.below(n_keys);
+                        let seq = produced_seq[k];
+                        produced_seq[k] += 1;
+                        producer.send(Some(&[k as u8]), encode(k, seq)).unwrap();
+                        produced_total += 1;
+                    }
+                    if rng.below(2) == 0 {
+                        producer.flush().unwrap();
+                    }
+                }
+                // Resize mid-stream; fresh partitions inherit factor-2
+                // replica sets over the surviving membership.
+                5 | 6 => {
+                    cluster.repartition_topic("t", 1 + rng.below(8)).unwrap();
+                }
+                7 => {
+                    if consumers.len() > 1 && rng.below(2) == 0 {
+                        let idx = rng.below(consumers.len());
+                        consumers.remove(idx);
+                    } else if consumers.len() < 3 {
+                        consumers.push(
+                            Consumer::join(cluster.clone(), "t", "g", 3, consumer_config())
+                                .unwrap(),
+                        );
+                    }
+                }
+                _ => {
+                    for _ in 0..1 + rng.below(4) {
+                        let idx = rng.below(consumers.len());
+                        let recs = consumers[idx].poll().unwrap();
+                        observe(recs, &mut consumed_seq, &mut consumed_total);
+                    }
+                }
+            }
+            // Invariant (c) holds through the failover too: committed
+            // offsets survive the node death and never pass an end.
+            for (end, committed) in cluster.group_progress("g", "t").unwrap() {
+                assert!(
+                    committed <= end,
+                    "negative lag: committed {committed} > end {end}"
+                );
+            }
+        }
+        assert!(killed, "the schedule above always kills one broker");
+        assert_eq!(cluster.broker_nodes().len(), 2);
+
+        producer.flush().unwrap();
+        let mut idle_rounds = 0;
+        while consumed_total < produced_total && idle_rounds < 300 {
+            let mut progressed = false;
+            for c in consumers.iter_mut() {
+                let recs = c.poll().unwrap();
+                if !recs.is_empty() {
+                    progressed = true;
+                }
+                observe(recs, &mut consumed_seq, &mut consumed_total);
+            }
+            if progressed {
+                idle_rounds = 0;
+            } else {
+                idle_rounds += 1;
+            }
+        }
+
+        // Invariant (a) across the failover: every acked record is
+        // consumed exactly once — nothing the dead broker led was lost,
+        // nothing was replayed.
+        assert_eq!(
+            consumed_total, produced_total,
+            "exactly-once violated across failover: {consumed_total} of {produced_total}"
+        );
+        assert_eq!(consumed_seq, produced_seq, "per-key completeness across failover");
         assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
     });
 }
