@@ -47,7 +47,8 @@ fn snapshot(lag: u64, partitions: usize) -> SignalSnapshot {
         broker_nodes: 4,
         broker_nic_util: 0.9,
         broker_disk_util: 0.4,
-        degraded_partitions: 0,
+        under_replicated: 0,
+        below_min_insync: 0,
     }
 }
 
@@ -178,6 +179,8 @@ fn main() {
             max_partitions: 128,
             replication_factor: 1,
             node_death_window: None,
+            ack_mode: pilot_streaming::broker::AckMode::Leader,
+            replica_lag_records: 0.0,
         };
         let mut policy = ThresholdPolicy::new(600, 60)
             .with_sustain(1)

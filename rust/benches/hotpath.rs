@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 //! JSON (perf trajectory): `cargo bench --bench hotpath -- --json \
-//!   --baseline=BENCH_pr6.json > bench.json`
+//!   --baseline=BENCH_pr7.json > bench.json`
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -199,6 +199,63 @@ fn main() {
         failover_cluster.add_brokers(vec![victim]);
         victim ^= 1;
         std::hint::black_box(report);
+    });
+
+    // --- Follower fetch: KIP-392-style read locality -----------------------
+    // Every fetch targets the node hosting the partition's *follower*:
+    // with `follower_fetch` on, the read is served by the co-located
+    // in-sync mirror (zero-copy through the shared slabs) instead of
+    // crossing to the leader.  This is the consumer read path of a
+    // rack-aware deployment, so it is gated in CI like failover.
+    let machine = Machine::unthrottled(3);
+    let ff_cluster = BrokerCluster::new(machine, vec![0, 1]);
+    ff_cluster
+        .create_topic_replicated("ff", 8, ReplicationConfig::new(2).with_follower_fetch(true))
+        .unwrap();
+    let ff_batch = vec![vec![0u8; 1024]; 16];
+    for p in 0..8 {
+        ff_cluster.produce("ff", p, 2, &ff_batch).unwrap();
+    }
+    let mut ff_part = 0usize;
+    bench.run("broker/follower-fetch-8part", 2000, || {
+        // Partition p is led by broker p % 2; its follower lives on the
+        // other broker — fetch from there.
+        let follower = (ff_part + 1) % 2;
+        let recs = ff_cluster
+            .fetch(
+                "ff",
+                ff_part,
+                0,
+                usize::MAX,
+                follower,
+                std::time::Duration::from_millis(50),
+            )
+            .unwrap();
+        assert_eq!(recs.len(), 16);
+        ff_part = (ff_part + 1) % 8;
+        std::hint::black_box(recs);
+    });
+
+    // --- ISR shrink/expand cycle -------------------------------------------
+    // The control-plane cost of the lag model: a slow follower (held
+    // lag past `replica_lag_max`) is ejected by the produce-path sync
+    // of every partition it follows, then a cleared injection plus one
+    // heartbeat re-admits it everywhere.  One iteration is a full
+    // shrink + expand cycle across 8 factor-2 partitions.
+    let machine = Machine::unthrottled(3);
+    let isr_cluster = BrokerCluster::new(machine, vec![0, 1]);
+    isr_cluster
+        .create_topic_replicated("isr", 8, ReplicationConfig::new(2).with_replica_lag_max(2))
+        .unwrap();
+    bench.run("broker/isr-shrink-expand-8part", 400, || {
+        isr_cluster.inject_follower_lag("isr", 0, 8).unwrap();
+        isr_cluster.inject_follower_lag("isr", 1, 8).unwrap();
+        for p in 0..8 {
+            isr_cluster.produce("isr", p, 2, &[vec![0u8; 1024]]).unwrap();
+        }
+        isr_cluster.inject_follower_lag("isr", 0, 0).unwrap();
+        isr_cluster.inject_follower_lag("isr", 1, 0).unwrap();
+        isr_cluster.replication_heartbeat("isr").unwrap();
     });
 
     // --- L1/L2 artifact execution ------------------------------------------

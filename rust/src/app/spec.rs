@@ -564,7 +564,8 @@ impl StreamingAppBuilder {
     /// `work_ms` per-message cost) or `kmeans`/`gridrec`/`mlem` (need
     /// AOT artifacts).  The broker block takes an optional
     /// `replication` object (`factor` required, `ack_mode`
-    /// leader|quorum, `min_insync`); each stage takes an optional
+    /// leader|quorum, `min_insync`, `replica_lag_max`,
+    /// `follower_fetch`); each stage takes an optional
     /// `autoscale` block (`policy` threshold|bin-packing with its
     /// knobs, `target` stage|broker, `max_extension_nodes`, `max_step`,
     /// `sample_interval_ms`, `coschedule_broker`).
@@ -743,16 +744,27 @@ fn source_from_json(j: &Json) -> Result<SourceSpec> {
 
 /// Parse a `broker.replication` block: `factor` is required (an
 /// implicit factor is exactly the kind of silent resilience downgrade
-/// spec files exist to prevent); `ack_mode` and `min_insync` default
-/// like [`ReplicationSpec::new`].
+/// spec files exist to prevent); `ack_mode`, `min_insync`,
+/// `replica_lag_max` and `follower_fetch` default like
+/// [`ReplicationSpec::new`].
 fn replication_from_json(j: &Json) -> Result<ReplicationSpec> {
-    check_keys(j, "broker.replication", &["factor", "ack_mode", "min_insync"])?;
+    check_keys(
+        j,
+        "broker.replication",
+        &["factor", "ack_mode", "min_insync", "replica_lag_max", "follower_fetch"],
+    )?;
     let mut spec = ReplicationSpec::new(req_usize(j, "factor")?);
     if let Some(mode) = j.get("ack_mode").and_then(Json::as_str) {
         spec = spec.with_ack_mode(AckMode::parse(mode)?);
     }
     if let Some(n) = j.get("min_insync").and_then(Json::as_usize) {
         spec = spec.with_min_insync(n);
+    }
+    if let Some(n) = j.get("replica_lag_max").and_then(Json::as_u64) {
+        spec = spec.with_replica_lag_max(n);
+    }
+    if let Some(b) = j.get("follower_fetch").and_then(Json::as_bool) {
+        spec = spec.with_follower_fetch(b);
     }
     Ok(spec)
 }
@@ -1130,7 +1142,13 @@ mod tests {
         // Builder surface: .replication composes with .broker in either
         // order (applied at build time).
         let app = StreamingApp::builder()
-            .replication(ReplicationSpec::new(2).with_ack_mode(AckMode::Quorum).with_min_insync(2))
+            .replication(
+                ReplicationSpec::new(2)
+                    .with_ack_mode(AckMode::Quorum)
+                    .with_min_insync(2)
+                    .with_replica_lag_max(500)
+                    .with_follower_fetch(true),
+            )
             .broker(KafkaDescription::new(3), &[("t", 4)])
             .stage(counter_stage("c", "t"))
             .build()
@@ -1138,6 +1156,8 @@ mod tests {
         assert_eq!(app.broker.replication.factor, 2);
         assert_eq!(app.broker.replication.ack_mode, AckMode::Quorum);
         assert_eq!(app.broker.replication.min_insync, 2);
+        assert_eq!(app.broker.replication.replica_lag_max, 500);
+        assert!(app.broker.replication.follower_fetch);
 
         // Factor 0 and factor > broker nodes are rejected pre-launch.
         let err = StreamingApp::builder()
@@ -1160,7 +1180,8 @@ mod tests {
             r#"{ "broker": { "nodes": 3,
                              "topics": [ { "name": "t", "partitions": 4 } ],
                              "replication": { "factor": 2, "ack_mode": "quorum",
-                                              "min_insync": 2 } },
+                                              "min_insync": 2, "replica_lag_max": 500,
+                                              "follower_fetch": true } },
                  "stages": [ { "name": "s", "topic": "t", "processor": "counter" } ] }"#,
         )
         .unwrap()
@@ -1168,6 +1189,8 @@ mod tests {
         .unwrap();
         assert_eq!(app.broker.replication.factor, 2);
         assert_eq!(app.broker.replication.ack_mode, AckMode::Quorum);
+        assert_eq!(app.broker.replication.replica_lag_max, 500);
+        assert!(app.broker.replication.follower_fetch);
         let err = StreamingAppBuilder::from_json_str(
             r#"{ "broker": { "topics": [ { "name": "t", "partitions": 1 } ],
                              "replication": { "factor": 1, "ack_mode": "always" } } }"#,
@@ -1240,6 +1263,8 @@ mod tests {
             factor = 2
             ack_mode = "quorum"
             min_insync = 2
+            replica_lag_max = 500
+            follower_fetch = true
 
             [[sources]]
             name = "gen"
@@ -1263,6 +1288,8 @@ mod tests {
         assert_eq!(app.broker.topics[0].name, "points");
         assert_eq!(app.broker.replication.factor, 2);
         assert_eq!(app.broker.replication.ack_mode, AckMode::Quorum);
+        assert_eq!(app.broker.replication.replica_lag_max, 500);
+        assert!(app.broker.replication.follower_fetch);
         assert_eq!(app.sources[0].total_messages, Some(25));
         assert_eq!(app.stages[0].window, Duration::from_millis(50));
         assert_eq!(app.autoscalers.len(), 1);

@@ -300,6 +300,7 @@ impl ControlLoop {
                     policy: "failover".to_string(),
                     reaction_secs: ev.recovery_secs,
                     cost_secs: ev.recovery_secs,
+                    lost_records: ev.lost_records,
                 });
             }
             self.release_idle_broker_extensions(&snapshot, t, policy_name);
@@ -318,6 +319,7 @@ impl ControlLoop {
                     policy: format!("{policy_name}/{reason:?}"),
                     reaction_secs: 0.0,
                     cost_secs: 0.0,
+                    lost_records: 0,
                 });
                 continue;
             }
@@ -391,6 +393,7 @@ impl ControlLoop {
                             policy: policy_name.to_string(),
                             reaction_secs: 0.0,
                             cost_secs: cost.lead_secs,
+                            lost_records: 0,
                         });
                     }
                     PlanStep::ExtendProcessing { nodes: up, cost } => {
@@ -444,6 +447,7 @@ impl ControlLoop {
                 policy: policy_name.to_string(),
                 reaction_secs: detected.elapsed().as_secs_f64(),
                 cost_secs,
+                lost_records: 0,
             });
             return step;
         }
@@ -491,6 +495,7 @@ impl ControlLoop {
                 policy: policy_name.to_string(),
                 reaction_secs: detected.elapsed().as_secs_f64(),
                 cost_secs,
+                lost_records: 0,
             });
         }
     }
@@ -535,6 +540,7 @@ impl ControlLoop {
                 policy: policy_name.to_string(),
                 reaction_secs: 0.0,
                 cost_secs: 0.0,
+                lost_records: 0,
             });
         }
     }
@@ -593,6 +599,7 @@ impl ControlLoop {
                         policy: policy_name.to_string(),
                         reaction_secs: 0.0,
                         cost_secs: 0.0,
+                        lost_records: 0,
                     });
                 }
                 Err(_) => {

@@ -265,17 +265,20 @@ impl Planner {
         }
     }
 
-    /// Degraded replication is a first-class scaling signal: a Hold
-    /// intent (lag is fine) still becomes a broker-replacement plan
-    /// while partitions run with fewer in-sync replicas than their
-    /// topic's configured factor — under `AckMode::Quorum` those
-    /// partitions reject produces until the tier heals, so waiting for
-    /// lag to show the damage is waiting too long.  One replacement
-    /// node per plan: `BrokerCluster::add_brokers` reassigns every
-    /// degraded replica set as soon as the node lands, and the next
-    /// probe re-plans if the tier lost more than one node.
+    /// Quorum-degraded replication is a first-class scaling signal: a
+    /// Hold intent (lag is fine) still becomes a broker-replacement
+    /// plan while partitions run with an ISR below their topic's
+    /// `min_insync` — those partitions reject `AckMode::Quorum`
+    /// produces until the tier heals, so waiting for lag to show the
+    /// damage is waiting too long.  Mere under-replication (replicas
+    /// below factor but quorum still healthy) deliberately does *not*
+    /// trigger repair: durability headroom is reduced, availability is
+    /// not.  One replacement node per plan:
+    /// `BrokerCluster::add_brokers` reassigns every degraded replica
+    /// set as soon as the node lands, and the next probe re-plans if
+    /// the tier lost more than one node.
     fn plan_replication_repair(&self, s: &SignalSnapshot) -> ScalingPlan {
-        if s.degraded_partitions == 0 || self.config.max_broker_step == 0 {
+        if s.below_min_insync == 0 || self.config.max_broker_step == 0 {
             return ScalingPlan::hold();
         }
         ScalingPlan {
@@ -399,11 +402,11 @@ impl Planner {
                 // No repartition in the intent, but a saturated broker
                 // tier still travels with the scale-up: new executors
                 // behind a saturated broker just move the bottleneck.
-                // Degraded replication rides along the same way — the
-                // replacement node heals the replica sets the moment
-                // `add_brokers` lands it.
+                // Quorum-degraded replication rides along the same way
+                // — the replacement node heals the replica sets the
+                // moment `add_brokers` lands it.
                 let util = s.broker_nic_util.max(s.broker_disk_util);
-                let degraded = s.degraded_partitions > 0;
+                let degraded = s.below_min_insync > 0;
                 if (util >= self.config.broker_util_threshold || degraded)
                     && self.config.max_broker_step > 0
                 {
@@ -445,7 +448,8 @@ mod tests {
             broker_nodes: 2,
             broker_nic_util: 0.0,
             broker_disk_util: 0.0,
-            degraded_partitions: 0,
+            under_replicated: 0,
+            below_min_insync: 0,
         }
     }
 
@@ -631,7 +635,8 @@ mod tests {
     fn degraded_replication_turns_hold_into_broker_replacement() {
         let p = planner();
         let mut s = snap(0, 4);
-        s.degraded_partitions = 3;
+        s.under_replicated = 3;
+        s.below_min_insync = 3;
         let plan = p.plan(ScalingIntent::Hold, &s);
         assert_eq!(plan.added_broker_nodes(), 1, "one replacement node");
         assert_eq!(plan.added_processing_nodes(), 0);
@@ -644,15 +649,35 @@ mod tests {
         let p0 = Planner::new(PlannerConfig::default().with_max_broker_step(0));
         assert!(p0.plan(ScalingIntent::Hold, &s).is_hold());
         // A healthy tier holds a Hold.
-        s.degraded_partitions = 0;
+        s.under_replicated = 0;
+        s.below_min_insync = 0;
         assert!(p.plan(ScalingIntent::Hold, &s).is_hold());
+    }
+
+    #[test]
+    fn under_replicated_but_quorum_healthy_does_not_repair() {
+        // The pre-split signal conflated "replicas < factor" with
+        // "quorum degraded": a factor-3/min_insync-2 topic with one
+        // dead follower triggered broker repair even though quorum was
+        // healthy.  Only `below_min_insync` may buy a node on Hold.
+        let p = planner();
+        let mut s = snap(0, 4);
+        s.under_replicated = 3;
+        s.below_min_insync = 0;
+        assert!(p.plan(ScalingIntent::Hold, &s).is_hold());
+        // And it does not ride along a scale-up either.
+        let mut s = snap(500, 2);
+        s.under_replicated = 2;
+        let plan = p.plan(ScalingIntent::ScaleUp(2), &s);
+        assert_eq!(plan.added_broker_nodes(), 0);
     }
 
     #[test]
     fn degraded_replication_rides_along_a_scale_up() {
         let p = planner();
         let mut s = snap(500, 2);
-        s.degraded_partitions = 2;
+        s.under_replicated = 2;
+        s.below_min_insync = 2;
         // Broker tier far from saturated — the replacement still rides.
         let plan = p.plan(ScalingIntent::ScaleUp(2), &s);
         assert_eq!(plan.added_broker_nodes(), 1);

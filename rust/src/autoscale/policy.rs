@@ -412,7 +412,8 @@ mod tests {
             broker_nodes: 1,
             broker_nic_util: 0.0,
             broker_disk_util: 0.0,
-            degraded_partitions: 0,
+            under_replicated: 0,
+            below_min_insync: 0,
         }
     }
 

@@ -68,9 +68,16 @@ pub struct SignalSnapshot {
     /// Partitions of the watched topic whose alive replica count is
     /// below the topic's configured replication factor — non-zero after
     /// a broker-node death until a replacement heals the replica sets.
-    /// The planner treats this as a first-class signal and answers with
-    /// a broker replacement step even when lag alone says Hold.
-    pub degraded_partitions: usize,
+    /// Durability headroom is reduced, but quorum may still be healthy;
+    /// alone this does *not* trigger repair.
+    pub under_replicated: usize,
+    /// Partitions of the watched topic whose in-sync-replica set is
+    /// below the topic's `min_insync` — these reject quorum produces
+    /// *right now* (a broker death took the last in-sync follower, or
+    /// replication lag shrank the ISR).  The planner treats this as a
+    /// first-class signal and answers with a broker replacement step
+    /// even when lag alone says Hold.
+    pub below_min_insync: usize,
 }
 
 impl SignalSnapshot {
@@ -199,7 +206,8 @@ impl SignalProbe {
     ) -> Result<SignalSnapshot> {
         let (end_sum, partition_backlog) = self.scan()?;
         let partitions = self.cluster.partition_count(&self.topic)?;
-        let degraded_partitions = self.cluster.degraded_partitions(&self.topic)?;
+        let under_replicated = self.cluster.under_replicated(&self.topic)?;
+        let below_min_insync = self.cluster.below_min_insync(&self.topic)?;
         let lag: u64 = partition_backlog.iter().sum();
 
         let dt = (t_secs - self.prev_t).max(1e-6);
@@ -244,7 +252,8 @@ impl SignalProbe {
             broker_nodes,
             broker_nic_util,
             broker_disk_util,
-            degraded_partitions,
+            under_replicated,
+            below_min_insync,
         })
     }
 }
@@ -342,18 +351,41 @@ mod tests {
 
     #[test]
     fn probe_surfaces_degraded_replication() {
-        use crate::broker::ReplicationConfig;
+        use crate::broker::{AckMode, ReplicationConfig};
         let cluster = BrokerCluster::new(Machine::unthrottled(3), vec![0, 1]);
         cluster
-            .create_topic_replicated("t", 2, ReplicationConfig::new(2))
+            .create_topic_replicated(
+                "t",
+                2,
+                ReplicationConfig::new(2).with_ack_mode(AckMode::Quorum).with_min_insync(2),
+            )
             .unwrap();
         let mut probe = SignalProbe::new(cluster.clone(), "t", "g", None, 1.0);
-        assert_eq!(probe.sample(1.0, 1, 1, 2).unwrap().degraded_partitions, 0);
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        assert_eq!((s.under_replicated, s.below_min_insync), (0, 0));
         cluster.kill_broker(1).unwrap();
-        assert_eq!(probe.sample(2.0, 1, 1, 2).unwrap().degraded_partitions, 2);
+        let s = probe.sample(2.0, 1, 1, 2).unwrap();
+        assert_eq!(s.under_replicated, 2);
+        assert_eq!(s.below_min_insync, 2, "min_insync 2 lost its follower");
         // A replacement broker heals the replica sets.
         cluster.add_brokers(vec![2]);
-        assert_eq!(probe.sample(3.0, 1, 1, 2).unwrap().degraded_partitions, 0);
+        let s = probe.sample(3.0, 1, 1, 2).unwrap();
+        assert_eq!((s.under_replicated, s.below_min_insync), (0, 0));
+    }
+
+    #[test]
+    fn probe_splits_under_replicated_from_quorum_degraded() {
+        // A factor-2 / min_insync-1 topic that loses a follower is
+        // under-replicated but quorum-healthy: only `under_replicated`
+        // fires, so the planner will not schedule repair for it.
+        use crate::broker::ReplicationConfig;
+        let cluster = BrokerCluster::new(Machine::unthrottled(3), vec![0, 1]);
+        cluster.create_topic_replicated("t", 2, ReplicationConfig::new(2)).unwrap();
+        let mut probe = SignalProbe::new(cluster.clone(), "t", "g", None, 1.0);
+        cluster.kill_broker(1).unwrap();
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        assert_eq!(s.under_replicated, 2);
+        assert_eq!(s.below_min_insync, 0, "quorum still healthy at min_insync 1");
     }
 
     #[test]

@@ -193,6 +193,12 @@ pub(super) struct Inner {
     /// Queued failover notifications the autoscale control loop drains
     /// ([`BrokerCluster::take_failover_events`]).
     pub(super) failover_events: Mutex<Vec<FailoverEvent>>,
+    /// Append-only ring of every broker node this cluster has ever
+    /// known, in first-seen order.  Group-coordinator placement
+    /// jump-hashes over this *stable* list (walking past dead nodes),
+    /// so unrelated membership churn does not remap coordinators the
+    /// way hashing over the alive list did.
+    pub(super) coordinator_ring: Mutex<Vec<NodeId>>,
 }
 
 /// One broker node's cumulative I/O counters and bucket capacities
@@ -245,6 +251,7 @@ impl BrokerCluster {
         log_config: LogConfig,
     ) -> Self {
         assert!(!broker_nodes.is_empty(), "broker cluster needs >= 1 node");
+        let ring = broker_nodes.clone();
         BrokerCluster {
             inner: Arc::new(Inner {
                 machine,
@@ -257,6 +264,7 @@ impl BrokerCluster {
                 epoch: Instant::now(),
                 timelines: Mutex::new(Vec::new()),
                 failover_events: Mutex::new(Vec::new()),
+                coordinator_ring: Mutex::new(ring),
             }),
         }
     }
@@ -461,11 +469,14 @@ impl BrokerCluster {
         let bytes: usize = values.iter().map(|v| v.len()).sum();
 
         // Quorum acks sacrifice availability for durability: while the
-        // alive replica set is below `min_insync`, reject the produce
-        // instead of acking a record a node death could lose.
+        // ISR is below `min_insync`, reject the produce instead of
+        // acking a record a node death could lose.  A heartbeat pass
+        // runs first so a follower whose lag cleared re-enters the ISR
+        // and lifts the rejection without a successful produce.
         let rep = t.replication;
         if rep.ack_mode == AckMode::Quorum {
-            let in_sync = p.replicas.lock().unwrap().nodes.len();
+            self.sync_partition_followers(p, &rep, 0);
+            let in_sync = p.replicas.lock().unwrap().isr.len();
             if in_sync < rep.min_insync {
                 return Err(Error::Broker(format!(
                     "{}/{partition}: not enough in-sync replicas ({in_sync} of min_insync {})",
@@ -499,29 +510,17 @@ impl BrokerCluster {
                 Ok(())
             },
         )?;
-        // Synchronous in-process replication: each follower adopts the
-        // leader's segment `Arc`s (zero payload copies) but pays the
-        // modeled inter-broker stream costs — leader egress, follower
-        // ingress, follower disk — so a replicated topic's bandwidth
-        // bill is `factor` times the unreplicated one, exactly as on
-        // real hardware.  Only then does the high watermark advance:
-        // an acked record is on every alive replica before any fetcher
-        // can see it.
-        {
-            let mut set = p.replicas.lock().unwrap();
-            if set.nodes.len() > 1 {
-                let followers: Vec<NodeId> = set.nodes[1..].to_vec();
-                for &f in &followers {
-                    self.inner.machine.node(leader).egress.acquire(bytes);
-                    self.inner.machine.node(f).ingress.acquire(bytes);
-                    self.inner.machine.node(f).disk.acquire(bytes);
-                }
-                let mirror = p.log.mirror();
-                for f in followers {
-                    set.mirrors.insert(f, mirror.clone());
-                }
-            }
-        }
+        // Async in-process replication with a modeled lag: each
+        // follower adopts the leader's segment `Arc`s (zero payload
+        // copies) and advances its applied watermark as far as its
+        // injected lag allows, paying the modeled inter-broker stream
+        // costs — leader egress, follower ingress, follower disk — for
+        // the bytes it applies.  Under Quorum, in-sync followers are
+        // driven to full catch-up *before* the ack returns (latency
+        // rises with follower lag); under Leader the catch-up is
+        // deferred and the produce path stays flat.  The ISR
+        // shrinks/expands here from each follower's watermark gap.
+        self.sync_partition_followers(p, &rep, bytes);
         p.high_watermark
             .fetch_max(base + values.len() as u64, Ordering::AcqRel);
         p.notify_data();
@@ -567,6 +566,23 @@ impl BrokerCluster {
             })?
             .clone();
 
+        // Follower-fetch (KIP-392-style read locality): when the topic
+        // opts in and the consuming node hosts an *in-sync* follower of
+        // this partition, serve from that follower instead of the
+        // leader — fenced by the follower's applied watermark, so a
+        // lagging replica can never hand out records it has not
+        // replicated yet.
+        let follower_serve = |p: &Partition| -> Option<u64> {
+            if !t.replication.follower_fetch {
+                return None;
+            }
+            let set = p.replicas.lock().unwrap();
+            if set.nodes.first() == Some(&to_node) || !set.isr.contains(&to_node) {
+                return None;
+            }
+            set.mirrors.get(&to_node).map(|m| m.high_watermark())
+        };
+
         let deadline = Instant::now() + timeout;
         let records = loop {
             // Visibility is capped at the replication high watermark:
@@ -574,7 +590,10 @@ impl BrokerCluster {
             // replica.  The watermark is loaded *before* the segment
             // read, so a concurrent produce can only hide records this
             // pass (the loop re-reads), never expose unreplicated ones.
-            let hw = p.high_watermark.load(Ordering::Acquire);
+            let mut hw = p.high_watermark.load(Ordering::Acquire);
+            if let Some(watermark) = follower_serve(&p) {
+                hw = hw.min(watermark);
+            }
             // Lock-free read against the published segment snapshot —
             // concurrent producers are never blocked by this.
             let mut recs = p.log.read(offset, max_bytes)?;
@@ -608,13 +627,20 @@ impl BrokerCluster {
             }
         };
         if !records.is_empty() {
-            // Resolve the leader only now, *after* any blocking wait: a
-            // failover while this fetcher was parked means the bytes
-            // come from (and are billed to) the promoted leader, not
-            // the node that died under us.
-            let leader = self.leader_of(t, partition)?;
+            // Resolve the serving broker only now, *after* any blocking
+            // wait: a failover while this fetcher was parked means the
+            // bytes come from (and are billed to) the promoted leader,
+            // not the node that died under us.  A local in-sync
+            // follower serves (and is billed) instead of the leader,
+            // which is the whole locality win: the leader's egress is
+            // untouched by this consumer.
+            let source = if follower_serve(&p).is_some() {
+                to_node
+            } else {
+                self.leader_of(t, partition)?
+            };
             let bytes: usize = records.iter().map(|r| r.value.len()).sum();
-            self.inner.machine.node(leader).egress.acquire(bytes);
+            self.inner.machine.node(source).egress.acquire(bytes);
             self.inner.machine.node(to_node).ingress.acquire(bytes);
         }
         Ok(records)
@@ -635,6 +661,16 @@ impl BrokerCluster {
     /// replication after a node death.
     pub fn add_brokers(&self, nodes: Vec<NodeId>) {
         let _control = self.inner.control.lock().unwrap();
+        {
+            // Coordinator placement hashes over the stable first-seen
+            // ring: new nodes append slots, rejoining nodes keep theirs.
+            let mut ring = self.inner.coordinator_ring.lock().unwrap();
+            for n in &nodes {
+                if !ring.contains(n) {
+                    ring.push(*n);
+                }
+            }
+        }
         let mut brokers = self.inner.broker_nodes.load().as_ref().clone();
         brokers.extend(nodes);
         let n = brokers.len();

@@ -288,6 +288,11 @@ impl Consumer {
         for (p, pos) in &self.positions {
             self.cluster.commit(&self.group, &self.topic, *p, *pos);
         }
+        // Committing is a progress point observers key off: a drain
+        // loop that commits and then reads `lag()` (or an autoscale
+        // probe sampling the shared gauge) must see lag computed
+        // against the current positions, not the last poll's.
+        self.refresh_lag();
     }
 }
 
@@ -428,6 +433,48 @@ mod tests {
         assert_eq!(drained, 5);
         assert_eq!(c1.assignment(), &[0]);
         assert_eq!(c1.lag(), 0);
+    }
+
+    #[test]
+    fn commit_refreshes_lag_gauge() {
+        // Regression: `commit` used to leave the gauge stale, so a
+        // drain loop that commits and then reads `lag()` saw the value
+        // from the last poll instead of the current backlog.
+        let c = setup(1);
+        c.produce("t", 0, 0, &[vec![1]]).unwrap();
+        let mut consumer = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        while consumer.lag() > 0 {
+            consumer.poll().unwrap();
+        }
+        c.produce("t", 0, 0, &[vec![2], vec![3]]).unwrap();
+        consumer.commit();
+        assert_eq!(consumer.lag(), 2, "commit recomputes the gauge");
+    }
+
+    #[test]
+    fn consumer_poll_serves_from_local_in_sync_follower() {
+        use crate::broker::ReplicationConfig;
+        let c = BrokerCluster::new(Machine::unthrottled(3), vec![0, 1]);
+        c.create_topic_replicated("t", 1, ReplicationConfig::new(2).with_follower_fetch(true))
+            .unwrap();
+        c.produce("t", 0, 2, &[vec![7; 64]]).unwrap();
+        let io0 = c.broker_io();
+        // The consumer fetches into node 1, which hosts partition 0's
+        // in-sync follower: the bytes are served (and billed) locally,
+        // leaving the leader's egress untouched.
+        let mut consumer = Consumer::join(c.clone(), "t", "g", 1, fast_config()).unwrap();
+        let recs = consumer.poll().unwrap();
+        assert_eq!(recs.len(), 1);
+        let io1 = c.broker_io();
+        assert_eq!(
+            io1[0].nic_out_bytes, io0[0].nic_out_bytes,
+            "leader egress untouched by the follower-served fetch"
+        );
+        assert_eq!(
+            io1[1].nic_out_bytes - io0[1].nic_out_bytes,
+            64,
+            "the local follower served the fetch bytes"
+        );
     }
 
     #[test]

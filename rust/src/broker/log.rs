@@ -633,6 +633,7 @@ impl PartitionLog {
             segments: view.segments.clone(),
             end_offset,
             total_bytes,
+            high_watermark: end_offset,
         }
     }
 
@@ -699,12 +700,42 @@ pub struct LogMirror {
     segments: Vec<Segment>,
     end_offset: u64,
     total_bytes: usize,
+    high_watermark: u64,
 }
 
 impl LogMirror {
-    /// Offset up to which this mirror has replicated (exclusive).
+    /// Offset up to which this mirror holds the leader's segments
+    /// (exclusive) — what the follower has *received*.
     pub fn end_offset(&self) -> u64 {
         self.end_offset
+    }
+
+    /// Offset up to which this mirror has durably applied the leader's
+    /// records (exclusive) — what the follower has *replicated*.  Under
+    /// the async lag model this trails [`LogMirror::end_offset`] by the
+    /// follower's modeled gap; a freshly taken mirror is fully applied.
+    pub fn high_watermark(&self) -> u64 {
+        self.high_watermark
+    }
+
+    /// Leader records received but not yet applied by this follower.
+    pub fn gap(&self) -> u64 {
+        self.end_offset.saturating_sub(self.high_watermark)
+    }
+
+    /// Advance the applied watermark for the lag model.  The watermark
+    /// never moves backwards and never exceeds the received end offset.
+    pub fn set_high_watermark(&mut self, offset: u64) {
+        self.high_watermark = offset.min(self.end_offset).max(self.high_watermark);
+    }
+
+    /// Rebase a freshly taken mirror's applied watermark (a fresh
+    /// mirror reports itself fully applied; the async replication path
+    /// re-anchors it at the follower's previous watermark before
+    /// advancing by the modeled catch-up).
+    pub(crate) fn with_high_watermark(mut self, offset: u64) -> Self {
+        self.high_watermark = offset.min(self.end_offset);
+        self
     }
 
     /// Payload bytes reachable through the adopted segments.
@@ -721,6 +752,7 @@ impl std::fmt::Debug for LogMirror {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("LogMirror")
             .field("end_offset", &self.end_offset)
+            .field("high_watermark", &self.high_watermark)
             .field("total_bytes", &self.total_bytes)
             .field("segments", &self.segments.len())
             .finish()

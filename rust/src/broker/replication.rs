@@ -1,4 +1,5 @@
-//! Per-partition replication and crash-tolerant failover.
+//! Per-partition replication, the ISR lag model, and crash-tolerant
+//! failover.
 //!
 //! Every partition carries a replica set — a leader plus `factor - 1`
 //! followers — layered over the shared-slab segments of [`super::log`]:
@@ -6,27 +7,42 @@
 //! ([`super::log::LogMirror`]), so in-process replication moves zero
 //! payload bytes while still paying the modeled leader-egress /
 //! follower-ingress / follower-disk costs a real inter-broker
-//! replication stream would.  Produces are *acked* under a configurable
-//! [`AckMode`]:
+//! replication stream would.
 //!
-//! * [`AckMode::Leader`] — acked once the leader appended (and, when
-//!   followers exist, synchronously mirrored).  Stays available while
-//!   the replica set is degraded, like Kafka `acks=1`.
-//! * [`AckMode::Quorum`] — additionally *rejects* produces while fewer
-//!   than `min_insync` replicas are alive (Kafka `acks=all` +
-//!   `min.insync.replicas`): availability is sacrificed so that no
-//!   acked record can ever be lost to a node death.
+//! Replication is *asynchronous* with a deterministic lag model: each
+//! follower applies the leader's records up to its own high watermark,
+//! which may trail the leader's end offset by an injected per-follower
+//! lag ([`BrokerCluster::inject_follower_lag`] models a slow NIC/disk).
+//! The leader tracks an explicit **in-sync-replica (ISR)** set: a
+//! follower whose watermark gap exceeds the topic's
+//! [`ReplicationConfig::replica_lag_max`] is ejected from the ISR and
+//! re-admitted when it catches back up.  Produces are *acked* under a
+//! configurable [`AckMode`]:
+//!
+//! * [`AckMode::Leader`] — acked once the leader appended; followers
+//!   catch up asynchronously (their IO is billed as the deferred
+//!   catch-up happens), so produce latency stays flat while a follower
+//!   lags, like Kafka `acks=1`.
+//! * [`AckMode::Quorum`] — acked only after every *ISR* follower has
+//!   fully applied the batch (their IO is billed synchronously on the
+//!   produce path, so latency rises with follower lag), and *rejected*
+//!   while the ISR is smaller than `min_insync` (Kafka `acks=all` +
+//!   `min.insync.replicas`): availability and latency are sacrificed so
+//!   that no acked record can ever be lost to a node death.
 //!
 //! [`BrokerCluster::kill_broker`] models a broker node crash: the node
-//! leaves the membership, every partition it led fails over —
-//! deterministically, to the first surviving follower in replica-set
-//! order — consumer-group offsets survive untouched (the group
-//! coordinator state is modeled as replicated), blocked fetchers wake
-//! against the new leader, and the recovery is recorded as a
-//! [`ScalingAction::Failover`] event on every attached
-//! [`ScalingTimeline`] plus a [`FailoverEvent`] the autoscale
-//! controller drains, so recovery time lands on the same timeline as
-//! every other scaling action (Luckow & Jha: startup/recovery time is a
+//! leaves the membership, every partition it led fails over — to the
+//! first surviving *ISR* follower in replica-set order, falling back to
+//! any surviving follower (an unclean election) when no ISR member
+//! survives.  Records above the promoted follower's watermark are
+//! counted as `lost_records` on the [`FailoverReport`], the queued
+//! [`FailoverEvent`], and the [`ScalingAction::Failover`] event
+//! recorded on every attached [`ScalingTimeline`] — so the sim
+//! quantifies the durability-vs-latency trade per [`AckMode`].
+//! Consumer-group offsets survive untouched (the group coordinator
+//! state is modeled as replicated), and blocked fetchers wake against
+//! the new leader, so recovery time lands on the same timeline as every
+//! other scaling action (Luckow & Jha: startup/recovery time is a
 //! first-class performance axis).
 
 use std::collections::HashMap;
@@ -44,11 +60,14 @@ use super::log::LogMirror;
 /// When a produce is acknowledged (and what happens while degraded).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum AckMode {
-    /// Ack after the leader append (+ synchronous mirror adoption when
-    /// followers are alive).  Keeps accepting writes while degraded.
+    /// Ack after the leader append; followers replicate asynchronously.
+    /// Keeps accepting writes (and keeps latency flat) while degraded
+    /// or lagging — at the cost of losing a lagging follower's gap on
+    /// unclean failover.
     #[default]
     Leader,
-    /// Ack only while at least `min_insync` replicas are alive; reject
+    /// Ack only after every in-sync follower applied the batch, and
+    /// only while the ISR holds at least `min_insync` replicas; reject
     /// produces otherwise.  No acked record can be lost to failover.
     Quorum,
 }
@@ -80,13 +99,27 @@ pub struct ReplicationConfig {
     /// Replicas per partition (leader included).  1 = unreplicated.
     pub factor: usize,
     pub ack_mode: AckMode,
-    /// Minimum alive replicas a [`AckMode::Quorum`] produce requires.
+    /// Minimum in-sync replicas a [`AckMode::Quorum`] produce requires.
     pub min_insync: usize,
+    /// Largest watermark gap (in records) a follower may accumulate
+    /// before it is ejected from the ISR.  0 = strict: any gap ejects.
+    pub replica_lag_max: u64,
+    /// Serve fetches from an in-sync follower co-located with the
+    /// consumer (KIP-392-style read locality), fenced by that
+    /// follower's high watermark.  Off by default: all fetches hit the
+    /// leader.
+    pub follower_fetch: bool,
 }
 
 impl Default for ReplicationConfig {
     fn default() -> Self {
-        ReplicationConfig { factor: 1, ack_mode: AckMode::Leader, min_insync: 1 }
+        ReplicationConfig {
+            factor: 1,
+            ack_mode: AckMode::Leader,
+            min_insync: 1,
+            replica_lag_max: 0,
+            follower_fetch: false,
+        }
     }
 }
 
@@ -102,6 +135,16 @@ impl ReplicationConfig {
 
     pub fn with_min_insync(mut self, min_insync: usize) -> Self {
         self.min_insync = min_insync;
+        self
+    }
+
+    pub fn with_replica_lag_max(mut self, records: u64) -> Self {
+        self.replica_lag_max = records;
+        self
+    }
+
+    pub fn with_follower_fetch(mut self, enabled: bool) -> Self {
+        self.follower_fetch = enabled;
         self
     }
 
@@ -129,12 +172,26 @@ impl ReplicationConfig {
 }
 
 /// One partition's replica set: node ids in priority order (leader
-/// first; failover promotes the first surviving entry) plus each
-/// follower's adopted [`LogMirror`].
+/// first; failover promotes the first surviving *in-sync* entry) plus
+/// each follower's adopted [`LogMirror`] and the per-follower lag
+/// model.
 #[derive(Debug, Default)]
 pub(super) struct ReplicaSet {
     pub(super) nodes: Vec<NodeId>,
     pub(super) mirrors: HashMap<NodeId, LogMirror>,
+    /// In-sync replicas (the leader is always a member).  Recomputed on
+    /// every replication pass from each follower's watermark gap *and*
+    /// injected lag vs the topic's `replica_lag_max`;
+    /// [`AckMode::Quorum`] acks against this set.
+    pub(super) isr: Vec<NodeId>,
+    /// Injected lag in records per follower — the deterministic stand-in
+    /// for a slow replication NIC/disk.  A held follower's watermark
+    /// trails the leader's end offset by this many records.
+    pub(super) held: HashMap<NodeId, u64>,
+    /// Leader bytes appended but not yet applied per follower; drained
+    /// (and billed to the follower's NIC/disk throttles) as the
+    /// follower catches up.
+    pub(super) pending_bytes: HashMap<NodeId, u64>,
 }
 
 /// What one [`BrokerCluster::kill_broker`] did, for assertions and logs.
@@ -151,6 +208,14 @@ pub struct FailoverReport {
     pub unreplicated: usize,
     /// Partitions (across all topics) inspected during the failover.
     pub partitions: usize,
+    /// Acked records above the promoted followers' high watermarks —
+    /// the unclean-leader-election loss.  Always 0 when every promoted
+    /// follower was fully caught up (which [`AckMode::Quorum`]
+    /// guarantees for acked records).
+    pub lost_records: u64,
+    /// Promotions whose follower was not in the ISR at kill time
+    /// (unclean elections proper).
+    pub unclean_elections: usize,
     /// Wall-clock seconds the failover took (membership edit, leader
     /// promotion, replica reassignment, fetcher wakeup).
     pub recovery_secs: f64,
@@ -166,6 +231,8 @@ pub struct FailoverEvent {
     pub killed: NodeId,
     pub promoted: usize,
     pub unreplicated: usize,
+    /// Records lost to unclean promotions (see [`FailoverReport`]).
+    pub lost_records: u64,
     pub recovery_secs: f64,
 }
 
@@ -173,9 +240,12 @@ impl BrokerCluster {
     /// Recompute every partition's replica set against `brokers`:
     /// leader = the partition's current leader index, followers = the
     /// next `factor - 1` brokers on the ring (capped at the tier size —
-    /// a tier smaller than the factor leaves partitions *degraded*,
-    /// visible through [`BrokerCluster::degraded_partitions`]).
-    /// Followers adopt the leader log's current segments.
+    /// a tier smaller than the factor leaves partitions
+    /// *under-replicated*, visible through
+    /// [`BrokerCluster::under_replicated`]).  Followers adopt the
+    /// leader log's current segments fully caught up (the heal path),
+    /// so the ISR resets to the full replica set; an injected lag
+    /// re-ejects a slow follower on its next produce.
     pub(super) fn assign_replica_sets(
         partitions: &[Arc<Partition>],
         factor: usize,
@@ -188,18 +258,111 @@ impl BrokerCluster {
                 (0..factor.min(n)).map(|k| brokers[(leader_idx + k) % n]).collect();
             let mut set = p.replicas.lock().unwrap();
             set.mirrors.retain(|node, _| nodes[1..].contains(node));
+            set.pending_bytes.retain(|node, _| nodes[1..].contains(node));
             for &f in &nodes[1..] {
                 set.mirrors.insert(f, p.log.mirror());
+                set.pending_bytes.insert(f, 0);
             }
+            set.isr = nodes.clone();
             set.nodes = nodes;
         }
     }
 
+    /// One replication pass for a partition: every follower adopts the
+    /// leader's current segments (zero payload copies) and advances its
+    /// applied watermark as far as the lag model allows, paying the
+    /// modeled inter-broker stream costs — leader egress, follower
+    /// ingress, follower disk — for exactly the bytes it applies.  The
+    /// ISR is then recomputed from each follower's watermark gap vs the
+    /// topic's `replica_lag_max`.
+    ///
+    /// `new_bytes` is the payload size a just-appended batch added to
+    /// each follower's backlog (0 for a heartbeat pass).  Under
+    /// [`AckMode::Quorum`] an in-sync follower (injected lag within
+    /// `replica_lag_max`) is driven to full catch-up before the produce
+    /// acks — that synchronous bill is the latency cost of quorum acks;
+    /// under [`AckMode::Leader`] followers trail by their injected lag
+    /// and the bill is deferred, keeping the produce path flat.
+    pub(super) fn sync_partition_followers(
+        &self,
+        p: &Partition,
+        rep: &ReplicationConfig,
+        new_bytes: usize,
+    ) {
+        let mut set = p.replicas.lock().unwrap();
+        if set.nodes.len() <= 1 {
+            if set.isr != set.nodes {
+                set.isr = set.nodes.clone();
+            }
+            return;
+        }
+        let leader = set.nodes[0];
+        let followers: Vec<NodeId> = set.nodes[1..].to_vec();
+        let mirror = p.log.mirror();
+        let leader_end = mirror.end_offset();
+        let mut isr = vec![leader];
+        for &f in &followers {
+            let held = set.held.get(&f).copied().unwrap_or(0);
+            let prev = set.mirrors.get(&f).map(|m| m.high_watermark()).unwrap_or(0);
+            let backlog_bytes =
+                set.pending_bytes.get(&f).copied().unwrap_or(0) + new_bytes as u64;
+            // The follower applies up to the leader end minus its
+            // injected lag — except under Quorum, where an in-sync
+            // follower must fully apply before the ack.
+            let target = if rep.ack_mode == AckMode::Quorum && held <= rep.replica_lag_max {
+                leader_end
+            } else {
+                leader_end.saturating_sub(held)
+            }
+            .max(prev);
+            let backlog_records = leader_end.saturating_sub(prev);
+            let applied_records = target.saturating_sub(prev);
+            // Bill the applied share of the byte backlog (exact for
+            // uniform records; proportional otherwise).
+            let bill = if backlog_records == 0 {
+                0
+            } else {
+                (backlog_bytes as u128 * applied_records as u128 / backlog_records as u128)
+                    as u64
+            };
+            if bill > 0 {
+                self.inner.machine.node(leader).egress.acquire(bill as usize);
+                self.inner.machine.node(f).ingress.acquire(bill as usize);
+                self.inner.machine.node(f).disk.acquire(bill as usize);
+            }
+            set.pending_bytes.insert(f, backlog_bytes - bill);
+            set.mirrors.insert(f, mirror.clone().with_high_watermark(target));
+            // ISR admission needs both a closed gap and a healthy lag
+            // model: a known-slow follower (held > replica_lag_max) is
+            // ejected even while momentarily caught up, so a quorum can
+            // never ack against a follower that cannot keep up with the
+            // very batch being acked.
+            if leader_end - target <= rep.replica_lag_max && held <= rep.replica_lag_max {
+                isr.push(f);
+            }
+        }
+        set.isr = isr;
+    }
+
+    /// Advance every follower of `topic` without a new produce — the
+    /// modeled equivalent of the background replica fetcher running
+    /// between produces.  Followers apply their pending backlog up to
+    /// their injected lag (billing the deferred bytes), and followers
+    /// whose gap closed re-enter the ISR.
+    pub fn replication_heartbeat(&self, topic: &str) -> Result<()> {
+        let t = self.topic(topic)?;
+        for p in &t.partitions {
+            self.sync_partition_followers(p, &t.replication, 0);
+        }
+        Ok(())
+    }
+
     /// Partitions of `topic` whose alive replica count is below the
-    /// topic's configured factor — the degraded-replication signal the
-    /// autoscale probe samples and the planner answers with a broker
-    /// replacement step.
-    pub fn degraded_partitions(&self, topic: &str) -> Result<usize> {
+    /// topic's configured factor — durability headroom is reduced, but
+    /// quorum may still be healthy.  The planner treats this as
+    /// repair-worthy only when [`BrokerCluster::below_min_insync`] also
+    /// fires.
+    pub fn under_replicated(&self, topic: &str) -> Result<usize> {
         let t = self.topic(topic)?;
         Ok(t.partitions
             .iter()
@@ -207,17 +370,91 @@ impl BrokerCluster {
             .count())
     }
 
-    /// The broker node coordinating `group`'s offsets — deterministic
-    /// over the alive membership, so it *moves* when its node dies.
-    /// The offset store itself is modeled as replicated coordinator
-    /// state (it lives with the cluster, not the node), which is
-    /// exactly the durability claim
+    /// Partitions of `topic` whose ISR is smaller than the topic's
+    /// `min_insync` — the quorum-degraded signal: these partitions
+    /// reject [`AckMode::Quorum`] produces right now.  This (not mere
+    /// under-replication) drives the planner's broker-repair step.
+    pub fn below_min_insync(&self, topic: &str) -> Result<usize> {
+        let t = self.topic(topic)?;
+        let min = t.replication.min_insync;
+        Ok(t.partitions
+            .iter()
+            .filter(|p| p.replicas.lock().unwrap().isr.len() < min)
+            .count())
+    }
+
+    /// Inject a modeled replication lag of `records` for broker `node`
+    /// on every partition of `topic` it follows — the deterministic
+    /// stand-in for a follower with a slow NIC/disk.  The follower's
+    /// watermark will trail the leader by up to `records` from the next
+    /// produce on; it drops out of the ISR on the next replication pass
+    /// (the pre-produce quorum gate included) once either its gap or
+    /// the injection itself exceeds the topic's `replica_lag_max`.
+    /// `records = 0` clears the injection; the follower re-enters the
+    /// ISR when its gap closes.
+    pub fn inject_follower_lag(&self, topic: &str, node: NodeId, records: u64) -> Result<()> {
+        let t = self.topic(topic)?;
+        for p in &t.partitions {
+            let mut set = p.replicas.lock().unwrap();
+            if records == 0 {
+                set.held.remove(&node);
+            } else {
+                set.held.insert(node, records);
+            }
+        }
+        Ok(())
+    }
+
+    /// The current in-sync replica set of one partition (leader first).
+    pub fn in_sync_replicas(&self, topic: &str, partition: usize) -> Result<Vec<NodeId>> {
+        let t = self.topic(topic)?;
+        let p = t
+            .partitions
+            .get(partition)
+            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?;
+        Ok(p.replicas.lock().unwrap().isr.clone())
+    }
+
+    /// Records follower `node` has yet to apply on one partition: the
+    /// leader log's end offset minus the follower's high watermark.
+    /// 0 for the leader itself and for non-replica nodes.
+    pub fn follower_gap(&self, topic: &str, partition: usize, node: NodeId) -> Result<u64> {
+        let t = self.topic(topic)?;
+        let p = t
+            .partitions
+            .get(partition)
+            .ok_or_else(|| Error::Broker(format!("{topic}/{partition}: no such partition")))?;
+        let set = p.replicas.lock().unwrap();
+        Ok(set
+            .mirrors
+            .get(&node)
+            .map(|m| p.log.end_offset().saturating_sub(m.high_watermark()))
+            .unwrap_or(0))
+    }
+
+    /// The broker node coordinating `group`'s offsets — jump-consistent
+    /// over the *stable* ring of every broker the cluster has ever
+    /// known, walked forward past dead nodes.  Unrelated membership
+    /// churn therefore leaves a group's coordinator in place: killing
+    /// one broker remaps only the groups that node coordinated (~1/n of
+    /// them), and adding brokers appends ring slots instead of
+    /// reshuffling the modulus.  The offset store itself is modeled as
+    /// replicated coordinator state (it lives with the cluster, not the
+    /// node), which is exactly the durability claim
     /// `offsets_survive_coordinator_death` pins: killing the
     /// coordinator changes this answer but not one committed offset.
     pub fn group_coordinator(&self, group: &str) -> NodeId {
         let brokers = self.inner.broker_nodes.load();
+        let ring = self.inner.coordinator_ring.lock().unwrap();
+        if ring.is_empty() {
+            return brokers[0];
+        }
         let h = super::repartition::key_hash(group.as_bytes());
-        brokers[(h % brokers.len() as u64) as usize]
+        let start = super::repartition::jump_hash(h, ring.len());
+        (0..ring.len())
+            .map(|i| ring[(start + i) % ring.len()])
+            .find(|n| brokers.contains(n))
+            .unwrap_or(brokers[0])
     }
 
     /// Attach a timeline: every subsequent failover records a
@@ -235,11 +472,15 @@ impl BrokerCluster {
 
     /// Kill broker `node`: remove it from the membership and fail over
     /// every partition it led — deterministically, to the first
-    /// surviving follower in replica-set order (factor-1 partitions
-    /// fall back to round-robin reassignment and are counted as
-    /// `unreplicated`).  Committed consumer-group offsets survive
-    /// untouched; blocked fetchers wake and re-resolve the new leader.
-    /// The last alive broker cannot be killed.
+    /// surviving *in-sync* follower in replica-set order, falling back
+    /// to any surviving follower (an unclean election, counted on the
+    /// report) when no ISR member survives; factor-1 partitions fall
+    /// back to round-robin reassignment and are counted as
+    /// `unreplicated`.  Records above the promoted follower's high
+    /// watermark are counted as `lost_records`.  Committed
+    /// consumer-group offsets survive untouched; blocked fetchers wake
+    /// and re-resolve the new leader.  The last alive broker cannot be
+    /// killed.
     pub fn kill_broker(&self, node: NodeId) -> Result<FailoverReport> {
         self.check_running()?;
         let started = Instant::now();
@@ -260,6 +501,8 @@ impl BrokerCluster {
         let mut promoted = 0usize;
         let mut unreplicated = 0usize;
         let mut partitions = 0usize;
+        let mut lost_records = 0u64;
+        let mut unclean_elections = 0usize;
         let topics = self.inner.topics.load();
         for topic in topics.values() {
             for p in &topic.partitions {
@@ -270,16 +513,41 @@ impl BrokerCluster {
                     // membership edit.
                     old_leader
                 } else {
-                    // Deterministic promotion: first surviving follower
-                    // in replica-set order; factor-1 partitions have
-                    // none and fall back to round-robin placement.
+                    // Deterministic promotion: first surviving *ISR*
+                    // follower in replica-set order, else any surviving
+                    // follower (unclean); factor-1 partitions have none
+                    // and fall back to round-robin placement.
                     let survivor = {
                         let set = p.replicas.lock().unwrap();
-                        set.nodes.iter().copied().find(|r| *r != node)
+                        let pick = set
+                            .nodes
+                            .iter()
+                            .copied()
+                            .find(|r| *r != node && set.isr.contains(r))
+                            .or_else(|| set.nodes.iter().copied().find(|r| *r != node));
+                        pick.map(|s| {
+                            let watermark = set
+                                .mirrors
+                                .get(&s)
+                                .map(|m| m.high_watermark())
+                                .unwrap_or(0);
+                            (s, watermark, set.isr.contains(&s))
+                        })
                     };
                     match survivor {
-                        Some(s) => {
+                        Some((s, watermark, in_isr)) => {
                             promoted += 1;
+                            // Unclean-election accounting: acked records
+                            // the promoted follower never applied.  The
+                            // shared slabs keep the bytes physically
+                            // readable in-process; a real deployment
+                            // would have lost them, so the timeline
+                            // charges them as lost.
+                            lost_records +=
+                                p.log.end_offset().saturating_sub(watermark);
+                            if !in_isr {
+                                unclean_elections += 1;
+                            }
                             s
                         }
                         None => {
@@ -325,6 +593,7 @@ impl BrokerCluster {
             policy: "failover".to_string(),
             reaction_secs: recovery_secs,
             cost_secs: recovery_secs,
+            lost_records,
         };
         for timeline in self.inner.timelines.lock().unwrap().iter() {
             timeline.record(event.clone());
@@ -334,9 +603,18 @@ impl BrokerCluster {
             killed: node,
             promoted,
             unreplicated,
+            lost_records,
             recovery_secs,
         });
-        Ok(FailoverReport { killed: node, promoted, unreplicated, partitions, recovery_secs })
+        Ok(FailoverReport {
+            killed: node,
+            promoted,
+            unreplicated,
+            partitions,
+            lost_records,
+            unclean_elections,
+            recovery_secs,
+        })
     }
 }
 
@@ -380,8 +658,10 @@ mod tests {
             assert_eq!(set.nodes.len(), 2);
             assert_eq!(set.nodes[0], i % 3, "leader first");
             assert_eq!(set.nodes[1], (i + 1) % 3, "next broker on the ring follows");
+            assert_eq!(set.isr, set.nodes, "fresh replicas start in sync");
         }
-        assert_eq!(c.degraded_partitions("t").unwrap(), 0);
+        assert_eq!(c.under_replicated("t").unwrap(), 0);
+        assert_eq!(c.below_min_insync("t").unwrap(), 0);
     }
 
     #[test]
@@ -402,6 +682,8 @@ mod tests {
         let t = c.topic("t").unwrap();
         let set = t.partitions[0].replicas.lock().unwrap();
         assert_eq!(set.mirrors[&1].end_offset(), 1);
+        assert_eq!(set.mirrors[&1].high_watermark(), 1, "zero-lag follower fully applied");
+        assert_eq!(set.isr, vec![0, 1]);
     }
 
     #[test]
@@ -414,6 +696,8 @@ mod tests {
         assert_eq!(report.killed, 0);
         assert_eq!(report.promoted, 1, "partition 0's leadership moves");
         assert_eq!(report.unreplicated, 0);
+        assert_eq!(report.lost_records, 0, "the follower was fully caught up");
+        assert_eq!(report.unclean_elections, 0);
         assert!(report.recovery_secs >= 0.0);
         // Partition 0 promoted to its follower (node 1), deterministically.
         assert_eq!(c.leader_node("t", 0).unwrap(), 1);
@@ -443,13 +727,15 @@ mod tests {
         .unwrap();
         c.produce("t", 0, 2, &[vec![1]]).unwrap();
         c.kill_broker(0).unwrap();
-        assert_eq!(c.degraded_partitions("t").unwrap(), 1);
-        // Quorum: degraded partition rejects produces...
+        assert_eq!(c.under_replicated("t").unwrap(), 1);
+        assert_eq!(c.below_min_insync("t").unwrap(), 1);
+        // Quorum: quorum-degraded partition rejects produces...
         let err = c.produce("t", 0, 2, &[vec![2]]).unwrap_err();
         assert!(err.to_string().contains("in-sync"), "{err}");
         // ...until a replacement broker restores the replica set.
         c.add_brokers(vec![3]);
-        assert_eq!(c.degraded_partitions("t").unwrap(), 0);
+        assert_eq!(c.under_replicated("t").unwrap(), 0);
+        assert_eq!(c.below_min_insync("t").unwrap(), 0);
         c.produce("t", 0, 2, &[vec![2]]).unwrap();
         assert_eq!(c.end_offset("t", 0).unwrap(), 2);
     }
@@ -459,7 +745,12 @@ mod tests {
         let c = cluster(2);
         c.create_topic_replicated("t", 1, ReplicationConfig::new(2)).unwrap();
         c.kill_broker(1).unwrap();
-        assert_eq!(c.degraded_partitions("t").unwrap(), 1);
+        assert_eq!(c.under_replicated("t").unwrap(), 1);
+        assert_eq!(
+            c.below_min_insync("t").unwrap(),
+            0,
+            "min_insync 1 is satisfied by the leader alone"
+        );
         c.produce("t", 0, 2, &[vec![9]]).unwrap();
         assert_eq!(c.end_offset("t", 0).unwrap(), 1);
     }
@@ -508,6 +799,175 @@ mod tests {
         assert_eq!(report.unreplicated, 2, "node 1 led partitions 1 and 3");
         for p in 0..4 {
             assert_eq!(c.leader_node("t", p).unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn follower_lag_shrinks_isr_and_catchup_expands_it() {
+        let c = cluster(2);
+        c.create_topic_replicated("t", 1, ReplicationConfig::new(2).with_replica_lag_max(2))
+            .unwrap();
+        c.inject_follower_lag("t", 1, 5).unwrap();
+        let batch: Vec<Vec<u8>> = (0..10).map(|i| vec![i as u8; 10]).collect();
+        c.produce("t", 0, 2, &batch).unwrap();
+        // The follower's watermark trails by the injected 5 records —
+        // past replica_lag_max 2, so it is ejected from the ISR.
+        assert_eq!(c.follower_gap("t", 0, 1).unwrap(), 5);
+        assert_eq!(c.in_sync_replicas("t", 0).unwrap(), vec![0]);
+        assert_eq!(c.under_replicated("t").unwrap(), 0, "the replica is alive, just slow");
+        // Clearing the lag + a heartbeat pass catches it up (billing
+        // the deferred bytes) and re-admits it to the ISR.
+        c.inject_follower_lag("t", 1, 0).unwrap();
+        let io0 = c.broker_io();
+        c.replication_heartbeat("t").unwrap();
+        let io1 = c.broker_io();
+        assert_eq!(io1[1].nic_in_bytes - io0[1].nic_in_bytes, 50, "5 deferred 10B records");
+        assert_eq!(c.follower_gap("t", 0, 1).unwrap(), 0);
+        assert_eq!(c.in_sync_replicas("t", 0).unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn quorum_acks_against_isr_not_replica_list() {
+        let c = cluster(2);
+        c.create_topic_replicated(
+            "t",
+            1,
+            ReplicationConfig::new(2).with_ack_mode(AckMode::Quorum).with_min_insync(2),
+        )
+        .unwrap();
+        // replica_lag_max 0 (strict): a follower the lag model marks
+        // slow is ejected on the next replication pass — including the
+        // pre-append pass that gates the produce itself, so no record
+        // is ever acked against a quorum the slow follower cannot
+        // honor.
+        c.inject_follower_lag("t", 1, 1).unwrap();
+        let err = c.produce("t", 0, 2, &[vec![1]]).unwrap_err();
+        assert!(err.to_string().contains("in-sync"), "{err}");
+        assert_eq!(c.in_sync_replicas("t", 0).unwrap(), vec![0]);
+        // Both replicas are alive — the static list is full — but the
+        // ISR is below min_insync, so quorum produces are rejected.
+        assert_eq!(c.under_replicated("t").unwrap(), 0);
+        assert_eq!(c.below_min_insync("t").unwrap(), 1);
+        // Once the follower recovers, the produce-path heartbeat
+        // re-admits it and the same produce succeeds.
+        c.inject_follower_lag("t", 1, 0).unwrap();
+        c.produce("t", 0, 2, &[vec![1]]).unwrap();
+        assert_eq!(c.end_offset("t", 0).unwrap(), 1, "only the re-sent produce landed");
+        assert_eq!(c.in_sync_replicas("t", 0).unwrap(), vec![0, 1]);
+        assert_eq!(c.below_min_insync("t").unwrap(), 0);
+    }
+
+    #[test]
+    fn ack_modes_trade_produce_cost_for_durability_under_follower_lag() {
+        // The §acceptance trade-off, pinned at the broker level with
+        // charged replication bytes as the produce-latency proxy (all
+        // throttles are unthrottled, so charged-bytes-on-the-ack-path
+        // is the deterministic stand-in for produce latency).
+        let total_bytes = 20 * 100u64;
+
+        // Quorum: the lagging-but-in-sync follower is driven to full
+        // catch-up on every ack (latency rises with lag) — and failover
+        // therefore loses nothing.
+        let q = cluster(2);
+        q.create_topic_replicated(
+            "t",
+            1,
+            ReplicationConfig::new(2)
+                .with_ack_mode(AckMode::Quorum)
+                .with_min_insync(2)
+                .with_replica_lag_max(10),
+        )
+        .unwrap();
+        q.inject_follower_lag("t", 1, 3).unwrap();
+        let io0 = q.broker_io();
+        for i in 0..20u8 {
+            q.produce("t", 0, 2, &[vec![i; 100]]).unwrap();
+        }
+        let io1 = q.broker_io();
+        assert_eq!(
+            io1[1].nic_in_bytes - io0[1].nic_in_bytes,
+            total_bytes,
+            "quorum bills every replicated byte synchronously on the ack path"
+        );
+        let report = q.kill_broker(0).unwrap();
+        assert_eq!(report.lost_records, 0, "no acked record is lost under quorum");
+        assert_eq!(report.unclean_elections, 0);
+        let recs = q.fetch("t", 0, 0, usize::MAX, 1, Duration::from_millis(10)).unwrap();
+        assert_eq!(recs.len(), 20);
+
+        // Leader: the ack path stays flat (the follower's catch-up is
+        // deferred, capped by its injected lag) — and killing the
+        // leader records the follower's gap as lost on the timeline.
+        let l = cluster(2);
+        l.create_topic_replicated(
+            "t",
+            1,
+            ReplicationConfig::new(2).with_replica_lag_max(10),
+        )
+        .unwrap();
+        let timeline = Arc::new(ScalingTimeline::new());
+        l.add_scaling_timeline(timeline.clone());
+        l.inject_follower_lag("t", 1, 3).unwrap();
+        let io0 = l.broker_io();
+        for i in 0..20u8 {
+            l.produce("t", 0, 2, &[vec![i; 100]]).unwrap();
+        }
+        let io1 = l.broker_io();
+        assert_eq!(
+            io1[1].nic_in_bytes - io0[1].nic_in_bytes,
+            total_bytes - 300,
+            "leader acks defer the lagging follower's last 3 records"
+        );
+        let report = l.kill_broker(0).unwrap();
+        assert_eq!(report.lost_records, 3, "the follower's gap is charged as lost");
+        let ev = &timeline.events()[0];
+        assert_eq!(ev.lost_records, 3, "unclean-election loss lands on the timeline");
+        let queued = l.take_failover_events();
+        assert_eq!(queued[0].lost_records, 3);
+    }
+
+    #[test]
+    fn coordinator_placement_stable_across_unrelated_churn() {
+        // Regression for the `hash % alive_brokers.len()` coordinator
+        // placement: any membership change remapped nearly every group.
+        // Jump-hashing over the stable first-seen ring pins unrelated
+        // groups in place exactly.
+        let c = cluster(16);
+        c.create_topic_replicated("t", 2, ReplicationConfig::new(2)).unwrap();
+        let groups: Vec<String> = (0..100).map(|i| format!("group-{i}")).collect();
+        let before: Vec<NodeId> = groups.iter().map(|g| c.group_coordinator(g)).collect();
+        // Kill the broker coordinating the fewest groups (<= 100/16 by
+        // pigeonhole, so >= 90% of groups must stay put).
+        let victim = (0..16)
+            .min_by_key(|b| before.iter().filter(|n| *n == b).count())
+            .unwrap();
+        c.kill_broker(victim).unwrap();
+        let mut moved = 0;
+        for (g, b) in groups.iter().zip(&before) {
+            let after = c.group_coordinator(g);
+            if *b == victim {
+                assert_ne!(after, victim, "dead coordinator must move");
+                moved += 1;
+            } else {
+                assert_eq!(after, *b, "{g}: unrelated coordinator moved");
+            }
+        }
+        assert!(moved * 10 <= groups.len(), "at most 1/16 < 10% of groups remap");
+        // Re-adding the node restores its ring slot: every displaced
+        // group returns home, and nothing else moves.
+        c.add_brokers(vec![victim]);
+        let after: Vec<NodeId> = groups.iter().map(|g| c.group_coordinator(g)).collect();
+        assert_eq!(after, before);
+        // A brand-new broker appends a ring slot; jump hashing moves
+        // only the ~1/17 of groups that land on the new slot.
+        c.add_brokers(vec![99]);
+        let grown: Vec<NodeId> = groups.iter().map(|g| c.group_coordinator(g)).collect();
+        let remapped = grown.iter().zip(&before).filter(|(a, b)| a != b).count();
+        assert!(remapped * 5 <= groups.len(), "growth remaps only toward the new slot");
+        for (a, b) in grown.iter().zip(&before) {
+            if a != b {
+                assert_eq!(*a, 99, "growth moves groups only onto the new broker");
+            }
         }
     }
 }

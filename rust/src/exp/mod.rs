@@ -239,6 +239,8 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
                 max_partitions: 128,
                 replication_factor: 1,
                 node_death_window: None,
+                ack_mode: crate::broker::AckMode::Leader,
+                replica_lag_records: 0.0,
             };
             let mut policy = ThresholdPolicy::new(600, 60)
                 .with_sustain(1)
@@ -273,7 +275,8 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
                 .push("broker_nodes", r.broker_nodes)
                 .push("lag_msgs", format!("{:.0}", r.lag))
                 .push("decision", r.decision)
-                .push("behind", u8::from(r.behind)),
+                .push("behind", u8::from(r.behind))
+                .push("lost_msgs", format!("{:.0}", r.lost)),
         );
     }
     rec

@@ -612,6 +612,8 @@ partitions = 2
 factor = 2
 ack_mode = "quorum"
 min_insync = 2
+replica_lag_max = 4
+follower_fetch = true
 
 [[sources]]
 name = "gen"

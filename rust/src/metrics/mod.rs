@@ -235,6 +235,10 @@ pub struct ScalingEvent {
     /// Modeled cost of this plan step (lead seconds until the bought
     /// capacity is usable; 0 for shrinks and legacy events).
     pub cost_secs: f64,
+    /// Acked records lost by this action — nonzero only for `Failover`
+    /// events whose promotion was unclean (the elected replica trailed
+    /// the dead leader's high watermark).
+    pub lost_records: u64,
 }
 
 /// Thread-safe, append-only record of scaling events (share via `Arc`).
@@ -290,7 +294,8 @@ impl ScalingTimeline {
                     .push("partitions", e.partitions)
                     .push("policy", &e.policy)
                     .push("reaction_s", format!("{:.4}", e.reaction_secs))
-                    .push("cost_s", format!("{:.1}", e.cost_secs)),
+                    .push("cost_s", format!("{:.1}", e.cost_secs))
+                    .push("lost_records", e.lost_records),
             );
         }
         rec
@@ -488,6 +493,7 @@ mod tests {
             policy: "threshold".into(),
             reaction_secs: 0.05,
             cost_secs: 16.0,
+            lost_records: 0,
         });
         tl.record(ScalingEvent {
             at_secs: 4.0,
@@ -499,6 +505,7 @@ mod tests {
             policy: "threshold".into(),
             reaction_secs: 0.0,
             cost_secs: 0.0,
+            lost_records: 0,
         });
         tl.record(ScalingEvent {
             at_secs: 5.0,
@@ -510,6 +517,7 @@ mod tests {
             policy: "partition-elastic".into(),
             reaction_secs: 0.0,
             cost_secs: 0.0,
+            lost_records: 0,
         });
         assert_eq!(tl.len(), 3);
         assert_eq!(tl.count(ScalingAction::Up), 1);

@@ -23,6 +23,7 @@
 //! testable deterministically.
 
 use crate::autoscale::{PlanStep, Planner, ScalingIntent, ScalingPolicy, SignalSnapshot};
+use crate::broker::AckMode;
 use crate::util::RateSchedule;
 
 use super::cost::CostModel;
@@ -68,6 +69,16 @@ pub struct ElasticScenario {
     /// replacement broker lands, which is exactly the window the
     /// planner's replication-repair branch exists to close.
     pub node_death_window: Option<usize>,
+    /// Ack discipline the modeled producers run (the `acks=` analog):
+    /// under [`AckMode::Quorum`] a failover loses nothing because every
+    /// ack waited for the in-sync followers; under [`AckMode::Leader`]
+    /// a dead leader's async followers trail by `replica_lag_records`,
+    /// and that tail is lost on promotion (unclean accounting).
+    pub ack_mode: AckMode,
+    /// Modeled steady-state follower lag, records per partition — how
+    /// far an async follower trails its leader at the moment the death
+    /// strikes.  Only meaningful with `replication_factor > 1`.
+    pub replica_lag_records: f64,
 }
 
 impl ElasticScenario {
@@ -97,6 +108,8 @@ impl ElasticScenario {
             max_partitions: 128,
             replication_factor: 1,
             node_death_window: None,
+            ack_mode: AckMode::Leader,
+            replica_lag_records: 0.0,
         }
     }
 }
@@ -123,6 +136,9 @@ pub struct ElasticWindow {
     pub decision: i64,
     /// Did demand outrun capacity this window?
     pub behind: bool,
+    /// Acked records lost this window (nonzero only at a failover
+    /// whose promoted followers trailed the dead leader).
+    pub lost: f64,
 }
 
 /// Aggregate result of an elastic run.
@@ -149,6 +165,9 @@ pub struct ElasticSimResult {
     /// Windows during which replication ran degraded (a dead replica
     /// not yet replaced).
     pub degraded_windows: usize,
+    /// Acked records lost across every injected failover (the
+    /// durability cost of `Leader` acks; zero under `Quorum`).
+    pub lost_records: f64,
     /// Largest partition count reached.
     pub peak_partitions: usize,
     pub final_lag: f64,
@@ -219,6 +238,7 @@ impl ElasticSim {
         let mut deferrals = 0;
         let mut failovers = 0;
         let mut degraded_windows = 0;
+        let mut lost_records = 0.0f64;
         // Partitions currently running with fewer in-sync replicas than
         // the scenario's factor (nonzero only after a node death).
         let mut degraded = 0usize;
@@ -262,19 +282,40 @@ impl ElasticSim {
             // affected partitions fail over to surviving replicas;
             // until a replacement lands they run with fewer in-sync
             // replicas than the factor.
+            let mut lost = 0.0f64;
             if sc.node_death_window == Some(w) && broker_nodes > 1 {
                 let before = broker_nodes;
                 broker_nodes -= 1;
                 failovers += 1;
+                // The dead node led ~1/before of the partitions; what
+                // happens to their tail depends on the ack discipline.
+                let led = n_partitions.div_ceil(before).min(n_partitions);
                 degraded = if sc.replication_factor > 1 {
                     // Each node hosts ~factor/before of the replica
                     // slots; those partitions lost one replica.
+                    lost = match sc.ack_mode {
+                        // Quorum acks waited for the in-sync
+                        // followers, so the promoted replica holds
+                        // every acked record.
+                        AckMode::Quorum => 0.0,
+                        // Leader acks returned before the async
+                        // followers applied: each promoted follower
+                        // trails by the modeled lag, and that tail is
+                        // gone (the real tier's unclean-election
+                        // accounting, in virtual time).
+                        AckMode::Leader => sc.replica_lag_records * led as f64,
+                    };
                     (n_partitions * sc.replication_factor).div_ceil(before).min(n_partitions)
                 } else {
-                    // Unreplicated: every partition is exposed until
-                    // the tier is rebuilt.
+                    // Unreplicated: the dead node's partitions have no
+                    // follower to promote — their whole backlog is
+                    // exposed regardless of ack mode.  (Accounting
+                    // only: the backlog itself stays, modeling sources
+                    // replaying into the rebuilt tier.)
+                    lost = backlog.iter().take(led).sum();
                     n_partitions
                 };
+                lost_records += lost;
             }
             if degraded > 0 {
                 degraded_windows += 1;
@@ -386,8 +427,11 @@ impl ElasticSim {
                 broker_disk_util: 0.0,
                 // Like the node counts above, a replacement broker on
                 // its way counts as healing so the planner's repair
-                // branch doesn't buy another node every window.
-                degraded_partitions: if pending_broker.is_empty() { degraded } else { 0 },
+                // branch doesn't buy another node every window.  The
+                // sim models factor == min_insync, so a dead replica is
+                // both under-replicated and quorum-degraded.
+                under_replicated: if pending_broker.is_empty() { degraded } else { 0 },
+                below_min_insync: if pending_broker.is_empty() { degraded } else { 0 },
             };
             prev_lag = lag;
 
@@ -497,6 +541,7 @@ impl ElasticSim {
                 lag,
                 decision,
                 behind,
+                lost,
             });
         }
 
@@ -511,6 +556,7 @@ impl ElasticSim {
             deferrals,
             failovers,
             degraded_windows,
+            lost_records,
             peak_partitions,
             final_lag: prev_lag,
             behind_windows,
@@ -554,6 +600,8 @@ mod tests {
             max_partitions: 128,
             replication_factor: 1,
             node_death_window: None,
+            ack_mode: AckMode::Leader,
+            replica_lag_records: 0.0,
         }
     }
 
@@ -832,6 +880,43 @@ mod tests {
             unplanned.degraded_windows,
             res.degraded_windows
         );
+    }
+
+    /// The durability side of the ack-mode trade, in virtual time:
+    /// with async followers trailing by a modeled lag, killing a
+    /// broker under `Leader` acks loses exactly the promoted
+    /// followers' gap, while `Quorum` acks lose nothing — mirroring
+    /// the real tier's unclean-election accounting deterministically.
+    #[test]
+    fn ack_mode_trades_durability_on_node_death() {
+        let sim = sim();
+        let mut sc = burst_scenario();
+        sc.replication_factor = 2;
+        sc.node_death_window = Some(5);
+        sc.replica_lag_records = 50.0;
+
+        sc.ack_mode = AckMode::Leader;
+        let leader = sim.run(&sc, &mut threshold());
+        assert_eq!(leader.failovers, 1);
+        // 48 partitions over 4 brokers: the victim led 12, and each
+        // promoted follower trailed by the modeled 50 records.
+        assert_eq!(leader.lost_records, 600.0);
+        assert_eq!(leader.rows[5].lost, 600.0);
+        assert!(leader.rows.iter().enumerate().all(|(w, r)| w == 5 || r.lost == 0.0));
+
+        sc.ack_mode = AckMode::Quorum;
+        let quorum = sim.run(&sc, &mut threshold());
+        assert_eq!(quorum.failovers, 1);
+        assert_eq!(quorum.lost_records, 0.0);
+        assert!(quorum.rows.iter().all(|r| r.lost == 0.0));
+
+        // Unreplicated, the dead node's partitions have no follower:
+        // their whole mid-burst backlog is exposed under either mode.
+        sc.replication_factor = 1;
+        sc.node_death_window = Some(21); // one window into the burst
+        let exposed = sim.run(&sc, &mut threshold());
+        assert_eq!(exposed.failovers, 1);
+        assert!(exposed.lost_records > 0.0, "no backlog exposed");
     }
 
     #[test]

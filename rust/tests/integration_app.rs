@@ -12,7 +12,7 @@ use pilot_streaming::app::{
     CountingProcessor, DataSource, SourceSpec, SourceStream, StageSpec, StreamProcessor,
     StreamingApp,
 };
-use pilot_streaming::broker::Record;
+use pilot_streaming::broker::{Consumer, ConsumerConfig, Record};
 use pilot_streaming::cluster::Machine;
 use pilot_streaming::engine::TaskContext;
 use pilot_streaming::miniapp::{MassConfig, SourceKind};
@@ -155,6 +155,47 @@ fn drain_and_stop_races_an_inflight_burst_without_loss() {
     let handle = app.launch(&service).unwrap();
     // Let some of the burst flow, then stop mid-flight.
     std::thread::sleep(Duration::from_millis(300));
+
+    // Regression (commit lag-gauge refresh): a drain loop that commits
+    // and then samples `lag()` must see lag recomputed against the live
+    // backlog — `commit` used to leave the gauge at its last refresh,
+    // so an observer here would have read the join-time value forever.
+    // An independent audit group watches the same racing topic; no poll
+    // happens between the join and the commit, so only the commit-path
+    // refresh can move the gauge.
+    let cluster = handle.cluster().clone();
+    let audit = Consumer::join(
+        cluster.clone(),
+        "burst",
+        "audit",
+        0,
+        ConsumerConfig {
+            fetch_timeout: Duration::from_millis(1),
+            auto_commit: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let at_join = audit.lag();
+    // Wait (bounded) until the still-running source lands more records
+    // past the join-time snapshot.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while cluster.group_lag("audit", "burst").unwrap() <= at_join
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let floor = cluster.group_lag("audit", "burst").unwrap();
+    assert!(floor > at_join, "source kept producing under the audit group");
+    audit.commit();
+    assert!(
+        audit.lag() >= floor,
+        "commit must recompute the lag gauge ({} >= {floor}); it used to stay at the \
+         join-time {at_join}",
+        audit.lag()
+    );
+    drop(audit);
+
     let report = handle.drain_and_stop().unwrap();
 
     assert!(report.drained, "drain timed out");

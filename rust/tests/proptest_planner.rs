@@ -87,8 +87,11 @@ fn random_snapshot(rng: &mut Rng) -> SignalSnapshot {
         broker_nic_util: rng.range_f64(0.0, 1.2),
         broker_disk_util: rng.range_f64(0.0, 1.2),
         // Occasionally the tier runs degraded (a dead replica awaiting
-        // replacement), so repair plans flow through the invariants too.
-        degraded_partitions: if rng.below(5) == 0 { rng.below(16) } else { 0 },
+        // replacement), so repair plans flow through the invariants too
+        // — sometimes with quorum still healthy (under-replicated
+        // only), sometimes quorum-degraded (drives repair).
+        under_replicated: if rng.below(4) == 0 { rng.below(16) } else { 0 },
+        below_min_insync: if rng.below(5) == 0 { rng.below(16) } else { 0 },
     }
 }
 

@@ -13,19 +13,30 @@
 //! * **(c) non-negative lag** — `group_progress` never reports a
 //!   committed offset past an end offset, at every observation point.
 //!
+//! The chaos variants layer a replicated broker tier on top: a random
+//! broker kill mid-interleaving (factor-2 failover), and — with the
+//! async-replication lag model in play — random follower-lag injection
+//! driving ISR shrink/expand churn.  Under [`AckMode::Quorum`] the
+//! quorum gate may *reject* produces but must never lose an acked
+//! record to the kill; under [`AckMode::Leader`] an unclean election
+//! must lose *exactly* the follower gap the public lag gauges reported
+//! the instant before the kill.
+//!
 //! Like `proptest_invariants.rs`, this is a seeded-random harness (the
 //! offline dependency set has no `proptest`): failures print the seed
 //! for replay, and `PROPTEST_CASES` scales the case count (the CI
 //! `proptest` job runs these suites deeper than the default
 //! `cargo test` pass).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use pilot_streaming::broker::{
-    BrokerCluster, Consumer, ConsumerConfig, PartitionRecord, Partitioner, Producer,
+    AckMode, BrokerCluster, Consumer, ConsumerConfig, PartitionRecord, Partitioner, Producer,
     ProducerConfig, ReplicationConfig,
 };
 use pilot_streaming::cluster::Machine;
+use pilot_streaming::metrics::{ScalingAction, ScalingTimeline};
 use pilot_streaming::util::Rng;
 
 /// Case count: `PROPTEST_CASES` env override, else the suite default.
@@ -333,6 +344,364 @@ fn prop_failover_mid_repartition_keeps_acked_records_exactly_once() {
             "exactly-once violated across failover: {consumed_total} of {produced_total}"
         );
         assert_eq!(consumed_seq, produced_seq, "per-key completeness across failover");
+        assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
+    });
+}
+
+/// ISR-churn chaos under [`AckMode::Quorum`]: random follower-lag
+/// injection interleaves with produces, resizes, consumer churn and
+/// one broker kill over a factor-2 / `min_insync` 2 topic.  The quorum
+/// gate may *reject* produces while a slow follower is out of the ISR
+/// — rejection is the contract — but it must never lose a record it
+/// acked: at kill time every follower watermark equals its leader's
+/// end offset (zero gap, on every partition live or retired), the
+/// failover reports zero lost records, and the drain observes every
+/// acked record exactly once, in per-key order.
+#[test]
+fn prop_isr_churn_quorum_rejects_rather_than_lose() {
+    const LAGS: [u64; 5] = [0, 1, 2, 5, 50];
+    check("isr-churn-quorum-durability", 12, |rng| {
+        let n_keys = 2 + rng.below(6);
+        let machine = Machine::unthrottled(6);
+        let cluster = BrokerCluster::new(machine, vec![0, 1, 2]);
+        cluster
+            .create_topic_replicated(
+                "t",
+                1 + rng.below(4),
+                ReplicationConfig::new(2)
+                    .with_ack_mode(AckMode::Quorum)
+                    .with_min_insync(2)
+                    .with_replica_lag_max(2),
+            )
+            .unwrap();
+
+        // batch_bytes 1: every send flushes exactly its own record, so
+        // a quorum rejection drops that record alone — its per-key seq
+        // was never acked and is reused by the next send for that key.
+        let mut producer = Producer::new(
+            cluster.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: 1,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut consumers =
+            vec![Consumer::join(cluster.clone(), "t", "g", 2, consumer_config()).unwrap()];
+
+        let mut produced_seq = vec![0u32; n_keys];
+        let mut consumed_seq = vec![0u32; n_keys];
+        let mut produced_total = 0usize;
+        let mut consumed_total = 0usize;
+        let mut rejected_total = 0usize;
+
+        let mut killed = false;
+        let steps = 10 + rng.below(25);
+        for step in 0..steps {
+            let kill_at = !killed && (rng.below(steps - step) == 0 || step == steps - 1);
+            if kill_at {
+                // The quorum durability invariant, at its sharpest
+                // right before the kill: every acked record is fully
+                // applied by every follower, so no partition — live or
+                // retired — has a watermark gap on any node.  (A gap
+                // here would become `lost_records` below.)
+                let nodes = cluster.broker_nodes();
+                for p in 0..cluster.total_partitions("t").unwrap() {
+                    for &n in &nodes {
+                        assert_eq!(
+                            cluster.follower_gap("t", p, n).unwrap(),
+                            0,
+                            "quorum left partition {p} partially applied on node {n}"
+                        );
+                    }
+                }
+                let victim = nodes[rng.below(nodes.len())];
+                let report = cluster.kill_broker(victim).unwrap();
+                assert_eq!(report.unreplicated, 0, "factor-2 partition had no follower");
+                assert_eq!(
+                    report.lost_records, 0,
+                    "quorum acked a record a promoted follower never applied"
+                );
+                killed = true;
+                continue;
+            }
+            match rng.below(12) {
+                // Produce a keyed burst.  Under Quorum a send is either
+                // acked (count it) or rejected by the quorum gate while
+                // the ISR is short (drop it; never a silent loss).
+                0..=4 => {
+                    for _ in 0..1 + rng.below(8) {
+                        let k = rng.below(n_keys);
+                        match producer.send(Some(&[k as u8]), encode(k, produced_seq[k])) {
+                            Ok(_) => {
+                                produced_seq[k] += 1;
+                                produced_total += 1;
+                            }
+                            Err(e) => {
+                                assert!(
+                                    e.to_string().contains("in-sync"),
+                                    "only the quorum gate may reject a produce: {e}"
+                                );
+                                rejected_total += 1;
+                            }
+                        }
+                    }
+                }
+                5 | 6 => {
+                    cluster.repartition_topic("t", 1 + rng.below(8)).unwrap();
+                }
+                7 => {
+                    if consumers.len() > 1 && rng.below(2) == 0 {
+                        let idx = rng.below(consumers.len());
+                        consumers.remove(idx);
+                    } else if consumers.len() < 3 {
+                        consumers.push(
+                            Consumer::join(cluster.clone(), "t", "g", 3, consumer_config())
+                                .unwrap(),
+                        );
+                    }
+                }
+                // ISR churn: re-model a random broker's NIC/disk as
+                // slower or healthy again; a heartbeat sometimes lets
+                // followers catch up (and re-enter the ISR) between
+                // produces.
+                8 | 9 => {
+                    let nodes = cluster.broker_nodes();
+                    let node = nodes[rng.below(nodes.len())];
+                    cluster
+                        .inject_follower_lag("t", node, LAGS[rng.below(LAGS.len())])
+                        .unwrap();
+                    if rng.below(2) == 0 {
+                        cluster.replication_heartbeat("t").unwrap();
+                    }
+                }
+                _ => {
+                    for _ in 0..1 + rng.below(4) {
+                        let idx = rng.below(consumers.len());
+                        let recs = consumers[idx].poll().unwrap();
+                        observe(recs, &mut consumed_seq, &mut consumed_total);
+                    }
+                }
+            }
+            for (end, committed) in cluster.group_progress("g", "t").unwrap() {
+                assert!(
+                    committed <= end,
+                    "negative lag: committed {committed} > end {end}"
+                );
+            }
+        }
+        assert!(killed, "the schedule above always kills one broker");
+
+        let mut idle_rounds = 0;
+        while consumed_total < produced_total && idle_rounds < 300 {
+            let mut progressed = false;
+            for c in consumers.iter_mut() {
+                let recs = c.poll().unwrap();
+                if !recs.is_empty() {
+                    progressed = true;
+                }
+                observe(recs, &mut consumed_seq, &mut consumed_total);
+            }
+            if progressed {
+                idle_rounds = 0;
+            } else {
+                idle_rounds += 1;
+            }
+        }
+
+        assert_eq!(
+            consumed_total, produced_total,
+            "exactly-once violated across ISR churn + failover: {consumed_total} consumed \
+             of {produced_total} acked ({rejected_total} rejected by the quorum gate)"
+        );
+        assert_eq!(consumed_seq, produced_seq, "per-key completeness across ISR churn");
+        assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
+    });
+}
+
+/// Unclean-election accounting under [`AckMode::Leader`]: followers
+/// trail by their injected lag, and killing a leader promotes the
+/// (possibly out-of-ISR) follower anyway — losing exactly the records
+/// above its watermark.  The kill report, the attached
+/// [`ScalingTimeline`], and the queued failover event must all agree
+/// with a prediction computed from the *public* lag gauges
+/// (`leader_node` + `follower_gap` + `in_sync_replicas`) the instant
+/// before the kill.  The loss is an accounting construct — the shared
+/// slabs keep every byte readable in-process — so exactly-once still
+/// holds for the drain; the timeline is where the durability debt
+/// surfaces.
+#[test]
+fn prop_unclean_election_loses_exactly_the_reported_gap() {
+    const LAGS: [u64; 4] = [0, 1, 5, 50];
+    check("unclean-election-accounting", 12, |rng| {
+        let n_keys = 2 + rng.below(6);
+        let machine = Machine::unthrottled(6);
+        let cluster = BrokerCluster::new(machine, vec![0, 1, 2]);
+        cluster
+            .create_topic_replicated(
+                "t",
+                1 + rng.below(4),
+                ReplicationConfig::new(2).with_replica_lag_max(2),
+            )
+            .unwrap();
+        let timeline = Arc::new(ScalingTimeline::new());
+        cluster.add_scaling_timeline(timeline.clone());
+
+        let mut producer = Producer::new(
+            cluster.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: 1,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut consumers =
+            vec![Consumer::join(cluster.clone(), "t", "g", 2, consumer_config()).unwrap()];
+
+        let mut produced_seq = vec![0u32; n_keys];
+        let mut consumed_seq = vec![0u32; n_keys];
+        let mut produced_total = 0usize;
+        let mut consumed_total = 0usize;
+
+        let mut killed = false;
+        let steps = 10 + rng.below(25);
+        for step in 0..steps {
+            let kill_at = !killed && (rng.below(steps - step) == 0 || step == steps - 1);
+            if kill_at {
+                let alive = cluster.broker_nodes();
+                let victim = alive[rng.below(alive.len())];
+                // Predict the loss from the public gauges: for every
+                // partition the victim leads (retired suffixes
+                // included — the failover inspects them too), the sole
+                // factor-2 follower's gap is what an unclean promotion
+                // abandons, and that promotion is unclean exactly when
+                // the follower is out of the ISR.
+                let total = cluster.total_partitions("t").unwrap();
+                let mut expected_lost = 0u64;
+                let mut expected_unclean = 0usize;
+                for p in 0..total {
+                    if cluster.leader_node("t", p).unwrap() != victim {
+                        continue;
+                    }
+                    for &n in &alive {
+                        if n != victim {
+                            expected_lost += cluster.follower_gap("t", p, n).unwrap();
+                        }
+                    }
+                    if cluster.in_sync_replicas("t", p).unwrap().len() < 2 {
+                        expected_unclean += 1;
+                    }
+                }
+                let report = cluster.kill_broker(victim).unwrap();
+                assert_eq!(report.unreplicated, 0, "factor-2 partition had no follower");
+                assert_eq!(
+                    report.lost_records, expected_lost,
+                    "failover must lose exactly the follower gaps the gauges reported"
+                );
+                assert_eq!(
+                    report.unclean_elections, expected_unclean,
+                    "unclean elections are exactly the out-of-ISR promotions"
+                );
+                // The same number lands on the timeline and on the
+                // queued event the autoscale loop drains.
+                let events = timeline.events();
+                let fail = events
+                    .iter()
+                    .rev()
+                    .find(|e| matches!(e.action, ScalingAction::Failover))
+                    .expect("kill_broker records a Failover event");
+                assert_eq!(fail.lost_records, expected_lost);
+                let queued = cluster.take_failover_events();
+                assert_eq!(queued.len(), 1);
+                assert_eq!(queued[0].killed, victim);
+                assert_eq!(queued[0].lost_records, expected_lost);
+                killed = true;
+                continue;
+            }
+            match rng.below(12) {
+                // Leader acks never consult the ISR: sends always land.
+                0..=4 => {
+                    for _ in 0..1 + rng.below(8) {
+                        let k = rng.below(n_keys);
+                        let seq = produced_seq[k];
+                        produced_seq[k] += 1;
+                        producer.send(Some(&[k as u8]), encode(k, seq)).unwrap();
+                        produced_total += 1;
+                    }
+                }
+                5 | 6 => {
+                    cluster.repartition_topic("t", 1 + rng.below(8)).unwrap();
+                }
+                7 => {
+                    if consumers.len() > 1 && rng.below(2) == 0 {
+                        let idx = rng.below(consumers.len());
+                        consumers.remove(idx);
+                    } else if consumers.len() < 3 {
+                        consumers.push(
+                            Consumer::join(cluster.clone(), "t", "g", 3, consumer_config())
+                                .unwrap(),
+                        );
+                    }
+                }
+                8 | 9 => {
+                    let nodes = cluster.broker_nodes();
+                    let node = nodes[rng.below(nodes.len())];
+                    cluster
+                        .inject_follower_lag("t", node, LAGS[rng.below(LAGS.len())])
+                        .unwrap();
+                    if rng.below(2) == 0 {
+                        cluster.replication_heartbeat("t").unwrap();
+                    }
+                }
+                _ => {
+                    for _ in 0..1 + rng.below(4) {
+                        let idx = rng.below(consumers.len());
+                        let recs = consumers[idx].poll().unwrap();
+                        observe(recs, &mut consumed_seq, &mut consumed_total);
+                    }
+                }
+            }
+            for (end, committed) in cluster.group_progress("g", "t").unwrap() {
+                assert!(
+                    committed <= end,
+                    "negative lag: committed {committed} > end {end}"
+                );
+            }
+        }
+        assert!(killed, "the schedule above always kills one broker");
+
+        producer.flush().unwrap();
+        let mut idle_rounds = 0;
+        while consumed_total < produced_total && idle_rounds < 300 {
+            let mut progressed = false;
+            for c in consumers.iter_mut() {
+                let recs = c.poll().unwrap();
+                if !recs.is_empty() {
+                    progressed = true;
+                }
+                observe(recs, &mut consumed_seq, &mut consumed_total);
+            }
+            if progressed {
+                idle_rounds = 0;
+            } else {
+                idle_rounds += 1;
+            }
+        }
+
+        // The in-process model keeps "lost" records readable (the
+        // accounting, not the bytes, is what an unclean election
+        // burns), so exactly-once still holds end to end.
+        assert_eq!(
+            consumed_total, produced_total,
+            "exactly-once violated: {consumed_total} of {produced_total}"
+        );
+        assert_eq!(consumed_seq, produced_seq, "per-key completeness");
         assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
     });
 }
