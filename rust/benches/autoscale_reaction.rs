@@ -49,6 +49,7 @@ fn snapshot(lag: u64, partitions: usize) -> SignalSnapshot {
         broker_disk_util: 0.4,
         under_replicated: 0,
         below_min_insync: 0,
+        shard_queue_depths: Vec::new(),
     }
 }
 

@@ -78,6 +78,14 @@ pub struct SignalSnapshot {
     /// first-class signal and answers with a broker replacement step
     /// even when lag alone says Hold.
     pub below_min_insync: usize,
+    /// Fetchers parked on each broker data-plane shard's doorbell at
+    /// sample time, indexed by shard id
+    /// ([`crate::broker::BrokerCluster::shard_stats`]).  A planner
+    /// signal: one persistently deep shard next to idle siblings means
+    /// partitions hash unevenly onto shards (consumers pile up waiting
+    /// on one core) — repartitioning spreads the keys, where adding
+    /// nodes would not help.
+    pub shard_queue_depths: Vec<u64>,
 }
 
 impl SignalSnapshot {
@@ -208,6 +216,12 @@ impl SignalProbe {
         let partitions = self.cluster.partition_count(&self.topic)?;
         let under_replicated = self.cluster.under_replicated(&self.topic)?;
         let below_min_insync = self.cluster.below_min_insync(&self.topic)?;
+        let shard_queue_depths: Vec<u64> = self
+            .cluster
+            .shard_stats()
+            .iter()
+            .map(|s| s.parked_fetchers)
+            .collect();
         let lag: u64 = partition_backlog.iter().sum();
 
         let dt = (t_secs - self.prev_t).max(1e-6);
@@ -254,6 +268,7 @@ impl SignalProbe {
             broker_disk_util,
             under_replicated,
             below_min_insync,
+            shard_queue_depths,
         })
     }
 }
@@ -274,6 +289,10 @@ mod tests {
         assert_eq!(s.produce_rate, 0.0);
         assert_eq!(s.min_nodes, 1);
         assert_eq!(s.max_nodes, 4);
+        // The per-shard queue-depth signal covers every data-plane
+        // shard, and an idle cluster parks no fetchers.
+        assert_eq!(s.shard_queue_depths.len(), cluster.n_shards());
+        assert!(s.shard_queue_depths.iter().all(|d| *d == 0));
 
         // Produce 10 messages in one "second" of probe time.
         for i in 0..10u8 {

@@ -16,10 +16,18 @@
 //! Within a partition, appends serialize on the log's narrow writer
 //! lock while fetches read a published segment snapshot, so readers
 //! never contend with producers.
+//!
+//! Sharded data plane (§Perf L4, see [`super::shard`]): every partition
+//! is owned by exactly one of N thread-per-core shards
+//! ([`super::shard::shard_of`] over the jump-consistent hash), and all
+//! fetch wakeups go through the owning shard's coalesced doorbell —
+//! producers ring once per append batch, fetchers park per shard — so
+//! produce/fetch synchronization never bounces cache lines across
+//! every core the way the old per-partition `Condvar` did.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use crate::cluster::{Machine, NodeId};
@@ -30,6 +38,7 @@ use crate::util::ArcCell;
 use super::log::{LogConfig, PartitionLog, Record};
 use super::repartition::EpochTransition;
 use super::replication::{AckMode, FailoverEvent, ReplicaSet, ReplicationConfig};
+use super::shard::{default_shards, Shard, ShardSet, ShardStats, QUIESCE_SLICE, QUIESCE_WAIT_MAX};
 
 /// One partition: leader broker node + the log + fetch wakeups.
 pub struct Partition {
@@ -38,11 +47,10 @@ pub struct Partition {
     /// rebalance).
     leader: AtomicUsize,
     pub(super) log: PartitionLog,
-    /// Companion mutex for `data_arrived` — held only around the
-    /// blocked-fetch wait and the producer's wakeup, never across log
-    /// I/O (the log itself is lock-split; see [`super::log`]).
-    wait_lock: Mutex<()>,
-    data_arrived: Condvar,
+    /// The data-plane shard that owns this partition: its doorbell is
+    /// where this partition's fetchers park and its producers ring —
+    /// see [`super::shard`].
+    pub(super) shard: Arc<Shard>,
     /// Topic epoch this partition's next append belongs to.  Bumped
     /// under the log's writer lock when a repartition seals the log, so
     /// a produce that routed under an older partition-set epoch is
@@ -63,17 +71,27 @@ pub struct Partition {
 }
 
 impl Partition {
-    pub(super) fn new(id: usize, leader: usize, epoch: u64, config: LogConfig) -> Self {
+    pub(super) fn new(
+        id: usize,
+        leader: usize,
+        epoch: u64,
+        config: LogConfig,
+        shard: Arc<Shard>,
+    ) -> Self {
         Partition {
             id,
             leader: AtomicUsize::new(leader),
             log: PartitionLog::new(config),
-            wait_lock: Mutex::new(()),
-            data_arrived: Condvar::new(),
+            shard,
             epoch: AtomicU64::new(epoch),
             replicas: Mutex::new(ReplicaSet::default()),
             high_watermark: AtomicU64::new(0),
         }
+    }
+
+    /// The data-plane shard that owns this partition.
+    pub fn shard_id(&self) -> usize {
+        self.shard.id()
     }
 
     pub fn leader_index(&self) -> usize {
@@ -97,14 +115,12 @@ impl Partition {
         self.log.end_offset()
     }
 
-    /// Wake every fetcher parked on this partition.  The empty critical
-    /// section orders the wakeup after the append's watermark publish —
-    /// a fetcher that re-checked the watermark under `wait_lock` and
-    /// saw nothing is guaranteed to be inside `wait_timeout` before the
-    /// notifying producer can acquire the lock.
+    /// Ring the owning shard's doorbell after publishing this
+    /// partition's watermark — once per append *batch*, coalesced away
+    /// entirely when no fetcher is parked on the shard (see
+    /// [`super::shard::Shard::ring`] for the lost-wakeup pairing).
     pub(super) fn notify_data(&self) {
-        drop(self.wait_lock.lock().unwrap());
-        self.data_arrived.notify_all();
+        self.shard.ring();
     }
 }
 
@@ -184,6 +200,9 @@ pub(super) struct Inner {
     /// broker add/remove) — the data plane never takes it.
     pub(super) control: Mutex<()>,
     pub(super) groups: Mutex<HashMap<(String, String), GroupState>>,
+    /// The fixed thread-per-core shard set every partition maps onto
+    /// ([`super::shard::shard_of`]); sized at cluster creation.
+    pub(super) shards: ShardSet,
     pub(super) log_config: LogConfig,
     pub(super) stopped: AtomicBool,
     pub(super) epoch: Instant,
@@ -250,6 +269,19 @@ impl BrokerCluster {
         broker_nodes: Vec<NodeId>,
         log_config: LogConfig,
     ) -> Self {
+        Self::with_shards(machine, broker_nodes, log_config, default_shards())
+    }
+
+    /// [`BrokerCluster::with_log_config`] with an explicit data-plane
+    /// shard count (defaults to one shard per available core, clamped
+    /// to `1..=32`).  Benches pin the count to the contention way-count
+    /// under test; `1` reproduces the pre-shard single-doorbell plane.
+    pub fn with_shards(
+        machine: Machine,
+        broker_nodes: Vec<NodeId>,
+        log_config: LogConfig,
+        n_shards: usize,
+    ) -> Self {
         assert!(!broker_nodes.is_empty(), "broker cluster needs >= 1 node");
         let ring = broker_nodes.clone();
         BrokerCluster {
@@ -259,6 +291,7 @@ impl BrokerCluster {
                 topics: ArcCell::new(Arc::new(HashMap::new())),
                 control: Mutex::new(()),
                 groups: Mutex::new(HashMap::new()),
+                shards: ShardSet::new(n_shards),
                 log_config,
                 stopped: AtomicBool::new(false),
                 epoch: Instant::now(),
@@ -267,6 +300,46 @@ impl BrokerCluster {
                 coordinator_ring: Mutex::new(ring),
             }),
         }
+    }
+
+    /// Number of data-plane shards (fixed at creation).
+    pub fn n_shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Point-in-time counters of every data-plane shard — parked-
+    /// fetcher queue depth (current + peak), doorbell ring/notify
+    /// counts, and the quiesce flag.  The autoscale probe exports the
+    /// depths as a planner signal (a persistently deep shard next to
+    /// idle siblings means partitions hash unevenly onto shards).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.inner.shards.stats()
+    }
+
+    /// Chaos hook: quiesce the shard owning `topic`/`partition`, as a
+    /// crashed repartition would, and return the shard id.  Parked
+    /// fetchers downgrade to bounded waits and surface
+    /// [`Error::ShardQuiesced`] after the grace window instead of
+    /// sleeping forever — see [`BrokerCluster::resume_partition_shard`].
+    pub fn quiesce_partition_shard(&self, topic: &str, partition: usize) -> Result<usize> {
+        let t = self.topic(topic)?;
+        let p = t.partitions.get(partition).ok_or_else(|| {
+            Error::Broker(format!("{topic}/{partition}: no such partition"))
+        })?;
+        p.shard.quiesce();
+        Ok(p.shard.id())
+    }
+
+    /// Chaos hook: resume the shard owning `topic`/`partition` (undo
+    /// [`BrokerCluster::quiesce_partition_shard`]), waking parked
+    /// fetchers back to full-length waits.  Returns the shard id.
+    pub fn resume_partition_shard(&self, topic: &str, partition: usize) -> Result<usize> {
+        let t = self.topic(topic)?;
+        let p = t.partitions.get(partition).ok_or_else(|| {
+            Error::Broker(format!("{topic}/{partition}: no such partition"))
+        })?;
+        p.shard.resume();
+        Ok(p.shard.id())
     }
 
     pub fn machine(&self) -> &Machine {
@@ -357,7 +430,13 @@ impl BrokerCluster {
         }
         let parts: Vec<Arc<Partition>> = (0..partitions)
             .map(|i| {
-                Arc::new(Partition::new(i, i % brokers.len(), 0, self.inner.log_config))
+                Arc::new(Partition::new(
+                    i,
+                    i % brokers.len(),
+                    0,
+                    self.inner.log_config,
+                    self.inner.shards.shard_for(i),
+                ))
             })
             .collect();
         Self::assign_replica_sets(&parts, replication.factor, &brokers);
@@ -584,6 +663,13 @@ impl BrokerCluster {
         };
 
         let deadline = Instant::now() + timeout;
+        // When this fetch first observed its shard quiesced (a
+        // repartition sealing the shard's partitions): waits downgrade
+        // to bounded slices and the fetch errors out cleanly once the
+        // quiesce outlives the grace window, instead of sleeping the
+        // full (possibly unbounded) timeout on a shard nobody will
+        // ring again.
+        let mut quiesced_since: Option<Instant> = None;
         let records = loop {
             // Visibility is capped at the replication high watermark:
             // a record is never served before it is on every alive
@@ -607,20 +693,42 @@ impl BrokerCluster {
             if now >= deadline {
                 break Vec::new();
             }
-            let guard = p.wait_lock.lock().unwrap();
-            // Re-check under the wait lock: an append that landed between
-            // the read above and this acquisition already published its
-            // watermark, so we must not sleep through its notify.
+            // Park on the owning shard's doorbell.  The park (gauge
+            // increment + SeqCst fence) must precede the watermark
+            // re-check: it pairs with the producer's publish-then-ring
+            // ordering so either the producer sees us parked and
+            // notifies, or we see its watermark and never sleep.  The
+            // guard deregisters on every exit path (wake, timeout,
+            // error, `continue`).
+            let shard = &p.shard;
+            let _parked = shard.park();
+            let guard = shard.lock();
+            // Re-check under the doorbell lock: an append that landed
+            // between the read above and this acquisition already
+            // published its watermark, so we must not sleep through
+            // its (possibly coalesced-away) ring.
             if p.high_watermark.load(Ordering::Acquire) > offset {
                 continue;
             }
             if self.inner.stopped.load(Ordering::Relaxed) {
                 return Err(Error::Broker("broker cluster is stopped".into()));
             }
-            let (guard, _) = p
-                .data_arrived
-                .wait_timeout(guard, deadline - now)
-                .map_err(|_| Error::Broker("partition wait lock poisoned".into()))?;
+            let wait = if shard.is_quiesced() {
+                let since = *quiesced_since.get_or_insert(now);
+                if now.duration_since(since) >= QUIESCE_WAIT_MAX {
+                    return Err(Error::ShardQuiesced(format!(
+                        "{}/{partition}: shard {} quiesced > {}ms mid-repartition",
+                        t.name,
+                        shard.id(),
+                        QUIESCE_WAIT_MAX.as_millis()
+                    )));
+                }
+                QUIESCE_SLICE.min(deadline - now)
+            } else {
+                quiesced_since = None;
+                deadline - now
+            };
+            let guard = shard.wait(guard, wait)?;
             drop(guard);
             if self.inner.stopped.load(Ordering::Relaxed) {
                 return Err(Error::Broker("broker cluster is stopped".into()));
@@ -707,13 +815,11 @@ impl BrokerCluster {
     }
 
     /// Stop the cluster: producers/consumers error out, fetchers wake.
+    /// One forced ring per shard replaces the old per-partition notify
+    /// loop — every parked fetcher lives on some shard's doorbell.
     pub fn stop(&self) {
         self.inner.stopped.store(true, Ordering::Relaxed);
-        for topic in self.inner.topics.load().values() {
-            for p in &topic.partitions {
-                p.notify_data();
-            }
-        }
+        self.inner.shards.ring_all();
     }
 
     pub fn is_stopped(&self) -> bool {
@@ -1128,6 +1234,62 @@ mod tests {
         c.commit("g", "t", 0, 1); // stale commit ignored
         assert_eq!(c.committed("g", "t", 0), 2);
         assert_eq!(c.group_lag("g", "t").unwrap(), 1);
+    }
+
+    #[test]
+    fn partitions_map_onto_shards_and_stats_export() {
+        let machine = Machine::unthrottled(3);
+        let c = BrokerCluster::with_shards(machine, vec![0], LogConfig::default(), 4);
+        assert_eq!(c.n_shards(), 4);
+        c.create_topic("t", 16).unwrap();
+        let t = c.topic("t").unwrap();
+        for (i, p) in t.partitions.iter().enumerate() {
+            assert_eq!(p.shard_id(), super::super::shard::shard_of(i, 4));
+        }
+        let stats = c.shard_stats();
+        assert_eq!(stats.len(), 4);
+        assert!(stats.iter().all(|s| s.parked_fetchers == 0 && !s.quiesced));
+        // One batched produce rings the owning shard exactly once, and
+        // with no fetchers parked the ring coalesces away (no notify).
+        c.produce("t", 0, 1, &[vec![1], vec![2], vec![3]]).unwrap();
+        let sid = t.partitions[0].shard_id();
+        let stats = c.shard_stats();
+        assert_eq!(stats[sid].rings, 1, "one ring per append batch");
+        assert_eq!(stats[sid].notifies, 0, "coalesced: nobody parked");
+    }
+
+    #[test]
+    fn quiesced_shard_fetch_errors_cleanly_after_grace() {
+        let c = cluster(1);
+        c.create_topic("t", 1).unwrap();
+        let sid = c.quiesce_partition_shard("t", 0).unwrap();
+        assert!(c.shard_stats()[sid].quiesced);
+        // A short fetch still times out normally (Ok-empty) — the
+        // quiesce grace only cuts waits that would outlive it.
+        let recs = c
+            .fetch("t", 0, 0, usize::MAX, 1, Duration::from_millis(20))
+            .unwrap();
+        assert!(recs.is_empty());
+        // A long blocking fetch surfaces the clean quiesce error after
+        // the bounded grace window instead of sleeping 30 s.
+        let start = Instant::now();
+        let err = c.fetch("t", 0, 0, usize::MAX, 1, Duration::from_secs(30));
+        assert!(matches!(err, Err(Error::ShardQuiesced(_))), "{err:?}");
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "bounded wait, not the caller timeout"
+        );
+        c.resume_partition_shard("t", 0).unwrap();
+        assert!(!c.shard_stats()[sid].quiesced);
+        // Resumed shard serves blocking fetches again.
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            c2.fetch("t", 0, 0, usize::MAX, 1, Duration::from_secs(5))
+                .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        c.produce("t", 0, 1, &[b"back".to_vec()]).unwrap();
+        assert_eq!(h.join().unwrap().len(), 1);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::cluster::NodeId;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::RateMeter;
 
 use super::cluster::BrokerCluster;
@@ -236,14 +236,25 @@ impl Consumer {
                 // partition only exists on a fresh handle.
                 self.topic_handle = self.cluster.topic(&self.topic)?;
             }
-            let mut recs = self.cluster.fetch_from(
+            let mut recs = match self.cluster.fetch_from(
                 &self.topic_handle,
                 p,
                 pos,
                 self.config.max_poll_bytes,
                 self.node,
                 self.config.fetch_timeout,
-            )?;
+            ) {
+                Ok(recs) => recs,
+                // The partition's data-plane shard stayed quiesced past
+                // the bounded-wait grace (a repartition sealing it) —
+                // transient by design: skip to the next partition; the
+                // next poll's refreshed plan lands after the resume.
+                Err(Error::ShardQuiesced(_)) => {
+                    skipped += 1;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
             if let Some(c) = ceiling {
                 recs.truncate(recs.partition_point(|r| r.offset < c));
             } else if !recs.is_empty()

@@ -17,6 +17,13 @@
 //! Retention is safe by construction — a reader holding a [`SharedSlice`]
 //! (or a whole snapshot) keeps the underlying slab alive via `Arc` while
 //! the log itself has long forgotten it.
+//!
+//! Shard affinity (§Perf L4): a log belongs to exactly one partition,
+//! and every partition is owned by one data-plane shard (see
+//! [`super::shard`]) — so under the thread-per-core deployment the
+//! writer lock and the active slab's cache lines are only ever touched
+//! from the owning shard's cores, and fetch wakeups for this log go
+//! through that shard's doorbell rather than a per-log condvar.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -451,11 +458,13 @@ impl PartitionLog {
     }
 
     /// Log end offset (the offset the next record will get).
+    #[inline]
     pub fn end_offset(&self) -> u64 {
         self.next_offset.load(Ordering::Acquire)
     }
 
     /// Earliest offset still retained.
+    #[inline]
     pub fn start_offset(&self) -> u64 {
         self.start_offset.load(Ordering::Acquire)
     }

@@ -12,8 +12,13 @@
 //! * a cluster layer with partition leadership over simulated broker
 //!   nodes, blocking fetches, and consumer-group coordination
 //!   ([`cluster`]),
-//! * batching producers ([`producer`]) and group consumers
-//!   ([`consumer`]),
+//! * a thread-per-core sharded data plane ([`shard`]): partitions map
+//!   onto core-pinned shards via the jump-consistent hash, fetchers
+//!   park on per-shard coalesced doorbells, and producers ring once
+//!   per append batch — the contended produce/fetch path scales with
+//!   cores instead of serializing on per-partition condvars,
+//! * batching producers with flush-visible batched acks ([`producer`])
+//!   and group consumers ([`consumer`]),
 //! * online topic repartitioning ([`repartition`]): epoch-stamped
 //!   partition sets with drain-before-serve fences and jump consistent
 //!   hashing, so the one-task-per-partition scaling cap (§6.4's knee)
@@ -32,11 +37,13 @@ pub mod log;
 pub mod producer;
 pub mod repartition;
 pub mod replication;
+pub mod shard;
 
 pub use cloud::{CloudBroker, CloudLatencyModel, CloudRecord};
 pub use cluster::{BrokerCluster, BrokerIoStat, Partition, Topic};
 pub use consumer::{Consumer, ConsumerConfig, PartitionRecord};
 pub use log::{copytrack, LogConfig, LogMirror, PartitionLog, Record, SharedSlice};
-pub use producer::{Partitioner, Producer, ProducerConfig};
+pub use producer::{AckBatch, Partitioner, Producer, ProducerConfig};
 pub use repartition::{jump_hash, key_hash, key_partition, EpochTransition, ServePlan};
 pub use replication::{AckMode, FailoverEvent, FailoverReport, ReplicationConfig};
+pub use shard::{default_shards, shard_of, ShardStats};

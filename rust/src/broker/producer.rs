@@ -27,6 +27,31 @@ use crate::metrics::RateMeter;
 use super::cluster::BrokerCluster;
 use super::repartition::{jump_hash, key_hash};
 
+/// Acknowledgement summary a [`Producer::flush`] returns: everything
+/// the broker acked since the previous `flush` call (send-triggered
+/// batch flushes included).  Acks are *batched* — one entry per
+/// append batch, settled when the batch's `produce_to` returns (which
+/// under [`super::AckMode::Quorum`] is itself one aggregated
+/// quorum-settlement pass per batch, not per record) — so the producer
+/// hot path never waits on per-record ack traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AckBatch {
+    /// Append batches acked.
+    pub batches: u64,
+    /// Records acked across those batches.
+    pub records: u64,
+    /// Payload bytes acked.
+    pub bytes: u64,
+}
+
+impl AckBatch {
+    fn absorb(&mut self, records: u64, bytes: u64) {
+        self.batches += 1;
+        self.records += records;
+        self.bytes += bytes;
+    }
+}
+
 /// Partition selection strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Partitioner {
@@ -94,6 +119,9 @@ pub struct Producer {
     n_partitions: usize,
     batches: Vec<Batch>,
     rr_next: usize,
+    /// Acks accumulated since the last [`Producer::flush`] (one entry
+    /// per settled append batch) — drained by `flush`.
+    acked: AckBatch,
     pub metrics: Arc<RateMeter>,
 }
 
@@ -115,6 +143,7 @@ impl Producer {
             n_partitions,
             batches: (0..n_partitions).map(|_| Batch::new()).collect(),
             rr_next: 0,
+            acked: AckBatch::default(),
             metrics: Arc::new(RateMeter::new()),
         })
     }
@@ -207,6 +236,7 @@ impl Producer {
             Ok(_) => {
                 self.metrics
                     .record_many(values.len() as u64, batch.bytes as u64);
+                self.acked.absorb(values.len() as u64, batch.bytes as u64);
                 Ok(())
             }
             // The produce raced a repartition (partition retired, or the
@@ -223,12 +253,14 @@ impl Producer {
         }
     }
 
-    /// Flush every pending batch.  Re-checks the partition count first
-    /// (a resize since the last send must re-route pending records, not
-    /// flush them under stale routing), and runs repeated passes because
-    /// a stale-epoch re-route may re-queue records into batches an
-    /// earlier pass already flushed.
-    pub fn flush(&mut self) -> Result<()> {
+    /// Flush every pending batch and return the [`AckBatch`] — every
+    /// batch/record/byte the broker acked since the previous flush
+    /// (including send-triggered flushes in between).  Re-checks the
+    /// partition count first (a resize since the last send must
+    /// re-route pending records, not flush them under stale routing),
+    /// and runs repeated passes because a stale-epoch re-route may
+    /// re-queue records into batches an earlier pass already flushed.
+    pub fn flush(&mut self) -> Result<AckBatch> {
         self.refresh_partitions()?;
         loop {
             let dirty: Vec<usize> = self
@@ -239,7 +271,7 @@ impl Producer {
                 .map(|(i, _)| i)
                 .collect();
             if dirty.is_empty() {
-                return Ok(());
+                return Ok(std::mem::take(&mut self.acked));
             }
             for p in dirty {
                 self.flush_partition(p)?;
@@ -363,8 +395,39 @@ mod tests {
             p.send(None, vec![i]).unwrap();
         }
         assert_eq!(c.end_offset("t", 0).unwrap(), 0, "nothing flushed yet");
-        p.flush().unwrap();
+        let acked = p.flush().unwrap();
         assert_eq!(c.end_offset("t", 0).unwrap(), 10);
+        assert_eq!(acked.batches, 1, "10 records settle as one batched ack");
+        assert_eq!(acked.records, 10);
+        assert_eq!(acked.bytes, 10);
+    }
+
+    #[test]
+    fn flush_drains_accumulated_ack_batches() {
+        let c = setup(2);
+        let mut p = Producer::new(
+            c.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: 4, // send-triggered flush every 2 records
+                linger: Duration::from_secs(3600),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..10u8 {
+            p.send(None, vec![i, i]).unwrap();
+        }
+        // Send-triggered flushes accumulate into the same AckBatch the
+        // next explicit flush drains — acks are visible per flush, not
+        // per record.
+        let acked = p.flush().unwrap();
+        assert_eq!(acked.records, 10);
+        assert_eq!(acked.bytes, 20);
+        assert!(acked.batches >= 2, "round-robin over 2 partitions: {acked:?}");
+        // Drained: an immediate re-flush acks nothing.
+        assert_eq!(p.flush().unwrap(), AckBatch::default());
     }
 
     #[test]

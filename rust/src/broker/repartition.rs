@@ -143,6 +143,21 @@ impl BrokerCluster {
         }
         let new_epoch = t.epoch + 1;
 
+        // Quiesce only the shards that own this topic's partitions
+        // (other shards — other topics' partitions — keep serving
+        // full-length blocking fetches): their parked fetchers wake,
+        // re-check their watermarks, and downgrade to bounded wait
+        // slices for the duration of the seal, so a fetcher can never
+        // sleep unboundedly through the epoch transition.
+        let mut owning: Vec<usize> = t.partitions.iter().map(|p| p.shard_id()).collect();
+        owning.sort_unstable();
+        owning.dedup();
+        for sid in &owning {
+            if let Some(s) = self.inner.shards.get(*sid) {
+                s.quiesce();
+            }
+        }
+
         // Seal every existing log: record the fence and bump the
         // partition's epoch while the log's writer lock is held, so
         // concurrent produces either land below the fence or fail
@@ -154,6 +169,12 @@ impl BrokerCluster {
             }));
         }
 
+        for sid in &owning {
+            if let Some(s) = self.inner.shards.get(*sid) {
+                s.resume();
+            }
+        }
+
         let mut partitions = t.partitions.clone();
         let first_new = partitions.len();
         while partitions.len() < new_active {
@@ -163,6 +184,7 @@ impl BrokerCluster {
                 id % n_brokers,
                 new_epoch,
                 self.inner.log_config,
+                self.inner.shards.shard_for(id),
             )));
         }
         // Fresh partitions inherit the topic's replication: followers on

@@ -349,12 +349,42 @@ impl BrokerCluster {
     /// between produces.  Followers apply their pending backlog up to
     /// their injected lag (billing the deferred bytes), and followers
     /// whose gap closed re-enter the ISR.
+    /// Heartbeats are aggregated per partition pass, not per record:
+    /// one call settles every pending follower backlog of the topic.
+    /// Sharded deployments drive
+    /// [`BrokerCluster::replication_heartbeat_shard`] from each shard's
+    /// reactor instead, so the ISR bookkeeping of a partition only ever
+    /// runs on its owning core.
     pub fn replication_heartbeat(&self, topic: &str) -> Result<()> {
         let t = self.topic(topic)?;
         for p in &t.partitions {
             self.sync_partition_followers(p, &t.replication, 0);
         }
         Ok(())
+    }
+
+    /// Per-shard ISR heartbeat: advance the followers of only the
+    /// partitions of `topic` owned by data-plane shard `shard` (see
+    /// [`crate::broker::shard::shard_of`]), returning how many
+    /// partitions were heartbeaten.  This is the shard-affine form of
+    /// [`BrokerCluster::replication_heartbeat`]: each shard settles its
+    /// own partitions' quorum acks once per heartbeat — one aggregated
+    /// pass per shard flush instead of per-record ack traffic — and
+    /// never touches replica state owned by a sibling shard.
+    pub fn replication_heartbeat_shard(&self, topic: &str, shard: usize) -> Result<usize> {
+        if shard >= self.n_shards() {
+            return Err(Error::Broker(format!(
+                "shard {shard} out of range (cluster has {} shards)",
+                self.n_shards()
+            )));
+        }
+        let t = self.topic(topic)?;
+        let mut settled = 0;
+        for p in t.partitions.iter().filter(|p| p.shard_id() == shard) {
+            self.sync_partition_followers(p, &t.replication, 0);
+            settled += 1;
+        }
+        Ok(settled)
     }
 
     /// Partitions of `topic` whose alive replica count is below the
@@ -574,12 +604,11 @@ impl BrokerCluster {
 
         // Wake every parked fetcher: the leader it resolved may be the
         // dead node; the fetch loop re-resolves against the new
-        // membership on its next pass.
-        for topic in topics.values() {
-            for p in &topic.partitions {
-                p.notify_data();
-            }
-        }
+        // membership on its next pass.  Forced rings (one per shard,
+        // not per partition) bypass the data-plane coalescing gate —
+        // a control-plane wakeup must reach fetchers racing into the
+        // park window.
+        self.inner.shards.ring_all();
 
         let recovery_secs = started.elapsed().as_secs_f64();
         let at_secs = self.elapsed_ns() as f64 / 1e9;
@@ -684,6 +713,37 @@ mod tests {
         assert_eq!(set.mirrors[&1].end_offset(), 1);
         assert_eq!(set.mirrors[&1].high_watermark(), 1, "zero-lag follower fully applied");
         assert_eq!(set.isr, vec![0, 1]);
+    }
+
+    #[test]
+    fn shard_heartbeat_settles_only_owned_partitions() {
+        let c = BrokerCluster::with_shards(
+            Machine::unthrottled(4),
+            vec![0, 1],
+            crate::broker::LogConfig::default(),
+            2,
+        );
+        c.create_topic_replicated("t", 4, ReplicationConfig::new(2)).unwrap();
+        let t = c.topic("t").unwrap();
+        let owned: Vec<usize> = (0..2)
+            .map(|s| t.partitions.iter().filter(|p| p.shard_id() == s).count())
+            .collect();
+        assert_eq!(owned.iter().sum::<usize>(), 4, "every partition has one owner");
+        assert_eq!(c.replication_heartbeat_shard("t", 0).unwrap(), owned[0]);
+        assert_eq!(c.replication_heartbeat_shard("t", 1).unwrap(), owned[1]);
+        assert!(c.replication_heartbeat_shard("t", 9).is_err(), "shard out of range");
+
+        // A lagging follower is ejected from partition 0's ISR by the
+        // produce, and re-admitted by a heartbeat on *its owning
+        // shard* alone once the injection clears — the shard-affine
+        // form of the aggregated quorum-ack settlement.
+        c.inject_follower_lag("t", 1, 3).unwrap();
+        c.produce("t", 0, 2, &[vec![1], vec![2]]).unwrap();
+        assert_eq!(t.partitions[0].replicas.lock().unwrap().isr, vec![0]);
+        c.inject_follower_lag("t", 1, 0).unwrap();
+        let sid = t.partitions[0].shard_id();
+        assert!(c.replication_heartbeat_shard("t", sid).unwrap() >= 1);
+        assert_eq!(t.partitions[0].replicas.lock().unwrap().isr, vec![0, 1]);
     }
 
     #[test]

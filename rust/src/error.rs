@@ -33,6 +33,13 @@ pub enum Error {
     /// and re-sending (see `broker::Producer`).
     StaleEpoch(String),
 
+    /// A blocking fetch outlived the bounded wait on a quiesced data-
+    /// plane shard (a repartition was sealing the shard's partitions
+    /// and never resumed it).  Transient by design: consumers retry on
+    /// their next poll, by which time the shard has resumed — see
+    /// `broker::shard`.
+    ShardQuiesced(String),
+
     /// Stream-engine failures (job not running, processor panic).
     Engine(String),
 
@@ -58,6 +65,7 @@ impl std::fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact: {m}"),
             Error::Broker(m) => write!(f, "broker: {m}"),
             Error::StaleEpoch(m) => write!(f, "stale epoch: {m}"),
+            Error::ShardQuiesced(m) => write!(f, "shard quiesced: {m}"),
             Error::Engine(m) => write!(f, "engine: {m}"),
             Error::Pilot(m) => write!(f, "pilot: {m}"),
             Error::Wire(m) => write!(f, "wire: {m}"),
@@ -100,6 +108,10 @@ mod tests {
         assert_eq!(Error::Broker("x".into()).to_string(), "broker: x");
         assert_eq!(Error::Pilot("y".into()).to_string(), "pilot: y");
         assert_eq!(Error::App("z".into()).to_string(), "app: z");
+        assert_eq!(
+            Error::ShardQuiesced("s".into()).to_string(),
+            "shard quiesced: s"
+        );
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().starts_with("io: "));
         assert!(std::error::Error::source(&io).is_some());

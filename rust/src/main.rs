@@ -42,6 +42,8 @@ USAGE:
   pilot-streaming artifacts
   pilot-streaming bench-gate --current <run.json> --baseline <committed.json>
                         --name <bench-name> [--max-ratio <r>] [--stat <mean|p50|p95>]
+                        [--metric <workload-metric>]  (gate a workload throughput
+                        metric, higher-is-better; --stat is ignored)
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -135,7 +137,7 @@ fn run(args: &[String]) -> Result<()> {
             check_flags(
                 "bench-gate",
                 &flags,
-                &["current", "baseline", "name", "max-ratio", "stat"],
+                &["current", "baseline", "name", "max-ratio", "stat", "metric"],
             )?;
             cmd_bench_gate(&flags)
         }
@@ -437,6 +439,14 @@ fn cmd_artifacts() -> Result<()> {
 /// `--max-ratio` versus the committed `--baseline` (`BENCH_pr*.json`).
 /// Coarse by design — it catches "someone reintroduced the memcpy", not
 /// single-digit-percent drift.
+///
+/// Two gate shapes:
+/// * default: compare a `results[]` stat (`--stat`, seconds,
+///   lower-is-better, ratio = current/baseline);
+/// * `--metric <k>`: compare `workloads[].metrics[k]` (a throughput
+///   figure, higher-is-better, ratio = baseline/current) — this is how
+///   the contended produce/fetch scaling workloads are gated, since
+///   their wall-clock alone says nothing about per-thread throughput.
 fn cmd_bench_gate(flags: &HashMap<String, String>) -> Result<()> {
     let need = |key: &str| {
         flags
@@ -472,6 +482,27 @@ fn cmd_bench_gate(flags: &HashMap<String, String>) -> Result<()> {
             .map_err(|e| Error::Config(format!("read {path}: {e}")))?;
         Json::parse(&text)
     };
+    if let Some(metric) = flags.get("metric") {
+        let current = workload_metric(&load(&current_path)?, &name, metric).ok_or_else(|| {
+            Error::Config(format!("{current_path}: no '{name}' workload with metric {metric}"))
+        })?;
+        let baseline = workload_metric(&load(&baseline_path)?, &name, metric).ok_or_else(|| {
+            Error::Config(format!("{baseline_path}: no '{name}' workload with metric {metric}"))
+        })?;
+        // Throughput metrics: higher is better, so the regression ratio
+        // inverts relative to the latency path below.
+        let ratio = baseline / current.max(1e-12);
+        println!(
+            "bench-gate: {name} {metric} current={current:.3e} baseline={baseline:.3e} \
+             ratio={ratio:.2} (max {max_ratio})"
+        );
+        if ratio > max_ratio {
+            return Err(Error::Config(format!(
+                "perf gate failed: {name} {metric} regressed {ratio:.2}x > {max_ratio}x vs baseline"
+            )));
+        }
+        return Ok(());
+    }
     let current = bench_result(&load(&current_path)?, &name, stat_key).ok_or_else(|| {
         Error::Config(format!("{current_path}: no '{name}' measurement with {stat_key}"))
     })?;
@@ -501,6 +532,22 @@ fn bench_result(doc: &Json, name: &str, stat_key: &str) -> Option<f64> {
             .iter()
             .find(|r| r.get("name").and_then(Json::as_str) == Some(name))
             .and_then(|r| r.get(stat_key))
+            .and_then(Json::as_f64)
+    };
+    find(doc).or_else(|| doc.get("baseline").and_then(find))
+}
+
+/// Find workload `name`'s `metrics[metric]` in a bench JSON document —
+/// top-level `workloads` first, then an embedded `baseline` document
+/// (same two-sided shape as [`bench_result`]).
+fn workload_metric(doc: &Json, name: &str, metric: &str) -> Option<f64> {
+    let find = |doc: &Json| -> Option<f64> {
+        doc.get("workloads")?
+            .as_arr()?
+            .iter()
+            .find(|w| w.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|w| w.get("metrics"))
+            .and_then(|m| m.get(metric))
             .and_then(Json::as_f64)
     };
     find(doc).or_else(|| doc.get("baseline").and_then(find))
@@ -668,6 +715,89 @@ cooldown_secs = 60.0
             bench_result(&wrapped, "log/read-8x320k", "p50_secs"),
             Some(5e-4)
         );
+    }
+
+    fn workload_doc(name: &str, metric: &str, value: f64) -> Json {
+        Json::obj().set(
+            "workloads",
+            Json::Arr(vec![Json::obj()
+                .set("name", name)
+                .set("secs", 1.0)
+                .set("metrics", Json::obj().set(metric, value))]),
+        )
+    }
+
+    #[test]
+    fn workload_metric_reads_top_level_and_embedded_baseline() {
+        let doc = workload_doc("broker/contended-produce-fetch-16x16", "fetch_msgs_per_sec", 9e4);
+        assert_eq!(
+            workload_metric(&doc, "broker/contended-produce-fetch-16x16", "fetch_msgs_per_sec"),
+            Some(9e4)
+        );
+        assert_eq!(workload_metric(&doc, "missing", "fetch_msgs_per_sec"), None);
+        assert_eq!(
+            workload_metric(&doc, "broker/contended-produce-fetch-16x16", "missing"),
+            None
+        );
+        let wrapped = Json::obj().set(
+            "baseline",
+            workload_doc("broker/contended-produce-fetch-16x16", "fetch_msgs_per_sec", 5e4),
+        );
+        assert_eq!(
+            workload_metric(&wrapped, "broker/contended-produce-fetch-16x16", "fetch_msgs_per_sec"),
+            Some(5e4)
+        );
+    }
+
+    #[test]
+    fn bench_gate_metric_path_is_higher_is_better() {
+        let dir = std::env::temp_dir().join(format!("bench-gate-metric-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let current = dir.join("current.json");
+        let baseline = dir.join("baseline.json");
+        let name = "broker/contended-produce-fetch-16x16";
+        // Throughput halved: ratio 2.0 sits exactly at the default gate.
+        std::fs::write(&current, workload_doc(name, "fetch_msgs_per_sec", 5e4).to_string())
+            .unwrap();
+        std::fs::write(&baseline, workload_doc(name, "fetch_msgs_per_sec", 1e5).to_string())
+            .unwrap();
+        let gate = |ratio: &str| {
+            run(&args(&[
+                "bench-gate",
+                "--current",
+                current.to_str().unwrap(),
+                "--baseline",
+                baseline.to_str().unwrap(),
+                "--name",
+                name,
+                "--metric",
+                "fetch_msgs_per_sec",
+                "--max-ratio",
+                ratio,
+            ]))
+        };
+        assert!(gate("2.0").is_ok(), "a 2x throughput drop fits under max-ratio 2");
+        let err = gate("1.5").unwrap_err();
+        assert!(err.to_string().contains("perf gate failed"), "{err}");
+        // A throughput *gain* always passes the inverted ratio.
+        std::fs::write(&current, workload_doc(name, "fetch_msgs_per_sec", 4e5).to_string())
+            .unwrap();
+        assert!(gate("1.1").is_ok());
+        // Missing metric is a usage error, not a silent pass.
+        let err = run(&args(&[
+            "bench-gate",
+            "--current",
+            current.to_str().unwrap(),
+            "--baseline",
+            baseline.to_str().unwrap(),
+            "--name",
+            name,
+            "--metric",
+            "nope",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("no '"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

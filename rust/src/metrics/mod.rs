@@ -69,6 +69,43 @@ impl RateMeter {
     }
 }
 
+/// Current/peak depth gauge for bounded queues (thread-safe, lock-free).
+///
+/// Tracks a population that rises and falls — e.g. fetchers parked on a
+/// broker shard's doorbell — exposing both the instantaneous depth (the
+/// autoscale planner's queue-depth signal) and its high-water mark.
+/// All operations are `Relaxed`: the gauge is a statistic, not a
+/// synchronization point — callers that use the depth as a coalescing
+/// gate (see `broker::shard`) pair it with their own `SeqCst` fences.
+#[derive(Debug, Default)]
+pub struct DepthGauge {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl DepthGauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self) {
+        let now = self.current.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.current.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
 /// Log-bucketed latency histogram: 1 µs .. ~1 hour, 5% resolution.
 ///
 /// Lock-free recording; quantile queries take a snapshot.
@@ -445,6 +482,21 @@ mod tests {
         assert_eq!(m.messages(), 5);
         assert_eq!(m.bytes(), 600);
         assert!(m.msg_rate() > 0.0);
+    }
+
+    #[test]
+    fn depth_gauge_tracks_current_and_peak() {
+        let g = DepthGauge::new();
+        assert_eq!((g.current(), g.peak()), (0, 0));
+        g.inc();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.current(), 2);
+        assert_eq!(g.peak(), 3, "peak is sticky");
+        g.dec();
+        g.dec();
+        assert_eq!((g.current(), g.peak()), (0, 3));
     }
 
     #[test]

@@ -432,6 +432,7 @@ impl ElasticSim {
                 // both under-replicated and quorum-degraded.
                 under_replicated: if pending_broker.is_empty() { degraded } else { 0 },
                 below_min_insync: if pending_broker.is_empty() { degraded } else { 0 },
+                shard_queue_depths: Vec::new(),
             };
             prev_lag = lag;
 

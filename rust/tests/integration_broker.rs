@@ -388,6 +388,9 @@ fn consumer_offsets_survive_node_death_and_quorum_rejects_degraded_produces() {
     cluster.add_brokers(vec![2]);
     cluster.produce("dur", 0, 2, &[vec![9u8]]).unwrap();
 }
+
+#[test]
+fn cloud_broker_applies_latency_model() {
     use pilot_streaming::broker::cloud::{CloudBroker, CloudLatencyModel};
     let broker = CloudBroker::new(
         "test-fast",
@@ -412,4 +415,64 @@ fn consumer_offsets_survive_node_death_and_quorum_rejects_degraded_produces() {
     assert!(mean > 0.01, "latency model applied: mean {mean}");
     let shared = Arc::new(broker);
     assert_eq!(shared.in_flight(), 0);
+}
+
+#[test]
+fn blocking_fetch_on_quiesced_shard_errors_cleanly() {
+    // Regression: a blocking fetch that parked while its shard was
+    // quiesced for an epoch seal used to sleep its entire deadline (or
+    // forever with a long one) — the sealed shard's doorbell never rang
+    // for it.  Now quiesced fetchers wait in bounded slices and, past
+    // the grace window, surface a clean `Error::ShardQuiesced` the
+    // consumer layer treats as transient.
+    use pilot_streaming::broker::shard_of;
+    use pilot_streaming::Error;
+
+    let machine = Machine::unthrottled(2);
+    let cluster = BrokerCluster::with_shards(machine, vec![0], LogConfig::default(), 2);
+    cluster.create_topic("q", 8).unwrap();
+    // Two partitions on *different* shards: the seal must be per-shard,
+    // not cluster-wide.
+    let sealed = (0..8).find(|&p| shard_of(p, 2) == 0).unwrap();
+    let open = (0..8).find(|&p| shard_of(p, 2) == 1).unwrap();
+    assert_eq!(cluster.quiesce_partition_shard("q", sealed).unwrap(), 0);
+
+    // A short-deadline fetch still times out to Ok(empty): quiescence
+    // only converts waits that outlive the grace window into errors.
+    let recs = cluster
+        .fetch("q", sealed, 0, usize::MAX, 1, Duration::from_millis(20))
+        .unwrap();
+    assert!(recs.is_empty());
+
+    // The long blocking fetch errors after the bounded grace window —
+    // far before its 30 s deadline.
+    let t0 = Instant::now();
+    let err = cluster
+        .fetch("q", sealed, 0, usize::MAX, 1, Duration::from_secs(30))
+        .unwrap_err();
+    assert!(matches!(err, Error::ShardQuiesced(_)), "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "bounded wait, not the full deadline: {:?}",
+        t0.elapsed()
+    );
+
+    // The sibling shard keeps serving blocking fetches throughout.
+    let c = cluster.clone();
+    let h = std::thread::spawn(move || {
+        c.fetch("q", open, 0, usize::MAX, 1, Duration::from_secs(5))
+    });
+    std::thread::sleep(Duration::from_millis(20));
+    cluster.produce("q", open, 1, &[vec![7u8]]).unwrap();
+    assert_eq!(h.join().unwrap().unwrap().len(), 1);
+
+    // Resume: parked fetches on the sealed shard flow again end-to-end.
+    assert_eq!(cluster.resume_partition_shard("q", sealed).unwrap(), 0);
+    let c = cluster.clone();
+    let h = std::thread::spawn(move || {
+        c.fetch("q", sealed, 0, usize::MAX, 1, Duration::from_secs(5))
+    });
+    std::thread::sleep(Duration::from_millis(20));
+    cluster.produce("q", sealed, 1, &[vec![8u8]]).unwrap();
+    assert_eq!(h.join().unwrap().unwrap().len(), 1);
 }

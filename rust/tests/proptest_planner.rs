@@ -92,6 +92,7 @@ fn random_snapshot(rng: &mut Rng) -> SignalSnapshot {
         // only), sometimes quorum-degraded (drives repair).
         under_replicated: if rng.below(4) == 0 { rng.below(16) } else { 0 },
         below_min_insync: if rng.below(5) == 0 { rng.below(16) } else { 0 },
+        shard_queue_depths: (0..rng.below(8)).map(|_| rng.below(64) as u64).collect(),
     }
 }
 

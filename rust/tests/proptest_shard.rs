@@ -1,0 +1,306 @@
+//! Property-based invariants over the thread-per-core sharded data
+//! plane.
+//!
+//! The shard layer owns every partition's wakeup path, so its safety
+//! story is this suite: across random shard counts, quiesce/resume
+//! pulses and produce/fetch/repartition interleavings we assert
+//!
+//! * **(a) mapping sanity** — [`shard_of`] is deterministic, in range,
+//!   and jump-consistent: growing the shard count relocates partitions
+//!   only *toward the new shards* (the property partition placement and
+//!   epoch seals both lean on);
+//! * **(b) no lost wakeups** — a blocking fetch never sleeps out a long
+//!   deadline while unconsumed records sit in its partition, across
+//!   concurrent producers on every shard and random epoch-seal-style
+//!   quiesce/resume pulses (the store-buffer hazard the doorbell's
+//!   SeqCst fence pair exists to kill);
+//! * **(c) per-key order** — the exactly-once / per-key-order contract
+//!   of the repartition suite still holds when the topic lives on a
+//!   multi-shard cluster and seals quiesce only the owning shards.
+//!
+//! Like `proptest_invariants.rs`, this is a seeded-random harness (the
+//! offline dependency set has no `proptest`): failures print the seed
+//! for replay, and `PROPTEST_CASES` scales the case count (the CI
+//! `proptest` job runs these suites deeper than the default
+//! `cargo test` pass).  The thread-heavy wakeup property divides the
+//! case count down — each case spawns a full producer/fetcher fleet.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use pilot_streaming::broker::{
+    shard_of, BrokerCluster, Consumer, ConsumerConfig, LogConfig, PartitionRecord, Partitioner,
+    Producer, ProducerConfig,
+};
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::util::Rng;
+use pilot_streaming::Error;
+
+/// Case count: `PROPTEST_CASES` env override, else the suite default.
+fn cases(default: usize) -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `f` over exactly `n_cases` seeded cases; panic messages carry
+/// the seed for replay.  (Callers pass [`cases`] through, divided down
+/// for thread-heavy properties.)
+fn check<F: Fn(&mut Rng)>(name: &str, n_cases: usize, f: F) {
+    for case in 0..n_cases {
+        let seed = 0xD00B311 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+/// Invariant (a): the partition→shard map is total, stable, and moves
+/// minimally (and only toward the new shards) when the shard count
+/// grows — so a fleet resize never shuffles wakeup ownership of
+/// partitions that didn't need to move.
+#[test]
+fn prop_shard_mapping_stable_in_range_minimal_movement() {
+    check("shard-mapping", cases(300), |rng| {
+        let n = 1 + rng.below(32);
+        let m = n + 1 + rng.below(16);
+        for p in 0..128 {
+            let s = shard_of(p, n);
+            assert!(s < n, "shard_of({p}, {n}) = {s} out of range");
+            assert_eq!(s, shard_of(p, n), "shard_of not deterministic");
+            let grown = shard_of(p, m);
+            assert!(grown < m);
+            if grown != s {
+                assert!(
+                    grown >= n,
+                    "growing {n} -> {m} shards moved partition {p} to old shard {grown}"
+                );
+            }
+        }
+    });
+}
+
+/// Invariant (b): no lost wakeups.  One blocking fetcher tails each
+/// partition with a deadline far longer than the whole workload while
+/// one producer per partition appends through it, and the driver fires
+/// random quiesce/resume pulses (what an epoch seal does to the owning
+/// shard).  If any fetcher's blocking fetch returns empty while records
+/// it has not consumed exist, a doorbell ring was lost.
+#[test]
+fn prop_no_lost_wakeups_across_produce_quiesce_interleavings() {
+    check(
+        "shard-no-lost-wakeups",
+        (cases(200) / 20).clamp(3, 30),
+        |rng| {
+            let n_shards = 1 + rng.below(4);
+            let parts = 1 + rng.below(6);
+            let per: u64 = 20 + rng.below(40) as u64;
+            let cluster = BrokerCluster::with_shards(
+                Machine::unthrottled(2),
+                vec![0],
+                LogConfig::default(),
+                n_shards,
+            );
+            cluster.create_topic("w", parts).unwrap();
+            let stalled = Arc::new(AtomicBool::new(false));
+
+            std::thread::scope(|s| {
+                for p in 0..parts {
+                    let cluster = cluster.clone();
+                    let stalled = stalled.clone();
+                    s.spawn(move || {
+                        let mut pos = 0u64;
+                        while pos < per {
+                            match cluster.fetch(
+                                "w",
+                                p,
+                                pos,
+                                usize::MAX,
+                                1,
+                                Duration::from_secs(20),
+                            ) {
+                                Ok(recs) if recs.is_empty() => {
+                                    // A 20 s blocking fetch timed out
+                                    // mid-stream: the producer is still
+                                    // appending (pos < per), so a ring
+                                    // was lost.
+                                    stalled.store(true, Ordering::Relaxed);
+                                    return;
+                                }
+                                Ok(recs) => {
+                                    assert_eq!(recs[0].offset, pos, "gap in partition {p}");
+                                    pos = recs.last().unwrap().offset + 1;
+                                }
+                                // The driver may hold a quiesce past the
+                                // grace window; transient by contract.
+                                Err(Error::ShardQuiesced(_)) => continue,
+                                Err(e) => panic!("fetch on partition {p}: {e}"),
+                            }
+                        }
+                    });
+                }
+                for p in 0..parts {
+                    let cluster = cluster.clone();
+                    s.spawn(move || {
+                        for i in 0..per {
+                            cluster.produce("w", p, 1, &[vec![i as u8]]).unwrap();
+                            if i % 7 == 0 {
+                                std::thread::yield_now();
+                            }
+                        }
+                    });
+                }
+                // Driver: epoch-seal-style pulses on random partitions'
+                // shards while the fleet runs.
+                for _ in 0..rng.below(6) {
+                    let p = rng.below(parts);
+                    cluster.quiesce_partition_shard("w", p).unwrap();
+                    std::thread::sleep(Duration::from_millis(rng.below(3) as u64));
+                    cluster.resume_partition_shard("w", p).unwrap();
+                    std::thread::yield_now();
+                }
+            });
+
+            assert!(
+                !stalled.load(Ordering::Relaxed),
+                "lost wakeup: a blocking fetch slept out its deadline with records pending \
+                 ({n_shards} shards, {parts} partitions)"
+            );
+            for p in 0..parts {
+                assert_eq!(cluster.end_offset("w", p).unwrap(), per);
+            }
+        },
+    );
+}
+
+fn encode(key: usize, seq: u32) -> Vec<u8> {
+    vec![
+        key as u8,
+        (seq >> 24) as u8,
+        (seq >> 16) as u8,
+        (seq >> 8) as u8,
+        seq as u8,
+    ]
+}
+
+fn decode(value: &[u8]) -> (usize, u32) {
+    (
+        value[0] as usize,
+        u32::from_be_bytes([value[1], value[2], value[3], value[4]]),
+    )
+}
+
+/// Invariant (b): each key's records arrive in dense produce order.
+fn observe(recs: Vec<PartitionRecord>, consumed_seq: &mut [u32], consumed_total: &mut usize) {
+    for r in recs {
+        let (k, seq) = decode(&r.record.value);
+        assert_eq!(
+            seq, consumed_seq[k],
+            "key {k}: expected seq {} next, saw {seq} (reorder/dup/loss)",
+            consumed_seq[k]
+        );
+        consumed_seq[k] += 1;
+        *consumed_total += 1;
+    }
+}
+
+/// Invariant (c): the repartition suite's exactly-once + per-key-order
+/// contract holds on a multi-shard cluster with quiesce/resume pulses
+/// mixed into the interleaving — seals that stall one shard must not
+/// reorder or lose records anywhere.
+#[test]
+fn prop_sharded_repartition_keeps_exactly_once_per_key_order() {
+    check("sharded-repartition-order", (cases(200) / 10).clamp(5, 40), |rng| {
+        let n_keys = 2 + rng.below(6);
+        let n_shards = 1 + rng.below(4);
+        let cluster = BrokerCluster::with_shards(
+            Machine::unthrottled(4),
+            vec![0],
+            LogConfig::default(),
+            n_shards,
+        );
+        cluster.create_topic("t", 1 + rng.below(4)).unwrap();
+
+        let batch_bytes = if rng.below(2) == 0 { 1 } else { 24 };
+        let mut producer = Producer::new(
+            cluster.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let config = ConsumerConfig {
+            fetch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let mut consumer = Consumer::join(cluster.clone(), "t", "g", 2, config).unwrap();
+
+        let mut produced_seq = vec![0u32; n_keys];
+        let mut consumed_seq = vec![0u32; n_keys];
+        let mut produced_total = 0usize;
+        let mut consumed_total = 0usize;
+
+        let steps = 10 + rng.below(25);
+        for _ in 0..steps {
+            match rng.below(10) {
+                0..=4 => {
+                    for _ in 0..1 + rng.below(8) {
+                        let k = rng.below(n_keys);
+                        let seq = produced_seq[k];
+                        produced_seq[k] += 1;
+                        producer.send(Some(&[k as u8]), encode(k, seq)).unwrap();
+                        produced_total += 1;
+                    }
+                    if rng.below(2) == 0 {
+                        producer.flush().unwrap();
+                    }
+                }
+                // Resize the topic mid-stream — the seal quiesces only
+                // the owning shards.
+                5 | 6 => {
+                    cluster.repartition_topic("t", 1 + rng.below(8)).unwrap();
+                }
+                // A bare seal-style pulse with no resize.
+                7 => {
+                    let live = cluster.partition_count("t").unwrap();
+                    let p = rng.below(live);
+                    cluster.quiesce_partition_shard("t", p).unwrap();
+                    cluster.resume_partition_shard("t", p).unwrap();
+                }
+                _ => {
+                    for _ in 0..1 + rng.below(4) {
+                        let recs = consumer.poll().unwrap();
+                        observe(recs, &mut consumed_seq, &mut consumed_total);
+                    }
+                }
+            }
+        }
+
+        producer.flush().unwrap();
+        let mut idle_rounds = 0;
+        while consumed_total < produced_total && idle_rounds < 300 {
+            let recs = consumer.poll().unwrap();
+            if recs.is_empty() {
+                idle_rounds += 1;
+            } else {
+                idle_rounds = 0;
+            }
+            observe(recs, &mut consumed_seq, &mut consumed_total);
+        }
+
+        assert_eq!(
+            consumed_total, produced_total,
+            "exactly-once violated on {n_shards} shards: {consumed_total} of {produced_total}"
+        );
+        assert_eq!(consumed_seq, produced_seq, "per-key completeness");
+        assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
+    });
+}
