@@ -49,6 +49,8 @@ fn snapshot(lag: u64, partitions: usize) -> SignalSnapshot {
         broker_disk_util: 0.4,
         under_replicated: 0,
         below_min_insync: 0,
+        broker_util_skew: 0.0,
+        rack_skew: 0.0,
         shard_queue_depths: Vec::new(),
     }
 }
@@ -182,6 +184,8 @@ fn main() {
             node_death_window: None,
             ack_mode: pilot_streaming::broker::AckMode::Leader,
             replica_lag_records: 0.0,
+            racks: 0,
+            rack_death_window: None,
         };
         let mut policy = ThresholdPolicy::new(600, 60)
             .with_sustain(1)

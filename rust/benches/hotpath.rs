@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 //! JSON (perf trajectory): `cargo bench --bench hotpath -- --json \
-//!   --baseline=BENCH_pr8.json > bench.json`
+//!   --baseline=BENCH_pr9.json > bench.json`
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -192,6 +192,64 @@ fn main() {
         isr_cluster.inject_follower_lag("isr", 0, 0).unwrap();
         isr_cluster.inject_follower_lag("isr", 1, 0).unwrap();
         isr_cluster.replication_heartbeat("isr").unwrap();
+    });
+
+    // --- Re-join with divergence truncation --------------------------------
+    // The full bounce of one broker: its follower is held behind, the
+    // leader takes appends past the follower's watermark, the broker
+    // dies (unclean promotion abandons the gap), and the returning
+    // replica truncates exactly that divergent tail before re-entering
+    // as a follower.  One iteration = lag + produce + kill + rejoin +
+    // catch-up heartbeat; this is the recovery path a node reboot puts
+    // every consumer behind, so its p50 is gated in CI.
+    let machine = Machine::unthrottled(3);
+    let rj_cluster = BrokerCluster::new(machine, vec![0, 1]);
+    rj_cluster
+        .create_topic_replicated("rj", 8, ReplicationConfig::new(2))
+        .unwrap();
+    for p in 0..8 {
+        rj_cluster.produce("rj", p, 2, &[vec![0u8; 1024]]).unwrap();
+    }
+    let mut victim = 0;
+    bench.run("broker/rejoin-divergence-8part", 300, || {
+        let survivor = victim ^ 1;
+        rj_cluster.inject_follower_lag("rj", survivor, 4).unwrap();
+        for p in 0..8 {
+            rj_cluster.produce("rj", p, 2, &[vec![0u8; 1024]]).unwrap();
+        }
+        let fo = rj_cluster.kill_broker(victim).unwrap();
+        let rejoin = rj_cluster.rejoin_broker(victim).unwrap();
+        rj_cluster.inject_follower_lag("rj", victim, 0).unwrap();
+        rj_cluster.inject_follower_lag("rj", survivor, 0).unwrap();
+        rj_cluster.replication_heartbeat("rj").unwrap();
+        victim ^= 1;
+        std::hint::black_box((fo, rejoin));
+    });
+
+    // --- Rack failover: a whole failure domain dies and returns ------------
+    // Four brokers striped across two racks, factor-2 anti-affine
+    // placement: killing a rack fails over *every* partition at once
+    // (each set loses exactly one replica), then both victims re-join
+    // and a heartbeat re-syncs them.  The blast-radius recovery path of
+    // a rack-aware deployment, gated in CI alongside single-node
+    // failover.
+    let machine = Machine::unthrottled(5);
+    let rk_cluster = BrokerCluster::with_racks(machine, vec![0, 1, 2, 3], 2);
+    rk_cluster
+        .create_topic_replicated("rk", 8, ReplicationConfig::new(2))
+        .unwrap();
+    for p in 0..8 {
+        rk_cluster.produce("rk", p, 4, &[vec![0u8; 1024]]).unwrap();
+    }
+    let mut rack = 0usize;
+    bench.run("broker/rack-failover-8part", 300, || {
+        let reports = rk_cluster.kill_rack(rack).unwrap();
+        for r in &reports {
+            rk_cluster.rejoin_broker(r.killed).unwrap();
+        }
+        rk_cluster.replication_heartbeat("rk").unwrap();
+        rack ^= 1;
+        std::hint::black_box(reports);
     });
 
     // --- L1/L2 artifact execution ------------------------------------------

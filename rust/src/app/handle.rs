@@ -175,6 +175,11 @@ fn launch_inner(
     let resource = app.broker.description.0.resource.clone();
     let (broker_pilot, cluster) = service.start_kafka(app.broker.description.clone())?;
     started.push(broker_pilot.clone());
+    if app.broker.racks > 0 {
+        // Label failure domains before any topic exists so every
+        // replica set the topics below create is placed rack-aware.
+        cluster.set_racks(app.broker.racks);
+    }
     for t in &app.broker.topics {
         cluster.create_topic_replicated(&t.name, t.partitions, app.broker.replication)?;
     }

@@ -55,6 +55,13 @@ pub struct BrokerSpec {
     /// ([`ReplicationSpec::validate`]d against the fleet size by
     /// [`StreamingAppBuilder::build`]).
     pub replication: ReplicationSpec,
+    /// Failure domains the broker fleet is striped across (0 = no rack
+    /// labels).  Launch assigns brokers round-robin to the domains and
+    /// replica placement becomes rack-anti-affine: no two replicas of a
+    /// partition share a domain while distinct domains remain.
+    /// Validated against the fleet size by
+    /// [`StreamingAppBuilder::build`].
+    pub racks: usize,
 }
 
 /// One data source: `producers` producer tasks on a pilot-managed
@@ -348,6 +355,7 @@ impl StreamingApp {
         StreamingAppBuilder {
             broker: None,
             replication: None,
+            racks: None,
             sources: Vec::new(),
             stages: Vec::new(),
             autoscalers: Vec::new(),
@@ -362,6 +370,8 @@ pub struct StreamingAppBuilder {
     /// `.replication(..)` override; applied to the broker tier at
     /// build time so call order doesn't matter.
     replication: Option<ReplicationSpec>,
+    /// `.racks(..)` override; applied like `replication`.
+    racks: Option<usize>,
     sources: Vec<SourceSpec>,
     stages: Vec<StageSpec>,
     autoscalers: Vec<AutoscaleSpec>,
@@ -382,6 +392,7 @@ impl StreamingAppBuilder {
                 })
                 .collect(),
             replication: ReplicationSpec::default(),
+            racks: 0,
         })
     }
 
@@ -398,6 +409,17 @@ impl StreamingAppBuilder {
     /// pilot launches.
     pub fn replication(mut self, spec: ReplicationSpec) -> Self {
         self.replication = Some(spec);
+        self
+    }
+
+    /// Failure domains for the broker fleet (0 = unracked).  Launch
+    /// stripes brokers round-robin across the domains and replica
+    /// placement becomes rack-anti-affine; composes with `.broker(..)`
+    /// in either order (applied at [`build`](Self::build)) and a domain
+    /// count the fleet can't fill is rejected before any pilot
+    /// launches.
+    pub fn racks(mut self, racks: usize) -> Self {
+        self.racks = Some(racks);
         self
     }
 
@@ -433,6 +455,9 @@ impl StreamingAppBuilder {
         if let Some(replication) = self.replication {
             broker.replication = replication;
         }
+        if let Some(racks) = self.racks {
+            broker.racks = racks;
+        }
         if broker.topics.is_empty() {
             return err("broker declares no topics".into());
         }
@@ -454,6 +479,16 @@ impl StreamingAppBuilder {
         // Same check topic creation applies, surfaced pre-launch: a
         // replica factor the fleet can't host is a spec error.
         broker.replication.validate(broker_nodes)?;
+        // More domains than brokers would leave empty racks — the
+        // anti-affinity they promise cannot exist, so reject the spec
+        // rather than silently running with hollow failure domains.
+        if broker.racks > broker_nodes {
+            return err(format!(
+                "broker.racks {} exceeds the broker tier's {broker_nodes} node(s) — every \
+                 failure domain needs at least one broker",
+                broker.racks
+            ));
+        }
         for t in &broker.topics {
             if t.partitions == 0 {
                 return err(format!("topic '{}': zero partitions", t.name));
@@ -565,7 +600,10 @@ impl StreamingAppBuilder {
     /// AOT artifacts).  The broker block takes an optional
     /// `replication` object (`factor` required, `ack_mode`
     /// leader|quorum, `min_insync`, `replica_lag_max`,
-    /// `follower_fetch`); each stage takes an optional
+    /// `follower_fetch`) and an optional `racks` count (failure
+    /// domains the brokers are striped across round-robin, making
+    /// replica placement rack-anti-affine); each stage takes an
+    /// optional
     /// `autoscale` block (`policy` threshold|bin-packing with its
     /// knobs, `target` stage|broker, `max_extension_nodes`, `max_step`,
     /// `sample_interval_ms`, `coschedule_broker`).
@@ -580,8 +618,9 @@ impl StreamingAppBuilder {
         )?;
         let mut b = StreamingApp::builder();
         let broker = doc.req("broker")?;
-        check_keys(broker, "broker", &["nodes", "topics", "replication"])?;
+        check_keys(broker, "broker", &["nodes", "topics", "replication", "racks"])?;
         let nodes = broker.get("nodes").and_then(Json::as_usize).unwrap_or(1);
+        let racks = broker.get("racks").and_then(Json::as_usize).unwrap_or(0);
         let topics = broker
             .req("topics")?
             .as_arr()
@@ -602,6 +641,7 @@ impl StreamingAppBuilder {
             description: KafkaDescription::new(nodes),
             topics: spec_topics,
             replication,
+            racks,
         });
         for s in doc.get("sources").and_then(Json::as_arr).unwrap_or(&[]) {
             b = b.source(source_from_json(s)?);
@@ -1197,6 +1237,64 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("unknown ack_mode 'always'"), "{err}");
+    }
+
+    #[test]
+    fn racks_round_trip_and_hollow_domains_are_rejected_prelaunch() {
+        // Builder surface: .racks composes with .broker in either order.
+        let app = StreamingApp::builder()
+            .racks(2)
+            .broker(KafkaDescription::new(4), &[("t", 4)])
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap();
+        assert_eq!(app.broker.racks, 2);
+        // Unracked by default.
+        let app = StreamingApp::builder()
+            .broker(KafkaDescription::new(1), &[("t", 1)])
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap();
+        assert_eq!(app.broker.racks, 0);
+
+        // More domains than brokers: rejected before anything launches.
+        let err = StreamingApp::builder()
+            .broker(KafkaDescription::new(2), &[("t", 1)])
+            .racks(3)
+            .stage(counter_stage("c", "t"))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("broker.racks 3 exceeds"), "{err}");
+
+        // JSON surface: same knob through the file spec.
+        let app = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "nodes": 4, "racks": 2,
+                             "topics": [ { "name": "t", "partitions": 4 } ],
+                             "replication": { "factor": 2 } },
+                 "stages": [ { "name": "s", "topic": "t", "processor": "counter" } ] }"#,
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+        assert_eq!(app.broker.racks, 2);
+        assert_eq!(app.broker.replication.factor, 2);
+
+        // TOML lowers to the same schema.
+        let app = StreamingAppBuilder::from_toml_str(
+            "[broker]\nnodes = 4\nracks = 2\n\n[[broker.topics]]\nname = \"t\"\n\
+             partitions = 4\n\n[[stages]]\nname = \"s\"\ntopic = \"t\"\nprocessor = \"counter\"\n",
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+        assert_eq!(app.broker.racks, 2);
+
+        // A typo'd key stays a spec error.
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [], "rakcs": 2 } }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown broker key: rakcs"), "{err}");
     }
 
     #[test]

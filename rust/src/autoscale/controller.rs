@@ -411,6 +411,38 @@ impl ControlLoop {
                     PlanStep::ShrinkProcessing { nodes: down } => {
                         self.shrink_processing(down, nodes, min_nodes, &snapshot, t, policy_name);
                     }
+                    PlanStep::ReassignReplicas { moves: planned_moves, cost } => {
+                        // Placement repair on the existing tier: move
+                        // follower replicas off crowded racks and hot
+                        // brokers.  No nodes change hands, so the free
+                        // machine capacity is irrelevant here.  Topic
+                        // gone / cluster stopping: skip this tick.
+                        let Ok(moved) = self.cluster.reassign_replicas() else {
+                            break;
+                        };
+                        if moved == 0 {
+                            // Placement already converged (the skew the
+                            // snapshot saw was healed by a racing
+                            // failover or an earlier tick): nothing to
+                            // record.
+                            continue;
+                        }
+                        self.timeline.record(ScalingEvent {
+                            at_secs: t,
+                            action: ScalingAction::ReassignReplicas,
+                            // `delta_nodes` counts moved replicas, not
+                            // nodes: the tier size is unchanged.
+                            delta_nodes: moved,
+                            total_nodes: self.cluster.broker_nodes().len(),
+                            lag: snapshot.lag,
+                            partitions: live_partitions,
+                            policy: policy_name.to_string(),
+                            reaction_secs: 0.0,
+                            cost_secs: cost.lead_secs * moved as f64
+                                / (planned_moves.max(1)) as f64,
+                            lost_records: 0,
+                        });
+                    }
                 }
             }
         }
@@ -789,6 +821,75 @@ mod tests {
         // The queue drained: no duplicate events on later ticks.
         std::thread::sleep(Duration::from_millis(100));
         assert_eq!(scaler.timeline().count(ScalingAction::Failover), 1);
+
+        for p in scaler.stop() {
+            let _ = service.stop_pilot(&p);
+        }
+        service.stop_pilot(&spark).unwrap();
+        service.stop_pilot(&kafka).unwrap();
+    }
+
+    #[test]
+    fn rack_skew_actuates_replica_reassignment_not_a_broker_extension() {
+        use crate::broker::ReplicationConfig;
+
+        let service = Arc::new(PilotComputeService::new(Machine::unthrottled(5)));
+        let (kafka, cluster) = service
+            .start_kafka(crate::pilot::KafkaDescription::new(4))
+            .unwrap();
+        let (spark, _engine) = service
+            .start_spark(SparkDescription::new(1).with_config("executors_per_node", "1"))
+            .unwrap();
+        cluster.set_racks(2);
+        cluster
+            .create_topic_replicated("rr", 2, ReplicationConfig::new(2))
+            .unwrap();
+
+        // Manufacture placement debt before the loop starts: bounce the
+        // whole of rack 1.  The rejoined brokers hold no replicas, so
+        // every set is crowded onto rack 0 and the probe reports
+        // rack_skew = 1.0 from the first sample.
+        let victims: Vec<_> = cluster.kill_rack(1).unwrap().iter().map(|r| r.killed).collect();
+        for v in victims {
+            cluster.rejoin_broker(v).unwrap();
+        }
+        assert_eq!(cluster.rack_skew(), 1.0);
+
+        // Quiet policy: every intent is Hold, so any action on the
+        // timeline comes from the planner's repair branch.
+        let policy = ThresholdPolicy::new(1_000, 0).with_cooldown_secs(0.05);
+        let scaler = Autoscaler::spawn(
+            service.clone(),
+            spark.clone(),
+            cluster.clone(),
+            None,
+            Box::new(policy),
+            AutoscalerConfig::new("rr", "g").with_sample_interval(Duration::from_millis(20)),
+        );
+
+        let timeline = scaler.timeline();
+        assert!(
+            wait_until(|| timeline.count(ScalingAction::ReassignReplicas) >= 1, 5.0),
+            "no ReassignReplicas event within 5s"
+        );
+        assert_eq!(cluster.rack_skew(), 0.0, "reassignment must heal the skew");
+        let events = timeline.events();
+        let ev = events
+            .iter()
+            .find(|e| e.action == ScalingAction::ReassignReplicas)
+            .unwrap();
+        assert_eq!(ev.policy, "threshold");
+        assert!(ev.delta_nodes >= 1, "delta_nodes carries the moved-replica count");
+        assert_eq!(ev.total_nodes, 4, "the tier itself never grew");
+        assert!(ev.cost_secs > 0.0);
+        assert_eq!(ev.lost_records, 0);
+        // Placement repair is the *cheap* path: no broker pilot was
+        // extended (spawn() has none to extend, and the reassign branch
+        // must not require one), and once the skew is healed the
+        // planner holds — no event spam on later ticks.
+        assert_eq!(scaler.broker_extension_count(), 0);
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(timeline.count(ScalingAction::ReassignReplicas), 1);
 
         for p in scaler.stop() {
             let _ = service.stop_pilot(&p);

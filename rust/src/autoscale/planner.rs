@@ -65,6 +65,13 @@ pub enum PlanStep {
     ExtendProcessing { nodes: usize, cost: StepCost },
     /// Release `nodes` processing nodes (stop extension pilots).
     ShrinkProcessing { nodes: usize },
+    /// Move up to `moves` follower replicas off hot or rack-crowded
+    /// brokers ([`crate::broker::BrokerCluster::reassign_replicas`]).
+    /// Re-places existing replicas on the existing tier — no new
+    /// nodes, so its cost is a short lead and zero node-seconds; the
+    /// cheap alternative the planner prefers over a broker extension
+    /// when capacity is fine but *placement* is not.
+    ReassignReplicas { moves: usize, cost: StepCost },
 }
 
 /// Why a plan was deferred instead of actuated.
@@ -141,7 +148,8 @@ impl ScalingPlan {
             .map(|s| match s {
                 PlanStep::ExtendBroker { cost, .. }
                 | PlanStep::Repartition { cost, .. }
-                | PlanStep::ExtendProcessing { cost, .. } => cost.lead_secs,
+                | PlanStep::ExtendProcessing { cost, .. }
+                | PlanStep::ReassignReplicas { cost, .. } => cost.lead_secs,
                 PlanStep::ShrinkProcessing { .. } => 0.0,
             })
             .fold(0.0, f64::max)
@@ -172,6 +180,12 @@ pub struct PlannerConfig {
     /// Largest broker extension a single plan may co-schedule (0
     /// disables broker co-scheduling entirely).
     pub max_broker_step: usize,
+    /// Broker-tier load imbalance (`SignalSnapshot::broker_util_skew`,
+    /// peak minus mean per-node utilization) beyond which a Hold turns
+    /// into a replica-reassignment step.  Placement repair is not
+    /// gated by `max_broker_step`: it moves replicas on the tier the
+    /// cluster already has.
+    pub broker_skew_threshold: f64,
 }
 
 impl Default for PlannerConfig {
@@ -184,6 +198,7 @@ impl Default for PlannerConfig {
             partitions_per_broker_node: 12,
             broker_util_threshold: 0.85,
             max_broker_step: 2,
+            broker_skew_threshold: 0.5,
         }
     }
 }
@@ -217,6 +232,11 @@ impl PlannerConfig {
 
     pub fn with_max_broker_step(mut self, nodes: usize) -> Self {
         self.max_broker_step = nodes;
+        self
+    }
+
+    pub fn with_broker_skew_threshold(mut self, threshold: f64) -> Self {
+        self.broker_skew_threshold = threshold.clamp(0.05, 1.0);
         self
     }
 }
@@ -277,18 +297,45 @@ impl Planner {
     /// `BrokerCluster::add_brokers` reassigns every degraded replica
     /// set as soon as the node lands, and the next probe re-plans if
     /// the tier lost more than one node.
+    /// Placement debt — rack-crowded replica sets or one hot broker
+    /// next to idle peers — also turns a Hold into action, but the
+    /// *cheap* kind: a [`PlanStep::ReassignReplicas`] that re-places
+    /// follower replicas on the tier the cluster already has, instead
+    /// of buying a node.  Availability repair always wins when both
+    /// fire: reassignment is pointless while quorum is down.
     fn plan_replication_repair(&self, s: &SignalSnapshot) -> ScalingPlan {
-        if s.below_min_insync == 0 || self.config.max_broker_step == 0 {
-            return ScalingPlan::hold();
+        if s.below_min_insync > 0 && self.config.max_broker_step > 0 {
+            return ScalingPlan {
+                steps: vec![PlanStep::ExtendBroker {
+                    nodes: 1,
+                    cost: self.extend_cost(self.config.broker_framework, 1),
+                }],
+                expected_drain_msgs: 0.0,
+                deferred: None,
+            };
         }
-        ScalingPlan {
-            steps: vec![PlanStep::ExtendBroker {
-                nodes: 1,
-                cost: self.extend_cost(self.config.broker_framework, 1),
-            }],
-            expected_drain_msgs: 0.0,
-            deferred: None,
+        if s.below_min_insync == 0
+            && s.broker_nodes > 1
+            && (s.rack_skew > 0.0 || s.broker_util_skew >= self.config.broker_skew_threshold)
+        {
+            // Size the pass by the crowding it must undo (at least one
+            // move for a pure load-skew trigger).  Moving a replica is
+            // a metadata edit plus a catch-up stream — a short lead,
+            // no committed node-seconds.
+            let moves = ((s.partitions as f64 * s.rack_skew).ceil() as usize).max(1);
+            return ScalingPlan {
+                steps: vec![PlanStep::ReassignReplicas {
+                    moves,
+                    cost: StepCost {
+                        lead_secs: (moves as f64 * 0.5).max(1.0),
+                        node_secs: 0.0,
+                    },
+                }],
+                expected_drain_msgs: 0.0,
+                deferred: None,
+            };
         }
+        ScalingPlan::hold()
     }
 
     /// Drain benefit of `k` extra nodes within the horizon: the extra
@@ -450,6 +497,8 @@ mod tests {
             broker_disk_util: 0.0,
             under_replicated: 0,
             below_min_insync: 0,
+            broker_util_skew: 0.0,
+            rack_skew: 0.0,
             shard_queue_depths: Vec::new(),
         }
     }
@@ -684,6 +733,64 @@ mod tests {
         assert_eq!(plan.added_broker_nodes(), 1);
         assert!(matches!(plan.steps[0], PlanStep::ExtendBroker { .. }));
         assert_eq!(plan.added_processing_nodes(), 2);
+    }
+
+    #[test]
+    fn rack_skew_turns_hold_into_reassignment_not_extension() {
+        let p = planner();
+        let mut s = snap(0, 4);
+        s.rack_skew = 1.0; // every replicated partition crowded
+        let plan = p.plan(ScalingIntent::Hold, &s);
+        assert_eq!(plan.added_broker_nodes(), 0, "placement repair buys no nodes");
+        assert_eq!(plan.added_processing_nodes(), 0);
+        let PlanStep::ReassignReplicas { moves, cost } = plan.steps[0] else {
+            panic!("expected reassignment step, got {:?}", plan.steps);
+        };
+        assert_eq!(moves, 8, "one move per crowded partition (8 partitions x skew 1.0)");
+        assert_eq!(cost.lead_secs, 4.0);
+        assert_eq!(cost.node_secs, 0.0, "no committed node-seconds");
+        assert_eq!(plan.total_lead_secs(), 4.0);
+        // Not gated by max_broker_step: reassignment never buys nodes.
+        let p0 = Planner::new(PlannerConfig::default().with_max_broker_step(0));
+        let plan = p0.plan(ScalingIntent::Hold, &s);
+        assert!(matches!(plan.steps[0], PlanStep::ReassignReplicas { .. }));
+        // A single-broker tier has nowhere to move replicas.
+        s.broker_nodes = 1;
+        assert!(p.plan(ScalingIntent::Hold, &s).is_hold());
+    }
+
+    #[test]
+    fn hot_broker_skew_triggers_reassignment_below_repair_above_hold() {
+        let p = planner();
+        let mut s = snap(0, 4);
+        s.broker_util_skew = 0.6; // default threshold 0.5
+        let plan = p.plan(ScalingIntent::Hold, &s);
+        let PlanStep::ReassignReplicas { moves, .. } = plan.steps[0] else {
+            panic!("expected reassignment step, got {:?}", plan.steps);
+        };
+        assert_eq!(moves, 1, "pure load skew sizes a minimal pass");
+        // Below the threshold, a Hold stays a hold.
+        s.broker_util_skew = 0.4;
+        assert!(p.plan(ScalingIntent::Hold, &s).is_hold());
+        // A raised threshold is honored.
+        let strict =
+            Planner::new(PlannerConfig::default().with_broker_skew_threshold(0.9));
+        s.broker_util_skew = 0.6;
+        assert!(strict.plan(ScalingIntent::Hold, &s).is_hold());
+    }
+
+    #[test]
+    fn availability_repair_outranks_placement_repair() {
+        // Quorum down AND placement crowded: the replacement broker
+        // wins — reassignment is pointless while produces are rejected.
+        let p = planner();
+        let mut s = snap(0, 4);
+        s.below_min_insync = 2;
+        s.rack_skew = 1.0;
+        let plan = p.plan(ScalingIntent::Hold, &s);
+        assert_eq!(plan.added_broker_nodes(), 1);
+        assert!(matches!(plan.steps[0], PlanStep::ExtendBroker { .. }));
+        assert!(!plan.steps.iter().any(|st| matches!(st, PlanStep::ReassignReplicas { .. })));
     }
 
     #[test]

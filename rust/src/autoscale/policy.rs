@@ -414,6 +414,8 @@ mod tests {
             broker_disk_util: 0.0,
             under_replicated: 0,
             below_min_insync: 0,
+            broker_util_skew: 0.0,
+            rack_skew: 0.0,
             shard_queue_depths: Vec::new(),
         }
     }

@@ -78,6 +78,20 @@ pub struct SignalSnapshot {
     /// first-class signal and answers with a broker replacement step
     /// even when lag alone says Hold.
     pub below_min_insync: usize,
+    /// Broker-tier load imbalance: the peak per-node utilization
+    /// (each node's worse of NIC and disk) minus the tier mean, over
+    /// the last sample interval.  0.0 when the tier is balanced or
+    /// unthrottled; approaches the peak util itself when one broker
+    /// runs hot while the rest idle.  Together with `rack_skew` this
+    /// drives the planner's replica-reassignment step — moving
+    /// follower replicas is cheaper than extending the tier.
+    pub broker_util_skew: f64,
+    /// Fraction of the watched-topic's replicated partitions whose
+    /// replica set needlessly co-locates two replicas in one failure
+    /// domain ([`crate::broker::BrokerCluster::rack_skew`]).  Non-zero
+    /// after rack bounces re-admit brokers into already-full replica
+    /// sets; cleared by replica reassignment, not by tier extension.
+    pub rack_skew: f64,
     /// Fetchers parked on each broker data-plane shard's doorbell at
     /// sample time, indexed by shard id
     /// ([`crate::broker::BrokerCluster::shard_stats`]).  A planner
@@ -160,10 +174,11 @@ impl SignalProbe {
     /// its current counters — zero delta, so a freshly joined broker's
     /// lifetime bytes never read as one interval's saturation spike.
     /// Unthrottled buckets report 0.0.
-    fn broker_utilization(&mut self, dt: f64) -> (usize, f64, f64) {
+    fn broker_utilization(&mut self, dt: f64) -> (usize, f64, f64, f64) {
         let io = self.cluster.broker_io();
         let mut nic_util = 0.0f64;
         let mut disk_util = 0.0f64;
+        let mut per_node: Vec<f64> = Vec::with_capacity(io.len());
         let mut next = HashMap::with_capacity(io.len());
         for stat in &io {
             let (prev_in, prev_out, prev_disk) = self
@@ -171,22 +186,36 @@ impl SignalProbe {
                 .get(&stat.node)
                 .copied()
                 .unwrap_or((stat.nic_in_bytes, stat.nic_out_bytes, stat.disk_bytes));
+            let mut node_util = 0.0f64;
             if let Some(rate) = stat.nic_rate {
                 // Each direction has its own token bucket; the gauge is
                 // the worse of the two, so a produce-only flood (the
                 // backlog-building case) reads as full saturation.
                 let used_in = stat.nic_in_bytes.saturating_sub(prev_in) as f64 / dt;
                 let used_out = stat.nic_out_bytes.saturating_sub(prev_out) as f64 / dt;
+                node_util = node_util.max(used_in.max(used_out) / rate);
                 nic_util = nic_util.max(used_in.max(used_out) / rate);
             }
             if let Some(rate) = stat.disk_rate {
                 let used = stat.disk_bytes.saturating_sub(prev_disk) as f64 / dt;
+                node_util = node_util.max(used / rate);
                 disk_util = disk_util.max(used / rate);
             }
+            per_node.push(node_util);
             next.insert(stat.node, (stat.nic_in_bytes, stat.nic_out_bytes, stat.disk_bytes));
         }
         self.prev_broker_io = next;
-        (io.len(), nic_util, disk_util)
+        // Peak-minus-mean over each node's worse gauge: a balanced (or
+        // unthrottled) tier reads 0, one hot node among idle peers
+        // reads close to the hot node's own utilization.
+        let util_skew = if per_node.is_empty() {
+            0.0
+        } else {
+            let peak = per_node.iter().copied().fold(0.0f64, f64::max);
+            let mean = per_node.iter().sum::<f64>() / per_node.len() as f64;
+            peak - mean
+        };
+        (io.len(), nic_util, disk_util, util_skew)
     }
 
     /// One pass over the topic: total end offset + per-partition
@@ -225,7 +254,9 @@ impl SignalProbe {
         let lag: u64 = partition_backlog.iter().sum();
 
         let dt = (t_secs - self.prev_t).max(1e-6);
-        let (broker_nodes, broker_nic_util, broker_disk_util) = self.broker_utilization(dt);
+        let (broker_nodes, broker_nic_util, broker_disk_util, broker_util_skew) =
+            self.broker_utilization(dt);
+        let rack_skew = self.cluster.rack_skew();
         let produce_rate = end_sum.saturating_sub(self.prev_end_sum) as f64 / dt;
         let lag_slope = (lag as f64 - self.prev_lag as f64) / dt;
         let consume_rate = (produce_rate - lag_slope).max(0.0);
@@ -268,6 +299,8 @@ impl SignalProbe {
             broker_disk_util,
             under_replicated,
             below_min_insync,
+            broker_util_skew,
+            rack_skew,
             shard_queue_depths,
         })
     }
@@ -405,6 +438,37 @@ mod tests {
         let s = probe.sample(1.0, 1, 1, 2).unwrap();
         assert_eq!(s.under_replicated, 2);
         assert_eq!(s.below_min_insync, 0, "quorum still healthy at min_insync 1");
+    }
+
+    #[test]
+    fn probe_surfaces_broker_util_skew_and_rack_skew() {
+        use crate::broker::ReplicationConfig;
+        // One hot broker next to an idle peer: peak-minus-mean fires.
+        let machine = crate::cluster::Machine::wrangler(3);
+        let cluster = BrokerCluster::new(machine, vec![0, 1]);
+        cluster.create_topic("t", 2).unwrap();
+        let mut probe = SignalProbe::new(cluster.clone(), "t", "g", None, 1.0);
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        assert_eq!(s.broker_util_skew, 0.0, "seeded baseline");
+        assert_eq!(s.rack_skew, 0.0, "unracked tier");
+        cluster.produce("t", 0, 2, &[vec![0u8; 8192]]).unwrap();
+        let s = probe.sample(2.0, 1, 1, 2).unwrap();
+        assert!(s.broker_util_skew > 0.0, "skew {}", s.broker_util_skew);
+        assert!(s.broker_util_skew <= s.broker_nic_util.max(s.broker_disk_util));
+
+        // A rack bounce leaves every replica set co-located in the
+        // surviving domain; the probe surfaces the placement debt.
+        let c = BrokerCluster::with_racks(Machine::unthrottled(6), vec![0, 1, 2, 3], 2);
+        c.create_topic_replicated("t", 4, ReplicationConfig::new(2)).unwrap();
+        c.kill_rack(1).unwrap();
+        c.rejoin_broker(1).unwrap();
+        c.rejoin_broker(3).unwrap();
+        let mut probe = SignalProbe::new(c.clone(), "t", "g", None, 1.0);
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        assert_eq!(s.rack_skew, 1.0, "every set co-located after the rack bounce");
+        c.reassign_replicas().unwrap();
+        let s = probe.sample(2.0, 1, 1, 2).unwrap();
+        assert_eq!(s.rack_skew, 0.0, "reassignment clears the placement debt");
     }
 
     #[test]

@@ -37,7 +37,9 @@ use crate::util::ArcCell;
 
 use super::log::{LogConfig, PartitionLog, Record};
 use super::repartition::EpochTransition;
-use super::replication::{AckMode, FailoverEvent, ReplicaSet, ReplicationConfig};
+use super::replication::{
+    AckMode, DepartedBroker, FailoverEvent, ReplicaSet, ReplicationConfig,
+};
 use super::shard::{default_shards, Shard, ShardSet, ShardStats, QUIESCE_SLICE, QUIESCE_WAIT_MAX};
 
 /// One partition: leader broker node + the log + fetch wakeups.
@@ -218,6 +220,19 @@ pub(super) struct Inner {
     /// so unrelated membership churn does not remap coordinators the
     /// way hashing over the alive list did.
     pub(super) coordinator_ring: Mutex<Vec<NodeId>>,
+    /// Failure-domain labels: broker node → rack id.  Empty = unracked
+    /// (placement stays pure ring order).  Labels persist across node
+    /// death so a re-joining broker returns to its old domain — see
+    /// [`BrokerCluster::set_racks`].
+    pub(super) racks: Mutex<HashMap<NodeId, usize>>,
+    /// Replica placements forced to co-locate two replicas in one rack
+    /// because no anti-affine slot existed (see
+    /// [`BrokerCluster::rack_constraint_violations`]).
+    pub(super) rack_constraint_violations: AtomicU64,
+    /// Retained replica state of killed brokers, keyed by node: the
+    /// mirrors each victim held at death plus per-partition divergence
+    /// fences, consumed by [`BrokerCluster::rejoin_broker`].
+    pub(super) departed: Mutex<HashMap<NodeId, DepartedBroker>>,
 }
 
 /// One broker node's cumulative I/O counters and bucket capacities
@@ -298,8 +313,59 @@ impl BrokerCluster {
                 timelines: Mutex::new(Vec::new()),
                 failover_events: Mutex::new(Vec::new()),
                 coordinator_ring: Mutex::new(ring),
+                racks: Mutex::new(HashMap::new()),
+                rack_constraint_violations: AtomicU64::new(0),
+                departed: Mutex::new(HashMap::new()),
             }),
         }
+    }
+
+    /// [`BrokerCluster::new`] with `racks` failure domains: the broker
+    /// node at position `i` of `broker_nodes` is labeled rack
+    /// `i % racks`.  Replica placement becomes rack-anti-affine (leader
+    /// and followers spread across distinct domains where possible) and
+    /// [`BrokerCluster::kill_rack`] can take a whole domain down
+    /// atomically.
+    pub fn with_racks(machine: Machine, broker_nodes: Vec<NodeId>, racks: usize) -> Self {
+        let c = Self::new(machine, broker_nodes);
+        c.set_racks(racks);
+        c
+    }
+
+    /// (Re)label the alive brokers into `racks` failure domains, node
+    /// at membership position `i` → rack `i % racks` (0 clears every
+    /// label).  Labels steer *subsequent* replica placement — topic
+    /// creation, heal-path refills, reassignment — and persist across
+    /// node death, so a killed broker re-joins its old domain.
+    /// Existing replica sets are not reshuffled by relabeling alone;
+    /// [`BrokerCluster::reassign_replicas`] migrates them on demand.
+    pub fn set_racks(&self, racks: usize) {
+        let _control = self.inner.control.lock().unwrap();
+        let brokers = self.inner.broker_nodes.load();
+        let mut map = self.inner.racks.lock().unwrap();
+        map.clear();
+        if racks == 0 {
+            return;
+        }
+        for (i, b) in brokers.iter().enumerate() {
+            map.insert(*b, i % racks);
+        }
+    }
+
+    /// The failure domain `node` is labeled with (`None` when unracked
+    /// or unknown).  Answers for dead nodes too: labels survive death
+    /// so a re-join lands back in the old domain.
+    pub fn rack_of(&self, node: NodeId) -> Option<usize> {
+        self.inner.racks.lock().unwrap().get(&node).copied()
+    }
+
+    /// How many replica placements were forced to co-locate two
+    /// replicas in one rack because no anti-affine slot existed (the
+    /// explicit fallback counter: rack constraints are best-effort, a
+    /// tier with fewer domains than the factor still places every
+    /// replica).  Cumulative across all placement passes.
+    pub fn rack_constraint_violations(&self) -> u64 {
+        self.inner.rack_constraint_violations.load(Ordering::Relaxed)
     }
 
     /// Number of data-plane shards (fixed at creation).
@@ -439,7 +505,7 @@ impl BrokerCluster {
                 ))
             })
             .collect();
-        Self::assign_replica_sets(&parts, replication.factor, &brokers);
+        self.assign_replica_sets(&parts, replication.factor, &brokers);
         let mut next = topics.as_ref().clone();
         next.insert(
             name.to_string(),
@@ -557,10 +623,12 @@ impl BrokerCluster {
             self.sync_partition_followers(p, &rep, 0);
             let in_sync = p.replicas.lock().unwrap().isr.len();
             if in_sync < rep.min_insync {
-                return Err(Error::Broker(format!(
-                    "{}/{partition}: not enough in-sync replicas ({in_sync} of min_insync {})",
-                    t.name, rep.min_insync
-                )));
+                return Err(Error::NotEnoughInSyncReplicas {
+                    topic: t.name.clone(),
+                    partition,
+                    isr: in_sync,
+                    min_insync: rep.min_insync,
+                });
             }
         }
 
@@ -779,6 +847,16 @@ impl BrokerCluster {
                 }
             }
         }
+        {
+            // A node added through the heal path adopts fully-caught-up
+            // mirrors below, so any retained divergence state from an
+            // earlier death is obsolete (the honest-truncation path is
+            // `rejoin_broker`).
+            let mut departed = self.inner.departed.lock().unwrap();
+            for n in &nodes {
+                departed.remove(n);
+            }
+        }
         let mut brokers = self.inner.broker_nodes.load().as_ref().clone();
         brokers.extend(nodes);
         let n = brokers.len();
@@ -788,7 +866,7 @@ impl BrokerCluster {
             for (i, p) in topic.partitions.iter().enumerate() {
                 p.leader.store(i % n, Ordering::Relaxed);
             }
-            Self::assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
+            self.assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
         }
     }
 
@@ -809,7 +887,7 @@ impl BrokerCluster {
             for (i, p) in topic.partitions.iter().enumerate() {
                 p.leader.store(i % n, Ordering::Relaxed);
             }
-            Self::assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
+            self.assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
         }
         Ok(())
     }

@@ -747,6 +747,22 @@ impl LogMirror {
         self
     }
 
+    /// Truncate this mirror's claimed tail to `offset` (exclusive):
+    /// the KIP-101-style divergence cut a re-joining replica applies
+    /// after comparing its retained log against the current leader
+    /// epoch.  Accounting-level — the adopted segment `Arc`s are kept
+    /// (slab payloads stay shared) but the mirror stops claiming any
+    /// record at or past `offset`, and its applied watermark is pulled
+    /// back with it.  Returns how many claimed records were dropped.
+    /// A no-op (returns 0) when the mirror already ends at or before
+    /// `offset`.
+    pub fn truncate_to(&mut self, offset: u64) -> u64 {
+        let dropped = self.end_offset.saturating_sub(offset);
+        self.end_offset = self.end_offset.min(offset);
+        self.high_watermark = self.high_watermark.min(self.end_offset);
+        dropped
+    }
+
     /// Payload bytes reachable through the adopted segments.
     pub fn total_bytes(&self) -> usize {
         self.total_bytes
@@ -808,6 +824,23 @@ mod tests {
         log.append_batch([b"x".as_slice()], 0);
         assert!(log.read(1, 1024).unwrap().is_empty());
         assert!(log.read(100, 1024).unwrap().is_empty());
+    }
+
+    #[test]
+    fn mirror_truncate_drops_claimed_tail_and_watermark() {
+        let log = log_with(1024, None);
+        log.append_batch([b"a".as_slice(), b"b".as_slice(), b"c".as_slice()], 0);
+        let mut m = log.mirror();
+        assert_eq!(m.end_offset(), 3);
+        assert_eq!(m.high_watermark(), 3);
+        assert_eq!(m.truncate_to(1), 2, "two claimed records dropped");
+        assert_eq!(m.end_offset(), 1);
+        assert_eq!(m.high_watermark(), 1, "watermark pulled back with the cut");
+        assert_eq!(m.truncate_to(5), 0, "past-end truncation is a no-op");
+        assert_eq!(m.end_offset(), 1);
+        // The watermark can never be re-advanced past the truncated end.
+        m.set_high_watermark(10);
+        assert_eq!(m.high_watermark(), 1);
     }
 
     #[test]

@@ -45,5 +45,5 @@ pub use consumer::{Consumer, ConsumerConfig, PartitionRecord};
 pub use log::{copytrack, LogConfig, LogMirror, PartitionLog, Record, SharedSlice};
 pub use producer::{AckBatch, Partitioner, Producer, ProducerConfig};
 pub use repartition::{jump_hash, key_hash, key_partition, EpochTransition, ServePlan};
-pub use replication::{AckMode, FailoverEvent, FailoverReport, ReplicationConfig};
+pub use replication::{AckMode, FailoverEvent, FailoverReport, RejoinReport, ReplicationConfig};
 pub use shard::{default_shards, shard_of, ShardStats};

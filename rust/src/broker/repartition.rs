@@ -190,7 +190,7 @@ impl BrokerCluster {
         // Fresh partitions inherit the topic's replication: followers on
         // the next brokers of the ring, adopting the (empty) leader log.
         if first_new < partitions.len() {
-            Self::assign_replica_sets(
+            self.assign_replica_sets(
                 &partitions[first_new..],
                 t.replication.factor,
                 &self.inner.broker_nodes.load(),

@@ -236,6 +236,39 @@ pub struct FailoverEvent {
     pub recovery_secs: f64,
 }
 
+/// Per-partition state a killed broker retains on its (modeled) local
+/// disk, keyed by `(topic, partition id)`: the log mirror it held at
+/// death plus the *divergence fence* — the last offset the surviving
+/// leader epoch agrees with.  [`BrokerCluster::rejoin_broker`]
+/// truncates the retained mirror to the fence (KIP-101-style: a
+/// returning replica drops the tail the new leader's epoch never
+/// acked) before re-admitting the node as a follower.
+#[derive(Debug, Default)]
+pub(super) struct DepartedBroker {
+    pub(super) retained: HashMap<(String, usize), (LogMirror, u64)>,
+}
+
+/// What one [`BrokerCluster::rejoin_broker`] did, for assertions and
+/// logs (the timeline analogue is [`ScalingAction::Rejoin`]).
+#[derive(Debug, Clone)]
+pub struct RejoinReport {
+    pub node: NodeId,
+    /// Partitions that re-admitted the node as a follower — only sets
+    /// still below the topic's factor have an open slot; a set the
+    /// survivors already refilled leaves the returning node idle until
+    /// [`BrokerCluster::reassign_replicas`] moves work onto it.
+    pub rejoined: usize,
+    /// Partitions whose retained state the node carried back.
+    pub partitions: usize,
+    /// Records truncated off retained mirrors as leader-epoch
+    /// divergence.  These were already charged as `lost_records` at
+    /// kill time (or never acked); truncation is the returning
+    /// replica reconciling with that verdict, not a new loss.
+    pub truncated_records: u64,
+    /// Wall-clock seconds the rejoin took.
+    pub recovery_secs: f64,
+}
+
 impl BrokerCluster {
     /// Recompute every partition's replica set against `brokers`:
     /// leader = the partition's current leader index, followers = the
@@ -246,16 +279,68 @@ impl BrokerCluster {
     /// leader log's current segments fully caught up (the heal path),
     /// so the ISR resets to the full replica set; an injected lag
     /// re-ejects a slow follower on its next produce.
+    ///
+    /// With failure domains labeled ([`BrokerCluster::set_racks`])
+    /// placement is rack-anti-affine: follower slots walk the ring
+    /// from the leader preferring brokers in racks no earlier replica
+    /// occupies, so a whole-rack loss cannot take out every replica of
+    /// a partition.  When the tier has fewer usable domains than the
+    /// factor the walk falls back to ring order — every replica is
+    /// still placed, and each forced co-location bumps the explicit
+    /// [`BrokerCluster::rack_constraint_violations`] counter.  Unracked
+    /// clusters keep the exact historical ring-order placement.
     pub(super) fn assign_replica_sets(
+        &self,
         partitions: &[Arc<Partition>],
         factor: usize,
         brokers: &[NodeId],
     ) {
+        let racks = self.inner.racks.lock().unwrap().clone();
         let n = brokers.len().max(1);
         for p in partitions {
             let leader_idx = p.leader_index() % n;
-            let nodes: Vec<NodeId> =
-                (0..factor.min(n)).map(|k| brokers[(leader_idx + k) % n]).collect();
+            let slots = factor.min(n);
+            let nodes: Vec<NodeId> = if racks.is_empty() {
+                (0..slots).map(|k| brokers[(leader_idx + k) % n]).collect()
+            } else {
+                let leader = brokers[leader_idx];
+                let mut nodes = vec![leader];
+                // Racks already covered by chosen replicas; an
+                // unlabeled broker constrains nothing.
+                let mut used: Vec<usize> =
+                    racks.get(&leader).copied().into_iter().collect();
+                // Anti-affine pass: ring order, skipping covered racks.
+                for k in 1..n {
+                    if nodes.len() >= slots {
+                        break;
+                    }
+                    let cand = brokers[(leader_idx + k) % n];
+                    if let Some(r) = racks.get(&cand) {
+                        if used.contains(r) {
+                            continue;
+                        }
+                        used.push(*r);
+                    }
+                    nodes.push(cand);
+                }
+                // Fallback pass: racks exhausted before the factor —
+                // fill the remaining slots in ring order anyway,
+                // counting each forced co-location.
+                for k in 1..n {
+                    if nodes.len() >= slots {
+                        break;
+                    }
+                    let cand = brokers[(leader_idx + k) % n];
+                    if nodes.contains(&cand) {
+                        continue;
+                    }
+                    nodes.push(cand);
+                    self.inner
+                        .rack_constraint_violations
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                nodes
+            };
             let mut set = p.replicas.lock().unwrap();
             set.mirrors.retain(|node, _| nodes[1..].contains(node));
             set.pending_bytes.retain(|node, _| nodes[1..].contains(node));
@@ -513,8 +598,44 @@ impl BrokerCluster {
     /// killed.
     pub fn kill_broker(&self, node: NodeId) -> Result<FailoverReport> {
         self.check_running()?;
-        let started = Instant::now();
         let _control = self.inner.control.lock().unwrap();
+        self.kill_broker_inner(node)
+    }
+
+    /// Kill every alive broker labeled with failure domain `rack` in
+    /// one atomic control-plane action — the whole-rack outage
+    /// (switch/PDU loss) that rack-anti-affine placement exists to
+    /// survive.  Each victim fails over exactly as
+    /// [`BrokerCluster::kill_broker`] would, under a single control
+    /// lock so no produce or scaling action interleaves between the
+    /// deaths.  Refused when the rack has no alive broker or holds
+    /// every alive broker.
+    pub fn kill_rack(&self, rack: usize) -> Result<Vec<FailoverReport>> {
+        self.check_running()?;
+        let _control = self.inner.control.lock().unwrap();
+        let alive = self.inner.broker_nodes.load();
+        let victims: Vec<NodeId> = {
+            let racks = self.inner.racks.lock().unwrap();
+            alive.iter().copied().filter(|b| racks.get(b) == Some(&rack)).collect()
+        };
+        if victims.is_empty() {
+            return Err(Error::Broker(format!("rack {rack} has no alive broker")));
+        }
+        if victims.len() == alive.len() {
+            return Err(Error::Broker(format!(
+                "cannot kill rack {rack}: it holds every alive broker"
+            )));
+        }
+        let mut reports = Vec::with_capacity(victims.len());
+        for v in victims {
+            reports.push(self.kill_broker_inner(v)?);
+        }
+        Ok(reports)
+    }
+
+    /// The kill path proper; the caller holds the control lock.
+    fn kill_broker_inner(&self, node: NodeId) -> Result<FailoverReport> {
+        let started = Instant::now();
         let old_brokers = self.inner.broker_nodes.load();
         if !old_brokers.contains(&node) {
             return Err(Error::Broker(format!("broker node {node} is not in the cluster")));
@@ -533,6 +654,12 @@ impl BrokerCluster {
         let mut partitions = 0usize;
         let mut lost_records = 0u64;
         let mut unclean_elections = 0usize;
+        // What the dead node keeps on its (modeled) local disk, for a
+        // later rejoin_broker: its mirror per followed partition, and
+        // the divergence fence per led partition — everything above the
+        // promoted survivor's watermark belongs to the dead leader's
+        // epoch alone and must be truncated on re-entry.
+        let mut retained: HashMap<(String, usize), (LogMirror, u64)> = HashMap::new();
         let topics = self.inner.topics.load();
         for topic in topics.values() {
             for p in &topic.partitions {
@@ -540,7 +667,16 @@ impl BrokerCluster {
                 let old_leader = old_brokers[p.leader_index() % n_old];
                 let new_leader = if old_leader != node {
                     // Leadership survives; only its index moved with the
-                    // membership edit.
+                    // membership edit.  If the dead node followed this
+                    // partition, it retains its applied mirror — no
+                    // divergence: a follower never wrote past its
+                    // watermark, so its fence is its own end.
+                    if let Some(m) = p.replicas.lock().unwrap().mirrors.get(&node) {
+                        retained.insert(
+                            (topic.name.clone(), p.id),
+                            (m.clone(), m.end_offset()),
+                        );
+                    }
                     old_leader
                 } else {
                     // Deterministic promotion: first surviving *ISR*
@@ -578,10 +714,25 @@ impl BrokerCluster {
                             if !in_isr {
                                 unclean_elections += 1;
                             }
+                            // The dead leader keeps its full log, but
+                            // everything past the survivor's watermark
+                            // now belongs to an abandoned epoch: fence
+                            // at the watermark, truncate on rejoin.
+                            retained.insert(
+                                (topic.name.clone(), p.id),
+                                (p.log.mirror(), watermark),
+                            );
                             s
                         }
                         None => {
                             unreplicated += 1;
+                            // Unreplicated partition: nothing diverges
+                            // (no other epoch exists), the dead node
+                            // retains its whole log.
+                            retained.insert(
+                                (topic.name.clone(), p.id),
+                                (p.log.mirror(), p.log.end_offset()),
+                            );
                             brokers[p.id % n]
                         }
                     }
@@ -599,8 +750,9 @@ impl BrokerCluster {
             }
             // Refill follower slots from the survivors (a tier now
             // smaller than the factor leaves partitions degraded).
-            Self::assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
+            self.assign_replica_sets(&topic.partitions, topic.replication.factor, &brokers);
         }
+        self.inner.departed.lock().unwrap().insert(node, DepartedBroker { retained });
 
         // Wake every parked fetcher: the leader it resolved may be the
         // dead node; the fetch loop re-resolves against the new
@@ -644,6 +796,340 @@ impl BrokerCluster {
             unclean_elections,
             recovery_secs,
         })
+    }
+
+    /// Re-admit a previously killed broker with the log state it
+    /// retained at death.  The returning replica first reconciles with
+    /// the current leader epoch: every retained mirror is truncated to
+    /// its divergence fence (KIP-101-style — the tail past the
+    /// promoted survivor's watermark was charged as lost at kill time
+    /// and must not resurface), with the dropped total reported as
+    /// `truncated_records`.  The node then re-enters each replica set
+    /// that still has an open slot as an *out-of-sync* follower: it
+    /// joins the ISR only after catching up through the normal
+    /// replication path (a heartbeat or the next produce pass) — never
+    /// by fiat at rejoin time.  Its catch-up transfer is billed the
+    /// same way as the `add_brokers` heal: followers adopt the shared
+    /// slabs with no pending byte backlog, so re-replication IO is not
+    /// double-charged on top of the original appends.
+    ///
+    /// Only brokers that left via [`BrokerCluster::kill_broker`] /
+    /// [`BrokerCluster::kill_rack`] can rejoin; planned removals and
+    /// genuinely new nodes go through [`BrokerCluster::add_brokers`],
+    /// which clears any stale departed state for re-admitted ids.
+    pub fn rejoin_broker(&self, node: NodeId) -> Result<RejoinReport> {
+        self.check_running()?;
+        let started = Instant::now();
+        let _control = self.inner.control.lock().unwrap();
+        let old_brokers = self.inner.broker_nodes.load();
+        if old_brokers.contains(&node) {
+            return Err(Error::Broker(format!(
+                "broker node {node} is already a cluster member"
+            )));
+        }
+        let mut dep =
+            self.inner.departed.lock().unwrap().remove(&node).ok_or_else(|| {
+                Error::Broker(format!(
+                    "broker node {node} never departed this cluster \
+                     (add_brokers admits new nodes)"
+                ))
+            })?;
+        let n_old = old_brokers.len();
+        let topics = self.inner.topics.load();
+        // Leaders are stored as *indices* into the membership list;
+        // appending a member changes the modulus and would silently
+        // move leaderships onto the returning node.  Pin every index
+        // to its current resolution first — existing brokers keep
+        // their positions across the append, so leadership is
+        // preserved exactly.
+        for topic in topics.values() {
+            for p in &topic.partitions {
+                p.set_leader_index(p.leader_index() % n_old);
+            }
+        }
+        let mut brokers: Vec<NodeId> = old_brokers.iter().copied().collect();
+        brokers.push(node);
+        self.inner.broker_nodes.store(Arc::new(brokers.clone()));
+        {
+            // First-ever sighting of this id appends a coordinator
+            // ring slot; a returning id reclaims its original slot
+            // (same stability contract as add_brokers).
+            let mut ring = self.inner.coordinator_ring.lock().unwrap();
+            if !ring.contains(&node) {
+                ring.push(node);
+            }
+        }
+
+        let mut truncated_records = 0u64;
+        let mut rejoined = 0usize;
+        let partitions = dep.retained.len();
+        for topic in topics.values() {
+            for p in &topic.partitions {
+                let Some((mut mirror, fence)) =
+                    dep.retained.remove(&(topic.name.clone(), p.id))
+                else {
+                    continue;
+                };
+                truncated_records += mirror.truncate_to(fence);
+                let mut set = p.replicas.lock().unwrap();
+                if set.nodes.len() < topic.replication.factor
+                    && !set.nodes.contains(&node)
+                {
+                    set.nodes.push(node);
+                    set.mirrors.insert(node, mirror);
+                    set.pending_bytes.insert(node, 0);
+                    rejoined += 1;
+                    // Deliberately NOT pushed into set.isr: the
+                    // truncated watermark trails the leader, and ISR
+                    // re-entry must come from the replication pass
+                    // observing a closed gap.
+                }
+            }
+        }
+
+        // Wake parked fetchers so follower-fetch routing can see the
+        // returned replica on its next pass.
+        self.inner.shards.ring_all();
+
+        let recovery_secs = started.elapsed().as_secs_f64();
+        let at_secs = self.elapsed_ns() as f64 / 1e9;
+        let event = ScalingEvent {
+            at_secs,
+            action: ScalingAction::Rejoin,
+            delta_nodes: 1,
+            total_nodes: brokers.len(),
+            lag: 0,
+            partitions,
+            policy: "rejoin".to_string(),
+            reaction_secs: recovery_secs,
+            cost_secs: recovery_secs,
+            lost_records: truncated_records,
+        };
+        for timeline in self.inner.timelines.lock().unwrap().iter() {
+            timeline.record(event.clone());
+        }
+        Ok(RejoinReport { node, rejoined, partitions, truncated_records, recovery_secs })
+    }
+
+    /// Fraction of replicated partitions (factor >= 2) whose replica
+    /// set is needlessly rack-crowded: two replicas share a failure
+    /// domain even though the alive tier spans enough distinct domains
+    /// to spread them.  0.0 when the tier has at most one labeled
+    /// domain, or when every co-location is forced (factor exceeds the
+    /// domain count).  This is the placement-health signal the
+    /// autoscale planner turns into a
+    /// [`BrokerCluster::reassign_replicas`] step.
+    pub fn rack_skew(&self) -> f64 {
+        let racks = self.inner.racks.lock().unwrap().clone();
+        let brokers = self.inner.broker_nodes.load();
+        let mut distinct: Vec<usize> = Vec::new();
+        for b in brokers.iter() {
+            if let Some(r) = racks.get(b) {
+                if !distinct.contains(r) {
+                    distinct.push(*r);
+                }
+            }
+        }
+        if distinct.len() <= 1 {
+            return 0.0;
+        }
+        let topics = self.inner.topics.load();
+        let mut total = 0usize;
+        let mut crowded = 0usize;
+        for topic in topics.values() {
+            for p in &topic.partitions {
+                let set = p.replicas.lock().unwrap();
+                if set.nodes.len() < 2 {
+                    continue;
+                }
+                total += 1;
+                let mut seen: Vec<usize> = Vec::new();
+                let mut collides = false;
+                for n in &set.nodes {
+                    if let Some(r) = racks.get(n) {
+                        if seen.contains(r) {
+                            collides = true;
+                            break;
+                        }
+                        seen.push(*r);
+                    }
+                }
+                // A collision only counts as crowding when the tier
+                // could have spread this set (forced co-location is a
+                // violation counter's business, not skew's).
+                if collides && set.nodes.len() <= distinct.len() {
+                    crowded += 1;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            crowded as f64 / total as f64
+        }
+    }
+
+    /// Move follower replicas off rack-crowded and hot brokers without
+    /// touching leaderships or the tier size — the actuation behind
+    /// the planner's `ReassignReplicas` step.  Two passes, both
+    /// deterministic (topics by name, partitions in order, candidate
+    /// brokers by `(follower load, node id)`):
+    ///
+    /// 1. **Rack repair** — for each partition whose replica set holds
+    ///    two replicas in one failure domain, move the first colliding
+    ///    *follower* slot to the least-loaded alive broker outside the
+    ///    set whose rack the remaining replicas don't occupy.
+    /// 2. **Load spread** — while the follower-count spread between
+    ///    the hottest and coldest broker exceeds 1, move one follower
+    ///    slot from the hottest to the coldest broker, but never into
+    ///    a new rack collision.
+    ///
+    /// A moved follower adopts the leader's current shared slabs fully
+    /// caught up (the same heal path `add_brokers` uses) and replaces
+    /// the victim in the ISR.  Returns the number of moves.
+    pub fn reassign_replicas(&self) -> Result<usize> {
+        self.check_running()?;
+        let _control = self.inner.control.lock().unwrap();
+        let racks = self.inner.racks.lock().unwrap().clone();
+        let brokers = self.inner.broker_nodes.load();
+        let topics = self.inner.topics.load();
+        let mut names: Vec<&String> = topics.keys().collect();
+        names.sort();
+
+        // Follower slots currently hosted per alive broker.
+        let mut load: HashMap<NodeId, usize> = brokers.iter().map(|b| (*b, 0)).collect();
+        for name in &names {
+            for p in &topics[*name].partitions {
+                let set = p.replicas.lock().unwrap();
+                for f in set.nodes.iter().skip(1) {
+                    if let Some(l) = load.get_mut(f) {
+                        *l += 1;
+                    }
+                }
+            }
+        }
+
+        let mut moves = 0usize;
+        fn move_follower(
+            set: &mut ReplicaSet,
+            slot: usize,
+            target: NodeId,
+            p: &Partition,
+            load: &mut HashMap<NodeId, usize>,
+        ) {
+            let victim = set.nodes[slot];
+            set.nodes[slot] = target;
+            set.mirrors.remove(&victim);
+            set.pending_bytes.remove(&victim);
+            set.mirrors.insert(target, p.log.mirror());
+            set.pending_bytes.insert(target, 0);
+            set.isr.retain(|n| *n != victim);
+            if !set.isr.contains(&target) {
+                set.isr.push(target);
+            }
+            if let Some(l) = load.get_mut(&victim) {
+                *l = l.saturating_sub(1);
+            }
+            if let Some(l) = load.get_mut(&target) {
+                *l += 1;
+            }
+        }
+
+        // Pass 1: rack repair.
+        for name in &names {
+            let topic = &topics[*name];
+            for p in &topic.partitions {
+                let mut set = p.replicas.lock().unwrap();
+                let mut used: Vec<usize> = Vec::new();
+                let mut slot = None;
+                for (i, n) in set.nodes.iter().enumerate() {
+                    if let Some(r) = racks.get(n) {
+                        if i > 0 && used.contains(r) {
+                            slot = Some(i);
+                            break;
+                        }
+                        used.push(*r);
+                    }
+                }
+                let Some(i) = slot else { continue };
+                let mut kept: Vec<usize> = Vec::new();
+                for (j, n) in set.nodes.iter().enumerate() {
+                    if j == i {
+                        continue;
+                    }
+                    if let Some(r) = racks.get(n) {
+                        if !kept.contains(r) {
+                            kept.push(*r);
+                        }
+                    }
+                }
+                let mut candidates: Vec<NodeId> = brokers
+                    .iter()
+                    .copied()
+                    .filter(|b| !set.nodes.contains(b))
+                    .filter(|b| racks.get(b).map_or(true, |r| !kept.contains(r)))
+                    .collect();
+                candidates.sort_by_key(|b| (load.get(b).copied().unwrap_or(0), *b));
+                let Some(&target) = candidates.first() else { continue };
+                move_follower(&mut set, i, target, p, &mut load);
+                moves += 1;
+            }
+        }
+
+        // Pass 2: load spread.
+        loop {
+            let Some((hot, hot_load)) = load
+                .iter()
+                .max_by_key(|(b, l)| (**l, std::cmp::Reverse(**b)))
+                .map(|(b, l)| (*b, *l))
+            else {
+                break;
+            };
+            let Some((cold, cold_load)) =
+                load.iter().min_by_key(|(b, l)| (**l, **b)).map(|(b, l)| (*b, *l))
+            else {
+                break;
+            };
+            if hot_load.saturating_sub(cold_load) <= 1 {
+                break;
+            }
+            let mut moved = false;
+            'scan: for name in &names {
+                for p in &topics[*name].partitions {
+                    let mut set = p.replicas.lock().unwrap();
+                    let Some(i) =
+                        set.nodes.iter().skip(1).position(|n| *n == hot).map(|k| k + 1)
+                    else {
+                        continue;
+                    };
+                    if set.nodes.contains(&cold) {
+                        continue;
+                    }
+                    if let Some(r) = racks.get(&cold) {
+                        let collide = set
+                            .nodes
+                            .iter()
+                            .enumerate()
+                            .any(|(j, n)| j != i && racks.get(n) == Some(r));
+                        if collide {
+                            continue;
+                        }
+                    }
+                    move_follower(&mut set, i, cold, p, &mut load);
+                    moves += 1;
+                    moved = true;
+                    break 'scan;
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+
+        if moves > 0 {
+            self.inner.shards.ring_all();
+        }
+        Ok(moves)
     }
 }
 
@@ -1029,5 +1515,176 @@ mod tests {
                 assert_eq!(*a, 99, "growth moves groups only onto the new broker");
             }
         }
+    }
+
+    #[test]
+    fn rack_aware_placement_prefers_distinct_domains() {
+        let c = BrokerCluster::with_racks(Machine::unthrottled(6), vec![0, 1, 2, 3], 2);
+        assert_eq!(c.rack_of(0), Some(0));
+        assert_eq!(c.rack_of(1), Some(1));
+        assert_eq!(c.rack_of(3), Some(1));
+        assert_eq!(c.rack_of(9), None, "not a broker");
+        c.create_topic_replicated("t", 4, ReplicationConfig::new(2)).unwrap();
+        assert_eq!(c.rack_constraint_violations(), 0);
+        // Kill node 1: the survivors [0, 2, 3] sit in racks [0, 0, 1],
+        // so ring order alone would co-locate — the follower walk must
+        // skip the same-rack neighbor instead.
+        c.kill_broker(1).unwrap();
+        let t = c.topic("t").unwrap();
+        for p in &t.partitions {
+            let set = p.replicas.lock().unwrap();
+            assert_eq!(set.nodes.len(), 2);
+            let r0 = c.rack_of(set.nodes[0]).unwrap();
+            let r1 = c.rack_of(set.nodes[1]).unwrap();
+            assert_ne!(r0, r1, "partition {}: replicas share a rack", p.id);
+        }
+        assert_eq!(c.rack_constraint_violations(), 0, "anti-affinity needed no fallback");
+        assert_eq!(c.rack_skew(), 0.0);
+    }
+
+    #[test]
+    fn rack_exhaustion_falls_back_with_violation_accounting() {
+        let c = BrokerCluster::with_racks(Machine::unthrottled(6), vec![0, 1, 2, 3], 2);
+        // Factor 3 across 2 racks: every partition's third replica is
+        // forced to co-locate — placed anyway, and counted.
+        c.create_topic_replicated("t", 2, ReplicationConfig::new(3)).unwrap();
+        assert_eq!(c.rack_constraint_violations(), 2, "one forced slot per partition");
+        let t = c.topic("t").unwrap();
+        for p in &t.partitions {
+            assert_eq!(p.replicas.lock().unwrap().nodes.len(), 3, "fallback still places");
+        }
+        // Skew stays 0: with 2 distinct domains a factor-3 set cannot
+        // spread, so the co-location is forced, not repairable.
+        assert_eq!(c.rack_skew(), 0.0);
+    }
+
+    #[test]
+    fn kill_rack_fails_over_every_broker_in_the_domain() {
+        let c = BrokerCluster::with_racks(Machine::unthrottled(6), vec![0, 1, 2, 3], 2);
+        c.create_topic_replicated("t", 4, ReplicationConfig::new(2)).unwrap();
+        c.produce("t", 0, 4, &[vec![1], vec![2]]).unwrap();
+        assert!(c.kill_rack(7).is_err(), "no such rack");
+        let reports = c.kill_rack(1).unwrap();
+        assert_eq!(reports.len(), 2, "nodes 1 and 3 die together");
+        assert_eq!(reports[0].killed, 1);
+        assert_eq!(reports[1].killed, 3);
+        assert_eq!(c.broker_nodes(), vec![0, 2]);
+        // Rack-anti-affine placement kept a replica of every partition
+        // in rack 0, so every acked record is still readable.
+        let recs = c.fetch("t", 0, 0, usize::MAX, 4, Duration::from_millis(10)).unwrap();
+        assert_eq!(recs.len(), 2);
+        // The surviving tier is all of rack 0: killing it is refused.
+        assert!(c.kill_rack(0).is_err(), "cannot kill every alive broker");
+        assert_eq!(c.broker_nodes(), vec![0, 2]);
+    }
+
+    #[test]
+    fn rejoin_truncates_divergent_tail_and_reenters_isr_after_catchup() {
+        let c = cluster(2);
+        c.create_topic_replicated("t", 1, ReplicationConfig::new(2).with_replica_lag_max(10))
+            .unwrap();
+        c.inject_follower_lag("t", 1, 3).unwrap();
+        let batch: Vec<Vec<u8>> = (0..5).map(|i| vec![i as u8; 10]).collect();
+        c.produce("t", 0, 2, &batch).unwrap();
+        // Follower 1 applied 2 of 5 records; killing leader 0 promotes
+        // it and charges the 3-record gap as lost.  That unapplied
+        // tail is exactly what node 0's retained log now diverges by.
+        let report = c.kill_broker(0).unwrap();
+        assert_eq!(report.lost_records, 3);
+        c.inject_follower_lag("t", 1, 0).unwrap();
+        // The new leader continues on its own epoch.
+        c.produce("t", 0, 2, &[vec![9u8; 10]]).unwrap();
+        // Node 0 returns: the divergent tail is truncated (KIP-101) —
+        // exactly the 3 records charged as lost, no more, no less.
+        let rejoin = c.rejoin_broker(0).unwrap();
+        assert_eq!(rejoin.node, 0);
+        assert_eq!(rejoin.truncated_records, 3, "divergent tail dropped exactly");
+        assert_eq!(rejoin.partitions, 1);
+        assert_eq!(rejoin.rejoined, 1, "re-enters partition 0's replica set");
+        assert!(rejoin.recovery_secs >= 0.0);
+        assert_eq!(c.broker_nodes(), vec![1, 0]);
+        // Leadership never moved off the survivor during the rejoin...
+        assert_eq!(c.leader_node("t", 0).unwrap(), 1);
+        // ...and the returning replica is NOT in the ISR: it trails by
+        // the truncation plus the new epoch's records.
+        assert_eq!(c.in_sync_replicas("t", 0).unwrap(), vec![1]);
+        assert!(c.follower_gap("t", 0, 0).unwrap() > 0);
+        // ISR re-entry comes only from the normal catch-up path.
+        c.replication_heartbeat("t").unwrap();
+        assert_eq!(c.follower_gap("t", 0, 0).unwrap(), 0);
+        assert_eq!(c.in_sync_replicas("t", 0).unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn rejoin_rejects_members_and_strangers_and_lands_on_timeline() {
+        let c = cluster(3);
+        c.create_topic_replicated("t", 2, ReplicationConfig::new(2)).unwrap();
+        assert!(c.rejoin_broker(0).is_err(), "already a member");
+        assert!(c.rejoin_broker(42).is_err(), "never departed");
+        let timeline = Arc::new(ScalingTimeline::new());
+        c.add_scaling_timeline(timeline.clone());
+        c.kill_broker(2).unwrap();
+        let report = c.rejoin_broker(2).unwrap();
+        assert_eq!(report.node, 2);
+        assert_eq!(c.broker_nodes(), vec![0, 1, 2]);
+        assert_eq!(report.truncated_records, 0, "nothing produced, nothing diverged");
+        assert_eq!(report.partitions, 1, "node 2 followed partition 1");
+        assert_eq!(report.rejoined, 0, "the survivors already refilled the set");
+        assert_eq!(timeline.count(ScalingAction::Rejoin), 1);
+        let ev = timeline
+            .events()
+            .iter()
+            .find(|e| e.action == ScalingAction::Rejoin)
+            .cloned()
+            .unwrap();
+        assert_eq!(ev.policy, "rejoin");
+        assert_eq!(ev.total_nodes, 3);
+        assert_eq!(ev.delta_nodes, 1);
+        assert_eq!(ev.lost_records, 0);
+        // A planned removal leaves nothing retained to rejoin from.
+        c.remove_brokers(&[2]).unwrap();
+        let err = c.rejoin_broker(2).unwrap_err();
+        assert!(err.to_string().contains("never departed"), "{err}");
+    }
+
+    #[test]
+    fn reassign_moves_followers_off_crowded_racks() {
+        let c = BrokerCluster::with_racks(Machine::unthrottled(6), vec![0, 1, 2, 3], 2);
+        c.create_topic_replicated("t", 4, ReplicationConfig::new(2)).unwrap();
+        c.kill_rack(1).unwrap();
+        c.rejoin_broker(1).unwrap();
+        c.rejoin_broker(3).unwrap();
+        // The survivors (all rack 0) refilled every replica set during
+        // the failover, so the rejoined rack-1 nodes found no open
+        // slot: every set is co-located and the returning nodes idle.
+        assert_eq!(c.rack_skew(), 1.0);
+        let t = c.topic("t").unwrap();
+        for p in &t.partitions {
+            let set = p.replicas.lock().unwrap();
+            assert!(!set.nodes.contains(&1) && !set.nodes.contains(&3));
+        }
+        // The reassignment pass spreads each partition back across
+        // domains — moving follower slots only, never leaderships, and
+        // never changing the tier size.
+        let leaders: Vec<NodeId> =
+            (0..4).map(|p| c.leader_node("t", p).unwrap()).collect();
+        let moves = c.reassign_replicas().unwrap();
+        assert_eq!(moves, 4, "every partition sheds its co-located follower");
+        assert_eq!(c.rack_skew(), 0.0);
+        assert_eq!(
+            (0..4).map(|p| c.leader_node("t", p).unwrap()).collect::<Vec<_>>(),
+            leaders,
+            "reassignment moves followers, not leaders"
+        );
+        assert_eq!(c.broker_nodes(), vec![0, 2, 1, 3]);
+        for p in &t.partitions {
+            let set = p.replicas.lock().unwrap();
+            let r: Vec<usize> =
+                set.nodes.iter().map(|n| c.rack_of(*n).unwrap()).collect();
+            assert_ne!(r[0], r[1], "partition {} spread across domains", p.id);
+            assert_eq!(set.isr.len(), 2, "moved follower adopts a caught-up mirror");
+        }
+        // Converged: a second pass finds nothing to move.
+        assert_eq!(c.reassign_replicas().unwrap(), 0);
     }
 }

@@ -27,6 +27,21 @@ pub enum Error {
     /// produce to a stopped cluster).
     Broker(String),
 
+    /// A quorum-acked produce was rejected because the partition's ISR
+    /// had shrunk below `min_insync` — the write was refused rather
+    /// than accepted at reduced durability.  Typed (unlike the general
+    /// [`Error::Broker`] bag) so producer/app retry loops can match on
+    /// it and back off until the ISR re-expands; the `Display` text is
+    /// byte-identical to the stringly form it replaced.
+    NotEnoughInSyncReplicas {
+        topic: String,
+        partition: usize,
+        /// In-sync replica count observed at the produce.
+        isr: usize,
+        /// The replica set's configured quorum floor.
+        min_insync: usize,
+    },
+
     /// A produce raced a topic repartition: the caller routed the record
     /// under a partition-set epoch that was sealed before the append
     /// could land.  Producers recover by refreshing their routing table
@@ -64,6 +79,15 @@ impl std::fmt::Display for Error {
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Artifact(m) => write!(f, "artifact: {m}"),
             Error::Broker(m) => write!(f, "broker: {m}"),
+            Error::NotEnoughInSyncReplicas {
+                topic,
+                partition,
+                isr,
+                min_insync,
+            } => write!(
+                f,
+                "broker: {topic}/{partition}: not enough in-sync replicas ({isr} of min_insync {min_insync})"
+            ),
             Error::StaleEpoch(m) => write!(f, "stale epoch: {m}"),
             Error::ShardQuiesced(m) => write!(f, "shard quiesced: {m}"),
             Error::Engine(m) => write!(f, "engine: {m}"),
@@ -106,6 +130,16 @@ mod tests {
     #[test]
     fn display_prefixes_by_layer() {
         assert_eq!(Error::Broker("x".into()).to_string(), "broker: x");
+        assert_eq!(
+            Error::NotEnoughInSyncReplicas {
+                topic: "t".into(),
+                partition: 3,
+                isr: 1,
+                min_insync: 2,
+            }
+            .to_string(),
+            "broker: t/3: not enough in-sync replicas (1 of min_insync 2)"
+        );
         assert_eq!(Error::Pilot("y".into()).to_string(), "pilot: y");
         assert_eq!(Error::App("z".into()).to_string(), "app: z");
         assert_eq!(

@@ -241,6 +241,8 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
                 node_death_window: None,
                 ack_mode: crate::broker::AckMode::Leader,
                 replica_lag_records: 0.0,
+                racks: 0,
+                rack_death_window: None,
             };
             let mut policy = ThresholdPolicy::new(600, 60)
                 .with_sustain(1)
@@ -265,6 +267,13 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
             sim.run_planned(&sc, &mut policy, &planner)
         }
     };
+    elastic_rows(&res, &rec);
+    rec
+}
+
+/// One CSV row per elastic-sim window (shared by `elastic` and its
+/// `rackfail` preset; the fault columns are zero when no fault fires).
+fn elastic_rows(res: &crate::sim::ElasticSimResult, rec: &Recorder) {
     for r in &res.rows {
         rec.add(
             Row::new()
@@ -276,9 +285,43 @@ pub fn elasticity(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
                 .push("lag_msgs", format!("{:.0}", r.lag))
                 .push("decision", r.decision)
                 .push("behind", u8::from(r.behind))
-                .push("lost_msgs", format!("{:.0}", r.lost)),
+                .push("lost_msgs", format!("{:.0}", r.lost))
+                .push("truncated_records", format!("{:.0}", r.truncated))
+                .push("reassignments", r.reassigned),
         );
     }
+}
+
+/// `exp elastic --preset rackfail`: the failure-domain lifecycle on the
+/// elastic timeline.  A steady in-capacity rate keeps every scaling
+/// intent at Hold, then a whole rack (2 of the 4 brokers) dies at
+/// window 5: the `broker_nodes` column drops, `lost_msgs` records the
+/// promoted followers' gap (Leader acks), the bounce's re-join two
+/// windows later puts `truncated_records` on the timeline (the
+/// divergent tails cut back to the survivors' fence), and the planner's
+/// `ReassignReplicas` step — visible in the `reassignments` column —
+/// re-spreads the crowded replica sets without buying a single broker.
+pub fn elasticity_rackfail(config: &ExperimentConfig, costs: &CostModel) -> Recorder {
+    let rec = Recorder::new();
+    let machine = SimMachine {
+        executors_per_node: 2,
+        ..Default::default()
+    };
+    let sim = ElasticSim::new(machine, *costs);
+    let sc = ElasticScenario::calibrated_rackfail(config.window_secs);
+    let mut policy = ThresholdPolicy::new(20_000, 2_000)
+        .with_sustain(1)
+        .with_cooldown_secs(2.0 * config.window_secs)
+        .with_step(8);
+    let planner = Planner::new(
+        PlannerConfig::default()
+            .with_max_step(8)
+            .with_drain_horizon_secs(6.0 * config.window_secs)
+            .with_partitions_per_broker_node(sc.partitions_per_node)
+            .with_max_broker_step(2),
+    );
+    let res = sim.run_planned(&sc, &mut policy, &planner);
+    elastic_rows(&res, &rec);
     rec
 }
 
@@ -508,6 +551,42 @@ mod tests {
                 "window serves {p} partitions on {b} brokers (budget 12/node)"
             );
         }
+    }
+
+    #[test]
+    fn elasticity_rackfail_puts_the_fault_lifecycle_on_the_timeline() {
+        let config = cfg(CostPreset::Calibrated);
+        let costs = CostModel::calibrated_default();
+        let csv = elasticity_rackfail(&config, &costs).to_csv();
+        assert!(
+            csv.lines()
+                .next()
+                .unwrap()
+                .ends_with("lost_msgs,truncated_records,reassignments"),
+            "fault columns missing: {csv}"
+        );
+        assert_eq!(csv.lines().count(), 1 + 30, "one row per window");
+        let col = |n: usize| -> Vec<f64> {
+            csv.lines()
+                .skip(1)
+                .map(|l| l.split(',').nth(n).unwrap().parse().unwrap())
+                .collect()
+        };
+        // Window 5: the rack dies (tier halves, Leader-ack tail lost);
+        // window 7: the bounce re-joins (tails truncated) and the
+        // reassignment pass re-spreads the crowded sets — once.
+        let brokers = col(4);
+        assert_eq!(brokers[5], 2.0, "the rack never died");
+        assert_eq!(brokers[7], 4.0, "the bounce never returned");
+        let lost = col(8);
+        assert_eq!(lost[5], 1200.0);
+        assert_eq!(lost.iter().sum::<f64>(), 1200.0);
+        let truncated = col(9);
+        assert_eq!(truncated[7], 1200.0);
+        assert_eq!(truncated.iter().sum::<f64>(), 1200.0);
+        let reassigned = col(10);
+        assert_eq!(reassigned[7], 48.0);
+        assert_eq!(reassigned.iter().sum::<f64>(), 48.0);
     }
 
     #[test]

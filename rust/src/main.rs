@@ -34,7 +34,7 @@ USAGE:
                         [--machine-nodes <n>] [--extend <n>]
   pilot-streaming demo  [--processor <kmeans|gridrec|mlem>] [--messages <n>]
   pilot-streaming exp   <fig6|fig7|fig8|fig9|table1|headline|elastic|all>
-                        [--preset <calibrated|paper-era>] [--out <dir>]
+                        [--preset <calibrated|paper-era|rackfail>] [--out <dir>]
                         [--config <file.json>]
   pilot-streaming exp   app --spec <app.json|app.toml>
 
@@ -344,10 +344,17 @@ fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
         Some(path) => ExperimentConfig::from_json_file(std::path::Path::new(path))?,
         None => ExperimentConfig::default(),
     };
+    // `rackfail` is an elastic-only scenario preset riding on the
+    // calibrated cost model, not a third cost preset.
+    let mut rackfail = false;
     if let Some(preset) = flags.get("preset") {
         config.preset = match preset.as_str() {
             "paper-era" => CostPreset::PaperEra,
             "calibrated" => CostPreset::Calibrated,
+            "rackfail" => {
+                rackfail = true;
+                CostPreset::Calibrated
+            }
             other => return Err(Error::Config(format!("unknown preset '{other}'"))),
         };
     }
@@ -355,6 +362,11 @@ fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
     let costs = exp::resolve_costs(&config, true);
 
     let run_one = |id: &str| -> Result<()> {
+        if rackfail && id != "elastic" {
+            return Err(Error::Config(format!(
+                "preset 'rackfail' applies to the 'elastic' experiment only (got '{id}')"
+            )));
+        }
         println!("=== {id} (preset: {:?}) ===", config.preset);
         let rec = match id {
             "fig6" => exp::fig6(&config),
@@ -362,6 +374,7 @@ fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
             "fig8" => exp::fig8(&config, &costs),
             "fig9" => exp::fig9(&config, &costs),
             "headline" => exp::headline(&config, &costs),
+            "elastic" if rackfail => exp::elasticity_rackfail(&config, &costs),
             "elastic" => exp::elasticity(&config, &costs),
             "table1" => {
                 let runtime = ModelRuntime::load_default()?;
@@ -598,6 +611,17 @@ mod tests {
     }
 
     #[test]
+    fn exp_rackfail_preset_is_elastic_only() {
+        // The scenario preset runs end-to-end through the CLI path...
+        run(&args(&["exp", "elastic", "--preset", "rackfail"])).unwrap();
+        // ...but is not a cost preset the other experiments accept.
+        let err = run(&args(&["exp", "fig6", "--preset", "rackfail"])).unwrap_err();
+        assert!(err.to_string().contains("'elastic'"), "{err}");
+        let err = run(&args(&["exp", "elastic", "--preset", "rakfail"])).unwrap_err();
+        assert!(err.to_string().contains("unknown preset"), "{err}");
+    }
+
+    #[test]
     fn exp_app_rejects_unknown_flags_and_requires_spec() {
         // Strict flag rejection, same as every other subcommand.
         let err = run(&args(&["exp", "app", "--sepc", "x.json"])).unwrap_err();
@@ -650,6 +674,7 @@ machine_nodes = 4
 
 [broker]
 nodes = 2
+racks = 2
 
 [[broker.topics]]
 name = "t"

@@ -230,6 +230,17 @@ pub enum ScalingAction {
     /// failures land on the same timeline (and cost axis) as planned
     /// scaling actions.
     Failover,
+    /// A previously-killed broker re-joined the cluster: its retained
+    /// replica logs were truncated back to the epoch fence (KIP-101)
+    /// before it resumed as an out-of-sync follower — `lost_records`
+    /// carries the truncated-record count (records the returning
+    /// replica held under epochs it never acked, not durability loss).
+    Rejoin,
+    /// Follower replicas were moved off hot or rack-crowded brokers —
+    /// the planner's targeted repair for utilization/rack skew, cheaper
+    /// than extending the whole tier (`delta_nodes` carries the number
+    /// of replica moves).
+    ReassignReplicas,
 }
 
 impl std::fmt::Display for ScalingAction {
@@ -242,6 +253,8 @@ impl std::fmt::Display for ScalingAction {
             ScalingAction::BrokerDown => write!(f, "broker-down"),
             ScalingAction::Defer => write!(f, "defer"),
             ScalingAction::Failover => write!(f, "failover"),
+            ScalingAction::Rejoin => write!(f, "rejoin"),
+            ScalingAction::ReassignReplicas => write!(f, "reassign-replicas"),
         }
     }
 }

@@ -79,6 +79,18 @@ pub struct ElasticScenario {
     /// far an async follower trails its leader at the moment the death
     /// strikes.  Only meaningful with `replication_factor > 1`.
     pub replica_lag_records: f64,
+    /// Failure domains the broker tier is spread over (0 = unracked;
+    /// rack fault injection needs >= 2).
+    pub racks: usize,
+    /// Opt-in fault injection: window index at which one whole rack —
+    /// `broker_nodes / racks` brokers at once — dies.  The bounced
+    /// brokers re-join two windows later with divergent tails truncated
+    /// (the real tier's `rejoin_broker`), but they return *empty of
+    /// replicas*: every affected set is crowded onto the surviving
+    /// domain, and only a `ReassignReplicas` plan step (the planner
+    /// path) heals that skew — the legacy intent path carries it to the
+    /// end of the run.
+    pub rack_death_window: Option<usize>,
 }
 
 impl ElasticScenario {
@@ -110,6 +122,38 @@ impl ElasticScenario {
             node_death_window: None,
             ack_mode: AckMode::Leader,
             replica_lag_records: 0.0,
+            racks: 0,
+            rack_death_window: None,
+        }
+    }
+
+    /// The rack-failover scenario (`exp elastic --preset rackfail`):
+    /// calibrated costs, a steady in-capacity rate (so every intent is
+    /// Hold and the timeline shows only the fault lifecycle), a
+    /// 2-rack/4-broker tier, and the loss of a whole rack at window 5.
+    /// Under the default `Leader` acks the death loses the promoted
+    /// followers' gap and the re-join truncates the same gap off the
+    /// returning brokers; flip to `AckMode::Quorum` and both are zero.
+    pub fn calibrated_rackfail(window_secs: f64) -> Self {
+        ElasticScenario {
+            processor: "gridrec".into(),
+            schedule: RateSchedule::constant(150.0),
+            window_secs,
+            windows: 30,
+            broker_nodes: 4,
+            partitions_per_node: 12,
+            min_nodes: 2,
+            max_nodes: 32,
+            initial_nodes: 2,
+            provision_delay_secs: 1.5 * window_secs,
+            repartition_delay_secs: window_secs,
+            max_partitions: 128,
+            replication_factor: 2,
+            node_death_window: None,
+            ack_mode: AckMode::Leader,
+            replica_lag_records: 50.0,
+            racks: 2,
+            rack_death_window: Some(5),
         }
     }
 }
@@ -139,6 +183,12 @@ pub struct ElasticWindow {
     /// Acked records lost this window (nonzero only at a failover
     /// whose promoted followers trailed the dead leader).
     pub lost: f64,
+    /// Divergent records truncated off re-joining brokers this window
+    /// (nonzero only at the window a rack bounce's re-join lands).
+    pub truncated: f64,
+    /// Follower replicas moved by a `ReassignReplicas` plan step
+    /// actuated this window.
+    pub reassigned: usize,
 }
 
 /// Aggregate result of an elastic run.
@@ -168,6 +218,15 @@ pub struct ElasticSimResult {
     /// Acked records lost across every injected failover (the
     /// durability cost of `Leader` acks; zero under `Quorum`).
     pub lost_records: f64,
+    /// Divergent records truncated off re-joining brokers (KIP-101
+    /// accounting: equals the lost tail under `Leader` acks, zero under
+    /// `Quorum`).
+    pub truncated_records: f64,
+    /// `ReassignReplicas` plan steps actuated (placement repair passes,
+    /// not individual replica moves).
+    pub reassignments: usize,
+    /// Brokers that re-joined after a rack bounce.
+    pub rejoins: usize,
     /// Largest partition count reached.
     pub peak_partitions: usize,
     pub final_lag: f64,
@@ -239,9 +298,20 @@ impl ElasticSim {
         let mut failovers = 0;
         let mut degraded_windows = 0;
         let mut lost_records = 0.0f64;
+        let mut truncated_records = 0.0f64;
+        let mut reassignments = 0;
+        let mut rejoins = 0;
         // Partitions currently running with fewer in-sync replicas than
         // the scenario's factor (nonzero only after a node death).
         let mut degraded = 0usize;
+        // A bounced rack on its way back: (rejoin_window, brokers,
+        // partitions the dead brokers led).
+        let mut pending_rejoin: Option<(usize, usize, usize)> = None;
+        // Placement debt: 1.0 from the window a rack bounce's re-join
+        // lands (the returning brokers hold no replicas, so every
+        // affected set is crowded onto the surviving domain) until a
+        // ReassignReplicas step actuates.
+        let mut rack_skew = 0.0f64;
         let mut peak_partitions = n_partitions;
         let mut behind_windows = 0;
         let mut node_secs = 0.0;
@@ -278,11 +348,58 @@ impl ElasticSim {
             if broker_arrived > 0 {
                 degraded = 0;
             }
+            // A bounced rack re-joins: the brokers return to the
+            // membership with their divergent tails truncated to the
+            // survivors' fence (the real tier's `rejoin_broker`), catch
+            // up, and re-enter the ISR — which heals the degraded sets
+            // but leaves every one of them crowded onto the surviving
+            // domain until a reassignment pass re-spreads them.
+            let mut truncated = 0.0f64;
+            if let Some((ready_w, n, led)) = pending_rejoin {
+                if ready_w <= w {
+                    pending_rejoin = None;
+                    broker_nodes += n;
+                    rejoins += n;
+                    truncated = match sc.ack_mode {
+                        AckMode::Quorum => 0.0,
+                        AckMode::Leader => sc.replica_lag_records * led as f64,
+                    };
+                    truncated_records += truncated;
+                    degraded = 0;
+                    rack_skew = 1.0;
+                }
+            }
+            // Fault injection: a whole failure domain dies this window
+            // — `broker_nodes / racks` brokers at once.  Accounting
+            // mirrors the single-node death below, scaled by the
+            // domain size; the bounced brokers re-join two windows
+            // later (the maintenance reboot the rack model assumes).
+            let mut lost = 0.0f64;
+            if sc.rack_death_window == Some(w) && sc.racks > 0 && broker_nodes > 1 {
+                let before = broker_nodes;
+                let dead = before.div_ceil(sc.racks).min(before - 1);
+                broker_nodes -= dead;
+                failovers += dead;
+                let led = (n_partitions * dead).div_ceil(before).min(n_partitions);
+                degraded = if sc.replication_factor > 1 {
+                    lost = match sc.ack_mode {
+                        AckMode::Quorum => 0.0,
+                        AckMode::Leader => sc.replica_lag_records * led as f64,
+                    };
+                    (n_partitions * sc.replication_factor * dead)
+                        .div_ceil(before)
+                        .min(n_partitions)
+                } else {
+                    lost = backlog.iter().take(led).sum();
+                    n_partitions
+                };
+                lost_records += lost;
+                pending_rejoin = Some((w + 2, dead, led));
+            }
             // Fault injection: one broker node dies this window.  The
             // affected partitions fail over to surviving replicas;
             // until a replacement lands they run with fewer in-sync
             // replicas than the factor.
-            let mut lost = 0.0f64;
             if sc.node_death_window == Some(w) && broker_nodes > 1 {
                 let before = broker_nodes;
                 broker_nodes -= 1;
@@ -290,10 +407,11 @@ impl ElasticSim {
                 // The dead node led ~1/before of the partitions; what
                 // happens to their tail depends on the ack discipline.
                 let led = n_partitions.div_ceil(before).min(n_partitions);
+                let node_lost;
                 degraded = if sc.replication_factor > 1 {
                     // Each node hosts ~factor/before of the replica
                     // slots; those partitions lost one replica.
-                    lost = match sc.ack_mode {
+                    node_lost = match sc.ack_mode {
                         // Quorum acks waited for the in-sync
                         // followers, so the promoted replica holds
                         // every acked record.
@@ -312,10 +430,11 @@ impl ElasticSim {
                     // exposed regardless of ack mode.  (Accounting
                     // only: the backlog itself stays, modeling sources
                     // replaying into the rebuilt tier.)
-                    lost = backlog.iter().take(led).sum();
+                    node_lost = backlog.iter().take(led).sum();
                     n_partitions
                 };
-                lost_records += lost;
+                lost += node_lost;
+                lost_records += node_lost;
             }
             if degraded > 0 {
                 degraded_windows += 1;
@@ -430,8 +549,24 @@ impl ElasticSim {
                 // branch doesn't buy another node every window.  The
                 // sim models factor == min_insync, so a dead replica is
                 // both under-replicated and quorum-degraded.
-                under_replicated: if pending_broker.is_empty() { degraded } else { 0 },
-                below_min_insync: if pending_broker.is_empty() { degraded } else { 0 },
+                // A bounced rack counts as a replacement in flight for
+                // the same reason: the planner must not buy a node for
+                // brokers the maintenance model already returns.
+                under_replicated: if pending_broker.is_empty() && pending_rejoin.is_none() {
+                    degraded
+                } else {
+                    0
+                },
+                below_min_insync: if pending_broker.is_empty() && pending_rejoin.is_none() {
+                    degraded
+                } else {
+                    0
+                },
+                // The message-level model has no per-broker byte
+                // gauges, so load skew never fires here; placement
+                // skew follows the rack-bounce lifecycle above.
+                broker_util_skew: 0.0,
+                rack_skew,
                 shard_queue_depths: Vec::new(),
             };
             prev_lag = lag;
@@ -442,6 +577,7 @@ impl ElasticSim {
             let partitions_used = n_partitions;
             let broker_nodes_used = broker_nodes;
             let mut decision = 0i64;
+            let mut reassigned = 0usize;
             let headroom = sc.max_nodes - (nodes + pending_nodes).min(sc.max_nodes);
             let provision_at = t + sc.window_secs + sc.provision_delay_secs;
             let intent = policy.decide(&snapshot);
@@ -489,6 +625,17 @@ impl ElasticSim {
                                     nodes -= n;
                                     scale_downs += 1;
                                     decision = -(n as i64);
+                                }
+                            }
+                            PlanStep::ReassignReplicas { moves, .. } => {
+                                // Placement repair: a metadata pass on
+                                // the existing tier, immediate in the
+                                // window model.  The skew it undoes is
+                                // exactly the rack-bounce debt above.
+                                if rack_skew > 0.0 {
+                                    rack_skew = 0.0;
+                                    reassignments += 1;
+                                    reassigned = moves;
                                 }
                             }
                         }
@@ -543,6 +690,8 @@ impl ElasticSim {
                 decision,
                 behind,
                 lost,
+                truncated,
+                reassigned,
             });
         }
 
@@ -558,6 +707,9 @@ impl ElasticSim {
             failovers,
             degraded_windows,
             lost_records,
+            truncated_records,
+            reassignments,
+            rejoins,
             peak_partitions,
             final_lag: prev_lag,
             behind_windows,
@@ -603,6 +755,8 @@ mod tests {
             node_death_window: None,
             ack_mode: AckMode::Leader,
             replica_lag_records: 0.0,
+            racks: 0,
+            rack_death_window: None,
         }
     }
 
@@ -918,6 +1072,70 @@ mod tests {
         let exposed = sim.run(&sc, &mut threshold());
         assert_eq!(exposed.failovers, 1);
         assert!(exposed.lost_records > 0.0, "no backlog exposed");
+    }
+
+    /// The rack-failover lifecycle end to end: a whole domain dies,
+    /// bounces back two windows later with its divergent tails
+    /// truncated, and the planner's reassignment step — not a broker
+    /// purchase — clears the placement debt the bounce left behind.
+    #[test]
+    fn rack_bounce_truncates_tails_and_reassignment_heals_the_skew() {
+        use crate::autoscale::{Planner, PlannerConfig};
+
+        let sim = ElasticSim::new(
+            SimMachine {
+                executors_per_node: 2,
+                ..Default::default()
+            },
+            CostModel::calibrated_default(),
+        );
+        let sc = ElasticScenario::calibrated_rackfail(60.0);
+        let planner = Planner::new(
+            PlannerConfig::default()
+                .with_max_step(8)
+                .with_partitions_per_broker_node(sc.partitions_per_node)
+                .with_max_broker_step(2),
+        );
+        let res = sim.run_planned(&sc, &mut calibrated_threshold(), &planner);
+
+        // 2 racks x 4 brokers: the domain took 2 nodes, both returned.
+        assert_eq!(res.failovers, 2);
+        assert_eq!(res.rejoins, 2);
+        // The dead brokers led 24 of the 48 partitions; under Leader
+        // acks each promoted follower trailed by 50 records, and the
+        // re-join truncates exactly the tail the failover lost.
+        assert_eq!(res.lost_records, 1200.0);
+        assert_eq!(res.truncated_records, res.lost_records);
+        assert_eq!(res.rows[5].lost, 1200.0);
+        assert_eq!(res.rows[5].broker_nodes, 2, "the domain is gone for the window");
+        assert_eq!(res.rows[7].truncated, 1200.0, "re-join lands two windows later");
+        assert_eq!(res.rows[7].broker_nodes, 4, "the bounced brokers are back");
+        // Degraded only while the rack was down — the re-join heals it.
+        assert_eq!(res.degraded_windows, 2);
+        // Placement repair, not a purchase: the skew the bounce left is
+        // cleared by one reassignment pass and the tier never grew.
+        assert_eq!(res.reassignments, 1);
+        assert_eq!(res.rows[7].reassigned, 48, "every crowded partition re-spread");
+        assert_eq!(res.broker_ups, 0, "a bounce must not buy brokers");
+        assert_eq!(res.peak_broker_nodes, sc.broker_nodes);
+        assert_eq!(res.scale_ups, 0, "steady load: the fault is the only story");
+
+        // Quorum acks close the durability hole: nothing lost, nothing
+        // to truncate — but the placement debt (and its repair) remain.
+        let mut quorum = sc.clone();
+        quorum.ack_mode = AckMode::Quorum;
+        let res = sim.run_planned(&quorum, &mut calibrated_threshold(), &planner);
+        assert_eq!(res.lost_records, 0.0);
+        assert_eq!(res.truncated_records, 0.0);
+        assert_eq!(res.rejoins, 2);
+        assert_eq!(res.reassignments, 1);
+
+        // The legacy intent path has no reassignment step: the bounce
+        // still truncates, but the crowding is never repaired.
+        let res = sim.run(&sc, &mut calibrated_threshold());
+        assert_eq!(res.rejoins, 2);
+        assert_eq!(res.truncated_records, 1200.0);
+        assert_eq!(res.reassignments, 0, "no planner, no placement repair");
     }
 
     #[test]

@@ -11,8 +11,11 @@
 //! * **Open** — calls fast-fail without touching the framework until
 //!   `cooldown` has elapsed.
 //! * **HalfOpen** — after the cooldown, up to `half_open_probes` calls
-//!   are let through; one success re-closes the breaker, one failure
-//!   re-opens it (and restarts the cooldown).
+//!   are let through, but only **one at a time**: while a probe is in
+//!   flight every other caller fast-fails (otherwise N concurrent
+//!   control-loop ticks would all hammer the possibly-still-down
+//!   framework at once).  One probe success re-closes the breaker, one
+//!   failure re-opens it (and restarts the cooldown).
 //!
 //! Interior mutability (a mutex around the small state machine) keeps
 //! the API `&self`, matching how the control loop shares itself across
@@ -74,6 +77,10 @@ struct Inner {
     opened_at: Instant,
     /// Probes admitted since entering HalfOpen.
     probes: usize,
+    /// A HalfOpen probe has been admitted and has not yet reported
+    /// success or failure.  Fences concurrent callers to exactly one
+    /// in-flight probe regardless of `half_open_probes`.
+    probe_in_flight: bool,
 }
 
 /// A Closed/Open/HalfOpen circuit breaker with a per-call retry budget.
@@ -100,6 +107,7 @@ impl CircuitBreaker {
                 consecutive_failures: 0,
                 opened_at: Instant::now(),
                 probes: 0,
+                probe_in_flight: false,
             }),
         }
     }
@@ -109,12 +117,32 @@ impl CircuitBreaker {
     }
 
     /// Whether a call would currently be admitted (advances Open →
-    /// HalfOpen when the cooldown has elapsed).
+    /// HalfOpen when the cooldown has elapsed).  A non-consuming peek:
+    /// unlike [`CircuitBreaker::call`] it never reserves the HalfOpen
+    /// probe slot, so peeking cannot starve a real probe.
     pub fn is_callable(&self) -> bool {
-        self.admit().is_ok()
+        let mut st = self.inner.lock().unwrap();
+        match st.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if st.opened_at.elapsed() >= self.config.cooldown {
+                    st.state = BreakerState::HalfOpen;
+                    st.probes = 0;
+                    st.probe_in_flight = false;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                !st.probe_in_flight && st.probes < self.config.half_open_probes
+            }
+        }
     }
 
     /// Admit or fast-fail, advancing Open → HalfOpen on cooldown expiry.
+    /// In HalfOpen, admission reserves the single in-flight probe slot;
+    /// concurrent callers fast-fail until the probe reports back.
     fn admit(&self) -> Result<()> {
         let mut st = self.inner.lock().unwrap();
         match st.state {
@@ -122,7 +150,8 @@ impl CircuitBreaker {
             BreakerState::Open => {
                 if st.opened_at.elapsed() >= self.config.cooldown {
                     st.state = BreakerState::HalfOpen;
-                    st.probes = 0;
+                    st.probes = 1;
+                    st.probe_in_flight = true;
                     Ok(())
                 } else {
                     Err(Error::Pilot(format!(
@@ -132,8 +161,9 @@ impl CircuitBreaker {
                 }
             }
             BreakerState::HalfOpen => {
-                if st.probes < self.config.half_open_probes {
+                if !st.probe_in_flight && st.probes < self.config.half_open_probes {
                     st.probes += 1;
+                    st.probe_in_flight = true;
                     Ok(())
                 } else {
                     Err(Error::Pilot(
@@ -148,10 +178,12 @@ impl CircuitBreaker {
         let mut st = self.inner.lock().unwrap();
         st.state = BreakerState::Closed;
         st.consecutive_failures = 0;
+        st.probe_in_flight = false;
     }
 
     fn on_failure(&self) {
         let mut st = self.inner.lock().unwrap();
+        st.probe_in_flight = false;
         match st.state {
             BreakerState::Closed => {
                 st.consecutive_failures += 1;
@@ -267,6 +299,49 @@ mod tests {
         // And the failure streak restarted from zero.
         let _ = b.call(fail);
         assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn half_open_admits_exactly_one_probe_under_concurrency() {
+        let b = CircuitBreaker::new(CircuitBreakerConfig {
+            failure_threshold: 2,
+            cooldown: Duration::from_millis(20),
+            // Budget > 1: the in-flight fence must still cap concurrent
+            // admissions at one (the budget only governs sequential
+            // probes, never parallel ones).
+            half_open_probes: 4,
+            retry_budget: 1,
+        });
+        for _ in 0..2 {
+            let _ = b.call(fail);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(30));
+        // The closure below runs *while the first probe is in flight*:
+        // a second caller arriving in that window must fast-fail even
+        // though probe budget remains, and must never touch the
+        // framework (the old counter-only scheme admitted it).
+        let concurrent_ran = AtomicUsize::new(0);
+        b.call(|| {
+            let second = b.call(|| {
+                concurrent_ran.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            });
+            assert!(second
+                .unwrap_err()
+                .to_string()
+                .contains("half-open probe budget spent"));
+            assert!(!b.is_callable(), "peek agrees while the probe is in flight");
+            assert_eq!(b.state(), BreakerState::HalfOpen);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            concurrent_ran.load(Ordering::Relaxed),
+            0,
+            "the concurrent caller never reached the framework"
+        );
+        assert_eq!(b.state(), BreakerState::Closed, "the one probe re-closed");
     }
 
     #[test]

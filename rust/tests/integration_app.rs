@@ -284,6 +284,41 @@ fn dask_backed_stage_processes_the_same_windows() {
 }
 
 #[test]
+fn racked_spec_labels_failure_domains_at_launch() {
+    use pilot_streaming::app::ReplicationSpec;
+    let service = service(6);
+    let counter = CountingProcessor::new();
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(2), &[("t", 4)])
+        .replication(ReplicationSpec::new(2))
+        .racks(2)
+        .source(
+            SourceSpec::new("seq", "t", Arc::new(SeqSource))
+                .with_producers(1)
+                .with_total_messages(8),
+        )
+        .stage(StageSpec::new("count", "t", counter).with_window(Duration::from_millis(20)))
+        .build()
+        .unwrap();
+    let handle = app.launch(&service).unwrap();
+
+    // launch_inner labels the tier before creating topics, so every
+    // factor-2 replica set spans both domains — no fallback placements.
+    let cluster = handle.cluster();
+    let brokers = cluster.broker_nodes();
+    assert_eq!(brokers.len(), 2);
+    let racks: Vec<_> = brokers.iter().map(|&b| cluster.rack_of(b).unwrap()).collect();
+    assert_eq!(racks, vec![0, 1], "round-robin rack striping");
+    assert_eq!(cluster.rack_constraint_violations(), 0);
+
+    handle.await_sources().unwrap();
+    let report = handle.drain_and_stop().unwrap();
+    assert!(report.drained);
+    assert_eq!(report.processed_messages(), 8);
+    assert_eq!(service.machine().free_nodes(), 6);
+}
+
+#[test]
 fn launch_failure_releases_every_started_pilot() {
     struct FailingWarmup;
     impl StreamProcessor for FailingWarmup {

@@ -92,6 +92,11 @@ fn random_snapshot(rng: &mut Rng) -> SignalSnapshot {
         // only), sometimes quorum-degraded (drives repair).
         under_replicated: if rng.below(4) == 0 { rng.below(16) } else { 0 },
         below_min_insync: if rng.below(5) == 0 { rng.below(16) } else { 0 },
+        // Placement-debt signals: rack crowding after a failure-domain
+        // bounce, and hot-broker load skew — both sometimes firing so
+        // reassignment plans flow through the invariants too.
+        broker_util_skew: if rng.below(3) == 0 { rng.range_f64(0.0, 1.0) } else { 0.0 },
+        rack_skew: if rng.below(3) == 0 { rng.range_f64(0.0, 1.0) } else { 0.0 },
         shard_queue_depths: (0..rng.below(8)).map(|_| rng.below(64) as u64).collect(),
     }
 }
@@ -204,6 +209,14 @@ fn plans_respect_limits_budgets_and_shape() {
                 {
                     assert!(cost.lead_secs.is_finite() && cost.lead_secs >= 0.0);
                     assert!(cost.node_secs.is_finite() && cost.node_secs >= 0.0);
+                }
+                // Placement repair moves replicas on the existing
+                // tier: it must never be empty and never commit
+                // node-seconds (that would make it an extension).
+                if let PlanStep::ReassignReplicas { moves, cost } = st {
+                    assert!(*moves >= 1, "empty reassignment step: {plan:?}");
+                    assert!(cost.lead_secs.is_finite() && cost.lead_secs >= 0.0);
+                    assert_eq!(cost.node_secs, 0.0, "reassignment bought nodes: {plan:?}");
                 }
             }
             assert!(plan.expected_drain_msgs.is_finite() && plan.expected_drain_msgs >= 0.0);

@@ -20,7 +20,10 @@
 //! quorum gate may *reject* produces but must never lose an acked
 //! record to the kill; under [`AckMode::Leader`] an unclean election
 //! must lose *exactly* the follower gap the public lag gauges reported
-//! the instant before the kill.
+//! the instant before the kill.  The rack variant scales the blast
+//! radius up: an entire failure domain dies at once mid-produce, every
+//! victim later re-joins, and quorum durability must hold across the
+//! whole bounce with zero divergence to truncate.
 //!
 //! Like `proptest_invariants.rs`, this is a seeded-random harness (the
 //! offline dependency set has no `proptest`): failures print the seed
@@ -518,6 +521,207 @@ fn prop_isr_churn_quorum_rejects_rather_than_lose() {
              of {produced_total} acked ({rejected_total} rejected by the quorum gate)"
         );
         assert_eq!(consumed_seq, produced_seq, "per-key completeness across ISR churn");
+        assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
+    });
+}
+
+/// Whole-rack chaos under [`AckMode::Quorum`]: four brokers striped
+/// across two failure domains, factor-2 rack-anti-affine placement,
+/// and one entire rack killed atomically at a random point in the
+/// interleaving — so *every* partition loses a replica in the same
+/// instant.  While the tier is degraded the quorum gate may only
+/// *reject* produces (ISR 1 < `min_insync` 2 on every pre-kill
+/// partition); it must never lose an acked record.  Every victim then
+/// re-joins: under quorum nothing diverged, so each
+/// [`rejoin_broker`](BrokerCluster::rejoin_broker) truncates exactly
+/// zero records, and once the returners catch up the quorum path
+/// accepts produces again.  Exactly-once and per-key order hold across
+/// the full rack bounce.
+#[test]
+fn prop_rack_kill_quorum_rejects_rather_than_lose_and_rejoin_heals() {
+    const LAGS: [u64; 4] = [0, 1, 2, 5];
+    check("rack-kill-quorum-durability", 10, |rng| {
+        let n_keys = 2 + rng.below(6);
+        let machine = Machine::unthrottled(8);
+        // Nodes at membership positions {0,2} form rack 0, {1,3} rack 1.
+        let cluster = BrokerCluster::with_racks(machine, vec![0, 1, 2, 3], 2);
+        cluster
+            .create_topic_replicated(
+                "t",
+                1 + rng.below(4),
+                ReplicationConfig::new(2)
+                    .with_ack_mode(AckMode::Quorum)
+                    .with_min_insync(2)
+                    .with_replica_lag_max(2),
+            )
+            .unwrap();
+        // Two domains cover factor 2: placement never needs a fallback.
+        assert_eq!(cluster.rack_constraint_violations(), 0);
+
+        let mut producer = Producer::new(
+            cluster.clone(),
+            "t",
+            4,
+            ProducerConfig {
+                batch_bytes: 1,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut consumers =
+            vec![Consumer::join(cluster.clone(), "t", "g", 5, consumer_config()).unwrap()];
+
+        let mut produced_seq = vec![0u32; n_keys];
+        let mut consumed_seq = vec![0u32; n_keys];
+        let mut produced_total = 0usize;
+        let mut consumed_total = 0usize;
+        let mut rejected_total = 0usize;
+
+        // One rack death per case at a random step; its victims re-join
+        // (still mid-interleaving when the schedule allows it).
+        let mut victims: Vec<pilot_streaming::cluster::NodeId> = Vec::new();
+        let mut rejoined = false;
+        let steps = 12 + rng.below(25);
+        for step in 0..steps {
+            if victims.is_empty() && (rng.below(steps - step) == 0 || step + 2 >= steps) {
+                // Quorum's durability invariant at its sharpest, right
+                // before the whole domain dies: no acked record is
+                // missing from any replica, so killing every broker of
+                // a rack at once promotes only fully-caught-up
+                // survivors and loses nothing.
+                let rack = rng.below(2);
+                let reports = cluster.kill_rack(rack).unwrap();
+                assert_eq!(reports.len(), 2, "each domain holds two brokers");
+                for r in &reports {
+                    assert_eq!(r.unreplicated, 0, "anti-affine factor-2 set had no survivor");
+                    assert_eq!(
+                        r.lost_records, 0,
+                        "quorum acked a record the surviving rack never applied"
+                    );
+                }
+                victims = reports.iter().map(|r| r.killed).collect();
+                assert_eq!(cluster.broker_nodes().len(), 2);
+                continue;
+            }
+            if !victims.is_empty() && !rejoined && (rng.below(4) == 0 || step + 1 >= steps) {
+                for &v in &victims {
+                    let report = cluster.rejoin_broker(v).unwrap();
+                    assert_eq!(
+                        report.truncated_records, 0,
+                        "nothing diverged under quorum, yet node {v} truncated its tail"
+                    );
+                }
+                assert_eq!(cluster.broker_nodes().len(), 4);
+                rejoined = true;
+                continue;
+            }
+            match rng.below(12) {
+                // Keyed burst: acked or rejected by the quorum gate,
+                // never silently dropped.  The degraded window rejects
+                // everything on pre-kill partitions (sole survivor < 2
+                // in-sync replicas) — that *is* the contract.
+                0..=4 => {
+                    for _ in 0..1 + rng.below(8) {
+                        let k = rng.below(n_keys);
+                        match producer.send(Some(&[k as u8]), encode(k, produced_seq[k])) {
+                            Ok(_) => {
+                                produced_seq[k] += 1;
+                                produced_total += 1;
+                            }
+                            Err(e) => {
+                                assert!(
+                                    e.to_string().contains("in-sync"),
+                                    "only the quorum gate may reject a produce: {e}"
+                                );
+                                rejected_total += 1;
+                            }
+                        }
+                    }
+                }
+                5 | 6 => {
+                    cluster.repartition_topic("t", 1 + rng.below(8)).unwrap();
+                }
+                7 => {
+                    if consumers.len() > 1 && rng.below(2) == 0 {
+                        let idx = rng.below(consumers.len());
+                        consumers.remove(idx);
+                    } else if consumers.len() < 3 {
+                        consumers.push(
+                            Consumer::join(cluster.clone(), "t", "g", 5, consumer_config())
+                                .unwrap(),
+                        );
+                    }
+                }
+                8 | 9 => {
+                    let nodes = cluster.broker_nodes();
+                    let node = nodes[rng.below(nodes.len())];
+                    cluster
+                        .inject_follower_lag("t", node, LAGS[rng.below(LAGS.len())])
+                        .unwrap();
+                    if rng.below(2) == 0 {
+                        cluster.replication_heartbeat("t").unwrap();
+                    }
+                }
+                _ => {
+                    for _ in 0..1 + rng.below(4) {
+                        let idx = rng.below(consumers.len());
+                        let recs = consumers[idx].poll().unwrap();
+                        observe(recs, &mut consumed_seq, &mut consumed_total);
+                    }
+                }
+            }
+            for (end, committed) in cluster.group_progress("g", "t").unwrap() {
+                assert!(
+                    committed <= end,
+                    "negative lag: committed {committed} > end {end}"
+                );
+            }
+        }
+        assert!(!victims.is_empty(), "the schedule above always kills one rack");
+        assert!(rejoined, "every victim re-joined before the drain");
+
+        // Heal the tier: clear injected lag, let returners catch up and
+        // re-enter their ISRs, then the quorum path must accept again.
+        for &n in &cluster.broker_nodes() {
+            cluster.inject_follower_lag("t", n, 0).unwrap();
+        }
+        // Twice: one pass applies outstanding appends, the next sees
+        // every gap at zero and expands the ISRs.
+        cluster.replication_heartbeat("t").unwrap();
+        cluster.replication_heartbeat("t").unwrap();
+        for _ in 0..3 {
+            let k = rng.below(n_keys);
+            producer
+                .send(Some(&[k as u8]), encode(k, produced_seq[k]))
+                .expect("quorum must accept once the bounced rack caught back up");
+            produced_seq[k] += 1;
+            produced_total += 1;
+        }
+
+        let mut idle_rounds = 0;
+        while consumed_total < produced_total && idle_rounds < 300 {
+            let mut progressed = false;
+            for c in consumers.iter_mut() {
+                let recs = c.poll().unwrap();
+                if !recs.is_empty() {
+                    progressed = true;
+                }
+                observe(recs, &mut consumed_seq, &mut consumed_total);
+            }
+            if progressed {
+                idle_rounds = 0;
+            } else {
+                idle_rounds += 1;
+            }
+        }
+
+        assert_eq!(
+            consumed_total, produced_total,
+            "exactly-once violated across the rack bounce: {consumed_total} consumed \
+             of {produced_total} acked ({rejected_total} rejected by the quorum gate)"
+        );
+        assert_eq!(consumed_seq, produced_seq, "per-key completeness across the rack bounce");
         assert_eq!(cluster.group_lag("g", "t").unwrap(), 0);
     });
 }
