@@ -52,6 +52,7 @@ fn snapshot(lag: u64, partitions: usize) -> SignalSnapshot {
         broker_util_skew: 0.0,
         rack_skew: 0.0,
         shard_queue_depths: Vec::new(),
+        edge_lags: Vec::new(),
     }
 }
 

@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 //! JSON (perf trajectory): `cargo bench --bench hotpath -- --json \
-//!   --baseline=BENCH_pr9.json > bench.json`
+//!   --baseline=BENCH_pr10.json > bench.json`
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -114,6 +114,15 @@ fn main() {
         let name = format!("broker/contended-produce-fetch-{ways}x{ways}");
         bench.run_once(&name, move || contended_workload(quick, ways));
     }
+
+    // --- Dataflow DAG: 3-stage chained hops --------------------------------
+    // End-to-end cost of the chained emission path: every record crosses
+    // three engine hops (relay → relay → count), each hop re-emitting
+    // downstream through a keyed producer that flushes before the hop's
+    // input offsets commit.  One run produces the whole stream at the
+    // head and topologically drains the chain; the drained end-to-end
+    // rate is gated in CI via `--metric chain_msgs_per_sec`.
+    bench.run_once("broker/dag-3stage-chain", move || dag_chain_workload(quick));
 
     // --- Failover: broker death to promoted leaders ------------------------
     // Time-to-recover for a factor-2 replicated topic: one iteration
@@ -288,6 +297,67 @@ fn main() {
 /// throughput on equal work.  Emits the aggregate fetch rate plus the
 /// per-thread rate (`fetch_msgs_per_sec_per_thread`) the scaling claim
 /// is judged on.
+/// One end-to-end run of a 3-stage chained DAG (relay → relay → count
+/// across three broker topics): keyed records enter at the head, every
+/// hop re-emits 1:1, and the run ends with a topological drain.  The
+/// wall-clock covers produce + all three hops + drain, so the rate is
+/// the chain's sustained end-to-end throughput, not a single hop's.
+fn dag_chain_workload(quick: bool) -> Vec<(String, f64)> {
+    use pilot_streaming::app::{CountingProcessor, RelayProcessor, StageSpec, StreamingApp};
+    use pilot_streaming::broker::{Partitioner, Producer, ProducerConfig};
+    use pilot_streaming::pilot::{KafkaDescription, PilotComputeService};
+    use std::time::Duration;
+
+    let window = Duration::from_millis(10);
+    let app = StreamingApp::builder()
+        .broker(KafkaDescription::new(1), &[("a", 2), ("b", 2), ("c", 2)])
+        .stage(
+            StageSpec::new("hop1", "a", RelayProcessor::new(1))
+                .with_window(window)
+                .with_output_topic("b"),
+        )
+        .stage(
+            StageSpec::new("hop2", "b", RelayProcessor::new(1))
+                .with_window(window)
+                .with_output_topic("c"),
+        )
+        .stage(StageSpec::new("sink", "c", CountingProcessor::new()).with_window(window))
+        .drain_timeout(Duration::from_secs(120))
+        .build()
+        .unwrap();
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(6)));
+    let handle = app.launch(&service).unwrap();
+    let msgs: u64 = if quick { 200 } else { 2000 };
+    let mut producer = Producer::new(
+        handle.cluster().clone(),
+        "a",
+        1,
+        ProducerConfig {
+            partitioner: Partitioner::Keyed,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    for i in 0..msgs {
+        let k = (i % 251) as u8;
+        let mut v = vec![k; 64];
+        v[1..9].copy_from_slice(&i.to_le_bytes());
+        producer.send(Some(&[k]), v).unwrap();
+    }
+    producer.flush().unwrap();
+    let report = handle.drain_and_stop().unwrap();
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    assert!(report.drained, "chain drain timed out");
+    let sink = report.stages.iter().find(|s| s.name == "sink").unwrap();
+    assert_eq!(sink.processed_messages, msgs, "chain lost records");
+    vec![
+        ("chain_msgs".to_string(), msgs as f64),
+        ("chain_msgs_per_sec".to_string(), msgs as f64 / secs),
+        ("chain_hops".to_string(), 3.0),
+    ]
+}
+
 fn contended_workload(quick: bool, ways: usize) -> Vec<(String, f64)> {
     let machine = Machine::unthrottled(2);
     let cluster = BrokerCluster::with_shards(machine, vec![0], LogConfig::default(), ways.min(32));

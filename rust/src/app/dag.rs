@@ -1,0 +1,708 @@
+//! Dataflow DAGs: chained, branching, re-merging pipelines as specs.
+//!
+//! The paper's headline use case — light-source reconstruction feeding
+//! compression feeding archival — is a *multi-stage* pipeline, but a
+//! [`super::StageSpec`] historically consumed one topic and terminated
+//! there.  This module makes the spec a DAG:
+//!
+//! * stages grow an `output_topic` (stage chaining): a stage's
+//!   [`super::StreamProcessor`] emits derived records through an
+//!   [`crate::engine::Emitter`], re-keyed through the broker's
+//!   [`crate::broker::key_hash`] route, and the engine flushes those
+//!   emissions *before* committing the stage's input offsets — the
+//!   invariant topological drain rests on;
+//! * [`SplitSpec`] routes one topic's records across N branch topics by
+//!   a [`SplitRoute`] (key hash, size threshold, round-robin, or a user
+//!   predicate over the record bytes);
+//! * [`MergeSpec`] fans branch topics back into one output topic.
+//!
+//! [`lower`] validates the whole graph pre-launch — every referenced
+//! topic must exist, every produced edge must have a consumer (dangling
+//! edges are configuration bugs that silently strand records), and the
+//! graph must be acyclic — and returns the runtime nodes in topological
+//! order.  [`super::AppHandle::drain_and_stop`] drains in exactly that
+//! order: sources are fenced first, then each node is drained only
+//! after all of its upstream nodes report zero lag on a *current* topic
+//! epoch ([`crate::broker::Topic::is_current`]), so an in-flight
+//! repartition can never fake a drain.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::broker::{jump_hash, key_hash, Record};
+use crate::engine::{Emitter, TaskContext};
+use crate::error::{Error, Result};
+use crate::pilot::FrameworkKind;
+
+use super::spec::StreamingApp;
+use super::StreamProcessor;
+
+/// How a [`SplitSpec`] routes each record to a branch.
+#[derive(Clone)]
+pub enum SplitRoute {
+    /// Jump-consistent hash of the record's key prefix
+    /// ([`SplitSpec::with_key_bytes`]) over the branch list: equal keys
+    /// always take the same branch, so per-key order survives the
+    /// split *and* the downstream merge.
+    KeyHash,
+    /// Records at or above the byte threshold take branch 1, smaller
+    /// ones branch 0 (the classic small/large payload split).
+    SizeThreshold(usize),
+    /// Rotate across branches (load balancing; per-key order across a
+    /// later merge is not preserved).
+    RoundRobin,
+    /// User predicate over the record bytes → branch index (clamped to
+    /// the branch count).
+    Predicate(Arc<dyn Fn(&[u8]) -> usize + Send + Sync>),
+}
+
+impl std::fmt::Debug for SplitRoute {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SplitRoute::KeyHash => write!(f, "KeyHash"),
+            SplitRoute::SizeThreshold(b) => write!(f, "SizeThreshold({b})"),
+            SplitRoute::RoundRobin => write!(f, "RoundRobin"),
+            SplitRoute::Predicate(_) => write!(f, "Predicate(..)"),
+        }
+    }
+}
+
+/// A split node: consume `topic`, route every record to one of
+/// `branches` by the [`SplitRoute`].
+#[derive(Clone)]
+pub struct SplitSpec {
+    pub name: String,
+    /// Input topic.
+    pub topic: String,
+    /// Branch output topics (≥ 2).
+    pub branches: Vec<String>,
+    pub route: SplitRoute,
+    /// Leading value bytes that form the record key (0 = unkeyed;
+    /// required > 0 for [`SplitRoute::KeyHash`]).
+    pub key_bytes: usize,
+    pub window: Duration,
+    pub nodes: usize,
+    pub executors_per_node: usize,
+    pub group: Option<String>,
+}
+
+impl SplitSpec {
+    pub fn new(name: &str, topic: &str, branches: &[&str], route: SplitRoute) -> Self {
+        SplitSpec {
+            name: name.to_string(),
+            topic: topic.to_string(),
+            branches: branches.iter().map(|b| b.to_string()).collect(),
+            route,
+            key_bytes: 0,
+            window: Duration::from_millis(250),
+            nodes: 1,
+            executors_per_node: 2,
+            group: None,
+        }
+    }
+
+    pub fn with_key_bytes(mut self, n: usize) -> Self {
+        self.key_bytes = n;
+        self
+    }
+
+    pub fn with_window(mut self, window: Duration) -> Self {
+        self.window = window;
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_executors_per_node(mut self, executors: usize) -> Self {
+        self.executors_per_node = executors;
+        self
+    }
+
+    pub fn with_group(mut self, group: &str) -> Self {
+        self.group = Some(group.to_string());
+        self
+    }
+
+    pub fn group_name(&self) -> String {
+        self.group.clone().unwrap_or_else(|| format!("app-{}", self.name))
+    }
+}
+
+/// A merge node: fan `inputs` back into `output` (one relay job per
+/// input topic, all sharing the node's executor pool).
+#[derive(Debug, Clone)]
+pub struct MergeSpec {
+    pub name: String,
+    /// Input branch topics (≥ 2).
+    pub inputs: Vec<String>,
+    /// Merged output topic.
+    pub output: String,
+    /// Leading value bytes that form the record key (0 = unkeyed).
+    pub key_bytes: usize,
+    pub window: Duration,
+    pub nodes: usize,
+    pub executors_per_node: usize,
+    pub group: Option<String>,
+}
+
+impl MergeSpec {
+    pub fn new(name: &str, inputs: &[&str], output: &str) -> Self {
+        MergeSpec {
+            name: name.to_string(),
+            inputs: inputs.iter().map(|i| i.to_string()).collect(),
+            output: output.to_string(),
+            key_bytes: 0,
+            window: Duration::from_millis(250),
+            nodes: 1,
+            executors_per_node: 2,
+            group: None,
+        }
+    }
+
+    pub fn with_key_bytes(mut self, n: usize) -> Self {
+        self.key_bytes = n;
+        self
+    }
+
+    pub fn with_window(mut self, window: Duration) -> Self {
+        self.window = window;
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_executors_per_node(mut self, executors: usize) -> Self {
+        self.executors_per_node = executors;
+        self
+    }
+
+    pub fn with_group(mut self, group: &str) -> Self {
+        self.group = Some(group.to_string());
+        self
+    }
+
+    pub fn group_name(&self) -> String {
+        self.group.clone().unwrap_or_else(|| format!("app-{}", self.name))
+    }
+}
+
+/// Key prefix of a record's value under a `key_bytes` framing
+/// (None when the node is unkeyed).
+fn key_of(value: &[u8], key_bytes: usize) -> Option<&[u8]> {
+    if key_bytes == 0 {
+        None
+    } else {
+        Some(&value[..key_bytes.min(value.len())])
+    }
+}
+
+/// Pass-through processor for chain hops and merge legs: re-emits every
+/// record, keyed by its leading `key_bytes` value bytes, optionally
+/// burning a fixed per-message cost (models a compression/archival
+/// kernel; the knob the hot-branch autoscaling demos lean on).  The
+/// spec-file name is `"relay"`.
+pub struct RelayProcessor {
+    key_bytes: usize,
+    per_message: Option<Duration>,
+    messages: AtomicU64,
+}
+
+impl RelayProcessor {
+    pub fn new(key_bytes: usize) -> Arc<Self> {
+        Arc::new(RelayProcessor {
+            key_bytes,
+            per_message: None,
+            messages: AtomicU64::new(0),
+        })
+    }
+
+    pub fn with_cost(key_bytes: usize, per_message: Duration) -> Arc<Self> {
+        Arc::new(RelayProcessor {
+            key_bytes,
+            per_message: Some(per_message),
+            messages: AtomicU64::new(0),
+        })
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+}
+
+impl StreamProcessor for RelayProcessor {
+    fn name(&self) -> &str {
+        "relay"
+    }
+
+    fn process_window(&self, _ctx: &TaskContext, window: &[Record]) -> Result<()> {
+        // Sink position (no output topic): count only.
+        self.messages.fetch_add(window.len() as u64, Ordering::Relaxed);
+        if let Some(d) = self.per_message {
+            std::thread::sleep(d * window.len() as u32);
+        }
+        Ok(())
+    }
+
+    fn process_window_emit(
+        &self,
+        _ctx: &TaskContext,
+        window: &[Record],
+        out: &mut Emitter,
+    ) -> Result<()> {
+        for r in window {
+            if let Some(d) = self.per_message {
+                std::thread::sleep(d);
+            }
+            self.messages.fetch_add(1, Ordering::Relaxed);
+            out.emit(key_of(&r.value, self.key_bytes), r.value.to_vec());
+        }
+        Ok(())
+    }
+}
+
+/// The router behind a [`SplitSpec`]: emits each record to the branch
+/// its [`SplitRoute`] picks, keyed by the node's `key_bytes` framing.
+pub(crate) struct SplitProcessor {
+    route: SplitRoute,
+    key_bytes: usize,
+    n_branches: usize,
+    rr_next: AtomicUsize,
+}
+
+impl SplitProcessor {
+    pub(crate) fn new(spec: &SplitSpec) -> Arc<Self> {
+        Arc::new(SplitProcessor {
+            route: spec.route.clone(),
+            key_bytes: spec.key_bytes,
+            n_branches: spec.branches.len(),
+            rr_next: AtomicUsize::new(0),
+        })
+    }
+
+    fn branch_for(&self, value: &[u8]) -> usize {
+        match &self.route {
+            SplitRoute::KeyHash => {
+                let key = key_of(value, self.key_bytes).unwrap_or(value);
+                jump_hash(key_hash(key), self.n_branches)
+            }
+            SplitRoute::SizeThreshold(bytes) => usize::from(value.len() >= *bytes),
+            SplitRoute::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.n_branches
+            }
+            SplitRoute::Predicate(f) => f(value).min(self.n_branches - 1),
+        }
+    }
+}
+
+impl StreamProcessor for SplitProcessor {
+    fn name(&self) -> &str {
+        "split"
+    }
+
+    fn process_window(&self, _ctx: &TaskContext, _window: &[Record]) -> Result<()> {
+        // A split is never a sink; the engine always hands it outputs.
+        Err(Error::App("split node launched without output topics".into()))
+    }
+
+    fn process_window_emit(
+        &self,
+        _ctx: &TaskContext,
+        window: &[Record],
+        out: &mut Emitter,
+    ) -> Result<()> {
+        for r in window {
+            let branch = self.branch_for(&r.value);
+            out.emit_to(branch, key_of(&r.value, self.key_bytes), r.value.to_vec());
+        }
+        Ok(())
+    }
+}
+
+/// One lowered runtime node of the DAG — what [`super::AppHandle`]
+/// actually launches.  Stages lower 1:1; a split lowers to one
+/// multi-output node; a merge lowers to one relay leg per input topic
+/// (all legs share the merge's group name, so per-leg lag is the
+/// per-edge signal).
+pub(crate) struct DagNode {
+    pub name: String,
+    /// Input topic.
+    pub topic: String,
+    /// Downstream topics (`Emitter` branch order).  Empty for sinks.
+    pub outputs: Vec<String>,
+    pub processor: Arc<dyn StreamProcessor>,
+    pub window: Duration,
+    pub framework: FrameworkKind,
+    pub nodes: usize,
+    pub executors_per_node: usize,
+    pub group: String,
+}
+
+/// Lower the app's stages/splits/merges into runtime nodes, validate
+/// the graph (unknown topics, degenerate splits/merges, dangling
+/// produced edges, cycles), and return the nodes in topological order
+/// — the launch *and* drain order.
+pub(crate) fn lower(app: &StreamingApp) -> Result<Vec<DagNode>> {
+    let err = |m: String| Err(Error::App(m));
+    let topic_exists = |t: &str| app.broker.topics.iter().any(|x| x.name == t);
+
+    let mut nodes: Vec<DagNode> = Vec::new();
+    for s in &app.stages {
+        if let Some(out) = &s.output_topic {
+            if !topic_exists(out) {
+                return err(format!(
+                    "stage '{}' outputs to unknown topic '{out}'",
+                    s.name
+                ));
+            }
+        }
+        nodes.push(DagNode {
+            name: s.name.clone(),
+            topic: s.topic.clone(),
+            outputs: s.output_topic.iter().cloned().collect(),
+            processor: s.processor.clone(),
+            window: s.window,
+            framework: s.framework,
+            nodes: s.nodes,
+            executors_per_node: s.executors_per_node,
+            group: s.group_name(),
+        });
+    }
+    for s in &app.splits {
+        if s.branches.len() < 2 {
+            return err(format!(
+                "split '{}' needs at least 2 branches (has {})",
+                s.name,
+                s.branches.len()
+            ));
+        }
+        if matches!(s.route, SplitRoute::KeyHash) && s.key_bytes == 0 {
+            return err(format!(
+                "split '{}' routes by key hash but key_bytes is 0",
+                s.name
+            ));
+        }
+        for t in std::iter::once(&s.topic).chain(&s.branches) {
+            if !topic_exists(t) {
+                return err(format!("split '{}' references unknown topic '{t}'", s.name));
+            }
+        }
+        if s.window.is_zero() || s.nodes == 0 || s.executors_per_node == 0 {
+            return err(format!("split '{}' has a zero window/nodes/executors", s.name));
+        }
+        nodes.push(DagNode {
+            name: s.name.clone(),
+            topic: s.topic.clone(),
+            outputs: s.branches.clone(),
+            processor: SplitProcessor::new(s),
+            window: s.window,
+            // Routers are light pass-through jobs; run them on the
+            // futures engine rather than a full micro-batch pilot.
+            framework: FrameworkKind::Dask,
+            nodes: s.nodes,
+            executors_per_node: s.executors_per_node,
+            group: s.group_name(),
+        });
+    }
+    for m in &app.merges {
+        if m.inputs.len() < 2 {
+            return err(format!(
+                "merge '{}' needs at least 2 inputs (has {})",
+                m.name,
+                m.inputs.len()
+            ));
+        }
+        for t in m.inputs.iter().chain(std::iter::once(&m.output)) {
+            if !topic_exists(t) {
+                return err(format!("merge '{}' references unknown topic '{t}'", m.name));
+            }
+        }
+        if m.window.is_zero() || m.nodes == 0 || m.executors_per_node == 0 {
+            return err(format!("merge '{}' has a zero window/nodes/executors", m.name));
+        }
+        for input in &m.inputs {
+            nodes.push(DagNode {
+                name: format!("{}:{input}", m.name),
+                topic: input.clone(),
+                outputs: vec![m.output.clone()],
+                processor: RelayProcessor::new(m.key_bytes),
+                window: m.window,
+                framework: FrameworkKind::Dask,
+                nodes: m.nodes,
+                executors_per_node: m.executors_per_node,
+                group: m.group_name(),
+            });
+        }
+    }
+
+    // Node names are the report/autoscale namespace: one name, one node.
+    for (i, a) in nodes.iter().enumerate() {
+        if nodes.iter().skip(i + 1).any(|b| b.name == a.name) {
+            return err(format!("duplicate DAG node name '{}'", a.name));
+        }
+    }
+
+    // Dangling produced edges: a topic a node emits to that nothing
+    // consumes strands records silently — reject pre-launch.  (Inputs
+    // without in-spec producers stay legal: external producers feed
+    // them, exactly like single-stage apps today.)
+    for n in &nodes {
+        for out in &n.outputs {
+            if !nodes.iter().any(|c| c.topic == *out) {
+                return err(format!(
+                    "node '{}' emits to topic '{out}' but no stage/split/merge consumes it \
+                     (dangling edge)",
+                    n.name
+                ));
+            }
+        }
+    }
+
+    // Kahn's algorithm over topic edges: node A precedes node B when B
+    // consumes a topic A produces.  Anything left unsorted is a cycle.
+    let mut indegree: Vec<usize> = nodes
+        .iter()
+        .map(|n| {
+            nodes
+                .iter()
+                .filter(|u| u.outputs.contains(&n.topic))
+                .count()
+        })
+        .collect();
+    let mut order: Vec<usize> = Vec::with_capacity(nodes.len());
+    let mut ready: Vec<usize> =
+        (0..nodes.len()).filter(|&i| indegree[i] == 0).collect();
+    while let Some(i) = ready.pop() {
+        order.push(i);
+        for (j, n) in nodes.iter().enumerate() {
+            if nodes[i].outputs.contains(&n.topic) {
+                indegree[j] -= 1;
+                if indegree[j] == 0 {
+                    ready.push(j);
+                }
+            }
+        }
+    }
+    if order.len() != nodes.len() {
+        let stuck: Vec<&str> = (0..nodes.len())
+            .filter(|i| !order.contains(i))
+            .map(|i| nodes[i].name.as_str())
+            .collect();
+        return err(format!("DAG contains a cycle through: {}", stuck.join(", ")));
+    }
+    // `order` indexes in topo order, but Vec::swap_remove would scramble
+    // it; drain by mapping into Options instead.
+    let mut slots: Vec<Option<DagNode>> = nodes.into_iter().map(Some).collect();
+    Ok(order
+        .into_iter()
+        .map(|i| slots[i].take().expect("topo order visits each node once"))
+        .collect())
+}
+
+/// The DAG's consumer edges, in the same topological order as
+/// [`lower`]: one `(node name, topic, group)` per node — what the
+/// per-edge autoscale probes watch.
+pub(crate) fn edges(nodes: &[DagNode]) -> Vec<(String, String, String)> {
+    nodes
+        .iter()
+        .map(|n| (n.name.clone(), n.topic.clone(), n.group.clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{CountingProcessor, StreamingApp};
+    use crate::broker::SharedSlice;
+
+    fn record(bytes: &[u8]) -> Record {
+        Record {
+            offset: 0,
+            timestamp_ns: 0,
+            value: SharedSlice::from_vec(bytes.to_vec()),
+        }
+    }
+
+    fn ctx() -> TaskContext {
+        TaskContext {
+            partition: 0,
+            node: 0,
+            batch: 0,
+        }
+    }
+
+    /// A broker spec holding every named topic (1 partition each).
+    fn base(topics: &[&str]) -> crate::app::StreamingAppBuilder {
+        let pairs: Vec<(&str, usize)> = topics.iter().map(|t| (*t, 1)).collect();
+        StreamingApp::builder().broker(crate::pilot::KafkaDescription::new(1), &pairs)
+    }
+
+    #[test]
+    fn chain_lowers_in_topological_order() {
+        let app = base(&["raw", "mid", "out"])
+            // Declared sink-first on purpose: lowering must reorder.
+            .stage(
+                crate::app::StageSpec::new("archive", "out", CountingProcessor::new()),
+            )
+            .stage(
+                crate::app::StageSpec::new("reconstruct", "raw", RelayProcessor::new(1))
+                    .with_output_topic("mid"),
+            )
+            .stage(
+                crate::app::StageSpec::new("compress", "mid", RelayProcessor::new(1))
+                    .with_output_topic("out"),
+            )
+            .build()
+            .unwrap();
+        let nodes = lower(&app).unwrap();
+        let names: Vec<&str> = nodes.iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(names, vec!["reconstruct", "compress", "archive"]);
+        assert_eq!(nodes[0].outputs, vec!["mid".to_string()]);
+        assert!(nodes[2].outputs.is_empty());
+    }
+
+    #[test]
+    fn split_and_merge_lower_around_branch_stages() {
+        let app = base(&["in", "hot", "cold", "merged"])
+            .split(SplitSpec::new(
+                "route",
+                "in",
+                &["hot", "cold"],
+                SplitRoute::SizeThreshold(64),
+            ))
+            .merge(MergeSpec::new("fan-in", &["hot", "cold"], "merged"))
+            .stage(crate::app::StageSpec::new(
+                "archive",
+                "merged",
+                CountingProcessor::new(),
+            ))
+            .build()
+            .unwrap();
+        let nodes = lower(&app).unwrap();
+        let names: Vec<&str> = nodes.iter().map(|n| n.name.as_str()).collect();
+        let pos = |n: &str| names.iter().position(|x| *x == n).unwrap();
+        assert_eq!(names.len(), 4, "split + 2 merge legs + archive: {names:?}");
+        assert!(pos("route") < pos("fan-in:hot"));
+        assert!(pos("route") < pos("fan-in:cold"));
+        assert!(pos("fan-in:hot") < pos("archive"));
+        assert!(pos("fan-in:cold") < pos("archive"));
+        // Both merge legs share one group: per-leg lag is per-edge lag.
+        assert_eq!(nodes[pos("fan-in:hot")].group, nodes[pos("fan-in:cold")].group);
+    }
+
+    #[test]
+    fn cycles_and_dangling_edges_are_rejected() {
+        // a → b → a is a cycle.
+        let cycle = base(&["a", "b"])
+            .stage(
+                crate::app::StageSpec::new("s1", "a", RelayProcessor::new(0))
+                    .with_output_topic("b"),
+            )
+            .stage(
+                crate::app::StageSpec::new("s2", "b", RelayProcessor::new(0))
+                    .with_output_topic("a"),
+            )
+            .build();
+        let msg = format!("{}", cycle.err().unwrap());
+        assert!(msg.contains("cycle"), "{msg}");
+
+        // An output topic no node consumes is a dangling edge.
+        let dangling = base(&["a", "b"])
+            .stage(
+                crate::app::StageSpec::new("s1", "a", RelayProcessor::new(0))
+                    .with_output_topic("b"),
+            )
+            .build();
+        let msg = format!("{}", dangling.err().unwrap());
+        assert!(msg.contains("dangling"), "{msg}");
+
+        // Unknown output topic.
+        let unknown = base(&["a"])
+            .stage(
+                crate::app::StageSpec::new("s1", "a", RelayProcessor::new(0))
+                    .with_output_topic("ghost"),
+            )
+            .build();
+        let msg = format!("{}", unknown.err().unwrap());
+        assert!(msg.contains("unknown topic 'ghost'"), "{msg}");
+    }
+
+    #[test]
+    fn degenerate_splits_and_merges_are_rejected() {
+        let one_branch = base(&["a", "b"])
+            .split(SplitSpec::new("s", "a", &["b"], SplitRoute::RoundRobin))
+            .build();
+        assert!(format!("{}", one_branch.err().unwrap()).contains("at least 2 branches"));
+
+        let keyless = base(&["a", "b", "c"])
+            .split(SplitSpec::new("s", "a", &["b", "c"], SplitRoute::KeyHash))
+            .stage(crate::app::StageSpec::new("x", "b", CountingProcessor::new()))
+            .stage(crate::app::StageSpec::new("y", "c", CountingProcessor::new()))
+            .build();
+        assert!(format!("{}", keyless.err().unwrap()).contains("key_bytes"));
+
+        let one_input = base(&["a", "b"])
+            .merge(MergeSpec::new("m", &["a"], "b"))
+            .build();
+        assert!(format!("{}", one_input.err().unwrap()).contains("at least 2 inputs"));
+
+        let dup = base(&["a", "b", "c"])
+            .stage(crate::app::StageSpec::new("same", "a", CountingProcessor::new()))
+            .split(
+                SplitSpec::new("same", "a", &["b", "c"], SplitRoute::RoundRobin)
+                    .with_key_bytes(1),
+            )
+            .stage(crate::app::StageSpec::new("x", "b", CountingProcessor::new()))
+            .stage(crate::app::StageSpec::new("y", "c", CountingProcessor::new()))
+            .build();
+        assert!(format!("{}", dup.err().unwrap()).contains("duplicate DAG node name"));
+    }
+
+    #[test]
+    fn split_routes_are_deterministic_and_key_stable() {
+        let spec = SplitSpec::new("s", "a", &["b", "c"], SplitRoute::KeyHash).with_key_bytes(1);
+        let p = SplitProcessor::new(&spec);
+        // Same key prefix, different payload tails: one branch.
+        assert_eq!(p.branch_for(&[7, 1, 2]), p.branch_for(&[7, 9, 9, 9]));
+
+        let spec = SplitSpec::new("s", "a", &["b", "c"], SplitRoute::SizeThreshold(3));
+        let p = SplitProcessor::new(&spec);
+        assert_eq!(p.branch_for(&[1, 2]), 0);
+        assert_eq!(p.branch_for(&[1, 2, 3]), 1);
+
+        let route = SplitRoute::Predicate(Arc::new(|v: &[u8]| v[0] as usize));
+        let spec = SplitSpec::new("s", "a", &["b", "c"], route);
+        let p = SplitProcessor::new(&spec);
+        assert_eq!(p.branch_for(&[0]), 0);
+        assert_eq!(p.branch_for(&[1]), 1);
+        assert_eq!(p.branch_for(&[200]), 1, "predicate clamps to branch count");
+    }
+
+    #[test]
+    fn split_emitter_fans_records_across_branches() {
+        let spec = SplitSpec::new("s", "a", &["b", "c"], SplitRoute::RoundRobin);
+        let p = SplitProcessor::new(&spec);
+        let mut out = Emitter::default();
+        p.process_window_emit(&ctx(), &[record(&[1]), record(&[2]), record(&[3])], &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn relay_re_emits_with_key_framing() {
+        let relay = RelayProcessor::new(2);
+        let mut out = Emitter::default();
+        relay
+            .process_window_emit(&ctx(), &[record(&[1, 2, 3, 4])], &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(relay.messages(), 1);
+        assert_eq!(StreamProcessor::name(&*relay), "relay");
+    }
+}

@@ -12,6 +12,13 @@
 //! termination protocol, [`drain_and_stop`](AppHandle::drain_and_stop):
 //! fence the sources, drain consumer lag to zero, then stop jobs and
 //! pilots in reverse dependency order.
+//!
+//! Stages, splits and merges launch as the [`super::dag`]-lowered node
+//! list, in topological order.  The drain in `drain_and_stop` walks the
+//! same order: because the engine flushes a node's emissions *before*
+//! committing its input offsets, an upstream node reading lag zero on a
+//! current topic epoch means everything it derived has already landed
+//! downstream — so draining nodes upstream-first drains the whole DAG.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -61,6 +68,11 @@ pub struct StageReport {
     pub group: String,
     pub processed_messages: u64,
     pub processed_bytes: u64,
+    /// Records this node emitted to its downstream topics (0 for
+    /// sinks) — with `processed_messages`, the per-hop throughput of a
+    /// chained DAG.
+    pub emitted_messages: u64,
+    pub emitted_bytes: u64,
     pub batches: u64,
     /// Batches whose processing outran the window (backpressure).
     pub behind: u64,
@@ -89,6 +101,12 @@ impl AppReport {
     /// Messages processed across stages.
     pub fn processed_messages(&self) -> u64 {
         self.stages.iter().map(|s| s.processed_messages).sum()
+    }
+
+    /// Messages emitted onto downstream topics across stages (chained
+    /// DAG hops only; 0 for a flat app).
+    pub fn emitted_messages(&self) -> u64 {
+        self.stages.iter().map(|s| s.emitted_messages).sum()
     }
 
     /// Remaining consumer lag summed across stages.
@@ -184,12 +202,20 @@ fn launch_inner(
         cluster.create_topic_replicated(&t.name, t.partitions, app.broker.replication)?;
     }
 
-    // ---- Processing stages (consumers before producers) --------------
+    // ---- Processing nodes (consumers before producers) ---------------
+    // Stages, splits and merge legs launch as the lowered DAG node
+    // list, in topological order — which is also the order
+    // `drain_and_stop` drains them in.
+    let dag_nodes = super::dag::lower(&app)?;
+    let edges: Vec<(String, String)> = dag_nodes
+        .iter()
+        .map(|n| (n.topic.clone(), n.group.clone()))
+        .collect();
     let mut stages = Vec::new();
-    for spec in app.stages {
-        let mut desc = PilotComputeDescription::new(&resource, spec.framework, spec.nodes);
-        if let Some(key) = spec.framework.parallelism_key() {
-            desc = desc.with_config(key, &spec.executors_per_node.to_string());
+    for node in dag_nodes {
+        let mut desc = PilotComputeDescription::new(&resource, node.framework, node.nodes);
+        if let Some(key) = node.framework.parallelism_key() {
+            desc = desc.with_config(key, &node.executors_per_node.to_string());
         }
         let pilot = service.create_pilot(desc)?;
         started.push(pilot.clone());
@@ -200,25 +226,25 @@ fn launch_inner(
             FrameworkContext::TaskPar(pool) => MicroBatchEngine::with_pool(pool),
             FrameworkContext::Kafka(_) => unreachable!("rejected by build()"),
         };
-        spec.processor.warmup()?;
-        let group = spec.group_name();
-        let mut job_config = StreamingJobConfig::new(&spec.topic, spec.window);
-        job_config.group = group.clone();
+        node.processor.warmup()?;
+        let mut job_config = StreamingJobConfig::new(&node.topic, node.window)
+            .with_output_topics(node.outputs.clone());
+        job_config.group = node.group.clone();
         let job = engine.start_job(
             cluster.clone(),
             job_config,
-            Arc::new(AsBatch(spec.processor.clone())),
+            Arc::new(AsBatch(node.processor.clone())),
         )?;
         stages.push(StageRuntime {
-            name: spec.name,
-            topic: spec.topic,
-            group,
-            window: spec.window,
+            name: node.name,
+            topic: node.topic,
+            group: node.group,
+            window: node.window,
             pilot,
             engine,
             stats: job.stats().clone(),
             job: Mutex::new(Some(job)),
-            processor: spec.processor,
+            processor: node.processor,
         });
     }
 
@@ -261,12 +287,17 @@ fn launch_inner(
             .iter()
             .find(|s| s.name == spec.stage)
             .expect("validated by build()");
+        // Every DAG consumer edge rides along in the probe: snapshots
+        // carry whole-DAG per-edge lag, so uneven branch load shows up
+        // as a per-edge signal on each loop's timeline even though the
+        // loop only actuates on its own stage.
         let config = AutoscalerConfig::new(&stage.topic, &stage.group)
             .with_sample_interval(spec.sample_interval)
             .with_max_extension_nodes(spec.max_extension_nodes)
             .with_max_step(spec.max_step)
             .with_window(stage.window)
-            .with_planner(spec.planner);
+            .with_planner(spec.planner)
+            .with_edges(edges.clone());
         let scaler = match spec.target {
             ScaleTarget::Stage => Autoscaler::spawn_with_broker(
                 service.clone(),
@@ -570,6 +601,8 @@ impl AppHandle {
             group: s.group.clone(),
             processed_messages: s.stats.processed.messages(),
             processed_bytes: s.stats.processed.bytes(),
+            emitted_messages: s.stats.emitted.messages(),
+            emitted_bytes: s.stats.emitted.bytes(),
             batches: s.stats.batches.load(Ordering::Relaxed),
             behind: s.stats.behind.load(Ordering::Relaxed),
             errors: s.stats.errors.load(Ordering::Relaxed),
@@ -629,14 +662,23 @@ impl AppHandle {
             .map(|s| s.report.lock().unwrap().clone().unwrap_or_else(|| self.meter_report(s)))
             .collect();
 
-        // Drain: lag commits advance batch by batch, so poll gently.
-        // A lag-zero reading is trusted only if the partition-set
+        // Drain *topologically*: `self.stages` holds the DAG nodes in
+        // the topological order `dag::lower` returned, and each node is
+        // only waited on after every upstream node already read lag
+        // zero.  Because the engine flushes a node's emissions before
+        // committing its input offsets, upstream lag zero means all
+        // derived records have landed downstream — so by the time we
+        // wait on a node, its input topic's high watermark is final.
+        //
+        // Lag commits advance batch by batch, so poll gently.  A
+        // lag-zero reading is trusted only if the partition-set
         // snapshot captured *before* the read is still current: a
         // leader failover or repartition swapping the set mid-read can
         // produce a zero measured against the retired leaders'
         // watermarks (the promoted leader's log is the live truth).
         // Stale reads fall through to the retry arm and re-measure
-        // against the new snapshot.
+        // against the new snapshot — an in-flight repartition can never
+        // fake a drain.
         let deadline = Instant::now() + self.drain_timeout;
         let mut drained = true;
         for s in &self.stages {

@@ -32,6 +32,7 @@
 //! `pilot-streaming exp app --spec <file.json|file.toml>` to run a
 //! spec from a JSON or TOML file.
 
+pub mod dag;
 pub mod handle;
 pub mod spec;
 
@@ -40,9 +41,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::broker::Record;
-use crate::engine::{BatchProcessor, TaskContext};
+use crate::engine::{BatchProcessor, Emitter, TaskContext};
 use crate::error::Result;
 
+pub use dag::{MergeSpec, RelayProcessor, SplitRoute, SplitSpec};
 pub use handle::{AppHandle, AppReport, SourceReport, StageReport};
 pub use spec::{
     AckMode, AutoscaleSpec, BrokerSpec, ReplicationSpec, ScaleTarget, SourceSpec, StageSpec,
@@ -109,6 +111,24 @@ pub trait StreamProcessor: Send + Sync {
 
     /// Process one partition's slice of one micro-batch window.
     fn process_window(&self, ctx: &TaskContext, window: &[Record]) -> Result<()>;
+
+    /// Like [`process_window`](StreamProcessor::process_window), but
+    /// with an [`Emitter`] for producing derived records to the stage's
+    /// downstream topics ([`StageSpec::with_output_topic`], split
+    /// branches).  Only called on stages that *have* outputs; the
+    /// default ignores the emitter, so sink processors need not change.
+    /// Keys passed to [`Emitter::emit`] are hashed through the broker's
+    /// [`crate::broker::key_hash`] route, preserving per-key order
+    /// across the hop.
+    fn process_window_emit(
+        &self,
+        ctx: &TaskContext,
+        window: &[Record],
+        out: &mut Emitter,
+    ) -> Result<()> {
+        let _ = out;
+        self.process_window(ctx, window)
+    }
 }
 
 impl<F> StreamProcessor for F
@@ -153,6 +173,10 @@ pub(crate) struct AsBatch(pub Arc<dyn StreamProcessor>);
 impl BatchProcessor for AsBatch {
     fn process(&self, ctx: &TaskContext, records: &[Record]) -> Result<()> {
         self.0.process_window(ctx, records)
+    }
+
+    fn process_emit(&self, ctx: &TaskContext, records: &[Record], out: &mut Emitter) -> Result<()> {
+        self.0.process_window_emit(ctx, records, out)
     }
 }
 

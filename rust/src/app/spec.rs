@@ -35,6 +35,7 @@ use crate::util::{Json, RateSchedule};
 
 pub use crate::broker::{AckMode, ReplicationConfig as ReplicationSpec};
 
+use super::dag::{MergeSpec, RelayProcessor, SplitRoute, SplitSpec};
 use super::{CountingProcessor, DataSource, StreamProcessor};
 
 /// One topic on the pilot-managed broker.
@@ -193,6 +194,12 @@ pub struct StageSpec {
     /// Consumer group for offset commits (default `app-{name}`) — what
     /// lag probes and autoscalers watch.
     pub group: Option<String>,
+    /// Downstream topic this stage's [`StreamProcessor`] emissions land
+    /// on (stage chaining; `None` = sink).  Emitted records are re-keyed
+    /// through the broker's key-hash route and flushed before the
+    /// stage's input offsets commit, so draining upstream-first drains
+    /// the whole chain (see [`super::dag`]).
+    pub output_topic: Option<String>,
     pub(crate) processor: Arc<dyn StreamProcessor>,
 }
 
@@ -206,6 +213,7 @@ impl StageSpec {
             nodes: 1,
             executors_per_node: 2,
             group: None,
+            output_topic: None,
             processor,
         }
     }
@@ -232,6 +240,14 @@ impl StageSpec {
 
     pub fn with_group(mut self, group: &str) -> Self {
         self.group = Some(group.to_string());
+        self
+    }
+
+    /// Chain this stage: its processor's emissions are produced to
+    /// `topic` (validated to exist, and to have a consumer, by
+    /// [`StreamingAppBuilder::build`]).
+    pub fn with_output_topic(mut self, topic: &str) -> Self {
+        self.output_topic = Some(topic.to_string());
         self
     }
 
@@ -346,6 +362,8 @@ pub struct StreamingApp {
     pub(crate) broker: BrokerSpec,
     pub(crate) sources: Vec<SourceSpec>,
     pub(crate) stages: Vec<StageSpec>,
+    pub(crate) splits: Vec<SplitSpec>,
+    pub(crate) merges: Vec<MergeSpec>,
     pub(crate) autoscalers: Vec<AutoscaleSpec>,
     pub(crate) drain_timeout: Duration,
 }
@@ -358,6 +376,8 @@ impl StreamingApp {
             racks: None,
             sources: Vec::new(),
             stages: Vec::new(),
+            splits: Vec::new(),
+            merges: Vec::new(),
             autoscalers: Vec::new(),
             drain_timeout: Duration::from_secs(600),
         }
@@ -374,6 +394,8 @@ pub struct StreamingAppBuilder {
     racks: Option<usize>,
     sources: Vec<SourceSpec>,
     stages: Vec<StageSpec>,
+    splits: Vec<SplitSpec>,
+    merges: Vec<MergeSpec>,
     autoscalers: Vec<AutoscaleSpec>,
     drain_timeout: Duration,
 }
@@ -433,6 +455,20 @@ impl StreamingAppBuilder {
         self
     }
 
+    /// A [`SplitSpec`] branch node: one input topic fanned across N
+    /// branch topics by a [`SplitRoute`].
+    pub fn split(mut self, spec: SplitSpec) -> Self {
+        self.splits.push(spec);
+        self
+    }
+
+    /// A [`MergeSpec`] fan-in node: N branch topics relayed back into
+    /// one output topic.
+    pub fn merge(mut self, spec: MergeSpec) -> Self {
+        self.merges.push(spec);
+        self
+    }
+
     pub fn autoscale(mut self, spec: AutoscaleSpec) -> Self {
         self.autoscalers.push(spec);
         self
@@ -461,7 +497,11 @@ impl StreamingAppBuilder {
         if broker.topics.is_empty() {
             return err("broker declares no topics".into());
         }
-        if self.sources.is_empty() && self.stages.is_empty() {
+        if self.sources.is_empty()
+            && self.stages.is_empty()
+            && self.splits.is_empty()
+            && self.merges.is_empty()
+        {
             return err("app has neither sources nor stages".into());
         }
         let mut topic_names = Vec::new();
@@ -549,12 +589,6 @@ impl StreamingAppBuilder {
         }
         let mut scaler_names = Vec::new();
         for a in &self.autoscalers {
-            if !stage_names.contains(&a.stage) {
-                return err(format!(
-                    "autoscaler '{}' watches unknown stage '{}'",
-                    a.name, a.stage
-                ));
-            }
             if scaler_names.contains(&a.name) {
                 return err(format!("duplicate autoscaler '{}'", a.name));
             }
@@ -566,13 +600,30 @@ impl StreamingAppBuilder {
             }
             scaler_names.push(a.name.clone());
         }
-        Ok(StreamingApp {
+        let app = StreamingApp {
             broker,
             sources: self.sources,
             stages: self.stages,
+            splits: self.splits,
+            merges: self.merges,
             autoscalers: self.autoscalers,
             drain_timeout: self.drain_timeout,
-        })
+        };
+        // Lower the dataflow DAG now: unknown output topics, degenerate
+        // splits/merges, duplicate node names, dangling edges and cycles
+        // are all spec errors, not launch failures.  The lowered node
+        // names (stages, splits, `merge:input` legs) are also the
+        // namespace autoscalers reference.
+        let dag_nodes = super::dag::lower(&app)?;
+        for a in &app.autoscalers {
+            if !dag_nodes.iter().any(|n| n.name == a.stage) {
+                return err(format!(
+                    "autoscaler '{}' watches unknown stage '{}'",
+                    a.name, a.stage
+                ));
+            }
+        }
+        Ok(app)
     }
 
     // ------------------------------------------------------------------
@@ -596,8 +647,13 @@ impl StreamingAppBuilder {
     /// `points_per_msg`, `msg_bytes`, `seed`; pacing via `rate`
     /// (msgs/s) or `schedule` (`[[duration_secs, rate], ...]`; the last
     /// segment's rate holds forever).  Processors: `counter` (optional
-    /// `work_ms` per-message cost) or `kmeans`/`gridrec`/`mlem` (need
-    /// AOT artifacts).  The broker block takes an optional
+    /// `work_ms` per-message cost), `relay` (pass-through chain hop:
+    /// re-emits records keyed by the leading `key_bytes` value bytes,
+    /// optional `work_ms`) or `kmeans`/`gridrec`/`mlem` (need
+    /// AOT artifacts).  Stages take an optional `output_topic` (chained
+    /// dataflow), and top-level `splits` / `merges` arrays declare
+    /// branch/fan-in nodes — see [`crate::app::dag`].  The broker block
+    /// takes an optional
     /// `replication` object (`factor` required, `ack_mode`
     /// leader|quorum, `min_insync`, `replica_lag_max`,
     /// `follower_fetch`) and an optional `racks` count (failure
@@ -614,7 +670,10 @@ impl StreamingAppBuilder {
         check_keys(
             doc,
             "spec",
-            &["machine_nodes", "broker", "sources", "stages", "drain_timeout_secs"],
+            &[
+                "machine_nodes", "broker", "sources", "stages", "splits", "merges",
+                "drain_timeout_secs",
+            ],
         )?;
         let mut b = StreamingApp::builder();
         let broker = doc.req("broker")?;
@@ -652,6 +711,12 @@ impl StreamingAppBuilder {
             if let Some(a) = autoscale {
                 b = b.autoscale(a);
             }
+        }
+        for s in doc.get("splits").and_then(Json::as_arr).unwrap_or(&[]) {
+            b = b.split(split_from_json(s)?);
+        }
+        for m in doc.get("merges").and_then(Json::as_arr).unwrap_or(&[]) {
+            b = b.merge(merge_from_json(m)?);
         }
         if let Some(secs) = doc.get("drain_timeout_secs").and_then(Json::as_f64) {
             b = b.drain_timeout(Duration::from_secs_f64(secs.max(0.0)));
@@ -814,8 +879,8 @@ fn stage_from_json(j: &Json) -> Result<(StageSpec, Option<AutoscaleSpec>)> {
         j,
         "stage",
         &[
-            "name", "topic", "processor", "work_ms", "window_ms", "framework", "nodes",
-            "executors_per_node", "group", "autoscale",
+            "name", "topic", "processor", "work_ms", "key_bytes", "output_topic", "window_ms",
+            "framework", "nodes", "executors_per_node", "group", "autoscale",
         ],
     )?;
     let name = req_str(j, "name")?;
@@ -826,6 +891,19 @@ fn stage_from_json(j: &Json) -> Result<(StageSpec, Option<AutoscaleSpec>)> {
             Some(ms) => CountingProcessor::with_cost(Duration::from_secs_f64(ms.max(0.0) / 1e3)),
             None => CountingProcessor::new(),
         },
+        // Pass-through hop for chained stages: re-emits every record
+        // keyed by its leading `key_bytes` value bytes, optionally
+        // burning `work_ms` per message.
+        "relay" => {
+            let key_bytes = j.get("key_bytes").and_then(Json::as_usize).unwrap_or(0);
+            match j.get("work_ms").and_then(Json::as_f64) {
+                Some(ms) => RelayProcessor::with_cost(
+                    key_bytes,
+                    Duration::from_secs_f64(ms.max(0.0) / 1e3),
+                ),
+                None => RelayProcessor::new(key_bytes),
+            }
+        }
         "kmeans" | "gridrec" | "mlem" => {
             let kind = crate::miniapp::ProcessorKind::parse(&processor_name)?;
             let rt = crate::runtime::ModelRuntime::load_default()?;
@@ -833,11 +911,14 @@ fn stage_from_json(j: &Json) -> Result<(StageSpec, Option<AutoscaleSpec>)> {
         }
         other => {
             return Err(Error::Config(format!(
-                "unknown processor '{other}' (expected counter|kmeans|gridrec|mlem)"
+                "unknown processor '{other}' (expected counter|relay|kmeans|gridrec|mlem)"
             )))
         }
     };
     let mut spec = StageSpec::new(&name, &topic, processor);
+    if let Some(t) = j.get("output_topic").and_then(Json::as_str) {
+        spec = spec.with_output_topic(t);
+    }
     if let Some(ms) = j.get("window_ms").and_then(Json::as_f64) {
         spec = spec.with_window(Duration::from_secs_f64(ms.max(0.0) / 1e3));
     }
@@ -937,6 +1018,95 @@ fn autoscale_from_json(stage: &str, j: &Json) -> Result<AutoscaleSpec> {
     }
     if j.get("coschedule_broker").and_then(Json::as_bool) == Some(true) {
         spec = spec.with_broker_coscheduling();
+    }
+    Ok(spec)
+}
+
+/// Parse a topic-name array field (`split.branches`, `merge.inputs`).
+fn req_str_arr(j: &Json, what: &str, key: &str) -> Result<Vec<String>> {
+    let bad = || Error::Config(format!("{what} '{key}' must be an array of topic names"));
+    let arr = j.req(key)?.as_arr().ok_or_else(bad)?;
+    arr.iter()
+        .map(|t| t.as_str().map(str::to_string).ok_or_else(bad))
+        .collect()
+}
+
+/// Parse a `splits` entry: `route` picks the branch rule — `key-hash`
+/// (needs `key_bytes` > 0), `size-threshold` (needs `threshold_bytes`;
+/// records at/above it take branch 1) or `round-robin`.  Predicate
+/// routes are builder-only (closures don't serialize).
+fn split_from_json(j: &Json) -> Result<SplitSpec> {
+    check_keys(
+        j,
+        "split",
+        &[
+            "name", "topic", "branches", "route", "threshold_bytes", "key_bytes", "window_ms",
+            "nodes", "executors_per_node", "group",
+        ],
+    )?;
+    let name = req_str(j, "name")?;
+    let topic = req_str(j, "topic")?;
+    let branches = req_str_arr(j, "split", "branches")?;
+    let route = match j.get("route").and_then(Json::as_str).unwrap_or("key-hash") {
+        "key-hash" => SplitRoute::KeyHash,
+        "size-threshold" => SplitRoute::SizeThreshold(req_usize(j, "threshold_bytes")?),
+        "round-robin" => SplitRoute::RoundRobin,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown split route '{other}' (expected key-hash|size-threshold|round-robin)"
+            )))
+        }
+    };
+    let branch_refs: Vec<&str> = branches.iter().map(String::as_str).collect();
+    let mut spec = SplitSpec::new(&name, &topic, &branch_refs, route);
+    if let Some(n) = j.get("key_bytes").and_then(Json::as_usize) {
+        spec = spec.with_key_bytes(n);
+    }
+    if let Some(ms) = j.get("window_ms").and_then(Json::as_f64) {
+        spec = spec.with_window(Duration::from_secs_f64(ms.max(0.0) / 1e3));
+    }
+    if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+        spec = spec.with_nodes(n);
+    }
+    if let Some(n) = j.get("executors_per_node").and_then(Json::as_usize) {
+        spec = spec.with_executors_per_node(n);
+    }
+    if let Some(g) = j.get("group").and_then(Json::as_str) {
+        spec = spec.with_group(g);
+    }
+    Ok(spec)
+}
+
+/// Parse a `merges` entry: branch `inputs` fanned back into `output`,
+/// re-keyed by the leading `key_bytes` value bytes.
+fn merge_from_json(j: &Json) -> Result<MergeSpec> {
+    check_keys(
+        j,
+        "merge",
+        &[
+            "name", "inputs", "output", "key_bytes", "window_ms", "nodes",
+            "executors_per_node", "group",
+        ],
+    )?;
+    let name = req_str(j, "name")?;
+    let inputs = req_str_arr(j, "merge", "inputs")?;
+    let output = req_str(j, "output")?;
+    let input_refs: Vec<&str> = inputs.iter().map(String::as_str).collect();
+    let mut spec = MergeSpec::new(&name, &input_refs, &output);
+    if let Some(n) = j.get("key_bytes").and_then(Json::as_usize) {
+        spec = spec.with_key_bytes(n);
+    }
+    if let Some(ms) = j.get("window_ms").and_then(Json::as_f64) {
+        spec = spec.with_window(Duration::from_secs_f64(ms.max(0.0) / 1e3));
+    }
+    if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+        spec = spec.with_nodes(n);
+    }
+    if let Some(n) = j.get("executors_per_node").and_then(Json::as_usize) {
+        spec = spec.with_executors_per_node(n);
+    }
+    if let Some(g) = j.get("group").and_then(Json::as_str) {
+        spec = spec.with_group(g);
     }
     Ok(spec)
 }
@@ -1342,6 +1512,103 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("unknown autoscale policy 'pid'"), "{err}");
+    }
+
+    #[test]
+    fn dag_specs_round_trip_through_json_and_toml() {
+        let app = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "nodes": 1, "topics": [
+                     { "name": "raw", "partitions": 2 }, { "name": "hot", "partitions": 2 },
+                     { "name": "cold", "partitions": 2 }, { "name": "merged", "partitions": 2 } ] },
+                 "stages": [ { "name": "archive", "topic": "merged", "processor": "counter" } ],
+                 "splits": [ { "name": "route", "topic": "raw", "branches": ["hot", "cold"],
+                               "route": "key-hash", "key_bytes": 1 } ],
+                 "merges": [ { "name": "fan-in", "inputs": ["hot", "cold"], "output": "merged",
+                               "key_bytes": 1 } ] }"#,
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+        assert_eq!(app.splits.len(), 1);
+        assert_eq!(app.splits[0].branches, vec!["hot", "cold"]);
+        assert_eq!(app.splits[0].key_bytes, 1);
+        assert_eq!(app.merges[0].output, "merged");
+
+        // output_topic chains a relay stage; TOML lowers identically.
+        let toml = r#"
+            [broker]
+            nodes = 1
+
+            [[broker.topics]]
+            name = "raw"
+            partitions = 1
+
+            [[broker.topics]]
+            name = "out"
+            partitions = 1
+
+            [[stages]]
+            name = "reconstruct"
+            topic = "raw"
+            processor = "relay"
+            key_bytes = 1
+            output_topic = "out"
+
+            [[stages]]
+            name = "archive"
+            topic = "out"
+            processor = "counter"
+        "#;
+        let app = StreamingAppBuilder::from_toml_str(toml).unwrap().build().unwrap();
+        assert_eq!(app.stages[0].output_topic.as_deref(), Some("out"));
+        assert_eq!(app.stages[0].processor.name(), "relay");
+
+        // Cycle/dangling validation fires from the file path too.
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "a", "partitions": 1 },
+                                         { "name": "b", "partitions": 1 } ] },
+                 "stages": [ { "name": "s", "topic": "a", "processor": "relay",
+                               "output_topic": "b" } ] }"#,
+        )
+        .unwrap()
+        .build()
+        .unwrap_err();
+        assert!(err.to_string().contains("dangling"), "{err}");
+
+        // Unknown routes and typo'd keys stay spec errors.
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [ { "name": "a", "partitions": 1 },
+                                         { "name": "b", "partitions": 1 },
+                                         { "name": "c", "partitions": 1 } ] },
+                 "splits": [ { "name": "s", "topic": "a", "branches": ["b", "c"],
+                               "route": "random" } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown split route 'random'"), "{err}");
+        let err = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "topics": [] },
+                 "merges": [ { "name": "m", "inputs": ["a", "b"], "output": "c",
+                               "keybytes": 1 } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown merge key: keybytes"), "{err}");
+
+        // Autoscalers may watch split nodes and merge legs by name.
+        let app = StreamingAppBuilder::from_json_str(
+            r#"{ "broker": { "nodes": 1, "topics": [
+                     { "name": "raw", "partitions": 2 }, { "name": "hot", "partitions": 2 },
+                     { "name": "cold", "partitions": 2 }, { "name": "merged", "partitions": 2 } ] },
+                 "stages": [ { "name": "archive", "topic": "merged", "processor": "counter" } ],
+                 "splits": [ { "name": "route", "topic": "raw", "branches": ["hot", "cold"],
+                               "route": "round-robin" } ],
+                 "merges": [ { "name": "fan-in", "inputs": ["hot", "cold"],
+                               "output": "merged" } ] }"#,
+        )
+        .unwrap()
+        .autoscale(AutoscaleSpec::for_stage("fan-in:hot", ThresholdPolicy::new(10, 1)))
+        .build()
+        .unwrap();
+        assert_eq!(app.autoscalers[0].stage, "fan-in:hot");
     }
 
     #[test]

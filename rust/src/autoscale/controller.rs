@@ -54,6 +54,11 @@ pub struct AutoscalerConfig {
     /// flapping framework trips the breaker Open and the loop keeps
     /// sampling instead of hammering doomed calls every tick.
     pub breaker: CircuitBreakerConfig,
+    /// Dataflow-DAG `(topic, group)` consumer edges whose lags ride
+    /// along in every snapshot's
+    /// [`super::SignalSnapshot::edge_lags`] — observability across the
+    /// whole DAG while the loop actuates on its own stage only.
+    pub edges: Vec<(String, String)>,
 }
 
 impl AutoscalerConfig {
@@ -67,6 +72,7 @@ impl AutoscalerConfig {
             window: Duration::from_secs(1),
             planner: PlannerConfig::default(),
             breaker: CircuitBreakerConfig::default(),
+            edges: Vec::new(),
         }
     }
 
@@ -97,6 +103,11 @@ impl AutoscalerConfig {
 
     pub fn with_breaker(mut self, breaker: CircuitBreakerConfig) -> Self {
         self.breaker = breaker;
+        self
+    }
+
+    pub fn with_edges(mut self, edges: Vec<(String, String)>) -> Self {
+        self.edges = edges;
         self
     }
 }
@@ -154,7 +165,8 @@ impl Autoscaler {
             &config.group,
             stats,
             config.window.as_secs_f64(),
-        );
+        )
+        .with_edges(config.edges.clone());
         // The planner's cost model keys off the real framework kinds;
         // its step ceiling mirrors the controller's.
         let mut planner_config = config.planner.clone().with_max_step(config.max_step);

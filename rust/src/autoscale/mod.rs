@@ -62,4 +62,4 @@ pub use policy::{
     BinPackingPolicy, LagSlopePolicy, PartitionElastic, PolicyDecision, ScalingIntent,
     ScalingPolicy, ThresholdPolicy,
 };
-pub use signals::{SignalProbe, SignalSnapshot};
+pub use signals::{EdgeLag, SignalProbe, SignalSnapshot};

@@ -500,6 +500,7 @@ mod tests {
             broker_util_skew: 0.0,
             rack_skew: 0.0,
             shard_queue_depths: Vec::new(),
+            edge_lags: Vec::new(),
         }
     }
 

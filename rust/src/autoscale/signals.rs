@@ -100,6 +100,20 @@ pub struct SignalSnapshot {
     /// on one core) — repartitioning spreads the keys, where adding
     /// nodes would not help.
     pub shard_queue_depths: Vec<u64>,
+    /// Consumer lag of every dataflow-DAG edge the probe watches
+    /// ([`SignalProbe::with_edges`]), sampled alongside the primary
+    /// (group, topic).  Empty for flat apps.  Uneven branch load shows
+    /// up here as one hot edge among quiet ones — the per-edge signal
+    /// each branch stage's autoscale loop scales against.
+    pub edge_lags: Vec<EdgeLag>,
+}
+
+/// One DAG consumer edge's lag sample: the `group` consuming `topic`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EdgeLag {
+    pub topic: String,
+    pub group: String,
+    pub lag: u64,
 }
 
 impl SignalSnapshot {
@@ -128,6 +142,9 @@ pub struct SignalProbe {
     /// Per-broker-node (nic_in, nic_out, disk) byte counters from the
     /// previous sample — finite-differenced into utilization gauges.
     prev_broker_io: HashMap<NodeId, (u64, u64, u64)>,
+    /// Dataflow-DAG `(topic, group)` consumer edges sampled into
+    /// [`SignalSnapshot::edge_lags`] each tick.
+    edges: Vec<(String, String)>,
 }
 
 impl SignalProbe {
@@ -151,6 +168,7 @@ impl SignalProbe {
             prev_lag: 0,
             ewma_rate_per_node: 0.0,
             prev_broker_io: HashMap::new(),
+            edges: Vec::new(),
         };
         // Seed the watermark and lag baselines so the first sample sees
         // pre-existing topic history as standing lag, not as a produce
@@ -166,6 +184,14 @@ impl SignalProbe {
                 .insert(io.node, (io.nic_in_bytes, io.nic_out_bytes, io.disk_bytes));
         }
         probe
+    }
+
+    /// Watch extra `(topic, group)` consumer edges — the dataflow DAG's
+    /// hops — whose lags ride along in every snapshot's
+    /// [`SignalSnapshot::edge_lags`].
+    pub fn with_edges(mut self, edges: Vec<(String, String)>) -> Self {
+        self.edges = edges;
+        self
     }
 
     /// Finite-difference the broker tier's token-bucket counters into
@@ -279,6 +305,19 @@ impl SignalProbe {
             ),
             None => (0, 0.0),
         };
+        // Per-edge lags: an edge whose topic vanished mid-teardown
+        // samples as absent rather than failing the whole snapshot.
+        let edge_lags: Vec<EdgeLag> = self
+            .edges
+            .iter()
+            .filter_map(|(topic, group)| {
+                self.cluster.group_lag(group, topic).ok().map(|lag| EdgeLag {
+                    topic: topic.clone(),
+                    group: group.clone(),
+                    lag,
+                })
+            })
+            .collect();
         Ok(SignalSnapshot {
             t_secs,
             lag,
@@ -302,6 +341,7 @@ impl SignalProbe {
             broker_util_skew,
             rack_skew,
             shard_queue_depths,
+            edge_lags,
         })
     }
 }
@@ -469,6 +509,37 @@ mod tests {
         c.reassign_replicas().unwrap();
         let s = probe.sample(2.0, 1, 1, 2).unwrap();
         assert_eq!(s.rack_skew, 0.0, "reassignment clears the placement debt");
+    }
+
+    #[test]
+    fn probe_samples_per_edge_lag_alongside_the_primary_signal() {
+        let cluster = BrokerCluster::new(Machine::unthrottled(2), vec![0]);
+        cluster.create_topic("in", 1).unwrap();
+        cluster.create_topic("hot", 1).unwrap();
+        cluster.create_topic("cold", 1).unwrap();
+        let mut probe = SignalProbe::new(cluster.clone(), "in", "g-in", None, 1.0).with_edges(
+            vec![
+                ("in".to_string(), "g-in".to_string()),
+                ("hot".to_string(), "g-hot".to_string()),
+                ("cold".to_string(), "g-cold".to_string()),
+            ],
+        );
+        // Load one branch only: its edge reads hot, the sibling stays 0.
+        for i in 0..6u8 {
+            cluster.produce("hot", 0, 1, &[vec![i]]).unwrap();
+        }
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        assert_eq!(s.edge_lags.len(), 3);
+        let lag_of = |topic: &str| s.edge_lags.iter().find(|e| e.topic == topic).unwrap().lag;
+        assert_eq!(lag_of("in"), 0);
+        assert_eq!(lag_of("hot"), 6);
+        assert_eq!(lag_of("cold"), 0);
+
+        // A vanished edge topic drops out; the snapshot still samples.
+        let mut probe = SignalProbe::new(cluster.clone(), "in", "g-in", None, 1.0)
+            .with_edges(vec![("gone".to_string(), "g".to_string())]);
+        let s = probe.sample(1.0, 1, 1, 2).unwrap();
+        assert!(s.edge_lags.is_empty());
     }
 
     #[test]

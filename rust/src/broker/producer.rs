@@ -185,9 +185,19 @@ impl Producer {
     fn partition_for(&mut self, route: Option<u64>) -> usize {
         match self.config.partitioner {
             Partitioner::Fixed(p) => p % self.n_partitions,
-            Partitioner::Keyed => {
-                jump_hash(route.unwrap_or_else(|| key_hash(b"")), self.n_partitions)
-            }
+            // A keyed producer with an *unkeyed* record round-robins:
+            // the old fallback (hash of the empty key) silently pinned
+            // every keyless record to one partition, which turned
+            // chained stages with occasional unkeyed emissions into a
+            // single-partition hotspot.
+            Partitioner::Keyed => match route {
+                Some(r) => jump_hash(r, self.n_partitions),
+                None => {
+                    let p = self.rr_next;
+                    self.rr_next = (self.rr_next + 1) % self.n_partitions;
+                    p
+                }
+            },
             Partitioner::RoundRobin => {
                 let p = self.rr_next;
                 self.rr_next = (self.rr_next + 1) % self.n_partitions;
@@ -205,7 +215,9 @@ impl Producer {
         self.send_routed(key.map(key_hash), value)
     }
 
-    fn send_routed(&mut self, route: Option<u64>, value: Vec<u8>) -> Result<bool> {
+    /// Queue one record under a pre-computed route (`pub(crate)` for
+    /// the micro-batch emitter, which hashes keys once at emit time).
+    pub(crate) fn send_routed(&mut self, route: Option<u64>, value: Vec<u8>) -> Result<bool> {
         self.refresh_partitions()?;
         let p = self.partition_for(route);
         let batch = &mut self.batches[p];
@@ -348,6 +360,30 @@ mod tests {
         let counts: Vec<u64> = (0..4).map(|i| c.end_offset("t", i).unwrap()).collect();
         assert_eq!(counts.iter().sum::<u64>(), 5);
         assert_eq!(counts.iter().filter(|c| **c > 0).count(), 1, "{counts:?}");
+    }
+
+    #[test]
+    fn keyed_producer_round_robins_unkeyed_records() {
+        // Keyless records through a keyed producer used to hash the
+        // empty key — a constant route pinning them all to one
+        // partition.  They must spread round-robin instead.
+        let c = setup(3);
+        let mut p = Producer::new(
+            c.clone(),
+            "t",
+            1,
+            ProducerConfig {
+                batch_bytes: 1,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..9u8 {
+            p.send(None, vec![i]).unwrap();
+        }
+        let counts: Vec<u64> = (0..3).map(|i| c.end_offset("t", i).unwrap()).collect();
+        assert_eq!(counts, vec![3, 3, 3], "unkeyed sends must round-robin");
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::broker::{BrokerCluster, Record};
+use crate::broker::{key_hash, BrokerCluster, Partitioner, Producer, ProducerConfig, Record};
 use crate::cluster::{Machine, NodeId};
 use crate::error::{Error, Result};
 use crate::metrics::{Histogram, RateMeter};
@@ -38,10 +38,61 @@ pub struct TaskContext {
     pub batch: u64,
 }
 
+/// Output collector handed to [`BatchProcessor::process_emit`]: records
+/// emitted here are produced to the job's downstream topics (stage
+/// chaining — [`StreamingJobConfig::output_topics`]).
+///
+/// Keys are re-keyed through the broker's own route function
+/// ([`crate::broker::key_hash`]) at emit time, and the task's keyed
+/// producers jump-hash that route onto the *live* partition set — so a
+/// repartition racing the batch re-routes pending emissions instead of
+/// landing them on a sealed partition, and per-key order holds across
+/// every hop of a chained pipeline.
+#[derive(Debug, Default)]
+pub struct Emitter {
+    /// `(branch, route, value)` — branch indexes the job's
+    /// `output_topics`; route is the key hash (None ⇒ round-robin).
+    out: Vec<(usize, Option<u64>, Vec<u8>)>,
+}
+
+impl Emitter {
+    fn new() -> Self {
+        Emitter { out: Vec::new() }
+    }
+
+    /// Emit to the first (usually only) output topic.
+    pub fn emit(&mut self, key: Option<&[u8]>, value: Vec<u8>) {
+        self.emit_to(0, key, value);
+    }
+
+    /// Emit to output topic `branch` (split nodes route across
+    /// branches; everything else uses [`Emitter::emit`]).
+    pub fn emit_to(&mut self, branch: usize, key: Option<&[u8]>, value: Vec<u8>) {
+        self.out.push((branch, key.map(key_hash), value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+}
+
 /// User-defined batch processing function (the paper's Compute-Unit in
 /// its streaming form — Listing 5's `compute` over a window of records).
 pub trait BatchProcessor: Send + Sync {
     fn process(&self, ctx: &TaskContext, records: &[Record]) -> Result<()>;
+
+    /// Like [`BatchProcessor::process`], but with an [`Emitter`] for
+    /// producing results downstream.  Only called when the job has
+    /// `output_topics`; the default ignores the emitter so sink-only
+    /// processors need not change.
+    fn process_emit(&self, ctx: &TaskContext, records: &[Record], out: &mut Emitter) -> Result<()> {
+        let _ = out;
+        self.process(ctx, records)
+    }
 }
 
 impl<F> BatchProcessor for F
@@ -63,6 +114,12 @@ pub struct StreamingJobConfig {
     pub window: Duration,
     /// Per-fetch byte cap while draining a partition range.
     pub max_fetch_bytes: usize,
+    /// Downstream topics this job's processor emits to (stage
+    /// chaining).  Empty for sink stages.  Emissions are flushed before
+    /// a task's offsets commit, so a drained input (lag 0 on a current
+    /// epoch) guarantees every derived record already landed downstream
+    /// — the invariant topological drain rests on.
+    pub output_topics: Vec<String>,
 }
 
 impl StreamingJobConfig {
@@ -72,7 +129,13 @@ impl StreamingJobConfig {
             group: format!("{topic}-job"),
             window,
             max_fetch_bytes: 8 << 20,
+            output_topics: Vec::new(),
         }
+    }
+
+    pub fn with_output_topics(mut self, topics: Vec<String>) -> Self {
+        self.output_topics = topics;
+        self
     }
 }
 
@@ -81,6 +144,8 @@ impl StreamingJobConfig {
 pub struct JobStats {
     /// Messages/bytes processed.
     pub processed: RateMeter,
+    /// Messages/bytes emitted downstream (zero for sink stages).
+    pub emitted: RateMeter,
     /// Wall-clock duration of each micro-batch (task barrier time).
     pub batch_secs: Histogram,
     /// Broker-timestamp to processing-completion latency per batch.
@@ -100,6 +165,7 @@ impl JobStats {
     fn new() -> Arc<Self> {
         Arc::new(JobStats {
             processed: RateMeter::new(),
+            emitted: RateMeter::new(),
             batch_secs: Histogram::new(),
             record_latency: Histogram::new(),
             batches: AtomicU64::new(0),
@@ -214,11 +280,14 @@ impl MicroBatchEngine {
         config: StreamingJobConfig,
         processor: Arc<dyn BatchProcessor>,
     ) -> Result<StreamingJobHandle> {
-        // Validate the topic exists up front; the driver re-derives the
+        // Validate the topics exist up front; the driver re-derives the
         // partition count (and therefore its task parallelism) every
         // window, so a runtime repartition moves the per-batch task
         // fan-out with it.
         cluster.partition_count(&config.topic)?;
+        for out in &config.output_topics {
+            cluster.partition_count(out)?;
+        }
         let stats = JobStats::new();
         let stop = Arc::new(AtomicBool::new(false));
         let pool = self.pool.clone();
@@ -360,6 +429,24 @@ fn process_range(
     // (partition ids are stable across epochs, so a mid-range
     // repartition cannot invalidate reads).
     let topic = cluster.topic(&config.topic)?;
+    // One keyed producer per output topic (stage chaining).  Keyed:
+    // emitted routes are the key hashes computed at emit time, so equal
+    // keys land on one downstream partition and per-key order survives
+    // the hop; unkeyed emissions round-robin.  A repartition racing the
+    // batch is absorbed inside the producer (pending records re-route
+    // on the epoch bump).
+    let mut outputs: Vec<Producer> = Vec::with_capacity(config.output_topics.len());
+    for out in &config.output_topics {
+        outputs.push(Producer::new(
+            cluster.clone(),
+            out,
+            node,
+            ProducerConfig {
+                partitioner: Partitioner::Keyed,
+                ..ProducerConfig::default()
+            },
+        )?);
+    }
     while pos < end {
         let records = cluster.fetch_from(
             &topic,
@@ -379,7 +466,26 @@ fn process_range(
         if slice.is_empty() {
             break;
         }
-        processor.process(&ctx, slice)?;
+        if outputs.is_empty() {
+            processor.process(&ctx, slice)?;
+        } else {
+            let mut emitter = Emitter::new();
+            processor.process_emit(&ctx, slice, &mut emitter)?;
+            let mut emitted = 0u64;
+            let mut emitted_bytes = 0u64;
+            for (branch, route, value) in emitter.out.drain(..) {
+                let producer = outputs.get_mut(branch).ok_or_else(|| {
+                    Error::Engine(format!(
+                        "emit_to branch {branch} out of range ({} output topics)",
+                        config.output_topics.len()
+                    ))
+                })?;
+                emitted += 1;
+                emitted_bytes += value.len() as u64;
+                producer.send_routed(route, value)?;
+            }
+            stats.emitted.record_many(emitted, emitted_bytes);
+        }
         let bytes: usize = slice.iter().map(|r| r.value.len()).sum();
         stats
             .processed
@@ -391,6 +497,15 @@ fn process_range(
                 .record_ns(now_ns.saturating_sub(r.timestamp_ns));
         }
         pos = slice.last().unwrap().offset + 1;
+    }
+    // Flush every output before reporting the range consumed: the
+    // driver commits offsets only after the task returns, so a
+    // committed (drained) input range implies its derived records are
+    // already appended downstream.  On the error path above, buffered
+    // emissions flush on Drop and the uncommitted range reprocesses —
+    // at-least-once across the edge, matching the input-side contract.
+    for producer in &mut outputs {
+        producer.flush()?;
     }
     Ok(pos)
 }
@@ -619,6 +734,173 @@ mod tests {
         assert_eq!(engine.executor_count(), 2);
         engine.add_executors(vec![2, 3]);
         assert_eq!(engine.executor_count(), 6);
+        engine.stop();
+    }
+
+    /// Re-emits each record keyed by its first value byte.
+    struct RekeyEmit;
+    impl BatchProcessor for RekeyEmit {
+        fn process(&self, _ctx: &TaskContext, _records: &[Record]) -> Result<()> {
+            Ok(())
+        }
+        fn process_emit(
+            &self,
+            _ctx: &TaskContext,
+            records: &[Record],
+            out: &mut Emitter,
+        ) -> Result<()> {
+            for r in records {
+                out.emit(Some(&r.value[..1]), r.value.to_vec());
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn emitting_job_chains_records_to_the_downstream_topic() {
+        let (m, c) = setup(2);
+        c.create_topic("d", 4).unwrap();
+        let engine = MicroBatchEngine::new(m, vec![1], 2);
+        let job = engine
+            .start_job(
+                c.clone(),
+                StreamingJobConfig::new("t", Duration::from_millis(30))
+                    .with_output_topics(vec!["d".into()]),
+                Arc::new(RekeyEmit),
+            )
+            .unwrap();
+        for i in 0..20u8 {
+            c.produce("t", (i % 2) as usize, 3, &[vec![i % 4, i]]).unwrap();
+        }
+        let downstream =
+            || (0..4).map(|p| c.end_offset("d", p).unwrap_or(0)).sum::<u64>();
+        assert!(
+            wait_for(|| downstream() == 20, 5.0),
+            "downstream has {} of 20",
+            downstream()
+        );
+        // Keyed routing: every record of a key shares one partition.
+        let topic = c.topic("d").unwrap();
+        let mut key_partitions: HashMap<u8, Vec<usize>> = HashMap::new();
+        for p in 0..4 {
+            let recs = c
+                .fetch_from(&topic, p, 0, 8 << 20, 3, Duration::from_millis(1))
+                .unwrap_or_default();
+            for r in recs {
+                let owners = key_partitions.entry(r.value[0]).or_default();
+                if !owners.contains(&p) {
+                    owners.push(p);
+                }
+            }
+        }
+        for (key, owners) in &key_partitions {
+            assert_eq!(owners.len(), 1, "key {key} split across {owners:?}");
+        }
+        let stats = job.stop();
+        assert_eq!(stats.processed.messages(), 20);
+        assert_eq!(stats.emitted.messages(), 20);
+        engine.stop();
+    }
+
+    /// Emits every record unkeyed (round-robin downstream).
+    struct UnkeyedEmit;
+    impl BatchProcessor for UnkeyedEmit {
+        fn process(&self, _ctx: &TaskContext, _records: &[Record]) -> Result<()> {
+            Ok(())
+        }
+        fn process_emit(
+            &self,
+            _ctx: &TaskContext,
+            records: &[Record],
+            out: &mut Emitter,
+        ) -> Result<()> {
+            for r in records {
+                out.emit(None, r.value.to_vec());
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn unkeyed_emissions_round_robin_across_downstream_partitions() {
+        let (m, c) = setup(1);
+        c.create_topic("d", 3).unwrap();
+        let engine = MicroBatchEngine::new(m, vec![1], 1);
+        // All records land before the first batch, so one task (one
+        // producer) emits all nine and the spread is exact.
+        let batch: Vec<Vec<u8>> = (0..9u8).map(|i| vec![i]).collect();
+        c.produce("t", 0, 3, &batch).unwrap();
+        let job = engine
+            .start_job(
+                c.clone(),
+                StreamingJobConfig::new("t", Duration::from_millis(30))
+                    .with_output_topics(vec!["d".into()]),
+                Arc::new(UnkeyedEmit),
+            )
+            .unwrap();
+        let per_part = || -> Vec<u64> { (0..3).map(|p| c.end_offset("d", p).unwrap_or(0)).collect() };
+        assert!(
+            wait_for(|| per_part().iter().sum::<u64>() == 9, 5.0),
+            "downstream has {:?}",
+            per_part()
+        );
+        assert_eq!(per_part(), vec![3, 3, 3], "unkeyed emissions must round-robin");
+        job.stop();
+        engine.stop();
+    }
+
+    /// Routes to a branch index past the output list.
+    struct BadBranch;
+    impl BatchProcessor for BadBranch {
+        fn process(&self, _ctx: &TaskContext, _records: &[Record]) -> Result<()> {
+            Ok(())
+        }
+        fn process_emit(
+            &self,
+            _ctx: &TaskContext,
+            _records: &[Record],
+            out: &mut Emitter,
+        ) -> Result<()> {
+            out.emit_to(5, None, vec![1]);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn out_of_range_branch_is_a_counted_task_error() {
+        let (m, c) = setup(1);
+        c.create_topic("d", 1).unwrap();
+        let engine = MicroBatchEngine::new(m, vec![1], 1);
+        let job = engine
+            .start_job(
+                c.clone(),
+                StreamingJobConfig::new("t", Duration::from_millis(30))
+                    .with_output_topics(vec!["d".into()]),
+                Arc::new(BadBranch),
+            )
+            .unwrap();
+        c.produce("t", 0, 3, &[vec![1]]).unwrap();
+        assert!(wait_for(
+            || job.stats().errors.load(Ordering::Relaxed) >= 1,
+            5.0
+        ));
+        job.stop();
+        engine.stop();
+    }
+
+    #[test]
+    fn start_job_validates_output_topics_up_front() {
+        let (m, c) = setup(1);
+        let engine = MicroBatchEngine::new(m, vec![1], 1);
+        let err = engine
+            .start_job(
+                c.clone(),
+                StreamingJobConfig::new("t", Duration::from_millis(30))
+                    .with_output_topics(vec!["missing".into()]),
+                Arc::new(UnkeyedEmit),
+            )
+            .err();
+        assert!(err.is_some(), "missing output topic must fail start_job");
         engine.stop();
     }
 }

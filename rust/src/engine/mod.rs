@@ -15,7 +15,7 @@ pub mod microbatch;
 pub mod taskpar;
 
 pub use microbatch::{
-    BatchProcessor, JobStats, MicroBatchEngine, StreamingJobConfig, StreamingJobHandle,
-    TaskContext,
+    BatchProcessor, Emitter, JobStats, MicroBatchEngine, StreamingJobConfig,
+    StreamingJobHandle, TaskContext,
 };
 pub use taskpar::{TaskEngine, TaskFuture};

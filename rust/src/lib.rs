@@ -91,13 +91,13 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::app::{
         AppHandle, AppReport, AutoscaleSpec, BatchAdapter, CountingProcessor, DataSource,
-        ReplicationSpec, SourceSpec, StageSpec, StreamProcessor, StreamingApp,
-        StreamingAppBuilder,
+        MergeSpec, RelayProcessor, ReplicationSpec, SourceSpec, SplitRoute, SplitSpec,
+        StageSpec, StreamProcessor, StreamingApp, StreamingAppBuilder,
     };
     pub use crate::autoscale::{
-        Autoscaler, AutoscalerConfig, BinPackingPolicy, LagSlopePolicy, PartitionElastic,
-        Planner, PlannerConfig, PolicyDecision, ScalingIntent, ScalingPlan, ScalingPolicy,
-        SignalSnapshot, ThresholdPolicy,
+        Autoscaler, AutoscalerConfig, BinPackingPolicy, EdgeLag, LagSlopePolicy,
+        PartitionElastic, Planner, PlannerConfig, PolicyDecision, ScalingIntent, ScalingPlan,
+        ScalingPolicy, SignalSnapshot, ThresholdPolicy,
     };
     pub use crate::broker::{
         AckMode, BrokerCluster, Consumer, ConsumerConfig, FailoverReport, Producer,
@@ -107,7 +107,7 @@ pub mod prelude {
     pub use crate::config::{CostPreset, ExperimentConfig, MachineConfig};
     pub use crate::cu::{submit_unit, ComputeUnit, ComputeUnitDescription, ComputeUnitState};
     pub use crate::engine::{
-        BatchProcessor, MicroBatchEngine, StreamingJobConfig, TaskContext, TaskEngine,
+        BatchProcessor, Emitter, MicroBatchEngine, StreamingJobConfig, TaskContext, TaskEngine,
     };
     pub use crate::error::{Error, Result};
     pub use crate::metrics::{ScalingAction, ScalingEvent, ScalingTimeline};

@@ -33,7 +33,7 @@ USAGE:
   pilot-streaming start --framework <kafka|spark|dask|flink> --nodes <n>
                         [--machine-nodes <n>] [--extend <n>]
   pilot-streaming demo  [--processor <kmeans|gridrec|mlem>] [--messages <n>]
-  pilot-streaming exp   <fig6|fig7|fig8|fig9|table1|headline|elastic|all>
+  pilot-streaming exp   <fig6|fig7|fig8|fig9|table1|headline|elastic|dag|all>
                         [--preset <calibrated|paper-era|rackfail>] [--out <dir>]
                         [--config <file.json>]
   pilot-streaming exp   app --spec <app.json|app.toml>
@@ -320,8 +320,8 @@ fn cmd_app(flags: &HashMap<String, String>) -> Result<()> {
     let report = handle.drain_and_stop()?;
     for s in &report.stages {
         println!(
-            "stage  {:<12} <- {:<12} {:>6} msgs  {:>5} batches  {:>3} behind  lag {}",
-            s.name, s.topic, s.processed_messages, s.batches, s.behind, s.lag
+            "stage  {:<12} <- {:<12} {:>6} msgs  {:>6} emitted  {:>5} batches  {:>3} behind  lag {}",
+            s.name, s.topic, s.processed_messages, s.emitted_messages, s.batches, s.behind, s.lag
         );
     }
     if !report.drained {
@@ -355,7 +355,11 @@ fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
                 rackfail = true;
                 CostPreset::Calibrated
             }
-            other => return Err(Error::Config(format!("unknown preset '{other}'"))),
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown preset '{other}' (expected calibrated|paper-era|rackfail)"
+                )))
+            }
         };
     }
     let out_dir = flags.get("out").cloned();
@@ -376,6 +380,7 @@ fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
             "headline" => exp::headline(&config, &costs),
             "elastic" if rackfail => exp::elasticity_rackfail(&config, &costs),
             "elastic" => exp::elasticity(&config, &costs),
+            "dag" => exp::dag(&config)?,
             "table1" => {
                 let runtime = ModelRuntime::load_default()?;
                 exp::table1(&runtime)?
@@ -393,7 +398,7 @@ fn cmd_exp(which: &str, flags: &HashMap<String, String>) -> Result<()> {
 
     match which {
         "all" => {
-            for id in ["fig6", "fig7", "fig8", "fig9", "table1", "headline", "elastic"] {
+            for id in ["fig6", "fig7", "fig8", "fig9", "table1", "headline", "elastic", "dag"] {
                 run_one(id)?;
             }
             Ok(())
@@ -622,6 +627,17 @@ mod tests {
     }
 
     #[test]
+    fn exp_unknown_preset_error_lists_the_valid_presets() {
+        // The rejection names every accepted value, not just the bad one.
+        let err = run(&args(&["exp", "fig6", "--preset", "wat"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown preset 'wat'"), "{msg}");
+        for p in ["calibrated", "paper-era", "rackfail"] {
+            assert!(msg.contains(p), "should list preset {p}: {msg}");
+        }
+    }
+
+    #[test]
     fn exp_app_rejects_unknown_flags_and_requires_spec() {
         // Strict flag rejection, same as every other subcommand.
         let err = run(&args(&["exp", "app", "--sepc", "x.json"])).unwrap_err();
@@ -714,6 +730,90 @@ cooldown_secs = 60.0
         std::fs::write(&spec, "[broker]\nreplicas = 2\ntopics = []\n").unwrap();
         let err = run(&args(&["exp", "app", "--spec", spec.to_str().unwrap()])).unwrap_err();
         assert!(err.to_string().contains("unknown broker key: replicas"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn exp_app_runs_a_dag_toml_spec_end_to_end() {
+        // The committed examples/app_dag.toml shape: a chained relay
+        // stage feeding a split/merge branch, drained topologically.
+        let dir = std::env::temp_dir().join(format!("exp-app-dag-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = dir.join("dag.toml");
+        std::fs::write(
+            &spec,
+            r#"
+machine_nodes = 12
+
+[broker]
+nodes = 1
+
+[[broker.topics]]
+name = "raw"
+partitions = 2
+
+[[broker.topics]]
+name = "frames"
+partitions = 2
+
+[[broker.topics]]
+name = "hot"
+partitions = 2
+
+[[broker.topics]]
+name = "cold"
+partitions = 2
+
+[[broker.topics]]
+name = "merged"
+partitions = 2
+
+[[sources]]
+name = "gen"
+topic = "raw"
+kind = "kmeans-static"
+points_per_msg = 50
+msg_bytes = 0
+producers = 2
+total_messages = 12
+
+[[stages]]
+name = "reconstruct"
+topic = "raw"
+processor = "relay"
+key_bytes = 1
+output_topic = "frames"
+window_ms = 30
+
+[[splits]]
+name = "route"
+topic = "frames"
+branches = ["hot", "cold"]
+route = "key-hash"
+key_bytes = 1
+window_ms = 30
+
+[[merges]]
+name = "fan-in"
+inputs = ["hot", "cold"]
+output = "merged"
+key_bytes = 1
+window_ms = 30
+
+[[stages]]
+name = "archive"
+topic = "merged"
+processor = "counter"
+window_ms = 30
+"#,
+        )
+        .unwrap();
+        run(&args(&["exp", "app", "--spec", spec.to_str().unwrap()])).unwrap();
+        // A dangling produced edge is rejected before launch.
+        let text = std::fs::read_to_string(&spec).unwrap();
+        std::fs::write(&spec, text.replace("topic = \"merged\"", "topic = \"frames\"")).unwrap();
+        let err = run(&args(&["exp", "app", "--spec", spec.to_str().unwrap()])).unwrap_err();
+        assert!(err.to_string().contains("merged"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

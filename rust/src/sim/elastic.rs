@@ -568,6 +568,7 @@ impl ElasticSim {
                 broker_util_skew: 0.0,
                 rack_skew,
                 shard_queue_depths: Vec::new(),
+                edge_lags: Vec::new(),
             };
             prev_lag = lag;
 

@@ -1,0 +1,237 @@
+//! Dataflow-DAG integration on the real plane: the committed
+//! `examples/app_dag.toml` (a 3-stage chain with one split/merge
+//! branch) launches from TOML, runs end-to-end with zero record loss,
+//! and drains topologically; and an induced hot branch triggers a
+//! per-edge scale-up of *only* the overloaded stage, asserted on the
+//! per-stage `ScalingTimeline`s and on the per-edge lag signals.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pilot_streaming::app::{
+    AutoscaleSpec, CountingProcessor, SourceSpec, SplitRoute, SplitSpec, StageSpec, StreamingApp,
+    StreamingAppBuilder,
+};
+use pilot_streaming::autoscale::{SignalProbe, ThresholdPolicy};
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::metrics::ScalingAction;
+use pilot_streaming::miniapp::{MassConfig, SourceKind};
+use pilot_streaming::pilot::{KafkaDescription, PilotComputeService};
+
+fn wait_until(mut cond: impl FnMut() -> bool, secs: f64) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < secs {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    false
+}
+
+/// The committed example DAG spec launches from TOML and drains
+/// topologically with zero record loss at every hop.
+#[test]
+fn example_dag_toml_runs_end_to_end_with_zero_loss() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/app_dag.toml");
+    let text = std::fs::read_to_string(path).expect("committed example spec");
+    let doc = pilot_streaming::util::toml::parse(&text).unwrap();
+    let machine_nodes = doc
+        .get("machine_nodes")
+        .and_then(pilot_streaming::util::Json::as_usize)
+        .unwrap();
+    let app = StreamingAppBuilder::from_json(&doc).unwrap().build().unwrap();
+
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(machine_nodes)));
+    let handle = app.launch(&service).unwrap();
+    let produced: u64 = handle
+        .await_sources()
+        .unwrap()
+        .iter()
+        .map(|r| r.messages)
+        .sum();
+    assert_eq!(produced, 24, "examples/app_dag.toml produces 24 messages");
+
+    let report = handle.drain_and_stop().unwrap();
+    assert!(report.drained, "topological drain timed out");
+    let idx = |name: &str| {
+        report
+            .stages
+            .iter()
+            .position(|s| s.name == name)
+            .unwrap_or_else(|| panic!("no stage report for '{name}'"))
+    };
+    let stage = |name: &str| &report.stages[idx(name)];
+
+    // The report lists the nodes in topological order: the chain hop
+    // before the split, the split before its branches, the branches
+    // before the merge legs, the merge before the archive sink.
+    assert!(idx("reconstruct") < idx("route"));
+    assert!(idx("route") < idx("compress-hot") && idx("route") < idx("compress-cold"));
+    assert!(idx("compress-hot") < idx("fan-in:hotc"));
+    assert!(idx("compress-cold") < idx("fan-in:coldc"));
+    assert!(idx("fan-in:hotc") < idx("archive") && idx("fan-in:coldc") < idx("archive"));
+
+    // Zero loss, hop by hop: every hop re-emits 1:1, the split routes
+    // each record to exactly one branch, and the merge fans both
+    // branches back in — so every hop's totals conserve the 24.
+    assert_eq!(stage("reconstruct").processed_messages, produced);
+    assert_eq!(stage("reconstruct").emitted_messages, produced);
+    assert_eq!(stage("route").processed_messages, produced);
+    assert_eq!(stage("route").emitted_messages, produced);
+    let branches = [stage("compress-hot"), stage("compress-cold")];
+    assert_eq!(
+        branches.iter().map(|s| s.processed_messages).sum::<u64>(),
+        produced,
+        "split must route every record to exactly one branch"
+    );
+    assert_eq!(
+        branches.iter().map(|s| s.emitted_messages).sum::<u64>(),
+        produced
+    );
+    let legs = [stage("fan-in:hotc"), stage("fan-in:coldc")];
+    assert_eq!(legs.iter().map(|s| s.processed_messages).sum::<u64>(), produced);
+    assert_eq!(legs.iter().map(|s| s.emitted_messages).sum::<u64>(), produced);
+    assert_eq!(stage("archive").processed_messages, produced, "end-to-end loss");
+    assert_eq!(stage("archive").emitted_messages, 0, "the sink emits nothing");
+    for s in &report.stages {
+        assert_eq!(s.lag, 0, "stage '{}' drained with residual lag", s.name);
+        assert_eq!(s.errors, 0, "stage '{}' errored", s.name);
+    }
+    assert_eq!(
+        report.emitted_messages(),
+        produced * 4,
+        "reconstruct + route + branches + merge each re-emit the stream once"
+    );
+    assert_eq!(service.machine().free_nodes(), machine_nodes, "pilots leaked");
+}
+
+/// Uneven branch load becomes a *per-edge* planner intent: a predicate
+/// split steers every record onto the hot branch, whose slow consumer
+/// builds lag on its edge alone — its autoscaler scales up while the
+/// cold branch's autoscaler (same policy, same thresholds) never moves.
+#[test]
+fn hot_branch_scales_up_alone() {
+    let window = Duration::from_millis(30);
+    let mut cfg = MassConfig::new(SourceKind::KmeansStatic, "in");
+    cfg.points_per_msg = 50;
+    cfg.target_msg_bytes = Some(0);
+    let policy = || {
+        ThresholdPolicy::new(15, 1)
+            .with_sustain(2)
+            .with_cooldown_secs(0.3)
+    };
+    let app = StreamingApp::builder()
+        .broker(
+            KafkaDescription::new(1),
+            &[("in", 2), ("hot", 4), ("cold", 2)],
+        )
+        .source(
+            SourceSpec::mass(cfg)
+                .with_name("gen")
+                .with_producers(2)
+                .with_total_messages(120)
+                .with_rate(200.0),
+        )
+        // Everything lands on branch 0: the hot edge carries the full
+        // stream while the cold edge stays empty.
+        .split(
+            SplitSpec::new(
+                "route",
+                "in",
+                &["hot", "cold"],
+                SplitRoute::Predicate(Arc::new(|_| 0)),
+            )
+            .with_key_bytes(1)
+            .with_window(window),
+        )
+        // 30 ms/message on one executor absorbs ~33 msg/s of a
+        // 200 msg/s burst: the hot edge must build lag.
+        .stage(
+            StageSpec::new("slow-hot", "hot", CountingProcessor::with_cost(
+                Duration::from_millis(30),
+            ))
+            .with_executors_per_node(1)
+            .with_window(window),
+        )
+        .stage(
+            StageSpec::new("idle-cold", "cold", CountingProcessor::new())
+                .with_executors_per_node(1)
+                .with_window(window),
+        )
+        .autoscale(
+            AutoscaleSpec::for_stage("slow-hot", policy())
+                .with_sample_interval(Duration::from_millis(50)),
+        )
+        .autoscale(
+            AutoscaleSpec::for_stage("idle-cold", policy())
+                .with_sample_interval(Duration::from_millis(50)),
+        )
+        .drain_timeout(Duration::from_secs(120))
+        .build()
+        .unwrap();
+
+    let service = Arc::new(PilotComputeService::new(Machine::unthrottled(10)));
+    let handle = app.launch(&service).unwrap();
+    let cluster = handle.cluster().clone();
+
+    // The per-edge signals see the skew directly: the hot edge's lag
+    // climbs while the cold edge reads zero from the same snapshot.
+    let probe = SignalProbe::new(
+        cluster.clone(),
+        "hot",
+        "app-slow-hot",
+        handle.stage_stats("slow-hot"),
+        0.05,
+    )
+    .with_edges(vec![
+        ("hot".to_string(), "app-slow-hot".to_string()),
+        ("cold".to_string(), "app-idle-cold".to_string()),
+    ]);
+    let edge = |snap: &pilot_streaming::autoscale::SignalSnapshot, topic: &str| {
+        snap.edge_lags
+            .iter()
+            .find(|e| e.topic == topic)
+            .map(|e| e.lag)
+            .unwrap_or_else(|| panic!("no edge sample for '{topic}'"))
+    };
+    assert!(
+        wait_until(
+            || {
+                let snap = probe.sample().unwrap();
+                edge(&snap, "hot") >= 15 && edge(&snap, "cold") == 0
+            },
+            30.0
+        ),
+        "hot-edge lag never climbed past the threshold with the cold edge idle"
+    );
+
+    // The hot stage's autoscale loop reacts to its own edge...
+    let hot_timeline = handle.timeline("slow-hot").expect("scaler registered");
+    assert!(
+        wait_until(|| hot_timeline.count(ScalingAction::Up) >= 1, 30.0),
+        "the overloaded branch never scaled up; lag={:?}",
+        cluster.group_lag("app-slow-hot", "hot")
+    );
+    // ...and only that loop: the cold branch saw nothing worth scaling.
+    let cold_timeline = handle.timeline("idle-cold").expect("scaler registered");
+    assert_eq!(
+        cold_timeline.count(ScalingAction::Up),
+        0,
+        "per-edge scaling leaked onto the idle branch"
+    );
+
+    handle.await_sources().unwrap();
+    let report = handle.drain_and_stop().unwrap();
+    assert!(report.drained, "drain timed out");
+    let hot = report.stages.iter().find(|s| s.name == "slow-hot").unwrap();
+    let cold = report.stages.iter().find(|s| s.name == "idle-cold").unwrap();
+    assert_eq!(hot.processed_messages, 120, "hot branch lost records");
+    assert_eq!(cold.processed_messages, 0, "the predicate leaked records cold");
+    assert_eq!(
+        cold_timeline.count(ScalingAction::Up),
+        0,
+        "idle branch scaled during the drain"
+    );
+    assert_eq!(service.machine().free_nodes(), 10, "pilots leaked");
+}

@@ -1,0 +1,327 @@
+//! Property-based invariants over dataflow DAGs (split/merge chains).
+//!
+//! A DAG app chains engine jobs through broker topics: every hop
+//! re-emits its input records downstream through a keyed producer that
+//! flushes *before* the hop commits its input offsets.  Across random
+//! 2-branch split/merge topologies under produce and repartition
+//! churn, we assert
+//!
+//! * **(a) exactly-once end-to-end** — every record produced at the
+//!   head is observed exactly once at the sink topic, across every
+//!   intermediate hop and any number of mid-flight repartitions of any
+//!   edge topic;
+//! * **(b) per-key order end-to-end** — the key-hash split pins each
+//!   key to one branch, so each key's records arrive at the sink in
+//!   produce order even though the branches race each other;
+//! * **(c) topological drain honesty** — `drain_and_stop` called while
+//!   records are still in flight (and even with a repartition landed
+//!   immediately before it) may only report `drained` once *every* hop
+//!   has processed its full share: the per-stage reports must conserve
+//!   the record count hop by hop, with zero residual lag anywhere.
+//!
+//! Like the other `proptest_*` suites this is a seeded-random harness
+//! (the offline dependency set has no `proptest`): failures print the
+//! seed for replay and `PROPTEST_CASES` scales the case count.  Each
+//! case launches a full app (broker pilot + one engine job per DAG
+//! node), so the deep-CI multiplier is capped to keep the job bounded.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pilot_streaming::app::{
+    CountingProcessor, MergeSpec, RelayProcessor, SplitRoute, SplitSpec, StageSpec, StreamingApp,
+};
+use pilot_streaming::broker::{
+    Consumer, ConsumerConfig, PartitionRecord, Partitioner, Producer, ProducerConfig,
+};
+use pilot_streaming::cluster::Machine;
+use pilot_streaming::pilot::{KafkaDescription, PilotComputeService};
+use pilot_streaming::util::Rng;
+
+/// Case count: `PROPTEST_CASES` env override (capped — every case is a
+/// full app launch, not a bare cluster), else the suite default.
+fn cases(default: usize) -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+        .min(40)
+}
+
+/// Run `f` over seeded cases; panic messages carry the seed for replay.
+fn check<F: Fn(&mut Rng)>(name: &str, default_cases: usize, f: F) {
+    for case in 0..cases(default_cases) {
+        let seed = 0xD00F ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+fn encode(key: usize, seq: u32) -> Vec<u8> {
+    vec![
+        key as u8,
+        (seq >> 24) as u8,
+        (seq >> 16) as u8,
+        (seq >> 8) as u8,
+        seq as u8,
+    ]
+}
+
+fn decode(value: &[u8]) -> (usize, u32) {
+    (
+        value[0] as usize,
+        u32::from_be_bytes([value[1], value[2], value[3], value[4]]),
+    )
+}
+
+fn consumer_config() -> ConsumerConfig {
+    ConsumerConfig {
+        fetch_timeout: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// Invariant (b): each key's records arrive in dense produce order.
+fn observe(recs: Vec<PartitionRecord>, consumed_seq: &mut [u32], consumed_total: &mut usize) {
+    for r in recs {
+        let (k, seq) = decode(&r.record.value);
+        assert_eq!(
+            seq, consumed_seq[k],
+            "key {k}: expected seq {} next, saw {seq} (reorder/dup/loss)",
+            consumed_seq[k]
+        );
+        consumed_seq[k] += 1;
+        *consumed_total += 1;
+    }
+}
+
+/// A randomized 2-branch DAG: optionally a relay chain hop in front,
+/// then a key-hash split onto hot/cold, per-branch relay hops, a merge
+/// back onto `out`, and a counting sink.  Records enter at `head`
+/// (externally produced) and surface at `out`.
+fn build_dag(rng: &mut Rng) -> (StreamingApp, &'static str, bool) {
+    let window = Duration::from_millis(10);
+    let with_chain = rng.below(2) == 0;
+    let head = if with_chain { "in" } else { "frames" };
+    let parts = |rng: &mut Rng| 1 + rng.below(3);
+    let mut topics: Vec<(&str, usize)> = vec![
+        ("frames", parts(rng)),
+        ("hot", parts(rng)),
+        ("cold", parts(rng)),
+        ("out", parts(rng)),
+    ];
+    if with_chain {
+        topics.push(("in", parts(rng)));
+    }
+    let mut b = StreamingApp::builder().broker(KafkaDescription::new(1), &topics);
+    if with_chain {
+        b = b.stage(
+            StageSpec::new("reconstruct", "in", RelayProcessor::new(1))
+                .with_window(window)
+                .with_output_topic("frames"),
+        );
+    }
+    let app = b
+        .split(
+            SplitSpec::new("route", "frames", &["hot", "cold"], SplitRoute::KeyHash)
+                .with_key_bytes(1)
+                .with_window(window),
+        )
+        .merge(
+            MergeSpec::new("fan-in", &["hot", "cold"], "out")
+                .with_key_bytes(1)
+                .with_window(window),
+        )
+        .stage(StageSpec::new("archive", "out", CountingProcessor::new()).with_window(window))
+        .drain_timeout(Duration::from_secs(60))
+        .build()
+        .expect("randomized DAG spec is always valid");
+    (app, head, with_chain)
+}
+
+/// Edge topics eligible for mid-flight repartition churn.
+const EDGES: [&str; 5] = ["in", "frames", "hot", "cold", "out"];
+
+/// The flagship DAG property: produce keyed bursts at the head while
+/// randomly repartitioning every edge topic, then observe the sink
+/// topic with an independent probe group — every record arrives
+/// exactly once, per key in order, across all hops.
+#[test]
+fn prop_dag_split_merge_exactly_once_ordered_under_churn() {
+    check("dag-split-merge-churn", 8, |rng| {
+        let n_keys = 2 + rng.below(6);
+        let (app, head, with_chain) = build_dag(rng);
+        let service = Arc::new(PilotComputeService::new(Machine::unthrottled(8)));
+        let handle = app.launch(&service).unwrap();
+        let cluster = handle.cluster().clone();
+
+        let mut producer = Producer::new(
+            cluster.clone(),
+            head,
+            1,
+            ProducerConfig {
+                batch_bytes: if rng.below(2) == 0 { 1 } else { 24 },
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Independent probe group on the sink topic: the stage groups
+        // drain through the engine, the probe watches the raw records.
+        let mut probe = Consumer::join(cluster.clone(), "out", "probe", 2, consumer_config())
+            .unwrap();
+
+        let mut produced_seq = vec![0u32; n_keys];
+        let mut consumed_seq = vec![0u32; n_keys];
+        let mut produced_total = 0usize;
+        let mut consumed_total = 0usize;
+
+        let steps = 8 + rng.below(16);
+        for _ in 0..steps {
+            match rng.below(8) {
+                // Produce a keyed burst at the head of the DAG.
+                0..=4 => {
+                    for _ in 0..1 + rng.below(8) {
+                        let k = rng.below(n_keys);
+                        let seq = produced_seq[k];
+                        produced_seq[k] += 1;
+                        producer.send(Some(&[k as u8]), encode(k, seq)).unwrap();
+                        produced_total += 1;
+                    }
+                    if rng.below(2) == 0 {
+                        producer.flush().unwrap();
+                    }
+                }
+                // Repartition a random edge topic mid-flight.
+                5 | 6 => {
+                    let t = EDGES[rng.below(if with_chain { 5 } else { 4 })
+                        + usize::from(!with_chain)];
+                    cluster.repartition_topic(t, 1 + rng.below(6)).unwrap();
+                }
+                // Poll the probe a few times.
+                _ => {
+                    for _ in 0..1 + rng.below(4) {
+                        let recs = probe.poll().unwrap();
+                        observe(recs, &mut consumed_seq, &mut consumed_total);
+                    }
+                }
+            }
+        }
+        producer.flush().unwrap();
+
+        // Drain the probe: every produced record must surface at the
+        // sink topic exactly once (the hops in between re-emit 1:1).
+        let mut idle_rounds = 0;
+        while consumed_total < produced_total && idle_rounds < 500 {
+            let recs = probe.poll().unwrap();
+            if recs.is_empty() {
+                idle_rounds += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            } else {
+                idle_rounds = 0;
+            }
+            observe(recs, &mut consumed_seq, &mut consumed_total);
+        }
+        assert_eq!(
+            consumed_total, produced_total,
+            "exactly-once violated end-to-end: {consumed_total} observed at the sink \
+             of {produced_total} produced at the head"
+        );
+        assert_eq!(consumed_seq, produced_seq, "per-key completeness end-to-end");
+
+        // And the topological drain agrees: zero residual lag anywhere.
+        let report = handle.drain_and_stop().unwrap();
+        assert!(report.drained, "drain timed out with records accounted for");
+        for s in &report.stages {
+            assert_eq!(s.lag, 0, "stage '{}' drained with residual lag", s.name);
+        }
+    });
+}
+
+/// Invariant (c): `drain_and_stop` called while records are still in
+/// flight — possibly with a repartition landed right before it — may
+/// only report `drained` once every hop processed its full share.  The
+/// per-stage reports must conserve the record count hop by hop.
+#[test]
+fn prop_dag_topological_drain_never_lies() {
+    check("dag-topological-drain", 8, |rng| {
+        let n_keys = 2 + rng.below(6);
+        let (app, head, with_chain) = build_dag(rng);
+        let service = Arc::new(PilotComputeService::new(Machine::unthrottled(8)));
+        let handle = app.launch(&service).unwrap();
+        let cluster = handle.cluster().clone();
+
+        let mut producer = Producer::new(
+            cluster.clone(),
+            head,
+            1,
+            ProducerConfig {
+                batch_bytes: 1,
+                partitioner: Partitioner::Keyed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        let mut produced_total = 0u64;
+        let mut produced_seq = vec![0u32; n_keys];
+        for _ in 0..4 + rng.below(40) {
+            let k = rng.below(n_keys);
+            let seq = produced_seq[k];
+            produced_seq[k] += 1;
+            producer.send(Some(&[k as u8]), encode(k, seq)).unwrap();
+            produced_total += 1;
+        }
+        // Half the cases land a repartition between the last produce
+        // and the drain: the in-flight epoch transition must not let
+        // the drain read a stale lag-zero off retired partitions.
+        if rng.below(2) == 0 {
+            let t = EDGES[rng.below(if with_chain { 5 } else { 4 }) + usize::from(!with_chain)];
+            cluster.repartition_topic(t, 1 + rng.below(6)).unwrap();
+        }
+
+        // Drain immediately: everything is still in flight.
+        let report = handle.drain_and_stop().unwrap();
+        assert!(report.drained, "drain timed out");
+        let stage = |name: &str| {
+            report
+                .stages
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("no stage report for '{name}'"))
+        };
+
+        // Hop-by-hop conservation: a drain that returned with records
+        // in flight upstream would under-count every hop downstream.
+        if with_chain {
+            let r = stage("reconstruct");
+            assert_eq!(r.processed_messages, produced_total, "chain hop lost records");
+            assert_eq!(r.emitted_messages, produced_total, "chain hop dropped emissions");
+        }
+        let route = stage("route");
+        assert_eq!(route.processed_messages, produced_total, "split under-consumed");
+        assert_eq!(route.emitted_messages, produced_total, "split dropped records");
+        let legs = [stage("fan-in:hot"), stage("fan-in:cold")];
+        assert_eq!(
+            legs.iter().map(|s| s.processed_messages).sum::<u64>(),
+            produced_total,
+            "merge legs under-consumed the branches"
+        );
+        assert_eq!(
+            legs.iter().map(|s| s.emitted_messages).sum::<u64>(),
+            produced_total,
+            "merge legs dropped records"
+        );
+        let archive = stage("archive");
+        assert_eq!(
+            archive.processed_messages, produced_total,
+            "drain reported done with upstream records in flight"
+        );
+        for s in &report.stages {
+            assert_eq!(s.lag, 0, "stage '{}' drained with residual lag", s.name);
+        }
+    });
+}

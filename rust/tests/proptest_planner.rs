@@ -98,6 +98,7 @@ fn random_snapshot(rng: &mut Rng) -> SignalSnapshot {
         broker_util_skew: if rng.below(3) == 0 { rng.range_f64(0.0, 1.0) } else { 0.0 },
         rack_skew: if rng.below(3) == 0 { rng.range_f64(0.0, 1.0) } else { 0.0 },
         shard_queue_depths: (0..rng.below(8)).map(|_| rng.below(64) as u64).collect(),
+        edge_lags: Vec::new(),
     }
 }
 
